@@ -1,0 +1,144 @@
+//! END-TO-END DRIVER: the full three-layer stack on the paper's real
+//! workload.
+//!
+//! Layer 3 (this binary, Rust) runs the pipelined coordinator on the
+//! 18 576-sample ridge workload with the bound-optimized block size;
+//! every SGD update executes through Layer 2/1 — the AOT-compiled
+//! JAX+Pallas `sgd_block` artifact — on the PJRT CPU client. Loss checks
+//! run through the `dataset_loss` artifact AND the native f64 oracle, and
+//! the whole trajectory is cross-validated against the native engine.
+//!
+//! Requires `make artifacts`. Set `E2E_FAST=1` for a shortened run.
+//!
+//! ```bash
+//! cargo run --release --example e2e_edge_training
+//! ```
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use edgepipe::bound::corollary1::BoundParams;
+use edgepipe::bound::{estimate_constants, optimize_block_size};
+use edgepipe::channel::IdealChannel;
+use edgepipe::coordinator::des::{run_des, DesConfig};
+use edgepipe::coordinator::executor::NativeExecutor;
+use edgepipe::data::split::train_split;
+use edgepipe::data::synth::{synth_calhousing, SynthSpec};
+use edgepipe::metrics::writer::{write_csv, CsvTable};
+use edgepipe::model::{ridge_solution, RidgeModel};
+use edgepipe::runtime::{PjrtExecutor, PjrtLossEvaluator, RuntimeSession};
+use edgepipe::util::timefmt::{fmt_count, fmt_duration};
+
+fn main() -> Result<()> {
+    let fast = std::env::var("E2E_FAST").is_ok();
+
+    // ---------------- dataset (paper Sec. 5) ----------------
+    let raw = synth_calhousing(&SynthSpec::default());
+    let (train, _) = train_split(&raw, 0.9, 42);
+    let (alpha, lambda) = (1e-4, 0.05);
+    let t_budget = if fast { 3000.0 } else { 1.5 * train.n as f64 };
+    let n_o = 100.0;
+    println!(
+        "e2e: N={} d={} T={} n_o={} α={alpha} λ={lambda}",
+        fmt_count(train.n as u64),
+        train.d,
+        t_budget,
+        n_o
+    );
+
+    // ---------------- block size from the bound ----------------
+    let k = estimate_constants(&train, lambda, alpha, 2000, 42);
+    let params = BoundParams {
+        alpha,
+        big_l: k.big_l,
+        c: k.c,
+        m: 1.0,
+        m_g: 1.0,
+        d_diam: k.d_diam,
+    };
+    let n_c = optimize_block_size(&params, train.n, t_budget, n_o, 1.0).n_c;
+    println!(
+        "bound constants L={:.4} c={:.4} D={:.2} -> ñ_c = {n_c}",
+        k.big_l, k.c, k.d_diam
+    );
+
+    // ---------------- PJRT-backed pipelined run ----------------
+    let cfg = DesConfig {
+        n_c,
+        loss_every: 2000,
+        record_blocks: false,
+        ..DesConfig::paper(n_c, n_o, t_budget, 42)
+    };
+    let session = RuntimeSession::open_default()
+        .context("run `make artifacts` first")?;
+    let mut pjrt_exec = PjrtExecutor::new(session, alpha, lambda, train.n)?;
+    let t0 = Instant::now();
+    let pjrt_run = run_des(&train, &cfg, &mut IdealChannel, &mut pjrt_exec)?;
+    let pjrt_time = t0.elapsed();
+    println!(
+        "PJRT run: {} SGD updates in {} artifact calls, wall {}",
+        fmt_count(pjrt_run.updates as u64),
+        fmt_count(pjrt_exec.calls()),
+        fmt_duration(pjrt_time)
+    );
+
+    // ---------------- native cross-validation ----------------
+    let mut native_exec = NativeExecutor::new(
+        RidgeModel::new(train.d, lambda, train.n),
+        alpha,
+    );
+    let t1 = Instant::now();
+    let native_run =
+        run_des(&train, &cfg, &mut IdealChannel, &mut native_exec)?;
+    let native_time = t1.elapsed();
+    let max_dw = pjrt_run
+        .final_w
+        .iter()
+        .zip(&native_run.final_w)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!(
+        "native run: wall {} — trajectory divergence max|Δw| = {max_dw:.2e} \
+         (f32 artifact vs f64 native)",
+        fmt_duration(native_time)
+    );
+    anyhow::ensure!(max_dw < 1e-2, "backends diverged: {max_dw}");
+
+    // ---------------- loss agreement through the artifact ----------------
+    let session2 = RuntimeSession::open_default()?;
+    let mut loss_eval = PjrtLossEvaluator::new(session2, lambda, train.n)?;
+    loss_eval.append_rows(&train.x, &train.y)?;
+    let pjrt_loss = loss_eval.loss(&pjrt_run.final_w)?;
+    let native_loss = pjrt_run.final_loss;
+    println!(
+        "final training loss: pjrt artifact {pjrt_loss:.6} vs native \
+         {native_loss:.6}"
+    );
+    anyhow::ensure!(
+        (pjrt_loss - native_loss).abs() / native_loss < 1e-3,
+        "loss paths disagree"
+    );
+
+    // ---------------- report vs optimum ----------------
+    let w_star = ridge_solution(&train, lambda)?;
+    let loss_star = train.ridge_loss(&w_star, lambda / train.n as f64);
+    println!(
+        "optimality gap at deadline: {:.3e} (L(w*) = {loss_star:.6})",
+        pjrt_run.final_loss - loss_star
+    );
+
+    // loss curve out
+    let mut table = CsvTable::new(&["time", "loss"]);
+    for &(t, l) in &pjrt_run.curve {
+        table.push_nums(&[t, l]);
+    }
+    let out = std::path::Path::new("out").join("e2e_loss_curve.csv");
+    write_csv(&table, &out)?;
+    println!(
+        "loss curve ({} points) -> {}",
+        pjrt_run.curve.len(),
+        out.display()
+    );
+    println!("E2E OK: all three layers compose.");
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Future-work extension (paper Sec. 6): channel errors and rate
+//! selection. Runs the protocol over an erasure channel with ARQ, shows
+//! how packet loss shifts the effective optimum, and scans the
+//! transmission rate on the outage model.
+//!
+//! ```bash
+//! cargo run --release --example erasure_channel
+//! ```
+
+use anyhow::Result;
+use edgepipe::channel::{Channel, ErasureChannel, IdealChannel};
+use edgepipe::coordinator::des::{run_des, DesConfig};
+use edgepipe::coordinator::executor::NativeExecutor;
+use edgepipe::data::split::train_split;
+use edgepipe::data::synth::{synth_calhousing, SynthSpec};
+use edgepipe::extensions::rate_select::{
+    best_rate, expected_slowdown, rate_sweep,
+};
+use edgepipe::model::RidgeModel;
+
+fn main() -> Result<()> {
+    let raw = synth_calhousing(&SynthSpec { n: 4000, ..Default::default() });
+    let (train, _) = train_split(&raw, 0.9, 42);
+    let t_budget = 1.5 * train.n as f64;
+    let cfg = DesConfig {
+        record_blocks: false,
+        ..DesConfig::paper(120, 30.0, t_budget, 7)
+    };
+    let mk = || {
+        NativeExecutor::new(
+            RidgeModel::new(train.d, cfg.lambda, train.n),
+            cfg.alpha,
+        )
+    };
+
+    println!("— erasure channel with ARQ (n_c={}, n_o={}) —", cfg.n_c, cfg.n_o);
+    let mut ideal = IdealChannel;
+    let base = run_des(&train, &cfg, &mut ideal, &mut mk())?;
+    println!(
+        "  p_loss=0.00: loss {:.6}, delivered {:>5}, retrans {:>4}",
+        base.final_loss, base.samples_delivered, base.retransmissions
+    );
+    for p_loss in [0.1, 0.3, 0.5] {
+        let mut ch = ErasureChannel::new(p_loss);
+        let r = run_des(&train, &cfg, &mut ch, &mut mk())?;
+        println!(
+            "  p_loss={p_loss:.2}: loss {:.6}, delivered {:>5}, retrans \
+             {:>4}  ({})",
+            r.final_loss,
+            r.samples_delivered,
+            r.retransmissions,
+            ch.describe()
+        );
+    }
+
+    println!("\n— rate selection on the outage model p(r)=1-exp(-κ(r-1)) —");
+    for kappa in [0.2, 0.8] {
+        let r_star = best_rate(kappa, 6.0);
+        println!(
+            "  κ={kappa}: analytic best rate r*={r_star:.2} (slowdown \
+             {:.3})",
+            expected_slowdown(r_star, kappa)
+        );
+        let rows =
+            rate_sweep(&train, &cfg, &[1.0, r_star, 4.0], kappa, 3);
+        for (rate, loss) in rows {
+            println!("    rate {rate:>4.2}: mean final loss {loss:.6}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Regenerate paper Fig. 3: the Corollary-1 bound versus block size n_c
+//! for several overheads, with the optimum ñ_c (cross) and the
+//! full-delivery boundary (dot) per curve. Writes CSVs to out/.
+//!
+//! ```bash
+//! cargo run --release --example fig3_bound
+//! ```
+
+use anyhow::Result;
+use edgepipe::bound::corollary1::BoundParams;
+use edgepipe::bound::estimate_constants;
+use edgepipe::data::split::train_split;
+use edgepipe::data::synth::{synth_calhousing, SynthSpec};
+use edgepipe::metrics::writer::write_csv;
+use edgepipe::sweep::fig3::fig3_data;
+
+fn main() -> Result<()> {
+    // the paper's Fig. 3 parameters: N = 18 576, T = 1.5 N, τ_p = 1,
+    // α = 1e-4, L = 1.908, c = 0.061, M = M_G = 1
+    let raw = synth_calhousing(&SynthSpec::default());
+    let (train, _) = train_split(&raw, 0.9, 42);
+    let t_budget = 1.5 * train.n as f64;
+
+    // constants estimated from the data (matching the paper's), D from a
+    // pilot run
+    let k = estimate_constants(&train, 0.05, 1e-4, 2000, 42);
+    let params = BoundParams {
+        alpha: 1e-4,
+        big_l: k.big_l,
+        c: k.c,
+        m: 1.0,
+        m_g: 1.0,
+        d_diam: k.d_diam,
+    };
+
+    let out = fig3_data(
+        &params,
+        train.n,
+        t_budget,
+        1.0,
+        &[1.0, 10.0, 100.0, 1000.0],
+        160,
+    );
+    print!("{}", out.render());
+
+    let dir = std::path::Path::new("out");
+    write_csv(&out.curve_table(), &dir.join("fig3_curves.csv"))?;
+    write_csv(&out.marker_table(), &dir.join("fig3_markers.csv"))?;
+    println!("wrote out/fig3_curves.csv and out/fig3_markers.csv");
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! Model-generality extension: train an MLP (~68k parameters) through the
+//! SAME pipelined protocol, with every forward/backward pass running in
+//! the AOT JAX/Pallas `mlp_step` artifact (fused tiled matmul kernels).
+//!
+//! The device streams a synthetic nonlinear regression dataset in blocks;
+//! the edge node accumulates a store and runs mini-batch SGD steps during
+//! each block's transmission window, for a few hundred steps total. Shows
+//! the coordinator is model-agnostic (paper's protocol, nonlinear model).
+//!
+//! Requires `make artifacts`.
+//!
+//! ```bash
+//! cargo run --release --example mlp_edge
+//! ```
+
+use anyhow::{Context, Result};
+use edgepipe::runtime::mlp::{MlpParams, PjrtMlp};
+use edgepipe::runtime::RuntimeSession;
+use edgepipe::util::rng::Pcg32;
+use edgepipe::util::timefmt::fmt_count;
+
+/// Synthetic nonlinear target: y = tanh(x·a) + 0.3 sin(x·b).
+fn gen_data(n: usize, d: usize, rng: &mut Pcg32) -> (Vec<f32>, Vec<f32>) {
+    let a: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+    let b: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+    let mut x = vec![0.0f32; n * d];
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let (mut da, mut db) = (0.0, 0.0);
+        for j in 0..d {
+            let v = rng.next_gaussian();
+            x[i * d + j] = v as f32;
+            da += v * a[j];
+            db += v * b[j];
+        }
+        y[i] = (da.tanh() + 0.3 * db.sin()) as f32;
+    }
+    (x, y)
+}
+
+fn main() -> Result<()> {
+    let session = RuntimeSession::open_default()
+        .context("run `make artifacts` first")?;
+    let mut mlp = PjrtMlp::new(session)?;
+    let mut rng = Pcg32::seeded(2024);
+    let mut params = MlpParams::init(mlp.d_in, mlp.hidden, &mut rng);
+    println!(
+        "MLP: {} -> {} -> {} -> 1 ({} parameters), batch {}",
+        mlp.d_in,
+        mlp.hidden,
+        mlp.hidden,
+        fmt_count(params.count() as u64),
+        mlp.batch
+    );
+
+    // protocol: blocks of n_c samples arrive; during each block's window
+    // the edge runs `steps_per_block` mini-batch steps on its store
+    let (n, d) = (8192, mlp.d_in);
+    let (data_x, data_y) = gen_data(n, d, &mut rng);
+    let n_c = 1024;
+    let steps_per_block = 40;
+    let alpha = 0.03f32;
+
+    let mut store_x: Vec<f32> = Vec::new();
+    let mut store_y: Vec<f32> = Vec::new();
+    let mut total_steps = 0usize;
+    let mut first_loss = None;
+    let mut last_loss = 0.0;
+
+    for block in 0..(n / n_c) {
+        // ---- "transmission": the next block arrives
+        let lo = block * n_c;
+        let hi = lo + n_c;
+        store_x.extend_from_slice(&data_x[lo * d..hi * d]);
+        store_y.extend_from_slice(&data_y[lo..hi]);
+
+        // ---- "computation during next block's transmission window"
+        if store_y.len() >= mlp.batch {
+            for _ in 0..steps_per_block {
+                // sample a batch from the store
+                let mut bx = vec![0.0f32; mlp.batch * d];
+                let mut by = vec![0.0f32; mlp.batch];
+                let m = store_y.len() as u64;
+                for s in 0..mlp.batch {
+                    let i = rng.gen_range(m) as usize;
+                    bx[s * d..(s + 1) * d]
+                        .copy_from_slice(&store_x[i * d..(i + 1) * d]);
+                    by[s] = store_y[i];
+                }
+                let loss = mlp.step(&mut params, &bx, &by, alpha)?;
+                if first_loss.is_none() {
+                    first_loss = Some(loss);
+                }
+                last_loss = loss;
+                total_steps += 1;
+            }
+            println!(
+                "block {:>2}: store {:>5} samples, {:>4} steps, batch loss \
+                 {:.5}",
+                block + 1,
+                store_y.len(),
+                total_steps,
+                last_loss
+            );
+        }
+    }
+    let first = first_loss.expect("ran steps");
+    println!(
+        "MLP e2e: {total_steps} PJRT steps, loss {first:.5} -> {last_loss:.5}"
+    );
+    anyhow::ensure!(
+        last_loss < 0.5 * first,
+        "MLP failed to learn: {first} -> {last_loss}"
+    );
+    println!("MLP OK: nonlinear model trains through the same protocol.");
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Quickstart: optimize the block size with the paper's bound, run the
+//! pipelined protocol, and compare against transmit-everything-first.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use edgepipe::bound::corollary1::BoundParams;
+use edgepipe::bound::{estimate_constants, optimize_block_size};
+use edgepipe::channel::IdealChannel;
+use edgepipe::coordinator::des::{run_des, DesConfig};
+use edgepipe::coordinator::executor::NativeExecutor;
+use edgepipe::data::split::train_split;
+use edgepipe::data::synth::{synth_calhousing, SynthSpec};
+use edgepipe::model::{ridge_solution, RidgeModel};
+
+fn main() -> Result<()> {
+    // 1. the paper's dataset (synthetic CalHousing-like; see DESIGN.md §3)
+    let raw = synth_calhousing(&SynthSpec::default());
+    let (train, _) = train_split(&raw, 0.9, 42);
+    println!("dataset: N = {} samples, d = {}", train.n, train.d);
+
+    // 2. protocol setup: T = 1.5 N, overhead n_o = 100, τ_p = 1
+    let t_budget = 1.5 * train.n as f64;
+    let n_o = 100.0;
+
+    // 3. estimate the bound constants (L, c from the Gramian; D from a
+    //    pilot run) and pick the block size that minimizes Corollary 1
+    let k = estimate_constants(&train, 0.05, 1e-4, 2000, 42);
+    let params = BoundParams {
+        alpha: 1e-4,
+        big_l: k.big_l,
+        c: k.c,
+        m: 1.0,
+        m_g: 1.0,
+        d_diam: k.d_diam,
+    };
+    let opt = optimize_block_size(&params, train.n, t_budget, n_o, 1.0);
+    println!(
+        "bound-optimal block size ñ_c = {} (case {:?}, bound {:.4})",
+        opt.n_c, opt.case, opt.value
+    );
+
+    // 4. run the pipelined protocol at ñ_c, and the transmit-all baseline
+    let run_at = |n_c: usize| -> Result<f64> {
+        let cfg = DesConfig {
+            record_blocks: false,
+            ..DesConfig::paper(n_c, n_o, t_budget, 42)
+        };
+        let mut exec = NativeExecutor::new(
+            RidgeModel::new(train.d, cfg.lambda, train.n),
+            cfg.alpha,
+        );
+        Ok(run_des(&train, &cfg, &mut IdealChannel, &mut exec)?.final_loss)
+    };
+    let pipelined = run_at(opt.n_c)?;
+    let all_first = run_at(train.n)?;
+
+    let w_star = ridge_solution(&train, 0.05)?;
+    let loss_star = train.ridge_loss(&w_star, 0.05 / train.n as f64);
+    println!("final training loss:");
+    println!("  pipelined @ ñ_c        = {pipelined:.6}");
+    println!("  transmit-all-first     = {all_first:.6}");
+    println!("  optimal L(w*)          = {loss_star:.6}");
+    println!(
+        "pipelining recovers {:.1}% of the achievable improvement",
+        100.0 * (all_first - pipelined) / (all_first - loss_star)
+    );
+    Ok(())
+}

@@ -1,0 +1,175 @@
+"""AOT lowering: JAX entry points -> HLO text artifacts + manifest.json.
+
+Interchange format is HLO TEXT, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every entry point is lowered with fixed shapes (shapes.py) and
+return_tuple=True; the Rust runtime unwraps the tuple. The manifest
+records, for each artifact, its file plus the exact input/output
+shapes & dtypes so the Rust executor can validate buffers at load time.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+        (or --out ../artifacts/model.hlo.txt; the directory is used)
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, shapes
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# name -> (fn, [(input name, ShapeDtypeStruct)...])
+ENTRY_POINTS = {
+    "sgd_block": (
+        model.sgd_block,
+        [
+            ("w", _f32(1, shapes.D)),
+            ("xs", _f32(shapes.K_MAX, shapes.D)),
+            ("ys", _f32(shapes.K_MAX)),
+            ("mask", _f32(shapes.K_MAX)),
+            ("scalars", _f32(1, 2)),  # [[alpha, 2*lam/N]]
+        ],
+    ),
+    "dataset_loss": (
+        model.dataset_loss,
+        [
+            ("w", _f32(1, shapes.D)),
+            ("xx", _f32(shapes.N_CAP, shapes.D)),
+            ("yy", _f32(shapes.N_CAP)),
+            ("mask", _f32(shapes.N_CAP)),
+            ("scalars", _f32(1, 2)),  # [[count, lam/N]]
+        ],
+    ),
+    "dataset_grad": (
+        model.dataset_grad,
+        [
+            ("w", _f32(1, shapes.D)),
+            ("xx", _f32(shapes.N_CAP, shapes.D)),
+            ("yy", _f32(shapes.N_CAP)),
+            ("mask", _f32(shapes.N_CAP)),
+            ("scalars", _f32(1, 2)),  # [[count, 2*lam/N]]
+        ],
+    ),
+    "batch_step": (
+        model.batch_step,
+        [
+            ("w", _f32(1, shapes.D)),
+            ("xx", _f32(shapes.N_CAP, shapes.D)),
+            ("yy", _f32(shapes.N_CAP)),
+            ("mask", _f32(shapes.N_CAP)),
+            ("scalars", _f32(1, 3)),  # [[count, 2*lam/N, alpha]]
+        ],
+    ),
+    "mlp_step": (
+        model.mlp_step,
+        [
+            ("x", _f32(shapes.MLP_BATCH, shapes.MLP_IN)),
+            ("y", _f32(shapes.MLP_BATCH)),
+            ("w1", _f32(shapes.MLP_IN, shapes.MLP_HIDDEN)),
+            ("b1", _f32(1, shapes.MLP_HIDDEN)),
+            ("w2", _f32(shapes.MLP_HIDDEN, shapes.MLP_HIDDEN)),
+            ("b2", _f32(1, shapes.MLP_HIDDEN)),
+            ("w3", _f32(shapes.MLP_HIDDEN, 1)),
+            ("b3", _f32(1, 1)),
+            ("scalars", _f32(1, 1)),  # [[alpha]]
+        ],
+    ),
+    "mlp_loss": (
+        model.mlp_loss,
+        [
+            ("x", _f32(shapes.MLP_BATCH, shapes.MLP_IN)),
+            ("y", _f32(shapes.MLP_BATCH)),
+            ("w1", _f32(shapes.MLP_IN, shapes.MLP_HIDDEN)),
+            ("b1", _f32(1, shapes.MLP_HIDDEN)),
+            ("w2", _f32(shapes.MLP_HIDDEN, shapes.MLP_HIDDEN)),
+            ("b2", _f32(1, shapes.MLP_HIDDEN)),
+            ("w3", _f32(shapes.MLP_HIDDEN, 1)),
+            ("b3", _f32(1, 1)),
+        ],
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name):
+    """Lower one entry point; returns (hlo_text, manifest record)."""
+    fn, sig = ENTRY_POINTS[name]
+    specs = [s for (_, s) in sig]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    outs = jax.eval_shape(fn, *specs)
+    record = {
+        "file": f"{name}.hlo.txt",
+        "inputs": [
+            {"name": n, "shape": list(s.shape), "dtype": str(s.dtype)}
+            for (n, s) in sig
+        ],
+        "outputs": [
+            {"shape": list(o.shape), "dtype": str(o.dtype)} for o in outs
+        ],
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    return text, record
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output dir")
+    parser.add_argument(
+        "--only", default=None, help="comma-separated subset of entry points"
+    )
+    args = parser.parse_args()
+    out_dir = args.out
+    if out_dir.endswith(".txt"):  # Makefile passes a file path; use its dir
+        out_dir = os.path.dirname(out_dir) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    names = list(ENTRY_POINTS) if args.only is None else args.only.split(",")
+    manifest = {
+        "format": 1,
+        "constants": {
+            "d": shapes.D,
+            "k_max": shapes.K_MAX,
+            "n_raw": shapes.N_RAW,
+            "n_cap": shapes.N_CAP,
+            "loss_tile": shapes.TILE,
+            "mlp_hidden": shapes.MLP_HIDDEN,
+            "mlp_batch": shapes.MLP_BATCH,
+        },
+        "artifacts": {},
+    }
+    for name in names:
+        text, record = lower_entry(name)
+        path = os.path.join(out_dir, record["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = record
+        print(f"  wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote {os.path.join(out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Layer-1 Pallas kernels for edgepipe.
+
+Every kernel is authored with ``interpret=True`` so it lowers to plain HLO
+ops executable by the CPU PJRT client the Rust runtime uses (real-TPU
+Pallas lowering emits Mosaic custom-calls that only a TPU plugin can run).
+
+Kernels:
+  sgd_block    — one pipelined block of K sequential single-sample SGD
+                 updates fused in a single kernel (the paper's hot path).
+  masked_loss  — tiled masked empirical ridge loss over the full row buffer.
+  grad_batch   — tiled mini-batch ridge gradient (baselines / extensions).
+  mlp          — fused tiled linear(+ReLU) layers for the MLP example.
+
+``ref.py`` holds the pure-jnp oracles each kernel is tested against.
+"""
+
+from . import ref  # noqa: F401
+from .sgd_block import sgd_block  # noqa: F401
+from .masked_loss import masked_loss  # noqa: F401
+from .grad_batch import grad_batch  # noqa: F401
+from .mlp import linear_fused  # noqa: F401

@@ -1,0 +1,55 @@
+"""Pallas kernel: tiled masked mini-batch ridge gradient.
+
+Used by the baselines (transmit-all-then-batch-train) and extensions; the
+paper's main path is single-sample SGD (sgd_block.py), but batch gradients
+are needed for the "sequential" comparison policy and for computing w* /
+full-dataset gradients on device-scale buffers.
+
+TPU mapping: same row tiling as masked_loss; each grid step computes its
+tile's contribution  2 * X_tile^T (mask * (X_tile w - y))  with MXU-shaped
+products, writing one (d,) partial per tile. Layer 2 reduces partials,
+divides by count and adds the regularizer gradient.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .masked_loss import TILE
+
+
+def _grad_batch_kernel(w_ref, xs_ref, ys_ref, mask_ref, out_ref):
+    """One grid step: partial gradient over a (TILE, d) row tile."""
+    xs = xs_ref[...]                                  # (TILE, d)
+    w_col = w_ref[0, :].reshape(-1, 1)                # (d, 1)
+    err = jnp.dot(xs, w_col)[:, 0] - ys_ref[...]      # (TILE,)
+    weighted = (mask_ref[...] * err).reshape(1, -1)   # (1, TILE)
+    out_ref[0, :] = 2.0 * jnp.dot(weighted, xs)[0]    # (d,) via MXU
+
+
+def grad_batch(w, xx, yy, mask):
+    """Partial tile sums of the masked squared-error gradient.
+
+    w    : (1, d)     float32
+    xx   : (N_cap, d) float32, N_cap % TILE == 0
+    yy   : (N_cap,)   float32
+    mask : (N_cap,)   float32
+    returns (N_cap // TILE, d) float32 partials; caller reduces, divides by
+    count, and adds reg2 * w (see model.dataset_grad).
+    """
+    n_cap, d = xx.shape
+    assert n_cap % TILE == 0, f"N_cap={n_cap} must be a multiple of TILE={TILE}"
+    grid = n_cap // TILE
+    return pl.pallas_call(
+        _grad_batch_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((TILE, d), lambda i: (i, 0)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid, d), jnp.float32),
+        interpret=True,
+    )(w, xx, yy, mask)

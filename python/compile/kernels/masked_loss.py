@@ -1,0 +1,55 @@
+"""Pallas kernel: tiled masked empirical ridge loss over a fixed row buffer.
+
+Evaluates the paper's empirical loss (eq. (1), and the growing-store
+variants (6)-(8)) over a fixed-capacity (N_cap, d) buffer in which only the
+first ``count`` rows (mask == 1) are real samples. A fixed capacity plus a
+validity mask lets one AOT artifact serve every store size as the edge
+node's sample set grows block by block.
+
+TPU mapping: the buffer is tiled over rows; each grid step streams one
+(TILE, d) tile HBM->VMEM, computes the tile's residual via an MXU-shaped
+(TILE, d) @ (d, 1) product, and writes one partial sum. Layer 2 reduces
+the partials and adds the (lam/N)*||w||^2 regularizer.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile size. N_cap buffers are padded to a multiple of this.
+TILE = 1024
+
+
+def _masked_loss_kernel(w_ref, xs_ref, ys_ref, mask_ref, out_ref):
+    """One grid step: partial sum of mask * (x_i^T w - y_i)^2 over a tile."""
+    w_col = w_ref[0, :].reshape(-1, 1)          # (d, 1)
+    err = jnp.dot(xs_ref[...], w_col)[:, 0] - ys_ref[...]  # (TILE,) via MXU
+    out_ref[0] = jnp.sum(mask_ref[...] * err * err)
+
+
+def masked_loss(w, xx, yy, mask):
+    """Partial tile sums of the masked squared error.
+
+    w    : (1, d)     float32
+    xx   : (N_cap, d) float32, N_cap % TILE == 0
+    yy   : (N_cap,)   float32
+    mask : (N_cap,)   float32
+    returns (N_cap // TILE,) float32 partial sums; caller divides by count
+    and adds the regularizer (see model.dataset_loss).
+    """
+    n_cap, d = xx.shape
+    assert n_cap % TILE == 0, f"N_cap={n_cap} must be a multiple of TILE={TILE}"
+    grid = n_cap // TILE
+    return pl.pallas_call(
+        _masked_loss_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (0, 0)),      # w broadcast
+            pl.BlockSpec((TILE, d), lambda i: (i, 0)),   # row tile
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((grid,), jnp.float32),
+        interpret=True,
+    )(w, xx, yy, mask)

@@ -1,0 +1,58 @@
+"""Pallas kernel: fused tiled dense layer act(x @ w + b) for the MLP example.
+
+The MLP extension example (examples/mlp_edge.rs) trains a small multi-layer
+perceptron through the same pipelined protocol as the paper's ridge model,
+demonstrating that the coordinator is model-agnostic. Forward and backward
+matmuls all route through this one fused kernel.
+
+TPU mapping: grid over row tiles of the batch; weights for one layer fit in
+VMEM (<= 256x256 f32 = 256 KiB), so each grid step performs a
+(TB, in) @ (in, out) MXU matmul, adds the bias, and applies the optional
+ReLU in-register before writing the tile back. This is the MXU showcase
+path of the artifact set (DESIGN.md §9).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch-row tile. Batches are padded to a multiple of this.
+ROW_TILE = 128
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, out_ref, *, relu):
+    """One grid step: out_tile = act(x_tile @ w + b)."""
+    acc = jnp.dot(x_ref[...], w_ref[...]) + b_ref[0, :][None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    out_ref[...] = acc
+
+
+def linear_fused(x, w, b, relu):
+    """Fused dense layer over row tiles.
+
+    x    : (n, in)  float32, n % ROW_TILE == 0
+    w    : (in, out) float32
+    b    : (1, out)  float32
+    relu : static bool
+    returns (n, out) float32
+    """
+    n, d_in = x.shape
+    d_out = w.shape[1]
+    assert n % ROW_TILE == 0, f"batch {n} must be a multiple of {ROW_TILE}"
+    grid = n // ROW_TILE
+    kernel = functools.partial(_linear_kernel, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((d_in, d_out), lambda i: (0, 0)),
+            pl.BlockSpec((1, d_out), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_TILE, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d_out), jnp.float32),
+        interpret=True,
+    )(x, w, b)

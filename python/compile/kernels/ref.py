@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the CORE correctness signal: each kernel in this package must
+match its oracle to float32 tolerance across randomized shapes and values
+(see python/tests/). The oracles implement the paper's math directly:
+
+  loss      l(w, x) = (w^T x - y)^2 + (lam/N) ||w||^2          (paper Sec. 5)
+  gradient  grad l  = 2 x (w^T x - y) + (2 lam/N) w
+  SGD step  w <- w - alpha * grad l(w, xi)                      (paper eq. (2))
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ridge_loss_point(w, x, y, reg):
+    """Per-sample ridge loss l(w,x) with regularizer coefficient reg = lam/N."""
+    err = jnp.dot(w, x) - y
+    return err * err + reg * jnp.dot(w, w)
+
+
+def ridge_grad_point(w, x, y, reg2):
+    """Per-sample ridge gradient; reg2 = 2*lam/N (derivative of the reg term)."""
+    err = jnp.dot(w, x) - y
+    return 2.0 * err * x + reg2 * w
+
+
+def sgd_block_ref(w, xs, ys, mask, alpha, reg2):
+    """Run K sequential masked single-sample SGD updates (paper eq. (2)).
+
+    w     : (d,)    parameter vector
+    xs    : (K, d)  gathered covariates for this block's updates
+    ys    : (K,)    labels
+    mask  : (K,)    1.0 for active steps, 0.0 for padded slots
+    alpha : scalar  learning rate
+    reg2  : scalar  2*lam/N
+    Returns the (d,) parameter vector after the block.
+    """
+
+    xs = jnp.asarray(xs)
+    ys = jnp.asarray(ys)
+    mask = jnp.asarray(mask)
+
+    def step(j, w):
+        g = ridge_grad_point(w, xs[j], ys[j], reg2)
+        return w - mask[j] * alpha * g
+
+    return jax.lax.fori_loop(0, xs.shape[0], step, jnp.asarray(w))
+
+
+def masked_loss_ref(w, xx, yy, mask, count, reg):
+    """Masked empirical ridge loss over a fixed row buffer (paper eq. (1)/(6)).
+
+    xx    : (N_cap, d) row buffer; only rows with mask==1 are real samples
+    count : scalar     number of valid rows (sum of mask)
+    reg   : scalar     lam/N  (N = FULL dataset size per paper Sec. 5)
+    """
+    err = xx @ w - yy
+    data = jnp.sum(mask * err * err) / count
+    return data + reg * jnp.dot(w, w)
+
+
+def grad_batch_ref(w, xx, yy, mask, count, reg2):
+    """Masked mini-batch ridge gradient: mean over valid rows.
+
+    grad = (1/count) sum_i mask_i * 2 x_i (w^T x_i - y_i) + reg2 * w
+    """
+    err = xx @ w - yy
+    g = 2.0 * (xx * (mask * err)[:, None]).sum(axis=0) / count
+    return g + reg2 * w
+
+
+def linear_fused_ref(x, w, b, relu):
+    """Fused dense layer: act(x @ w + b), act = ReLU if relu else identity."""
+    out = x @ w + b[None, :]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def mlp_forward_ref(params, x):
+    """Two-hidden-layer MLP forward pass used by the extension example.
+
+    params = (w1, b1, w2, b2, w3, b3); returns (n,) predictions.
+    """
+    w1, b1, w2, b2, w3, b3 = params
+    h1 = jnp.maximum(x @ w1 + b1[None, :], 0.0)
+    h2 = jnp.maximum(h1 @ w2 + b2[None, :], 0.0)
+    return (h2 @ w3 + b3[None, :])[:, 0]
+
+
+def mlp_loss_ref(params, x, y):
+    """Mean-squared-error loss of the MLP on batch (x, y)."""
+    pred = mlp_forward_ref(params, x)
+    d = pred - y
+    return jnp.mean(d * d)

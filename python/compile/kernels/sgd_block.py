@@ -1,0 +1,59 @@
+"""Pallas kernel: one pipelined block of K sequential SGD updates.
+
+This is the paper's compute hot-spot (Sec. 2, eq. (2)): while block b+1 is
+on the wire, the edge node performs n_p = (n_c + n_o)/tau_p single-sample
+SGD updates on samples drawn from its current store. The Rust coordinator
+gathers the sampled rows into a contiguous (K, d) tile and invokes this
+kernel once per block (looping calls when n_p > K).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the updates are sequentially
+dependent, so the kernel streams the block's samples HBM->VMEM once
+(single-tile BlockSpec) and carries ``w`` in registers/VMEM across all K
+steps. The per-step work (two d-length dots + axpy, d = 8) is VPU work by
+nature; the MXU path lives in masked_loss / grad_batch / mlp.
+
+A fixed step capacity K plus a step mask lets ONE artifact serve every
+n_p: padded slots have mask 0.0 and leave ``w`` unchanged.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sgd_block_kernel(w_ref, xs_ref, ys_ref, mask_ref, sc_ref, out_ref):
+    """Kernel body. sc_ref packs scalars [[alpha, reg2]] (reg2 = 2*lam/N)."""
+    alpha = sc_ref[0, 0]
+    reg2 = sc_ref[0, 1]
+    k = xs_ref.shape[0]
+
+    def step(j, w):
+        x = xs_ref[pl.dslice(j, 1), :][0]       # (d,) dynamic row load
+        y = ys_ref[pl.dslice(j, 1)][0]
+        m = mask_ref[pl.dslice(j, 1)][0]
+        err = jnp.sum(x * w) - y                # w^T x - y
+        g = 2.0 * err * x + reg2 * w            # per-sample ridge gradient
+        return w - m * alpha * g                # masked update (eq. (2))
+
+    out_ref[0, :] = jax.lax.fori_loop(0, k, step, w_ref[0, :])
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sgd_block(w, xs, ys, mask, scalars):
+    """Apply one block of masked SGD updates.
+
+    w       : (1, d) float32   current parameters (row vector)
+    xs      : (K, d) float32   gathered covariates for the block's steps
+    ys      : (K,)   float32   labels
+    mask    : (K,)   float32   1.0 = active step, 0.0 = padded slot
+    scalars : (1, 2) float32   [[alpha, 2*lam/N]]
+    returns : (1, d) float32   parameters after the block
+    """
+    d = w.shape[1]
+    return pl.pallas_call(
+        _sgd_block_kernel,
+        out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
+        interpret=True,
+    )(w, xs, ys, mask, scalars)

@@ -1,0 +1,128 @@
+"""Layer-2 JAX model: the paper's ridge-regression training computation.
+
+Every public function here is an AOT entry point lowered by aot.py to HLO
+text and executed from the Rust coordinator via PJRT — Python never runs on
+the request path. All heavy compute routes through the Layer-1 Pallas
+kernels in ``kernels/``.
+
+Paper objects implemented (Skatchkovsky & Simeone 2019):
+  eq. (1)  L(w)        -> dataset_loss (masked over the growing store)
+  eq. (2)  SGD update  -> sgd_block (one pipelined block of n_p updates)
+  eq. (6-8) store/remainder losses -> dataset_loss with the right mask
+plus batch-gradient entry points for the baseline policies and a small MLP
+for the model-generality extension example.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import grad_batch as _grad_batch_kernel
+from .kernels import linear_fused
+from .kernels import masked_loss as _masked_loss_kernel
+from .kernels import sgd_block as _sgd_block_kernel
+
+
+# --------------------------------------------------------------------------
+# Ridge regression entry points (the paper's workload)
+# --------------------------------------------------------------------------
+
+def sgd_block(w, xs, ys, mask, scalars):
+    """One pipelined block of masked single-sample SGD updates (eq. (2)).
+
+    scalars = [[alpha, 2*lam/N]]. Returns the (1, d) updated parameters.
+    """
+    return (_sgd_block_kernel(w, xs, ys, mask, scalars),)
+
+
+def dataset_loss(w, xx, yy, mask, scalars):
+    """Masked empirical ridge loss over the row buffer (eqs. (1), (6)-(8)).
+
+    scalars = [[count, lam/N]] where count = sum(mask) is the number of
+    valid rows. Returns a (1,) loss.
+    """
+    count = scalars[0, 0]
+    reg = scalars[0, 1]
+    partials = _masked_loss_kernel(w, xx, yy, mask)
+    data = jnp.sum(partials) / count
+    return (jnp.reshape(data + reg * jnp.dot(w[0], w[0]), (1,)),)
+
+
+def dataset_grad(w, xx, yy, mask, scalars):
+    """Masked full-store ridge gradient. scalars = [[count, 2*lam/N]]."""
+    count = scalars[0, 0]
+    reg2 = scalars[0, 1]
+    partials = _grad_batch_kernel(w, xx, yy, mask)       # (tiles, d)
+    g = jnp.sum(partials, axis=0) / count + reg2 * w[0]
+    return (jnp.reshape(g, (1, -1)),)
+
+
+def batch_step(w, xx, yy, mask, scalars):
+    """One full-store batch gradient-descent step (baseline policies).
+
+    scalars = [[count, 2*lam/N, alpha]]. Returns the (1, d) updated params.
+    """
+    count = scalars[0, 0]
+    reg2 = scalars[0, 1]
+    alpha = scalars[0, 2]
+    partials = _grad_batch_kernel(w, xx, yy, mask)
+    g = jnp.sum(partials, axis=0) / count + reg2 * w[0]
+    return (jnp.reshape(w[0] - alpha * g, (1, -1)),)
+
+
+# --------------------------------------------------------------------------
+# MLP extension (model-generality example; trained through the same protocol)
+# --------------------------------------------------------------------------
+
+def _mlp_forward_parts(x, w1, b1, w2, b2, w3, b3):
+    """Forward pass through the fused Pallas dense layers, keeping
+    intermediate activations for the hand-derived backward pass."""
+    h1 = linear_fused(x, w1, b1, relu=True)     # (n, H)
+    h2 = linear_fused(h1, w2, b2, relu=True)    # (n, H)
+    out = linear_fused(h2, w3, b3, relu=False)  # (n, 1)
+    return h1, h2, out[:, 0]
+
+
+def mlp_loss(x, y, w1, b1, w2, b2, w3, b3):
+    """MSE loss of the MLP on batch (x, y). Returns (1,)."""
+    _, _, pred = _mlp_forward_parts(x, w1, b1, w2, b2, w3, b3)
+    diff = pred - y
+    return (jnp.reshape(jnp.mean(diff * diff), (1,)),)
+
+
+def mlp_step(x, y, w1, b1, w2, b2, w3, b3, scalars):
+    """One SGD step of the MLP with hand-derived backprop.
+
+    Forward activations and the two activation-gradient matmuls route
+    through the Layer-1 ``linear_fused`` kernel; the (in, n) @ (n, out)
+    weight-gradient contractions stay in L2 where XLA fuses them (their
+    layout does not fit the row-tiled kernel). scalars = [[alpha]].
+    Returns (w1', b1', w2', b2', w3', b3', loss(1,)).
+    """
+    alpha = scalars[0, 0]
+    n = x.shape[0]
+    h1, h2, pred = _mlp_forward_parts(x, w1, b1, w2, b2, w3, b3)
+    diff = pred - y
+    loss = jnp.mean(diff * diff)
+
+    zeros_h = jnp.zeros((1, w2.shape[1]), jnp.float32)
+    dpred = (2.0 / n) * diff                               # (n,)
+    dw3 = jnp.dot(h2.T, dpred[:, None])                    # (H, 1)
+    db3 = jnp.reshape(jnp.sum(dpred), (1, 1))
+    dh2 = linear_fused(dpred[:, None], w3.T, zeros_h, relu=False)  # (n, H)
+    da2 = dh2 * (h2 > 0)                                   # ReLU mask
+    dw2 = jnp.dot(h1.T, da2)
+    db2 = jnp.sum(da2, axis=0, keepdims=True)
+    dh1 = linear_fused(da2, w2.T, zeros_h, relu=False)     # (n, H)
+    da1 = dh1 * (h1 > 0)
+    dw1 = jnp.dot(x.T, da1)
+    db1 = jnp.sum(da1, axis=0, keepdims=True)
+
+    return (
+        w1 - alpha * dw1,
+        b1 - alpha * db1,
+        w2 - alpha * dw2,
+        b2 - alpha * db2,
+        w3 - alpha * dw3,
+        b3 - alpha * db3,
+        jnp.reshape(loss, (1,)),
+    )

@@ -1,0 +1,31 @@
+"""Fixed AOT shapes shared by the JAX model, aot.py, and the Rust runtime.
+
+One artifact per entry point, NOT per runtime configuration: buffers are
+fixed-capacity with validity masks so a single compiled executable serves
+every block size n_c, overhead n_o, and store size the coordinator can
+produce (DESIGN.md §4, Layer 2).
+
+These constants are exported into artifacts/manifest.json; the Rust side
+reads them from there (rust/src/runtime/manifest.rs) — keep the names in
+sync.
+"""
+
+# Feature dimension of the paper's ridge workload (California-Housing-like).
+D = 8
+
+# Step capacity of one sgd_block call. The coordinator loops calls when a
+# block's n_p = (n_c + n_o) / tau_p exceeds this.
+K_MAX = 512
+
+# Raw dataset size (paper Sec. 5: California Housing, 20640 rows).
+N_RAW = 20640
+
+# Row-buffer capacity: N_RAW padded up to a multiple of the loss tile.
+from .kernels.masked_loss import TILE  # noqa: E402
+
+N_CAP = ((N_RAW + TILE - 1) // TILE) * TILE  # = 21504 for TILE=1024
+
+# MLP extension example dimensions.
+MLP_IN = D
+MLP_HIDDEN = 256
+MLP_BATCH = 256

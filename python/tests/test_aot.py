@@ -1,0 +1,54 @@
+"""AOT lowering: HLO text well-formedness and manifest completeness."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, shapes
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lower_sgd_block_text():
+    text, record = aot.lower_entry("sgd_block")
+    assert "ENTRY" in text and "HloModule" in text
+    assert record["inputs"][0]["shape"] == [1, shapes.D]
+    assert record["inputs"][1]["shape"] == [shapes.K_MAX, shapes.D]
+    assert record["outputs"][0]["shape"] == [1, shapes.D]
+
+
+def test_lower_dataset_loss_text():
+    text, record = aot.lower_entry("dataset_loss")
+    assert "ENTRY" in text
+    assert record["inputs"][1]["shape"] == [shapes.N_CAP, shapes.D]
+    assert record["outputs"][0]["shape"] == [1]
+
+
+def test_all_entry_points_lower():
+    for name in aot.ENTRY_POINTS:
+        text, record = aot.lower_entry(name)
+        assert "ENTRY" in text, name
+        assert all(i["dtype"] == "float32" for i in record["inputs"]), name
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_on_disk_is_complete():
+    with open(os.path.join(ART_DIR, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["format"] == 1
+    consts = manifest["constants"]
+    assert consts["d"] == shapes.D
+    assert consts["k_max"] == shapes.K_MAX
+    assert consts["n_cap"] == shapes.N_CAP
+    for name in aot.ENTRY_POINTS:
+        assert name in manifest["artifacts"], name
+        rec = manifest["artifacts"][name]
+        path = os.path.join(ART_DIR, rec["file"])
+        assert os.path.exists(path), path
+        with open(path) as f:
+            head = f.read(4096)
+        assert "HloModule" in head, name

@@ -1,0 +1,103 @@
+"""grad_batch Pallas kernel vs oracle and finite differences."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.grad_batch import grad_batch
+from compile.kernels.masked_loss import TILE
+
+
+def _grad_from_partials(w, xx, yy, mask, reg2):
+    partials = np.asarray(grad_batch(w[None, :], xx, yy, mask))
+    count = float(mask.sum())
+    return partials.sum(axis=0) / count + reg2 * w
+
+
+def _numpy_grad(w, xx, yy, mask, reg2):
+    xx64 = xx.astype(np.float64)
+    err = xx64 @ w - yy
+    g = 2.0 * (xx64 * (mask * err)[:, None]).sum(axis=0) / float(mask.sum())
+    return g + reg2 * w
+
+
+def _rand(rng, n, d):
+    xx = rng.normal(size=(n, d)).astype(np.float32)
+    yy = rng.normal(size=n).astype(np.float32)
+    w = rng.normal(size=d).astype(np.float32)
+    return w, xx, yy
+
+
+def test_matches_numpy_multi_tile():
+    rng = np.random.default_rng(20)
+    n = 2 * TILE
+    w, xx, yy = _rand(rng, n, 8)
+    mask = (np.arange(n) < 1800).astype(np.float32)
+    got = _grad_from_partials(w, xx, yy, mask, 1e-3)
+    want = _numpy_grad(w, xx, yy, mask, 1e-3)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-5)
+
+
+def test_matches_jnp_ref():
+    rng = np.random.default_rng(21)
+    n = TILE
+    w, xx, yy = _rand(rng, n, 8)
+    mask = (rng.random(n) < 0.6).astype(np.float32)
+    count = float(mask.sum())
+    got = _grad_from_partials(w, xx, yy, mask, 5e-4)
+    want = np.asarray(ref.grad_batch_ref(w, xx, yy, mask, count, 5e-4))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-5)
+
+
+def test_finite_differences():
+    """Kernel gradient must match central differences of the masked loss."""
+    rng = np.random.default_rng(22)
+    n = TILE
+    w, xx, yy = _rand(rng, n, 8)
+    mask = (np.arange(n) < 512).astype(np.float32)
+    count = float(mask.sum())
+    reg2 = 2e-3
+
+    def loss(wv):
+        err = xx.astype(np.float64) @ wv - yy
+        return float((mask * err * err).sum()) / count + 0.5 * reg2 * float(
+            wv @ wv
+        )
+
+    g = _grad_from_partials(w, xx, yy, mask, reg2)
+    eps = 1e-4
+    for i in range(8):
+        e = np.zeros(8)
+        e[i] = eps
+        fd = (loss(w + e) - loss(w - e)) / (2 * eps)
+        np.testing.assert_allclose(g[i], fd, rtol=2e-2, atol=1e-4)
+
+
+def test_gradient_at_solution_is_reg_only():
+    """If y = X w exactly, the data term of the gradient vanishes."""
+    rng = np.random.default_rng(23)
+    n = TILE
+    xx = rng.normal(size=(n, 8)).astype(np.float32)
+    w = rng.normal(size=8).astype(np.float32)
+    yy = (xx @ w).astype(np.float32)
+    mask = np.ones(n, dtype=np.float32)
+    got = _grad_from_partials(w, xx, yy, mask, 1e-2)
+    np.testing.assert_allclose(got, 1e-2 * w, atol=5e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=2),
+    d=st.integers(min_value=1, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_matches_numpy(tiles, d, seed):
+    rng = np.random.default_rng(seed)
+    n = tiles * TILE
+    w, xx, yy = _rand(rng, n, d)
+    mask = (rng.random(n) < 0.8).astype(np.float32)
+    if mask.sum() == 0:
+        mask[0] = 1.0
+    got = _grad_from_partials(w, xx, yy, mask, 1e-3)
+    want = _numpy_grad(w, xx, yy, mask, 1e-3)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=5e-5)

@@ -1,0 +1,114 @@
+"""masked_loss Pallas kernel vs oracle (paper eqs. (1), (6)-(8))."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.masked_loss import TILE, masked_loss
+
+
+def _loss_from_partials(w, xx, yy, mask, reg):
+    partials = np.asarray(masked_loss(w[None, :], xx, yy, mask))
+    count = float(mask.sum())
+    return float(partials.sum()) / count + reg * float(w @ w)
+
+
+def _numpy_loss(w, xx, yy, mask, reg):
+    err = xx.astype(np.float64) @ w.astype(np.float64) - yy
+    data = float((mask * err * err).sum()) / float(mask.sum())
+    return data + reg * float(w @ w)
+
+
+def _rand(rng, n, d):
+    xx = rng.normal(size=(n, d)).astype(np.float32)
+    yy = rng.normal(size=n).astype(np.float32)
+    w = rng.normal(size=d).astype(np.float32)
+    return w, xx, yy
+
+
+def test_full_mask_one_tile():
+    rng = np.random.default_rng(10)
+    w, xx, yy = _rand(rng, TILE, 8)
+    mask = np.ones(TILE, dtype=np.float32)
+    got = _loss_from_partials(w, xx, yy, mask, 0.05 / TILE)
+    want = _numpy_loss(w, xx, yy, mask, 0.05 / TILE)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_multi_tile_partial_mask():
+    rng = np.random.default_rng(11)
+    n = 3 * TILE
+    w, xx, yy = _rand(rng, n, 8)
+    mask = (np.arange(n) < 1500).astype(np.float32)
+    got = _loss_from_partials(w, xx, yy, mask, 1e-3)
+    want = _numpy_loss(w, xx, yy, mask, 1e-3)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_matches_jnp_ref():
+    rng = np.random.default_rng(12)
+    n = 2 * TILE
+    w, xx, yy = _rand(rng, n, 8)
+    mask = (rng.random(n) < 0.5).astype(np.float32)
+    count = float(mask.sum())
+    got = _loss_from_partials(w, xx, yy, mask, 2e-3)
+    want = float(ref.masked_loss_ref(w, xx, yy, mask, count, 2e-3))
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_masked_rows_do_not_contribute():
+    """Garbage in masked rows must not change the loss."""
+    rng = np.random.default_rng(13)
+    n = TILE
+    w, xx, yy = _rand(rng, n, 8)
+    mask = (np.arange(n) < 700).astype(np.float32)
+    base = _loss_from_partials(w, xx, yy, mask, 0.0)
+    xx2 = xx.copy()
+    xx2[700:] = 1e6  # poison the masked region
+    yy2 = yy.copy()
+    yy2[700:] = -1e6
+    poisoned = _loss_from_partials(w, xx2, yy2, mask, 0.0)
+    np.testing.assert_allclose(base, poisoned, rtol=1e-6)
+
+
+def test_partials_shape():
+    rng = np.random.default_rng(14)
+    n = 5 * TILE
+    w, xx, yy = _rand(rng, n, 8)
+    mask = np.ones(n, dtype=np.float32)
+    partials = np.asarray(masked_loss(w[None, :], xx, yy, mask))
+    assert partials.shape == (5,)
+    # each partial is that tile's sum
+    for t in range(5):
+        err = xx[t * TILE : (t + 1) * TILE] @ w - yy[t * TILE : (t + 1) * TILE]
+        np.testing.assert_allclose(
+            partials[t], (err * err).sum(), rtol=1e-4
+        )
+
+
+def test_zero_weights_gives_label_power():
+    rng = np.random.default_rng(15)
+    n = TILE
+    _, xx, yy = _rand(rng, n, 8)
+    w = np.zeros(8, dtype=np.float32)
+    mask = np.ones(n, dtype=np.float32)
+    got = _loss_from_partials(w, xx, yy, mask, 0.0)
+    np.testing.assert_allclose(got, float((yy**2).mean()), rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=3),
+    d=st.integers(min_value=1, max_value=12),
+    frac=st.floats(min_value=0.05, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_matches_numpy(tiles, d, frac, seed):
+    rng = np.random.default_rng(seed)
+    n = tiles * TILE
+    w, xx, yy = _rand(rng, n, d)
+    m = max(1, int(frac * n))
+    mask = (np.arange(n) < m).astype(np.float32)
+    got = _loss_from_partials(w, xx, yy, mask, 1e-3)
+    want = _numpy_loss(w, xx, yy, mask, 1e-3)
+    np.testing.assert_allclose(got, want, rtol=2e-4)

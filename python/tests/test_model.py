@@ -1,0 +1,97 @@
+"""Layer-2 entry points: shapes, formulas, multi-block trajectories."""
+
+import numpy as np
+
+from compile import model, shapes
+
+
+def _rand_store(rng, n_valid, n_cap=None, d=8):
+    n_cap = n_cap or shapes.N_CAP
+    xx = np.zeros((n_cap, d), dtype=np.float32)
+    yy = np.zeros(n_cap, dtype=np.float32)
+    xx[:n_valid] = rng.normal(size=(n_valid, d))
+    yy[:n_valid] = rng.normal(size=n_valid)
+    mask = (np.arange(n_cap) < n_valid).astype(np.float32)
+    return xx, yy, mask
+
+
+def test_dataset_loss_formula():
+    """dataset_loss == (1/count) sum (w.x - y)^2 + reg * |w|^2 exactly."""
+    rng = np.random.default_rng(40)
+    n_valid = 5000
+    xx, yy, mask = _rand_store(rng, n_valid)
+    w = rng.normal(size=8).astype(np.float32)
+    lam_over_n = 0.05 / 18576.0
+    sc = np.array([[float(n_valid), lam_over_n]], dtype=np.float32)
+    (got,) = model.dataset_loss(w[None, :], xx, yy, mask, sc)
+    err = xx[:n_valid].astype(np.float64) @ w - yy[:n_valid]
+    want = (err**2).mean() + lam_over_n * float(w @ w)
+    np.testing.assert_allclose(float(got[0]), want, rtol=1e-4)
+
+
+def test_dataset_grad_formula():
+    rng = np.random.default_rng(41)
+    n_valid = 3000
+    xx, yy, mask = _rand_store(rng, n_valid)
+    w = rng.normal(size=8).astype(np.float32)
+    reg2 = 2 * 0.05 / 18576.0
+    sc = np.array([[float(n_valid), reg2]], dtype=np.float32)
+    (got,) = model.dataset_grad(w[None, :], xx, yy, mask, sc)
+    xx64 = xx[:n_valid].astype(np.float64)
+    err = xx64 @ w - yy[:n_valid]
+    want = 2.0 * (xx64 * err[:, None]).mean(axis=0) + reg2 * w
+    np.testing.assert_allclose(np.asarray(got)[0], want, rtol=1e-3, atol=1e-6)
+
+
+def test_batch_step_descends():
+    rng = np.random.default_rng(42)
+    n_valid = 4000
+    xx, yy, mask = _rand_store(rng, n_valid)
+    w = rng.normal(size=8).astype(np.float32)
+    sc_step = np.array([[float(n_valid), 0.0, 0.05]], dtype=np.float32)
+    sc_loss = np.array([[float(n_valid), 0.0]], dtype=np.float32)
+
+    (l0,) = model.dataset_loss(w[None, :], xx, yy, mask, sc_loss)
+    (w1,) = model.batch_step(w[None, :], xx, yy, mask, sc_step)
+    (l1,) = model.dataset_loss(np.asarray(w1), xx, yy, mask, sc_loss)
+    assert float(l1[0]) < float(l0[0])
+
+
+def test_sgd_block_multiblock_trajectory():
+    """Chain 4 blocks through the L2 entry point and check against a
+    single numpy re-simulation (this is exactly what the Rust edge trainer
+    does per transmission block)."""
+    rng = np.random.default_rng(43)
+    k = 64
+    d = 8
+    alpha, reg2 = 1e-2, 1e-4
+    sc = np.array([[alpha, reg2]], dtype=np.float32)
+    w = rng.normal(size=d).astype(np.float32)
+    w_np = w.astype(np.float64).copy()
+    for _ in range(4):
+        xs = rng.normal(size=(k, d)).astype(np.float32)
+        ys = rng.normal(size=k).astype(np.float32)
+        mask = np.ones(k, dtype=np.float32)
+        (w_out,) = model.sgd_block(w[None, :], xs, ys, mask, sc)
+        w = np.asarray(w_out)[0]
+        for j in range(k):
+            err = w_np @ xs[j] - ys[j]
+            w_np -= alpha * (2 * err * xs[j] + reg2 * w_np)
+    np.testing.assert_allclose(w, w_np, rtol=1e-3, atol=1e-5)
+
+
+def test_n_cap_is_tile_aligned():
+    assert shapes.N_CAP % shapes.TILE == 0
+    assert shapes.N_CAP >= shapes.N_RAW
+
+
+def test_entry_points_shapes_match_manifest_sig():
+    """Every aot.py signature must be consumable by its entry point."""
+    import jax
+
+    from compile import aot
+
+    for name, (fn, sig) in aot.ENTRY_POINTS.items():
+        specs = [s for (_, s) in sig]
+        outs = jax.eval_shape(fn, *specs)
+        assert len(outs) >= 1, name

@@ -1,0 +1,132 @@
+"""sgd_block Pallas kernel vs pure-jnp oracle (paper eq. (2))."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.sgd_block import sgd_block
+
+
+def _run_kernel(w, xs, ys, mask, alpha, reg2):
+    sc = np.array([[alpha, reg2]], dtype=np.float32)
+    out = sgd_block(w[None, :], xs, ys, mask, sc)
+    return np.asarray(out)[0]
+
+
+def _run_numpy(w, xs, ys, mask, alpha, reg2):
+    """Float64 numpy re-derivation, independent of jax."""
+    w = w.astype(np.float64).copy()
+    for j in range(xs.shape[0]):
+        err = float(w @ xs[j]) - float(ys[j])
+        g = 2.0 * err * xs[j].astype(np.float64) + reg2 * w
+        w = w - mask[j] * alpha * g
+    return w
+
+
+def _rand_case(rng, k, d, scale=1.0):
+    w = (rng.normal(size=d) * scale).astype(np.float32)
+    xs = (rng.normal(size=(k, d)) * scale).astype(np.float32)
+    ys = (rng.normal(size=k) * scale).astype(np.float32)
+    return w, xs, ys
+
+
+def test_matches_ref_full_mask():
+    rng = np.random.default_rng(1)
+    w, xs, ys = _rand_case(rng, 64, 8)
+    mask = np.ones(64, dtype=np.float32)
+    got = _run_kernel(w, xs, ys, mask, 1e-2, 1e-3)
+    want = _run_numpy(w, xs, ys, mask, 1e-2, 1e-3)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_matches_jnp_ref():
+    rng = np.random.default_rng(2)
+    w, xs, ys = _rand_case(rng, 32, 8)
+    mask = (np.arange(32) < 17).astype(np.float32)
+    got = _run_kernel(w, xs, ys, mask, 5e-3, 1e-4)
+    want = np.asarray(ref.sgd_block_ref(w, xs, ys, mask, 5e-3, 1e-4))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_partial_mask_equals_truncated_run():
+    """Steps with mask 0 beyond position m must not change the result."""
+    rng = np.random.default_rng(3)
+    w, xs, ys = _rand_case(rng, 48, 8)
+    m = 19
+    mask = (np.arange(48) < m).astype(np.float32)
+    full = _run_kernel(w, xs, ys, mask, 1e-2, 1e-3)
+    trunc = _run_numpy(w, xs[:m], ys[:m], np.ones(m, np.float32), 1e-2, 1e-3)
+    np.testing.assert_allclose(full, trunc, rtol=1e-4, atol=1e-5)
+
+
+def test_zero_mask_is_noop():
+    rng = np.random.default_rng(4)
+    w, xs, ys = _rand_case(rng, 16, 8)
+    mask = np.zeros(16, dtype=np.float32)
+    got = _run_kernel(w, xs, ys, mask, 1e-1, 1e-2)
+    np.testing.assert_allclose(got, w, rtol=0, atol=0)
+
+
+def test_zero_alpha_is_noop():
+    rng = np.random.default_rng(5)
+    w, xs, ys = _rand_case(rng, 16, 8)
+    mask = np.ones(16, dtype=np.float32)
+    got = _run_kernel(w, xs, ys, mask, 0.0, 1e-2)
+    np.testing.assert_allclose(got, w, rtol=0, atol=0)
+
+
+def test_single_step_matches_closed_form():
+    """One unmasked step is exactly w - alpha*(2(w.x-y)x + reg2*w)."""
+    rng = np.random.default_rng(6)
+    w, xs, ys = _rand_case(rng, 1, 8)
+    mask = np.ones(1, dtype=np.float32)
+    alpha, reg2 = 7e-3, 2e-3
+    got = _run_kernel(w, xs, ys, mask, alpha, reg2)
+    err = w @ xs[0] - ys[0]
+    want = w - alpha * (2 * err * xs[0] + reg2 * w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_descends_on_quadratic():
+    """With a small step size the block must reduce the batch loss."""
+    rng = np.random.default_rng(7)
+    k, d = 128, 8
+    xs = rng.normal(size=(k, d)).astype(np.float32)
+    w_true = rng.normal(size=d).astype(np.float32)
+    ys = (xs @ w_true).astype(np.float32)
+    w0 = np.zeros(d, dtype=np.float32)
+    mask = np.ones(k, dtype=np.float32)
+    w1 = _run_kernel(w0, xs, ys, mask, 1e-2, 0.0)
+
+    def loss(w):
+        return float(np.mean((xs @ w - ys) ** 2))
+
+    assert loss(w1) < loss(w0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    k=st.integers(min_value=1, max_value=96),
+    d=st.integers(min_value=1, max_value=16),
+    alpha=st.floats(min_value=1e-5, max_value=5e-2),
+    reg2=st.floats(min_value=0.0, max_value=1e-2),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_matches_numpy(k, d, alpha, reg2, seed):
+    rng = np.random.default_rng(seed)
+    w, xs, ys = _rand_case(rng, k, d)
+    mask = (rng.random(k) < 0.7).astype(np.float32)
+    got = _run_kernel(w, xs, ys, mask, alpha, reg2)
+    want = _run_numpy(w, xs, ys, mask, alpha, reg2)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("k", [1, 2, 7, 33, 512])
+def test_shapes(k):
+    rng = np.random.default_rng(8)
+    w, xs, ys = _rand_case(rng, k, 8)
+    mask = np.ones(k, dtype=np.float32)
+    out = _run_kernel(w, xs, ys, mask, 1e-3, 0.0)
+    assert out.shape == (8,)
+    assert out.dtype == np.float32

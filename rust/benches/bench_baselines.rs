@@ -1,0 +1,66 @@
+//! Bench Abl-1: pipelined (paper) vs sequential (no overlap) vs
+//! transmit-all-first across overheads — who wins and by how much.
+//!
+//! Run: `cargo bench --bench bench_baselines`
+
+use edgepipe::baselines::{sequential, transmit_all_first};
+use edgepipe::bench::Bench;
+use edgepipe::channel::IdealChannel;
+use edgepipe::coordinator::des::{run_des, DesConfig};
+use edgepipe::coordinator::executor::NativeExecutor;
+use edgepipe::data::split::train_split;
+use edgepipe::data::synth::{synth_calhousing, SynthSpec};
+use edgepipe::model::RidgeModel;
+
+fn main() {
+    let mut bench = Bench::new();
+    bench.run_once("baseline comparison across overheads", || {
+        let raw = synth_calhousing(&SynthSpec::default());
+        let (train, _) = train_split(&raw, 0.9, 42);
+        let t = 1.5 * train.n as f64;
+        println!(
+            "{:>7} {:>7} | {:>12} {:>12} {:>12} | winner",
+            "n_o", "n_c", "pipelined", "sequential", "all-first"
+        );
+        for n_o in [1.0, 10.0, 100.0, 1000.0] {
+            for n_c in [100usize, 1378] {
+                let cfg = DesConfig {
+                    record_blocks: false,
+                    ..DesConfig::paper(n_c, n_o, t, 7)
+                };
+                let mk = || {
+                    NativeExecutor::new(
+                        RidgeModel::new(train.d, cfg.lambda, train.n),
+                        cfg.alpha,
+                    )
+                };
+                let pipe =
+                    run_des(&train, &cfg, &mut IdealChannel, &mut mk())
+                        .unwrap();
+                let seq =
+                    sequential(&train, &cfg, &mut IdealChannel, &mut mk())
+                        .unwrap();
+                let all = transmit_all_first(
+                    &train,
+                    &cfg,
+                    &mut IdealChannel,
+                    &mut mk(),
+                )
+                .unwrap();
+                let best = [
+                    ("pipelined", pipe.final_loss),
+                    ("sequential", seq.final_loss),
+                    ("all-first", all.final_loss),
+                ]
+                .into_iter()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+                println!(
+                    "{:>7} {:>7} | {:>12.6} {:>12.6} {:>12.6} | {}",
+                    n_o, n_c, pipe.final_loss, seq.final_loss,
+                    all.final_loss, best.0
+                );
+            }
+        }
+    });
+}

@@ -1,0 +1,66 @@
+//! Bench Abl-3 (paper Sec. 6 future work): packet erasures with ARQ.
+//! Final loss vs loss probability, and how the best block size shifts —
+//! lost packets waste whole blocks, so smaller blocks hedge.
+//!
+//! Run: `cargo bench --bench bench_channel_error`
+
+use edgepipe::bench::Bench;
+use edgepipe::channel::ErasureChannel;
+use edgepipe::coordinator::des::{run_des, DesConfig};
+use edgepipe::coordinator::executor::NativeExecutor;
+use edgepipe::data::split::train_split;
+use edgepipe::data::synth::{synth_calhousing, SynthSpec};
+use edgepipe::model::RidgeModel;
+
+fn main() {
+    let mut bench = Bench::new();
+    let fast = std::env::var("EDGEPIPE_BENCH_FAST").is_ok();
+    bench.run_once("erasure channel: loss and best n_c vs p_loss", || {
+        let raw = synth_calhousing(&SynthSpec::default());
+        let (train, _) = train_split(&raw, 0.9, 42);
+        let t = 1.5 * train.n as f64;
+        let n_o = 100.0;
+        let seeds = if fast { 2 } else { 5 };
+        let grid: Vec<usize> = vec![200, 600, 1378, 4000, 10000];
+        println!(
+            "{:>7} | {:>8} {:>12} | per-n_c mean loss",
+            "p_loss", "best n_c", "best loss"
+        );
+        for p_loss in [0.0, 0.1, 0.3, 0.5] {
+            let mut rows = Vec::new();
+            for &n_c in &grid {
+                let mut total = 0.0;
+                for s in 0..seeds {
+                    let cfg = DesConfig {
+                        record_blocks: false,
+                        ..DesConfig::paper(n_c, n_o, t, 7 + s as u64)
+                    };
+                    let mut ch = ErasureChannel::new(p_loss);
+                    let mut exec = NativeExecutor::new(
+                        RidgeModel::new(train.d, cfg.lambda, train.n),
+                        cfg.alpha,
+                    );
+                    total += run_des(&train, &cfg, &mut ch, &mut exec)
+                        .unwrap()
+                        .final_loss;
+                }
+                rows.push((n_c, total / seeds as f64));
+            }
+            let best = rows
+                .iter()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            let detail: Vec<String> = rows
+                .iter()
+                .map(|(nc, l)| format!("{nc}:{l:.4}"))
+                .collect();
+            println!(
+                "{:>7} | {:>8} {:>12.6} | {}",
+                p_loss,
+                best.0,
+                best.1,
+                detail.join("  ")
+            );
+        }
+    });
+}

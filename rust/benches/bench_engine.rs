@@ -1,0 +1,70 @@
+//! Perf-1 micro-benchmarks: the native hot path — single-sample SGD
+//! update throughput, device block sampling, and full-dataset loss
+//! evaluation. These are the numbers the §Perf optimization pass tracks.
+//!
+//! Run: `cargo bench --bench bench_engine`
+
+use edgepipe::bench::Bench;
+use edgepipe::coordinator::DeviceTransmitter;
+use edgepipe::data::split::train_split;
+use edgepipe::data::synth::{synth_calhousing, SynthSpec};
+use edgepipe::model::RidgeModel;
+use edgepipe::sgd::{SgdEngine, StoreView};
+use edgepipe::util::rng::Pcg32;
+
+fn main() {
+    let mut bench = Bench::new();
+    let raw = synth_calhousing(&SynthSpec::default());
+    let (train, _) = train_split(&raw, 0.9, 42);
+    let store = StoreView::new(&train.x, &train.y, train.d);
+    let model = RidgeModel::new(train.d, 0.05, train.n);
+    let engine = SgdEngine::new(1e-4);
+
+    // ---- SGD update throughput (the innermost loop of everything)
+    const UPDATES: usize = 2_000_000;
+    bench.run("native sgd updates (d=8, f64)", UPDATES as f64, || {
+        let mut w = vec![0.1f64; train.d];
+        let mut rng = Pcg32::seeded(1);
+        engine.run_updates(&model, &mut w, store, UPDATES, &mut rng);
+        std::hint::black_box(&w);
+    });
+
+    // ---- replayed-index variant (what the coordinator actually calls)
+    let mut rng = Pcg32::seeded(2);
+    let indices: Vec<u32> = (0..UPDATES)
+        .map(|_| rng.gen_range(train.n as u64) as u32)
+        .collect();
+    bench.run("native sgd replay (pre-sampled idx)", UPDATES as f64, || {
+        let mut w = vec![0.1f64; train.d];
+        engine.run_indices(&model, &mut w, store, &indices);
+        std::hint::black_box(&w);
+    });
+
+    // ---- full-dataset loss evaluation
+    bench.run("full-dataset ridge loss (N=18576)", train.n as f64, || {
+        let w = vec![0.1f64; train.d];
+        std::hint::black_box(
+            train.ridge_loss(&w, 0.05 / train.n as f64),
+        );
+    });
+
+    // ---- device-side block sampling + gather
+    bench.run("device sampling (full pass, n_c=437)", train.n as f64, || {
+        let mut dev = DeviceTransmitter::new(&train, 437, 3);
+        let mut total = 0usize;
+        while let Some((_, _, y)) = dev.next_block() {
+            total += y.len();
+        }
+        assert_eq!(total, train.n);
+    });
+
+    // ---- RNG
+    bench.run("pcg32 next_u64 x10M", 10_000_000.0, || {
+        let mut rng = Pcg32::seeded(9);
+        let mut acc = 0u64;
+        for _ in 0..10_000_000 {
+            acc = acc.wrapping_add(rng.next_u64());
+        }
+        std::hint::black_box(acc);
+    });
+}

@@ -1,0 +1,84 @@
+//! Bench: regenerate paper Fig. 3 (Corollary-1 bound vs n_c per
+//! overhead) and time the bound evaluation / optimizer primitives.
+//!
+//! Run: `cargo bench --bench bench_fig3`
+
+use edgepipe::bench::Bench;
+use edgepipe::bound::corollary1::{corollary1_bound, BoundParams};
+use edgepipe::bound::estimate_constants;
+use edgepipe::bound::optimizer::optimize_block_size;
+use edgepipe::data::split::train_split;
+use edgepipe::data::synth::{synth_calhousing, SynthSpec};
+use edgepipe::sweep::fig3::fig3_data;
+
+fn main() {
+    let mut bench = Bench::new();
+
+    // ------- the figure itself (macro) -------
+    bench.run_once("fig3: bound curves + markers (paper setup)", || {
+        let raw = synth_calhousing(&SynthSpec::default());
+        let (train, _) = train_split(&raw, 0.9, 42);
+        let t = 1.5 * train.n as f64;
+        let k = estimate_constants(&train, 0.05, 1e-4, 2000, 42);
+        let params = BoundParams {
+            alpha: 1e-4,
+            big_l: k.big_l,
+            c: k.c,
+            m: 1.0,
+            m_g: 1.0,
+            d_diam: k.d_diam,
+        };
+        let out = fig3_data(
+            &params,
+            train.n,
+            t,
+            1.0,
+            &[1.0, 10.0, 100.0, 1000.0],
+            160,
+        );
+        print!("{}", out.render());
+    });
+
+    // ------- robustness of ñ_c to constant-estimation error -------
+    bench.run_once("fig3 sensitivity: regret under 2x constant errors", || {
+        use edgepipe::bound::sensitivity::{max_regret, sensitivity_sweep};
+        let truth = BoundParams::paper_fig3(6.4);
+        let rows = sensitivity_sweep(
+            &truth,
+            18576,
+            1.5 * 18576.0,
+            100.0,
+            1.0,
+            &[0.5, 0.8, 1.25, 2.0],
+        );
+        println!(
+            "{:>6} {:>7} | {:>7} | {:>10}",
+            "const", "factor", "ñ_c", "regret"
+        );
+        for r in &rows {
+            println!(
+                "{:>6} {:>7} | {:>7} | {:>9.3}%",
+                r.constant,
+                r.factor,
+                r.n_c,
+                100.0 * r.regret
+            );
+        }
+        println!("max regret: {:.3}%", 100.0 * max_regret(&rows));
+    });
+
+    // ------- primitives (micro) -------
+    let params = BoundParams::paper_fig3(6.4);
+    let (n, t) = (18576usize, 1.5 * 18576.0);
+    bench.run("corollary1_bound eval x10k", 10_000.0, || {
+        let mut acc = 0.0;
+        for i in 0..10_000 {
+            let nc = 1.0 + (i % 18575) as f64;
+            acc += corollary1_bound(&params, n, t, nc, 100.0, 1.0, false);
+        }
+        std::hint::black_box(acc);
+    });
+    bench.run("optimize_block_size full scan (N=18576)", n as f64, || {
+        std::hint::black_box(optimize_block_size(&params, n, t, 100.0, 1.0));
+    });
+}

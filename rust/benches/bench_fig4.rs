@@ -1,0 +1,44 @@
+//! Bench: regenerate paper Fig. 4 (average training-loss curves; the
+//! bound optimum ñ_c vs the experimental optimum n_c*, incl. the ≈3.8 %
+//! penalty headline).
+//!
+//! Full paper scale by default; `EDGEPIPE_BENCH_FAST=1` shrinks the MC
+//! sweep for CI. Run: `cargo bench --bench bench_fig4`
+
+use edgepipe::bench::Bench;
+use edgepipe::bound::corollary1::BoundParams;
+use edgepipe::bound::estimate_constants;
+use edgepipe::data::split::train_split;
+use edgepipe::data::synth::{synth_calhousing, SynthSpec};
+use edgepipe::sweep::fig4::{fig4_data, Fig4Config};
+
+fn main() {
+    let mut bench = Bench::new();
+    let fast = std::env::var("EDGEPIPE_BENCH_FAST").is_ok();
+
+    bench.run_once("fig4: loss curves + nc* search (paper setup)", || {
+        let raw = synth_calhousing(&SynthSpec::default());
+        let (train, _) = train_split(&raw, 0.9, 42);
+        let t = 1.5 * train.n as f64;
+        let k = estimate_constants(&train, 0.05, 1e-4, 2000, 42);
+        let params = BoundParams {
+            alpha: 1e-4,
+            big_l: k.big_l,
+            c: k.c,
+            m: 1.0,
+            m_g: 1.0,
+            d_diam: k.d_diam,
+        };
+        let cfg = Fig4Config {
+            seeds: if fast { 3 } else { 10 },
+            search_points: if fast { 8 } else { 24 },
+            ..Fig4Config::paper(100.0, t)
+        };
+        let out = fig4_data(&train, &params, &cfg);
+        print!("{}", out.render());
+        println!("search grid:");
+        for (nc, s) in &out.search {
+            println!("  n_c={:>6}  final {:.6} ± {:.6}", nc, s.mean, s.std);
+        }
+    });
+}

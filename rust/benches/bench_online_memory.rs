@@ -1,0 +1,42 @@
+//! Bench Abl-4 (paper Sec. 6 future work): limited edge memory with
+//! reservoir eviction. Final loss vs store capacity — how small can the
+//! edge store be before the protocol degrades?
+//!
+//! Run: `cargo bench --bench bench_online_memory`
+
+use edgepipe::bench::Bench;
+use edgepipe::coordinator::des::DesConfig;
+use edgepipe::data::split::train_split;
+use edgepipe::data::synth::{synth_calhousing, SynthSpec};
+use edgepipe::extensions::online::capacity_sweep;
+
+fn main() {
+    let mut bench = Bench::new();
+    let fast = std::env::var("EDGEPIPE_BENCH_FAST").is_ok();
+    bench.run_once("online memory: loss vs edge store capacity", || {
+        let raw = synth_calhousing(&SynthSpec::default());
+        let (train, _) = train_split(&raw, 0.9, 42);
+        let t = 1.5 * train.n as f64;
+        let cfg = DesConfig {
+            record_blocks: false,
+            ..DesConfig::paper(1378, 100.0, t, 7)
+        };
+        let caps = vec![64, 256, 1024, 4096, train.n];
+        let seeds = if fast { 2 } else { 6 };
+        let rows = capacity_sweep(&train, &cfg, &caps, seeds);
+        println!("{:>9} | {:>12}", "capacity", "mean loss");
+        for (cap, loss) in &rows {
+            println!("{:>9} | {:>12.6}", cap, loss);
+        }
+        let full = rows.last().unwrap().1;
+        for (cap, loss) in &rows {
+            if (loss - full) / full < 0.05 {
+                println!(
+                    "capacity {} already within 5% of unbounded memory",
+                    cap
+                );
+                break;
+            }
+        }
+    });
+}

@@ -1,0 +1,73 @@
+//! Perf-1: coordinator overhead — full protocol runs through the DES
+//! fast path vs the real threaded pipeline, at paper scale. The pipeline
+//! should cost only the channel-hop overhead on top of the DES (<2× at
+//! paper granularity), and both produce identical trajectories.
+//!
+//! Run: `cargo bench --bench bench_pipeline`
+
+use edgepipe::bench::Bench;
+use edgepipe::channel::IdealChannel;
+use edgepipe::coordinator::des::{run_des, DesConfig};
+use edgepipe::coordinator::executor::NativeExecutor;
+use edgepipe::coordinator::pipeline::run_pipelined;
+use edgepipe::data::split::train_split;
+use edgepipe::data::synth::{synth_calhousing, SynthSpec};
+use edgepipe::model::RidgeModel;
+
+fn main() {
+    let mut bench = Bench::new();
+    let raw = synth_calhousing(&SynthSpec::default());
+    let (train, _) = train_split(&raw, 0.9, 42);
+    let t = 1.5 * train.n as f64;
+
+    for n_c in [100usize, 1378, 10000] {
+        let cfg = DesConfig {
+            record_blocks: false,
+            ..DesConfig::paper(n_c, 100.0, t, 7)
+        };
+        let updates = {
+            let mut exec = NativeExecutor::new(
+                RidgeModel::new(train.d, cfg.lambda, train.n),
+                cfg.alpha,
+            );
+            run_des(&train, &cfg, &mut IdealChannel, &mut exec)
+                .unwrap()
+                .updates
+        };
+        bench.run(
+            &format!("DES full run (n_c={n_c}, {updates} updates)"),
+            updates as f64,
+            || {
+                let mut exec = NativeExecutor::new(
+                    RidgeModel::new(train.d, cfg.lambda, train.n),
+                    cfg.alpha,
+                );
+                std::hint::black_box(
+                    run_des(&train, &cfg, &mut IdealChannel, &mut exec)
+                        .unwrap()
+                        .final_loss,
+                );
+            },
+        );
+        bench.run(
+            &format!("threaded pipeline (n_c={n_c}, {updates} updates)"),
+            updates as f64,
+            || {
+                let mut exec = NativeExecutor::new(
+                    RidgeModel::new(train.d, cfg.lambda, train.n),
+                    cfg.alpha,
+                );
+                std::hint::black_box(
+                    run_pipelined(
+                        &train,
+                        &cfg,
+                        &mut IdealChannel,
+                        &mut exec,
+                    )
+                    .unwrap()
+                    .final_loss,
+                );
+            },
+        );
+    }
+}

@@ -1,0 +1,81 @@
+//! Perf-1: PJRT artifact-call latencies — the `sgd_block` step (the hot
+//! path of the PJRT backend), the masked full-dataset loss, and the MLP
+//! step. Skips cleanly when artifacts are not built.
+//!
+//! Run: `cargo bench --bench bench_runtime`
+
+use edgepipe::bench::Bench;
+use edgepipe::coordinator::BlockExecutor;
+use edgepipe::data::split::train_split;
+use edgepipe::data::synth::{synth_calhousing, SynthSpec};
+use edgepipe::runtime::mlp::{MlpParams, PjrtMlp};
+use edgepipe::runtime::{
+    find_artifact_dir, PjrtExecutor, PjrtLossEvaluator, RuntimeSession,
+};
+use edgepipe::sgd::StoreView;
+use edgepipe::util::rng::Pcg32;
+
+fn main() {
+    let Some(dir) = find_artifact_dir() else {
+        println!("artifacts not built — skipping runtime benches");
+        return;
+    };
+    let mut bench = Bench::new();
+    let raw = synth_calhousing(&SynthSpec::default());
+    let (train, _) = train_split(&raw, 0.9, 42);
+    let store = StoreView::new(&train.x, &train.y, train.d);
+
+    // ---- sgd_block step latency (full K_MAX=512 chunk)
+    {
+        let session = RuntimeSession::open(&dir).unwrap();
+        let mut exec =
+            PjrtExecutor::new(session, 1e-4, 0.05, train.n).unwrap();
+        let mut rng = Pcg32::seeded(1);
+        let indices: Vec<u32> = (0..512)
+            .map(|_| rng.gen_range(train.n as u64) as u32)
+            .collect();
+        let mut w = vec![0.1f64; train.d];
+        bench.run("pjrt sgd_block call (512 updates)", 512.0, || {
+            exec.run_block(&mut w, store, &indices).unwrap();
+        });
+        // per-update amortized cost at protocol granularity
+        let indices_small: Vec<u32> = indices[..64].to_vec();
+        bench.run("pjrt sgd_block call (64 updates)", 64.0, || {
+            exec.run_block(&mut w, store, &indices_small).unwrap();
+        });
+    }
+
+    // ---- masked full-dataset loss
+    {
+        let session = RuntimeSession::open(&dir).unwrap();
+        let mut eval = PjrtLossEvaluator::new(session, 0.05, train.n).unwrap();
+        eval.append_rows(&train.x, &train.y).unwrap();
+        let w = vec![0.1f64; train.d];
+        bench.run("pjrt dataset_loss (N_CAP=21504)", train.n as f64, || {
+            std::hint::black_box(eval.loss(&w).unwrap());
+        });
+    }
+
+    // ---- MLP step (the MXU showcase path)
+    {
+        let session = RuntimeSession::open(&dir).unwrap();
+        let mut mlp = PjrtMlp::new(session).unwrap();
+        let mut rng = Pcg32::seeded(2);
+        let mut params = MlpParams::init(mlp.d_in, mlp.hidden, &mut rng);
+        let x: Vec<f32> = (0..mlp.batch * mlp.d_in)
+            .map(|_| rng.next_gaussian() as f32)
+            .collect();
+        let y: Vec<f32> =
+            (0..mlp.batch).map(|_| rng.next_gaussian() as f32).collect();
+        let flops = 2.0 * mlp.batch as f64
+            * (mlp.d_in * mlp.hidden
+                + mlp.hidden * mlp.hidden
+                + mlp.hidden) as f64
+            * 3.0; // fwd + 2 bwd matmul passes, rough
+        bench.run("pjrt mlp_step (batch 256, 68k params)", flops, || {
+            std::hint::black_box(
+                mlp.step(&mut params, &x, &y, 0.01).unwrap(),
+            );
+        });
+    }
+}

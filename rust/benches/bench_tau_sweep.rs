@@ -1,0 +1,65 @@
+//! Bench Abl-2: sensitivity to the compute rate τ_p — how the
+//! bound-optimal block size ñ_c and the achieved loss move as the edge
+//! processor gets slower relative to the channel.
+//!
+//! Run: `cargo bench --bench bench_tau_sweep`
+
+use edgepipe::bench::Bench;
+use edgepipe::bound::corollary1::BoundParams;
+use edgepipe::bound::estimate_constants;
+use edgepipe::bound::optimizer::optimize_block_size;
+use edgepipe::channel::IdealChannel;
+use edgepipe::coordinator::des::{run_des, DesConfig};
+use edgepipe::coordinator::executor::NativeExecutor;
+use edgepipe::data::split::train_split;
+use edgepipe::data::synth::{synth_calhousing, SynthSpec};
+use edgepipe::model::RidgeModel;
+
+fn main() {
+    let mut bench = Bench::new();
+    bench.run_once("tau_p sweep: ñ_c and loss vs compute rate", || {
+        let raw = synth_calhousing(&SynthSpec::default());
+        let (train, _) = train_split(&raw, 0.9, 42);
+        let t = 1.5 * train.n as f64;
+        let n_o = 100.0;
+        let k = estimate_constants(&train, 0.05, 1e-4, 2000, 42);
+        let params = BoundParams {
+            alpha: 1e-4,
+            big_l: k.big_l,
+            c: k.c,
+            m: 1.0,
+            m_g: 1.0,
+            d_diam: k.d_diam,
+        };
+        println!(
+            "{:>6} | {:>7} {:>9} | {:>12} {:>10}",
+            "tau_p", "ñ_c", "case", "final loss", "updates"
+        );
+        for tau_p in [0.25, 0.5, 1.0, 2.0, 4.0] {
+            let opt = optimize_block_size(&params, train.n, t, n_o, tau_p);
+            let cfg = DesConfig {
+                tau_p,
+                record_blocks: false,
+                ..DesConfig::paper(opt.n_c, n_o, t, 7)
+            };
+            let mut exec = NativeExecutor::new(
+                RidgeModel::new(train.d, cfg.lambda, train.n),
+                cfg.alpha,
+            );
+            let run = run_des(&train, &cfg, &mut IdealChannel, &mut exec)
+                .unwrap();
+            println!(
+                "{:>6} | {:>7} {:>9} | {:>12.6} {:>10}",
+                tau_p,
+                opt.n_c,
+                format!("{:?}", opt.case),
+                run.final_loss,
+                run.updates
+            );
+        }
+        println!(
+            "(slower processor -> fewer updates fit -> the bias/variance \
+             balance and ñ_c shift)"
+        );
+    });
+}

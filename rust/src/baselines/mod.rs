@@ -1,0 +1,185 @@
+//! Baseline transmission/training policies the pipelined protocol is
+//! compared against (Abl-1 in DESIGN.md):
+//!
+//! * [`transmit_all_first`] — `n_c = N`: ship the whole dataset in one
+//!   block, then train on everything in the remaining time (the paper's
+//!   "communicating the entire data set first reduces the bias ... but it
+//!   may not leave sufficient time for learning").
+//! * [`sequential`] — NO pipelining: the edge node idles during every
+//!   transmission and only trains between blocks ... which for an
+//!   always-busy channel means it only trains after the last delivered
+//!   block. Isolates the gain from overlapping comm and compute.
+
+use anyhow::Result;
+
+use crate::channel::Channel;
+use crate::coordinator::des::{DesConfig, DeviceTransmitter, EdgeTrainer};
+use crate::coordinator::events::EventLog;
+use crate::coordinator::executor::BlockExecutor;
+use crate::coordinator::run::RunResult;
+use crate::data::Dataset;
+use crate::protocol::TimelineCase;
+use crate::util::rng::Pcg32;
+
+/// "Transmit everything first": a single block of all N samples.
+pub fn transmit_all_first(
+    ds: &Dataset,
+    cfg: &DesConfig,
+    channel: &mut dyn Channel,
+    exec: &mut dyn BlockExecutor,
+) -> Result<RunResult> {
+    let cfg = DesConfig { n_c: ds.n, ..cfg.clone() };
+    crate::coordinator::des::run_des(ds, &cfg, channel, exec)
+}
+
+/// Sequential (non-pipelined) policy: blocks of `n_c` are transmitted,
+/// but the edge node performs NO updates while the channel is busy; all
+/// computation happens after the final delivery (or never, if
+/// transmission fills the whole budget).
+pub fn sequential(
+    ds: &Dataset,
+    cfg: &DesConfig,
+    channel: &mut dyn Channel,
+    exec: &mut dyn BlockExecutor,
+) -> Result<RunResult> {
+    let mut events = EventLog::with_capacity(cfg.event_capacity);
+    let mut trainer = EdgeTrainer::new(ds, cfg);
+    let mut device = DeviceTransmitter::new(ds, cfg.n_c, cfg.seed);
+    let mut chan_rng =
+        Pcg32::new(cfg.seed, crate::coordinator::des::STREAM_CHANNEL);
+
+    let mut t_send = 0.0f64;
+    let mut blocks_sent = 0usize;
+    let mut blocks_delivered = 0usize;
+    let mut samples_delivered = 0usize;
+    let mut retransmissions = 0u64;
+    let mut block = 1usize;
+
+    // Phase 1: transmission, edge idle (skip_to keeps the clock honest).
+    while t_send < cfg.t_budget && !device.exhausted() {
+        let (_, x, y) = device.next_block().expect("device non-exhausted");
+        let payload = y.len();
+        let duration = payload as f64 + cfg.n_o;
+        blocks_sent += 1;
+        let delivery = channel.transmit(t_send, duration, &mut chan_rng);
+        retransmissions += (delivery.attempts - 1) as u64;
+        if delivery.arrival < cfg.t_budget {
+            trainer.skip_to(delivery.arrival);
+            trainer.ingest_block(block, delivery.arrival, &x, &y);
+            blocks_delivered += 1;
+            samples_delivered += payload;
+        } else {
+            trainer.skip_to(cfg.t_budget);
+        }
+        t_send = delivery.arrival;
+        block += 1;
+    }
+    // Phase 2: all remaining time is compute.
+    trainer.advance_to(cfg.t_budget, exec, &mut events)?;
+    trainer.finish(exec)?;
+
+    let case = if samples_delivered >= ds.n {
+        TimelineCase::Full
+    } else {
+        TimelineCase::Partial
+    };
+    let final_loss = trainer.full_loss();
+    Ok(RunResult {
+        curve: trainer.curve,
+        final_loss,
+        final_w: trainer.w,
+        updates: trainer.updates,
+        blocks_sent,
+        blocks_delivered,
+        samples_delivered,
+        retransmissions,
+        case,
+        snapshots: trainer.snapshots,
+        events: events.into_events(),
+        backend: exec.name(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::IdealChannel;
+    use crate::coordinator::des::run_des;
+    use crate::coordinator::executor::NativeExecutor;
+    use crate::data::synth::{synth_calhousing, SynthSpec};
+    use crate::model::RidgeModel;
+
+    fn setup() -> (Dataset, DesConfig) {
+        let ds =
+            synth_calhousing(&SynthSpec { n: 800, ..Default::default() });
+        let cfg = DesConfig {
+            alpha: 1e-3,
+            ..DesConfig::paper(80, 20.0, 1200.0, 5)
+        };
+        (ds, cfg)
+    }
+
+    fn exec(ds: &Dataset, cfg: &DesConfig) -> NativeExecutor {
+        NativeExecutor::new(RidgeModel::new(ds.d, cfg.lambda, ds.n), cfg.alpha)
+    }
+
+    #[test]
+    fn pipelined_beats_sequential() {
+        let (ds, cfg) = setup();
+        let pipe = run_des(
+            &ds,
+            &cfg,
+            &mut IdealChannel,
+            &mut exec(&ds, &cfg),
+        )
+        .unwrap();
+        let seq =
+            sequential(&ds, &cfg, &mut IdealChannel, &mut exec(&ds, &cfg))
+                .unwrap();
+        // same delivery schedule...
+        assert_eq!(pipe.samples_delivered, seq.samples_delivered);
+        // ...but strictly more updates and a better loss when pipelined
+        assert!(pipe.updates > seq.updates, "{} vs {}", pipe.updates, seq.updates);
+        assert!(
+            pipe.final_loss < seq.final_loss,
+            "{} vs {}",
+            pipe.final_loss,
+            seq.final_loss
+        );
+    }
+
+    #[test]
+    fn transmit_all_first_matches_nc_equals_n() {
+        let (ds, cfg) = setup();
+        let a = transmit_all_first(
+            &ds,
+            &cfg,
+            &mut IdealChannel,
+            &mut exec(&ds, &cfg),
+        )
+        .unwrap();
+        let direct_cfg = DesConfig { n_c: ds.n, ..cfg.clone() };
+        let b = run_des(
+            &ds,
+            &direct_cfg,
+            &mut IdealChannel,
+            &mut exec(&ds, &direct_cfg),
+        )
+        .unwrap();
+        assert_eq!(a.final_w, b.final_w);
+        assert_eq!(a.blocks_sent, 1);
+    }
+
+    #[test]
+    fn sequential_updates_only_after_delivery() {
+        let (ds, cfg) = setup();
+        let seq =
+            sequential(&ds, &cfg, &mut IdealChannel, &mut exec(&ds, &cfg))
+                .unwrap();
+        // delivery ends at B_d * (n_c + n_o); compute-only tail remains
+        let b_d = ds.n.div_ceil(cfg.n_c);
+        let tail =
+            cfg.t_budget - b_d as f64 * (cfg.n_c as f64 + cfg.n_o);
+        assert_eq!(seq.updates, (tail / cfg.tau_p).floor() as usize);
+    }
+}

@@ -1,0 +1,177 @@
+//! In-repo micro/macro benchmark harness (the offline image has no
+//! criterion). Used by every target in `benches/` via
+//! `[[bench]] harness = false`.
+//!
+//! Features: warmup, timed iterations with per-iteration samples,
+//! mean/p50/p99, throughput reporting, `--filter substring` selection and
+//! `EDGEPIPE_BENCH_FAST=1` for CI-speed runs.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+use crate::util::timefmt::{fmt_duration, fmt_rate};
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Warmup iterations (not recorded).
+    pub warmup: usize,
+    /// Recorded iterations.
+    pub iters: usize,
+    /// Substring filter from `--filter` (empty = run all).
+    pub filter: String,
+}
+
+impl BenchConfig {
+    /// Build from env + argv (`--filter X`, `EDGEPIPE_BENCH_FAST`).
+    pub fn from_env() -> BenchConfig {
+        let fast = std::env::var("EDGEPIPE_BENCH_FAST").is_ok();
+        let mut filter = String::new();
+        let args: Vec<String> = std::env::args().collect();
+        for i in 0..args.len() {
+            if args[i] == "--filter" && i + 1 < args.len() {
+                filter = args[i + 1].clone();
+            }
+        }
+        BenchConfig {
+            warmup: if fast { 1 } else { 3 },
+            iters: if fast { 3 } else { 10 },
+            filter,
+        }
+    }
+}
+
+/// One benchmark's outcome.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    /// Work units per iteration (for throughput; 0 = skip).
+    pub units_per_iter: f64,
+}
+
+impl BenchResult {
+    /// One formatted report line.
+    pub fn report(&self) -> String {
+        let s = &self.summary;
+        let mut line = format!(
+            "{:<44} mean {:>10}  p50 {:>10}  p99 {:>10}",
+            self.name,
+            fmt_duration(Duration::from_secs_f64(s.mean)),
+            fmt_duration(Duration::from_secs_f64(s.p50)),
+            fmt_duration(Duration::from_secs_f64(s.p99)),
+        );
+        if self.units_per_iter > 0.0 && s.mean > 0.0 {
+            line.push_str(&format!(
+                "  [{}]",
+                fmt_rate(self.units_per_iter / s.mean)
+            ));
+        }
+        line
+    }
+}
+
+/// The harness: collects results, prints a report.
+pub struct Bench {
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new() -> Bench {
+        let cfg = BenchConfig::from_env();
+        Bench { cfg, results: Vec::new() }
+    }
+
+    /// Should this benchmark run under the current filter?
+    pub fn enabled(&self, name: &str) -> bool {
+        self.cfg.filter.is_empty() || name.contains(&self.cfg.filter)
+    }
+
+    /// Time `f` (warmup + recorded iterations). `units_per_iter` drives
+    /// the throughput column (e.g. SGD updates per iteration).
+    pub fn run<F: FnMut()>(
+        &mut self,
+        name: &str,
+        units_per_iter: f64,
+        mut f: F,
+    ) {
+        if !self.enabled(name) {
+            return;
+        }
+        for _ in 0..self.cfg.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.cfg.iters);
+        for _ in 0..self.cfg.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            summary: Summary::of(&samples),
+            units_per_iter,
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+    }
+
+    /// Run once (macro-benchmarks that print their own tables).
+    pub fn run_once<F: FnOnce()>(&mut self, name: &str, f: F) {
+        if !self.enabled(name) {
+            return;
+        }
+        println!("=== {name} ===");
+        let t0 = Instant::now();
+        f();
+        println!("=== {name} done in {} ===", fmt_duration(t0.elapsed()));
+    }
+
+    /// All recorded results.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_records_samples() {
+        let mut b = Bench {
+            cfg: BenchConfig { warmup: 1, iters: 4, filter: String::new() },
+            results: Vec::new(),
+        };
+        let mut count = 0;
+        b.run("noop", 100.0, || count += 1);
+        assert_eq!(count, 5); // 1 warmup + 4 recorded
+        assert_eq!(b.results().len(), 1);
+        assert_eq!(b.results()[0].summary.n, 4);
+        assert!(b.results()[0].report().contains("noop"));
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut b = Bench {
+            cfg: BenchConfig {
+                warmup: 0,
+                iters: 1,
+                filter: "match".into(),
+            },
+            results: Vec::new(),
+        };
+        let mut ran = false;
+        b.run("no", 0.0, || ran = true);
+        assert!(!ran);
+        b.run("does match", 0.0, || ran = true);
+        assert!(ran);
+    }
+}

@@ -1,0 +1,287 @@
+//! Corollary 1: the numerically evaluable upper bound on the expected
+//! optimality gap `E[L(w_T) − L(w*)]` at the deadline.
+//!
+//! With `γ = α(1 − αLM_G/2)`, `A = α²LM/(2γc)`, `q = 1 − γc`,
+//! `B = T/(n_c+n_o)`, `B_d = N/n_c`, `n_p = (n_c+n_o)/τ_p`:
+//!
+//! case (a), `T ≤ B_d(n_c+n_o)` (eq. 14):
+//! ```text
+//!   G = A·(B−1)/B_d + (1 − (B−1)/B_d)·LD²/2
+//!       + (1/B_d) Σ_{l=1}^{⌊B⌋−1} q^{l·n_p} (LD²/2 − A)
+//! ```
+//! case (b), `T > B_d(n_c+n_o)` (eq. 15):
+//! ```text
+//!   G = A + (1/B_d)·q^{n_l} Σ_{l=0}^{⌈B_d⌉−1} q^{l·n_p} (LD²/2 − A)
+//! ```
+//!
+//! The paper evaluates the bound with REAL-valued `B`, `B_d`, `n_p`
+//! (Fig. 3's curves are smooth in `n_c`); we follow that convention,
+//! flooring only the summation term counts. Geometric sums use the closed
+//! form with an `r → 1` guard; `naive = true` switches to the explicit
+//! sum (used by tests to validate the closed form).
+
+/// SGD/loss constants entering the bound.
+#[derive(Clone, Copy, Debug)]
+pub struct BoundParams {
+    /// Learning rate α (paper Fig. 3: 1e-4). Must satisfy α ≤ 2/(L·M_G).
+    pub alpha: f64,
+    /// Smoothness constant L (paper: 1.908).
+    pub big_l: f64,
+    /// Polyak–Łojasiewicz constant c (paper: 0.061).
+    pub c: f64,
+    /// Additive gradient-variance constant M (paper: 1).
+    pub m: f64,
+    /// M_G = M_V + 1 multiplicative variance constant (paper: M_G = 1).
+    pub m_g: f64,
+    /// Diameter D of the iterate region W (assumption A1).
+    pub d_diam: f64,
+}
+
+impl BoundParams {
+    /// Paper Fig. 3 constants (D calibrated in EXPERIMENTS.md).
+    pub fn paper_fig3(d_diam: f64) -> BoundParams {
+        BoundParams {
+            alpha: 1e-4,
+            big_l: 1.908,
+            c: 0.061,
+            m: 1.0,
+            m_g: 1.0,
+            d_diam,
+        }
+    }
+
+    /// γ = α(1 − ½αLM_G). Positive whenever α < 2/(L·M_G).
+    pub fn gamma(&self) -> f64 {
+        self.alpha * (1.0 - 0.5 * self.alpha * self.big_l * self.m_g)
+    }
+
+    /// The asymptotic bias floor A = α²LM/(2γc) (first term of eq. 15).
+    pub fn bias_floor(&self) -> f64 {
+        self.alpha * self.alpha * self.big_l * self.m
+            / (2.0 * self.gamma() * self.c)
+    }
+
+    /// The per-update contraction factor q = 1 − γc.
+    pub fn contraction(&self) -> f64 {
+        1.0 - self.gamma() * self.c
+    }
+
+    /// LD²/2 — the A2+A1 initial-error cap used by Corollary 1.
+    pub fn initial_error_cap(&self) -> f64 {
+        0.5 * self.big_l * self.d_diam * self.d_diam
+    }
+
+    /// Check the stepsize condition (10): 0 < α ≤ 2/(L·M_G).
+    pub fn stepsize_ok(&self) -> bool {
+        self.alpha > 0.0 && self.alpha <= 2.0 / (self.big_l * self.m_g)
+    }
+}
+
+/// Continuous geometric sum: `Σ_{l=start}^{...}` of `r^l` with a REAL
+/// term count `k` — the `⌊k⌋` whole terms plus a `frac(k)`-weighted tail
+/// term. Piecewise-linear interpolation in `k` keeps the bound free of
+/// artificial cliffs when `B` or `B_d` is fractional (the paper treats
+/// both as real-valued when plotting Fig. 3).
+fn geom_sum_real(r: f64, start: u32, k: f64) -> f64 {
+    if k <= 0.0 {
+        return 0.0;
+    }
+    let whole = k.floor();
+    let frac = k - whole;
+    let whole_terms = whole as i32;
+    let head = if (1.0 - r).abs() < 1e-12 {
+        whole
+    } else {
+        r.powi(start as i32) * (1.0 - r.powi(whole_terms)) / (1.0 - r)
+    };
+    head + frac * r.powi(start as i32 + whole_terms)
+}
+
+/// Explicit-loop version of [`geom_sum_real`] (test oracle).
+fn naive_sum_real(r: f64, start: u32, k: f64) -> f64 {
+    if k <= 0.0 {
+        return 0.0;
+    }
+    let whole = k.floor() as u32;
+    let mut acc = 0.0;
+    for l in 0..whole {
+        acc += r.powi((start + l) as i32);
+    }
+    acc + (k - whole as f64) * r.powi((start + whole) as i32)
+}
+
+/// Evaluate the Corollary-1 bound for block size `n_c`.
+///
+/// * `n` — training-set size N
+/// * `t_budget` — deadline T (normalized units)
+/// * `n_c` — block payload (may be fractional when scanning; paper plots
+///   the bound as a continuous function of n_c)
+/// * `n_o` — per-packet overhead
+/// * `tau_p` — time per SGD update
+/// * `naive` — use the explicit geometric sum (for testing)
+pub fn corollary1_bound(
+    p: &BoundParams,
+    n: usize,
+    t_budget: f64,
+    n_c: f64,
+    n_o: f64,
+    tau_p: f64,
+    naive: bool,
+) -> f64 {
+    assert!(p.stepsize_ok(), "stepsize condition (10) violated");
+    assert!(n_c >= 1.0 && n_c <= n as f64, "n_c out of range");
+    let a = p.bias_floor();
+    let cap = p.initial_error_cap();
+    let q = p.contraction();
+
+    let block_len = n_c + n_o;
+    let b_d = n as f64 / n_c; // real-valued, paper convention
+    let n_p = block_len / tau_p;
+    let b = t_budget / block_len;
+    let r = q.powf(n_p); // contraction over one block's updates
+
+    if t_budget <= b_d * block_len {
+        // ---- case (a), eq. (14): the series has B−1 (real) terms
+        let frac = ((b - 1.0) / b_d).clamp(0.0, 1.0);
+        let terms = (b - 1.0).max(0.0);
+        let series = if naive {
+            naive_sum_real(r, 1, terms)
+        } else {
+            geom_sum_real(r, 1, terms)
+        };
+        a * frac + (1.0 - frac) * cap + series * (cap - a) / b_d
+    } else {
+        // ---- case (b), eq. (15): the series has B_d (real) terms
+        let tau_l = t_budget - b_d * block_len;
+        let n_l = tau_l / tau_p;
+        let series = if naive {
+            naive_sum_real(r, 0, b_d)
+        } else {
+            geom_sum_real(r, 0, b_d)
+        };
+        a + q.powf(n_l) * series * (cap - a) / b_d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_params() -> BoundParams {
+        BoundParams::paper_fig3(3.0)
+    }
+
+    /// Paper Fig. 3 setup: N = 18576, T = 1.5 N, τ_p = 1.
+    const N: usize = 18576;
+    const T: f64 = 1.5 * 18576.0;
+
+    #[test]
+    fn gamma_and_floor_formulas() {
+        let p = paper_params();
+        let gamma = 1e-4 * (1.0 - 0.5 * 1e-4 * 1.908);
+        assert!((p.gamma() - gamma).abs() < 1e-18);
+        let a = 1e-8 * 1.908 / (2.0 * gamma * 0.061);
+        assert!((p.bias_floor() - a).abs() < 1e-12);
+        assert!(p.stepsize_ok());
+    }
+
+    #[test]
+    fn closed_form_matches_naive_sum() {
+        let p = paper_params();
+        for &n_o in &[1.0, 10.0, 100.0, 1000.0] {
+            for &n_c in &[1.0, 7.0, 64.0, 500.0, 5000.0, 18576.0] {
+                let fast = corollary1_bound(&p, N, T, n_c, n_o, 1.0, false);
+                let slow = corollary1_bound(&p, N, T, n_c, n_o, 1.0, true);
+                let rel = (fast - slow).abs() / slow.abs().max(1e-30);
+                assert!(
+                    rel < 1e-9,
+                    "n_o={n_o} n_c={n_c}: {fast} vs {slow}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bound_is_positive_and_finite() {
+        let p = paper_params();
+        for nc in [1usize, 10, 100, 1000, 10000, N] {
+            let g = corollary1_bound(&p, N, T, nc as f64, 10.0, 1.0, false);
+            assert!(g.is_finite() && g > 0.0, "n_c={nc}: {g}");
+        }
+    }
+
+    #[test]
+    fn interior_minimum_exists() {
+        // The paper's headline qualitative claim: the bound is minimized
+        // at an interior block size, not at n_c = N (transmit-everything).
+        let p = paper_params();
+        let n_o = 10.0;
+        let at = |nc: f64| corollary1_bound(&p, N, T, nc, n_o, 1.0, false);
+        let best_interior = (1..=N)
+            .step_by(16)
+            .map(|nc| at(nc as f64))
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            best_interior < at(N as f64),
+            "pipelining should beat transmit-everything-first"
+        );
+        assert!(
+            best_interior < at(1.0),
+            "some batching should beat n_c = 1 under overhead"
+        );
+    }
+
+    #[test]
+    fn more_overhead_pushes_optimum_up() {
+        // Paper Sec. 4: larger n_o must be amortized by larger blocks.
+        let p = paper_params();
+        let argmin = |n_o: f64| -> usize {
+            (1..=N)
+                .step_by(4)
+                .min_by(|&a, &b| {
+                    let ga = corollary1_bound(&p, N, T, a as f64, n_o, 1.0, false);
+                    let gb = corollary1_bound(&p, N, T, b as f64, n_o, 1.0, false);
+                    ga.partial_cmp(&gb).unwrap()
+                })
+                .unwrap()
+        };
+        let low = argmin(1.0);
+        let high = argmin(1000.0);
+        assert!(high > low, "ñ_c(n_o=1000)={high} <= ñ_c(n_o=1)={low}");
+    }
+
+    #[test]
+    fn case_boundary_is_continuous() {
+        // The two branches must agree (to first order) at the boundary
+        // T = B_d(n_c + n_o): approach it from both sides.
+        let p = paper_params();
+        let n_o = 10.0;
+        // pick n_c where boundary T equals our T: B_d(n_c+n_o) = T
+        // with B_d = N/n_c -> n_c s.t. N(1 + n_o/n_c) = T
+        let n_c = N as f64 * n_o / (T - N as f64);
+        let below = corollary1_bound(&p, N, T * (1.0 + 1e-9), n_c, n_o, 1.0, false);
+        let above = corollary1_bound(&p, N, T * (1.0 - 1e-9), n_c, n_o, 1.0, false);
+        let rel = (below - above).abs() / above.abs();
+        assert!(rel < 1e-2, "branch mismatch at boundary: {below} vs {above}");
+    }
+
+    #[test]
+    fn much_longer_deadline_helps() {
+        // Exact monotonicity in T does not hold pointwise (the two
+        // branches discretize the series differently near the boundary),
+        // but a well-separated deadline increase must strictly help.
+        let p = paper_params();
+        for nc in [50usize, 500, 5000] {
+            let short = corollary1_bound(&p, N, 0.5 * T, nc as f64, 10.0, 1.0, false);
+            let long = corollary1_bound(&p, N, 10.0 * T, nc as f64, 10.0, 1.0, false);
+            assert!(long < short, "n_c={nc}: {long} >= {short}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn stepsize_violation_panics() {
+        let p = BoundParams { alpha: 10.0, ..paper_params() };
+        corollary1_bound(&p, N, T, 100.0, 10.0, 1.0, false);
+    }
+}

@@ -1,0 +1,13 @@
+//! Theorem 1 / Corollary 1: the convergence bound and the block-size
+//! optimizer built on it (the paper's analytical contribution).
+
+pub mod constants;
+pub mod corollary1;
+pub mod optimizer;
+pub mod sensitivity;
+pub mod theorem1;
+
+pub use constants::{estimate_constants, BoundConstants};
+pub use corollary1::{corollary1_bound, BoundParams};
+pub use optimizer::{optimize_block_size, BoundOptimum};
+pub use sensitivity::{max_regret, sensitivity_sweep, SensitivityRow};

@@ -1,0 +1,119 @@
+//! Block-size optimizer: pick `ñ_c = argmin` of the Corollary-1 bound.
+//!
+//! The bound evaluates in O(1) (closed-form geometric sums), so a full
+//! integer scan over `n_c ∈ [1, N]` is exact and cheap (~20k evals for the
+//! paper's N). The scan also records the full-delivery boundary (the dots
+//! in paper Fig. 3) and whether the optimum sits in case (a) — the paper's
+//! "forego some training points for more training time" regime.
+
+use crate::protocol::{Timeline, TimelineCase};
+
+use super::corollary1::{corollary1_bound, BoundParams};
+
+/// Result of optimizing the block size.
+#[derive(Clone, Debug)]
+pub struct BoundOptimum {
+    /// The bound-minimizing block size ñ_c.
+    pub n_c: usize,
+    /// Bound value at ñ_c.
+    pub value: f64,
+    /// Smallest n_c that still delivers the whole dataset within T
+    /// (None if even n_c = N cannot).
+    pub full_delivery_boundary: Option<usize>,
+    /// Which Fig. 2 case the optimum falls in.
+    pub case: TimelineCase,
+}
+
+/// Exact integer argmin of the Corollary-1 bound over `n_c ∈ [1, N]`.
+pub fn optimize_block_size(
+    p: &BoundParams,
+    n: usize,
+    t_budget: f64,
+    n_o: f64,
+    tau_p: f64,
+) -> BoundOptimum {
+    let mut best_nc = 1usize;
+    let mut best = f64::INFINITY;
+    for nc in 1..=n {
+        let g = corollary1_bound(p, n, t_budget, nc as f64, n_o, tau_p, false);
+        if g < best {
+            best = g;
+            best_nc = nc;
+        }
+    }
+    let tl = Timeline::resolve(n, t_budget, best_nc, n_o, tau_p);
+    BoundOptimum {
+        n_c: best_nc,
+        value: best,
+        full_delivery_boundary: Timeline::full_delivery_boundary(
+            n, t_budget, n_o,
+        ),
+        case: tl.case,
+    }
+}
+
+/// Scan the bound over a set of block sizes (Fig. 3 curve producer).
+pub fn scan_bound(
+    p: &BoundParams,
+    n: usize,
+    t_budget: f64,
+    n_o: f64,
+    tau_p: f64,
+    n_cs: &[usize],
+) -> Vec<(usize, f64)> {
+    n_cs.iter()
+        .map(|&nc| {
+            (nc, corollary1_bound(p, n, t_budget, nc as f64, n_o, tau_p, false))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const N: usize = 18576;
+    const T: f64 = 1.5 * 18576.0;
+
+    #[test]
+    fn optimum_beats_grid() {
+        let p = BoundParams::paper_fig3(3.0);
+        let opt = optimize_block_size(&p, N, T, 10.0, 1.0);
+        for nc in (1..=N).step_by(97) {
+            let g = corollary1_bound(&p, N, T, nc as f64, 10.0, 1.0, false);
+            assert!(opt.value <= g + 1e-15, "beaten at n_c={nc}");
+        }
+    }
+
+    #[test]
+    fn optimum_is_interior() {
+        let p = BoundParams::paper_fig3(3.0);
+        let opt = optimize_block_size(&p, N, T, 10.0, 1.0);
+        assert!(opt.n_c > 1 && opt.n_c < N, "ñ_c = {}", opt.n_c);
+    }
+
+    #[test]
+    fn paper_small_overhead_lands_in_case_b() {
+        // Paper Sec. 4 (Fig. 3 discussion): for small n_o the minimizer
+        // delivers the full dataset (case b); for large n_o it does not.
+        let p = BoundParams::paper_fig3(3.0);
+        let small = optimize_block_size(&p, N, T, 1.0, 1.0);
+        assert_eq!(small.case, TimelineCase::Full, "n_o=1 -> case (b)");
+        // with our calibrated constants the crossover sits near n_o ≈ 2e3
+        let large = optimize_block_size(&p, N, T, 3000.0, 1.0);
+        assert_eq!(large.case, TimelineCase::Partial, "n_o=3000 -> case (a)");
+    }
+
+    #[test]
+    fn scan_matches_pointwise_eval() {
+        let p = BoundParams::paper_fig3(3.0);
+        let n_cs: Vec<usize> = vec![1, 10, 100, 1000];
+        let rows = scan_bound(&p, N, T, 5.0, 1.0, &n_cs);
+        assert_eq!(rows.len(), 4);
+        for (nc, v) in rows {
+            let direct =
+                corollary1_bound(&p, N, T, nc as f64, 5.0, 1.0, false);
+            assert_eq!(v, direct);
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! Sensitivity of the bound-optimal block size `ñ_c` to the constants.
+//!
+//! Practitioners must *estimate* `(L, c, D)` before they can evaluate
+//! Corollary 1 (`estimate_constants` does it from the Gramian + a pilot
+//! run). This module quantifies how much an estimation error moves the
+//! recommendation: we perturb each constant by a multiplicative factor,
+//! re-optimize, and report both the shifted `ñ_c` and — more importantly
+//! — the *regret*: how much worse the perturbed recommendation scores
+//! under the TRUE constants. Small regret ⇒ the paper's method is robust
+//! to sloppy constant estimation (which is what makes it practical).
+
+use super::corollary1::{corollary1_bound, BoundParams};
+use super::optimizer::optimize_block_size;
+
+/// One perturbation's outcome.
+#[derive(Clone, Debug)]
+pub struct SensitivityRow {
+    /// Which constant was perturbed ("L", "c", "D", "alpha").
+    pub constant: &'static str,
+    /// Multiplicative perturbation applied.
+    pub factor: f64,
+    /// The block size recommended under the perturbed constants.
+    pub n_c: usize,
+    /// Bound value of that recommendation under the TRUE constants.
+    pub true_bound_at_n_c: f64,
+    /// Relative regret vs the true optimum: (above − opt) / opt.
+    pub regret: f64,
+}
+
+/// Apply a multiplicative factor to one named constant.
+fn perturb(p: &BoundParams, name: &str, factor: f64) -> BoundParams {
+    let mut q = *p;
+    match name {
+        "L" => q.big_l *= factor,
+        "c" => q.c *= factor,
+        "D" => q.d_diam *= factor,
+        "alpha" => q.alpha *= factor,
+        other => panic!("unknown constant '{other}'"),
+    }
+    q
+}
+
+/// Sensitivity sweep: perturb each of `L, c, D, alpha` by each factor,
+/// re-optimize, and score the recommendation under the true constants.
+pub fn sensitivity_sweep(
+    truth: &BoundParams,
+    n: usize,
+    t_budget: f64,
+    n_o: f64,
+    tau_p: f64,
+    factors: &[f64],
+) -> Vec<SensitivityRow> {
+    let opt = optimize_block_size(truth, n, t_budget, n_o, tau_p);
+    let mut rows = Vec::new();
+    for &name in &["L", "c", "D", "alpha"] {
+        for &factor in factors {
+            let perturbed = perturb(truth, name, factor);
+            if !perturbed.stepsize_ok() {
+                continue; // an inflated L can violate condition (10)
+            }
+            let rec =
+                optimize_block_size(&perturbed, n, t_budget, n_o, tau_p);
+            let true_at = corollary1_bound(
+                truth,
+                n,
+                t_budget,
+                rec.n_c as f64,
+                n_o,
+                tau_p,
+                false,
+            );
+            rows.push(SensitivityRow {
+                constant: name,
+                factor,
+                n_c: rec.n_c,
+                true_bound_at_n_c: true_at,
+                regret: (true_at - opt.value) / opt.value,
+            });
+        }
+    }
+    rows
+}
+
+/// The worst regret across a sweep (headline robustness number).
+pub fn max_regret(rows: &[SensitivityRow]) -> f64 {
+    rows.iter().map(|r| r.regret).fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn truth() -> BoundParams {
+        BoundParams::paper_fig3(6.4)
+    }
+
+    const N: usize = 18576;
+    const T: f64 = 1.5 * 18576.0;
+
+    #[test]
+    fn unperturbed_has_zero_regret() {
+        let rows = sensitivity_sweep(&truth(), N, T, 100.0, 1.0, &[1.0]);
+        for r in &rows {
+            assert!(
+                r.regret.abs() < 1e-12,
+                "{} x1.0 regret {}",
+                r.constant,
+                r.regret
+            );
+        }
+    }
+
+    #[test]
+    fn regret_is_nonnegative() {
+        let rows = sensitivity_sweep(
+            &truth(),
+            N,
+            T,
+            100.0,
+            1.0,
+            &[0.5, 0.8, 1.25, 2.0],
+        );
+        assert!(!rows.is_empty());
+        for r in &rows {
+            assert!(r.regret >= -1e-12, "{:?}", r);
+            assert!(r.n_c >= 1 && r.n_c <= N);
+        }
+    }
+
+    #[test]
+    fn paper_method_is_robust_to_2x_estimation_error() {
+        // The practical claim: being 2x off on any single constant costs
+        // only a few percent of bound value — consistent with Fig. 4's
+        // flat loss surface around the optimum.
+        let rows = sensitivity_sweep(
+            &truth(),
+            N,
+            T,
+            100.0,
+            1.0,
+            &[0.5, 2.0],
+        );
+        let worst = max_regret(&rows);
+        assert!(worst < 0.05, "max regret {worst} too large");
+    }
+
+    #[test]
+    fn stepsize_violations_are_skipped() {
+        // alpha x (huge) breaks condition (10); the sweep must skip it
+        // rather than panic.
+        let rows = sensitivity_sweep(
+            &truth(),
+            N,
+            T,
+            100.0,
+            1.0,
+            &[20000.0],
+        );
+        assert!(rows.iter().all(|r| r.constant != "alpha" || r.factor != 20000.0));
+    }
+}

@@ -1,0 +1,143 @@
+//! Theorem 1: the tighter, Monte-Carlo-estimable bound (eqs. 12–13).
+//!
+//! Unlike Corollary 1, Theorem 1 keeps the per-block initial-error terms
+//! `E[L_{b−l}(w_{b−l}^{n_p}) − L_{b−l}(w*)]` instead of capping them by
+//! `LD²/2`. The paper notes evaluating it requires Monte-Carlo over the
+//! transmission sequence — which is exactly what this module does, by
+//! replaying measured per-block losses from a coordinator run into the
+//! bound's recursion. Used by `examples/bound_tightness.rs` and tests to
+//! show Theorem 1 ≤ Corollary 1.
+
+use super::corollary1::BoundParams;
+
+/// Per-block measurements extracted from a (simulated) run: for each
+/// transmission block `b`, the gap `L_b(w_b^{n_p}) − L_b(w*)` of the
+/// block-local empirical loss (paper eq. (7)) at the block's end.
+#[derive(Clone, Debug)]
+pub struct BlockGaps {
+    /// gaps[b-1] = measured E_b-style gap for block b (1-indexed blocks).
+    pub gaps: Vec<f64>,
+    /// Gap of the remainder loss ΔL_B (case (a) only; eq. (8)).
+    pub remainder_gap: f64,
+}
+
+/// Evaluate the Theorem-1 bound (eq. 12) for case (a), `T ≤ B_d(n_c+n_o)`,
+/// using measured per-block gaps.
+///
+/// * `b` — number of blocks B that fit in T
+/// * `b_d` — B_d = N/n_c (real-valued, paper convention)
+/// * `n_p` — SGD updates per block
+pub fn theorem1_case_a(
+    p: &BoundParams,
+    gaps: &BlockGaps,
+    b: usize,
+    b_d: f64,
+    n_p: f64,
+) -> f64 {
+    assert!(b >= 1 && gaps.gaps.len() >= b - 1, "need B-1 block gaps");
+    let a = p.bias_floor();
+    let q = p.contraction();
+    let frac = ((b as f64 - 1.0) / b_d).clamp(0.0, 1.0);
+
+    let mut acc = a * frac + (1.0 - frac) * gaps.remainder_gap;
+    for l in 1..b {
+        // block index B-l is 1-indexed -> gaps[B-l-1]
+        let gap = gaps.gaps[b - l - 1];
+        acc += q.powf(l as f64 * n_p) * (gap - a) / b_d;
+    }
+    acc
+}
+
+/// Evaluate the Theorem-1 bound (eq. 13) for case (b),
+/// `T > B_d(n_c+n_o)`, with `n_l` tail updates.
+pub fn theorem1_case_b(
+    p: &BoundParams,
+    gaps: &BlockGaps,
+    b_d: usize,
+    n_p: f64,
+    n_l: f64,
+) -> f64 {
+    assert!(gaps.gaps.len() >= b_d, "need B_d block gaps");
+    let a = p.bias_floor();
+    let q = p.contraction();
+    let mut acc = a;
+    let tail = q.powf(n_l);
+    for l in 0..b_d {
+        let gap = gaps.gaps[b_d - l - 1];
+        acc += tail * q.powf(l as f64 * n_p) * (gap - a) / b_d as f64;
+    }
+    acc
+}
+
+/// The Corollary-1 relaxation replaces every measured gap by `LD²/2`;
+/// check: plugging the cap into the Theorem-1 evaluators must reproduce
+/// the Corollary-1 value (used as a consistency test).
+pub fn capped_gaps(p: &BoundParams, blocks: usize) -> BlockGaps {
+    BlockGaps {
+        gaps: vec![p.initial_error_cap(); blocks],
+        remainder_gap: p.initial_error_cap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bound::corollary1::corollary1_bound;
+
+    fn params() -> BoundParams {
+        BoundParams::paper_fig3(3.0)
+    }
+
+    #[test]
+    fn capped_theorem1_equals_corollary1_case_a() {
+        let p = params();
+        let (n, n_o, tau_p) = (18576usize, 10.0, 1.0);
+        let n_c = 50.0;
+        let t = 10_000.0; // well inside case (a)
+        let block_len = n_c + n_o;
+        let b = (t / block_len) as usize;
+        let b_d = n as f64 / n_c;
+        let n_p = block_len / tau_p;
+        let gaps = capped_gaps(&p, b);
+        let th = theorem1_case_a(&p, &gaps, b, b_d, n_p);
+        let co = corollary1_bound(&p, n, t, n_c, n_o, tau_p, false);
+        // Corollary uses floor(B)-1 sum terms and the real-valued (B-1)/B_d
+        // fraction; with matching discretization the two must agree.
+        let b_real = t / block_len;
+        let frac_adjust = (b_real - b as f64) * (p.initial_error_cap() - p.bias_floor()) / b_d;
+        assert!(
+            (th - co).abs() <= frac_adjust.abs() + 1e-9,
+            "theorem1 {th} vs corollary1 {co}"
+        );
+    }
+
+    #[test]
+    fn capped_theorem1_equals_corollary1_case_b() {
+        let p = params();
+        let (n, n_o, tau_p) = (1000usize, 5.0, 1.0);
+        let n_c = 100.0;
+        let block_len = n_c + n_o;
+        let b_d = n as f64 / n_c; // exactly 10
+        let t = b_d * block_len + 500.0;
+        let n_l = 500.0;
+        let gaps = capped_gaps(&p, b_d as usize);
+        let th = theorem1_case_b(&p, &gaps, b_d as usize, block_len / tau_p, n_l);
+        let co = corollary1_bound(&p, n, t, n_c, n_o, tau_p, false);
+        assert!((th - co).abs() / co < 1e-9, "{th} vs {co}");
+    }
+
+    #[test]
+    fn smaller_measured_gaps_tighten_the_bound() {
+        let p = params();
+        let b = 20usize;
+        let (b_d, n_p) = (100.0, 60.0);
+        let capped = capped_gaps(&p, b);
+        let tighter = BlockGaps {
+            gaps: vec![p.initial_error_cap() * 0.1; b],
+            remainder_gap: p.initial_error_cap() * 0.1,
+        };
+        let loose = theorem1_case_a(&p, &capped, b, b_d, n_p);
+        let tight = theorem1_case_a(&p, &tighter, b, b_d, n_p);
+        assert!(tight < loose, "{tight} vs {loose}");
+    }
+}

@@ -1,0 +1,103 @@
+//! Packet-erasure channel with ARQ retransmission (paper Sec. 6 future
+//! work: "the inclusion of the effect of delays due to errors in the
+//! communication channel").
+//!
+//! Each transmission attempt is lost i.i.d. with probability `p_loss`;
+//! the device retransmits until success (ARQ with instantaneous NACK), so
+//! a packet that needed `k` attempts occupies the channel for
+//! `k × duration`. The effective rate loss is the expected `1/(1−p)`
+//! slowdown — which shifts the optimal block size (bench_channel_error).
+
+use crate::util::rng::Pcg32;
+
+use super::{Channel, Delivery};
+
+/// i.i.d. packet-erasure channel with stop-and-wait ARQ.
+#[derive(Clone, Copy, Debug)]
+pub struct ErasureChannel {
+    /// Per-attempt loss probability in [0, 1).
+    pub p_loss: f64,
+    /// Cap on attempts (guards pathological RNG streaks; 0 = unlimited).
+    pub max_attempts: u32,
+}
+
+impl ErasureChannel {
+    pub fn new(p_loss: f64) -> ErasureChannel {
+        assert!((0.0..1.0).contains(&p_loss), "p_loss must be in [0,1)");
+        ErasureChannel { p_loss, max_attempts: 1000 }
+    }
+
+    /// Expected slowdown factor 1/(1−p) of this channel.
+    pub fn expected_slowdown(&self) -> f64 {
+        1.0 / (1.0 - self.p_loss)
+    }
+}
+
+impl Channel for ErasureChannel {
+    fn transmit(
+        &mut self,
+        sent_at: f64,
+        duration: f64,
+        rng: &mut Pcg32,
+    ) -> Delivery {
+        let mut attempts = 1u32;
+        while rng.next_f64() < self.p_loss {
+            if self.max_attempts > 0 && attempts >= self.max_attempts {
+                break;
+            }
+            attempts += 1;
+        }
+        Delivery {
+            arrival: sent_at + attempts as f64 * duration,
+            attempts,
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("erasure (p_loss={}, ARQ)", self.p_loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_loss_is_ideal() {
+        let mut ch = ErasureChannel::new(0.0);
+        let mut rng = Pcg32::seeded(1);
+        for i in 0..50 {
+            let d = ch.transmit(i as f64, 2.0, &mut rng);
+            assert_eq!(d.attempts, 1);
+            assert_eq!(d.arrival, i as f64 + 2.0);
+        }
+    }
+
+    #[test]
+    fn mean_attempts_matches_geometric() {
+        let mut ch = ErasureChannel::new(0.3);
+        let mut rng = Pcg32::seeded(2);
+        let trials = 20_000;
+        let total: u64 = (0..trials)
+            .map(|_| ch.transmit(0.0, 1.0, &mut rng).attempts as u64)
+            .sum();
+        let mean = total as f64 / trials as f64;
+        // geometric mean 1/(1-p) = 1.4286
+        assert!((mean - ch.expected_slowdown()).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn arrival_scales_with_attempts() {
+        let mut ch = ErasureChannel::new(0.9);
+        let mut rng = Pcg32::seeded(3);
+        let d = ch.transmit(5.0, 2.0, &mut rng);
+        assert_eq!(d.arrival, 5.0 + d.attempts as f64 * 2.0);
+        assert!(d.attempts >= 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn p_one_rejected() {
+        ErasureChannel::new(1.0);
+    }
+}

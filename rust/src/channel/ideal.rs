@@ -1,0 +1,37 @@
+//! The paper's error-free channel: arrival = sent_at + duration.
+
+use crate::util::rng::Pcg32;
+
+use super::{Channel, Delivery};
+
+/// Error-free, unit-rate channel (paper Sec. 2).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IdealChannel;
+
+impl Channel for IdealChannel {
+    fn transmit(
+        &mut self,
+        sent_at: f64,
+        duration: f64,
+        _rng: &mut Pcg32,
+    ) -> Delivery {
+        Delivery { arrival: sent_at + duration, attempts: 1 }
+    }
+
+    fn describe(&self) -> String {
+        "ideal (error-free, unit rate)".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrival_is_exact() {
+        let mut ch = IdealChannel;
+        let mut rng = Pcg32::seeded(0);
+        let d = ch.transmit(10.0, 5.5, &mut rng);
+        assert_eq!(d, Delivery { arrival: 15.5, attempts: 1 });
+    }
+}

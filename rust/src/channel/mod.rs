@@ -1,0 +1,44 @@
+//! Communication-channel substrate.
+//!
+//! The paper's main analysis assumes an error-free channel (Sec. 2); its
+//! Sec. 6 lists channel errors and rate selection as future work — both
+//! are implemented here as drop-in [`Channel`] implementations so the
+//! coordinator, benches and the ablations can exercise them.
+
+pub mod erasure;
+pub mod ideal;
+pub mod rate;
+
+pub use erasure::ErasureChannel;
+pub use ideal::IdealChannel;
+pub use rate::RateLimitedChannel;
+
+use crate::util::rng::Pcg32;
+
+/// Result of pushing one packet through a channel.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Delivery {
+    /// Time the packet becomes available at the edge node.
+    pub arrival: f64,
+    /// Number of transmission attempts (1 = no loss).
+    pub attempts: u32,
+}
+
+/// A device → edge channel: maps (send time, duration) to an arrival.
+///
+/// Implementations must be monotone: a packet sent later never arrives
+/// earlier (verified by property tests).
+pub trait Channel: Send {
+    /// Transmit a packet occupying the channel for `duration` starting at
+    /// `sent_at`; returns when it is fully received. The channel is busy
+    /// until `Delivery::arrival` (the caller serializes transmissions).
+    fn transmit(
+        &mut self,
+        sent_at: f64,
+        duration: f64,
+        rng: &mut Pcg32,
+    ) -> Delivery;
+
+    /// Human-readable description for logs.
+    fn describe(&self) -> String;
+}

@@ -1,0 +1,62 @@
+//! Rate-limited channel: a wrapper scaling transmission durations.
+//!
+//! Models a link whose rate differs from the 1-sample-per-unit
+//! normalization, and is the substrate for the rate-selection extension
+//! (paper Sec. 6: "the optimization problem could be generalized to
+//! account for the selection of the data rate"): a lower rate shrinks the
+//! erasure probability in `extensions::rate_select`.
+
+use crate::util::rng::Pcg32;
+
+use super::{Channel, Delivery};
+
+/// Wraps an inner channel, scaling every duration by `1/rate`.
+pub struct RateLimitedChannel<C: Channel> {
+    /// Relative rate (1.0 = the paper's normalization).
+    pub rate: f64,
+    inner: C,
+}
+
+impl<C: Channel> RateLimitedChannel<C> {
+    pub fn new(rate: f64, inner: C) -> RateLimitedChannel<C> {
+        assert!(rate > 0.0, "rate must be positive");
+        RateLimitedChannel { rate, inner }
+    }
+}
+
+impl<C: Channel> Channel for RateLimitedChannel<C> {
+    fn transmit(
+        &mut self,
+        sent_at: f64,
+        duration: f64,
+        rng: &mut Pcg32,
+    ) -> Delivery {
+        self.inner.transmit(sent_at, duration / self.rate, rng)
+    }
+
+    fn describe(&self) -> String {
+        format!("rate={} over {}", self.rate, self.inner.describe())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::IdealChannel;
+
+    #[test]
+    fn slower_rate_stretches_duration() {
+        let mut ch = RateLimitedChannel::new(0.5, IdealChannel);
+        let mut rng = Pcg32::seeded(1);
+        let d = ch.transmit(0.0, 3.0, &mut rng);
+        assert_eq!(d.arrival, 6.0);
+    }
+
+    #[test]
+    fn faster_rate_shrinks_duration() {
+        let mut ch = RateLimitedChannel::new(2.0, IdealChannel);
+        let mut rng = Pcg32::seeded(1);
+        let d = ch.transmit(1.0, 3.0, &mut rng);
+        assert_eq!(d.arrival, 2.5);
+    }
+}

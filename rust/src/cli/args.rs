@@ -1,0 +1,170 @@
+//! Minimal argv parser: `edgepipe <command> [--flag value]... [--set
+//! section.key=value]...`.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Top-level usage text.
+pub const HELP: &str = "\
+edgepipe — pipelined computation & communication for latency-constrained
+edge learning (Skatchkovsky & Simeone, 2019; three-layer rust+JAX+Pallas)
+
+USAGE:
+    edgepipe <COMMAND> [OPTIONS]
+
+COMMANDS:
+    info        show version, artifact status and dataset constants
+    train       run one pipelined training experiment
+    optimize    pick the bound-optimal block size ñ_c
+    fig3        regenerate paper Fig. 3 (bound vs n_c per overhead)
+    fig4        regenerate paper Fig. 4 (loss curves; ñ_c vs n_c*)
+    baselines   compare pipelined vs sequential vs transmit-all-first
+    sweep       Monte-Carlo final-loss sweep over block sizes
+    tightness   actual gap vs Theorem 1 vs Corollary 1
+    adaptive    adaptive block-size schedules vs the fixed optimum ñ_c
+    help        print this message
+
+OPTIONS (all commands):
+    --config <path>          TOML config file
+    --set <section.key=val>  override any config key (repeatable)
+    --out <dir>              output directory for CSV/JSON [default: out]
+    --backend <native|pjrt>  executor backend for `train` [default: native]
+    --quiet                  suppress progress logging
+
+EXAMPLES:
+    edgepipe optimize --set protocol.n_o=100
+    edgepipe train --set protocol.n_c=437 --set train.seed=3 --backend pjrt
+    edgepipe fig3 --out out/fig3
+    edgepipe fig4 --set protocol.n_o=100 --set sweep.seeds=10
+";
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub config_path: Option<String>,
+    pub overrides: Vec<(String, String)>,
+    pub out_dir: String,
+    pub backend: String,
+    pub quiet: bool,
+    /// Any remaining --key value flags (command-specific).
+    pub extra: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse argv (excluding argv[0]).
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args {
+            out_dir: "out".to_string(),
+            backend: "native".to_string(),
+            ..Default::default()
+        };
+        let mut it = argv.iter().peekable();
+        match it.next() {
+            Some(cmd) if !cmd.starts_with('-') => {
+                args.command = cmd.clone();
+            }
+            _ => {
+                args.command = "help".to_string();
+                return Ok(args);
+            }
+        }
+        while let Some(flag) = it.next() {
+            match flag.as_str() {
+                "--config" => {
+                    args.config_path = Some(expect_value(&mut it, flag)?)
+                }
+                "--set" => {
+                    let kv = expect_value(&mut it, flag)?;
+                    let (k, v) = kv.split_once('=').ok_or_else(|| {
+                        anyhow::anyhow!("--set needs key=value, got '{kv}'")
+                    })?;
+                    args.overrides.push((k.to_string(), v.to_string()));
+                }
+                "--out" => args.out_dir = expect_value(&mut it, flag)?,
+                "--backend" => args.backend = expect_value(&mut it, flag)?,
+                "--quiet" => args.quiet = true,
+                "--help" | "-h" => {
+                    args.command = "help".to_string();
+                }
+                other if other.starts_with("--") => {
+                    let key = other.trim_start_matches("--").to_string();
+                    let value = expect_value(&mut it, flag)?;
+                    args.extra.insert(key, value);
+                }
+                other => bail!("unexpected argument '{other}'"),
+            }
+        }
+        if !matches!(args.backend.as_str(), "native" | "pjrt") {
+            bail!("--backend must be 'native' or 'pjrt'");
+        }
+        Ok(args)
+    }
+
+    /// Command-specific flag with default.
+    pub fn extra_or(&self, key: &str, default: &str) -> String {
+        self.extra.get(key).cloned().unwrap_or_else(|| default.into())
+    }
+}
+
+fn expect_value(
+    it: &mut std::iter::Peekable<std::slice::Iter<String>>,
+    flag: &str,
+) -> Result<String> {
+    it.next()
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("flag {flag} needs a value"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Result<Args> {
+        Args::parse(&tokens.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = parse(&[
+            "train",
+            "--set",
+            "protocol.n_c=437",
+            "--set",
+            "train.seed=3",
+            "--backend",
+            "pjrt",
+            "--out",
+            "results",
+        ])
+        .unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.overrides.len(), 2);
+        assert_eq!(a.overrides[0], ("protocol.n_c".into(), "437".into()));
+        assert_eq!(a.backend, "pjrt");
+        assert_eq!(a.out_dir, "results");
+    }
+
+    #[test]
+    fn missing_command_is_help() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.command, "help");
+    }
+
+    #[test]
+    fn bad_backend_rejected() {
+        assert!(parse(&["train", "--backend", "gpu"]).is_err());
+    }
+
+    #[test]
+    fn bad_set_rejected() {
+        assert!(parse(&["train", "--set", "novalue"]).is_err());
+    }
+
+    #[test]
+    fn extra_flags_collected() {
+        let a = parse(&["fig4", "--n-o", "100"]).unwrap();
+        assert_eq!(a.extra_or("n-o", "10"), "100");
+        assert_eq!(a.extra_or("missing", "42"), "42");
+    }
+}

@@ -1,0 +1,509 @@
+//! Subcommand implementations for the `edgepipe` binary.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::bound::corollary1::BoundParams;
+use crate::bound::{estimate_constants, optimize_block_size};
+use crate::channel::IdealChannel;
+use crate::config::ExperimentConfig;
+use crate::coordinator::des::{run_des, DesConfig};
+use crate::coordinator::executor::NativeExecutor;
+use crate::coordinator::run::build_dataset;
+use crate::metrics::writer::{write_csv, CsvTable};
+use crate::model::{ridge_solution, RidgeModel};
+use crate::sweep::fig3::fig3_data;
+use crate::sweep::fig4::{fig4_data, Fig4Config};
+use crate::sweep::runner::{grid_final_losses, log_grid};
+use crate::util::timefmt::fmt_count;
+
+use super::args::{Args, HELP};
+
+/// Dispatch a parsed command line. Returns the process exit code.
+pub fn dispatch(args: &Args) -> Result<i32> {
+    match args.command.as_str() {
+        "help" => {
+            println!("{HELP}");
+            Ok(0)
+        }
+        "info" => cmd_info(args),
+        "train" => cmd_train(args),
+        "optimize" => cmd_optimize(args),
+        "fig3" => cmd_fig3(args),
+        "fig4" => cmd_fig4(args),
+        "baselines" => cmd_baselines(args),
+        "sweep" => cmd_sweep(args),
+        "tightness" => cmd_tightness(args),
+        "adaptive" => cmd_adaptive(args),
+        other => {
+            eprintln!("unknown command '{other}'\n\n{HELP}");
+            Ok(2)
+        }
+    }
+}
+
+fn load_config(args: &Args) -> Result<ExperimentConfig> {
+    ExperimentConfig::load(
+        args.config_path.as_deref().map(Path::new),
+        &args.overrides,
+    )
+}
+
+/// Resolve the bound parameters for a dataset (estimating constants).
+fn bound_params(
+    cfg: &ExperimentConfig,
+    ds: &crate::data::Dataset,
+) -> BoundParams {
+    let k = estimate_constants(
+        ds,
+        cfg.train.lambda,
+        cfg.train.alpha,
+        2000,
+        cfg.train.seed,
+    );
+    BoundParams {
+        alpha: cfg.train.alpha,
+        big_l: k.big_l,
+        c: k.c,
+        m: 1.0,
+        m_g: 1.0,
+        d_diam: k.d_diam,
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<i32> {
+    let cfg = load_config(args)?;
+    println!("edgepipe {}", crate::VERSION);
+    println!(
+        "paper: Skatchkovsky & Simeone, 'Optimizing Pipelined Computation \
+         and Communication for Latency-Constrained Edge Learning' (2019)"
+    );
+    match crate::runtime::find_artifact_dir() {
+        Some(dir) => {
+            let manifest = crate::runtime::Manifest::load(&dir)?;
+            println!(
+                "artifacts: {} ({} entry points, d={}, K_MAX={}, N_CAP={})",
+                dir.display(),
+                manifest.artifacts.len(),
+                manifest.constants.d,
+                manifest.constants.k_max,
+                manifest.constants.n_cap
+            );
+        }
+        None => println!("artifacts: NOT BUILT (run `make artifacts`)"),
+    }
+    let ds = build_dataset(&cfg)?;
+    let k = estimate_constants(
+        &ds,
+        cfg.train.lambda,
+        cfg.train.alpha,
+        2000,
+        cfg.train.seed,
+    );
+    println!(
+        "dataset: N={} d={} (L={:.4}, c={:.4}, D={:.3}; paper: L=1.908, \
+         c=0.061)",
+        fmt_count(ds.n as u64),
+        ds.d,
+        k.big_l,
+        k.c,
+        k.d_diam
+    );
+    println!(
+        "protocol: n_o={}, τ_p={}, T={}",
+        cfg.protocol.n_o,
+        cfg.protocol.tau_p,
+        cfg.protocol.deadline(ds.n)
+    );
+    Ok(0)
+}
+
+fn cmd_optimize(args: &Args) -> Result<i32> {
+    let cfg = load_config(args)?;
+    let ds = build_dataset(&cfg)?;
+    let t = cfg.protocol.deadline(ds.n);
+    let params = bound_params(&cfg, &ds);
+    let opt =
+        optimize_block_size(&params, ds.n, t, cfg.protocol.n_o, cfg.protocol.tau_p);
+    println!(
+        "ñ_c = {} (bound {:.6}, case {:?}, full-delivery boundary {:?})",
+        opt.n_c, opt.value, opt.case, opt.full_delivery_boundary
+    );
+    println!(
+        "constants: L={:.4} c={:.4} D={:.3} α={} n_o={} T={}",
+        params.big_l, params.c, params.d_diam, params.alpha, cfg.protocol.n_o, t
+    );
+    Ok(0)
+}
+
+fn cmd_train(args: &Args) -> Result<i32> {
+    let cfg = load_config(args)?;
+    let ds = build_dataset(&cfg)?;
+    let t = cfg.protocol.deadline(ds.n);
+    let n_c = if cfg.protocol.n_c > 0 {
+        cfg.protocol.n_c.min(ds.n)
+    } else {
+        let params = bound_params(&cfg, &ds);
+        optimize_block_size(&params, ds.n, t, cfg.protocol.n_o, cfg.protocol.tau_p)
+            .n_c
+    };
+    let des = DesConfig {
+        n_c,
+        n_o: cfg.protocol.n_o,
+        tau_p: cfg.protocol.tau_p,
+        t_budget: t,
+        alpha: cfg.train.alpha,
+        lambda: cfg.train.lambda,
+        init_std: cfg.train.init_std,
+        seed: cfg.train.seed,
+        loss_every: 500,
+        record_blocks: false,
+        store_capacity: None,
+        collect_snapshots: false,
+        event_capacity: 64,
+    };
+    if !args.quiet {
+        println!(
+            "training: N={} n_c={} n_o={} T={} backend={}",
+            ds.n, n_c, des.n_o, t, args.backend
+        );
+    }
+    let result = match args.backend.as_str() {
+        "native" => {
+            let mut exec = NativeExecutor::new(
+                RidgeModel::new(ds.d, des.lambda, ds.n),
+                des.alpha,
+            );
+            run_des(&ds, &des, &mut IdealChannel, &mut exec)?
+        }
+        "pjrt" => {
+            let session = crate::runtime::RuntimeSession::open_default()?;
+            let mut exec = crate::runtime::PjrtExecutor::new(
+                session, des.alpha, des.lambda, ds.n,
+            )?;
+            run_des(&ds, &des, &mut IdealChannel, &mut exec)?
+        }
+        other => bail!("unknown backend {other}"),
+    };
+    let w_star = ridge_solution(&ds, cfg.train.lambda)?;
+    let loss_star = ds.ridge_loss(&w_star, cfg.train.lambda / ds.n as f64);
+    println!(
+        "final loss {:.6} (gap to L(w*) {:.3e}); {} updates in {} blocks \
+         ({} samples delivered, case {:?})",
+        result.final_loss,
+        result.final_gap(loss_star),
+        fmt_count(result.updates as u64),
+        result.blocks_sent,
+        fmt_count(result.samples_delivered as u64),
+        result.case
+    );
+    // emit the loss curve
+    let mut table = CsvTable::new(&["time", "loss"]);
+    for &(t, l) in &result.curve {
+        table.push_nums(&[t, l]);
+    }
+    let out = Path::new(&args.out_dir).join("train_curve.csv");
+    write_csv(&table, &out)?;
+    if !args.quiet {
+        println!("wrote {}", out.display());
+    }
+    Ok(0)
+}
+
+fn cmd_fig3(args: &Args) -> Result<i32> {
+    let cfg = load_config(args)?;
+    let ds = build_dataset(&cfg)?;
+    let t = cfg.protocol.deadline(ds.n);
+    let params = bound_params(&cfg, &ds);
+    let out = fig3_data(
+        &params,
+        ds.n,
+        t,
+        cfg.protocol.tau_p,
+        &cfg.sweep.n_os,
+        160,
+    );
+    print!("{}", out.render());
+    let dir = Path::new(&args.out_dir);
+    write_csv(&out.curve_table(), &dir.join("fig3_curves.csv"))?;
+    write_csv(&out.marker_table(), &dir.join("fig3_markers.csv"))?;
+    if !args.quiet {
+        println!("wrote {}/fig3_curves.csv, fig3_markers.csv", dir.display());
+    }
+    Ok(0)
+}
+
+fn cmd_fig4(args: &Args) -> Result<i32> {
+    let cfg = load_config(args)?;
+    let ds = build_dataset(&cfg)?;
+    let t = cfg.protocol.deadline(ds.n);
+    let params = bound_params(&cfg, &ds);
+    let f4 = Fig4Config {
+        n_o: cfg.protocol.n_o,
+        tau_p: cfg.protocol.tau_p,
+        t_budget: t,
+        alpha: cfg.train.alpha,
+        lambda: cfg.train.lambda,
+        init_std: cfg.train.init_std,
+        seed: cfg.train.seed,
+        seeds: cfg.sweep.seeds,
+        threads: cfg.sweep.threads,
+        ..Fig4Config::paper(cfg.protocol.n_o, t)
+    };
+    let out = fig4_data(&ds, &params, &f4);
+    print!("{}", out.render());
+    let dir = Path::new(&args.out_dir);
+    write_csv(&out.curve_table(), &dir.join("fig4_curves.csv"))?;
+    write_csv(&out.search_table(), &dir.join("fig4_search.csv"))?;
+    if !args.quiet {
+        println!("wrote {}/fig4_curves.csv, fig4_search.csv", dir.display());
+    }
+    Ok(0)
+}
+
+fn cmd_baselines(args: &Args) -> Result<i32> {
+    let cfg = load_config(args)?;
+    let ds = build_dataset(&cfg)?;
+    let t = cfg.protocol.deadline(ds.n);
+    let n_c = if cfg.protocol.n_c > 0 { cfg.protocol.n_c } else { 437 };
+    let des = DesConfig {
+        record_blocks: false,
+        ..DesConfig::paper(n_c.min(ds.n), cfg.protocol.n_o, t, cfg.train.seed)
+    };
+    let mk = || {
+        NativeExecutor::new(
+            RidgeModel::new(ds.d, des.lambda, ds.n),
+            des.alpha,
+        )
+    };
+    let pipe = run_des(&ds, &des, &mut IdealChannel, &mut mk())?;
+    let seq = crate::baselines::sequential(
+        &ds,
+        &des,
+        &mut IdealChannel,
+        &mut mk(),
+    )?;
+    let all = crate::baselines::transmit_all_first(
+        &ds,
+        &des,
+        &mut IdealChannel,
+        &mut mk(),
+    )?;
+    println!("policy comparison (n_c={}, n_o={}, T={t}):", des.n_c, des.n_o);
+    for (name, r) in [
+        ("pipelined (paper)", &pipe),
+        ("sequential (no overlap)", &seq),
+        ("transmit-all-first", &all),
+    ] {
+        println!(
+            "  {:<26} final loss {:.6}  updates {:>9}  delivered {:>6}",
+            name,
+            r.final_loss,
+            fmt_count(r.updates as u64),
+            r.samples_delivered
+        );
+    }
+    Ok(0)
+}
+
+fn cmd_sweep(args: &Args) -> Result<i32> {
+    let cfg = load_config(args)?;
+    let ds = build_dataset(&cfg)?;
+    let t = cfg.protocol.deadline(ds.n);
+    let grid = if cfg.sweep.n_cs.is_empty() {
+        log_grid(ds.n, 24)
+    } else {
+        cfg.sweep.n_cs.clone()
+    };
+    let des = DesConfig {
+        record_blocks: false,
+        ..DesConfig::paper(1, cfg.protocol.n_o, t, cfg.train.seed)
+    };
+    let rows = grid_final_losses(
+        &ds,
+        &des,
+        &grid,
+        cfg.sweep.seeds,
+        cfg.sweep.threads,
+    );
+    let mut table = CsvTable::new(&["n_c", "final_loss_mean", "final_loss_std"]);
+    println!("final loss vs n_c (n_o={}, seeds={}):", des.n_o, cfg.sweep.seeds);
+    for (nc, s) in &rows {
+        println!("  n_c={:>6}  {:.6} ± {:.6}", nc, s.mean, s.std);
+        table.push_nums(&[*nc as f64, s.mean, s.std]);
+    }
+    let best = rows
+        .iter()
+        .min_by(|a, b| a.1.mean.partial_cmp(&b.1.mean).unwrap())
+        .unwrap();
+    println!("experimental optimum n_c* = {} ({:.6})", best.0, best.1.mean);
+    let out = Path::new(&args.out_dir).join("sweep_final_loss.csv");
+    write_csv(&table, &out)?;
+    Ok(0)
+}
+
+/// Theorem-1 vs Corollary-1 vs actual gap (the bound-tightness study).
+fn cmd_tightness(args: &Args) -> Result<i32> {
+    use crate::bound::corollary1::corollary1_bound;
+    use crate::bound::theorem1::{theorem1_case_b, BlockGaps};
+    use crate::protocol::TimelineCase;
+
+    let cfg = load_config(args)?;
+    let ds = build_dataset(&cfg)?;
+    let t = cfg.protocol.deadline(ds.n);
+    let params = bound_params(&cfg, &ds);
+    let w_star = ridge_solution(&ds, cfg.train.lambda)?;
+    let loss_star = ds.ridge_loss(&w_star, cfg.train.lambda / ds.n as f64);
+    let n_c = if cfg.protocol.n_c > 0 { cfg.protocol.n_c } else { 400 };
+
+    let des = DesConfig {
+        n_c,
+        n_o: cfg.protocol.n_o,
+        tau_p: cfg.protocol.tau_p,
+        t_budget: t,
+        alpha: cfg.train.alpha,
+        lambda: cfg.train.lambda,
+        init_std: cfg.train.init_std,
+        seed: cfg.train.seed,
+        loss_every: 0,
+        record_blocks: false,
+        store_capacity: None,
+        collect_snapshots: true,
+        event_capacity: 0,
+    };
+    let mut exec = NativeExecutor::new(
+        RidgeModel::new(ds.d, des.lambda, ds.n),
+        des.alpha,
+    );
+    let run = run_des(&ds, &des, &mut IdealChannel, &mut exec)?;
+    if run.case != TimelineCase::Full {
+        bail!("pick an n_c that delivers the dataset (case b) for tightness");
+    }
+    let reg = cfg.train.lambda / ds.n as f64;
+    let gaps: Vec<f64> = run
+        .snapshots
+        .iter()
+        .map(|s| {
+            let block = crate::data::Dataset::new(
+                s.x.clone(),
+                s.y.clone(),
+                s.y.len(),
+                ds.d,
+            );
+            block.ridge_loss(&s.w_end, reg) - block.ridge_loss(&w_star, reg)
+        })
+        .collect();
+    let b_d = run.snapshots.len();
+    let block_len = n_c as f64 + cfg.protocol.n_o;
+    let n_l = (t - b_d as f64 * block_len).max(0.0) / cfg.protocol.tau_p;
+    let th1 = theorem1_case_b(
+        &params,
+        &BlockGaps { gaps, remainder_gap: 0.0 },
+        b_d,
+        block_len / cfg.protocol.tau_p,
+        n_l,
+    );
+    let co1 = corollary1_bound(
+        &params,
+        ds.n,
+        t,
+        n_c as f64,
+        cfg.protocol.n_o,
+        cfg.protocol.tau_p,
+        false,
+    );
+    println!("bound tightness at n_c={n_c}, n_o={}:", cfg.protocol.n_o);
+    println!("  actual gap  : {:.6}", run.final_loss - loss_star);
+    println!("  Theorem 1   : {th1:.6} (measured per-block gaps)");
+    println!("  Corollary 1 : {co1:.6} (LD²/2 relaxation)");
+    Ok(0)
+}
+
+/// Compare adaptive block schedules against the fixed bound optimum.
+fn cmd_adaptive(args: &Args) -> Result<i32> {
+    use crate::extensions::adaptive::{
+        run_scheduled, BlockSchedule, FixedSchedule, WarmupSchedule,
+    };
+
+    let cfg = load_config(args)?;
+    let ds = build_dataset(&cfg)?;
+    let t = cfg.protocol.deadline(ds.n);
+    let params = bound_params(&cfg, &ds);
+    let nc_opt = optimize_block_size(
+        &params,
+        ds.n,
+        t,
+        cfg.protocol.n_o,
+        cfg.protocol.tau_p,
+    )
+    .n_c;
+    let des = DesConfig {
+        record_blocks: false,
+        ..DesConfig::paper(nc_opt, cfg.protocol.n_o, t, cfg.train.seed)
+    };
+    let mut schedules: Vec<Box<dyn BlockSchedule>> = vec![
+        Box::new(FixedSchedule(nc_opt)),
+        Box::new(WarmupSchedule::new(16, 2.0, nc_opt)),
+        Box::new(WarmupSchedule::new(64, 4.0, 4 * nc_opt)),
+    ];
+    println!(
+        "adaptive schedules (n_o={}, ñ_c={nc_opt}):",
+        cfg.protocol.n_o
+    );
+    for sched in schedules.iter_mut() {
+        let mut exec = NativeExecutor::new(
+            RidgeModel::new(ds.d, des.lambda, ds.n),
+            des.alpha,
+        );
+        let run = run_scheduled(
+            &ds,
+            &des,
+            sched.as_mut(),
+            &mut IdealChannel,
+            &mut exec,
+        )?;
+        println!(
+            "  {:<24} final loss {:.6} (delivered {})",
+            sched.name(),
+            run.final_loss,
+            run.samples_delivered
+        );
+    }
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_help() {
+        let args = Args { command: "help".into(), ..Default::default() };
+        assert_eq!(dispatch(&args).unwrap(), 0);
+    }
+
+    #[test]
+    fn dispatch_unknown_is_code_2() {
+        let args = Args { command: "bogus".into(), ..Default::default() };
+        assert_eq!(dispatch(&args).unwrap(), 2);
+    }
+
+    #[test]
+    fn optimize_on_small_config() {
+        let args = Args {
+            command: "optimize".into(),
+            overrides: vec![
+                ("data.n_raw".into(), "600".into()),
+                ("protocol.n_o".into(), "10".into()),
+            ],
+            out_dir: std::env::temp_dir()
+                .join("edgepipe_cli_test")
+                .to_string_lossy()
+                .into_owned(),
+            backend: "native".into(),
+            ..Default::default()
+        };
+        assert_eq!(dispatch(&args).unwrap(), 0);
+    }
+}

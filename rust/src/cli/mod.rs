@@ -1,0 +1,8 @@
+//! Command-line interface: argument parsing (no clap offline) and the
+//! subcommand implementations behind the `edgepipe` binary.
+
+pub mod args;
+pub mod commands;
+
+pub use args::{Args, HELP};
+pub use commands::dispatch;

@@ -1,0 +1,12 @@
+//! Configuration system: a TOML-subset parser (offline image has no serde)
+//! plus the typed configs every subsystem consumes and `key=value` CLI
+//! overrides, mirroring how MaxText/Megatron launchers merge config files
+//! with command-line flags.
+
+pub mod parser;
+pub mod types;
+
+pub use parser::{parse_toml, TomlValue};
+pub use types::{
+    DataConfig, ExperimentConfig, ProtocolConfig, SweepConfig, TrainConfig,
+};

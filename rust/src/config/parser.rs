@@ -1,0 +1,270 @@
+//! TOML-subset parser: sections, dotted sections, scalars, and flat
+//! arrays — the subset our config files use.
+//!
+//! ```toml
+//! [protocol]
+//! n_o = 10.0          # float
+//! n_c = 437           # integer
+//! pipelined = true    # bool
+//! label = "fig3"      # string
+//! n_os = [1, 10, 100] # array of scalars
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A parsed TOML scalar or array.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i as f64),
+            TomlValue::Float(f) => Ok(*f),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as usize),
+            _ => bail!("expected non-negative integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as u64),
+            _ => bail!("expected non-negative integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64_arr(&self) -> Result<Vec<f64>> {
+        match self {
+            TomlValue::Arr(items) => {
+                items.iter().map(|v| v.as_f64()).collect()
+            }
+            _ => bail!("expected array, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize_arr(&self) -> Result<Vec<usize>> {
+        match self {
+            TomlValue::Arr(items) => {
+                items.iter().map(|v| v.as_usize()).collect()
+            }
+            _ => bail!("expected array, got {self:?}"),
+        }
+    }
+}
+
+/// Parsed document: `section.key -> value` (root keys have no prefix).
+pub type TomlDoc = BTreeMap<String, TomlValue>;
+
+/// Parse a TOML-subset document into a flat `section.key` map.
+pub fn parse_toml(text: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("line {}: unclosed '['", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                bail!("line {}: empty section name", lineno + 1);
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (key, value) = line.split_once('=').ok_or_else(|| {
+            anyhow!("line {}: expected 'key = value'", lineno + 1)
+        })?;
+        let key = key.trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        let value = parse_value(value.trim())
+            .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+        doc.insert(full_key, value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside a string starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse one scalar or array value.
+pub fn parse_value(text: &str) -> Result<TomlValue> {
+    let text = text.trim();
+    if text.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unclosed array"))?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(&part)?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    if let Some(inner) = text.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unclosed string"))?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if !text.contains(['.', 'e', 'E']) {
+        if let Ok(i) = text.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = text.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value '{text}'")
+}
+
+fn split_top_level(text: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in text.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                parts.push(cur.trim().to_string());
+                cur.clear();
+            }
+            c => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur.trim().to_string());
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sections_and_scalars() {
+        let doc = parse_toml(
+            "top = 1\n[protocol]\nn_o = 10.5\nn_c = 437 # comment\n\
+             pipelined = true\nlabel = \"fig3\"\n",
+        )
+        .unwrap();
+        assert_eq!(doc["top"], TomlValue::Int(1));
+        assert_eq!(doc["protocol.n_o"], TomlValue::Float(10.5));
+        assert_eq!(doc["protocol.n_c"], TomlValue::Int(437));
+        assert_eq!(doc["protocol.pipelined"], TomlValue::Bool(true));
+        assert_eq!(doc["protocol.label"], TomlValue::Str("fig3".into()));
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = parse_toml("xs = [1, 2, 3]\nys = [1.5, \"a\", true]\n")
+            .unwrap();
+        assert_eq!(doc["xs"].as_usize_arr().unwrap(), vec![1, 2, 3]);
+        let ys = match &doc["ys"] {
+            TomlValue::Arr(v) => v,
+            _ => panic!(),
+        };
+        assert_eq!(ys[1], TomlValue::Str("a".into()));
+    }
+
+    #[test]
+    fn dotted_sections() {
+        let doc = parse_toml("[a.b]\nc = 2\n").unwrap();
+        assert_eq!(doc["a.b.c"], TomlValue::Int(2));
+    }
+
+    #[test]
+    fn comments_and_underscores() {
+        let doc =
+            parse_toml("# full line\nn = 18_576\ns = \"has # inside\"\n")
+                .unwrap();
+        assert_eq!(doc["n"], TomlValue::Int(18576));
+        assert_eq!(doc["s"], TomlValue::Str("has # inside".into()));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse_toml("[unclosed\n").is_err());
+        assert!(parse_toml("novalue\n").is_err());
+        assert!(parse_toml("x = [1, 2\n").is_err());
+        assert!(parse_toml("x = @@\n").is_err());
+    }
+
+    #[test]
+    fn scientific_notation() {
+        let doc = parse_toml("alpha = 1e-4\nbeta = 2.5E3\n").unwrap();
+        assert_eq!(doc["alpha"].as_f64().unwrap(), 1e-4);
+        assert_eq!(doc["beta"].as_f64().unwrap(), 2500.0);
+    }
+}

@@ -1,0 +1,296 @@
+//! Typed experiment configuration, with file loading and `key=value`
+//! overrides (so CLI flags always win over the config file).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::parser::{parse_toml, parse_value, TomlDoc};
+
+/// Protocol parameters (paper Sec. 2). Times are normalized units.
+#[derive(Clone, Debug)]
+pub struct ProtocolConfig {
+    /// Block payload size n_c (samples). 0 = "optimize via the bound".
+    pub n_c: usize,
+    /// Per-packet overhead n_o.
+    pub n_o: f64,
+    /// Time per SGD update τ_p.
+    pub tau_p: f64,
+    /// Deadline T as a multiple of N (paper: 1.5). Used unless t_abs set.
+    pub t_factor: f64,
+    /// Absolute deadline (overrides t_factor when > 0).
+    pub t_abs: f64,
+}
+
+impl Default for ProtocolConfig {
+    fn default() -> Self {
+        ProtocolConfig {
+            n_c: 0,
+            n_o: 10.0,
+            tau_p: 1.0,
+            t_factor: 1.5,
+            t_abs: 0.0,
+        }
+    }
+}
+
+impl ProtocolConfig {
+    /// The deadline T for a dataset of `n` samples.
+    pub fn deadline(&self, n: usize) -> f64 {
+        if self.t_abs > 0.0 {
+            self.t_abs
+        } else {
+            self.t_factor * n as f64
+        }
+    }
+}
+
+/// Training parameters (paper Sec. 5).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Learning rate α.
+    pub alpha: f64,
+    /// Ridge regularization λ.
+    pub lambda: f64,
+    /// Std of the Gaussian parameter init (paper: 1.0).
+    pub init_std: f64,
+    /// Master seed for the run.
+    pub seed: u64,
+    /// Record the loss every `loss_stride` normalized time units
+    /// (0 = record at block boundaries only).
+    pub loss_stride: f64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            alpha: 1e-4,
+            lambda: 0.05,
+            init_std: 1.0,
+            seed: 1,
+            loss_stride: 0.0,
+        }
+    }
+}
+
+/// Dataset parameters (paper Sec. 5; defaults reproduce its setup).
+#[derive(Clone, Debug)]
+pub struct DataConfig {
+    /// Raw dataset size before the train split.
+    pub n_raw: usize,
+    /// Feature dimension.
+    pub d: usize,
+    /// Train fraction (paper: 0.9 -> N = 18 576).
+    pub train_frac: f64,
+    /// Target Hessian max eigenvalue (paper L).
+    pub hess_max: f64,
+    /// Target Hessian min eigenvalue (paper c).
+    pub hess_min: f64,
+    /// Label noise std.
+    pub noise_std: f64,
+    /// Dataset seed (independent of the run seed).
+    pub seed: u64,
+    /// Optional CSV path: when set, load instead of synthesizing.
+    pub csv_path: String,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        DataConfig {
+            n_raw: 20640,
+            d: 8,
+            train_frac: 0.9,
+            hess_max: 1.908,
+            hess_min: 0.061,
+            noise_std: 0.5,
+            seed: 1906_04488,
+            csv_path: String::new(),
+        }
+    }
+}
+
+/// Sweep parameters for figure/bench producers.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    /// Overheads to sweep (Fig. 3 curves).
+    pub n_os: Vec<f64>,
+    /// Block sizes to sweep (empty = log grid).
+    pub n_cs: Vec<usize>,
+    /// Monte-Carlo repetitions per point.
+    pub seeds: usize,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            n_os: vec![1.0, 10.0, 100.0, 1000.0],
+            n_cs: Vec::new(),
+            seeds: 10,
+            threads: 0,
+        }
+    }
+}
+
+/// The full experiment configuration.
+#[derive(Clone, Debug, Default)]
+pub struct ExperimentConfig {
+    pub protocol: ProtocolConfig,
+    pub train: TrainConfig,
+    pub data: DataConfig,
+    pub sweep: SweepConfig,
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML file, then apply `key=value` overrides.
+    pub fn load(
+        path: Option<&Path>,
+        overrides: &[(String, String)],
+    ) -> Result<ExperimentConfig> {
+        let mut doc = match path {
+            Some(p) => {
+                let text = std::fs::read_to_string(p)
+                    .with_context(|| format!("reading {}", p.display()))?;
+                parse_toml(&text)?
+            }
+            None => TomlDoc::new(),
+        };
+        for (k, v) in overrides {
+            doc.insert(k.clone(), parse_value(v)?);
+        }
+        Self::from_doc(&doc)
+    }
+
+    /// Build from a parsed document; unknown keys are rejected (typo guard).
+    pub fn from_doc(doc: &TomlDoc) -> Result<ExperimentConfig> {
+        let mut cfg = ExperimentConfig::default();
+        for (key, value) in doc {
+            match key.as_str() {
+                "protocol.n_c" => cfg.protocol.n_c = value.as_usize()?,
+                "protocol.n_o" => cfg.protocol.n_o = value.as_f64()?,
+                "protocol.tau_p" => cfg.protocol.tau_p = value.as_f64()?,
+                "protocol.t_factor" => {
+                    cfg.protocol.t_factor = value.as_f64()?
+                }
+                "protocol.t_abs" => cfg.protocol.t_abs = value.as_f64()?,
+                "train.alpha" => cfg.train.alpha = value.as_f64()?,
+                "train.lambda" => cfg.train.lambda = value.as_f64()?,
+                "train.init_std" => cfg.train.init_std = value.as_f64()?,
+                "train.seed" => cfg.train.seed = value.as_u64()?,
+                "train.loss_stride" => {
+                    cfg.train.loss_stride = value.as_f64()?
+                }
+                "data.n_raw" => cfg.data.n_raw = value.as_usize()?,
+                "data.d" => cfg.data.d = value.as_usize()?,
+                "data.train_frac" => cfg.data.train_frac = value.as_f64()?,
+                "data.hess_max" => cfg.data.hess_max = value.as_f64()?,
+                "data.hess_min" => cfg.data.hess_min = value.as_f64()?,
+                "data.noise_std" => cfg.data.noise_std = value.as_f64()?,
+                "data.seed" => cfg.data.seed = value.as_u64()?,
+                "data.csv_path" => {
+                    cfg.data.csv_path = value.as_str()?.to_string()
+                }
+                "sweep.n_os" => cfg.sweep.n_os = value.as_f64_arr()?,
+                "sweep.n_cs" => cfg.sweep.n_cs = value.as_usize_arr()?,
+                "sweep.seeds" => cfg.sweep.seeds = value.as_usize()?,
+                "sweep.threads" => cfg.sweep.threads = value.as_usize()?,
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check the configuration.
+    pub fn validate(&self) -> Result<()> {
+        if self.protocol.tau_p <= 0.0 {
+            bail!("protocol.tau_p must be positive");
+        }
+        if self.protocol.n_o < 0.0 {
+            bail!("protocol.n_o must be non-negative");
+        }
+        if self.protocol.t_factor <= 0.0 && self.protocol.t_abs <= 0.0 {
+            bail!("need a positive deadline (t_factor or t_abs)");
+        }
+        if self.train.alpha <= 0.0 {
+            bail!("train.alpha must be positive");
+        }
+        if !(0.0..=1.0).contains(&self.data.train_frac) {
+            bail!("data.train_frac must be in [0, 1]");
+        }
+        if self.data.n_raw == 0 || self.data.d == 0 {
+            bail!("dataset must be non-empty");
+        }
+        if self.data.hess_min <= 0.0 || self.data.hess_max <= self.data.hess_min
+        {
+            bail!("need 0 < hess_min < hess_max");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_reproduce_paper_setup() {
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.data.n_raw, 20640);
+        assert_eq!(cfg.data.d, 8);
+        assert_eq!(cfg.train.alpha, 1e-4);
+        assert_eq!(cfg.train.lambda, 0.05);
+        let n = (cfg.data.n_raw as f64 * cfg.data.train_frac) as usize;
+        assert_eq!(n, 18576);
+        assert_eq!(cfg.protocol.deadline(n), 1.5 * 18576.0);
+    }
+
+    #[test]
+    fn loads_doc_with_overrides() {
+        let doc = parse_toml(
+            "[protocol]\nn_c = 437\nn_o = 100.0\n[train]\nseed = 9\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.protocol.n_c, 437);
+        assert_eq!(cfg.protocol.n_o, 100.0);
+        assert_eq!(cfg.train.seed, 9);
+        // untouched defaults survive
+        assert_eq!(cfg.train.lambda, 0.05);
+    }
+
+    #[test]
+    fn unknown_key_is_rejected() {
+        let doc = parse_toml("[protocol]\nn_x = 1\n").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let doc = parse_toml("[train]\nalpha = -1.0\n").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+        let doc = parse_toml("[protocol]\ntau_p = 0.0\n").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn override_wins() {
+        let cfg = ExperimentConfig::load(
+            None,
+            &[("protocol.n_o".into(), "123.5".into())],
+        )
+        .unwrap();
+        assert_eq!(cfg.protocol.n_o, 123.5);
+    }
+
+    #[test]
+    fn t_abs_overrides_factor() {
+        let cfg = ExperimentConfig::load(
+            None,
+            &[("protocol.t_abs".into(), "5000".into())],
+        )
+        .unwrap();
+        assert_eq!(cfg.protocol.deadline(18576), 5000.0);
+    }
+}

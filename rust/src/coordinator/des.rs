@@ -1,0 +1,515 @@
+//! Discrete-event simulation of the pipelined protocol (paper Fig. 2) —
+//! the coordinator's fast path, and the reference semantics the threaded
+//! pipeline must match bit-for-bit.
+//!
+//! Time is normalized (1 unit = one sample's transmission). The device
+//! serializes blocks on the channel; the edge trainer consumes compute
+//! time in `τ_p` quanta whenever its store is non-empty. An update that
+//! would finish after a block's arrival instant belongs to the next
+//! window (the paper's `n_p = (n_c+n_o)/τ_p` per-block update count falls
+//! out exactly for integer block lengths).
+
+use anyhow::Result;
+
+use crate::channel::Channel;
+use crate::data::Dataset;
+use crate::edge::SampleStore;
+use crate::protocol::TimelineCase;
+use crate::util::rng::Pcg32;
+
+use super::events::{EventKind, EventLog};
+use super::executor::BlockExecutor;
+use super::run::{BlockSnapshot, RunResult};
+
+/// Full configuration of one coordinator run.
+#[derive(Clone, Debug)]
+pub struct DesConfig {
+    /// Block payload size n_c (samples per packet).
+    pub n_c: usize,
+    /// Per-packet overhead n_o.
+    pub n_o: f64,
+    /// Time per SGD update τ_p.
+    pub tau_p: f64,
+    /// Deadline T.
+    pub t_budget: f64,
+    /// Learning rate α.
+    pub alpha: f64,
+    /// Ridge regularization λ (coefficient λ/N applied internally).
+    pub lambda: f64,
+    /// Gaussian init std for w (paper: 1.0).
+    pub init_std: f64,
+    /// Master seed; all internal streams derive from it.
+    pub seed: u64,
+    /// Record the training loss every `loss_every` updates
+    /// (0 = no intra-block records).
+    pub loss_every: usize,
+    /// Record the training loss at every block arrival (Fig. 4 curves).
+    /// Disable for wide sweeps where only the final loss matters — the
+    /// full-dataset evaluation at thousands of block boundaries would
+    /// otherwise dominate the sweep cost.
+    pub record_blocks: bool,
+    /// Edge store capacity (None = unbounded, the paper's protocol).
+    pub store_capacity: Option<usize>,
+    /// Collect per-block snapshots for the Theorem-1 evaluation.
+    pub collect_snapshots: bool,
+    /// Max events to record (0 disables the event log).
+    pub event_capacity: usize,
+}
+
+impl DesConfig {
+    /// Paper-experiment defaults for a given block size and overhead.
+    pub fn paper(n_c: usize, n_o: f64, t_budget: f64, seed: u64) -> Self {
+        DesConfig {
+            n_c,
+            n_o,
+            tau_p: 1.0,
+            t_budget,
+            alpha: 1e-4,
+            lambda: 0.05,
+            init_std: 1.0,
+            seed,
+            loss_every: 0,
+            record_blocks: true,
+            store_capacity: None,
+            collect_snapshots: false,
+            event_capacity: 0,
+        }
+    }
+}
+
+/// RNG stream ids (fixed so DES and threaded pipeline agree).
+pub(crate) const STREAM_INIT: u64 = 1;
+pub(crate) const STREAM_DEVICE: u64 = 2;
+pub(crate) const STREAM_EDGE: u64 = 3;
+pub(crate) const STREAM_CHANNEL: u64 = 4;
+pub(crate) const STREAM_EVICT: u64 = 5;
+
+/// The edge node's training half: owns `w`, the sample store, the compute
+/// clock, loss recording and snapshot collection. Shared verbatim by the
+/// DES and the threaded pipeline so their semantics cannot diverge.
+pub(crate) struct EdgeTrainer<'a> {
+    ds: &'a Dataset,
+    pub w: Vec<f64>,
+    pub store: SampleStore,
+    /// Next update would start at this time.
+    cursor: f64,
+    tau_p: f64,
+    t_budget: f64,
+    reg: f64,
+    rng: Pcg32,
+    evict_rng: Pcg32,
+    idx_buf: Vec<u32>,
+    pub updates: usize,
+    pub curve: Vec<(f64, f64)>,
+    loss_every: usize,
+    since_record: usize,
+    pub snapshots: Vec<BlockSnapshot>,
+    collect_snapshots: bool,
+    record_blocks: bool,
+}
+
+impl<'a> EdgeTrainer<'a> {
+    pub fn new(ds: &'a Dataset, cfg: &DesConfig) -> EdgeTrainer<'a> {
+        let mut init_rng = Pcg32::new(cfg.seed, STREAM_INIT);
+        let w: Vec<f64> = (0..ds.d)
+            .map(|_| cfg.init_std * init_rng.next_gaussian())
+            .collect();
+        let store = match cfg.store_capacity {
+            Some(cap) => SampleStore::with_capacity(ds.d, cap),
+            None => SampleStore::new(ds.d),
+        };
+        let reg = cfg.lambda / ds.n as f64;
+        let mut trainer = EdgeTrainer {
+            ds,
+            w,
+            store,
+            cursor: 0.0,
+            tau_p: cfg.tau_p,
+            t_budget: cfg.t_budget,
+            reg,
+            rng: Pcg32::new(cfg.seed, STREAM_EDGE),
+            evict_rng: Pcg32::new(cfg.seed, STREAM_EVICT),
+            idx_buf: Vec::with_capacity(4096),
+            updates: 0,
+            curve: Vec::new(),
+            loss_every: cfg.loss_every,
+            since_record: 0,
+            snapshots: Vec::new(),
+            collect_snapshots: cfg.collect_snapshots,
+            record_blocks: cfg.record_blocks,
+        };
+        trainer.record_loss(0.0);
+        trainer
+    }
+
+    /// Training loss over the FULL dataset (paper Fig. 4's y-axis).
+    pub fn full_loss(&self) -> f64 {
+        self.ds.ridge_loss(&self.w, self.reg)
+    }
+
+    fn record_loss(&mut self, t: f64) {
+        let loss = self.full_loss();
+        self.curve.push((t, loss));
+        self.since_record = 0;
+    }
+
+    /// Advance the compute clock to `until`, running SGD updates while
+    /// the store is non-empty (paper eq. (2)).
+    pub fn advance_to(
+        &mut self,
+        until: f64,
+        exec: &mut dyn BlockExecutor,
+        events: &mut EventLog,
+    ) -> Result<()> {
+        let until = until.min(self.t_budget);
+        if self.store.is_empty() {
+            self.cursor = self.cursor.max(until);
+            return Ok(());
+        }
+        let n = self.store.len() as u64;
+        // updates that *finish* by `until` (tiny epsilon absorbs fp drift
+        // in repeated cursor += tau_p)
+        let eps = 1e-9 * self.tau_p;
+        let mut ran = 0usize;
+        while self.cursor + self.tau_p <= until + eps {
+            self.idx_buf.push(self.rng.gen_range(n) as u32);
+            self.cursor += self.tau_p;
+            self.updates += 1;
+            self.since_record += 1;
+            ran += 1;
+            let flush_for_record = self.loss_every > 0
+                && self.since_record >= self.loss_every;
+            if flush_for_record || self.idx_buf.len() >= 4096 {
+                self.flush(exec)?;
+                if flush_for_record {
+                    self.record_loss(self.cursor);
+                }
+            }
+        }
+        self.flush(exec)?;
+        if ran > 0 {
+            events.push(self.cursor, EventKind::UpdatesRun { count: ran });
+        }
+        self.cursor = self.cursor.max(until);
+        Ok(())
+    }
+
+    /// Let time pass WITHOUT computing (the sequential baseline's idle
+    /// phase — the edge does nothing while the channel is busy).
+    pub fn skip_to(&mut self, until: f64) {
+        self.cursor = self.cursor.max(until.min(self.t_budget));
+    }
+
+    fn flush(&mut self, exec: &mut dyn BlockExecutor) -> Result<()> {
+        if self.idx_buf.is_empty() {
+            return Ok(());
+        }
+        exec.run_block(&mut self.w, self.store.view(), &self.idx_buf)?;
+        self.idx_buf.clear();
+        Ok(())
+    }
+
+    /// Ingest a delivered block at time `t` (records the boundary loss
+    /// and, when enabled, the Theorem-1 snapshot of (w, X_b)).
+    pub fn ingest_block(&mut self, block: usize, t: f64, x: &[f32], y: &[f32]) {
+        if self.collect_snapshots {
+            self.snapshots.push(BlockSnapshot {
+                block,
+                arrived_at: t,
+                w_end: self.w.clone(),
+                x: x.to_vec(),
+                y: y.to_vec(),
+            });
+        }
+        self.store.ingest(x, y, &mut self.evict_rng);
+        if self.record_blocks {
+            self.record_loss(t);
+        }
+    }
+
+    /// Finish the run: flush pending updates and record the final loss.
+    pub fn finish(
+        &mut self,
+        exec: &mut dyn BlockExecutor,
+    ) -> Result<()> {
+        self.flush(exec)?;
+        self.record_loss(self.t_budget);
+        Ok(())
+    }
+}
+
+/// The device half: selects untransmitted samples uniformly without
+/// replacement (paper Sec. 2) and frames them into blocks. Public so the
+/// perf benches can measure it in isolation.
+pub struct DeviceTransmitter<'a> {
+    ds: &'a Dataset,
+    remaining: Vec<u32>,
+    rng: Pcg32,
+    n_c: usize,
+}
+
+impl<'a> DeviceTransmitter<'a> {
+    pub fn new(ds: &'a Dataset, n_c: usize, seed: u64) -> Self {
+        DeviceTransmitter {
+            ds,
+            remaining: (0..ds.n as u32).collect(),
+            rng: Pcg32::new(seed, STREAM_DEVICE),
+            n_c: n_c.max(1).min(ds.n),
+        }
+    }
+
+    pub fn exhausted(&self) -> bool {
+        self.remaining.is_empty()
+    }
+
+    /// Draw the next block: uniform without replacement from the
+    /// untransmitted set, gathered into contiguous payload buffers.
+    /// Returns None when the dataset is fully transmitted.
+    pub fn next_block(&mut self) -> Option<(Vec<u32>, Vec<f32>, Vec<f32>)> {
+        if self.remaining.is_empty() {
+            return None;
+        }
+        let k = self.n_c.min(self.remaining.len());
+        let len = self.remaining.len();
+        // partial Fisher–Yates into the tail: O(k) per block
+        for i in 0..k {
+            let j = self.rng.gen_range((len - i) as u64) as usize;
+            self.remaining.swap(j, len - 1 - i);
+        }
+        let chosen: Vec<u32> = self.remaining.split_off(len - k);
+        let d = self.ds.d;
+        let mut x = Vec::with_capacity(k * d);
+        let mut y = Vec::with_capacity(k);
+        for &i in &chosen {
+            x.extend_from_slice(self.ds.row(i as usize));
+            y.push(self.ds.label(i as usize));
+        }
+        Some((chosen, x, y))
+    }
+}
+
+/// Run the protocol as a discrete-event simulation.
+pub fn run_des(
+    ds: &Dataset,
+    cfg: &DesConfig,
+    channel: &mut dyn Channel,
+    exec: &mut dyn BlockExecutor,
+) -> Result<RunResult> {
+    assert!(cfg.n_c >= 1, "n_c must be >= 1");
+    let mut events = EventLog::with_capacity(cfg.event_capacity);
+    let mut trainer = EdgeTrainer::new(ds, cfg);
+    let mut device = DeviceTransmitter::new(ds, cfg.n_c, cfg.seed);
+    let mut chan_rng = Pcg32::new(cfg.seed, STREAM_CHANNEL);
+
+    let mut t_send = 0.0f64;
+    let mut block = 1usize;
+    let mut blocks_sent = 0usize;
+    let mut blocks_delivered = 0usize;
+    let mut samples_delivered = 0usize;
+    let mut retransmissions = 0u64;
+
+    while t_send < cfg.t_budget && !device.exhausted() {
+        let (_, x, y) = device.next_block().expect("non-exhausted device");
+        let payload = y.len();
+        let duration = payload as f64 + cfg.n_o;
+        events.push(t_send, EventKind::BlockSent { block, payload });
+        blocks_sent += 1;
+        let delivery = channel.transmit(t_send, duration, &mut chan_rng);
+        retransmissions += (delivery.attempts - 1) as u64;
+        let arrival = delivery.arrival;
+        if arrival < cfg.t_budget {
+            // train through the block's transmission window, then ingest
+            trainer.advance_to(arrival, exec, &mut events)?;
+            trainer.ingest_block(block, arrival, &x, &y);
+            blocks_delivered += 1;
+            samples_delivered += payload;
+            events.push(
+                arrival,
+                EventKind::BlockDelivered {
+                    block,
+                    payload,
+                    attempts: delivery.attempts,
+                },
+            );
+        } else {
+            trainer.advance_to(cfg.t_budget, exec, &mut events)?;
+            events.push(
+                cfg.t_budget,
+                EventKind::BlockMissedDeadline { block },
+            );
+        }
+        t_send = arrival;
+        block += 1;
+    }
+    // tail: no more transmissions; compute until the deadline (Fig. 2(b))
+    trainer.advance_to(cfg.t_budget, exec, &mut events)?;
+    trainer.finish(exec)?;
+
+    let case = if samples_delivered >= ds.n {
+        TimelineCase::Full
+    } else {
+        TimelineCase::Partial
+    };
+    events.push(
+        cfg.t_budget,
+        EventKind::Finished {
+            updates: trainer.updates,
+            delivered_samples: samples_delivered,
+        },
+    );
+
+    let final_loss = trainer.full_loss();
+    Ok(RunResult {
+        curve: trainer.curve,
+        final_loss,
+        final_w: trainer.w,
+        updates: trainer.updates,
+        blocks_sent,
+        blocks_delivered,
+        samples_delivered,
+        retransmissions,
+        case,
+        snapshots: trainer.snapshots,
+        events: events.into_events(),
+        backend: exec.name(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::IdealChannel;
+    use crate::coordinator::executor::NativeExecutor;
+    use crate::data::synth::{synth_calhousing, SynthSpec};
+    use crate::model::RidgeModel;
+    use crate::protocol::Timeline;
+
+    fn small_ds() -> Dataset {
+        synth_calhousing(&SynthSpec { n: 1000, ..Default::default() })
+    }
+
+    fn native_exec(ds: &Dataset, alpha: f64, lambda: f64) -> NativeExecutor {
+        NativeExecutor::new(RidgeModel::new(ds.d, lambda, ds.n), alpha)
+    }
+
+    #[test]
+    fn update_count_matches_timeline_math() {
+        let ds = small_ds();
+        let cfg = DesConfig {
+            alpha: 1e-3,
+            ..DesConfig::paper(100, 10.0, 2000.0, 7)
+        };
+        let mut exec = native_exec(&ds, cfg.alpha, cfg.lambda);
+        let res =
+            run_des(&ds, &cfg, &mut IdealChannel, &mut exec).unwrap();
+        let tl = Timeline::resolve(ds.n, cfg.t_budget, cfg.n_c, cfg.n_o, cfg.tau_p);
+        assert_eq!(res.updates, tl.total_updates(), "DES vs closed form");
+        assert_eq!(res.samples_delivered, ds.n);
+        assert_eq!(res.case, TimelineCase::Full);
+        assert_eq!(res.blocks_sent, tl.b_d);
+    }
+
+    #[test]
+    fn partial_case_delivers_fraction() {
+        let ds = small_ds();
+        // block = 110, B_d = 10 -> full delivery at 1100 > T = 500
+        let cfg = DesConfig::paper(100, 10.0, 500.0, 3);
+        let mut exec = native_exec(&ds, cfg.alpha, cfg.lambda);
+        let res =
+            run_des(&ds, &cfg, &mut IdealChannel, &mut exec).unwrap();
+        assert_eq!(res.case, TimelineCase::Partial);
+        // floor(500/110) = 4 blocks fully delivered
+        assert_eq!(res.blocks_delivered, 4);
+        assert_eq!(res.samples_delivered, 400);
+        // a 5th block was sent but missed the deadline
+        assert_eq!(res.blocks_sent, 5);
+    }
+
+    #[test]
+    fn loss_decreases_substantially() {
+        let ds = small_ds();
+        let cfg = DesConfig {
+            alpha: 2e-3,
+            ..DesConfig::paper(50, 5.0, 3000.0, 11)
+        };
+        let mut exec = native_exec(&ds, cfg.alpha, cfg.lambda);
+        let res =
+            run_des(&ds, &cfg, &mut IdealChannel, &mut exec).unwrap();
+        let first = res.curve.first().unwrap().1;
+        assert!(
+            res.final_loss < 0.5 * first,
+            "loss {first} -> {}",
+            res.final_loss
+        );
+        // curve times are monotone
+        for pair in res.curve.windows(2) {
+            assert!(pair[1].0 >= pair[0].0);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let ds = small_ds();
+        let cfg = DesConfig::paper(64, 8.0, 1500.0, 21);
+        let mut e1 = native_exec(&ds, cfg.alpha, cfg.lambda);
+        let mut e2 = native_exec(&ds, cfg.alpha, cfg.lambda);
+        let r1 = run_des(&ds, &cfg, &mut IdealChannel, &mut e1).unwrap();
+        let r2 = run_des(&ds, &cfg, &mut IdealChannel, &mut e2).unwrap();
+        assert_eq!(r1.final_w, r2.final_w);
+        assert_eq!(r1.curve, r2.curve);
+        let cfg3 = DesConfig { seed: 22, ..cfg };
+        let mut e3 = native_exec(&ds, cfg3.alpha, cfg3.lambda);
+        let r3 = run_des(&ds, &cfg3, &mut IdealChannel, &mut e3).unwrap();
+        assert_ne!(r1.final_w, r3.final_w);
+    }
+
+    #[test]
+    fn no_sample_transmitted_twice() {
+        let ds = small_ds();
+        let mut device = DeviceTransmitter::new(&ds, 37, 5);
+        let mut seen = vec![false; ds.n];
+        while let Some((idx, _, _)) = device.next_block() {
+            for i in idx {
+                assert!(!seen[i as usize], "sample {i} sent twice");
+                seen[i as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "all samples eventually sent");
+    }
+
+    #[test]
+    fn snapshots_collected_when_enabled() {
+        let ds = small_ds();
+        let cfg = DesConfig {
+            collect_snapshots: true,
+            ..DesConfig::paper(200, 10.0, 3000.0, 2)
+        };
+        let mut exec = native_exec(&ds, cfg.alpha, cfg.lambda);
+        let res =
+            run_des(&ds, &cfg, &mut IdealChannel, &mut exec).unwrap();
+        assert_eq!(res.snapshots.len(), res.blocks_delivered);
+        for snap in &res.snapshots {
+            assert_eq!(snap.w_end.len(), ds.d);
+            assert_eq!(snap.x.len(), snap.y.len() * ds.d);
+        }
+    }
+
+    #[test]
+    fn loss_every_records_dense_curve() {
+        let ds = small_ds();
+        let cfg = DesConfig {
+            loss_every: 100,
+            ..DesConfig::paper(100, 10.0, 2000.0, 8)
+        };
+        let mut exec = native_exec(&ds, cfg.alpha, cfg.lambda);
+        let res =
+            run_des(&ds, &cfg, &mut IdealChannel, &mut exec).unwrap();
+        // ~ updates/100 interior points plus block boundaries
+        assert!(
+            res.curve.len() > res.updates / 100,
+            "curve has {} points for {} updates",
+            res.curve.len(),
+            res.updates
+        );
+    }
+}

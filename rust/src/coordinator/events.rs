@@ -1,0 +1,81 @@
+//! Event log for coordinator runs (debugging, tests, timeline plots).
+
+/// One timestamped protocol event (times in normalized units).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event {
+    pub t: f64,
+    pub kind: EventKind,
+}
+
+/// Protocol event kinds.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// Device started transmitting block `block` with `payload` samples.
+    BlockSent { block: usize, payload: usize },
+    /// Block `block` fully received by the edge (after `attempts` tries).
+    BlockDelivered { block: usize, payload: usize, attempts: u32 },
+    /// Block arrived after the deadline and was discarded.
+    BlockMissedDeadline { block: usize },
+    /// The edge ran `count` SGD updates ending at time `t`.
+    UpdatesRun { count: usize },
+    /// Run finished (deadline reached or data exhausted + tail done).
+    Finished { updates: usize, delivered_samples: usize },
+}
+
+/// A bounded event recorder (drops beyond `cap` to keep sweeps cheap).
+#[derive(Clone, Debug)]
+pub struct EventLog {
+    events: Vec<Event>,
+    cap: usize,
+    dropped: usize,
+}
+
+impl EventLog {
+    /// Recorder keeping at most `cap` events (0 disables recording).
+    pub fn with_capacity(cap: usize) -> EventLog {
+        EventLog { events: Vec::new(), cap, dropped: 0 }
+    }
+
+    pub fn push(&mut self, t: f64, kind: EventKind) {
+        if self.events.len() < self.cap {
+            self.events.push(Event { t, kind });
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    pub fn dropped(&self) -> usize {
+        self.dropped
+    }
+
+    pub fn into_events(self) -> Vec<Event> {
+        self.events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_is_respected() {
+        let mut log = EventLog::with_capacity(2);
+        for i in 0..5 {
+            log.push(i as f64, EventKind::UpdatesRun { count: i });
+        }
+        assert_eq!(log.events().len(), 2);
+        assert_eq!(log.dropped(), 3);
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let mut log = EventLog::with_capacity(0);
+        log.push(0.0, EventKind::BlockSent { block: 1, payload: 5 });
+        assert!(log.events().is_empty());
+        assert_eq!(log.dropped(), 1);
+    }
+}

@@ -1,0 +1,27 @@
+//! The pipelined communication/computation coordinator — the paper's
+//! system contribution (Sec. 2, Fig. 2).
+//!
+//! Two interchangeable implementations with bit-identical results:
+//!
+//! * [`des`] — a single-threaded discrete-event simulation, the fast path
+//!   used by Monte-Carlo sweeps (millions of updates/s);
+//! * [`pipeline`] — a real two-thread pipeline (device transmitter thread,
+//!   edge trainer thread, mpsc packet channel) exercising the actual
+//!   concurrent system structure.
+//!
+//! Both drive a [`BlockExecutor`](executor::BlockExecutor) — native Rust
+//! SGD or the PJRT executor running the AOT JAX/Pallas artifacts — and
+//! both consume identical RNG streams, so `des == pipeline` exactly
+//! (asserted in `rust/tests/pipeline_parity.rs`).
+
+pub mod des;
+pub mod events;
+pub mod executor;
+pub mod pipeline;
+pub mod run;
+
+pub use des::{run_des, DesConfig, DeviceTransmitter};
+pub use events::{Event, EventKind};
+pub use executor::{BlockExecutor, NativeExecutor};
+pub use pipeline::run_pipelined;
+pub use run::{run_experiment, ExperimentOutput, RunResult};

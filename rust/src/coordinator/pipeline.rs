@@ -1,0 +1,195 @@
+//! The threaded pipelined coordinator: a real device-transmitter thread
+//! feeding an edge-trainer loop over a bounded packet channel.
+//!
+//! This is the systems realization of paper Fig. 2: transmission and
+//! computation genuinely overlap (device thread selects + frames + pushes
+//! packets while the edge thread trains), with backpressure from the
+//! bounded channel. Timing stays in normalized units carried on the
+//! packets, and all RNG streams match [`run_des`](super::des::run_des)
+//! exactly, so the threaded run is bit-identical to the DES — asserted by
+//! `rust/tests/pipeline_parity.rs`.
+
+use std::sync::mpsc;
+
+use anyhow::{anyhow, Result};
+
+use crate::channel::Channel;
+use crate::data::Dataset;
+use crate::protocol::TimelineCase;
+use crate::util::rng::Pcg32;
+
+use super::des::{DesConfig, DeviceTransmitter, EdgeTrainer, STREAM_CHANNEL};
+use super::events::{EventKind, EventLog};
+use super::executor::BlockExecutor;
+use super::run::RunResult;
+
+/// One framed block in flight from device to edge.
+struct PipePacket {
+    block: usize,
+    arrival: f64,
+    attempts: u32,
+    x: Vec<f32>,
+    y: Vec<f32>,
+}
+
+/// Device-side summary returned when the transmitter finishes.
+struct DeviceSummary {
+    blocks_sent: usize,
+    retransmissions: u64,
+}
+
+/// Depth of the device → edge packet queue (bounded: backpressure).
+const PIPE_DEPTH: usize = 4;
+
+/// Run the protocol on the real two-thread pipeline.
+pub fn run_pipelined(
+    ds: &Dataset,
+    cfg: &DesConfig,
+    channel: &mut dyn Channel,
+    exec: &mut dyn BlockExecutor,
+) -> Result<RunResult> {
+    assert!(cfg.n_c >= 1, "n_c must be >= 1");
+    let mut events = EventLog::with_capacity(cfg.event_capacity);
+    let mut trainer = EdgeTrainer::new(ds, cfg);
+
+    let (tx, rx) = mpsc::sync_channel::<PipePacket>(PIPE_DEPTH);
+    let t_budget = cfg.t_budget;
+    let n_c = cfg.n_c;
+    let n_o = cfg.n_o;
+    let seed = cfg.seed;
+
+    let (summary, run) = std::thread::scope(
+        |scope| -> (Result<DeviceSummary>, Result<usize>) {
+            // ---------------- device transmitter thread ----------------
+            let device_handle = scope.spawn(move || -> Result<DeviceSummary> {
+                let mut device = DeviceTransmitter::new(ds, n_c, seed);
+                let mut chan_rng = Pcg32::new(seed, STREAM_CHANNEL);
+                let mut t_send = 0.0f64;
+                let mut block = 1usize;
+                let mut blocks_sent = 0usize;
+                let mut retransmissions = 0u64;
+                while t_send < t_budget && !device.exhausted() {
+                    let (_, x, y) =
+                        device.next_block().expect("device not exhausted");
+                    let duration = y.len() as f64 + n_o;
+                    let delivery =
+                        channel.transmit(t_send, duration, &mut chan_rng);
+                    blocks_sent += 1;
+                    retransmissions += (delivery.attempts - 1) as u64;
+                    tx.send(PipePacket {
+                        block,
+                        arrival: delivery.arrival,
+                        attempts: delivery.attempts,
+                        x,
+                        y,
+                    })
+                    .map_err(|_| anyhow!("edge hung up"))?;
+                    t_send = delivery.arrival;
+                    block += 1;
+                }
+                drop(tx); // FIN: closes the packet stream
+                Ok(DeviceSummary { blocks_sent, retransmissions })
+            });
+
+            // ---------------- edge trainer (this thread) ----------------
+            let edge = (|| -> Result<usize> {
+                let mut delivered = 0usize;
+                while let Ok(pkt) = rx.recv() {
+                    if pkt.arrival < t_budget {
+                        trainer.advance_to(pkt.arrival, exec, &mut events)?;
+                        trainer.ingest_block(
+                            pkt.block,
+                            pkt.arrival,
+                            &pkt.x,
+                            &pkt.y,
+                        );
+                        delivered += 1;
+                        events.push(
+                            pkt.arrival,
+                            EventKind::BlockDelivered {
+                                block: pkt.block,
+                                payload: pkt.y.len(),
+                                attempts: pkt.attempts,
+                            },
+                        );
+                    } else {
+                        trainer.advance_to(t_budget, exec, &mut events)?;
+                        events.push(
+                            t_budget,
+                            EventKind::BlockMissedDeadline { block: pkt.block },
+                        );
+                    }
+                }
+                trainer.advance_to(t_budget, exec, &mut events)?;
+                trainer.finish(exec)?;
+                Ok(delivered)
+            })();
+
+            let summary = device_handle
+                .join()
+                .unwrap_or_else(|_| Err(anyhow!("device thread panicked")));
+            (summary, edge)
+        },
+    );
+    let blocks_delivered = run?;
+    let summary = summary?;
+
+    let samples_delivered = trainer.store.ingested();
+    let case = if samples_delivered >= ds.n {
+        TimelineCase::Full
+    } else {
+        TimelineCase::Partial
+    };
+    events.push(
+        t_budget,
+        EventKind::Finished {
+            updates: trainer.updates,
+            delivered_samples: samples_delivered,
+        },
+    );
+    let final_loss = trainer.full_loss();
+    Ok(RunResult {
+        curve: trainer.curve,
+        final_loss,
+        final_w: trainer.w,
+        updates: trainer.updates,
+        blocks_sent: summary.blocks_sent,
+        blocks_delivered,
+        samples_delivered,
+        retransmissions: summary.retransmissions,
+        case,
+        snapshots: trainer.snapshots,
+        events: events.into_events(),
+        backend: exec.name(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::IdealChannel;
+    use crate::coordinator::des::run_des;
+    use crate::coordinator::executor::NativeExecutor;
+    use crate::data::synth::{synth_calhousing, SynthSpec};
+    use crate::model::RidgeModel;
+
+    #[test]
+    fn pipeline_is_bit_identical_to_des() {
+        let ds = synth_calhousing(&SynthSpec { n: 600, ..Default::default() });
+        let cfg = DesConfig {
+            loss_every: 50,
+            ..DesConfig::paper(64, 8.0, 1200.0, 17)
+        };
+        let mk =
+            || NativeExecutor::new(RidgeModel::new(ds.d, 0.05, ds.n), 1e-4);
+        let des =
+            run_des(&ds, &cfg, &mut IdealChannel, &mut mk()).unwrap();
+        let pipe =
+            run_pipelined(&ds, &cfg, &mut IdealChannel, &mut mk()).unwrap();
+        assert_eq!(des.final_w, pipe.final_w, "trajectory must match");
+        assert_eq!(des.curve, pipe.curve, "loss curve must match");
+        assert_eq!(des.updates, pipe.updates);
+        assert_eq!(des.samples_delivered, pipe.samples_delivered);
+        assert_eq!(des.blocks_sent, pipe.blocks_sent);
+    }
+}

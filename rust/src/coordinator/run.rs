@@ -1,0 +1,208 @@
+//! Run results and the high-level experiment orchestration.
+
+use anyhow::{bail, Result};
+
+use crate::bound::{optimize_block_size, BoundParams};
+use crate::channel::IdealChannel;
+use crate::config::ExperimentConfig;
+use crate::coordinator::des::{run_des, DesConfig};
+use crate::coordinator::executor::NativeExecutor;
+use crate::data::csv::load_csv;
+use crate::data::split::train_split;
+use crate::data::synth::{synth_calhousing, SynthSpec};
+use crate::data::Dataset;
+use crate::model::{ridge_solution, RidgeModel};
+use crate::protocol::TimelineCase;
+
+use super::events::Event;
+
+/// Per-block snapshot for the Theorem-1 evaluation: the iterate at the
+/// block's end and the block's own samples (paper eq. (7)'s `L_b`).
+#[derive(Clone, Debug)]
+pub struct BlockSnapshot {
+    pub block: usize,
+    pub arrived_at: f64,
+    /// w at the end of the block's compute window (w_b^{n_p}).
+    pub w_end: Vec<f64>,
+    /// The block's transmitted covariates (row-major).
+    pub x: Vec<f32>,
+    /// The block's labels.
+    pub y: Vec<f32>,
+}
+
+/// Everything a coordinator run produces.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    /// (time, full-dataset training loss) samples; first point is t=0.
+    pub curve: Vec<(f64, f64)>,
+    /// Training loss at the deadline (paper Fig. 4's endpoint).
+    pub final_loss: f64,
+    /// Final parameters.
+    pub final_w: Vec<f64>,
+    /// SGD updates performed.
+    pub updates: usize,
+    /// Blocks the device started transmitting.
+    pub blocks_sent: usize,
+    /// Blocks fully received before the deadline.
+    pub blocks_delivered: usize,
+    /// Samples available at the edge at the deadline.
+    pub samples_delivered: usize,
+    /// Total channel retransmissions (erasure channel; 0 when ideal).
+    pub retransmissions: u64,
+    /// Whether the full dataset made it (Fig. 2 case).
+    pub case: TimelineCase,
+    /// Theorem-1 snapshots (when requested).
+    pub snapshots: Vec<BlockSnapshot>,
+    /// Event log (when requested).
+    pub events: Vec<Event>,
+    /// Executor backend name.
+    pub backend: &'static str,
+}
+
+impl RunResult {
+    /// Optimality gap of the final iterate given the optimal loss.
+    pub fn final_gap(&self, loss_star: f64) -> f64 {
+        self.final_loss - loss_star
+    }
+}
+
+/// A fully-resolved experiment: dataset + run output + reference values.
+pub struct ExperimentOutput {
+    /// The training set actually used (after split).
+    pub train: Dataset,
+    /// The block size used (resolved from config or the bound optimizer).
+    pub n_c: usize,
+    /// The run itself.
+    pub result: RunResult,
+    /// Exact minimizer w* of the empirical risk.
+    pub w_star: Vec<f64>,
+    /// L(w*) — the optimal training loss.
+    pub loss_star: f64,
+}
+
+/// Build the training set from a [`DataConfig`]-carrying experiment
+/// config: CSV when provided, else the synthetic generator, then the
+/// paper's train split.
+pub fn build_dataset(cfg: &ExperimentConfig) -> Result<Dataset> {
+    let raw = if cfg.data.csv_path.is_empty() {
+        synth_calhousing(&SynthSpec {
+            n: cfg.data.n_raw,
+            d: cfg.data.d,
+            hess_max: cfg.data.hess_max,
+            hess_min: cfg.data.hess_min,
+            noise_std: cfg.data.noise_std,
+            seed: cfg.data.seed,
+        })
+    } else {
+        load_csv(std::path::Path::new(&cfg.data.csv_path))?
+    };
+    let (train, _eval) = train_split(&raw, cfg.data.train_frac, cfg.data.seed);
+    if train.n == 0 {
+        bail!("empty training set after split");
+    }
+    Ok(train)
+}
+
+/// Run one experiment end-to-end on the native backend: build data,
+/// resolve `n_c` (bound optimizer when `protocol.n_c == 0`), run the DES,
+/// and compute the reference `w*`/`L(w*)`.
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentOutput> {
+    let train = build_dataset(cfg)?;
+    let t_budget = cfg.protocol.deadline(train.n);
+
+    let n_c = if cfg.protocol.n_c > 0 {
+        cfg.protocol.n_c.min(train.n)
+    } else {
+        let constants = crate::bound::estimate_constants(
+            &train,
+            cfg.train.lambda,
+            cfg.train.alpha,
+            2000,
+            cfg.train.seed,
+        );
+        let params = BoundParams {
+            alpha: cfg.train.alpha,
+            big_l: constants.big_l,
+            c: constants.c,
+            m: 1.0,
+            m_g: 1.0,
+            d_diam: constants.d_diam,
+        };
+        optimize_block_size(
+            &params,
+            train.n,
+            t_budget,
+            cfg.protocol.n_o,
+            cfg.protocol.tau_p,
+        )
+        .n_c
+    };
+
+    let des_cfg = DesConfig {
+        n_c,
+        n_o: cfg.protocol.n_o,
+        tau_p: cfg.protocol.tau_p,
+        t_budget,
+        alpha: cfg.train.alpha,
+        lambda: cfg.train.lambda,
+        init_std: cfg.train.init_std,
+        seed: cfg.train.seed,
+        loss_every: if cfg.train.loss_stride > 0.0 {
+            (cfg.train.loss_stride / cfg.protocol.tau_p).max(1.0) as usize
+        } else {
+            0
+        },
+        record_blocks: true,
+        store_capacity: None,
+        collect_snapshots: false,
+        event_capacity: 0,
+    };
+    let mut exec = NativeExecutor::new(
+        RidgeModel::new(train.d, cfg.train.lambda, train.n),
+        cfg.train.alpha,
+    );
+    let result = run_des(&train, &des_cfg, &mut IdealChannel, &mut exec)?;
+
+    let w_star = ridge_solution(&train, cfg.train.lambda)?;
+    let loss_star =
+        train.ridge_loss(&w_star, cfg.train.lambda / train.n as f64);
+
+    Ok(ExperimentOutput { train, n_c, result, w_star, loss_star })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.data.n_raw = 1000;
+        cfg.protocol.n_c = 64;
+        cfg.train.alpha = 1e-3;
+        cfg
+    }
+
+    #[test]
+    fn experiment_runs_and_improves_on_init() {
+        let out = run_experiment(&tiny_cfg()).unwrap();
+        assert_eq!(out.n_c, 64);
+        assert!(out.result.final_loss < out.result.curve[0].1);
+        assert!(out.loss_star <= out.result.final_loss + 1e-12);
+        assert!(out.result.final_gap(out.loss_star) >= 0.0);
+    }
+
+    #[test]
+    fn auto_nc_uses_bound_optimizer() {
+        let mut cfg = tiny_cfg();
+        cfg.protocol.n_c = 0; // auto
+        let out = run_experiment(&cfg).unwrap();
+        assert!(out.n_c >= 1 && out.n_c <= out.train.n);
+    }
+
+    #[test]
+    fn split_respects_fraction() {
+        let cfg = tiny_cfg();
+        let ds = build_dataset(&cfg).unwrap();
+        assert_eq!(ds.n, 900);
+    }
+}

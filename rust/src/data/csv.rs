@@ -1,0 +1,112 @@
+//! CSV load/save for datasets (drop-in for the real California Housing).
+//!
+//! Format: one sample per line, `d` covariate columns then the label, with
+//! an optional header line (auto-detected: a first line that fails to
+//! parse as numbers is skipped).
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::dataset::Dataset;
+
+/// Load a dataset from a CSV file; the last column is the label.
+pub fn load_csv(path: &Path) -> Result<Dataset> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let reader = BufReader::new(file);
+    let mut x: Vec<f32> = Vec::new();
+    let mut y: Vec<f32> = Vec::new();
+    let mut d: Option<usize> = None;
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let fields: Result<Vec<f32>, _> =
+            trimmed.split(',').map(|f| f.trim().parse::<f32>()).collect();
+        let fields = match fields {
+            Ok(f) => f,
+            Err(_) if lineno == 0 => continue, // header line
+            Err(e) => bail!("line {}: {e}", lineno + 1),
+        };
+        if fields.len() < 2 {
+            bail!("line {}: need >= 2 columns", lineno + 1);
+        }
+        let cols = fields.len() - 1;
+        match d {
+            None => d = Some(cols),
+            Some(dd) if dd != cols => {
+                bail!("line {}: {cols} covariates, expected {dd}", lineno + 1)
+            }
+            _ => {}
+        }
+        x.extend_from_slice(&fields[..cols]);
+        y.push(fields[cols]);
+    }
+    let d = d.context("empty CSV")?;
+    let n = y.len();
+    Ok(Dataset::new(x, y, n, d))
+}
+
+/// Save a dataset to CSV (covariates then label per row).
+pub fn save_csv(ds: &Dataset, path: &Path) -> Result<()> {
+    let mut file = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    for i in 0..ds.n {
+        let mut line = String::new();
+        for v in ds.row(i) {
+            line.push_str(&format!("{v},"));
+        }
+        line.push_str(&format!("{}\n", ds.y[i]));
+        file.write_all(line.as_bytes())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let ds = Dataset::new(
+            vec![1.5, -2.0, 0.25, 3.0],
+            vec![0.5, -1.0],
+            2,
+            2,
+        );
+        let dir = std::env::temp_dir().join("edgepipe_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.csv");
+        save_csv(&ds, &path).unwrap();
+        let back = load_csv(&path).unwrap();
+        assert_eq!(back.x, ds.x);
+        assert_eq!(back.y, ds.y);
+        assert_eq!((back.n, back.d), (2, 2));
+    }
+
+    #[test]
+    fn header_and_comments_skipped() {
+        let dir = std::env::temp_dir().join("edgepipe_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("header.csv");
+        std::fs::write(&path, "a,b,label\n# comment\n1,2,3\n4,5,6\n").unwrap();
+        let ds = load_csv(&path).unwrap();
+        assert_eq!(ds.n, 2);
+        assert_eq!(ds.d, 2);
+        assert_eq!(ds.y, vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn ragged_rows_rejected() {
+        let dir = std::env::temp_dir().join("edgepipe_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ragged.csv");
+        std::fs::write(&path, "1,2,3\n4,5\n").unwrap();
+        assert!(load_csv(&path).is_err());
+    }
+}

@@ -1,0 +1,130 @@
+//! The in-memory training set `X = {x_1..x_N}` with labels.
+//!
+//! Stored flat row-major (`n × d` f32, matching the AOT artifact layout)
+//! so the device can transmit contiguous rows and the PJRT path can copy
+//! straight into executable buffers.
+
+/// A labelled dataset with flat row-major covariates.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Covariates, row-major, length `n * d`.
+    pub x: Vec<f32>,
+    /// Labels, length `n`.
+    pub y: Vec<f32>,
+    /// Number of samples.
+    pub n: usize,
+    /// Feature dimension.
+    pub d: usize,
+}
+
+impl Dataset {
+    /// Build from parts, validating shapes.
+    pub fn new(x: Vec<f32>, y: Vec<f32>, n: usize, d: usize) -> Dataset {
+        assert_eq!(x.len(), n * d, "covariate length mismatch");
+        assert_eq!(y.len(), n, "label length mismatch");
+        Dataset { x, y, n, d }
+    }
+
+    /// Borrow sample `i`'s covariates.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Label of sample `i`.
+    #[inline]
+    pub fn label(&self, i: usize) -> f32 {
+        self.y[i]
+    }
+
+    /// Copy a subset of rows (by index) into a new dataset.
+    pub fn subset(&self, indices: &[usize]) -> Dataset {
+        let mut x = Vec::with_capacity(indices.len() * self.d);
+        let mut y = Vec::with_capacity(indices.len());
+        for &i in indices {
+            x.extend_from_slice(self.row(i));
+            y.push(self.y[i]);
+        }
+        Dataset::new(x, y, indices.len(), self.d)
+    }
+
+    /// Empirical ridge loss `(1/n) Σ (wᵀx−y)² + reg‖w‖²` in f64
+    /// (reg = λ/N with N the FULL dataset size; pass it explicitly).
+    /// The d == 8 case takes a fixed-size vectorized path.
+    pub fn ridge_loss(&self, w: &[f64], reg: f64) -> f64 {
+        assert_eq!(w.len(), self.d);
+        let w2: f64 = w.iter().map(|v| v * v).sum();
+        let acc = if self.d == 8 {
+            let w8 = <&[f64; 8]>::try_from(w).unwrap();
+            let mut acc = 0.0;
+            for (row, &y) in self.x.chunks_exact(8).zip(&self.y) {
+                let r8 = <&[f32; 8]>::try_from(row).unwrap();
+                let mut dot = 0.0;
+                for j in 0..8 {
+                    dot += w8[j] * r8[j] as f64;
+                }
+                let e = dot - y as f64;
+                acc += e * e;
+            }
+            acc
+        } else {
+            let mut acc = 0.0;
+            for i in 0..self.n {
+                let row = self.row(i);
+                let mut dot = 0.0;
+                for j in 0..self.d {
+                    dot += w[j] * row[j] as f64;
+                }
+                let e = dot - self.y[i] as f64;
+                acc += e * e;
+            }
+            acc
+        };
+        acc / self.n as f64 + reg * w2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::new(
+            vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0],
+            vec![1.0, 2.0, 3.0],
+            3,
+            2,
+        )
+    }
+
+    #[test]
+    fn rows_and_labels() {
+        let ds = tiny();
+        assert_eq!(ds.row(0), &[1.0, 0.0]);
+        assert_eq!(ds.row(2), &[1.0, 1.0]);
+        assert_eq!(ds.label(1), 2.0);
+    }
+
+    #[test]
+    fn subset_copies_rows() {
+        let ds = tiny();
+        let sub = ds.subset(&[2, 0]);
+        assert_eq!(sub.n, 2);
+        assert_eq!(sub.row(0), &[1.0, 1.0]);
+        assert_eq!(sub.y, vec![3.0, 1.0]);
+    }
+
+    #[test]
+    fn ridge_loss_known_value() {
+        let ds = tiny();
+        // w = [1, 1]: errors = (1-1), (1-2), (2-3) -> 0,1,1; mean = 2/3
+        let loss = ds.ridge_loss(&[1.0, 1.0], 0.5);
+        assert!((loss - (2.0 / 3.0 + 0.5 * 2.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Dataset::new(vec![1.0; 5], vec![1.0; 2], 2, 2);
+    }
+}

@@ -1,0 +1,11 @@
+//! Dataset substrate: the in-memory sample container, the synthetic
+//! California-Housing-like generator (DESIGN.md §3 substitution), CSV
+//! load/save for dropping in the real dataset, and train/eval splitting.
+
+pub mod csv;
+pub mod dataset;
+pub mod split;
+pub mod synth;
+
+pub use dataset::Dataset;
+pub use synth::{synth_calhousing, SynthSpec};

@@ -1,0 +1,59 @@
+//! Deterministic train/eval splitting (paper Sec. 5: a random 90% of
+//! California Housing forms the training set X, N = 18 576).
+
+use crate::util::rng::Pcg32;
+
+use super::dataset::Dataset;
+
+/// Split `ds` into (train, eval) with `train_frac` of the samples in the
+/// training set, shuffled deterministically by `seed`.
+pub fn train_split(
+    ds: &Dataset,
+    train_frac: f64,
+    seed: u64,
+) -> (Dataset, Dataset) {
+    assert!((0.0..=1.0).contains(&train_frac), "bad fraction");
+    let mut idx: Vec<usize> = (0..ds.n).collect();
+    let mut rng = Pcg32::new(seed, 202);
+    rng.shuffle(&mut idx);
+    let n_train = (ds.n as f64 * train_frac).round() as usize;
+    let (train_idx, eval_idx) = idx.split_at(n_train);
+    (ds.subset(train_idx), ds.subset(eval_idx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{synth_calhousing, SynthSpec};
+
+    #[test]
+    fn sizes_match_paper_convention() {
+        let ds = synth_calhousing(&SynthSpec { n: 20640, ..Default::default() });
+        let (train, eval) = train_split(&ds, 0.9, 42);
+        assert_eq!(train.n, 18576); // the paper's N
+        assert_eq!(eval.n, 20640 - 18576);
+        assert_eq!(train.d, 8);
+    }
+
+    #[test]
+    fn deterministic_and_disjoint() {
+        let ds = synth_calhousing(&SynthSpec { n: 200, ..Default::default() });
+        let (t1, e1) = train_split(&ds, 0.8, 7);
+        let (t2, _) = train_split(&ds, 0.8, 7);
+        assert_eq!(t1.x, t2.x);
+        // all eval samples differ from all train samples (rows unique whp)
+        for i in 0..e1.n {
+            for j in 0..t1.n {
+                assert_ne!(e1.row(i), t1.row(j));
+            }
+        }
+    }
+
+    #[test]
+    fn different_seed_different_split() {
+        let ds = synth_calhousing(&SynthSpec { n: 200, ..Default::default() });
+        let (t1, _) = train_split(&ds, 0.8, 1);
+        let (t2, _) = train_split(&ds, 0.8, 2);
+        assert_ne!(t1.x, t2.x);
+    }
+}

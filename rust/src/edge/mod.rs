@@ -1,0 +1,5 @@
+//! Edge-node state: the growing sample store X̃_b and loss evaluation.
+
+pub mod store;
+
+pub use store::SampleStore;

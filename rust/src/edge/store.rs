@@ -1,0 +1,187 @@
+//! The edge node's sample store X̃_b (paper Sec. 2).
+//!
+//! The store grows monotonically (`X̃_{b+1} = X̃_b ∪ X_b`) in the paper's
+//! protocol; the online-learning extension (Sec. 6) bounds its capacity
+//! with reservoir-style eviction, which is implemented here behind
+//! [`SampleStore::with_capacity`].
+
+use crate::sgd::StoreView;
+use crate::util::rng::Pcg32;
+
+/// A flat, append-mostly sample store.
+#[derive(Clone, Debug)]
+pub struct SampleStore {
+    x: Vec<f32>,
+    y: Vec<f32>,
+    d: usize,
+    /// Maximum number of samples held (None = unbounded, paper protocol).
+    capacity: Option<usize>,
+    /// Total samples ever ingested (≥ len when capacity-bound).
+    ingested: usize,
+}
+
+impl SampleStore {
+    /// Unbounded store (the paper's protocol).
+    pub fn new(d: usize) -> SampleStore {
+        SampleStore { x: Vec::new(), y: Vec::new(), d, capacity: None, ingested: 0 }
+    }
+
+    /// Capacity-bound store with reservoir-sampling eviction (the
+    /// online-learning extension): after `capacity` samples the store
+    /// holds a uniform random subset of everything ingested.
+    pub fn with_capacity(d: usize, capacity: usize) -> SampleStore {
+        assert!(capacity > 0, "capacity must be positive");
+        SampleStore {
+            x: Vec::with_capacity(capacity * d),
+            y: Vec::with_capacity(capacity),
+            d,
+            capacity: Some(capacity),
+            ingested: 0,
+        }
+    }
+
+    /// Number of samples currently held.
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Total samples ever ingested.
+    pub fn ingested(&self) -> usize {
+        self.ingested
+    }
+
+    /// Feature dimension.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Ingest one block of samples (row-major `x`, labels `y`).
+    ///
+    /// `rng` drives reservoir eviction and is only consulted when a
+    /// capacity is set (keeps unbounded runs bit-identical regardless of
+    /// the extension).
+    pub fn ingest(&mut self, x: &[f32], y: &[f32], rng: &mut Pcg32) {
+        assert_eq!(x.len(), y.len() * self.d, "block shape mismatch");
+        match self.capacity {
+            None => {
+                self.x.extend_from_slice(x);
+                self.y.extend_from_slice(y);
+                self.ingested += y.len();
+            }
+            Some(cap) => {
+                for (i, &label) in y.iter().enumerate() {
+                    let row = &x[i * self.d..(i + 1) * self.d];
+                    self.ingested += 1;
+                    if self.y.len() < cap {
+                        self.x.extend_from_slice(row);
+                        self.y.push(label);
+                    } else {
+                        // classic reservoir: replace slot j < cap with
+                        // probability cap/ingested
+                        let j = rng.gen_range(self.ingested as u64) as usize;
+                        if j < cap {
+                            self.x[j * self.d..(j + 1) * self.d]
+                                .copy_from_slice(row);
+                            self.y[j] = label;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Borrow the store contents as an SGD view.
+    pub fn view(&self) -> StoreView<'_> {
+        StoreView::new(&self.x, &self.y, self.d)
+    }
+
+    /// Row `i` (for loss computations).
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Label of row `i`.
+    pub fn label(&self, i: usize) -> f32 {
+        self.y[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block(vals: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        // 2-d rows [v, v+1], label v
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for &v in vals {
+            x.extend_from_slice(&[v, v + 1.0]);
+            y.push(v);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn unbounded_growth_preserves_order() {
+        let mut store = SampleStore::new(2);
+        let mut rng = Pcg32::seeded(1);
+        let (x1, y1) = block(&[1.0, 2.0]);
+        let (x2, y2) = block(&[3.0]);
+        store.ingest(&x1, &y1, &mut rng);
+        store.ingest(&x2, &y2, &mut rng);
+        assert_eq!(store.len(), 3);
+        assert_eq!(store.ingested(), 3);
+        assert_eq!(store.row(2), &[3.0, 4.0]);
+        assert_eq!(store.label(0), 1.0);
+    }
+
+    #[test]
+    fn capacity_bound_holds() {
+        let mut store = SampleStore::with_capacity(2, 5);
+        let mut rng = Pcg32::seeded(2);
+        for chunk in 0..20 {
+            let (x, y) = block(&[chunk as f32, chunk as f32 + 0.5]);
+            store.ingest(&x, &y, &mut rng);
+        }
+        assert_eq!(store.len(), 5);
+        assert_eq!(store.ingested(), 40);
+    }
+
+    #[test]
+    fn reservoir_is_unbiased() {
+        // Each of 100 streamed samples should survive with p = cap/100.
+        let cap = 10;
+        let trials = 4000;
+        let mut counts = vec![0u32; 100];
+        for t in 0..trials {
+            let mut store = SampleStore::with_capacity(1, cap);
+            let mut rng = Pcg32::seeded(100 + t as u64);
+            for v in 0..100 {
+                store.ingest(&[v as f32], &[v as f32], &mut rng);
+            }
+            for i in 0..store.len() {
+                counts[store.label(i) as usize] += 1;
+            }
+        }
+        let expect = trials as f64 * cap as f64 / 100.0;
+        for (v, &c) in counts.iter().enumerate() {
+            let rel = (c as f64 - expect) / expect;
+            assert!(rel.abs() < 0.2, "sample {v}: count {c} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn view_matches_contents() {
+        let mut store = SampleStore::new(2);
+        let mut rng = Pcg32::seeded(3);
+        let (x, y) = block(&[7.0]);
+        store.ingest(&x, &y, &mut rng);
+        let view = store.view();
+        assert_eq!(view.len(), 1);
+        assert_eq!(view.row(0), &[7.0, 8.0]);
+    }
+}

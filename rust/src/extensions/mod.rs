@@ -1,0 +1,19 @@
+//! The paper's Sec.-6 future-work directions, implemented as first-class
+//! features:
+//!
+//! * [`online`] — limited edge memory: the store is a reservoir of
+//!   bounded capacity ("data sent in previous packets can be only
+//!   partially stored at the server").
+//! * [`multi_device`] — several devices share the uplink round-robin
+//!   ("a scenario with multiple devices").
+//! * [`rate_select`] — choosing the transmission rate on an erasure
+//!   channel ("the optimization problem could be generalized to account
+//!   for the selection of the data rate").
+
+//! * [`adaptive`] — per-block payload schedules (warmup,
+//!   deadline-aware), generalizing the paper's fixed `n_c`.
+
+pub mod adaptive;
+pub mod multi_device;
+pub mod online;
+pub mod rate_select;

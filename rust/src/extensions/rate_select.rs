@@ -1,0 +1,133 @@
+//! Transmission-rate selection on a noisy channel (paper Sec. 6).
+//!
+//! Model: transmitting at relative rate `r` shortens a block to
+//! `(n_c + n_o)/r` time units but raises the per-packet erasure
+//! probability — we use the standard exponential-in-rate outage model
+//! `p(r) = 1 − exp(−κ(r − 1))` for `r ≥ 1` (at the nominal rate the link
+//! is clean, pushing rate risks erasures and ARQ retransmission delay).
+//! The expected block duration is `(n_c+n_o)/(r(1−p(r)))`, so there is an
+//! optimal finite rate; this module scans it jointly with `n_c`.
+
+use crate::channel::{ErasureChannel, RateLimitedChannel};
+use crate::coordinator::des::{run_des, DesConfig};
+use crate::coordinator::executor::NativeExecutor;
+use crate::data::Dataset;
+use crate::model::RidgeModel;
+
+/// Outage probability at relative rate `r` with steepness `kappa`.
+pub fn outage_probability(r: f64, kappa: f64) -> f64 {
+    assert!(r >= 1.0, "rates below nominal are always clean here");
+    (1.0 - (-kappa * (r - 1.0)).exp()).clamp(0.0, 0.999)
+}
+
+/// Expected effective slowdown of rate `r` (duration multiplier vs the
+/// nominal rate): `1 / (r (1 − p(r)))`.
+pub fn expected_slowdown(r: f64, kappa: f64) -> f64 {
+    1.0 / (r * (1.0 - outage_probability(r, kappa)))
+}
+
+/// The rate minimizing the expected slowdown (golden-section scan).
+pub fn best_rate(kappa: f64, r_max: f64) -> f64 {
+    let mut best = (1.0, expected_slowdown(1.0, kappa));
+    let steps = 400;
+    for i in 0..=steps {
+        let r = 1.0 + (r_max - 1.0) * i as f64 / steps as f64;
+        let s = expected_slowdown(r, kappa);
+        if s < best.1 {
+            best = (r, s);
+        }
+    }
+    best.0
+}
+
+/// Average final loss at `(rate, n_c)` over `seeds` Monte-Carlo runs on
+/// the rate-limited erasure channel.
+pub fn mc_loss_at_rate(
+    ds: &Dataset,
+    cfg: &DesConfig,
+    rate: f64,
+    kappa: f64,
+    seeds: usize,
+) -> f64 {
+    let p = outage_probability(rate, kappa);
+    let mut total = 0.0;
+    for s in 0..seeds {
+        let run_cfg = DesConfig {
+            seed: cfg.seed.wrapping_add(s as u64),
+            record_blocks: false,
+            ..cfg.clone()
+        };
+        let mut channel = RateLimitedChannel::new(
+            rate,
+            ErasureChannel::new(p),
+        );
+        let mut exec = NativeExecutor::new(
+            RidgeModel::new(ds.d, run_cfg.lambda, ds.n),
+            run_cfg.alpha,
+        );
+        total += run_des(ds, &run_cfg, &mut channel, &mut exec)
+            .expect("rate run")
+            .final_loss;
+    }
+    total / seeds as f64
+}
+
+/// Scan rates, returning `(rate, mean final loss)` rows (Abl producer).
+pub fn rate_sweep(
+    ds: &Dataset,
+    cfg: &DesConfig,
+    rates: &[f64],
+    kappa: f64,
+    seeds: usize,
+) -> Vec<(f64, f64)> {
+    rates
+        .iter()
+        .map(|&r| (r, mc_loss_at_rate(ds, cfg, r, kappa, seeds)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{synth_calhousing, SynthSpec};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn outage_model_shape() {
+        assert_eq!(outage_probability(1.0, 2.0), 0.0);
+        assert!(outage_probability(2.0, 2.0) > 0.5);
+        // slowdown is 1 at nominal, worse at huge rates
+        assert!((expected_slowdown(1.0, 2.0) - 1.0).abs() < 1e-12);
+        assert!(expected_slowdown(5.0, 2.0) > 1.0);
+    }
+
+    #[test]
+    fn best_rate_is_interior_for_moderate_kappa() {
+        let r = best_rate(0.5, 6.0);
+        assert!(r > 1.0 && r < 6.0, "r = {r}");
+        // sanity: it really is a minimum vs neighbors
+        let s = |x: f64| expected_slowdown(x, 0.5);
+        assert!(s(r) <= s(1.0) && s(r) <= s(6.0));
+    }
+
+    #[test]
+    fn harsher_channel_prefers_lower_rate() {
+        let gentle = best_rate(0.2, 8.0);
+        let harsh = best_rate(2.0, 8.0);
+        assert!(harsh <= gentle, "harsh {harsh} vs gentle {gentle}");
+    }
+
+    #[test]
+    fn rate_sweep_runs() {
+        let ds =
+            synth_calhousing(&SynthSpec { n: 300, ..Default::default() });
+        let cfg = DesConfig {
+            alpha: 1e-3,
+            ..DesConfig::paper(30, 5.0, 500.0, 2)
+        };
+        let rows = rate_sweep(&ds, &cfg, &[1.0, 1.5, 3.0], 0.8, 3);
+        assert_eq!(rows.len(), 3);
+        assert!(rows.iter().all(|(_, l)| l.is_finite()));
+        let _ = Pcg32::seeded(0); // keep import used in cfg(test)
+    }
+}

@@ -1,0 +1,51 @@
+//! # edgepipe
+//!
+//! Production-grade reproduction of *"Optimizing Pipelined Computation and
+//! Communication for Latency-Constrained Edge Learning"*
+//! (N. Skatchkovsky & O. Simeone, 2019).
+//!
+//! A data-bearing **device** streams its training set to an **edge node**
+//! over a channel in blocks of `n_c` samples plus a per-packet overhead
+//! `n_o`; the edge node trains by single-sample SGD *while* the next block
+//! is on the wire, and everything must finish inside a hard deadline `T`.
+//! This crate provides:
+//!
+//! * the pipelined **coordinator** (device transmitter, channel, edge
+//!   trainer) in both a discrete-event and a real threaded form
+//!   ([`coordinator`]),
+//! * the paper's **Corollary 1 bound** and the block-size optimizer that
+//!   picks `ñ_c` ([`bound`]),
+//! * a native SGD engine ([`sgd`]) and a PJRT-backed engine ([`runtime`],
+//!   [`edge`]) that executes the AOT-compiled JAX/Pallas artifacts built by
+//!   `make artifacts`,
+//! * every substrate needed offline: RNG, JSON, config, CLI, linear
+//!   algebra, dataset synthesis, a bench harness and a property-testing
+//!   kit ([`util`], [`linalg`], [`data`], [`bench`], [`testkit`]),
+//! * baseline policies and the paper's future-work extensions
+//!   ([`baselines`], [`extensions`], [`channel`]).
+//!
+//! Layering (DESIGN.md): Python/JAX/Pallas exist only at build time; the
+//! Rust binary is self-contained once `artifacts/` is built.
+
+pub mod baselines;
+pub mod bench;
+pub mod bound;
+pub mod channel;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod edge;
+pub mod extensions;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod protocol;
+pub mod runtime;
+pub mod sgd;
+pub mod sweep;
+pub mod testkit;
+pub mod util;
+
+/// Crate version, surfaced by `edgepipe info`.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,62 @@
+//! Gram matrix of a dataset: `G = (1/n) Xᵀ X` over flat row-major samples.
+//!
+//! The Hessian of the paper's empirical ridge loss is `2G + (2λ/N) I`; its
+//! extreme eigenvalues are the smoothness constant `L` and the PL constant
+//! `c` used by the Corollary-1 bound (paper Sec. 4/5).
+
+use super::matrix::Mat;
+
+/// Compute `(1/n) Xᵀ X` from flat row-major `f32` data (n rows, d cols).
+pub fn gram_matrix(x: &[f32], n: usize, d: usize) -> Mat {
+    assert_eq!(x.len(), n * d, "data length mismatch");
+    assert!(n > 0, "empty dataset");
+    let mut g = Mat::zeros(d, d);
+    for row in x.chunks_exact(d) {
+        for i in 0..d {
+            let xi = row[i] as f64;
+            for j in i..d {
+                g[(i, j)] += xi * row[j] as f64;
+            }
+        }
+    }
+    let inv_n = 1.0 / n as f64;
+    for i in 0..d {
+        for j in i..d {
+            let v = g[(i, j)] * inv_n;
+            g[(i, j)] = v;
+            g[(j, i)] = v;
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_small_case() {
+        // X = [[1,0],[0,2],[1,1]]; XᵀX = [[2,1],[1,5]]; /3
+        let x = [1.0f32, 0.0, 0.0, 2.0, 1.0, 1.0];
+        let g = gram_matrix(&x, 3, 2);
+        assert!((g[(0, 0)] - 2.0 / 3.0).abs() < 1e-12);
+        assert!((g[(0, 1)] - 1.0 / 3.0).abs() < 1e-12);
+        assert!((g[(1, 0)] - 1.0 / 3.0).abs() < 1e-12);
+        assert!((g[(1, 1)] - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn symmetric_and_psd() {
+        use crate::linalg::sym_eig::jacobi_eigen;
+        use crate::util::rng::Pcg32;
+
+        let mut rng = Pcg32::seeded(11);
+        let (n, d) = (200, 5);
+        let x: Vec<f32> =
+            (0..n * d).map(|_| rng.next_gaussian() as f32).collect();
+        let g = gram_matrix(&x, n, d);
+        assert!(g.is_symmetric(1e-12));
+        let e = jacobi_eigen(&g);
+        assert!(e.values.iter().all(|&l| l > -1e-10), "{:?}", e.values);
+    }
+}

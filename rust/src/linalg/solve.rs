@@ -1,0 +1,129 @@
+//! Gauss–Jordan linear solver with partial pivoting (for the d×d normal
+//! equations that give the exact ridge solution w*).
+
+use anyhow::{bail, Result};
+
+use super::matrix::Mat;
+
+/// Solve `A x = b` for square `A` by Gauss–Jordan with partial pivoting.
+pub fn solve(a: &Mat, b: &[f64]) -> Result<Vec<f64>> {
+    let n = a.rows();
+    if a.cols() != n {
+        bail!("solve requires a square matrix, got {}x{}", n, a.cols());
+    }
+    if b.len() != n {
+        bail!("rhs length {} != {}", b.len(), n);
+    }
+    // augmented system in working copies
+    let mut m = a.clone();
+    let mut x = b.to_vec();
+
+    for col in 0..n {
+        // partial pivot
+        let mut piv = col;
+        let mut best = m[(col, col)].abs();
+        for r in (col + 1)..n {
+            if m[(r, col)].abs() > best {
+                best = m[(r, col)].abs();
+                piv = r;
+            }
+        }
+        if best < 1e-300 {
+            bail!("singular matrix (pivot {col})");
+        }
+        if piv != col {
+            for j in 0..n {
+                let tmp = m[(col, j)];
+                m[(col, j)] = m[(piv, j)];
+                m[(piv, j)] = tmp;
+            }
+            x.swap(col, piv);
+        }
+        // normalize pivot row
+        let p = m[(col, col)];
+        for j in 0..n {
+            m[(col, j)] /= p;
+        }
+        x[col] /= p;
+        // eliminate column everywhere else
+        for r in 0..n {
+            if r == col {
+                continue;
+            }
+            let f = m[(r, col)];
+            if f == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                m[(r, j)] -= f * m[(col, j)];
+            }
+            x[r] -= f * x[col];
+        }
+    }
+    Ok(x)
+}
+
+/// Invert a square matrix (column-by-column solve). Used in tests and for
+/// small whitening transforms.
+pub fn invert(a: &Mat) -> Result<Mat> {
+    let n = a.rows();
+    let mut out = Mat::zeros(n, n);
+    for j in 0..n {
+        let mut e = vec![0.0; n];
+        e[j] = 1.0;
+        let col = solve(a, &e)?;
+        for i in 0..n {
+            out[(i, j)] = col[i];
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solves_known_system() {
+        let a = Mat::from_rows(2, 2, &[2.0, 1.0, 1.0, 3.0]);
+        let x = solve(&a, &[5.0, 10.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pivoting_handles_zero_diagonal() {
+        let a = Mat::from_rows(2, 2, &[0.0, 1.0, 1.0, 0.0]);
+        let x = solve(&a, &[2.0, 3.0]).unwrap();
+        assert!((x[0] - 3.0).abs() < 1e-12);
+        assert!((x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_is_error() {
+        let a = Mat::from_rows(2, 2, &[1.0, 2.0, 2.0, 4.0]);
+        assert!(solve(&a, &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn residual_is_small() {
+        let a = Mat::from_rows(
+            3,
+            3,
+            &[4.0, -2.0, 1.0, -2.0, 4.0, -2.0, 1.0, -2.0, 4.0],
+        );
+        let b = [1.0, 2.0, 3.0];
+        let x = solve(&a, &b).unwrap();
+        let ax = a.matvec(&x);
+        for i in 0..3 {
+            assert!((ax[i] - b[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn inverse_times_matrix_is_identity() {
+        let a = Mat::from_rows(3, 3, &[2.0, 1.0, 0.0, 1.0, 3.0, 1.0, 0.0, 1.0, 2.0]);
+        let inv = invert(&a).unwrap();
+        assert!(inv.matmul(&a).max_abs_diff(&Mat::eye(3)) < 1e-12);
+    }
+}

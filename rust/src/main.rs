@@ -1,0 +1,24 @@
+//! `edgepipe` — the Layer-3 leader binary.
+//!
+//! Parses the command line, loads/merges configuration, and dispatches to
+//! the subcommands in [`edgepipe::cli::commands`]. See `edgepipe help`.
+
+use edgepipe::cli::{dispatch, Args};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\nrun `edgepipe help` for usage");
+            std::process::exit(2);
+        }
+    };
+    match dispatch(&args) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

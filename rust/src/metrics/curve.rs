@@ -1,0 +1,103 @@
+//! Loss-curve utilities: resampling onto a common time grid and
+//! Monte-Carlo averaging (paper Fig. 4 plots the AVERAGE training loss
+//! over random seeds).
+
+/// Linearly interpolate a (time, value) curve at `t` (clamped at ends).
+pub fn interp(curve: &[(f64, f64)], t: f64) -> f64 {
+    assert!(!curve.is_empty(), "empty curve");
+    if t <= curve[0].0 {
+        return curve[0].1;
+    }
+    if t >= curve[curve.len() - 1].0 {
+        return curve[curve.len() - 1].1;
+    }
+    // binary search for the segment containing t
+    let mut lo = 0usize;
+    let mut hi = curve.len() - 1;
+    while hi - lo > 1 {
+        let mid = (lo + hi) / 2;
+        if curve[mid].0 <= t {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let (t0, v0) = curve[lo];
+    let (t1, v1) = curve[hi];
+    if t1 <= t0 {
+        return v0;
+    }
+    v0 + (v1 - v0) * (t - t0) / (t1 - t0)
+}
+
+/// Resample several runs' curves onto a shared uniform grid of `points`
+/// between 0 and `t_max`. Returns (grid, per-run values).
+pub fn align_curves(
+    curves: &[Vec<(f64, f64)>],
+    t_max: f64,
+    points: usize,
+) -> (Vec<f64>, Vec<Vec<f64>>) {
+    assert!(points >= 2);
+    let grid: Vec<f64> = (0..points)
+        .map(|i| t_max * i as f64 / (points - 1) as f64)
+        .collect();
+    let values = curves
+        .iter()
+        .map(|c| grid.iter().map(|&t| interp(c, t)).collect())
+        .collect();
+    (grid, values)
+}
+
+/// Pointwise mean curve over aligned runs: returns (grid, mean values).
+pub fn mean_curve(
+    curves: &[Vec<(f64, f64)>],
+    t_max: f64,
+    points: usize,
+) -> (Vec<f64>, Vec<f64>) {
+    let (grid, values) = align_curves(curves, t_max, points);
+    let n = values.len().max(1) as f64;
+    let mean = (0..grid.len())
+        .map(|i| values.iter().map(|v| v[i]).sum::<f64>() / n)
+        .collect();
+    (grid, mean)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interp_endpoints_and_middle() {
+        let c = vec![(0.0, 1.0), (10.0, 3.0)];
+        assert_eq!(interp(&c, -5.0), 1.0);
+        assert_eq!(interp(&c, 15.0), 3.0);
+        assert_eq!(interp(&c, 5.0), 2.0);
+    }
+
+    #[test]
+    fn interp_multi_segment() {
+        let c = vec![(0.0, 0.0), (1.0, 10.0), (3.0, 30.0)];
+        assert!((interp(&c, 0.5) - 5.0).abs() < 1e-12);
+        assert!((interp(&c, 2.0) - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_of_two_constant_curves() {
+        let curves = vec![
+            vec![(0.0, 1.0), (10.0, 1.0)],
+            vec![(0.0, 3.0), (10.0, 3.0)],
+        ];
+        let (grid, mean) = mean_curve(&curves, 10.0, 5);
+        assert_eq!(grid.len(), 5);
+        assert!(mean.iter().all(|&v| (v - 2.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn duplicate_time_points_are_safe() {
+        // block-boundary records can duplicate a timestamp
+        let c = vec![(0.0, 5.0), (1.0, 4.0), (1.0, 3.0), (2.0, 2.0)];
+        let v = interp(&c, 1.0);
+        assert!((3.0..=4.0).contains(&v));
+        assert!((interp(&c, 1.5) - 2.5).abs() < 1e-12);
+    }
+}

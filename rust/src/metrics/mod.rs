@@ -1,0 +1,9 @@
+//! Experiment output: loss curves, CSV/JSON emission, run summaries.
+
+pub mod curve;
+pub mod summary;
+pub mod writer;
+
+pub use curve::{align_curves, mean_curve};
+pub use summary::{render_run, run_to_json};
+pub use writer::{write_csv, write_json, CsvTable};

@@ -1,0 +1,109 @@
+//! Run summaries: human-readable reports and JSON export of a
+//! [`RunResult`](crate::coordinator::RunResult) for downstream tooling.
+
+use crate::coordinator::RunResult;
+use crate::util::json::{num, obj, s, Value};
+
+/// Render a one-paragraph human report of a run.
+pub fn render_run(result: &RunResult, loss_star: Option<f64>) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "final loss {:.6}; {} updates over {} sent blocks \
+         ({} delivered, {} samples, case {:?}, backend {})\n",
+        result.final_loss,
+        result.updates,
+        result.blocks_sent,
+        result.blocks_delivered,
+        result.samples_delivered,
+        result.case,
+        result.backend
+    ));
+    if result.retransmissions > 0 {
+        out.push_str(&format!(
+            "channel retransmissions: {}\n",
+            result.retransmissions
+        ));
+    }
+    if let Some(star) = loss_star {
+        out.push_str(&format!(
+            "optimality gap: {:.3e} (L(w*) = {star:.6})\n",
+            result.final_loss - star
+        ));
+    }
+    out
+}
+
+/// Export a run to a JSON value (curve + scalars).
+pub fn run_to_json(result: &RunResult, loss_star: Option<f64>) -> Value {
+    let curve = Value::Arr(
+        result
+            .curve
+            .iter()
+            .map(|&(t, l)| Value::Arr(vec![num(t), num(l)]))
+            .collect(),
+    );
+    let mut fields = vec![
+        ("final_loss", num(result.final_loss)),
+        ("updates", num(result.updates as f64)),
+        ("blocks_sent", num(result.blocks_sent as f64)),
+        ("blocks_delivered", num(result.blocks_delivered as f64)),
+        ("samples_delivered", num(result.samples_delivered as f64)),
+        ("retransmissions", num(result.retransmissions as f64)),
+        ("case", s(&format!("{:?}", result.case))),
+        ("backend", s(result.backend)),
+        ("final_w", crate::util::json::num_arr(&result.final_w)),
+        ("curve", curve),
+    ];
+    if let Some(star) = loss_star {
+        fields.push(("loss_star", num(star)));
+        fields.push(("gap", num(result.final_loss - star)));
+    }
+    obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::TimelineCase;
+
+    fn fake_run() -> RunResult {
+        RunResult {
+            curve: vec![(0.0, 2.0), (10.0, 1.0)],
+            final_loss: 1.0,
+            final_w: vec![0.5, -0.5],
+            updates: 100,
+            blocks_sent: 5,
+            blocks_delivered: 4,
+            samples_delivered: 400,
+            retransmissions: 2,
+            case: TimelineCase::Partial,
+            snapshots: vec![],
+            events: vec![],
+            backend: "native",
+        }
+    }
+
+    #[test]
+    fn render_contains_key_facts() {
+        let r = render_run(&fake_run(), Some(0.4));
+        assert!(r.contains("final loss 1.000000"));
+        assert!(r.contains("retransmissions: 2"));
+        assert!(r.contains("optimality gap"));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let v = run_to_json(&fake_run(), Some(0.4));
+        let text = v.to_json_pretty();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(
+            back.get("final_loss").unwrap().as_f64().unwrap(),
+            1.0
+        );
+        assert_eq!(
+            back.get("curve").unwrap().as_arr().unwrap().len(),
+            2
+        );
+        assert_eq!(back.get("gap").unwrap().as_f64().unwrap(), 0.6);
+    }
+}

@@ -1,0 +1,109 @@
+//! CSV / JSON experiment-output writers (figure data, bench rows).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Value;
+
+/// A simple column-oriented CSV table.
+#[derive(Clone, Debug, Default)]
+pub struct CsvTable {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new(headers: &[&str]) -> CsvTable {
+        CsvTable {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row of already-formatted cells.
+    pub fn push_raw(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Append a row of f64 cells.
+    pub fn push_nums(&mut self, cells: &[f64]) {
+        self.push_raw(cells.iter().map(|v| format!("{v}")).collect());
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render to CSV text.
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Write a CSV table to disk, creating parent dirs.
+pub fn write_csv(table: &CsvTable, path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(table.to_csv().as_bytes())?;
+    Ok(())
+}
+
+/// Write a JSON value (pretty) to disk, creating parent dirs.
+pub fn write_json(value: &Value, path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, value.to_json_pretty())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_rendering() {
+        let mut t = CsvTable::new(&["a", "b"]);
+        t.push_nums(&[1.0, 2.5]);
+        t.push_raw(vec!["x".into(), "y".into()]);
+        assert_eq!(t.to_csv(), "a,b\n1,2.5\nx,y\n");
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn column_mismatch_panics() {
+        let mut t = CsvTable::new(&["a"]);
+        t.push_nums(&[1.0, 2.0]);
+    }
+
+    #[test]
+    fn files_roundtrip() {
+        let dir = std::env::temp_dir().join("edgepipe_writer_test");
+        let mut t = CsvTable::new(&["x"]);
+        t.push_nums(&[42.0]);
+        let p = dir.join("t.csv");
+        write_csv(&t, &p).unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "x\n42\n");
+        let j = dir.join("v.json");
+        write_json(&crate::util::json::num(1.5), &j).unwrap();
+        assert_eq!(std::fs::read_to_string(&j).unwrap(), "1.5");
+    }
+}

@@ -1,0 +1,8 @@
+//! Model layer: the ridge-regression workload of the paper plus the trait
+//! the SGD engine and coordinator are generic over.
+
+pub mod ridge;
+pub mod traits;
+
+pub use ridge::{ridge_solution, RidgeModel};
+pub use traits::PointModel;

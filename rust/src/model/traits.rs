@@ -1,0 +1,26 @@
+//! The per-sample model abstraction the SGD engine is generic over.
+
+/// A model trained by single-sample SGD on `(x, y)` pairs (paper eq. (2)).
+///
+/// Implementations must be cheap: `grad_into` is the innermost loop of the
+/// whole system (tens of millions of calls per sweep).
+pub trait PointModel: Sync {
+    /// Parameter dimension.
+    fn dim(&self) -> usize;
+
+    /// Per-sample loss `ℓ(w, (x, y))`.
+    fn loss(&self, w: &[f64], x: &[f32], y: f32) -> f64;
+
+    /// Per-sample gradient written into `out` (length `dim()`).
+    fn grad_into(&self, w: &[f64], x: &[f32], y: f32, out: &mut [f64]);
+
+    /// One in-place SGD step `w ← w − α ∇ℓ(w, (x,y))`. A default is
+    /// provided via `grad_into`; implementations may fuse it.
+    fn sgd_step(&self, w: &mut [f64], x: &[f32], y: f32, alpha: f64) {
+        let mut g = vec![0.0; self.dim()];
+        self.grad_into(w, x, y, &mut g);
+        for (wi, gi) in w.iter_mut().zip(&g) {
+            *wi -= alpha * gi;
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! The paper's transmission/training protocol in normalized time units.
+//!
+//! All times are normalized to the transmission time of ONE sample
+//! (paper Sec. 2). A block carries `n_c` fresh samples plus a fixed
+//! overhead `n_o`, so it occupies the channel for `n_c + n_o` units; while
+//! it is on the wire the edge node performs `n_p = (n_c + n_o)/τ_p` SGD
+//! updates on previously received samples.
+
+pub mod packet;
+pub mod timeline;
+
+pub use packet::{Packet, PacketKind};
+pub use timeline::{Timeline, TimelineCase};

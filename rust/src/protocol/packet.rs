@@ -1,0 +1,109 @@
+//! Packet framing for the device → edge link.
+//!
+//! A data packet carries `payload` fresh samples plus the fixed overhead
+//! `n_o` (pilots / meta-data, paper Sec. 2). The coordinator's channel
+//! moves `Packet`s; the erasure-channel extension re-transmits them.
+
+/// What a packet contains.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PacketKind {
+    /// A data block: sample indices (into the device's dataset) plus the
+    /// gathered rows and labels, ready for the edge store.
+    Data {
+        /// Indices of the transmitted samples in the device's dataset.
+        indices: Vec<u32>,
+        /// Row-major covariates, `indices.len() * d`.
+        x: Vec<f32>,
+        /// Labels.
+        y: Vec<f32>,
+    },
+    /// End-of-stream marker: the device has nothing left to send.
+    Fin,
+}
+
+/// A framed packet with its timing metadata (normalized units).
+#[derive(Clone, Debug)]
+pub struct Packet {
+    /// 1-indexed block number.
+    pub block: usize,
+    /// Time the packet occupies the channel: payload + n_o.
+    pub duration: f64,
+    /// Transmission start time (normalized, from run start).
+    pub sent_at: f64,
+    /// Contents.
+    pub kind: PacketKind,
+}
+
+impl Packet {
+    /// Build a data packet for block `block` starting at `sent_at`.
+    pub fn data(
+        block: usize,
+        sent_at: f64,
+        n_o: f64,
+        indices: Vec<u32>,
+        x: Vec<f32>,
+        y: Vec<f32>,
+        d: usize,
+    ) -> Packet {
+        assert_eq!(x.len(), indices.len() * d, "packet payload shape");
+        assert_eq!(y.len(), indices.len(), "packet label shape");
+        Packet {
+            block,
+            duration: indices.len() as f64 + n_o,
+            sent_at,
+            kind: PacketKind::Data { indices, x, y },
+        }
+    }
+
+    /// Build the end-of-stream marker (zero duration: nothing is sent).
+    pub fn fin(block: usize, sent_at: f64) -> Packet {
+        Packet { block, duration: 0.0, sent_at, kind: PacketKind::Fin }
+    }
+
+    /// Number of payload samples (0 for Fin).
+    pub fn payload_len(&self) -> usize {
+        match &self.kind {
+            PacketKind::Data { indices, .. } => indices.len(),
+            PacketKind::Fin => 0,
+        }
+    }
+
+    /// Arrival time at the edge node (error-free channel).
+    pub fn arrives_at(&self) -> f64 {
+        self.sent_at + self.duration
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn data_packet_timing() {
+        let p = Packet::data(
+            3,
+            10.0,
+            2.5,
+            vec![0, 5, 9],
+            vec![0.0; 6],
+            vec![0.0; 3],
+            2,
+        );
+        assert_eq!(p.payload_len(), 3);
+        assert!((p.duration - 5.5).abs() < 1e-12);
+        assert!((p.arrives_at() - 15.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fin_packet() {
+        let p = Packet::fin(7, 42.0);
+        assert_eq!(p.payload_len(), 0);
+        assert_eq!(p.arrives_at(), 42.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Packet::data(1, 0.0, 1.0, vec![0, 1], vec![0.0; 3], vec![0.0; 2], 2);
+    }
+}

@@ -1,0 +1,225 @@
+//! Block-timing arithmetic for the protocol of Fig. 2.
+//!
+//! Given `(N, T, n_c, n_o, τ_p)` this module answers every scheduling
+//! question the coordinator, the bound, and the benches ask: how many
+//! blocks fit, how many samples each delivers, how many SGD updates run
+//! during each block, and whether the run is in case (a) (`T ≤
+//! B_d(n_c+n_o)`, dataset only partially delivered) or case (b) (full
+//! dataset delivered, tail block `B_l` of pure computation).
+
+/// Which side of the `T = B_d (n_c + n_o)` boundary a configuration is on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TimelineCase {
+    /// Paper Fig. 2(a): time runs out before the dataset is delivered.
+    Partial,
+    /// Paper Fig. 2(b): full dataset delivered; a tail block `B_l` of
+    /// duration `τ_l = T − B_d(n_c+n_o)` remains for pure computation.
+    Full,
+}
+
+/// Resolved timeline for one protocol configuration.
+#[derive(Clone, Debug)]
+pub struct Timeline {
+    /// Training-set size N.
+    pub n: usize,
+    /// Deadline T in normalized units.
+    pub t_budget: f64,
+    /// Payload samples per block n_c.
+    pub n_c: usize,
+    /// Per-packet overhead n_o (normalized units).
+    pub n_o: f64,
+    /// Time per SGD update τ_p.
+    pub tau_p: f64,
+    /// Which case of Fig. 2 this configuration falls in.
+    pub case: TimelineCase,
+    /// Number of transmission blocks that BEGIN within T (capped at B_d).
+    pub blocks: usize,
+    /// B_d = ceil(N / n_c): blocks needed to deliver the whole dataset.
+    pub b_d: usize,
+    /// Duration of one full block, n_c + n_o.
+    pub block_len: f64,
+    /// SGD updates per full block, n_p = floor((n_c + n_o)/τ_p).
+    pub n_p: usize,
+    /// Tail-block updates n_l (case Full only; 0 otherwise).
+    pub n_l: usize,
+}
+
+impl Timeline {
+    /// Resolve the timeline for a configuration.
+    ///
+    /// Panics if any parameter is non-positive where positivity is
+    /// required. `n_c` is clamped to `N` by the caller if needed.
+    pub fn resolve(
+        n: usize,
+        t_budget: f64,
+        n_c: usize,
+        n_o: f64,
+        tau_p: f64,
+    ) -> Timeline {
+        assert!(n > 0, "empty dataset");
+        assert!(n_c > 0 && n_c <= n, "n_c must be in [1, N]");
+        assert!(n_o >= 0.0, "negative overhead");
+        assert!(tau_p > 0.0, "non-positive compute time");
+        assert!(t_budget > 0.0, "non-positive deadline");
+
+        let block_len = n_c as f64 + n_o;
+        // B_d blocks suffice to deliver the dataset; the last block may
+        // carry fewer than n_c samples when n_c does not divide N.
+        let b_d = n.div_ceil(n_c);
+        let full_delivery_time = b_d as f64 * block_len;
+        let case = if t_budget > full_delivery_time {
+            TimelineCase::Full
+        } else {
+            TimelineCase::Partial
+        };
+        let blocks = match case {
+            TimelineCase::Full => b_d,
+            // number of whole blocks that fit in T
+            TimelineCase::Partial => (t_budget / block_len).floor() as usize,
+        };
+        let n_p = (block_len / tau_p).floor() as usize;
+        let n_l = match case {
+            TimelineCase::Full => {
+                ((t_budget - full_delivery_time) / tau_p).floor() as usize
+            }
+            TimelineCase::Partial => 0,
+        };
+        Timeline {
+            n,
+            t_budget,
+            n_c,
+            n_o,
+            tau_p,
+            case,
+            blocks,
+            b_d,
+            block_len,
+            n_p,
+            n_l,
+        }
+    }
+
+    /// Samples delivered by the start of block `b` (1-indexed), i.e. the
+    /// size of the store X̃_b the edge node trains on during block `b`.
+    pub fn store_size_at_block(&self, b: usize) -> usize {
+        assert!(b >= 1);
+        ((b - 1) * self.n_c).min(self.n)
+    }
+
+    /// Number of samples the device puts in block `b` (1-indexed): `n_c`
+    /// except possibly the final delivery block.
+    pub fn payload_of_block(&self, b: usize) -> usize {
+        assert!(b >= 1 && b <= self.b_d);
+        let sent_before = (b - 1) * self.n_c;
+        self.n_c.min(self.n - sent_before)
+    }
+
+    /// Fraction of the dataset delivered at the deadline (paper: `(B−1)/B_d`
+    /// in case Partial — the block in flight at T does not count).
+    pub fn delivered_fraction(&self) -> f64 {
+        match self.case {
+            TimelineCase::Full => 1.0,
+            TimelineCase::Partial => {
+                let usable = self.blocks.saturating_sub(1);
+                (usable as f64 * self.n_c as f64 / self.n as f64).min(1.0)
+            }
+        }
+    }
+
+    /// Total SGD updates the edge node performs within T. Updates can only
+    /// start once the first block has arrived (store is empty during block
+    /// 1), so blocks 2..=blocks contribute n_p each, plus the tail n_l.
+    pub fn total_updates(&self) -> usize {
+        let training_blocks = self.blocks.saturating_sub(1);
+        training_blocks * self.n_p + self.n_l
+    }
+
+    /// The boundary value of `n_c` at which `T = B_d(n_c + n_o)` for the
+    /// given `(n, t, n_o)` — the smallest payload that still delivers the
+    /// whole dataset in time (paper Fig. 3 dots). Returns None if even
+    /// `n_c = N` cannot deliver in time.
+    pub fn full_delivery_boundary(
+        n: usize,
+        t_budget: f64,
+        n_o: f64,
+    ) -> Option<usize> {
+        (1..=n).find(|&nc| {
+            let b_d = n.div_ceil(nc);
+            b_d as f64 * (nc as f64 + n_o) < t_budget
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_split_matches_paper_inequality() {
+        // N=100, n_c=10 -> B_d=10, block_len=12 (n_o=2), full delivery at 120
+        let tl = Timeline::resolve(100, 119.0, 10, 2.0, 1.0);
+        assert_eq!(tl.case, TimelineCase::Partial);
+        let tl = Timeline::resolve(100, 121.0, 10, 2.0, 1.0);
+        assert_eq!(tl.case, TimelineCase::Full);
+        assert_eq!(tl.blocks, 10);
+        assert_eq!(tl.n_l, 1); // (121-120)/1
+    }
+
+    #[test]
+    fn partial_block_count() {
+        let tl = Timeline::resolve(100, 50.0, 10, 2.0, 1.0);
+        assert_eq!(tl.blocks, 4); // floor(50/12)
+        assert_eq!(tl.n_p, 12);
+        assert_eq!(tl.store_size_at_block(1), 0);
+        assert_eq!(tl.store_size_at_block(4), 30);
+        assert!((tl.delivered_fraction() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ragged_final_block_payload() {
+        // N=25, n_c=10 -> B_d=3, last block carries 5
+        let tl = Timeline::resolve(25, 1000.0, 10, 0.0, 1.0);
+        assert_eq!(tl.b_d, 3);
+        assert_eq!(tl.payload_of_block(1), 10);
+        assert_eq!(tl.payload_of_block(3), 5);
+        assert_eq!(tl.store_size_at_block(4), 25);
+    }
+
+    #[test]
+    fn updates_accounting() {
+        let tl = Timeline::resolve(100, 121.0, 10, 2.0, 1.0);
+        // 10 blocks, first has empty store: 9 * 12 + 1 tail
+        assert_eq!(tl.total_updates(), 9 * 12 + 1);
+    }
+
+    #[test]
+    fn tau_p_scales_updates() {
+        let tl = Timeline::resolve(100, 50.0, 10, 2.0, 0.5);
+        assert_eq!(tl.n_p, 24);
+        let tl = Timeline::resolve(100, 50.0, 10, 2.0, 3.0);
+        assert_eq!(tl.n_p, 4);
+    }
+
+    #[test]
+    fn boundary_is_monotone_in_overhead() {
+        let b1 = Timeline::full_delivery_boundary(18576, 27864.0, 10.0);
+        let b2 = Timeline::full_delivery_boundary(18576, 27864.0, 100.0);
+        let (b1, b2) = (b1.unwrap(), b2.unwrap());
+        assert!(b2 > b1, "more overhead needs bigger blocks: {b1} vs {b2}");
+        // and at the boundary the inequality actually flips
+        let tl = Timeline::resolve(18576, 27864.0, b2, 100.0, 1.0);
+        assert_eq!(tl.case, TimelineCase::Full);
+        let tl = Timeline::resolve(18576, 27864.0, b2 - 1, 100.0, 1.0);
+        assert_eq!(tl.case, TimelineCase::Partial);
+    }
+
+    #[test]
+    fn n_c_equals_n_is_transmit_everything_first() {
+        let tl = Timeline::resolve(1000, 2000.0, 1000, 50.0, 1.0);
+        assert_eq!(tl.b_d, 1);
+        assert_eq!(tl.case, TimelineCase::Full);
+        // all updates happen in the tail
+        assert_eq!(tl.total_updates(), tl.n_l);
+        assert_eq!(tl.n_l, 950);
+    }
+}

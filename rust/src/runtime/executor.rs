@@ -1,0 +1,171 @@
+//! [`PjrtExecutor`]: the `BlockExecutor` backend that runs the paper's
+//! hot path — one pipelined block of SGD updates — through the AOT
+//! JAX/Pallas `sgd_block` artifact.
+//!
+//! The coordinator samples the indices; this executor gathers the sampled
+//! rows into the kernel's fixed `(K_MAX, d)` tile (the HBM→VMEM-friendly
+//! layout from DESIGN.md §Hardware-Adaptation), masks unused step slots,
+//! and loops calls when a block carries more than K_MAX updates.
+//! Parameters cross the f64 (coordinator) / f32 (artifact) boundary once
+//! per call, not per update.
+
+use anyhow::Result;
+
+use crate::coordinator::BlockExecutor;
+use crate::sgd::StoreView;
+
+use super::session::{literal_f32, to_vec_f32, RuntimeSession};
+
+/// PJRT-backed block executor for the ridge workload.
+pub struct PjrtExecutor {
+    session: RuntimeSession,
+    /// α (learning rate).
+    alpha: f32,
+    /// 2λ/N (gradient regularizer coefficient).
+    reg2: f32,
+    k_max: usize,
+    d: usize,
+    // reusable staging buffers (avoid per-call allocation)
+    xs: Vec<f32>,
+    ys: Vec<f32>,
+    mask: Vec<f32>,
+    calls: u64,
+}
+
+impl PjrtExecutor {
+    /// Build over a session, pre-compiling the `sgd_block` artifact.
+    /// `lambda` and `n_full` fix the regularizer exactly as the native
+    /// `RidgeModel` does.
+    pub fn new(
+        mut session: RuntimeSession,
+        alpha: f64,
+        lambda: f64,
+        n_full: usize,
+    ) -> Result<PjrtExecutor> {
+        session.preload(&["sgd_block"])?;
+        let c = session.manifest.constants;
+        Ok(PjrtExecutor {
+            alpha: alpha as f32,
+            reg2: (2.0 * lambda / n_full as f64) as f32,
+            k_max: c.k_max,
+            d: c.d,
+            xs: vec![0.0; c.k_max * c.d],
+            ys: vec![0.0; c.k_max],
+            mask: vec![0.0; c.k_max],
+            session,
+            calls: 0,
+        })
+    }
+
+    /// Number of artifact invocations so far (for perf accounting).
+    pub fn calls(&self) -> u64 {
+        self.calls
+    }
+
+    /// Run one chunk of at most K_MAX updates.
+    fn run_chunk(
+        &mut self,
+        w: &mut [f32],
+        store: StoreView<'_>,
+        indices: &[u32],
+    ) -> Result<()> {
+        debug_assert!(indices.len() <= self.k_max);
+        // gather sampled rows into the kernel's contiguous tile
+        for (j, &i) in indices.iter().enumerate() {
+            let row = store.row(i as usize);
+            self.xs[j * self.d..(j + 1) * self.d].copy_from_slice(row);
+            self.ys[j] = store.y[i as usize];
+            self.mask[j] = 1.0;
+        }
+        for j in indices.len()..self.k_max {
+            self.mask[j] = 0.0;
+        }
+        let inputs = [
+            literal_f32(w, &[1, self.d as i64])?,
+            literal_f32(&self.xs, &[self.k_max as i64, self.d as i64])?,
+            literal_f32(&self.ys, &[self.k_max as i64])?,
+            literal_f32(&self.mask, &[self.k_max as i64])?,
+            literal_f32(&[self.alpha, self.reg2], &[1, 2])?,
+        ];
+        let out = self.session.execute("sgd_block", &inputs)?;
+        let new_w = to_vec_f32(&out[0])?;
+        w.copy_from_slice(&new_w);
+        self.calls += 1;
+        Ok(())
+    }
+}
+
+impl BlockExecutor for PjrtExecutor {
+    fn run_block(
+        &mut self,
+        w: &mut Vec<f64>,
+        store: StoreView<'_>,
+        indices: &[u32],
+    ) -> Result<()> {
+        let mut w32: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+        for chunk in indices.chunks(self.k_max) {
+            self.run_chunk(&mut w32, store, chunk)?;
+        }
+        for (dst, &src) in w.iter_mut().zip(&w32) {
+            *dst = src as f64;
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::NativeExecutor;
+    use crate::model::RidgeModel;
+    use crate::runtime::find_artifact_dir;
+    use crate::util::rng::Pcg32;
+
+    fn toy_store(n: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg32::seeded(seed);
+        let x: Vec<f32> =
+            (0..n * d).map(|_| rng.next_gaussian() as f32).collect();
+        let y: Vec<f32> = (0..n).map(|_| rng.next_gaussian() as f32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn pjrt_matches_native_within_f32_tolerance() {
+        let Some(dir) = find_artifact_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let session = RuntimeSession::open(&dir).unwrap();
+        let d = session.manifest.constants.d;
+        let (alpha, lambda, n_full) = (1e-3, 0.05, 500);
+        let mut pjrt =
+            PjrtExecutor::new(session, alpha, lambda, n_full).unwrap();
+        let mut native =
+            NativeExecutor::new(RidgeModel::new(d, lambda, n_full), alpha);
+
+        let (x, y) = toy_store(200, d, 42);
+        let store = StoreView::new(&x, &y, d);
+        let mut rng = Pcg32::seeded(7);
+        // 700 updates -> exercises the K_MAX=512 chunking path
+        let indices: Vec<u32> =
+            (0..700).map(|_| rng.gen_range(200) as u32).collect();
+
+        let mut w_p = vec![0.3f64, -0.2, 0.1, 0.0, 0.5, -0.4, 0.25, 0.05];
+        let mut w_n = w_p.clone();
+        pjrt.run_block(&mut w_p, store, &indices).unwrap();
+        native.run_block(&mut w_n, store, &indices).unwrap();
+        for j in 0..d {
+            assert!(
+                (w_p[j] - w_n[j]).abs() < 5e-5,
+                "coord {j}: pjrt {} vs native {}",
+                w_p[j],
+                w_n[j]
+            );
+        }
+        assert!(pjrt.calls() >= 2, "chunking must have split the block");
+    }
+}

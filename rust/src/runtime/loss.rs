@@ -1,0 +1,201 @@
+//! Full-dataset loss/gradient evaluation through the `dataset_loss` /
+//! `dataset_grad` / `batch_step` artifacts (masked fixed-capacity row
+//! buffer; one artifact serves every store size).
+
+use anyhow::{ensure, Result};
+
+use super::session::{literal_f32, to_vec_f32, RuntimeSession};
+
+/// Evaluates the empirical ridge loss / gradient over a fixed-capacity
+/// padded buffer via PJRT.
+pub struct PjrtLossEvaluator {
+    session: RuntimeSession,
+    /// Padded row buffer (N_CAP × d), row-major.
+    xx: Vec<f32>,
+    /// Padded labels (N_CAP).
+    yy: Vec<f32>,
+    /// Validity mask (N_CAP).
+    mask: Vec<f32>,
+    /// Valid row count.
+    count: usize,
+    n_cap: usize,
+    d: usize,
+    /// λ/N.
+    reg: f32,
+    /// 2λ/N.
+    reg2: f32,
+}
+
+impl PjrtLossEvaluator {
+    /// Build over a session for a dataset with `n_full` samples total
+    /// (fixes the λ/N regularizer scale).
+    pub fn new(
+        mut session: RuntimeSession,
+        lambda: f64,
+        n_full: usize,
+    ) -> Result<PjrtLossEvaluator> {
+        session.preload(&["dataset_loss"])?;
+        let c = session.manifest.constants;
+        ensure!(
+            n_full <= c.n_cap,
+            "dataset of {n_full} exceeds artifact capacity {}",
+            c.n_cap
+        );
+        Ok(PjrtLossEvaluator {
+            xx: vec![0.0; c.n_cap * c.d],
+            yy: vec![0.0; c.n_cap],
+            mask: vec![0.0; c.n_cap],
+            count: 0,
+            n_cap: c.n_cap,
+            d: c.d,
+            reg: (lambda / n_full as f64) as f32,
+            reg2: (2.0 * lambda / n_full as f64) as f32,
+            session,
+        })
+    }
+
+    /// Number of valid rows currently loaded.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Append rows to the buffer (mirrors the edge store growing).
+    pub fn append_rows(&mut self, x: &[f32], y: &[f32]) -> Result<()> {
+        ensure!(x.len() == y.len() * self.d, "row shape mismatch");
+        ensure!(
+            self.count + y.len() <= self.n_cap,
+            "buffer overflow: {} + {} > {}",
+            self.count,
+            y.len(),
+            self.n_cap
+        );
+        let start = self.count;
+        self.xx[start * self.d..(start + y.len()) * self.d]
+            .copy_from_slice(x);
+        self.yy[start..start + y.len()].copy_from_slice(y);
+        for m in &mut self.mask[start..start + y.len()] {
+            *m = 1.0;
+        }
+        self.count += y.len();
+        Ok(())
+    }
+
+    /// Reset to an empty buffer.
+    pub fn clear(&mut self) {
+        self.xx.fill(0.0);
+        self.yy.fill(0.0);
+        self.mask.fill(0.0);
+        self.count = 0;
+    }
+
+    /// Empirical ridge loss over the loaded rows at parameters `w`.
+    pub fn loss(&mut self, w: &[f64]) -> Result<f64> {
+        ensure!(self.count > 0, "loss over an empty buffer");
+        let w32: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+        let inputs = [
+            literal_f32(&w32, &[1, self.d as i64])?,
+            literal_f32(&self.xx, &[self.n_cap as i64, self.d as i64])?,
+            literal_f32(&self.yy, &[self.n_cap as i64])?,
+            literal_f32(&self.mask, &[self.n_cap as i64])?,
+            literal_f32(&[self.count as f32, self.reg], &[1, 2])?,
+        ];
+        let out = self.session.execute("dataset_loss", &inputs)?;
+        Ok(to_vec_f32(&out[0])?[0] as f64)
+    }
+
+    /// Empirical ridge gradient over the loaded rows at `w`.
+    pub fn grad(&mut self, w: &[f64]) -> Result<Vec<f64>> {
+        ensure!(self.count > 0, "grad over an empty buffer");
+        let w32: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+        let inputs = [
+            literal_f32(&w32, &[1, self.d as i64])?,
+            literal_f32(&self.xx, &[self.n_cap as i64, self.d as i64])?,
+            literal_f32(&self.yy, &[self.n_cap as i64])?,
+            literal_f32(&self.mask, &[self.n_cap as i64])?,
+            literal_f32(&[self.count as f32, self.reg2], &[1, 2])?,
+        ];
+        let out = self.session.execute("dataset_grad", &inputs)?;
+        Ok(to_vec_f32(&out[0])?.iter().map(|&v| v as f64).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{synth_calhousing, SynthSpec};
+    use crate::runtime::find_artifact_dir;
+    use crate::runtime::session::RuntimeSession;
+
+    #[test]
+    fn loss_matches_native_f64() {
+        let Some(dir) = find_artifact_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let ds = synth_calhousing(&SynthSpec { n: 3000, ..Default::default() });
+        let lambda = 0.05;
+        let session = RuntimeSession::open(&dir).unwrap();
+        let mut eval = PjrtLossEvaluator::new(session, lambda, ds.n).unwrap();
+        eval.append_rows(&ds.x, &ds.y).unwrap();
+        assert_eq!(eval.count(), ds.n);
+
+        let w = vec![0.5, -0.25, 0.1, 0.7, -0.3, 0.2, 0.05, -0.6];
+        let got = eval.loss(&w).unwrap();
+        let want = ds.ridge_loss(&w, lambda / ds.n as f64);
+        let rel = (got - want).abs() / want;
+        assert!(rel < 1e-4, "pjrt {got} vs native {want}");
+    }
+
+    #[test]
+    fn grad_matches_native_f64() {
+        let Some(dir) = find_artifact_dir() else {
+            return;
+        };
+        let ds = synth_calhousing(&SynthSpec { n: 2000, ..Default::default() });
+        let lambda = 0.05;
+        let session = RuntimeSession::open(&dir).unwrap();
+        let mut eval = PjrtLossEvaluator::new(session, lambda, ds.n).unwrap();
+        eval.append_rows(&ds.x, &ds.y).unwrap();
+        let w = vec![0.3, -0.1, 0.2, 0.4, -0.5, 0.6, -0.7, 0.05];
+        let got = eval.grad(&w).unwrap();
+        // native reference
+        use crate::model::{PointModel, RidgeModel};
+        let model = RidgeModel::new(ds.d, lambda, ds.n);
+        let mut want = vec![0.0; ds.d];
+        let mut g = vec![0.0; ds.d];
+        for i in 0..ds.n {
+            model.grad_into(&w, ds.row(i), ds.y[i], &mut g);
+            for j in 0..ds.d {
+                want[j] += g[j];
+            }
+        }
+        for v in want.iter_mut() {
+            *v /= ds.n as f64;
+        }
+        for j in 0..ds.d {
+            assert!(
+                (got[j] - want[j]).abs() < 1e-3,
+                "coord {j}: {} vs {}",
+                got[j],
+                want[j]
+            );
+        }
+    }
+
+    #[test]
+    fn growing_buffer_matches_subset_loss() {
+        let Some(dir) = find_artifact_dir() else {
+            return;
+        };
+        let ds = synth_calhousing(&SynthSpec { n: 1000, ..Default::default() });
+        let session = RuntimeSession::open(&dir).unwrap();
+        let mut eval = PjrtLossEvaluator::new(session, 0.0, ds.n).unwrap();
+        // load only the first 300 rows
+        eval.append_rows(&ds.x[..300 * ds.d], &ds.y[..300]).unwrap();
+        let w = vec![0.1; 8];
+        let got = eval.loss(&w).unwrap();
+        let sub = ds.subset(&(0..300).collect::<Vec<_>>());
+        let want = sub.ridge_loss(&w, 0.0);
+        assert!((got - want).abs() / want < 1e-4, "{got} vs {want}");
+    }
+}

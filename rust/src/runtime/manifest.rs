@@ -1,0 +1,201 @@
+//! `artifacts/manifest.json` parsing and shape validation.
+//!
+//! The manifest is written by `python -m compile.aot` and is the contract
+//! between build-time Python and the Rust runtime: artifact file names,
+//! exact input/output shapes and dtypes, and the fixed capacity constants
+//! (K_MAX step slots, N_CAP row buffer, tile sizes).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::parse;
+
+/// One tensor's shape/dtype as recorded by aot.py.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact (compiled entry point).
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// HLO text file, relative to the artifact dir.
+    pub file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+    pub sha256: String,
+}
+
+/// Capacity constants shared with `python/compile/shapes.py`.
+#[derive(Clone, Copy, Debug)]
+pub struct Constants {
+    pub d: usize,
+    pub k_max: usize,
+    pub n_raw: usize,
+    pub n_cap: usize,
+    pub loss_tile: usize,
+    pub mlp_hidden: usize,
+    pub mlp_batch: usize,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub constants: Constants,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let root = parse(&text).context("parsing manifest.json")?;
+        let format = root.get("format")?.as_usize()?;
+        if format != 1 {
+            bail!("unsupported manifest format {format}");
+        }
+        let c = root.get("constants")?;
+        let constants = Constants {
+            d: c.get("d")?.as_usize()?,
+            k_max: c.get("k_max")?.as_usize()?,
+            n_raw: c.get("n_raw")?.as_usize()?,
+            n_cap: c.get("n_cap")?.as_usize()?,
+            loss_tile: c.get("loss_tile")?.as_usize()?,
+            mlp_hidden: c.get("mlp_hidden")?.as_usize()?,
+            mlp_batch: c.get("mlp_batch")?.as_usize()?,
+        };
+        let mut artifacts = BTreeMap::new();
+        for (name, meta) in root.get("artifacts")?.as_obj()? {
+            let parse_tensors = |key: &str| -> Result<Vec<TensorMeta>> {
+                meta.get(key)?
+                    .as_arr()?
+                    .iter()
+                    .map(|t| {
+                        Ok(TensorMeta {
+                            name: t
+                                .opt("name")
+                                .map(|v| v.as_str().map(str::to_string))
+                                .transpose()?
+                                .unwrap_or_default(),
+                            shape: t
+                                .get("shape")?
+                                .as_arr()?
+                                .iter()
+                                .map(|v| v.as_usize())
+                                .collect::<Result<_>>()?,
+                            dtype: t.get("dtype")?.as_str()?.to_string(),
+                        })
+                    })
+                    .collect()
+            };
+            let art = ArtifactMeta {
+                name: name.clone(),
+                file: meta.get("file")?.as_str()?.to_string(),
+                inputs: parse_tensors("inputs")?,
+                outputs: parse_tensors("outputs")?,
+                sha256: meta.get("sha256")?.as_str()?.to_string(),
+            };
+            let file = dir.join(&art.file);
+            if !file.exists() {
+                bail!("artifact file missing: {}", file.display());
+            }
+            artifacts.insert(name.clone(), art);
+        }
+        let m = Manifest { dir: dir.to_path_buf(), constants, artifacts };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Cross-check the invariants the runtime depends on.
+    pub fn validate(&self) -> Result<()> {
+        let c = &self.constants;
+        if c.n_cap % c.loss_tile != 0 {
+            bail!("n_cap {} not a multiple of loss tile {}", c.n_cap, c.loss_tile);
+        }
+        if c.n_cap < c.n_raw {
+            bail!("n_cap {} < n_raw {}", c.n_cap, c.n_raw);
+        }
+        if let Some(sgd) = self.artifacts.get("sgd_block") {
+            let want = [
+                vec![1, c.d],
+                vec![c.k_max, c.d],
+                vec![c.k_max],
+                vec![c.k_max],
+                vec![1, 2],
+            ];
+            for (tensor, want) in sgd.inputs.iter().zip(&want) {
+                if &tensor.shape != want {
+                    bail!(
+                        "sgd_block input '{}' shape {:?}, want {:?}",
+                        tensor.name,
+                        tensor.shape,
+                        want
+                    );
+                }
+                if tensor.dtype != "float32" {
+                    bail!("sgd_block expects float32 inputs");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Fetch an artifact or fail with its name.
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    /// Absolute path of an artifact's HLO text.
+    pub fn path_of(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::find_artifact_dir;
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        let Some(dir) = find_artifact_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.constants.d, 8);
+        assert_eq!(m.constants.k_max, 512);
+        assert!(m.artifacts.contains_key("sgd_block"));
+        assert!(m.artifacts.contains_key("dataset_loss"));
+        let sgd = m.artifact("sgd_block").unwrap();
+        assert_eq!(sgd.inputs.len(), 5);
+        assert_eq!(sgd.outputs[0].shape, vec![1, 8]);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let Some(dir) = find_artifact_dir() else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifact("nonexistent").is_err());
+        assert!(m.path_of("sgd_block").unwrap().exists());
+    }
+}

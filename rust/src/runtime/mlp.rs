@@ -1,0 +1,172 @@
+//! MLP training through the `mlp_step` / `mlp_loss` artifacts — the
+//! model-generality extension: the same pipelined protocol driving a
+//! nonlinear model whose forward/backward runs entirely in the AOT
+//! JAX/Pallas artifact (fused tiled matmul kernels).
+
+use anyhow::{ensure, Result};
+
+use crate::util::rng::Pcg32;
+
+use super::session::{literal_f32, to_vec_f32, RuntimeSession};
+
+/// Host-side MLP parameter set (shapes fixed by the manifest).
+#[derive(Clone, Debug)]
+pub struct MlpParams {
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+    pub w3: Vec<f32>,
+    pub b3: Vec<f32>,
+    pub d_in: usize,
+    pub hidden: usize,
+}
+
+impl MlpParams {
+    /// He-style random init.
+    pub fn init(d_in: usize, hidden: usize, rng: &mut Pcg32) -> MlpParams {
+        let g = |n: usize, scale: f64, rng: &mut Pcg32| -> Vec<f32> {
+            (0..n).map(|_| (rng.next_gaussian() * scale) as f32).collect()
+        };
+        let s1 = (2.0 / d_in as f64).sqrt();
+        let s2 = (2.0 / hidden as f64).sqrt();
+        MlpParams {
+            w1: g(d_in * hidden, s1, rng),
+            b1: vec![0.0; hidden],
+            w2: g(hidden * hidden, s2, rng),
+            b2: vec![0.0; hidden],
+            w3: g(hidden, s2, rng),
+            b3: vec![0.0; 1],
+            d_in,
+            hidden,
+        }
+    }
+
+    /// Total parameter count.
+    pub fn count(&self) -> usize {
+        self.w1.len()
+            + self.b1.len()
+            + self.w2.len()
+            + self.b2.len()
+            + self.w3.len()
+            + self.b3.len()
+    }
+}
+
+/// PJRT-backed MLP trainer.
+pub struct PjrtMlp {
+    session: RuntimeSession,
+    pub batch: usize,
+    pub d_in: usize,
+    pub hidden: usize,
+}
+
+impl PjrtMlp {
+    pub fn new(mut session: RuntimeSession) -> Result<PjrtMlp> {
+        session.preload(&["mlp_step", "mlp_loss"])?;
+        let c = session.manifest.constants;
+        Ok(PjrtMlp {
+            batch: c.mlp_batch,
+            d_in: c.d,
+            hidden: c.mlp_hidden,
+            session,
+        })
+    }
+
+    fn param_literals(&self, p: &MlpParams) -> Result<Vec<xla::Literal>> {
+        let (d, h) = (self.d_in as i64, self.hidden as i64);
+        Ok(vec![
+            literal_f32(&p.w1, &[d, h])?,
+            literal_f32(&p.b1, &[1, h])?,
+            literal_f32(&p.w2, &[h, h])?,
+            literal_f32(&p.b2, &[1, h])?,
+            literal_f32(&p.w3, &[h, 1])?,
+            literal_f32(&p.b3, &[1, 1])?,
+        ])
+    }
+
+    /// One SGD step on a batch; updates `p` in place and returns the
+    /// pre-step batch loss (as computed inside the artifact).
+    pub fn step(
+        &mut self,
+        p: &mut MlpParams,
+        x: &[f32],
+        y: &[f32],
+        alpha: f32,
+    ) -> Result<f64> {
+        ensure!(y.len() == self.batch, "batch must be exactly {}", self.batch);
+        ensure!(x.len() == self.batch * self.d_in, "x shape mismatch");
+        let mut inputs = vec![
+            literal_f32(x, &[self.batch as i64, self.d_in as i64])?,
+            literal_f32(y, &[self.batch as i64])?,
+        ];
+        inputs.extend(self.param_literals(p)?);
+        inputs.push(literal_f32(&[alpha], &[1, 1])?);
+        let out = self.session.execute("mlp_step", &inputs)?;
+        ensure!(out.len() == 7, "mlp_step returns 7 outputs");
+        p.w1 = to_vec_f32(&out[0])?;
+        p.b1 = to_vec_f32(&out[1])?;
+        p.w2 = to_vec_f32(&out[2])?;
+        p.b2 = to_vec_f32(&out[3])?;
+        p.w3 = to_vec_f32(&out[4])?;
+        p.b3 = to_vec_f32(&out[5])?;
+        Ok(to_vec_f32(&out[6])?[0] as f64)
+    }
+
+    /// Batch MSE loss at the current parameters.
+    pub fn loss(
+        &mut self,
+        p: &MlpParams,
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<f64> {
+        let mut inputs = vec![
+            literal_f32(x, &[self.batch as i64, self.d_in as i64])?,
+            literal_f32(y, &[self.batch as i64])?,
+        ];
+        inputs.extend(self.param_literals(p)?);
+        let out = self.session.execute("mlp_loss", &inputs)?;
+        Ok(to_vec_f32(&out[0])?[0] as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::find_artifact_dir;
+
+    #[test]
+    fn mlp_training_reduces_loss_via_pjrt() {
+        let Some(dir) = find_artifact_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let session = RuntimeSession::open(&dir).unwrap();
+        let mut mlp = PjrtMlp::new(session).unwrap();
+        let mut rng = Pcg32::seeded(5);
+        let mut p = MlpParams::init(mlp.d_in, mlp.hidden, &mut rng);
+        assert!(p.count() > 60_000, "param count {}", p.count());
+
+        // fixed synthetic batch: y = tanh(x . w) target
+        let n = mlp.batch;
+        let x: Vec<f32> = (0..n * mlp.d_in)
+            .map(|_| rng.next_gaussian() as f32)
+            .collect();
+        let wt: Vec<f64> = (0..mlp.d_in).map(|_| rng.next_gaussian()).collect();
+        let y: Vec<f32> = (0..n)
+            .map(|i| {
+                let dot: f64 = (0..mlp.d_in)
+                    .map(|j| x[i * mlp.d_in + j] as f64 * wt[j])
+                    .sum();
+                dot.tanh() as f32
+            })
+            .collect();
+
+        let l0 = mlp.loss(&p, &x, &y).unwrap();
+        for _ in 0..30 {
+            mlp.step(&mut p, &x, &y, 0.05).unwrap();
+        }
+        let l1 = mlp.loss(&p, &x, &y).unwrap();
+        assert!(l1 < 0.5 * l0, "loss {l0} -> {l1}");
+    }
+}

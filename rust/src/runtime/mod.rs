@@ -1,0 +1,50 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` (build time, Python) lowers each Layer-2 entry point
+//! to HLO **text** plus a `manifest.json` describing shapes; this module
+//! is the request-path half: it compiles the text on the PJRT CPU client
+//! once and executes it from the coordinator's hot loop. Python never
+//! runs here.
+//!
+//! * [`manifest`] — parse + validate `artifacts/manifest.json`
+//! * [`session`]  — PJRT client + compiled-executable cache
+//! * [`executor`] — [`PjrtExecutor`], the `BlockExecutor` backend running
+//!   the `sgd_block` Pallas kernel
+//! * [`loss`]     — full-dataset loss/gradient evaluation via artifacts
+//! * [`mlp`]      — the MLP training step used by the extension example
+
+pub mod executor;
+pub mod loss;
+pub mod manifest;
+pub mod mlp;
+pub mod session;
+
+pub use executor::PjrtExecutor;
+pub use loss::PjrtLossEvaluator;
+pub use manifest::{ArtifactMeta, Manifest, TensorMeta};
+pub use session::RuntimeSession;
+
+/// Default artifact directory, relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: `$EDGEPIPE_ARTIFACTS`, else
+/// `artifacts/` relative to the current dir, else relative to the crate
+/// root (so tests work from any cwd). Returns None when missing.
+pub fn find_artifact_dir() -> Option<std::path::PathBuf> {
+    if let Ok(dir) = std::env::var("EDGEPIPE_ARTIFACTS") {
+        let p = std::path::PathBuf::from(dir);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let cwd = std::path::PathBuf::from(DEFAULT_ARTIFACT_DIR);
+    if cwd.join("manifest.json").exists() {
+        return Some(cwd);
+    }
+    let crate_rel = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join(DEFAULT_ARTIFACT_DIR);
+    if crate_rel.join("manifest.json").exists() {
+        return Some(crate_rel);
+    }
+    None
+}

@@ -1,0 +1,144 @@
+//! The PJRT session: one CPU client plus a cache of compiled executables.
+//!
+//! Compilation happens once per artifact per process (it dominates
+//! startup, ~100 ms–1 s each); execution afterwards is pure C++ with no
+//! Python anywhere.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::manifest::Manifest;
+
+/// A live PJRT CPU client with compiled artifacts.
+pub struct RuntimeSession {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl RuntimeSession {
+    /// Create a session over an artifact directory (compiles lazily; call
+    /// [`preload`](Self::preload) to compile up front).
+    pub fn open(artifact_dir: &Path) -> Result<RuntimeSession> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(RuntimeSession {
+            client,
+            manifest,
+            executables: BTreeMap::new(),
+        })
+    }
+
+    /// Open using [`find_artifact_dir`](super::find_artifact_dir).
+    pub fn open_default() -> Result<RuntimeSession> {
+        let dir = super::find_artifact_dir().context(
+            "artifacts not found — run `make artifacts` (or set \
+             EDGEPIPE_ARTIFACTS)",
+        )?;
+        Self::open(&dir)
+    }
+
+    /// Compile (and cache) one artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let path = self.manifest.path_of(name)?;
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parsing {name} HLO: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Compile a set of artifacts up front.
+    pub fn preload(&mut self, names: &[&str]) -> Result<()> {
+        for name in names {
+            self.load(name)?;
+        }
+        Ok(())
+    }
+
+    /// Execute a loaded artifact on literal inputs; returns the flattened
+    /// output tuple (aot.py lowers everything with `return_tuple=True`).
+    pub fn execute(
+        &mut self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} result: {e}"))?;
+        literal
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {name} result: {e}"))
+    }
+}
+
+/// Build an `f32` literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    anyhow::ensure!(
+        expect as usize == data.len(),
+        "literal shape {:?} != data len {}",
+        dims,
+        data.len()
+    );
+    let flat = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(flat);
+    }
+    flat.reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape to {dims:?}: {e}"))
+}
+
+/// Read an `f32` literal back into a Vec.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("reading literal: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::find_artifact_dir;
+
+    #[test]
+    fn session_compiles_and_runs_sgd_block() {
+        let Some(dir) = find_artifact_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut sess = RuntimeSession::open(&dir).unwrap();
+        let c = sess.manifest.constants;
+        // zero alpha -> w must pass through unchanged
+        let w: Vec<f32> = (0..c.d).map(|i| i as f32 * 0.5).collect();
+        let inputs = vec![
+            literal_f32(&w, &[1, c.d as i64]).unwrap(),
+            literal_f32(&vec![0.0; c.k_max * c.d], &[c.k_max as i64, c.d as i64])
+                .unwrap(),
+            literal_f32(&vec![0.0; c.k_max], &[c.k_max as i64]).unwrap(),
+            literal_f32(&vec![1.0; c.k_max], &[c.k_max as i64]).unwrap(),
+            literal_f32(&[0.0, 0.0], &[1, 2]).unwrap(),
+        ];
+        let out = sess.execute("sgd_block", &inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        let got = to_vec_f32(&out[0]).unwrap();
+        assert_eq!(got, w);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0, 3.0], &[2, 2]).is_err());
+    }
+}

@@ -1,0 +1,185 @@
+//! The native single-sample SGD executor (paper eq. (2)).
+
+use crate::model::PointModel;
+use crate::util::rng::Pcg32;
+
+/// A borrowed view of the edge node's sample store: flat row-major
+/// covariates plus labels. The store only ever grows (paper Sec. 2:
+/// `X̃_{b+1} = X̃_b ∪ X_b`), so a `(ptr, len)` view taken at block start
+/// stays valid for the whole block.
+#[derive(Clone, Copy, Debug)]
+pub struct StoreView<'a> {
+    pub x: &'a [f32],
+    pub y: &'a [f32],
+    pub d: usize,
+}
+
+impl<'a> StoreView<'a> {
+    pub fn new(x: &'a [f32], y: &'a [f32], d: usize) -> StoreView<'a> {
+        assert_eq!(x.len(), y.len() * d, "store shape mismatch");
+        StoreView { x, y, d }
+    }
+
+    /// Number of samples in view.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Row `i` covariates.
+    #[inline]
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+}
+
+/// The native SGD engine. Stateless apart from the learning rate; sampling
+/// randomness is supplied per call so the coordinator controls streams.
+#[derive(Clone, Debug)]
+pub struct SgdEngine {
+    /// Learning rate α (paper: 1e-4).
+    pub alpha: f64,
+}
+
+impl SgdEngine {
+    pub fn new(alpha: f64) -> SgdEngine {
+        SgdEngine { alpha }
+    }
+
+    /// Run `n_updates` single-sample SGD updates on `w`, drawing ξ i.i.d.
+    /// uniform from `store` (paper eq. (2)). Returns the indices drawn
+    /// count (== n_updates) for accounting.
+    pub fn run_updates<M: PointModel>(
+        &self,
+        model: &M,
+        w: &mut [f64],
+        store: StoreView<'_>,
+        n_updates: usize,
+        rng: &mut Pcg32,
+    ) -> usize {
+        assert!(!store.is_empty(), "SGD on an empty store");
+        let n = store.len() as u64;
+        for _ in 0..n_updates {
+            let i = rng.gen_range(n) as usize;
+            model.sgd_step(w, store.row(i), store.y[i], self.alpha);
+        }
+        n_updates
+    }
+
+    /// Like [`run_updates`](Self::run_updates) but records the chosen
+    /// sample indices (used by the PJRT parity test: the same index
+    /// sequence must produce the same trajectory on both backends).
+    pub fn run_updates_traced<M: PointModel>(
+        &self,
+        model: &M,
+        w: &mut [f64],
+        store: StoreView<'_>,
+        n_updates: usize,
+        rng: &mut Pcg32,
+        trace: &mut Vec<u32>,
+    ) -> usize {
+        assert!(!store.is_empty(), "SGD on an empty store");
+        let n = store.len() as u64;
+        trace.reserve(n_updates);
+        for _ in 0..n_updates {
+            let i = rng.gen_range(n) as usize;
+            trace.push(i as u32);
+            model.sgd_step(w, store.row(i), store.y[i], self.alpha);
+        }
+        n_updates
+    }
+
+    /// Replay updates for an explicit index sequence (deterministic).
+    pub fn run_indices<M: PointModel>(
+        &self,
+        model: &M,
+        w: &mut [f64],
+        store: StoreView<'_>,
+        indices: &[u32],
+    ) {
+        for &i in indices {
+            let i = i as usize;
+            model.sgd_step(w, store.row(i), store.y[i], self.alpha);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::RidgeModel;
+
+    fn small_store() -> (Vec<f32>, Vec<f32>) {
+        // 4 samples in R^2 from w_true = [1, -1], no noise
+        let x = vec![1.0f32, 0.0, 0.0, 1.0, 1.0, 1.0, 2.0, -1.0];
+        let y = vec![1.0f32, -1.0, 0.0, 3.0];
+        (x, y)
+    }
+
+    #[test]
+    fn converges_to_ground_truth() {
+        let (x, y) = small_store();
+        let store = StoreView::new(&x, &y, 2);
+        let model = RidgeModel::new(2, 0.0, 4);
+        let engine = SgdEngine::new(0.05);
+        let mut w = vec![0.0, 0.0];
+        let mut rng = Pcg32::seeded(3);
+        engine.run_updates(&model, &mut w, store, 5000, &mut rng);
+        assert!((w[0] - 1.0).abs() < 1e-3, "w = {w:?}");
+        assert!((w[1] + 1.0).abs() < 1e-3, "w = {w:?}");
+    }
+
+    #[test]
+    fn traced_equals_untraced() {
+        let (x, y) = small_store();
+        let store = StoreView::new(&x, &y, 2);
+        let model = RidgeModel::new(2, 0.01, 4);
+        let engine = SgdEngine::new(0.02);
+        let mut w1 = vec![0.5, -0.5];
+        let mut w2 = w1.clone();
+        let mut trace = Vec::new();
+        engine.run_updates(&model, &mut w1, store, 100, &mut Pcg32::seeded(9));
+        engine.run_updates_traced(
+            &model, &mut w2, store, 100, &mut Pcg32::seeded(9), &mut trace,
+        );
+        assert_eq!(w1, w2);
+        assert_eq!(trace.len(), 100);
+    }
+
+    #[test]
+    fn replay_matches_trace() {
+        let (x, y) = small_store();
+        let store = StoreView::new(&x, &y, 2);
+        let model = RidgeModel::new(2, 0.01, 4);
+        let engine = SgdEngine::new(0.02);
+        let mut w1 = vec![0.1, 0.2];
+        let mut trace = Vec::new();
+        engine.run_updates_traced(
+            &model, &mut w1, store, 64, &mut Pcg32::seeded(4), &mut trace,
+        );
+        let mut w2 = vec![0.1, 0.2];
+        engine.run_indices(&model, &mut w2, store, &trace);
+        assert_eq!(w1, w2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_store_panics() {
+        let x: Vec<f32> = vec![];
+        let y: Vec<f32> = vec![];
+        let store = StoreView::new(&x, &y, 2);
+        let model = RidgeModel::new(2, 0.0, 1);
+        SgdEngine::new(0.1).run_updates(
+            &model,
+            &mut [0.0, 0.0],
+            store,
+            1,
+            &mut Pcg32::seeded(0),
+        );
+    }
+}

@@ -1,0 +1,181 @@
+//! Paper Fig. 3 producer: the Corollary-1 bound versus block size `n_c`
+//! for several overhead values `n_o`, with the bound optimum ñ_c (the
+//! crosses) and the full-delivery boundary `T = B_d(n_c+n_o)` (the dots).
+
+use crate::bound::corollary1::{corollary1_bound, BoundParams};
+use crate::bound::optimizer::optimize_block_size;
+use crate::metrics::writer::CsvTable;
+use crate::protocol::{Timeline, TimelineCase};
+
+use super::runner::log_grid;
+
+/// One overhead's curve and markers.
+#[derive(Clone, Debug)]
+pub struct Fig3Curve {
+    pub n_o: f64,
+    /// (n_c, bound value) samples along the curve.
+    pub points: Vec<(usize, f64)>,
+    /// The bound minimizer ñ_c (cross marker).
+    pub opt_n_c: usize,
+    pub opt_value: f64,
+    /// Smallest n_c delivering the full dataset in time (dot marker).
+    pub boundary_n_c: Option<usize>,
+    /// Which Fig. 2 case the optimum falls in.
+    pub opt_case: TimelineCase,
+}
+
+/// The full figure data.
+#[derive(Clone, Debug)]
+pub struct Fig3Output {
+    pub curves: Vec<Fig3Curve>,
+    pub params: BoundParams,
+    pub n: usize,
+    pub t_budget: f64,
+    pub tau_p: f64,
+}
+
+/// Produce Fig. 3 for the paper's setup.
+pub fn fig3_data(
+    params: &BoundParams,
+    n: usize,
+    t_budget: f64,
+    tau_p: f64,
+    n_os: &[f64],
+    grid_points: usize,
+) -> Fig3Output {
+    let grid = log_grid(n, grid_points);
+    let curves = n_os
+        .iter()
+        .map(|&n_o| {
+            let points: Vec<(usize, f64)> = grid
+                .iter()
+                .map(|&nc| {
+                    (
+                        nc,
+                        corollary1_bound(
+                            params, n, t_budget, nc as f64, n_o, tau_p, false,
+                        ),
+                    )
+                })
+                .collect();
+            let opt = optimize_block_size(params, n, t_budget, n_o, tau_p);
+            Fig3Curve {
+                n_o,
+                points,
+                opt_n_c: opt.n_c,
+                opt_value: opt.value,
+                boundary_n_c: Timeline::full_delivery_boundary(
+                    n, t_budget, n_o,
+                ),
+                opt_case: opt.case,
+            }
+        })
+        .collect();
+    Fig3Output {
+        curves,
+        params: *params,
+        n,
+        t_budget,
+        tau_p,
+    }
+}
+
+impl Fig3Output {
+    /// Long-form CSV: n_o, n_c, bound.
+    pub fn curve_table(&self) -> CsvTable {
+        let mut t = CsvTable::new(&["n_o", "n_c", "bound"]);
+        for c in &self.curves {
+            for &(nc, v) in &c.points {
+                t.push_nums(&[c.n_o, nc as f64, v]);
+            }
+        }
+        t
+    }
+
+    /// Marker summary CSV: n_o, opt n_c, opt bound, boundary, case.
+    pub fn marker_table(&self) -> CsvTable {
+        let mut t = CsvTable::new(&[
+            "n_o",
+            "opt_n_c",
+            "opt_bound",
+            "boundary_n_c",
+            "opt_case",
+        ]);
+        for c in &self.curves {
+            t.push_raw(vec![
+                format!("{}", c.n_o),
+                format!("{}", c.opt_n_c),
+                format!("{}", c.opt_value),
+                c.boundary_n_c
+                    .map(|b| b.to_string())
+                    .unwrap_or_else(|| "none".into()),
+                format!("{:?}", c.opt_case),
+            ]);
+        }
+        t
+    }
+
+    /// Render the figure as aligned text rows (bench/CLI output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "Fig. 3 — Corollary-1 bound vs n_c  (N={}, T={}, τ_p={}, α={}, \
+             L={:.3}, c={:.3}, D={:.3})\n",
+            self.n,
+            self.t_budget,
+            self.tau_p,
+            self.params.alpha,
+            self.params.big_l,
+            self.params.c,
+            self.params.d_diam
+        ));
+        for c in &self.curves {
+            out.push_str(&format!(
+                "  n_o={:8}: ñ_c={:6} bound(ñ_c)={:.5} boundary={:>6} \
+                 case={:?}\n",
+                c.n_o,
+                c.opt_n_c,
+                c.opt_value,
+                c.boundary_n_c
+                    .map(|b| b.to_string())
+                    .unwrap_or_else(|| "—".into()),
+                c.opt_case
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_shape_holds() {
+        let p = BoundParams::paper_fig3(3.0);
+        let out = fig3_data(
+            &p,
+            18576,
+            1.5 * 18576.0,
+            1.0,
+            &[1.0, 10.0, 100.0, 1000.0],
+            60,
+        );
+        assert_eq!(out.curves.len(), 4);
+        // optima increase with overhead (paper Sec. 4 discussion)
+        let opts: Vec<usize> = out.curves.iter().map(|c| c.opt_n_c).collect();
+        for w in opts.windows(2) {
+            assert!(w[1] > w[0], "ñ_c must grow with n_o: {opts:?}");
+        }
+        // every curve's optimum is interior and below the bound at n_c = N
+        for c in &out.curves {
+            assert!(c.opt_n_c > 1 && c.opt_n_c < 18576);
+            let at_n = c.points.last().unwrap().1;
+            assert!(c.opt_value < at_n);
+        }
+        // tables well-formed
+        assert_eq!(out.marker_table().len(), 4);
+        assert!(out.curve_table().len() >= 4 * 50);
+        assert!(out.render().contains("ñ_c"));
+    }
+}

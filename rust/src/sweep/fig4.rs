@@ -1,0 +1,291 @@
+//! Paper Fig. 4 producer: average training loss vs normalized time for
+//! several block sizes, including the bound optimum ñ_c and the
+//! experimentally optimal n_c* — plus the paper's headline comparison:
+//! how much final loss is lost by trusting the bound instead of running
+//! the (expensive) experimental sweep (paper: ≈ 3.8 %).
+
+use crate::bound::corollary1::BoundParams;
+use crate::bound::optimizer::optimize_block_size;
+use crate::channel::IdealChannel;
+use crate::coordinator::des::{run_des, DesConfig};
+use crate::coordinator::executor::NativeExecutor;
+use crate::data::Dataset;
+use crate::metrics::curve::mean_curve;
+use crate::metrics::writer::CsvTable;
+use crate::model::RidgeModel;
+use crate::util::pool::{default_threads, parallel_tasks};
+
+use super::runner::{grid_final_losses, log_grid, McStats};
+
+/// Configuration for the Fig. 4 experiment.
+#[derive(Clone, Debug)]
+pub struct Fig4Config {
+    /// Overhead n_o for every run.
+    pub n_o: f64,
+    /// τ_p.
+    pub tau_p: f64,
+    /// Deadline T.
+    pub t_budget: f64,
+    /// α, λ, init std, base seed (paper values by default).
+    pub alpha: f64,
+    pub lambda: f64,
+    pub init_std: f64,
+    pub seed: u64,
+    /// Monte-Carlo repetitions per point.
+    pub seeds: usize,
+    /// Reference block sizes to plot alongside ñ_c and n_c* (dotted
+    /// curves in the paper).
+    pub reference_n_cs: Vec<usize>,
+    /// Grid resolution for the experimental-optimum search.
+    pub search_points: usize,
+    /// Points on the output time grid.
+    pub curve_points: usize,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+}
+
+impl Fig4Config {
+    /// Paper-setup defaults for a given overhead.
+    pub fn paper(n_o: f64, t_budget: f64) -> Fig4Config {
+        Fig4Config {
+            n_o,
+            tau_p: 1.0,
+            t_budget,
+            alpha: 1e-4,
+            lambda: 0.05,
+            init_std: 1.0,
+            seed: 1,
+            seeds: 10,
+            reference_n_cs: vec![10, 1000, 18576],
+            search_points: 24,
+            curve_points: 120,
+            threads: 0,
+        }
+    }
+}
+
+/// One plotted curve.
+#[derive(Clone, Debug)]
+pub struct Fig4Curve {
+    pub label: String,
+    pub n_c: usize,
+    /// Time grid and mean loss values.
+    pub grid: Vec<f64>,
+    pub mean_loss: Vec<f64>,
+    /// Mean final loss across seeds.
+    pub final_loss: f64,
+}
+
+/// The full figure data.
+#[derive(Clone, Debug)]
+pub struct Fig4Output {
+    pub curves: Vec<Fig4Curve>,
+    /// Bound optimum.
+    pub bound_n_c: usize,
+    /// Experimental optimum.
+    pub exp_n_c: usize,
+    /// Mean final losses at both.
+    pub bound_final: f64,
+    pub exp_final: f64,
+    /// The search grid results (n_c -> final-loss stats).
+    pub search: Vec<(usize, McStats)>,
+    /// Relative penalty of using ñ_c instead of n_c*
+    /// (paper reports ≈ 3.8 % in final training loss).
+    pub bound_penalty: f64,
+}
+
+fn mean_loss_curve(
+    ds: &Dataset,
+    base: &DesConfig,
+    n_c: usize,
+    seeds: usize,
+    threads: usize,
+    points: usize,
+) -> (Vec<f64>, Vec<f64>, f64) {
+    let curves: Vec<Vec<(f64, f64)>> = parallel_tasks(seeds, threads, |s| {
+        let cfg = DesConfig {
+            n_c,
+            seed: base.seed.wrapping_add(s as u64),
+            loss_every: (base.t_budget / base.tau_p / 400.0).max(1.0) as usize,
+            record_blocks: false,
+            ..base.clone()
+        };
+        let mut exec = NativeExecutor::new(
+            RidgeModel::new(ds.d, cfg.lambda, ds.n),
+            cfg.alpha,
+        );
+        run_des(ds, &cfg, &mut IdealChannel, &mut exec)
+            .expect("DES run failed")
+            .curve
+    });
+    let (grid, mean) = mean_curve(&curves, base.t_budget, points);
+    let final_loss = *mean.last().unwrap();
+    (grid, mean, final_loss)
+}
+
+/// Produce the full Fig. 4 dataset.
+pub fn fig4_data(
+    ds: &Dataset,
+    params: &BoundParams,
+    cfg: &Fig4Config,
+) -> Fig4Output {
+    let threads =
+        if cfg.threads == 0 { default_threads() } else { cfg.threads };
+    let base = DesConfig {
+        n_c: 1, // set per curve
+        n_o: cfg.n_o,
+        tau_p: cfg.tau_p,
+        t_budget: cfg.t_budget,
+        alpha: cfg.alpha,
+        lambda: cfg.lambda,
+        init_std: cfg.init_std,
+        seed: cfg.seed,
+        loss_every: 0,
+        record_blocks: false,
+        store_capacity: None,
+        collect_snapshots: false,
+        event_capacity: 0,
+    };
+
+    // 1. bound optimum ñ_c (cheap, closed form)
+    let bound_n_c =
+        optimize_block_size(params, ds.n, cfg.t_budget, cfg.n_o, cfg.tau_p)
+            .n_c;
+
+    // 2. experimental optimum n_c*: MC sweep over a log grid
+    let grid = log_grid(ds.n, cfg.search_points);
+    let search = grid_final_losses(ds, &base, &grid, cfg.seeds, threads);
+    let exp_n_c = search
+        .iter()
+        .min_by(|a, b| a.1.mean.partial_cmp(&b.1.mean).unwrap())
+        .expect("non-empty search grid")
+        .0;
+
+    // 3. average loss curves for ñ_c, n_c* and the references
+    let mut plot: Vec<(String, usize)> = vec![
+        (format!("bound ñ_c={bound_n_c}"), bound_n_c),
+        (format!("experimental n_c*={exp_n_c}"), exp_n_c),
+    ];
+    for &nc in &cfg.reference_n_cs {
+        let nc = nc.min(ds.n);
+        if nc != bound_n_c && nc != exp_n_c {
+            plot.push((format!("n_c={nc}"), nc));
+        }
+    }
+    let mut curves = Vec::new();
+    let mut bound_final = f64::NAN;
+    let mut exp_final = f64::NAN;
+    for (label, nc) in plot {
+        let (grid, mean, final_loss) = mean_loss_curve(
+            ds,
+            &base,
+            nc,
+            cfg.seeds,
+            threads,
+            cfg.curve_points,
+        );
+        if label.starts_with("bound") {
+            bound_final = final_loss;
+        }
+        if label.starts_with("experimental") {
+            exp_final = final_loss;
+        }
+        curves.push(Fig4Curve {
+            label,
+            n_c: nc,
+            grid,
+            mean_loss: mean,
+            final_loss,
+        });
+    }
+    let bound_penalty = (bound_final - exp_final) / exp_final;
+    Fig4Output {
+        curves,
+        bound_n_c,
+        exp_n_c,
+        bound_final,
+        exp_final,
+        search,
+        bound_penalty,
+    }
+}
+
+impl Fig4Output {
+    /// Long-form CSV: label, n_c, time, mean loss.
+    pub fn curve_table(&self) -> CsvTable {
+        let mut t = CsvTable::new(&["label", "n_c", "time", "mean_loss"]);
+        for c in &self.curves {
+            for (i, &time) in c.grid.iter().enumerate() {
+                t.push_raw(vec![
+                    c.label.clone(),
+                    c.n_c.to_string(),
+                    format!("{time}"),
+                    format!("{}", c.mean_loss[i]),
+                ]);
+            }
+        }
+        t
+    }
+
+    /// The experimental-search CSV: n_c, mean final loss, std.
+    pub fn search_table(&self) -> CsvTable {
+        let mut t = CsvTable::new(&["n_c", "final_loss_mean", "final_loss_std"]);
+        for (nc, s) in &self.search {
+            t.push_nums(&[*nc as f64, s.mean, s.std]);
+        }
+        t
+    }
+
+    /// Render summary rows (bench/CLI output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("Fig. 4 — average training loss vs time\n");
+        for c in &self.curves {
+            out.push_str(&format!(
+                "  {:<28} final loss = {:.6}\n",
+                c.label, c.final_loss
+            ));
+        }
+        out.push_str(&format!(
+            "  bound-vs-experimental penalty: {:+.2}% (paper: ≈ +3.8%)\n",
+            100.0 * self.bound_penalty
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{synth_calhousing, SynthSpec};
+
+    #[test]
+    fn small_scale_fig4_pipeline_works() {
+        let ds = synth_calhousing(&SynthSpec { n: 600, ..Default::default() });
+        let params = BoundParams {
+            alpha: 1e-3,
+            ..BoundParams::paper_fig3(3.0)
+        };
+        let cfg = Fig4Config {
+            alpha: 1e-3,
+            seeds: 3,
+            search_points: 6,
+            curve_points: 30,
+            reference_n_cs: vec![600],
+            ..Fig4Config::paper(10.0, 900.0)
+        };
+        let out = fig4_data(&ds, &params, &cfg);
+        assert!(out.curves.len() >= 2);
+        for c in &out.curves {
+            assert_eq!(c.grid.len(), 30);
+            // loss must broadly decrease
+            assert!(
+                c.mean_loss.last().unwrap() < c.mean_loss.first().unwrap()
+            );
+        }
+        assert!(out.bound_penalty.is_finite());
+        assert!(out.exp_final <= out.bound_final + 1e-9);
+        assert!(!out.search_table().is_empty());
+        assert!(out.curve_table().len() >= 60);
+    }
+}

@@ -1,0 +1,15 @@
+//! Monte-Carlo sweep harness and figure-data producers.
+//!
+//! * [`runner`] — parallel seed×parameter sweeps over the DES fast path
+//! * [`fig3`]   — paper Fig. 3: Corollary-1 bound vs `n_c` per overhead
+//! * [`fig4`]   — paper Fig. 4: average training-loss curves vs time for
+//!   selected block sizes, the bound optimum ñ_c and the experimental
+//!   optimum n_c*
+
+pub mod fig3;
+pub mod fig4;
+pub mod runner;
+
+pub use fig3::{fig3_data, Fig3Output};
+pub use fig4::{fig4_data, Fig4Config, Fig4Output};
+pub use runner::{grid_final_losses, mc_final_loss, McStats};

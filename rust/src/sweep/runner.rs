@@ -1,0 +1,121 @@
+//! Parallel Monte-Carlo sweeps over the DES fast path.
+
+use crate::channel::IdealChannel;
+use crate::coordinator::des::{run_des, DesConfig};
+use crate::coordinator::executor::NativeExecutor;
+use crate::data::Dataset;
+use crate::model::RidgeModel;
+use crate::util::pool::{default_threads, parallel_tasks};
+use crate::util::stats::Welford;
+
+/// Mean/std of a Monte-Carlo estimate.
+#[derive(Clone, Copy, Debug)]
+pub struct McStats {
+    pub mean: f64,
+    pub std: f64,
+    pub sem: f64,
+    pub n: usize,
+}
+
+/// Average final training loss of the protocol at one configuration,
+/// over `seeds` Monte-Carlo repetitions (parallel across a thread pool).
+pub fn mc_final_loss(
+    ds: &Dataset,
+    base: &DesConfig,
+    seeds: usize,
+    threads: usize,
+) -> McStats {
+    let threads = if threads == 0 { default_threads() } else { threads };
+    let losses = parallel_tasks(seeds, threads, |s| {
+        let cfg = DesConfig {
+            seed: base.seed.wrapping_add(s as u64),
+            loss_every: 0,
+            record_blocks: false,
+            collect_snapshots: false,
+            event_capacity: 0,
+            ..base.clone()
+        };
+        let mut exec = NativeExecutor::new(
+            RidgeModel::new(ds.d, cfg.lambda, ds.n),
+            cfg.alpha,
+        );
+        run_des(ds, &cfg, &mut IdealChannel, &mut exec)
+            .expect("DES run failed")
+            .final_loss
+    });
+    let mut w = Welford::new();
+    for &l in &losses {
+        w.push(l);
+    }
+    McStats { mean: w.mean(), std: w.std(), sem: w.sem(), n: seeds }
+}
+
+/// Final-loss statistics for each block size in `n_cs` (the experimental
+/// optimum finder behind Fig. 4).
+pub fn grid_final_losses(
+    ds: &Dataset,
+    base: &DesConfig,
+    n_cs: &[usize],
+    seeds: usize,
+    threads: usize,
+) -> Vec<(usize, McStats)> {
+    n_cs.iter()
+        .map(|&n_c| {
+            let cfg = DesConfig { n_c, ..base.clone() };
+            (n_c, mc_final_loss(ds, &cfg, seeds, threads))
+        })
+        .collect()
+}
+
+/// A log-spaced integer grid over `[1, n]` with `points` unique values.
+pub fn log_grid(n: usize, points: usize) -> Vec<usize> {
+    assert!(n >= 1 && points >= 2);
+    let mut grid: Vec<usize> = (0..points)
+        .map(|i| {
+            let t = i as f64 / (points - 1) as f64;
+            ((n as f64).powf(t)).round() as usize
+        })
+        .map(|v| v.clamp(1, n))
+        .collect();
+    grid.dedup();
+    grid
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{synth_calhousing, SynthSpec};
+
+    #[test]
+    fn mc_stats_are_stable_across_thread_counts() {
+        let ds = synth_calhousing(&SynthSpec { n: 400, ..Default::default() });
+        let base = DesConfig::paper(40, 5.0, 800.0, 100);
+        let a = mc_final_loss(&ds, &base, 6, 1);
+        let b = mc_final_loss(&ds, &base, 6, 4);
+        assert_eq!(a.mean, b.mean, "thread count must not change results");
+        assert_eq!(a.n, 6);
+        assert!(a.std >= 0.0);
+    }
+
+    #[test]
+    fn grid_runs_every_point() {
+        let ds = synth_calhousing(&SynthSpec { n: 300, ..Default::default() });
+        let base = DesConfig::paper(1, 2.0, 500.0, 3);
+        let rows = grid_final_losses(&ds, &base, &[10, 50, 150], 3, 2);
+        assert_eq!(rows.len(), 3);
+        for (nc, stats) in rows {
+            assert!(nc > 0);
+            assert!(stats.mean.is_finite());
+        }
+    }
+
+    #[test]
+    fn log_grid_shape() {
+        let g = log_grid(18576, 40);
+        assert_eq!(*g.first().unwrap(), 1);
+        assert_eq!(*g.last().unwrap(), 18576);
+        for w in g.windows(2) {
+            assert!(w[1] > w[0], "grid must be strictly increasing");
+        }
+    }
+}

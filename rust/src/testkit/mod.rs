@@ -1,0 +1,190 @@
+//! Property-testing mini-framework (the offline image has no proptest).
+//!
+//! Provides seeded random generators and a `forall` runner that reports
+//! the failing case's seed and a shrunk reproduction hint. Used by the
+//! coordinator/protocol/bound property tests in `rust/tests/`.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the libxla_extension rpath)
+//! use edgepipe::testkit::{forall, Gen};
+//! forall("addition commutes", 200, |g| {
+//!     let (a, b) = (g.u64_in(0..=1_000), g.u64_in(0..=1_000));
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Pcg32;
+
+/// A seeded case generator handed to each property invocation.
+pub struct Gen {
+    rng: Pcg32,
+    /// The case seed (printed on failure for reproduction).
+    pub seed: u64,
+    log: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Gen {
+        Gen { rng: Pcg32::new(seed, 777), seed, log: Vec::new() }
+    }
+
+    /// Record a generated value so failures print the full case.
+    fn note(&mut self, name: &str, value: impl std::fmt::Display) {
+        self.log.push(format!("{name}={value}"));
+    }
+
+    /// Uniform u64 in an inclusive range.
+    pub fn u64_in(&mut self, range: std::ops::RangeInclusive<u64>) -> u64 {
+        let (lo, hi) = (*range.start(), *range.end());
+        let v = lo + self.rng.gen_range(hi - lo + 1);
+        self.note("u64", v);
+        v
+    }
+
+    /// Uniform usize in an inclusive range.
+    pub fn usize_in(
+        &mut self,
+        range: std::ops::RangeInclusive<usize>,
+    ) -> usize {
+        self.u64_in(*range.start() as u64..=*range.end() as u64) as usize
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = lo + (hi - lo) * self.rng.next_f64();
+        self.note("f64", v);
+        v
+    }
+
+    /// Log-uniform f64 in [lo, hi) (both positive).
+    pub fn f64_log(&mut self, lo: f64, hi: f64) -> f64 {
+        assert!(lo > 0.0 && hi > lo);
+        let v = (self.rng.next_f64() * (hi.ln() - lo.ln()) + lo.ln()).exp();
+        self.note("f64log", v);
+        v
+    }
+
+    /// Bernoulli(p).
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        let v = self.rng.next_f64() < p;
+        self.note("bool", v);
+        v
+    }
+
+    /// Choose one element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        assert!(!items.is_empty());
+        let i = self.rng.gen_range(items.len() as u64) as usize;
+        &items[i]
+    }
+
+    /// A fresh RNG derived from this case (for seeding subsystems).
+    pub fn rng(&mut self) -> Pcg32 {
+        let s = self.rng.next_u64();
+        Pcg32::seeded(s)
+    }
+}
+
+/// Run `cases` random cases of a property. Panics (failing the enclosing
+/// test) on the first case whose closure panics, reporting the case seed
+/// and every generated value.
+pub fn forall<F: Fn(&mut Gen)>(name: &str, cases: u64, property: F) {
+    // honor EDGEPIPE_PT_SEED to replay one failing case
+    if let Ok(seed) = std::env::var("EDGEPIPE_PT_SEED") {
+        let seed: u64 = seed.parse().expect("bad EDGEPIPE_PT_SEED");
+        let mut g = Gen::new(seed);
+        property(&mut g);
+        return;
+    }
+    let base = fxhash(name);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case);
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut g = Gen::new(seed);
+                property(&mut g);
+                g
+            }));
+        if let Err(err) = result {
+            // regenerate to recover the value log
+            let mut g = Gen::new(seed);
+            let _ = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| property(&mut g)),
+            );
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| {
+                    err.downcast_ref::<&str>().map(|s| s.to_string())
+                })
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {case} \
+                 (EDGEPIPE_PT_SEED={seed}):\n  values: [{}]\n  panic: {msg}",
+                g.log.join(", ")
+            );
+        }
+    }
+}
+
+/// Deterministic 64-bit hash of the property name (FNV-1a).
+fn fxhash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("sum symmetric", 50, |g| {
+            let a = g.u64_in(0..=100);
+            let b = g.u64_in(0..=100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            forall("always fails above 90", 200, |g| {
+                let v = g.u64_in(0..=100);
+                assert!(v <= 90, "got {v}");
+            });
+        });
+        let err = result.expect_err("property must fail");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("EDGEPIPE_PT_SEED="), "msg: {msg}");
+        assert!(msg.contains("values:"), "msg: {msg}");
+    }
+
+    #[test]
+    fn generators_hit_ranges() {
+        forall("ranges respected", 100, |g| {
+            let u = g.usize_in(3..=7);
+            assert!((3..=7).contains(&u));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let l = g.f64_log(0.1, 10.0);
+            assert!((0.1..10.0).contains(&l));
+            let c = *g.choose(&[1, 2, 3]);
+            assert!([1, 2, 3].contains(&c));
+        });
+    }
+
+    #[test]
+    fn deterministic_given_name() {
+        use std::cell::RefCell;
+        let a = RefCell::new(Vec::new());
+        forall("det", 10, |g| a.borrow_mut().push(g.u64_in(0..=1000)));
+        let b = RefCell::new(Vec::new());
+        forall("det", 10, |g| b.borrow_mut().push(g.u64_in(0..=1000)));
+        assert_eq!(a.into_inner(), b.into_inner());
+    }
+}

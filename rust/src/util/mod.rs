@@ -1,0 +1,9 @@
+//! General-purpose substrates built in-repo (the offline image vendors only
+//! `xla` + `anyhow`, so RNG, JSON, stats, threading and time formatting are
+//! all implemented and tested here).
+
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+pub mod timefmt;

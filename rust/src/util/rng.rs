@@ -1,0 +1,256 @@
+//! Deterministic pseudo-random number generation (PCG-XSH-RR 64/32).
+//!
+//! Every stochastic component in the crate — dataset synthesis, the
+//! device's without-replacement sample selection, the edge node's i.i.d.
+//! draws for SGD (paper eq. (2)), Monte-Carlo sweeps — draws from this
+//! generator, keyed by an explicit `u64` seed, so every run is exactly
+//! reproducible and the threaded coordinator can be made bit-identical to
+//! the discrete-event fast path.
+//!
+//! Reference: M. E. O'Neill, "PCG: A Family of Simple Fast Space-Efficient
+//! Statistically Good Algorithms for Random Number Generation" (2014).
+//! Output function XSH-RR on a 64-bit LCG state; passes the reference test
+//! vectors (see tests below).
+
+const MULTIPLIER: u64 = 6364136223846793005;
+
+/// PCG-XSH-RR 64/32 generator with an explicit stream id.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    /// Create a generator from `(seed, stream)`. Different streams with the
+    /// same seed are independent sequences.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        let _ = rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        let _ = rng.next_u32();
+        rng
+    }
+
+    /// Convenience constructor on stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Derive an independent child generator (used to give each
+    /// block/thread its own stream while keeping runs reproducible).
+    pub fn split(&mut self, stream: u64) -> Pcg32 {
+        Pcg32::new(self.next_u64(), stream)
+    }
+
+    /// Next 32 uniformly random bits.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(MULTIPLIER).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next 64 uniformly random bits (two 32-bit draws).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform integer in `[0, bound)` — Lemire's multiply-shift with
+    /// rejection (unbiased, and ~2× faster than the modulo method: the
+    /// common case costs one 64×64→128 multiply and no division).
+    #[inline]
+    pub fn gen_range(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "gen_range bound must be positive");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut lo = m as u64;
+        if lo < bound {
+            // rejection threshold: 2^64 mod bound (single division, only
+            // on the rare low-fringe path)
+            let t = bound.wrapping_neg() % bound;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Standard normal via Box–Muller (no cached spare: keeps the stream
+    /// position a pure function of the number of draws).
+    pub fn next_gaussian(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, slice: &mut [T]) {
+        let n = slice.len();
+        for i in (1..n).rev() {
+            let j = self.gen_range((i + 1) as u64) as usize;
+            slice.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices uniformly from `[0, n)` (partial
+    /// Fisher–Yates; O(n) memory, O(k) swaps). Used by the device to pick
+    /// which untransmitted samples go into the next block (paper Sec. 2).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} distinct from {n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.gen_range((n - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference vector from the PCG paper's minimal C implementation
+    /// (pcg32_srandom(42, 54); six outputs).
+    #[test]
+    fn matches_reference_vectors() {
+        let mut rng = Pcg32::new(42, 54);
+        let expected: [u32; 6] = [
+            0xa15c02b7, 0x7b47f409, 0xba1d3330, 0x83d2f293, 0xbfa4784b,
+            0xcbed606e,
+        ];
+        for e in expected {
+            assert_eq!(rng.next_u32(), e);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a: Vec<u32> = (0..16).map({
+            let mut r = Pcg32::seeded(7);
+            move |_| r.next_u32()
+        }).collect();
+        let b: Vec<u32> = (0..16).map({
+            let mut r = Pcg32::seeded(7);
+            move |_| r.next_u32()
+        }).collect();
+        assert_eq!(a, b);
+        let c: Vec<u32> = (0..16).map({
+            let mut r = Pcg32::seeded(8);
+            move |_| r.next_u32()
+        }).collect();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn gen_range_bounds_and_coverage() {
+        let mut rng = Pcg32::seeded(1);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = rng.gen_range(7) as usize;
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn uniform_mean_and_variance() {
+        let mut rng = Pcg32::seeded(2);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let v = rng.next_f64();
+            s += v;
+            s2 += v * v;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 5e-3, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 5e-3, "var={var}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Pcg32::seeded(3);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let v = rng.next_gaussian();
+            s += v;
+            s2 += v * v;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 2e-2, "mean={mean}");
+        assert!((var - 1.0).abs() < 2e-2, "var={var}");
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct_and_uniformish() {
+        let mut rng = Pcg32::seeded(4);
+        let got = rng.sample_distinct(100, 40);
+        assert_eq!(got.len(), 40);
+        let mut sorted = got.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 40, "duplicates in sample");
+        assert!(sorted.iter().all(|&i| i < 100));
+        // frequency check: each index appears with prob 0.4
+        let mut counts = [0u32; 100];
+        let mut r = Pcg32::seeded(5);
+        for _ in 0..2000 {
+            for i in r.sample_distinct(100, 40) {
+                counts[i] += 1;
+            }
+        }
+        for &c in &counts {
+            let p = c as f64 / 2000.0;
+            assert!((p - 0.4).abs() < 0.06, "p={p}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg32::seeded(6);
+        let mut v: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut parent = Pcg32::seeded(9);
+        let mut a = parent.split(1);
+        let mut b = parent.split(2);
+        let va: Vec<u32> = (0..8).map(|_| a.next_u32()).collect();
+        let vb: Vec<u32> = (0..8).map(|_| b.next_u32()).collect();
+        assert_ne!(va, vb);
+    }
+}

@@ -1,0 +1,137 @@
+//! Native-f64 vs PJRT-f32 backend parity over full protocol runs, and
+//! the bound/experiment integration checks that need both backends.
+//!
+//! These tests skip (with a note) when `make artifacts` has not run.
+
+use edgepipe::channel::IdealChannel;
+use edgepipe::coordinator::des::{run_des, DesConfig};
+use edgepipe::coordinator::executor::NativeExecutor;
+use edgepipe::data::split::train_split;
+use edgepipe::data::synth::{synth_calhousing, SynthSpec};
+use edgepipe::model::RidgeModel;
+use edgepipe::runtime::{find_artifact_dir, PjrtExecutor, RuntimeSession};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = find_artifact_dir();
+    if dir.is_none() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+    }
+    dir
+}
+
+#[test]
+fn full_protocol_run_matches_native_trajectory() {
+    let Some(dir) = artifacts() else { return };
+    let raw = synth_calhousing(&SynthSpec { n: 2000, ..Default::default() });
+    let (train, _) = train_split(&raw, 0.9, 42);
+    let cfg = DesConfig {
+        record_blocks: false,
+        loss_every: 500,
+        ..DesConfig::paper(150, 20.0, 2500.0, 11)
+    };
+
+    let mut native = NativeExecutor::new(
+        RidgeModel::new(train.d, cfg.lambda, train.n),
+        cfg.alpha,
+    );
+    let res_native =
+        run_des(&train, &cfg, &mut IdealChannel, &mut native).unwrap();
+
+    let session = RuntimeSession::open(&dir).unwrap();
+    let mut pjrt =
+        PjrtExecutor::new(session, cfg.alpha, cfg.lambda, train.n).unwrap();
+    let res_pjrt =
+        run_des(&train, &cfg, &mut IdealChannel, &mut pjrt).unwrap();
+
+    // identical protocol accounting
+    assert_eq!(res_native.updates, res_pjrt.updates);
+    assert_eq!(res_native.samples_delivered, res_pjrt.samples_delivered);
+    assert_eq!(res_native.blocks_sent, res_pjrt.blocks_sent);
+    // trajectory agreement to f32 tolerance
+    for (a, b) in res_native.final_w.iter().zip(&res_pjrt.final_w) {
+        assert!((a - b).abs() < 1e-3, "w diverged: {a} vs {b}");
+    }
+    let rel =
+        (res_native.final_loss - res_pjrt.final_loss).abs() / res_native.final_loss;
+    assert!(rel < 1e-3, "final loss diverged: rel {rel}");
+    // loss curves sampled at the same instants
+    assert_eq!(res_native.curve.len(), res_pjrt.curve.len());
+    for ((t1, l1), (t2, l2)) in res_native.curve.iter().zip(&res_pjrt.curve)
+    {
+        assert_eq!(t1, t2);
+        assert!((l1 - l2).abs() / l1 < 1e-3, "curve diverged at t={t1}");
+    }
+}
+
+#[test]
+fn threaded_pipeline_works_with_pjrt_backend() {
+    // The real two-thread pipeline driving the PJRT executor (the
+    // executor stays on the edge thread; packets stream from the device
+    // thread): must equal the DES with the same backend exactly, since
+    // both consume identical RNG streams and the same artifact.
+    let Some(dir) = artifacts() else { return };
+    use edgepipe::coordinator::pipeline::run_pipelined;
+    let raw = synth_calhousing(&SynthSpec { n: 1200, ..Default::default() });
+    let (train, _) = train_split(&raw, 0.9, 42);
+    let cfg = DesConfig {
+        record_blocks: false,
+        ..DesConfig::paper(120, 15.0, 1600.0, 5)
+    };
+    let mk = || {
+        let session = RuntimeSession::open(&dir).unwrap();
+        PjrtExecutor::new(session, cfg.alpha, cfg.lambda, train.n).unwrap()
+    };
+    let des =
+        run_des(&train, &cfg, &mut IdealChannel, &mut mk()).unwrap();
+    let pipe =
+        run_pipelined(&train, &cfg, &mut IdealChannel, &mut mk()).unwrap();
+    assert_eq!(des.final_w, pipe.final_w, "PJRT pipeline != PJRT DES");
+    assert_eq!(des.updates, pipe.updates);
+    assert_eq!(des.backend, "pjrt");
+    assert_eq!(pipe.backend, "pjrt");
+}
+
+#[test]
+fn pjrt_loss_evaluator_tracks_growing_store() {
+    let Some(dir) = artifacts() else { return };
+    use edgepipe::runtime::PjrtLossEvaluator;
+    let ds = synth_calhousing(&SynthSpec { n: 900, ..Default::default() });
+    let session = RuntimeSession::open(&dir).unwrap();
+    let mut eval = PjrtLossEvaluator::new(session, 0.05, ds.n).unwrap();
+    let w = vec![0.2f64; ds.d];
+    // grow in 3 chunks, cross-check against native subset loss each time
+    for chunk in 0..3usize {
+        let lo = chunk * 300;
+        let hi = lo + 300;
+        eval.append_rows(&ds.x[lo * ds.d..hi * ds.d], &ds.y[lo..hi])
+            .unwrap();
+        let got = eval.loss(&w).unwrap();
+        let subset = ds.subset(&(0..hi).collect::<Vec<_>>());
+        let want = subset.ridge_loss(&w, 0.05 / ds.n as f64);
+        assert!(
+            (got - want).abs() / want < 1e-3,
+            "chunk {chunk}: {got} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_grad_descends_the_real_loss() {
+    let Some(dir) = artifacts() else { return };
+    use edgepipe::runtime::PjrtLossEvaluator;
+    let ds = synth_calhousing(&SynthSpec { n: 1200, ..Default::default() });
+    let session = RuntimeSession::open(&dir).unwrap();
+    let mut eval = PjrtLossEvaluator::new(session, 0.05, ds.n).unwrap();
+    eval.append_rows(&ds.x, &ds.y).unwrap();
+    let mut w = vec![0.5f64; ds.d];
+    let mut prev = eval.loss(&w).unwrap();
+    for _ in 0..20 {
+        let g = eval.grad(&w).unwrap();
+        for j in 0..ds.d {
+            w[j] -= 0.05 * g[j];
+        }
+        let cur = eval.loss(&w).unwrap();
+        assert!(cur <= prev * 1.001, "batch GD must descend: {prev}->{cur}");
+        prev = cur;
+    }
+}

@@ -1,0 +1,133 @@
+//! Property tests on the Corollary-1 bound and the block-size optimizer.
+
+use edgepipe::bound::corollary1::{corollary1_bound, BoundParams};
+use edgepipe::bound::optimizer::{optimize_block_size, scan_bound};
+use edgepipe::testkit::forall;
+
+fn rand_params(g: &mut edgepipe::testkit::Gen) -> BoundParams {
+    let big_l = g.f64_log(0.1, 10.0);
+    let c = g.f64_log(0.001, big_l.min(1.0));
+    let m_g = 1.0;
+    // stepsize condition: alpha <= 2 / (L * M_G)
+    let alpha = g.f64_log(1e-6, (2.0 / (big_l * m_g)).min(0.1));
+    BoundParams {
+        alpha,
+        big_l,
+        c,
+        m: g.f64_in(0.0, 4.0),
+        m_g,
+        d_diam: g.f64_log(0.1, 20.0),
+    }
+}
+
+#[test]
+fn bound_is_finite_positive_and_above_the_bias_floor_limit() {
+    forall("bound sane", 120, |g| {
+        let p = rand_params(g);
+        let n = g.usize_in(100..=30000);
+        let t = g.f64_in(10.0, 4.0 * n as f64);
+        let n_c = g.usize_in(1..=n) as f64;
+        let n_o = g.f64_in(0.0, 2000.0);
+        let v = corollary1_bound(&p, n, t, n_c, n_o, 1.0, false);
+        assert!(v.is_finite(), "bound not finite");
+        assert!(v > 0.0, "bound not positive: {v}");
+        // the bound can never beat the asymptotic bias floor scaled by
+        // the delivered fraction heuristic — weak but universal check:
+        // it must be at least min(A, cap) * small constant
+        let floor = p.bias_floor().min(p.initial_error_cap());
+        assert!(v >= 0.01 * floor, "v={v} below plausibility floor");
+    });
+}
+
+#[test]
+fn closed_form_equals_naive_everywhere() {
+    forall("closed vs naive", 150, |g| {
+        let p = rand_params(g);
+        let n = g.usize_in(100..=30000);
+        let t = g.f64_in(10.0, 4.0 * n as f64);
+        let n_c = g.usize_in(1..=n) as f64;
+        let n_o = g.f64_in(0.0, 500.0);
+        let fast = corollary1_bound(&p, n, t, n_c, n_o, 1.0, false);
+        let slow = corollary1_bound(&p, n, t, n_c, n_o, 1.0, true);
+        let rel = (fast - slow).abs() / slow.abs().max(1e-300);
+        assert!(rel < 1e-8, "fast {fast} vs naive {slow}");
+    });
+}
+
+#[test]
+fn optimizer_is_a_true_argmin() {
+    forall("optimizer argmin", 10, |g| {
+        let p = rand_params(g);
+        let n = g.usize_in(500..=5000);
+        let t = g.f64_in(0.5 * n as f64, 3.0 * n as f64);
+        let n_o = g.f64_in(0.0, 300.0);
+        let opt = optimize_block_size(&p, n, t, n_o, 1.0);
+        // beat every point of a random probe grid
+        for _ in 0..50 {
+            let nc = g.usize_in(1..=n);
+            let v = corollary1_bound(&p, n, t, nc as f64, n_o, 1.0, false);
+            assert!(
+                opt.value <= v + 1e-12,
+                "optimizer {} beaten at n_c={nc}: {v}",
+                opt.value
+            );
+        }
+        assert!(opt.n_c >= 1 && opt.n_c <= n);
+    });
+}
+
+#[test]
+fn scan_is_consistent_with_direct_eval() {
+    forall("scan consistency", 20, |g| {
+        let p = rand_params(g);
+        let n = 2000;
+        let t = 3000.0;
+        let n_o = g.f64_in(0.0, 100.0);
+        let n_cs: Vec<usize> =
+            (0..10).map(|_| g.usize_in(1..=n)).collect();
+        let rows = scan_bound(&p, n, t, n_o, 1.0, &n_cs);
+        for (nc, v) in rows {
+            let direct =
+                corollary1_bound(&p, n, t, nc as f64, n_o, 1.0, false);
+            assert_eq!(v, direct);
+        }
+    });
+}
+
+#[test]
+fn gamma_positive_under_stepsize_condition() {
+    forall("gamma positive", 200, |g| {
+        let p = rand_params(g);
+        assert!(p.stepsize_ok());
+        assert!(p.gamma() > 0.0, "gamma {} <= 0", p.gamma());
+        let q = p.contraction();
+        assert!(q < 1.0, "no contraction: q={q}");
+        assert!(q > -1.0);
+        assert!(p.bias_floor() >= 0.0);
+    });
+}
+
+#[test]
+fn more_time_with_same_blocks_never_hurts_case_b() {
+    // Within case (b), increasing T only increases n_l, so the bound
+    // decreases — PROVIDED the initial-error cap LD²/2 exceeds the
+    // asymptotic floor A (the practically relevant regime; when cap < A
+    // the series term is negative and the bound legitimately climbs
+    // toward A from below as T grows).
+    forall("case b monotone in T", 60, |g| {
+        let p = rand_params(g);
+        if p.initial_error_cap() < p.bias_floor() {
+            return; // degenerate regime, monotonicity not implied
+        }
+        let n = 2000usize;
+        let n_c = g.usize_in(100..=n) as f64;
+        let n_o = g.f64_in(0.0, 50.0);
+        let b_d = n as f64 / n_c;
+        let full = b_d * (n_c + n_o);
+        let t1 = full + g.f64_in(1.0, 500.0);
+        let t2 = t1 + g.f64_in(1.0, 5000.0);
+        let v1 = corollary1_bound(&p, n, t1, n_c, n_o, 1.0, false);
+        let v2 = corollary1_bound(&p, n, t2, n_c, n_o, 1.0, false);
+        assert!(v2 <= v1 + 1e-12, "t {t1}->{t2}: bound {v1}->{v2}");
+    });
+}

@@ -1,0 +1,113 @@
+//! Integration tests across the whole experiment stack: figure
+//! producers emit paper-shaped outputs, the baselines order correctly,
+//! and the bound's guidance is actually useful (the paper's core claim).
+
+use edgepipe::bound::corollary1::BoundParams;
+use edgepipe::bound::estimate_constants;
+use edgepipe::config::ExperimentConfig;
+use edgepipe::coordinator::run::run_experiment;
+use edgepipe::data::split::train_split;
+use edgepipe::data::synth::{synth_calhousing, SynthSpec};
+use edgepipe::sweep::fig3::fig3_data;
+use edgepipe::sweep::fig4::{fig4_data, Fig4Config};
+
+fn small_paper_setup() -> (edgepipe::data::Dataset, BoundParams, f64) {
+    let raw = synth_calhousing(&SynthSpec { n: 3000, ..Default::default() });
+    let (train, _) = train_split(&raw, 0.9, 42);
+    let t = 1.5 * train.n as f64;
+    let k = estimate_constants(&train, 0.05, 1e-3, 1000, 42);
+    let params = BoundParams {
+        alpha: 1e-3,
+        big_l: k.big_l,
+        c: k.c,
+        m: 1.0,
+        m_g: 1.0,
+        d_diam: k.d_diam,
+    };
+    (train, params, t)
+}
+
+#[test]
+fn fig3_shape_matches_paper_narrative() {
+    let (train, params, t) = small_paper_setup();
+    let out =
+        fig3_data(&params, train.n, t, 1.0, &[1.0, 10.0, 100.0, 500.0], 80);
+    // ñ_c strictly increasing in n_o; curve has an interior minimum
+    let mut prev = 0usize;
+    for c in &out.curves {
+        assert!(c.opt_n_c > prev, "ñ_c not increasing: {:?}", c.opt_n_c);
+        prev = c.opt_n_c;
+        let first = c.points.first().unwrap().1;
+        let last = c.points.last().unwrap().1;
+        assert!(c.opt_value <= first && c.opt_value <= last);
+        // boundary exists for these overheads at T = 1.5N
+        assert!(c.boundary_n_c.is_some());
+    }
+}
+
+#[test]
+fn fig4_bound_guidance_close_to_experimental_optimum() {
+    let (train, params, t) = small_paper_setup();
+    let cfg = Fig4Config {
+        alpha: 1e-3,
+        seeds: 4,
+        search_points: 10,
+        curve_points: 40,
+        reference_n_cs: vec![train.n],
+        ..Fig4Config::paper(50.0, t)
+    };
+    let out = fig4_data(&train, &params, &cfg);
+    // the paper's quantitative headline: the bound's ñ_c costs only a
+    // few percent vs the experimental optimum (paper: 3.8%)
+    assert!(
+        out.bound_penalty < 0.25,
+        "bound guidance too weak: {:+.1}%",
+        100.0 * out.bound_penalty
+    );
+    // and transmit-everything-first is far worse than both
+    let all_first = out
+        .curves
+        .iter()
+        .find(|c| c.n_c == train.n)
+        .expect("reference curve");
+    assert!(
+        all_first.final_loss > 1.2 * out.exp_final,
+        "n_c=N should lose clearly: {} vs {}",
+        all_first.final_loss,
+        out.exp_final
+    );
+}
+
+#[test]
+fn experiment_config_end_to_end() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.data.n_raw = 1500;
+    cfg.protocol.n_c = 0; // auto-optimize
+    cfg.protocol.n_o = 30.0;
+    cfg.train.alpha = 1e-3;
+    cfg.train.loss_stride = 100.0;
+    let out = run_experiment(&cfg).unwrap();
+    // auto n_c chosen, training happened, gap nonnegative, curve dense
+    assert!(out.n_c >= 1 && out.n_c <= out.train.n);
+    assert!(out.result.updates > 0);
+    assert!(out.result.final_gap(out.loss_star) >= -1e-9);
+    assert!(out.result.curve.len() > 10);
+    // curve is recorded in time order and ends at the deadline
+    let t_budget = cfg.protocol.deadline(out.train.n);
+    assert_eq!(out.result.curve.last().unwrap().0, t_budget);
+}
+
+#[test]
+fn seeds_change_trajectory_but_not_protocol_accounting() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.data.n_raw = 1000;
+    cfg.protocol.n_c = 64;
+    cfg.train.alpha = 1e-3;
+    let a = run_experiment(&cfg).unwrap();
+    cfg.train.seed = 999;
+    let b = run_experiment(&cfg).unwrap();
+    assert_ne!(a.result.final_w, b.result.final_w);
+    assert_eq!(a.result.blocks_sent, b.result.blocks_sent);
+    assert_eq!(a.result.samples_delivered, b.result.samples_delivered);
+    assert_eq!(a.result.updates, b.result.updates);
+}

@@ -1,0 +1,184 @@
+//! Failure injection and edge cases: hostile channels, degenerate
+//! deadlines, capacity extremes, config validation.
+
+use edgepipe::channel::{ErasureChannel, IdealChannel, RateLimitedChannel};
+use edgepipe::config::ExperimentConfig;
+use edgepipe::coordinator::des::{run_des, DesConfig};
+use edgepipe::coordinator::executor::NativeExecutor;
+use edgepipe::data::synth::{synth_calhousing, SynthSpec};
+use edgepipe::model::RidgeModel;
+use edgepipe::protocol::TimelineCase;
+
+fn ds(n: usize) -> edgepipe::data::Dataset {
+    synth_calhousing(&SynthSpec { n, ..Default::default() })
+}
+
+fn exec(d: &edgepipe::data::Dataset, cfg: &DesConfig) -> NativeExecutor {
+    NativeExecutor::new(RidgeModel::new(d.d, cfg.lambda, d.n), cfg.alpha)
+}
+
+#[test]
+fn deadline_shorter_than_first_block_trains_nothing() {
+    let data = ds(200);
+    // block duration 60+10=70 > T=50: nothing arrives, no updates
+    let cfg = DesConfig {
+        record_blocks: false,
+        ..DesConfig::paper(60, 10.0, 50.0, 1)
+    };
+    let res =
+        run_des(&data, &cfg, &mut IdealChannel, &mut exec(&data, &cfg))
+            .unwrap();
+    assert_eq!(res.samples_delivered, 0);
+    assert_eq!(res.updates, 0);
+    assert_eq!(res.case, TimelineCase::Partial);
+    // initial w is the final w
+    assert_eq!(res.curve.first().unwrap().1, res.final_loss);
+}
+
+#[test]
+fn nearly_dead_channel_still_terminates() {
+    let data = ds(100);
+    let cfg = DesConfig {
+        record_blocks: false,
+        ..DesConfig::paper(10, 5.0, 500.0, 2)
+    };
+    let mut ch = ErasureChannel::new(0.95);
+    let res = run_des(&data, &cfg, &mut ch, &mut exec(&data, &cfg)).unwrap();
+    // massive retransmission, little delivery — but bounded and sane
+    assert!(res.retransmissions > 0);
+    assert!(res.samples_delivered <= 100);
+    assert!(res.final_loss.is_finite());
+}
+
+#[test]
+fn very_slow_rate_channel_degrades_gracefully() {
+    let data = ds(100);
+    let cfg = DesConfig {
+        record_blocks: false,
+        ..DesConfig::paper(10, 5.0, 300.0, 3)
+    };
+    let mut ch = RateLimitedChannel::new(0.01, IdealChannel);
+    let res = run_des(&data, &cfg, &mut ch, &mut exec(&data, &cfg)).unwrap();
+    assert_eq!(res.samples_delivered, 0, "rate 0.01 delivers nothing in T");
+    assert_eq!(res.updates, 0);
+}
+
+#[test]
+fn single_sample_store_trains() {
+    let data = ds(50);
+    let cfg = DesConfig {
+        store_capacity: Some(1),
+        record_blocks: false,
+        ..DesConfig::paper(5, 2.0, 200.0, 4)
+    };
+    let res =
+        run_des(&data, &cfg, &mut IdealChannel, &mut exec(&data, &cfg))
+            .unwrap();
+    assert!(res.updates > 0);
+    assert!(res.final_loss.is_finite());
+}
+
+#[test]
+fn n_c_one_extreme_works() {
+    let data = ds(80);
+    let cfg = DesConfig {
+        record_blocks: false,
+        ..DesConfig::paper(1, 0.0, 200.0, 5)
+    };
+    let res =
+        run_des(&data, &cfg, &mut IdealChannel, &mut exec(&data, &cfg))
+            .unwrap();
+    assert_eq!(res.blocks_sent, 80.min(200));
+    assert!(res.updates > 0);
+}
+
+#[test]
+fn n_c_equals_n_single_shot() {
+    let data = ds(80);
+    let cfg = DesConfig {
+        record_blocks: false,
+        ..DesConfig::paper(80, 10.0, 300.0, 6)
+    };
+    let res =
+        run_des(&data, &cfg, &mut IdealChannel, &mut exec(&data, &cfg))
+            .unwrap();
+    assert_eq!(res.blocks_sent, 1);
+    assert_eq!(res.samples_delivered, 80);
+    // updates only in the tail: T - (80 + 10)
+    assert_eq!(res.updates, 300 - 90);
+}
+
+#[test]
+fn zero_overhead_is_allowed() {
+    let data = ds(60);
+    let cfg = DesConfig {
+        record_blocks: false,
+        ..DesConfig::paper(10, 0.0, 120.0, 7)
+    };
+    let res =
+        run_des(&data, &cfg, &mut IdealChannel, &mut exec(&data, &cfg))
+            .unwrap();
+    assert_eq!(res.samples_delivered, 60);
+}
+
+#[test]
+fn config_validation_rejects_nonsense() {
+    for (key, val) in [
+        ("train.alpha", "-1.0"),
+        ("protocol.tau_p", "0"),
+        ("data.train_frac", "1.5"),
+        ("data.hess_min", "0"),
+        ("data.n_raw", "0"),
+    ] {
+        let r = ExperimentConfig::load(
+            None,
+            &[(key.to_string(), val.to_string())],
+        );
+        assert!(r.is_err(), "{key}={val} should be rejected");
+    }
+}
+
+#[test]
+fn malformed_manifest_is_rejected() {
+    use edgepipe::runtime::Manifest;
+    let dir = std::env::temp_dir().join("edgepipe_bad_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    // missing constants
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"format": 1, "artifacts": {}}"#,
+    )
+    .unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    // wrong format version
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"format": 99, "constants": {}, "artifacts": {}}"#,
+    )
+    .unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    // referenced file missing
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"format": 1,
+            "constants": {"d":8,"k_max":512,"n_raw":10,"n_cap":1024,
+                          "loss_tile":1024,"mlp_hidden":16,"mlp_batch":16},
+            "artifacts": {"sgd_block": {"file": "missing.hlo.txt",
+              "inputs": [], "outputs": [], "sha256": ""}}}"#,
+    )
+    .unwrap();
+    assert!(Manifest::load(&dir).is_err());
+}
+
+#[test]
+fn csv_loader_rejects_garbage() {
+    use edgepipe::data::csv::load_csv;
+    let dir = std::env::temp_dir().join("edgepipe_bad_csv");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("bad.csv");
+    std::fs::write(&p, "1,2,3\nnot,a,number\n").unwrap();
+    assert!(load_csv(&p).is_err());
+    let p2 = dir.join("empty.csv");
+    std::fs::write(&p2, "").unwrap();
+    assert!(load_csv(&p2).is_err());
+}

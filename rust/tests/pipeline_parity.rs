@@ -1,0 +1,88 @@
+//! The threaded pipeline must be bit-identical to the DES across random
+//! configurations, channels, and store capacities.
+
+use edgepipe::channel::{Channel, ErasureChannel, IdealChannel};
+use edgepipe::coordinator::des::{run_des, DesConfig};
+use edgepipe::coordinator::executor::NativeExecutor;
+use edgepipe::coordinator::pipeline::run_pipelined;
+use edgepipe::data::synth::{synth_calhousing, SynthSpec};
+use edgepipe::model::RidgeModel;
+use edgepipe::testkit::forall;
+
+fn check_parity(cfg: &DesConfig, n: usize, make_channel: impl Fn() -> Box<dyn Channel>) {
+    let ds = synth_calhousing(&SynthSpec { n, ..Default::default() });
+    let mk = || {
+        NativeExecutor::new(
+            RidgeModel::new(ds.d, cfg.lambda, ds.n),
+            cfg.alpha,
+        )
+    };
+    let mut ch1 = make_channel();
+    let mut ch2 = make_channel();
+    let des = run_des(&ds, cfg, ch1.as_mut(), &mut mk()).unwrap();
+    let pipe = run_pipelined(&ds, cfg, ch2.as_mut(), &mut mk()).unwrap();
+    assert_eq!(des.final_w, pipe.final_w, "trajectories diverged");
+    assert_eq!(des.curve, pipe.curve, "loss curves diverged");
+    assert_eq!(des.updates, pipe.updates);
+    assert_eq!(des.samples_delivered, pipe.samples_delivered);
+    assert_eq!(des.blocks_sent, pipe.blocks_sent);
+    assert_eq!(des.blocks_delivered, pipe.blocks_delivered);
+    assert_eq!(des.retransmissions, pipe.retransmissions);
+    assert_eq!(des.case, pipe.case);
+    assert_eq!(des.snapshots.len(), pipe.snapshots.len());
+}
+
+#[test]
+fn parity_on_ideal_channel() {
+    forall("parity ideal", 10, |g| {
+        let n = g.usize_in(50..=500);
+        let cfg = DesConfig {
+            loss_every: *g.choose(&[0usize, 37, 200]),
+            record_blocks: g.bool_with(0.5),
+            collect_snapshots: g.bool_with(0.3),
+            ..DesConfig::paper(
+                g.usize_in(1..=n),
+                g.f64_in(0.0, 40.0).round(),
+                g.f64_in(20.0, 3.0 * n as f64).round(),
+                g.u64_in(0..=1 << 40),
+            )
+        };
+        check_parity(&cfg, n, || Box::new(IdealChannel));
+    });
+}
+
+#[test]
+fn parity_on_erasure_channel() {
+    forall("parity erasure", 8, |g| {
+        let n = g.usize_in(50..=400);
+        let p = g.f64_in(0.05, 0.5);
+        let cfg = DesConfig {
+            record_blocks: false,
+            ..DesConfig::paper(
+                g.usize_in(5..=n),
+                g.f64_in(0.0, 20.0).round(),
+                g.f64_in(50.0, 2.0 * n as f64).round(),
+                g.u64_in(0..=1 << 40),
+            )
+        };
+        check_parity(&cfg, n, move || Box::new(ErasureChannel::new(p)));
+    });
+}
+
+#[test]
+fn parity_with_bounded_store() {
+    forall("parity reservoir", 6, |g| {
+        let n = g.usize_in(100..=400);
+        let cfg = DesConfig {
+            store_capacity: Some(g.usize_in(10..=n / 2)),
+            record_blocks: false,
+            ..DesConfig::paper(
+                g.usize_in(5..=n / 2),
+                5.0,
+                2.0 * n as f64,
+                g.u64_in(0..=1 << 40),
+            )
+        };
+        check_parity(&cfg, n, || Box::new(IdealChannel));
+    });
+}

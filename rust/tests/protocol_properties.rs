@@ -1,0 +1,195 @@
+//! Property tests over the protocol and coordinator invariants
+//! (DESIGN.md §7), using the in-repo testkit.
+
+use edgepipe::channel::{ErasureChannel, IdealChannel};
+use edgepipe::coordinator::des::{run_des, DesConfig};
+use edgepipe::coordinator::executor::NativeExecutor;
+use edgepipe::coordinator::DeviceTransmitter;
+use edgepipe::data::synth::{synth_calhousing, SynthSpec};
+use edgepipe::data::Dataset;
+use edgepipe::model::RidgeModel;
+use edgepipe::protocol::{Timeline, TimelineCase};
+use edgepipe::testkit::forall;
+
+fn small_ds(seed: u64, n: usize) -> Dataset {
+    synth_calhousing(&SynthSpec { n, seed, ..Default::default() })
+}
+
+#[test]
+fn device_never_retransmits_and_covers_everything() {
+    forall("device no-dup cover", 25, |g| {
+        let n = g.usize_in(10..=400);
+        let n_c = g.usize_in(1..=n);
+        let ds = small_ds(g.u64_in(0..=u64::MAX / 2), n);
+        let mut device = DeviceTransmitter::new(&ds, n_c, g.u64_in(0..=1 << 40));
+        let mut seen = vec![false; n];
+        let mut blocks = 0;
+        while let Some((idx, x, y)) = device.next_block() {
+            blocks += 1;
+            assert_eq!(x.len(), y.len() * ds.d, "payload shape");
+            for &i in &idx {
+                assert!(!seen[i as usize], "sample {i} transmitted twice");
+                seen[i as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "all samples transmitted");
+        assert_eq!(blocks, n.div_ceil(n_c), "block count = ceil(N/n_c)");
+    });
+}
+
+#[test]
+fn timeline_case_dichotomy_is_exact() {
+    forall("timeline dichotomy", 200, |g| {
+        let n = g.usize_in(10..=20000);
+        let n_c = g.usize_in(1..=n);
+        let n_o = g.f64_in(0.0, 2000.0);
+        let tau_p = g.f64_log(0.1, 10.0);
+        let t = g.f64_in(1.0, 3.0 * n as f64);
+        let tl = Timeline::resolve(n, t, n_c, n_o, tau_p);
+        let full_time = tl.b_d as f64 * tl.block_len;
+        match tl.case {
+            TimelineCase::Full => assert!(t > full_time),
+            TimelineCase::Partial => assert!(t <= full_time),
+        }
+        // delivered fraction in [0, 1]; store sizes monotone
+        let f = tl.delivered_fraction();
+        assert!((0.0..=1.0).contains(&f), "fraction {f}");
+        let mut prev = 0;
+        for b in 1..=tl.b_d + 1 {
+            let s = tl.store_size_at_block(b);
+            assert!(s >= prev && s <= n);
+            prev = s;
+        }
+    });
+}
+
+#[test]
+fn des_accounting_matches_timeline_closed_form() {
+    forall("des vs timeline", 15, |g| {
+        let n = g.usize_in(50..=500);
+        let n_c = g.usize_in(1..=n);
+        let n_o = g.f64_in(0.0, 50.0).round();
+        let t = g.f64_in(10.0, 2.5 * n as f64).round();
+        let ds = small_ds(g.u64_in(0..=1 << 40), n);
+        let cfg = DesConfig {
+            record_blocks: false,
+            ..DesConfig::paper(n_c, n_o, t, g.u64_in(0..=1 << 40))
+        };
+        let mut exec = NativeExecutor::new(
+            RidgeModel::new(ds.d, cfg.lambda, ds.n),
+            cfg.alpha,
+        );
+        let res = run_des(&ds, &cfg, &mut IdealChannel, &mut exec).unwrap();
+        let tl = Timeline::resolve(n, t, n_c, n_o, 1.0);
+        // delivered samples: block b (1-indexed, b <= B_d) arrives at
+        // sum of the durations of blocks 1..=b; it counts iff that
+        // arrival is strictly before T (the final block may be ragged,
+        // shortening its duration)
+        let mut delivered = 0usize;
+        let mut arrival = 0.0;
+        for b in 1..=tl.b_d {
+            let payload = tl.payload_of_block(b);
+            arrival += payload as f64 + n_o;
+            if arrival < t {
+                delivered += payload;
+            } else {
+                break;
+            }
+        }
+        assert_eq!(res.samples_delivered, delivered);
+        // update count: at most total budget over tau_p, and they all
+        // happened while data was available
+        assert!(res.updates <= t as usize);
+        if res.samples_delivered == n {
+            assert_eq!(res.case, TimelineCase::Full);
+        } else {
+            assert_eq!(res.case, TimelineCase::Partial);
+        }
+    });
+}
+
+#[test]
+fn erasure_channel_never_speeds_up_delivery() {
+    forall("erasure slows", 12, |g| {
+        let n = 300;
+        let ds = small_ds(7, n);
+        let n_c = g.usize_in(10..=150);
+        let t = 800.0;
+        let seed = g.u64_in(0..=1 << 40);
+        let p = g.f64_in(0.05, 0.6);
+        let cfg = DesConfig {
+            record_blocks: false,
+            ..DesConfig::paper(n_c, 10.0, t, seed)
+        };
+        let mk = || {
+            NativeExecutor::new(
+                RidgeModel::new(ds.d, cfg.lambda, ds.n),
+                cfg.alpha,
+            )
+        };
+        let ideal =
+            run_des(&ds, &cfg, &mut IdealChannel, &mut mk()).unwrap();
+        let mut ch = ErasureChannel::new(p);
+        let lossy = run_des(&ds, &cfg, &mut ch, &mut mk()).unwrap();
+        assert!(
+            lossy.samples_delivered <= ideal.samples_delivered,
+            "erasures cannot deliver more: {} vs {}",
+            lossy.samples_delivered,
+            ideal.samples_delivered
+        );
+        assert!(lossy.blocks_delivered <= ideal.blocks_delivered);
+    });
+}
+
+#[test]
+fn store_contents_are_always_a_subset_of_the_dataset() {
+    forall("store subset", 8, |g| {
+        let n = g.usize_in(50..=300);
+        let ds = small_ds(g.u64_in(0..=1 << 40), n);
+        let n_c = g.usize_in(1..=n);
+        let cfg = DesConfig {
+            collect_snapshots: true,
+            record_blocks: false,
+            ..DesConfig::paper(n_c, 5.0, 2.0 * n as f64, g.u64_in(0..=1 << 40))
+        };
+        let mut exec = NativeExecutor::new(
+            RidgeModel::new(ds.d, cfg.lambda, ds.n),
+            cfg.alpha,
+        );
+        let res = run_des(&ds, &cfg, &mut IdealChannel, &mut exec).unwrap();
+        // every snapshot row must be an actual dataset row
+        for snap in &res.snapshots {
+            for (i, _) in snap.y.iter().enumerate() {
+                let row = &snap.x[i * ds.d..(i + 1) * ds.d];
+                let found = (0..ds.n).any(|j| ds.row(j) == row);
+                assert!(found, "snapshot row not in dataset");
+            }
+        }
+    });
+}
+
+#[test]
+fn updates_never_exceed_time_budget() {
+    forall("update budget", 20, |g| {
+        let n = g.usize_in(20..=300);
+        let ds = small_ds(3, n);
+        let n_c = g.usize_in(1..=n);
+        let tau_p = *g.choose(&[0.5, 1.0, 2.0]);
+        let t = g.f64_in(5.0, 3.0 * n as f64).round();
+        let cfg = DesConfig {
+            tau_p,
+            record_blocks: false,
+            ..DesConfig::paper(n_c, 3.0, t, g.u64_in(0..=1 << 40))
+        };
+        let mut exec = NativeExecutor::new(
+            RidgeModel::new(ds.d, cfg.lambda, ds.n),
+            cfg.alpha,
+        );
+        let res = run_des(&ds, &cfg, &mut IdealChannel, &mut exec).unwrap();
+        assert!(
+            res.updates as f64 * tau_p <= t + 1e-6,
+            "{} updates x {tau_p} > {t}",
+            res.updates
+        );
+    });
+}
