@@ -1,0 +1,137 @@
+//! Perf: the unified scheduler hot loop vs sweep throughput.
+//!
+//! The generic `run_schedule` core replaced four hand-rolled protocol
+//! loops; the acceptance bar is that the unified loop is no slower than
+//! the seed DES (target: faster, from reusing one `BlockFrame` instead
+//! of allocating three fresh `Vec`s per transmitted block). This bench
+//! reports (a) single-run throughput at paper scale across block sizes
+//! — small `n_c` maximizes per-block overhead and therefore the
+//! allocation win — (b) a Monte-Carlo sweep through the scenario-generic
+//! runner, and (c) the multi-device and online-arrival variants that now
+//! ride the same loop.
+//!
+//! Run: `cargo bench --bench bench_scheduler`
+
+use edgepipe::bench::Bench;
+use edgepipe::channel::IdealChannel;
+use edgepipe::coordinator::des::{run_des, DesConfig};
+use edgepipe::coordinator::executor::NativeExecutor;
+use edgepipe::data::split::train_split;
+use edgepipe::data::synth::{synth_calhousing, SynthSpec};
+use edgepipe::extensions::multi_device::{run_multi_device, shard_dataset};
+use edgepipe::extensions::online::run_online_arrivals;
+use edgepipe::model::RidgeModel;
+use edgepipe::sweep::runner::mc_scenario_loss;
+use edgepipe::sweep::scenario::ScenarioSpec;
+
+fn main() {
+    let mut bench = Bench::new();
+    let raw = synth_calhousing(&SynthSpec::default());
+    let (train, _) = train_split(&raw, 0.9, 42);
+    let t = 1.5 * train.n as f64;
+    let mk = |cfg: &DesConfig| {
+        NativeExecutor::new(
+            RidgeModel::new(train.d, cfg.lambda, train.n),
+            cfg.alpha,
+        )
+    };
+
+    // (a) unified hot loop, paper scale; n_c=10 is allocation-dominated
+    for n_c in [10usize, 100, 1378] {
+        let cfg = DesConfig {
+            record_blocks: false,
+            ..DesConfig::paper(n_c, 100.0, t, 7)
+        };
+        let updates = run_des(&train, &cfg, &mut IdealChannel, &mut mk(&cfg))
+            .unwrap()
+            .updates;
+        bench.run(
+            &format!("unified DES (n_c={n_c}, {updates} updates)"),
+            updates as f64,
+            || {
+                let mut exec = mk(&cfg);
+                std::hint::black_box(
+                    run_des(&train, &cfg, &mut IdealChannel, &mut exec)
+                        .unwrap()
+                        .final_loss,
+                );
+            },
+        );
+    }
+
+    // (b) Monte-Carlo sweep throughput through the scenario runner
+    let sweep_cfg = DesConfig {
+        record_blocks: false,
+        ..DesConfig::paper(437, 100.0, t, 7)
+    };
+    let seeds = 16usize;
+    bench.run(
+        &format!("mc sweep, paper scenario ({seeds} seeds)"),
+        seeds as f64,
+        || {
+            std::hint::black_box(
+                mc_scenario_loss(
+                    &train,
+                    &sweep_cfg,
+                    &ScenarioSpec::paper(),
+                    seeds,
+                    0,
+                )
+                .mean,
+            );
+        },
+    );
+
+    // (c) the variants that now share the loop
+    let shards = shard_dataset(&train, 8);
+    let multi_cfg = DesConfig {
+        record_blocks: false,
+        ..DesConfig::paper(437, 100.0, t, 7)
+    };
+    let multi_updates = run_multi_device(
+        &train,
+        &shards,
+        &multi_cfg,
+        &mut IdealChannel,
+        &mut mk(&multi_cfg),
+    )
+    .unwrap()
+    .updates;
+    bench.run(
+        &format!("multi-device k=8 ({multi_updates} updates)"),
+        multi_updates as f64,
+        || {
+            let mut exec = mk(&multi_cfg);
+            std::hint::black_box(
+                run_multi_device(
+                    &train,
+                    &shards,
+                    &multi_cfg,
+                    &mut IdealChannel,
+                    &mut exec,
+                )
+                .unwrap()
+                .final_loss,
+            );
+        },
+    );
+
+    let online_cfg = DesConfig {
+        record_blocks: false,
+        ..DesConfig::paper(437, 100.0, t, 7)
+    };
+    bench.run("online arrivals (rate=2/unit)", train.n as f64, || {
+        let mut exec = mk(&online_cfg);
+        std::hint::black_box(
+            run_online_arrivals(
+                &train,
+                &online_cfg,
+                2.0,
+                &mut IdealChannel,
+                &mut exec,
+            )
+            .unwrap()
+            .final_loss,
+        );
+    });
+}

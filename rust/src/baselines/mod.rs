@@ -9,17 +9,27 @@
 //!   transmission and only trains between blocks ... which for an
 //!   always-busy channel means it only trains after the last delivered
 //!   block. Isolates the gain from overlapping comm and compute.
+//!
+//! Both are thin adapters over the generic scheduler:
+//! `transmit_all_first` is the fixed policy at `n_c = N`; `sequential` is
+//! the same single-device traffic under [`OverlapMode::Sequential`].
+//!
+//! Note: the unified scheduler records the full event stream (BlockSent
+//! / BlockDelivered / Finished) for every variant; the seed `sequential`
+//! loop recorded only `UpdatesRun` events. Loss trajectories, counters
+//! and RNG streams are unchanged — only the (previously sparse) event
+//! log gained entries.
 
 use anyhow::Result;
 
 use crate::channel::Channel;
-use crate::coordinator::des::{DesConfig, DeviceTransmitter, EdgeTrainer};
-use crate::coordinator::events::EventLog;
+use crate::coordinator::des::{run_des, DesConfig};
 use crate::coordinator::executor::BlockExecutor;
 use crate::coordinator::run::RunResult;
+use crate::coordinator::scheduler::{
+    run_schedule, FixedPolicy, OverlapMode, SingleDeviceSource,
+};
 use crate::data::Dataset;
-use crate::protocol::TimelineCase;
-use crate::util::rng::Pcg32;
 
 /// "Transmit everything first": a single block of all N samples.
 pub fn transmit_all_first(
@@ -29,7 +39,7 @@ pub fn transmit_all_first(
     exec: &mut dyn BlockExecutor,
 ) -> Result<RunResult> {
     let cfg = DesConfig { n_c: ds.n, ..cfg.clone() };
-    crate::coordinator::des::run_des(ds, &cfg, channel, exec)
+    run_des(ds, &cfg, channel, exec)
 }
 
 /// Sequential (non-pipelined) policy: blocks of `n_c` are transmitted,
@@ -42,69 +52,23 @@ pub fn sequential(
     channel: &mut dyn Channel,
     exec: &mut dyn BlockExecutor,
 ) -> Result<RunResult> {
-    let mut events = EventLog::with_capacity(cfg.event_capacity);
-    let mut trainer = EdgeTrainer::new(ds, cfg);
-    let mut device = DeviceTransmitter::new(ds, cfg.n_c, cfg.seed);
-    let mut chan_rng =
-        Pcg32::new(cfg.seed, crate::coordinator::des::STREAM_CHANNEL);
-
-    let mut t_send = 0.0f64;
-    let mut blocks_sent = 0usize;
-    let mut blocks_delivered = 0usize;
-    let mut samples_delivered = 0usize;
-    let mut retransmissions = 0u64;
-    let mut block = 1usize;
-
-    // Phase 1: transmission, edge idle (skip_to keeps the clock honest).
-    while t_send < cfg.t_budget && !device.exhausted() {
-        let (_, x, y) = device.next_block().expect("device non-exhausted");
-        let payload = y.len();
-        let duration = payload as f64 + cfg.n_o;
-        blocks_sent += 1;
-        let delivery = channel.transmit(t_send, duration, &mut chan_rng);
-        retransmissions += (delivery.attempts - 1) as u64;
-        if delivery.arrival < cfg.t_budget {
-            trainer.skip_to(delivery.arrival);
-            trainer.ingest_block(block, delivery.arrival, &x, &y);
-            blocks_delivered += 1;
-            samples_delivered += payload;
-        } else {
-            trainer.skip_to(cfg.t_budget);
-        }
-        t_send = delivery.arrival;
-        block += 1;
-    }
-    // Phase 2: all remaining time is compute.
-    trainer.advance_to(cfg.t_budget, exec, &mut events)?;
-    trainer.finish(exec)?;
-
-    let case = if samples_delivered >= ds.n {
-        TimelineCase::Full
-    } else {
-        TimelineCase::Partial
-    };
-    let final_loss = trainer.full_loss();
-    Ok(RunResult {
-        curve: trainer.curve,
-        final_loss,
-        final_w: trainer.w,
-        updates: trainer.updates,
-        blocks_sent,
-        blocks_delivered,
-        samples_delivered,
-        retransmissions,
-        case,
-        snapshots: trainer.snapshots,
-        events: events.into_events(),
-        backend: exec.name(),
-    })
+    let mut source = SingleDeviceSource::new(ds, cfg.seed);
+    let mut policy = FixedPolicy(cfg.n_c.max(1).min(ds.n));
+    run_schedule(
+        ds,
+        cfg,
+        &mut source,
+        &mut policy,
+        OverlapMode::Sequential,
+        channel,
+        exec,
+    )
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::channel::IdealChannel;
-    use crate::coordinator::des::run_des;
     use crate::coordinator::executor::NativeExecutor;
     use crate::data::synth::{synth_calhousing, SynthSpec};
     use crate::model::RidgeModel;
@@ -139,7 +103,12 @@ mod tests {
         // same delivery schedule...
         assert_eq!(pipe.samples_delivered, seq.samples_delivered);
         // ...but strictly more updates and a better loss when pipelined
-        assert!(pipe.updates > seq.updates, "{} vs {}", pipe.updates, seq.updates);
+        assert!(
+            pipe.updates > seq.updates,
+            "{} vs {}",
+            pipe.updates,
+            seq.updates
+        );
         assert!(
             pipe.final_loss < seq.final_loss,
             "{} vs {}",

@@ -20,6 +20,8 @@ COMMANDS:
     fig4        regenerate paper Fig. 4 (loss curves; ñ_c vs n_c*)
     baselines   compare pipelined vs sequential vs transmit-all-first
     sweep       Monte-Carlo final-loss sweep over block sizes
+    scenario    Monte-Carlo sweep over registered scenarios
+                (channel × policy × device/traffic grids)
     tightness   actual gap vs Theorem 1 vs Corollary 1
     adaptive    adaptive block-size schedules vs the fixed optimum ñ_c
     help        print this message
@@ -31,11 +33,22 @@ OPTIONS (all commands):
     --backend <native|pjrt>  executor backend for `train` [default: native]
     --quiet                  suppress progress logging
 
+SCENARIO OPTIONS (scenario command):
+    --preset <name|all|list> run registry preset(s) / list their names
+    --channels <a,b,..>      channel specs: ideal | erasure:<p> | rate:<r>[:<p>]
+    --policies <a,b,..>      policy specs: fixed[:n_c] | warmup:<s>:<g>[:<cap>]
+                             | deadline:<frac> | sequential[:n_c] | allfirst
+    --devices <a,b,..>       traffic specs: <k> devices | online:<rate>
+    (the cross product of the three lists runs in one parallel sweep)
+
 EXAMPLES:
     edgepipe optimize --set protocol.n_o=100
     edgepipe train --set protocol.n_c=437 --set train.seed=3 --backend pjrt
     edgepipe fig3 --out out/fig3
     edgepipe fig4 --set protocol.n_o=100 --set sweep.seeds=10
+    edgepipe scenario --preset all --set sweep.seeds=20
+    edgepipe scenario --channels ideal,erasure:0.1 \\
+        --policies fixed,warmup:16:2 --devices 1,4
 ";
 
 /// Parsed command line.

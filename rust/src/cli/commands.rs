@@ -34,6 +34,7 @@ pub fn dispatch(args: &Args) -> Result<i32> {
         "fig4" => cmd_fig4(args),
         "baselines" => cmd_baselines(args),
         "sweep" => cmd_sweep(args),
+        "scenario" => cmd_scenario(args),
         "tightness" => cmd_tightness(args),
         "adaptive" => cmd_adaptive(args),
         other => {
@@ -124,8 +125,13 @@ fn cmd_optimize(args: &Args) -> Result<i32> {
     let ds = build_dataset(&cfg)?;
     let t = cfg.protocol.deadline(ds.n);
     let params = bound_params(&cfg, &ds);
-    let opt =
-        optimize_block_size(&params, ds.n, t, cfg.protocol.n_o, cfg.protocol.tau_p);
+    let opt = optimize_block_size(
+        &params,
+        ds.n,
+        t,
+        cfg.protocol.n_o,
+        cfg.protocol.tau_p,
+    );
     println!(
         "ñ_c = {} (bound {:.6}, case {:?}, full-delivery boundary {:?})",
         opt.n_c, opt.value, opt.case, opt.full_delivery_boundary
@@ -137,17 +143,33 @@ fn cmd_optimize(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+/// Resolve the block size for a run: the configured `n_c`, else the
+/// bound optimizer's `ñ_c` (shared by `train` and `scenario`).
+fn resolve_n_c(
+    cfg: &ExperimentConfig,
+    ds: &crate::data::Dataset,
+    t: f64,
+) -> usize {
+    if cfg.protocol.n_c > 0 {
+        cfg.protocol.n_c.min(ds.n)
+    } else {
+        let params = bound_params(cfg, ds);
+        optimize_block_size(
+            &params,
+            ds.n,
+            t,
+            cfg.protocol.n_o,
+            cfg.protocol.tau_p,
+        )
+        .n_c
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<i32> {
     let cfg = load_config(args)?;
     let ds = build_dataset(&cfg)?;
     let t = cfg.protocol.deadline(ds.n);
-    let n_c = if cfg.protocol.n_c > 0 {
-        cfg.protocol.n_c.min(ds.n)
-    } else {
-        let params = bound_params(&cfg, &ds);
-        optimize_block_size(&params, ds.n, t, cfg.protocol.n_o, cfg.protocol.tau_p)
-            .n_c
-    };
+    let n_c = resolve_n_c(&cfg, &ds, t);
     let des = DesConfig {
         n_c,
         n_o: cfg.protocol.n_o,
@@ -327,7 +349,8 @@ fn cmd_sweep(args: &Args) -> Result<i32> {
         cfg.sweep.seeds,
         cfg.sweep.threads,
     );
-    let mut table = CsvTable::new(&["n_c", "final_loss_mean", "final_loss_std"]);
+    let mut table =
+        CsvTable::new(&["n_c", "final_loss_mean", "final_loss_std"]);
     println!("final loss vs n_c (n_o={}, seeds={}):", des.n_o, cfg.sweep.seeds);
     for (nc, s) in &rows {
         println!("  n_c={:>6}  {:.6} ± {:.6}", nc, s.mean, s.std);
@@ -340,6 +363,126 @@ fn cmd_sweep(args: &Args) -> Result<i32> {
     println!("experimental optimum n_c* = {} ({:.6})", best.0, best.1.mean);
     let out = Path::new(&args.out_dir).join("sweep_final_loss.csv");
     write_csv(&table, &out)?;
+    Ok(0)
+}
+
+/// Monte-Carlo sweep over scenario specs (channel × policy × traffic).
+fn cmd_scenario(args: &Args) -> Result<i32> {
+    use crate::sweep::runner::scenario_grid;
+    use crate::sweep::scenario::{from_name, registry, ScenarioSpec};
+
+    let cfg = load_config(args)?;
+    let preset = args.extra_or("preset", "");
+    if preset == "list" {
+        println!("registered scenarios:");
+        for (name, spec) in registry() {
+            println!("  {:<16} {}", name, spec.label());
+        }
+        return Ok(0);
+    }
+
+    let ds = build_dataset(&cfg)?;
+    let t = cfg.protocol.deadline(ds.n);
+    let n_c = resolve_n_c(&cfg, &ds, t);
+    let base = DesConfig {
+        n_c,
+        n_o: cfg.protocol.n_o,
+        tau_p: cfg.protocol.tau_p,
+        t_budget: t,
+        alpha: cfg.train.alpha,
+        lambda: cfg.train.lambda,
+        init_std: cfg.train.init_std,
+        seed: cfg.train.seed,
+        loss_every: 0,
+        record_blocks: false,
+        store_capacity: None,
+        collect_snapshots: false,
+        event_capacity: 0,
+    };
+
+    let split_list = |s: &str| -> Vec<String> {
+        s.split(',')
+            .map(|t| t.trim().to_string())
+            .filter(|t| !t.is_empty())
+            .collect()
+    };
+    let specs: Vec<ScenarioSpec> = if preset == "all" {
+        registry().into_iter().map(|(_, spec)| spec).collect()
+    } else if !preset.is_empty() {
+        vec![from_name(&preset).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown scenario preset '{preset}' \
+                 (try `edgepipe scenario --preset list`)"
+            )
+        })?]
+    } else {
+        let channels =
+            split_list(&args.extra_or("channels", &cfg.scenario.channel));
+        let policies =
+            split_list(&args.extra_or("policies", &cfg.scenario.policy));
+        let traffics =
+            split_list(&args.extra_or("devices", &cfg.scenario.traffic));
+        let mut specs = Vec::new();
+        for ch in &channels {
+            for po in &policies {
+                for tr in &traffics {
+                    specs.push(ScenarioSpec::parse(
+                        ch,
+                        po,
+                        tr,
+                        cfg.scenario.store,
+                    )?);
+                }
+            }
+        }
+        specs
+    };
+    if specs.is_empty() {
+        bail!("no scenarios selected");
+    }
+    if !args.quiet {
+        println!(
+            "scenario sweep: N={} n_c={} n_o={} T={t} seeds={} ({} specs)",
+            ds.n,
+            base.n_c,
+            base.n_o,
+            cfg.sweep.seeds,
+            specs.len()
+        );
+    }
+
+    let rows =
+        scenario_grid(&ds, &base, &specs, cfg.sweep.seeds, cfg.sweep.threads);
+    let mut table = CsvTable::new(&[
+        "scenario",
+        "final_loss_mean",
+        "final_loss_std",
+        "final_loss_sem",
+        "seeds",
+    ]);
+    for (label, s) in &rows {
+        println!(
+            "  {:<40} {:.6} ± {:.6} (sem {:.2e})",
+            label, s.mean, s.std, s.sem
+        );
+        table.push_raw(vec![
+            label.clone(),
+            format!("{}", s.mean),
+            format!("{}", s.std),
+            format!("{}", s.sem),
+            format!("{}", s.n),
+        ]);
+    }
+    let best = rows
+        .iter()
+        .min_by(|a, b| a.1.mean.partial_cmp(&b.1.mean).unwrap())
+        .unwrap();
+    println!("best scenario: {} ({:.6})", best.0, best.1.mean);
+    let out = Path::new(&args.out_dir).join("scenario_sweep.csv");
+    write_csv(&table, &out)?;
+    if !args.quiet {
+        println!("wrote {}", out.display());
+    }
     Ok(0)
 }
 
@@ -487,6 +630,44 @@ mod tests {
     fn dispatch_unknown_is_code_2() {
         let args = Args { command: "bogus".into(), ..Default::default() };
         assert_eq!(dispatch(&args).unwrap(), 2);
+    }
+
+    #[test]
+    fn scenario_preset_list_runs() {
+        let mut extra = std::collections::BTreeMap::new();
+        extra.insert("preset".to_string(), "list".to_string());
+        let args = Args {
+            command: "scenario".into(),
+            backend: "native".into(),
+            extra,
+            ..Default::default()
+        };
+        assert_eq!(dispatch(&args).unwrap(), 0);
+    }
+
+    #[test]
+    fn scenario_cross_sweep_on_small_config() {
+        let mut extra = std::collections::BTreeMap::new();
+        extra.insert("channels".to_string(), "ideal".to_string());
+        extra.insert("policies".to_string(), "fixed,sequential".to_string());
+        extra.insert("devices".to_string(), "1,2".to_string());
+        let args = Args {
+            command: "scenario".into(),
+            overrides: vec![
+                ("data.n_raw".into(), "400".into()),
+                ("protocol.n_c".into(), "40".into()),
+                ("sweep.seeds".into(), "2".into()),
+            ],
+            out_dir: std::env::temp_dir()
+                .join("edgepipe_scenario_test")
+                .to_string_lossy()
+                .into_owned(),
+            backend: "native".into(),
+            quiet: true,
+            extra,
+            ..Default::default()
+        };
+        assert_eq!(dispatch(&args).unwrap(), 0);
     }
 
     #[test]

@@ -8,5 +8,6 @@ pub mod types;
 
 pub use parser::{parse_toml, TomlValue};
 pub use types::{
-    DataConfig, ExperimentConfig, ProtocolConfig, SweepConfig, TrainConfig,
+    DataConfig, ExperimentConfig, ProtocolConfig, ScenarioConfig,
+    SweepConfig, TrainConfig,
 };

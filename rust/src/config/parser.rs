@@ -173,6 +173,15 @@ pub fn parse_value(text: &str) -> Result<TomlValue> {
     if let Ok(f) = text.parse::<f64>() {
         return Ok(TomlValue::Float(f));
     }
+    // bare-word fallback so axis specs like `erasure:0.1` or `fixed:437`
+    // can be written unquoted in `--set` overrides and config files
+    if text.chars().next().is_some_and(|c| c.is_ascii_alphabetic())
+        && text.chars().all(|c| {
+            c.is_ascii_alphanumeric() || matches!(c, ':' | '.' | '_' | '-')
+        })
+    {
+        return Ok(TomlValue::Str(text.to_string()));
+    }
     bail!("cannot parse value '{text}'")
 }
 
@@ -259,6 +268,18 @@ mod tests {
         assert!(parse_toml("novalue\n").is_err());
         assert!(parse_toml("x = [1, 2\n").is_err());
         assert!(parse_toml("x = @@\n").is_err());
+    }
+
+    #[test]
+    fn bare_words_parse_as_strings() {
+        let doc = parse_toml("[scenario]\nchannel = erasure:0.1\n").unwrap();
+        assert_eq!(
+            doc["scenario.channel"],
+            TomlValue::Str("erasure:0.1".into())
+        );
+        // numbers still win over the bare-word fallback
+        assert_eq!(parse_value("437").unwrap(), TomlValue::Int(437));
+        assert_eq!(parse_value("1e-4").unwrap(), TomlValue::Float(1e-4));
     }
 
     #[test]

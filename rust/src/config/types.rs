@@ -5,7 +5,18 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::parser::{parse_toml, parse_value, TomlDoc};
+use super::parser::{parse_toml, parse_value, TomlDoc, TomlValue};
+
+/// Accept string-like scenario axis values: `traffic = 4` and
+/// `traffic = "4"` must both work.
+fn spec_string(value: &TomlValue) -> Result<String> {
+    Ok(match value {
+        TomlValue::Str(s) => s.clone(),
+        TomlValue::Int(i) => i.to_string(),
+        TomlValue::Float(f) => f.to_string(),
+        other => bail!("expected a spec string, got {other:?}"),
+    })
+}
 
 /// Protocol parameters (paper Sec. 2). Times are normalized units.
 #[derive(Clone, Debug)]
@@ -133,6 +144,32 @@ impl Default for SweepConfig {
     }
 }
 
+/// Scenario selection for the generic sweeps (`edgepipe scenario`): the
+/// compact axis strings parsed by `sweep::scenario`.
+#[derive(Clone, Debug)]
+pub struct ScenarioConfig {
+    /// Channel spec: `ideal` | `erasure:<p>` | `rate:<r>[:<p>]`.
+    pub channel: String,
+    /// Policy spec: `fixed[:n_c]` | `warmup:<start>:<growth>[:<cap>]` |
+    /// `deadline:<frac>` | `sequential[:n_c]` | `allfirst`.
+    pub policy: String,
+    /// Traffic spec: `<k>` round-robin devices | `online:<rate>`.
+    pub traffic: String,
+    /// Edge store capacity (0 = unbounded).
+    pub store: usize,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            channel: "ideal".to_string(),
+            policy: "fixed".to_string(),
+            traffic: "1".to_string(),
+            store: 0,
+        }
+    }
+}
+
 /// The full experiment configuration.
 #[derive(Clone, Debug, Default)]
 pub struct ExperimentConfig {
@@ -140,6 +177,7 @@ pub struct ExperimentConfig {
     pub train: TrainConfig,
     pub data: DataConfig,
     pub sweep: SweepConfig,
+    pub scenario: ScenarioConfig,
 }
 
 impl ExperimentConfig {
@@ -195,6 +233,18 @@ impl ExperimentConfig {
                 "sweep.n_cs" => cfg.sweep.n_cs = value.as_usize_arr()?,
                 "sweep.seeds" => cfg.sweep.seeds = value.as_usize()?,
                 "sweep.threads" => cfg.sweep.threads = value.as_usize()?,
+                "scenario.channel" => {
+                    cfg.scenario.channel = spec_string(value)?
+                }
+                "scenario.policy" => {
+                    cfg.scenario.policy = spec_string(value)?
+                }
+                "scenario.traffic" => {
+                    cfg.scenario.traffic = spec_string(value)?
+                }
+                "scenario.store" => {
+                    cfg.scenario.store = value.as_usize()?
+                }
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -282,6 +332,28 @@ mod tests {
         )
         .unwrap();
         assert_eq!(cfg.protocol.n_o, 123.5);
+    }
+
+    #[test]
+    fn scenario_keys_load() {
+        let cfg = ExperimentConfig::load(
+            None,
+            &[
+                ("scenario.channel".into(), "erasure:0.2".into()),
+                ("scenario.policy".into(), "warmup:8:2.0".into()),
+                ("scenario.traffic".into(), "4".into()),
+                ("scenario.store".into(), "500".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(cfg.scenario.channel, "erasure:0.2");
+        assert_eq!(cfg.scenario.policy, "warmup:8:2.0");
+        assert_eq!(cfg.scenario.traffic, "4");
+        assert_eq!(cfg.scenario.store, 500);
+        // defaults
+        let d = ExperimentConfig::default();
+        assert_eq!(d.scenario.channel, "ideal");
+        assert_eq!(d.scenario.traffic, "1");
     }
 
     #[test]

@@ -1,6 +1,6 @@
-//! Discrete-event simulation of the pipelined protocol (paper Fig. 2) —
-//! the coordinator's fast path, and the reference semantics the threaded
-//! pipeline must match bit-for-bit.
+//! The paper's reference protocol run (Fig. 2) — now a thin adapter over
+//! the generic [`scheduler`](super::scheduler): one device, fixed `n_c`,
+//! pipelined overlap.
 //!
 //! Time is normalized (1 unit = one sample's transmission). The device
 //! serializes blocks on the channel; the edge trainer consumes compute
@@ -8,18 +8,23 @@
 //! would finish after a block's arrival instant belongs to the next
 //! window (the paper's `n_p = (n_c+n_o)/τ_p` per-block update count falls
 //! out exactly for integer block lengths).
+//!
+//! This module also owns [`DesConfig`] (the run configuration every
+//! variant shares), the fixed RNG stream ids, and the standalone
+//! [`DeviceTransmitter`] used by the threaded pipeline's device thread
+//! and the perf benches.
 
 use anyhow::Result;
 
 use crate::channel::Channel;
 use crate::data::Dataset;
-use crate::edge::SampleStore;
-use crate::protocol::TimelineCase;
 use crate::util::rng::Pcg32;
 
-use super::events::{EventKind, EventLog};
 use super::executor::BlockExecutor;
-use super::run::{BlockSnapshot, RunResult};
+use super::run::RunResult;
+use super::scheduler::{
+    run_schedule, FixedPolicy, OverlapMode, SingleDeviceSource,
+};
 
 /// Full configuration of one coordinator run.
 #[derive(Clone, Debug)]
@@ -77,170 +82,18 @@ impl DesConfig {
     }
 }
 
-/// RNG stream ids (fixed so DES and threaded pipeline agree).
+/// RNG stream ids (fixed so every coordinator path agrees).
 pub(crate) const STREAM_INIT: u64 = 1;
 pub(crate) const STREAM_DEVICE: u64 = 2;
 pub(crate) const STREAM_EDGE: u64 = 3;
 pub(crate) const STREAM_CHANNEL: u64 = 4;
 pub(crate) const STREAM_EVICT: u64 = 5;
 
-/// The edge node's training half: owns `w`, the sample store, the compute
-/// clock, loss recording and snapshot collection. Shared verbatim by the
-/// DES and the threaded pipeline so their semantics cannot diverge.
-pub(crate) struct EdgeTrainer<'a> {
-    ds: &'a Dataset,
-    pub w: Vec<f64>,
-    pub store: SampleStore,
-    /// Next update would start at this time.
-    cursor: f64,
-    tau_p: f64,
-    t_budget: f64,
-    reg: f64,
-    rng: Pcg32,
-    evict_rng: Pcg32,
-    idx_buf: Vec<u32>,
-    pub updates: usize,
-    pub curve: Vec<(f64, f64)>,
-    loss_every: usize,
-    since_record: usize,
-    pub snapshots: Vec<BlockSnapshot>,
-    collect_snapshots: bool,
-    record_blocks: bool,
-}
-
-impl<'a> EdgeTrainer<'a> {
-    pub fn new(ds: &'a Dataset, cfg: &DesConfig) -> EdgeTrainer<'a> {
-        let mut init_rng = Pcg32::new(cfg.seed, STREAM_INIT);
-        let w: Vec<f64> = (0..ds.d)
-            .map(|_| cfg.init_std * init_rng.next_gaussian())
-            .collect();
-        let store = match cfg.store_capacity {
-            Some(cap) => SampleStore::with_capacity(ds.d, cap),
-            None => SampleStore::new(ds.d),
-        };
-        let reg = cfg.lambda / ds.n as f64;
-        let mut trainer = EdgeTrainer {
-            ds,
-            w,
-            store,
-            cursor: 0.0,
-            tau_p: cfg.tau_p,
-            t_budget: cfg.t_budget,
-            reg,
-            rng: Pcg32::new(cfg.seed, STREAM_EDGE),
-            evict_rng: Pcg32::new(cfg.seed, STREAM_EVICT),
-            idx_buf: Vec::with_capacity(4096),
-            updates: 0,
-            curve: Vec::new(),
-            loss_every: cfg.loss_every,
-            since_record: 0,
-            snapshots: Vec::new(),
-            collect_snapshots: cfg.collect_snapshots,
-            record_blocks: cfg.record_blocks,
-        };
-        trainer.record_loss(0.0);
-        trainer
-    }
-
-    /// Training loss over the FULL dataset (paper Fig. 4's y-axis).
-    pub fn full_loss(&self) -> f64 {
-        self.ds.ridge_loss(&self.w, self.reg)
-    }
-
-    fn record_loss(&mut self, t: f64) {
-        let loss = self.full_loss();
-        self.curve.push((t, loss));
-        self.since_record = 0;
-    }
-
-    /// Advance the compute clock to `until`, running SGD updates while
-    /// the store is non-empty (paper eq. (2)).
-    pub fn advance_to(
-        &mut self,
-        until: f64,
-        exec: &mut dyn BlockExecutor,
-        events: &mut EventLog,
-    ) -> Result<()> {
-        let until = until.min(self.t_budget);
-        if self.store.is_empty() {
-            self.cursor = self.cursor.max(until);
-            return Ok(());
-        }
-        let n = self.store.len() as u64;
-        // updates that *finish* by `until` (tiny epsilon absorbs fp drift
-        // in repeated cursor += tau_p)
-        let eps = 1e-9 * self.tau_p;
-        let mut ran = 0usize;
-        while self.cursor + self.tau_p <= until + eps {
-            self.idx_buf.push(self.rng.gen_range(n) as u32);
-            self.cursor += self.tau_p;
-            self.updates += 1;
-            self.since_record += 1;
-            ran += 1;
-            let flush_for_record = self.loss_every > 0
-                && self.since_record >= self.loss_every;
-            if flush_for_record || self.idx_buf.len() >= 4096 {
-                self.flush(exec)?;
-                if flush_for_record {
-                    self.record_loss(self.cursor);
-                }
-            }
-        }
-        self.flush(exec)?;
-        if ran > 0 {
-            events.push(self.cursor, EventKind::UpdatesRun { count: ran });
-        }
-        self.cursor = self.cursor.max(until);
-        Ok(())
-    }
-
-    /// Let time pass WITHOUT computing (the sequential baseline's idle
-    /// phase — the edge does nothing while the channel is busy).
-    pub fn skip_to(&mut self, until: f64) {
-        self.cursor = self.cursor.max(until.min(self.t_budget));
-    }
-
-    fn flush(&mut self, exec: &mut dyn BlockExecutor) -> Result<()> {
-        if self.idx_buf.is_empty() {
-            return Ok(());
-        }
-        exec.run_block(&mut self.w, self.store.view(), &self.idx_buf)?;
-        self.idx_buf.clear();
-        Ok(())
-    }
-
-    /// Ingest a delivered block at time `t` (records the boundary loss
-    /// and, when enabled, the Theorem-1 snapshot of (w, X_b)).
-    pub fn ingest_block(&mut self, block: usize, t: f64, x: &[f32], y: &[f32]) {
-        if self.collect_snapshots {
-            self.snapshots.push(BlockSnapshot {
-                block,
-                arrived_at: t,
-                w_end: self.w.clone(),
-                x: x.to_vec(),
-                y: y.to_vec(),
-            });
-        }
-        self.store.ingest(x, y, &mut self.evict_rng);
-        if self.record_blocks {
-            self.record_loss(t);
-        }
-    }
-
-    /// Finish the run: flush pending updates and record the final loss.
-    pub fn finish(
-        &mut self,
-        exec: &mut dyn BlockExecutor,
-    ) -> Result<()> {
-        self.flush(exec)?;
-        self.record_loss(self.t_budget);
-        Ok(())
-    }
-}
-
 /// The device half: selects untransmitted samples uniformly without
 /// replacement (paper Sec. 2) and frames them into blocks. Public so the
-/// perf benches can measure it in isolation.
+/// perf benches can measure it in isolation; the threaded pipeline's
+/// device thread drives it directly. Its RNG stream matches
+/// [`SingleDeviceSource`] draw-for-draw.
 pub struct DeviceTransmitter<'a> {
     ds: &'a Dataset,
     remaining: Vec<u32>,
@@ -288,7 +141,10 @@ impl<'a> DeviceTransmitter<'a> {
     }
 }
 
-/// Run the protocol as a discrete-event simulation.
+/// Run the protocol as a discrete-event simulation — the reference
+/// semantics and the Monte-Carlo fast path. Equivalent to
+/// [`run_schedule`] under a single device, the fixed-`n_c` policy and
+/// pipelined overlap (which is exactly how it is implemented).
 pub fn run_des(
     ds: &Dataset,
     cfg: &DesConfig,
@@ -296,83 +152,17 @@ pub fn run_des(
     exec: &mut dyn BlockExecutor,
 ) -> Result<RunResult> {
     assert!(cfg.n_c >= 1, "n_c must be >= 1");
-    let mut events = EventLog::with_capacity(cfg.event_capacity);
-    let mut trainer = EdgeTrainer::new(ds, cfg);
-    let mut device = DeviceTransmitter::new(ds, cfg.n_c, cfg.seed);
-    let mut chan_rng = Pcg32::new(cfg.seed, STREAM_CHANNEL);
-
-    let mut t_send = 0.0f64;
-    let mut block = 1usize;
-    let mut blocks_sent = 0usize;
-    let mut blocks_delivered = 0usize;
-    let mut samples_delivered = 0usize;
-    let mut retransmissions = 0u64;
-
-    while t_send < cfg.t_budget && !device.exhausted() {
-        let (_, x, y) = device.next_block().expect("non-exhausted device");
-        let payload = y.len();
-        let duration = payload as f64 + cfg.n_o;
-        events.push(t_send, EventKind::BlockSent { block, payload });
-        blocks_sent += 1;
-        let delivery = channel.transmit(t_send, duration, &mut chan_rng);
-        retransmissions += (delivery.attempts - 1) as u64;
-        let arrival = delivery.arrival;
-        if arrival < cfg.t_budget {
-            // train through the block's transmission window, then ingest
-            trainer.advance_to(arrival, exec, &mut events)?;
-            trainer.ingest_block(block, arrival, &x, &y);
-            blocks_delivered += 1;
-            samples_delivered += payload;
-            events.push(
-                arrival,
-                EventKind::BlockDelivered {
-                    block,
-                    payload,
-                    attempts: delivery.attempts,
-                },
-            );
-        } else {
-            trainer.advance_to(cfg.t_budget, exec, &mut events)?;
-            events.push(
-                cfg.t_budget,
-                EventKind::BlockMissedDeadline { block },
-            );
-        }
-        t_send = arrival;
-        block += 1;
-    }
-    // tail: no more transmissions; compute until the deadline (Fig. 2(b))
-    trainer.advance_to(cfg.t_budget, exec, &mut events)?;
-    trainer.finish(exec)?;
-
-    let case = if samples_delivered >= ds.n {
-        TimelineCase::Full
-    } else {
-        TimelineCase::Partial
-    };
-    events.push(
-        cfg.t_budget,
-        EventKind::Finished {
-            updates: trainer.updates,
-            delivered_samples: samples_delivered,
-        },
-    );
-
-    let final_loss = trainer.full_loss();
-    Ok(RunResult {
-        curve: trainer.curve,
-        final_loss,
-        final_w: trainer.w,
-        updates: trainer.updates,
-        blocks_sent,
-        blocks_delivered,
-        samples_delivered,
-        retransmissions,
-        case,
-        snapshots: trainer.snapshots,
-        events: events.into_events(),
-        backend: exec.name(),
-    })
+    let mut source = SingleDeviceSource::new(ds, cfg.seed);
+    let mut policy = FixedPolicy(cfg.n_c.min(ds.n));
+    run_schedule(
+        ds,
+        cfg,
+        &mut source,
+        &mut policy,
+        OverlapMode::Pipelined,
+        channel,
+        exec,
+    )
 }
 
 #[cfg(test)]
@@ -382,7 +172,7 @@ mod tests {
     use crate::coordinator::executor::NativeExecutor;
     use crate::data::synth::{synth_calhousing, SynthSpec};
     use crate::model::RidgeModel;
-    use crate::protocol::Timeline;
+    use crate::protocol::{Timeline, TimelineCase};
 
     fn small_ds() -> Dataset {
         synth_calhousing(&SynthSpec { n: 1000, ..Default::default() })
@@ -402,7 +192,8 @@ mod tests {
         let mut exec = native_exec(&ds, cfg.alpha, cfg.lambda);
         let res =
             run_des(&ds, &cfg, &mut IdealChannel, &mut exec).unwrap();
-        let tl = Timeline::resolve(ds.n, cfg.t_budget, cfg.n_c, cfg.n_o, cfg.tau_p);
+        let tl =
+            Timeline::resolve(ds.n, cfg.t_budget, cfg.n_c, cfg.n_o, cfg.tau_p);
         assert_eq!(res.updates, tl.total_updates(), "DES vs closed form");
         assert_eq!(res.samples_delivered, ds.n);
         assert_eq!(res.case, TimelineCase::Full);

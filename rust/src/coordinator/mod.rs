@@ -1,27 +1,41 @@
 //! The pipelined communication/computation coordinator — the paper's
 //! system contribution (Sec. 2, Fig. 2).
 //!
-//! Two interchangeable implementations with bit-identical results:
+//! One generic engine, several faces:
 //!
-//! * [`des`] — a single-threaded discrete-event simulation, the fast path
-//!   used by Monte-Carlo sweeps (millions of updates/s);
-//! * [`pipeline`] — a real two-thread pipeline (device transmitter thread,
-//!   edge trainer thread, mpsc packet channel) exercising the actual
-//!   concurrent system structure.
+//! * [`scheduler`] — the event-driven core: [`run_schedule`] advances
+//!   normalized time and dispatches to pluggable [`TrafficSource`] /
+//!   [`BlockPolicy`] / [`OverlapMode`] policies over the existing
+//!   [`Channel`](crate::channel::Channel) and [`BlockExecutor`] seams.
+//!   Every protocol variant in the crate is a thin adapter over it.
+//! * [`des`] — the reference configuration (single device, fixed `n_c`,
+//!   pipelined): the fast path used by Monte-Carlo sweeps (millions of
+//!   updates/s).
+//! * [`pipeline`] — a real two-thread pipeline (device transmitter
+//!   thread, edge trainer thread, mpsc packet channel) exercising the
+//!   actual concurrent system structure.
 //!
-//! Both drive a [`BlockExecutor`](executor::BlockExecutor) — native Rust
-//! SGD or the PJRT executor running the AOT JAX/Pallas artifacts — and
-//! both consume identical RNG streams, so `des == pipeline` exactly
-//! (asserted in `rust/tests/pipeline_parity.rs`).
+//! All paths drive a [`BlockExecutor`](executor::BlockExecutor) — native
+//! Rust SGD or the PJRT executor running the AOT JAX/Pallas artifacts —
+//! and consume identical RNG streams, so `des == pipeline ==
+//! run_schedule(single, fixed)` exactly (asserted in
+//! `rust/tests/pipeline_parity.rs` and `rust/tests/scenario_parity.rs`).
 
 pub mod des;
 pub mod events;
 pub mod executor;
 pub mod pipeline;
 pub mod run;
+pub mod scheduler;
+mod trainer;
 
 pub use des::{run_des, DesConfig, DeviceTransmitter};
 pub use events::{Event, EventKind};
 pub use executor::{BlockExecutor, NativeExecutor};
 pub use pipeline::run_pipelined;
 pub use run::{run_experiment, ExperimentOutput, RunResult};
+pub use scheduler::{
+    run_schedule, BlockFrame, BlockPolicy, FixedPolicy, OnlineArrivalSource,
+    OverlapMode, RoundRobinSource, SingleDeviceSource, SourcePoll,
+    TrafficSource,
+};

@@ -18,10 +18,11 @@ use crate::data::Dataset;
 use crate::protocol::TimelineCase;
 use crate::util::rng::Pcg32;
 
-use super::des::{DesConfig, DeviceTransmitter, EdgeTrainer, STREAM_CHANNEL};
+use super::des::{DesConfig, DeviceTransmitter, STREAM_CHANNEL};
 use super::events::{EventKind, EventLog};
 use super::executor::BlockExecutor;
 use super::run::RunResult;
+use super::trainer::EdgeTrainer;
 
 /// One framed block in flight from device to edge.
 struct PipePacket {

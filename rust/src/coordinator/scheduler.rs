@@ -1,0 +1,615 @@
+//! The generic event-driven protocol core — ONE engine behind every
+//! protocol variant.
+//!
+//! The paper's pipelined protocol used to be implemented four separate
+//! times (DES fast path, adaptive schedules, multi-device round-robin,
+//! sequential baseline), each duplicating the transmit/train/timeline
+//! loop. [`run_schedule`] is the single remaining loop; everything else
+//! is a policy plugged into it:
+//!
+//! * [`TrafficSource`] — *who sends which samples next*: one device
+//!   ([`SingleDeviceSource`]), `k` devices sharing the uplink round-robin
+//!   ([`RoundRobinSource`]), or a device whose samples arrive over time
+//!   ([`OnlineArrivalSource`]).
+//! * [`BlockPolicy`] — *how large the next block is*: the paper's fixed
+//!   `n_c` ([`FixedPolicy`]) or any adaptive schedule
+//!   (`extensions::adaptive`).
+//! * [`OverlapMode`] — whether the edge trains during transmission
+//!   (the paper's pipelining) or idles (the sequential baseline).
+//! * [`Channel`] / [`BlockExecutor`] — the existing link and SGD-backend
+//!   seams.
+//!
+//! RNG-stream discipline is identical to the seed DES (device selection
+//! on `STREAM_DEVICE`, channel noise on `STREAM_CHANNEL`, SGD draws on
+//! `STREAM_EDGE`), so `run_des == run_schedule(single device, fixed n_c,
+//! pipelined)` bit-for-bit — asserted by `rust/tests/scenario_parity.rs`.
+//! The hot loop stages each block in a reused [`BlockFrame`], so steady
+//! state performs no per-block allocation.
+
+use anyhow::Result;
+
+use crate::channel::Channel;
+use crate::data::Dataset;
+use crate::protocol::TimelineCase;
+use crate::util::rng::Pcg32;
+
+use super::des::{DesConfig, STREAM_CHANNEL, STREAM_DEVICE};
+use super::events::{EventKind, EventLog};
+use super::executor::BlockExecutor;
+use super::run::RunResult;
+use super::trainer::EdgeTrainer;
+
+/// Reused per-block staging buffers: one allocation per run, not per
+/// block (frames are copied into the edge store on ingest, so reuse is
+/// safe).
+pub struct BlockFrame {
+    /// Row-major covariates of the staged block.
+    pub x: Vec<f32>,
+    /// Labels of the staged block.
+    pub y: Vec<f32>,
+}
+
+impl BlockFrame {
+    /// Pre-size for blocks of `n_c` samples in `d` dimensions.
+    pub fn with_capacity(n_c: usize, d: usize) -> BlockFrame {
+        BlockFrame {
+            x: Vec::with_capacity(n_c * d),
+            y: Vec::with_capacity(n_c),
+        }
+    }
+
+    /// Samples currently staged.
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Drop staged samples, keeping the buffers.
+    pub fn clear(&mut self) {
+        self.x.clear();
+        self.y.clear();
+    }
+}
+
+/// What a [`TrafficSource`] produced for the current poll.
+pub enum SourcePoll {
+    /// The frame was filled by device `device`.
+    Block { device: usize },
+    /// Nothing is transmittable before `until` (online arrivals); the
+    /// scheduler lets the edge compute through the gap.
+    Idle { until: f64 },
+    /// No device will ever have data again.
+    Exhausted,
+}
+
+/// Which device sends which samples next. Implementations own the
+/// without-replacement selection RNG (`STREAM_DEVICE` discipline) so the
+/// scheduler core stays deterministic and backend-agnostic.
+pub trait TrafficSource {
+    /// Untransmitted samples remaining across all devices (a hint for
+    /// [`BlockPolicy`] implementations).
+    fn remaining(&self) -> usize;
+
+    /// Stage the next block of up to `n_c` samples into `frame`.
+    fn poll(
+        &mut self,
+        n_c: usize,
+        t_now: f64,
+        frame: &mut BlockFrame,
+    ) -> SourcePoll;
+
+    /// Name for logs.
+    fn name(&self) -> String;
+}
+
+/// A per-block payload-size policy (the paper fixes one `n_c`; adaptive
+/// schedules live in `extensions::adaptive`).
+pub trait BlockPolicy {
+    /// Payload for the `block`-th transmission (1-indexed), given how
+    /// many samples remain untransmitted and the current time.
+    fn next_n_c(&mut self, block: usize, remaining: usize, t_now: f64)
+        -> usize;
+
+    /// Name for logs.
+    fn name(&self) -> String;
+}
+
+/// The paper's fixed schedule.
+pub struct FixedPolicy(pub usize);
+
+impl BlockPolicy for FixedPolicy {
+    fn next_n_c(&mut self, _b: usize, remaining: usize, _t: f64) -> usize {
+        self.0.min(remaining).max(1)
+    }
+
+    fn name(&self) -> String {
+        format!("fixed({})", self.0)
+    }
+}
+
+/// Does the edge node compute while the channel is busy?
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverlapMode {
+    /// The paper's protocol: transmission and SGD overlap.
+    Pipelined,
+    /// The non-pipelined baseline: the edge idles during every
+    /// transmission and only computes afterwards.
+    Sequential,
+}
+
+/// Draw up to `n_c` samples uniformly without replacement from
+/// `remaining` (partial Fisher–Yates into the tail — O(k) per block, the
+/// seed `DeviceTransmitter` discipline bit-for-bit) and gather them from
+/// `ds` into `frame`.
+fn draw_block(
+    ds: &Dataset,
+    remaining: &mut Vec<u32>,
+    rng: &mut Pcg32,
+    n_c: usize,
+    frame: &mut BlockFrame,
+) {
+    let len = remaining.len();
+    let k = n_c.min(len);
+    for i in 0..k {
+        let j = rng.gen_range((len - i) as u64) as usize;
+        remaining.swap(j, len - 1 - i);
+    }
+    frame.clear();
+    for &i in &remaining[len - k..] {
+        frame.x.extend_from_slice(ds.row(i as usize));
+        frame.y.push(ds.label(i as usize));
+    }
+    remaining.truncate(len - k);
+}
+
+/// The paper's setting: one device holding the whole dataset.
+pub struct SingleDeviceSource<'a> {
+    ds: &'a Dataset,
+    remaining: Vec<u32>,
+    rng: Pcg32,
+}
+
+impl<'a> SingleDeviceSource<'a> {
+    pub fn new(ds: &'a Dataset, seed: u64) -> SingleDeviceSource<'a> {
+        SingleDeviceSource {
+            ds,
+            remaining: (0..ds.n as u32).collect(),
+            rng: Pcg32::new(seed, STREAM_DEVICE),
+        }
+    }
+}
+
+impl TrafficSource for SingleDeviceSource<'_> {
+    fn remaining(&self) -> usize {
+        self.remaining.len()
+    }
+
+    fn poll(
+        &mut self,
+        n_c: usize,
+        _t_now: f64,
+        frame: &mut BlockFrame,
+    ) -> SourcePoll {
+        if self.remaining.is_empty() {
+            return SourcePoll::Exhausted;
+        }
+        draw_block(self.ds, &mut self.remaining, &mut self.rng, n_c, frame);
+        SourcePoll::Block { device: 0 }
+    }
+
+    fn name(&self) -> String {
+        "single-device".to_string()
+    }
+}
+
+/// One device's transmit state in a multi-device schedule.
+struct DeviceLane {
+    remaining: Vec<u32>,
+    rng: Pcg32,
+}
+
+/// `k` devices holding disjoint shards, taking turns on the shared
+/// uplink (paper Sec. 6). Device `i` draws from stream `STREAM_DEVICE`
+/// seeded `seed + 1000·i`, so `k = 1` is bit-identical to
+/// [`SingleDeviceSource`] (asserted in `scenario_parity.rs`).
+pub struct RoundRobinSource<'a> {
+    shards: &'a [Dataset],
+    lanes: Vec<DeviceLane>,
+    turn: usize,
+}
+
+impl<'a> RoundRobinSource<'a> {
+    pub fn new(shards: &'a [Dataset], seed: u64) -> RoundRobinSource<'a> {
+        assert!(!shards.is_empty(), "need at least one device");
+        let lanes = shards
+            .iter()
+            .enumerate()
+            .map(|(i, shard)| DeviceLane {
+                remaining: (0..shard.n as u32).collect(),
+                rng: Pcg32::new(
+                    seed.wrapping_add(1000 * i as u64),
+                    STREAM_DEVICE,
+                ),
+            })
+            .collect();
+        RoundRobinSource { shards, lanes, turn: 0 }
+    }
+}
+
+impl TrafficSource for RoundRobinSource<'_> {
+    fn remaining(&self) -> usize {
+        self.lanes.iter().map(|l| l.remaining.len()).sum()
+    }
+
+    fn poll(
+        &mut self,
+        n_c: usize,
+        _t_now: f64,
+        frame: &mut BlockFrame,
+    ) -> SourcePoll {
+        if self.lanes.iter().all(|l| l.remaining.is_empty()) {
+            return SourcePoll::Exhausted;
+        }
+        while self.lanes[self.turn % self.lanes.len()].remaining.is_empty()
+        {
+            self.turn += 1;
+        }
+        let device = self.turn % self.lanes.len();
+        self.turn += 1;
+        let lane = &mut self.lanes[device];
+        draw_block(
+            &self.shards[device],
+            &mut lane.remaining,
+            &mut lane.rng,
+            n_c,
+            frame,
+        );
+        SourcePoll::Block { device }
+    }
+
+    fn name(&self) -> String {
+        format!("round-robin({})", self.lanes.len())
+    }
+}
+
+/// A device whose samples only become available over time: sample `i`
+/// (in dataset order) arrives at the device at `i / rate`. The device
+/// greedily frames up to `n_c` of the arrived-but-unsent samples, chosen
+/// uniformly without replacement; when none have arrived yet it reports
+/// [`SourcePoll::Idle`] until the next arrival. As `rate → ∞` every
+/// sample is available at `t = 0` and the source is bit-identical to
+/// [`SingleDeviceSource`].
+pub struct OnlineArrivalSource<'a> {
+    ds: &'a Dataset,
+    /// Arrived but not yet transmitted (dataset indices).
+    pool: Vec<u32>,
+    /// Samples arrived so far (prefix of dataset order).
+    arrived: usize,
+    rate: f64,
+    rng: Pcg32,
+}
+
+impl<'a> OnlineArrivalSource<'a> {
+    /// `rate` = samples arriving per normalized time unit (`> 0`;
+    /// `f64::INFINITY` recovers the all-data-up-front setting).
+    pub fn new(ds: &'a Dataset, rate: f64, seed: u64) -> Self {
+        assert!(rate > 0.0, "arrival rate must be positive");
+        OnlineArrivalSource {
+            ds,
+            pool: Vec::with_capacity(ds.n),
+            arrived: 0,
+            rate,
+            rng: Pcg32::new(seed, STREAM_DEVICE),
+        }
+    }
+
+    fn arrival_time(&self, i: usize) -> f64 {
+        i as f64 / self.rate
+    }
+
+    /// Move every sample with arrival time ≤ `t_now` into the pool.
+    fn absorb(&mut self, t_now: f64) {
+        while self.arrived < self.ds.n
+            && self.arrival_time(self.arrived) <= t_now
+        {
+            self.pool.push(self.arrived as u32);
+            self.arrived += 1;
+        }
+    }
+}
+
+impl TrafficSource for OnlineArrivalSource<'_> {
+    fn remaining(&self) -> usize {
+        // everything not yet transmitted, arrived or not
+        self.pool.len() + (self.ds.n - self.arrived)
+    }
+
+    fn poll(
+        &mut self,
+        n_c: usize,
+        t_now: f64,
+        frame: &mut BlockFrame,
+    ) -> SourcePoll {
+        self.absorb(t_now);
+        if self.pool.is_empty() {
+            if self.arrived >= self.ds.n {
+                return SourcePoll::Exhausted;
+            }
+            return SourcePoll::Idle {
+                until: self.arrival_time(self.arrived),
+            };
+        }
+        draw_block(self.ds, &mut self.pool, &mut self.rng, n_c, frame);
+        SourcePoll::Block { device: 0 }
+    }
+
+    fn name(&self) -> String {
+        format!("online-arrivals({})", self.rate)
+    }
+}
+
+/// Run the pipelined protocol under pluggable traffic/block/overlap
+/// policies — the one event loop every variant shares.
+///
+/// Timing, counters and the event stream reproduce the seed `run_des`
+/// exactly when driven by `SingleDeviceSource` + `FixedPolicy` +
+/// `Pipelined`.
+pub fn run_schedule(
+    ds: &Dataset,
+    cfg: &DesConfig,
+    source: &mut dyn TrafficSource,
+    policy: &mut dyn BlockPolicy,
+    mode: OverlapMode,
+    channel: &mut dyn Channel,
+    exec: &mut dyn BlockExecutor,
+) -> Result<RunResult> {
+    let mut events = EventLog::with_capacity(cfg.event_capacity);
+    let mut trainer = EdgeTrainer::new(ds, cfg);
+    let mut chan_rng = Pcg32::new(cfg.seed, STREAM_CHANNEL);
+    let mut frame = BlockFrame::with_capacity(cfg.n_c.max(1).min(ds.n), ds.d);
+
+    let mut t_send = 0.0f64;
+    let mut block = 1usize;
+    let mut blocks_sent = 0usize;
+    let mut blocks_delivered = 0usize;
+    let mut samples_delivered = 0usize;
+    let mut retransmissions = 0u64;
+
+    while t_send < cfg.t_budget {
+        let n_c = policy.next_n_c(block, source.remaining(), t_send);
+        match source.poll(n_c, t_send, &mut frame) {
+            SourcePoll::Exhausted => break,
+            SourcePoll::Idle { until } => {
+                // channel idle: the edge keeps computing (pipelined) or
+                // keeps idling (sequential) until data shows up
+                let until = until.max(t_send).min(cfg.t_budget);
+                match mode {
+                    OverlapMode::Pipelined => {
+                        trainer.advance_to(until, exec, &mut events)?
+                    }
+                    OverlapMode::Sequential => trainer.skip_to(until),
+                }
+                if until <= t_send {
+                    // a source must make progress; treat as exhausted
+                    break;
+                }
+                t_send = until;
+                continue;
+            }
+            SourcePoll::Block { .. } => {}
+        }
+        let payload = frame.len();
+        let duration = payload as f64 + cfg.n_o;
+        events.push(t_send, EventKind::BlockSent { block, payload });
+        blocks_sent += 1;
+        let delivery = channel.transmit(t_send, duration, &mut chan_rng);
+        retransmissions += (delivery.attempts - 1) as u64;
+        if delivery.arrival < cfg.t_budget {
+            // train (or idle) through the transmission window, then
+            // ingest the delivered block
+            match mode {
+                OverlapMode::Pipelined => {
+                    trainer.advance_to(delivery.arrival, exec, &mut events)?
+                }
+                OverlapMode::Sequential => trainer.skip_to(delivery.arrival),
+            }
+            trainer.ingest_block(block, delivery.arrival, &frame.x, &frame.y);
+            blocks_delivered += 1;
+            samples_delivered += payload;
+            events.push(
+                delivery.arrival,
+                EventKind::BlockDelivered {
+                    block,
+                    payload,
+                    attempts: delivery.attempts,
+                },
+            );
+        } else {
+            match mode {
+                OverlapMode::Pipelined => {
+                    trainer.advance_to(cfg.t_budget, exec, &mut events)?
+                }
+                OverlapMode::Sequential => trainer.skip_to(cfg.t_budget),
+            }
+            events.push(
+                cfg.t_budget,
+                EventKind::BlockMissedDeadline { block },
+            );
+        }
+        t_send = delivery.arrival;
+        block += 1;
+    }
+    // tail: no more transmissions; compute until the deadline (Fig. 2(b))
+    trainer.advance_to(cfg.t_budget, exec, &mut events)?;
+    trainer.finish(exec)?;
+
+    let case = if samples_delivered >= ds.n {
+        TimelineCase::Full
+    } else {
+        TimelineCase::Partial
+    };
+    events.push(
+        cfg.t_budget,
+        EventKind::Finished {
+            updates: trainer.updates,
+            delivered_samples: samples_delivered,
+        },
+    );
+
+    let final_loss = trainer.full_loss();
+    Ok(RunResult {
+        curve: trainer.curve,
+        final_loss,
+        final_w: trainer.w,
+        updates: trainer.updates,
+        blocks_sent,
+        blocks_delivered,
+        samples_delivered,
+        retransmissions,
+        case,
+        snapshots: trainer.snapshots,
+        events: events.into_events(),
+        backend: exec.name(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::IdealChannel;
+    use crate::coordinator::des::run_des;
+    use crate::coordinator::executor::NativeExecutor;
+    use crate::data::synth::{synth_calhousing, SynthSpec};
+    use crate::model::RidgeModel;
+
+    fn small_ds(n: usize) -> Dataset {
+        synth_calhousing(&SynthSpec { n, ..Default::default() })
+    }
+
+    fn exec(ds: &Dataset, cfg: &DesConfig) -> NativeExecutor {
+        NativeExecutor::new(
+            RidgeModel::new(ds.d, cfg.lambda, ds.n),
+            cfg.alpha,
+        )
+    }
+
+    #[test]
+    fn explicit_scheduler_matches_run_des() {
+        let ds = small_ds(500);
+        let cfg = DesConfig {
+            event_capacity: 1 << 14,
+            ..DesConfig::paper(64, 10.0, 900.0, 13)
+        };
+        let des = run_des(&ds, &cfg, &mut IdealChannel, &mut exec(&ds, &cfg))
+            .unwrap();
+        let mut source = SingleDeviceSource::new(&ds, cfg.seed);
+        let mut policy = FixedPolicy(cfg.n_c);
+        let uni = run_schedule(
+            &ds,
+            &cfg,
+            &mut source,
+            &mut policy,
+            OverlapMode::Pipelined,
+            &mut IdealChannel,
+            &mut exec(&ds, &cfg),
+        )
+        .unwrap();
+        assert_eq!(des.final_w, uni.final_w);
+        assert_eq!(des.curve, uni.curve);
+        assert_eq!(des.events, uni.events);
+        assert_eq!(des.updates, uni.updates);
+        assert_eq!(des.blocks_sent, uni.blocks_sent);
+    }
+
+    #[test]
+    fn infinite_arrival_rate_recovers_single_device() {
+        let ds = small_ds(400);
+        let cfg = DesConfig {
+            record_blocks: false,
+            ..DesConfig::paper(50, 5.0, 800.0, 4)
+        };
+        let des = run_des(&ds, &cfg, &mut IdealChannel, &mut exec(&ds, &cfg))
+            .unwrap();
+        let mut source =
+            OnlineArrivalSource::new(&ds, f64::INFINITY, cfg.seed);
+        let mut policy = FixedPolicy(cfg.n_c);
+        let online = run_schedule(
+            &ds,
+            &cfg,
+            &mut source,
+            &mut policy,
+            OverlapMode::Pipelined,
+            &mut IdealChannel,
+            &mut exec(&ds, &cfg),
+        )
+        .unwrap();
+        assert_eq!(des.final_w, online.final_w);
+        assert_eq!(des.updates, online.updates);
+        assert_eq!(des.samples_delivered, online.samples_delivered);
+    }
+
+    #[test]
+    fn slow_arrivals_throttle_delivery_but_still_finish() {
+        let ds = small_ds(300);
+        // arrivals take n/rate = 600 time units; budget is generous
+        let cfg = DesConfig {
+            alpha: 1e-3,
+            record_blocks: false,
+            ..DesConfig::paper(30, 2.0, 2000.0, 8)
+        };
+        let mut source = OnlineArrivalSource::new(&ds, 0.5, cfg.seed);
+        let mut policy = FixedPolicy(cfg.n_c);
+        let run = run_schedule(
+            &ds,
+            &cfg,
+            &mut source,
+            &mut policy,
+            OverlapMode::Pipelined,
+            &mut IdealChannel,
+            &mut exec(&ds, &cfg),
+        )
+        .unwrap();
+        assert_eq!(run.samples_delivered, ds.n);
+        assert_eq!(run.case, TimelineCase::Full);
+        assert!(run.final_loss.is_finite());
+        // throttled arrivals force more, smaller blocks than n/n_c
+        assert!(run.blocks_sent >= ds.n / cfg.n_c);
+    }
+
+    #[test]
+    fn frame_reuse_keeps_capacity() {
+        let ds = small_ds(200);
+        let mut frame = BlockFrame::with_capacity(32, ds.d);
+        let mut remaining: Vec<u32> = (0..ds.n as u32).collect();
+        let mut rng = Pcg32::new(1, STREAM_DEVICE);
+        draw_block(&ds, &mut remaining, &mut rng, 32, &mut frame);
+        assert_eq!(frame.len(), 32);
+        assert_eq!(frame.x.len(), 32 * ds.d);
+        let cap_x = frame.x.capacity();
+        draw_block(&ds, &mut remaining, &mut rng, 32, &mut frame);
+        assert_eq!(frame.len(), 32);
+        assert_eq!(frame.x.capacity(), cap_x, "no per-block reallocation");
+        assert_eq!(remaining.len(), ds.n - 64);
+    }
+
+    #[test]
+    fn round_robin_alternates_devices() {
+        let ds = small_ds(120);
+        let shards =
+            crate::extensions::multi_device::shard_dataset(&ds, 3);
+        let mut source = RoundRobinSource::new(&shards, 9);
+        let mut frame = BlockFrame::with_capacity(10, ds.d);
+        let mut order = Vec::new();
+        for _ in 0..6 {
+            match source.poll(10, 0.0, &mut frame) {
+                SourcePoll::Block { device } => order.push(device),
+                _ => panic!("unexpected poll result"),
+            }
+        }
+        assert_eq!(order, vec![0, 1, 2, 0, 1, 2]);
+        assert_eq!(source.remaining(), 120 - 60);
+    }
+}

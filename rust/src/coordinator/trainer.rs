@@ -1,0 +1,164 @@
+//! The edge node's training half, shared verbatim by every coordinator
+//! path (DES adapter, generic scheduler, threaded pipeline) so their
+//! semantics cannot diverge.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::edge::SampleStore;
+use crate::util::rng::Pcg32;
+
+use super::des::{DesConfig, STREAM_EDGE, STREAM_EVICT, STREAM_INIT};
+use super::events::{EventKind, EventLog};
+use super::executor::BlockExecutor;
+use super::run::BlockSnapshot;
+
+/// The edge node's training half: owns `w`, the sample store, the compute
+/// clock, loss recording and snapshot collection.
+pub(crate) struct EdgeTrainer<'a> {
+    ds: &'a Dataset,
+    pub w: Vec<f64>,
+    pub store: SampleStore,
+    /// Next update would start at this time.
+    cursor: f64,
+    tau_p: f64,
+    t_budget: f64,
+    reg: f64,
+    rng: Pcg32,
+    evict_rng: Pcg32,
+    idx_buf: Vec<u32>,
+    pub updates: usize,
+    pub curve: Vec<(f64, f64)>,
+    loss_every: usize,
+    since_record: usize,
+    pub snapshots: Vec<BlockSnapshot>,
+    collect_snapshots: bool,
+    record_blocks: bool,
+}
+
+impl<'a> EdgeTrainer<'a> {
+    pub fn new(ds: &'a Dataset, cfg: &DesConfig) -> EdgeTrainer<'a> {
+        let mut init_rng = Pcg32::new(cfg.seed, STREAM_INIT);
+        let w: Vec<f64> = (0..ds.d)
+            .map(|_| cfg.init_std * init_rng.next_gaussian())
+            .collect();
+        let store = match cfg.store_capacity {
+            Some(cap) => SampleStore::with_capacity(ds.d, cap),
+            None => SampleStore::new(ds.d),
+        };
+        let reg = cfg.lambda / ds.n as f64;
+        let mut trainer = EdgeTrainer {
+            ds,
+            w,
+            store,
+            cursor: 0.0,
+            tau_p: cfg.tau_p,
+            t_budget: cfg.t_budget,
+            reg,
+            rng: Pcg32::new(cfg.seed, STREAM_EDGE),
+            evict_rng: Pcg32::new(cfg.seed, STREAM_EVICT),
+            idx_buf: Vec::with_capacity(4096),
+            updates: 0,
+            curve: Vec::new(),
+            loss_every: cfg.loss_every,
+            since_record: 0,
+            snapshots: Vec::new(),
+            collect_snapshots: cfg.collect_snapshots,
+            record_blocks: cfg.record_blocks,
+        };
+        trainer.record_loss(0.0);
+        trainer
+    }
+
+    /// Training loss over the FULL dataset (paper Fig. 4's y-axis).
+    pub fn full_loss(&self) -> f64 {
+        self.ds.ridge_loss(&self.w, self.reg)
+    }
+
+    fn record_loss(&mut self, t: f64) {
+        let loss = self.full_loss();
+        self.curve.push((t, loss));
+        self.since_record = 0;
+    }
+
+    /// Advance the compute clock to `until`, running SGD updates while
+    /// the store is non-empty (paper eq. (2)).
+    pub fn advance_to(
+        &mut self,
+        until: f64,
+        exec: &mut dyn BlockExecutor,
+        events: &mut EventLog,
+    ) -> Result<()> {
+        let until = until.min(self.t_budget);
+        if self.store.is_empty() {
+            self.cursor = self.cursor.max(until);
+            return Ok(());
+        }
+        let n = self.store.len() as u64;
+        // updates that *finish* by `until` (tiny epsilon absorbs fp drift
+        // in repeated cursor += tau_p)
+        let eps = 1e-9 * self.tau_p;
+        let mut ran = 0usize;
+        while self.cursor + self.tau_p <= until + eps {
+            self.idx_buf.push(self.rng.gen_range(n) as u32);
+            self.cursor += self.tau_p;
+            self.updates += 1;
+            self.since_record += 1;
+            ran += 1;
+            let flush_for_record = self.loss_every > 0
+                && self.since_record >= self.loss_every;
+            if flush_for_record || self.idx_buf.len() >= 4096 {
+                self.flush(exec)?;
+                if flush_for_record {
+                    self.record_loss(self.cursor);
+                }
+            }
+        }
+        self.flush(exec)?;
+        if ran > 0 {
+            events.push(self.cursor, EventKind::UpdatesRun { count: ran });
+        }
+        self.cursor = self.cursor.max(until);
+        Ok(())
+    }
+
+    /// Let time pass WITHOUT computing (the sequential baseline's idle
+    /// phase — the edge does nothing while the channel is busy).
+    pub fn skip_to(&mut self, until: f64) {
+        self.cursor = self.cursor.max(until.min(self.t_budget));
+    }
+
+    fn flush(&mut self, exec: &mut dyn BlockExecutor) -> Result<()> {
+        if self.idx_buf.is_empty() {
+            return Ok(());
+        }
+        exec.run_block(&mut self.w, self.store.view(), &self.idx_buf)?;
+        self.idx_buf.clear();
+        Ok(())
+    }
+
+    /// Ingest a delivered block at time `t` (records the boundary loss
+    /// and, when enabled, the Theorem-1 snapshot of (w, X_b)).
+    pub fn ingest_block(&mut self, block: usize, t: f64, x: &[f32], y: &[f32]) {
+        if self.collect_snapshots {
+            self.snapshots.push(BlockSnapshot {
+                block,
+                arrived_at: t,
+                w_end: self.w.clone(),
+                x: x.to_vec(),
+                y: y.to_vec(),
+            });
+        }
+        self.store.ingest(x, y, &mut self.evict_rng);
+        if self.record_blocks {
+            self.record_loss(t);
+        }
+    }
+
+    /// Finish the run: flush pending updates and record the final loss.
+    pub fn finish(&mut self, exec: &mut dyn BlockExecutor) -> Result<()> {
+        self.flush(exec)?;
+        self.record_loss(self.t_budget);
+        Ok(())
+    }
+}

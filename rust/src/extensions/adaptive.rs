@@ -5,44 +5,27 @@
 //! the FIRST blocks should be small (the edge node idles until the first
 //! delivery, so time-to-first-sample dominates early), while LATER blocks
 //! should be large (amortize the overhead once the store is rich). This
-//! module implements pluggable per-block schedules and a runner; the
-//! `bench_adaptive` ablation quantifies the gain over the fixed-`ñ_c`
-//! optimum.
+//! module implements the schedules as [`BlockPolicy`] implementations for
+//! the generic scheduler; the `bench_adaptive` ablation quantifies the
+//! gain over the fixed-`ñ_c` optimum.
 
 use anyhow::Result;
 
 use crate::channel::Channel;
-use crate::coordinator::des::{DesConfig, EdgeTrainer};
-use crate::coordinator::events::{EventKind, EventLog};
+use crate::coordinator::des::DesConfig;
 use crate::coordinator::executor::BlockExecutor;
 use crate::coordinator::run::RunResult;
+use crate::coordinator::scheduler::{
+    run_schedule, OverlapMode, SingleDeviceSource,
+};
 use crate::data::Dataset;
-use crate::protocol::TimelineCase;
-use crate::util::rng::Pcg32;
 
-/// A per-block payload-size policy.
-pub trait BlockSchedule {
-    /// Payload for the `block`-th transmission (1-indexed), given how
-    /// many samples remain untransmitted and the current time.
-    fn next_n_c(&mut self, block: usize, remaining: usize, t_now: f64)
-        -> usize;
+/// A per-block payload-size policy (re-exported scheduler trait; the
+/// historical name is kept for the schedule implementations below).
+pub use crate::coordinator::scheduler::BlockPolicy as BlockSchedule;
 
-    /// Name for logs.
-    fn name(&self) -> String;
-}
-
-/// The paper's fixed schedule.
-pub struct FixedSchedule(pub usize);
-
-impl BlockSchedule for FixedSchedule {
-    fn next_n_c(&mut self, _b: usize, remaining: usize, _t: f64) -> usize {
-        self.0.min(remaining).max(1)
-    }
-
-    fn name(&self) -> String {
-        format!("fixed({})", self.0)
-    }
-}
+/// The paper's fixed schedule (the scheduler's own implementation).
+pub use crate::coordinator::scheduler::FixedPolicy as FixedSchedule;
 
 /// Geometric warmup: start at `start`, multiply by `growth` per block,
 /// cap at `cap`. `warmup(8, 2.0, ñ_c)` reaches the bound optimum after
@@ -95,8 +78,9 @@ impl BlockSchedule for DeadlineAwareSchedule {
     }
 }
 
-/// Run the protocol with a per-block schedule (generalizes `run_des`,
-/// which this reproduces exactly under `FixedSchedule`).
+/// Run the protocol with a per-block schedule: a single device feeding
+/// the generic scheduler under the given policy (reproduces `run_des`
+/// exactly under `FixedSchedule`).
 pub fn run_scheduled(
     ds: &Dataset,
     cfg: &DesConfig,
@@ -104,75 +88,16 @@ pub fn run_scheduled(
     channel: &mut dyn Channel,
     exec: &mut dyn BlockExecutor,
 ) -> Result<RunResult> {
-    let mut events = EventLog::with_capacity(cfg.event_capacity);
-    let mut trainer = EdgeTrainer::new(ds, cfg);
-    let mut chan_rng =
-        Pcg32::new(cfg.seed, crate::coordinator::des::STREAM_CHANNEL);
-    let mut device_rng =
-        Pcg32::new(cfg.seed, crate::coordinator::des::STREAM_DEVICE);
-    let mut remaining: Vec<u32> = (0..ds.n as u32).collect();
-
-    let mut t_send = 0.0f64;
-    let mut block = 1usize;
-    let (mut blocks_sent, mut blocks_delivered) = (0usize, 0usize);
-    let mut samples_delivered = 0usize;
-    let mut retransmissions = 0u64;
-
-    while t_send < cfg.t_budget && !remaining.is_empty() {
-        let k = schedule.next_n_c(block, remaining.len(), t_send);
-        // uniform without-replacement pick of k untransmitted samples
-        let len = remaining.len();
-        for i in 0..k {
-            let j = device_rng.gen_range((len - i) as u64) as usize;
-            remaining.swap(j, len - 1 - i);
-        }
-        let chosen: Vec<u32> = remaining.split_off(len - k);
-        let mut x = Vec::with_capacity(k * ds.d);
-        let mut y = Vec::with_capacity(k);
-        for &i in &chosen {
-            x.extend_from_slice(ds.row(i as usize));
-            y.push(ds.label(i as usize));
-        }
-
-        let duration = k as f64 + cfg.n_o;
-        events.push(t_send, EventKind::BlockSent { block, payload: k });
-        blocks_sent += 1;
-        let delivery = channel.transmit(t_send, duration, &mut chan_rng);
-        retransmissions += (delivery.attempts - 1) as u64;
-        if delivery.arrival < cfg.t_budget {
-            trainer.advance_to(delivery.arrival, exec, &mut events)?;
-            trainer.ingest_block(block, delivery.arrival, &x, &y);
-            blocks_delivered += 1;
-            samples_delivered += k;
-        } else {
-            trainer.advance_to(cfg.t_budget, exec, &mut events)?;
-        }
-        t_send = delivery.arrival;
-        block += 1;
-    }
-    trainer.advance_to(cfg.t_budget, exec, &mut events)?;
-    trainer.finish(exec)?;
-
-    let case = if samples_delivered >= ds.n {
-        TimelineCase::Full
-    } else {
-        TimelineCase::Partial
-    };
-    let final_loss = trainer.full_loss();
-    Ok(RunResult {
-        curve: trainer.curve,
-        final_loss,
-        final_w: trainer.w,
-        updates: trainer.updates,
-        blocks_sent,
-        blocks_delivered,
-        samples_delivered,
-        retransmissions,
-        case,
-        snapshots: trainer.snapshots,
-        events: events.into_events(),
-        backend: exec.name(),
-    })
+    let mut source = SingleDeviceSource::new(ds, cfg.seed);
+    run_schedule(
+        ds,
+        cfg,
+        &mut source,
+        schedule,
+        OverlapMode::Pipelined,
+        channel,
+        exec,
+    )
 }
 
 #[cfg(test)]
@@ -180,6 +105,7 @@ mod tests {
     use super::*;
     use crate::channel::IdealChannel;
     use crate::coordinator::des::run_des;
+    use crate::coordinator::events::EventKind;
     use crate::coordinator::executor::NativeExecutor;
     use crate::data::synth::{synth_calhousing, SynthSpec};
     use crate::model::RidgeModel;

@@ -1,17 +1,17 @@
 //! The paper's Sec.-6 future-work directions, implemented as first-class
-//! features:
+//! features — each a thin policy adapter over the generic
+//! [`scheduler`](crate::coordinator::scheduler):
 //!
-//! * [`online`] — limited edge memory: the store is a reservoir of
-//!   bounded capacity ("data sent in previous packets can be only
-//!   partially stored at the server").
+//! * [`online`] — limited edge memory ("data sent in previous packets can
+//!   be only partially stored at the server") plus streaming device-side
+//!   arrivals via `OnlineArrivalSource`.
 //! * [`multi_device`] — several devices share the uplink round-robin
-//!   ("a scenario with multiple devices").
+//!   ("a scenario with multiple devices") via `RoundRobinSource`.
 //! * [`rate_select`] — choosing the transmission rate on an erasure
 //!   channel ("the optimization problem could be generalized to account
 //!   for the selection of the data rate").
-
-//! * [`adaptive`] — per-block payload schedules (warmup,
-//!   deadline-aware), generalizing the paper's fixed `n_c`.
+//! * [`adaptive`] — per-block payload schedules (warmup, deadline-aware)
+//!   as `BlockPolicy` implementations, generalizing the fixed `n_c`.
 
 pub mod adaptive;
 pub mod multi_device;

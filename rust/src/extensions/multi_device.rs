@@ -6,19 +6,26 @@
 //! single-device protocol. With the channel serialized, total overhead
 //! grows with the number of active devices — so the per-device optimal
 //! block size shifts upward (the multi_device example shows this).
+//!
+//! The run itself is a thin adapter: [`RoundRobinSource`] feeding the
+//! generic scheduler under the fixed-`n_c` policy. Device 0's RNG stream
+//! equals the single-device stream, so `k = 1` is bit-identical to
+//! [`run_des`](crate::coordinator::des::run_des) (asserted in
+//! `rust/tests/scenario_parity.rs`).
 
 use anyhow::Result;
 
 use crate::channel::Channel;
-use crate::coordinator::des::{DesConfig, EdgeTrainer};
-use crate::coordinator::events::EventLog;
+use crate::coordinator::des::DesConfig;
 use crate::coordinator::executor::BlockExecutor;
 use crate::coordinator::run::RunResult;
+use crate::coordinator::scheduler::{
+    run_schedule, FixedPolicy, OverlapMode, RoundRobinSource,
+};
 use crate::data::Dataset;
-use crate::protocol::TimelineCase;
-use crate::util::rng::Pcg32;
 
-/// Shard `ds` into `k` near-equal disjoint shards (round-robin rows).
+/// Shard `ds` into `k` near-equal disjoint shards (round-robin rows:
+/// shard `s` holds dataset rows `s, s+k, s+2k, ...` in that order).
 pub fn shard_dataset(ds: &Dataset, k: usize) -> Vec<Dataset> {
     assert!(k >= 1 && k <= ds.n, "bad shard count");
     (0..k)
@@ -30,12 +37,6 @@ pub fn shard_dataset(ds: &Dataset, k: usize) -> Vec<Dataset> {
         .collect()
 }
 
-/// Per-device transmitter state for the round-robin schedule.
-struct DeviceState {
-    remaining: Vec<u32>,
-    rng: Pcg32,
-}
-
 /// Run the multi-device protocol: devices take turns sending blocks of
 /// `n_c` of their own (unsent) samples; the edge trains continuously.
 pub fn run_multi_device(
@@ -45,91 +46,17 @@ pub fn run_multi_device(
     channel: &mut dyn Channel,
     exec: &mut dyn BlockExecutor,
 ) -> Result<RunResult> {
-    let mut events = EventLog::with_capacity(cfg.event_capacity);
-    let mut trainer = EdgeTrainer::new(ds, cfg);
-    let mut chan_rng =
-        Pcg32::new(cfg.seed, crate::coordinator::des::STREAM_CHANNEL);
-    let mut devices: Vec<DeviceState> = shards
-        .iter()
-        .enumerate()
-        .map(|(i, shard)| DeviceState {
-            remaining: (0..shard.n as u32).collect(),
-            rng: Pcg32::new(cfg.seed.wrapping_add(1000 + i as u64), 2),
-        })
-        .collect();
-
-    let mut t_send = 0.0;
-    let mut turn = 0usize;
-    let mut block = 1usize;
-    let (mut blocks_sent, mut blocks_delivered) = (0usize, 0usize);
-    let mut samples_delivered = 0usize;
-    let mut retransmissions = 0u64;
-
-    while t_send < cfg.t_budget
-        && devices.iter().any(|d| !d.remaining.is_empty())
-    {
-        // next device with data, round-robin
-        while devices[turn % devices.len()].remaining.is_empty() {
-            turn += 1;
-        }
-        let dev_id = turn % devices.len();
-        let shard = &shards[dev_id];
-        let dev = &mut devices[dev_id];
-        turn += 1;
-
-        // sample without replacement from this device's shard
-        let k = cfg.n_c.min(dev.remaining.len());
-        let len = dev.remaining.len();
-        for i in 0..k {
-            let j = dev.rng.gen_range((len - i) as u64) as usize;
-            dev.remaining.swap(j, len - 1 - i);
-        }
-        let chosen: Vec<u32> = dev.remaining.split_off(len - k);
-        let mut x = Vec::with_capacity(k * ds.d);
-        let mut y = Vec::with_capacity(k);
-        for &i in &chosen {
-            x.extend_from_slice(shard.row(i as usize));
-            y.push(shard.label(i as usize));
-        }
-
-        let duration = k as f64 + cfg.n_o;
-        blocks_sent += 1;
-        let delivery = channel.transmit(t_send, duration, &mut chan_rng);
-        retransmissions += (delivery.attempts - 1) as u64;
-        if delivery.arrival < cfg.t_budget {
-            trainer.advance_to(delivery.arrival, exec, &mut events)?;
-            trainer.ingest_block(block, delivery.arrival, &x, &y);
-            blocks_delivered += 1;
-            samples_delivered += k;
-        } else {
-            trainer.advance_to(cfg.t_budget, exec, &mut events)?;
-        }
-        t_send = delivery.arrival;
-        block += 1;
-    }
-    trainer.advance_to(cfg.t_budget, exec, &mut events)?;
-    trainer.finish(exec)?;
-
-    let case = if samples_delivered >= ds.n {
-        TimelineCase::Full
-    } else {
-        TimelineCase::Partial
-    };
-    let final_loss = trainer.full_loss();
-    Ok(RunResult {
-        curve: trainer.curve,
-        final_loss,
-        final_w: trainer.w,
-        updates: trainer.updates,
-        blocks_sent,
-        blocks_delivered,
-        samples_delivered,
-        retransmissions,
-        case,
-        snapshots: trainer.snapshots,
-        events: events.into_events(),
-        backend: exec.name(),
-    })
+    let mut source = RoundRobinSource::new(shards, cfg.seed);
+    let mut policy = FixedPolicy(cfg.n_c.max(1));
+    run_schedule(
+        ds,
+        cfg,
+        &mut source,
+        &mut policy,
+        OverlapMode::Pipelined,
+        channel,
+        exec,
+    )
 }
 
 #[cfg(test)]
@@ -139,6 +66,7 @@ mod tests {
     use crate::coordinator::executor::NativeExecutor;
     use crate::data::synth::{synth_calhousing, SynthSpec};
     use crate::model::RidgeModel;
+    use crate::protocol::TimelineCase;
 
     #[test]
     fn shards_are_disjoint_and_cover() {
@@ -182,7 +110,7 @@ mod tests {
 
     #[test]
     fn single_shard_reduces_to_multi_of_one() {
-        // k=1 multi-device must behave like a (differently-seeded) run:
+        // k=1 multi-device must behave like the single-device run:
         // same delivery counts for the same schedule.
         let ds =
             synth_calhousing(&SynthSpec { n: 300, ..Default::default() });

@@ -8,24 +8,49 @@
 //! over a channel in blocks of `n_c` samples plus a per-packet overhead
 //! `n_o`; the edge node trains by single-sample SGD *while* the next block
 //! is on the wire, and everything must finish inside a hard deadline `T`.
-//! This crate provides:
 //!
-//! * the pipelined **coordinator** (device transmitter, channel, edge
-//!   trainer) in both a discrete-event and a real threaded form
-//!   ([`coordinator`]),
-//! * the paper's **Corollary 1 bound** and the block-size optimizer that
-//!   picks `ñ_c` ([`bound`]),
-//! * a native SGD engine ([`sgd`]) and a PJRT-backed engine ([`runtime`],
-//!   [`edge`]) that executes the AOT-compiled JAX/Pallas artifacts built by
-//!   `make artifacts`,
-//! * every substrate needed offline: RNG, JSON, config, CLI, linear
-//!   algebra, dataset synthesis, a bench harness and a property-testing
-//!   kit ([`util`], [`linalg`], [`data`], [`bench`], [`testkit`]),
-//! * baseline policies and the paper's future-work extensions
-//!   ([`baselines`], [`extensions`], [`channel`]).
+//! ## Layering
 //!
-//! Layering (DESIGN.md): Python/JAX/Pallas exist only at build time; the
-//! Rust binary is self-contained once `artifacts/` is built.
+//! One generic protocol engine, with every variant expressed as a policy
+//! (see `ARCHITECTURE.md` for the full picture and a recipe for adding a
+//! scenario):
+//!
+//! * **Scheduler core** ([`coordinator::scheduler`]) — the single
+//!   event-driven loop `run_schedule`, advancing normalized time and
+//!   dispatching to pluggable traits: `TrafficSource` (who sends which
+//!   samples: single device, k-device round-robin, online arrivals),
+//!   `BlockPolicy` (fixed or adaptive `n_c`), `OverlapMode`
+//!   (pipelined vs sequential), over the [`channel`] and
+//!   [`coordinator::executor`] seams. The hot loop stages blocks in one
+//!   reused `BlockFrame` — no per-block allocation.
+//! * **Policy adapters** — `coordinator::des::run_des` (the paper's
+//!   reference run and Monte-Carlo fast path), [`baselines`]
+//!   (sequential, transmit-all-first), [`extensions`] (multi-device,
+//!   adaptive schedules, online arrivals, bounded memory, rate
+//!   selection): each ~a few dozen lines over the core, bit-identical to
+//!   the seed semantics (`rust/tests/scenario_parity.rs`).
+//! * **Threaded realization** ([`coordinator::pipeline`]) — a real
+//!   two-thread device/edge pipeline with backpressure, bit-identical to
+//!   the DES (`rust/tests/pipeline_parity.rs`).
+//! * **Scenario registry** ([`sweep::scenario`]) — declarative
+//!   (channel × policy × traffic) specs parsed from config/CLI strings;
+//!   [`sweep`] runs Monte-Carlo estimates and grid crossings over any of
+//!   them in one parallel fan-out, and the `edgepipe scenario`
+//!   subcommand exposes it all.
+//! * **Analysis** ([`bound`]) — the paper's Corollary-1 bound and the
+//!   block-size optimizer that picks `ñ_c`.
+//! * **Backends** — a native f64 SGD engine ([`sgd`]) and a PJRT-backed
+//!   engine ([`runtime`], [`edge`]) executing the AOT JAX/Pallas
+//!   artifacts built by `make artifacts` (gated behind the `pjrt` cargo
+//!   feature; the native path is fully self-contained).
+//! * **Substrate** — everything needed offline: RNG, JSON, config, CLI,
+//!   linear algebra, dataset synthesis, a bench harness and a
+//!   property-testing kit ([`util`], [`linalg`], [`data`], [`bench`],
+//!   [`testkit`], [`metrics`], [`protocol`], [`model`]).
+//!
+//! Python/JAX/Pallas exist only at build time; the Rust binary is
+//! self-contained once `artifacts/` is built (and runs natively without
+//! them).
 
 pub mod baselines;
 pub mod bench;

@@ -7,7 +7,7 @@ use anyhow::{ensure, Result};
 
 use crate::util::rng::Pcg32;
 
-use super::session::{literal_f32, to_vec_f32, RuntimeSession};
+use super::session::{literal_f32, to_vec_f32, Literal, RuntimeSession};
 
 /// Host-side MLP parameter set (shapes fixed by the manifest).
 #[derive(Clone, Debug)]
@@ -73,7 +73,7 @@ impl PjrtMlp {
         })
     }
 
-    fn param_literals(&self, p: &MlpParams) -> Result<Vec<xla::Literal>> {
+    fn param_literals(&self, p: &MlpParams) -> Result<Vec<Literal>> {
         let (d, h) = (self.d_in as i64, self.hidden as i64);
         Ok(vec![
             literal_f32(&p.w1, &[d, h])?,

@@ -3,118 +3,211 @@
 //! Compilation happens once per artifact per process (it dominates
 //! startup, ~100 ms–1 s each); execution afterwards is pure C++ with no
 //! Python anywhere.
+//!
+//! The real client needs the `xla` crate and a `libxla_extension`
+//! install, which the offline build image does not carry — so the whole
+//! session is gated behind the `pjrt` cargo feature. Without it, an
+//! API-identical stub compiles in whose constructors fail with a clear
+//! message, keeping every caller (executor, loss, mlp, CLI `--backend
+//! pjrt`) compiling and the native backend fully functional.
 
-use std::collections::BTreeMap;
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::collections::BTreeMap;
+    use std::path::Path;
 
-use anyhow::{Context, Result};
+    use anyhow::{Context, Result};
 
-use super::manifest::Manifest;
+    use crate::runtime::manifest::Manifest;
 
-/// A live PJRT CPU client with compiled artifacts.
-pub struct RuntimeSession {
-    pub client: xla::PjRtClient,
-    pub manifest: Manifest,
-    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
-}
+    /// An XLA literal (re-exported so callers never name `xla::`).
+    pub use xla::Literal;
 
-impl RuntimeSession {
-    /// Create a session over an artifact directory (compiles lazily; call
-    /// [`preload`](Self::preload) to compile up front).
-    pub fn open(artifact_dir: &Path) -> Result<RuntimeSession> {
-        let manifest = Manifest::load(artifact_dir)?;
-        let client =
-            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(RuntimeSession {
-            client,
-            manifest,
-            executables: BTreeMap::new(),
-        })
+    /// A live PJRT CPU client with compiled artifacts.
+    pub struct RuntimeSession {
+        pub client: xla::PjRtClient,
+        pub manifest: Manifest,
+        executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
     }
 
-    /// Open using [`find_artifact_dir`](super::find_artifact_dir).
-    pub fn open_default() -> Result<RuntimeSession> {
-        let dir = super::find_artifact_dir().context(
-            "artifacts not found — run `make artifacts` (or set \
-             EDGEPIPE_ARTIFACTS)",
-        )?;
-        Self::open(&dir)
-    }
-
-    /// Compile (and cache) one artifact by name.
-    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.executables.contains_key(name) {
-            let path = self.manifest.path_of(name)?;
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow::anyhow!("parsing {name} HLO: {e}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
-            self.executables.insert(name.to_string(), exe);
+    impl RuntimeSession {
+        /// Create a session over an artifact directory (compiles lazily;
+        /// call [`preload`](Self::preload) to compile up front).
+        pub fn open(artifact_dir: &Path) -> Result<RuntimeSession> {
+            let manifest = Manifest::load(artifact_dir)?;
+            let client =
+                xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(RuntimeSession {
+                client,
+                manifest,
+                executables: BTreeMap::new(),
+            })
         }
-        Ok(&self.executables[name])
-    }
 
-    /// Compile a set of artifacts up front.
-    pub fn preload(&mut self, names: &[&str]) -> Result<()> {
-        for name in names {
-            self.load(name)?;
+        /// Open using [`find_artifact_dir`](crate::runtime::find_artifact_dir).
+        pub fn open_default() -> Result<RuntimeSession> {
+            let dir = crate::runtime::find_artifact_dir().context(
+                "artifacts not found — run `make artifacts` (or set \
+                 EDGEPIPE_ARTIFACTS)",
+            )?;
+            Self::open(&dir)
         }
-        Ok(())
+
+        /// Compile (and cache) one artifact by name.
+        pub fn load(
+            &mut self,
+            name: &str,
+        ) -> Result<&xla::PjRtLoadedExecutable> {
+            if !self.executables.contains_key(name) {
+                let path = self.manifest.path_of(name)?;
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| {
+                        anyhow::anyhow!("parsing {name} HLO: {e}")
+                    })?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+                self.executables.insert(name.to_string(), exe);
+            }
+            Ok(&self.executables[name])
+        }
+
+        /// Compile a set of artifacts up front.
+        pub fn preload(&mut self, names: &[&str]) -> Result<()> {
+            for name in names {
+                self.load(name)?;
+            }
+            Ok(())
+        }
+
+        /// Execute a loaded artifact on literal inputs; returns the
+        /// flattened output tuple (aot.py lowers everything with
+        /// `return_tuple=True`).
+        pub fn execute(
+            &mut self,
+            name: &str,
+            inputs: &[xla::Literal],
+        ) -> Result<Vec<xla::Literal>> {
+            let exe = self.load(name)?;
+            let result = exe
+                .execute::<xla::Literal>(inputs)
+                .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;
+            let literal = result[0][0].to_literal_sync().map_err(|e| {
+                anyhow::anyhow!("fetching {name} result: {e}")
+            })?;
+            literal
+                .to_tuple()
+                .map_err(|e| anyhow::anyhow!("untupling {name} result: {e}"))
+        }
     }
 
-    /// Execute a loaded artifact on literal inputs; returns the flattened
-    /// output tuple (aot.py lowers everything with `return_tuple=True`).
-    pub fn execute(
-        &mut self,
-        name: &str,
-        inputs: &[xla::Literal],
-    ) -> Result<Vec<xla::Literal>> {
-        let exe = self.load(name)?;
-        let result = exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;
-        let literal = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching {name} result: {e}"))?;
-        literal
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untupling {name} result: {e}"))
+    /// Build an `f32` literal of the given shape from a flat slice.
+    pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+        let expect: i64 = dims.iter().product();
+        anyhow::ensure!(
+            expect as usize == data.len(),
+            "literal shape {:?} != data len {}",
+            dims,
+            data.len()
+        );
+        let flat = xla::Literal::vec1(data);
+        if dims.len() == 1 {
+            return Ok(flat);
+        }
+        flat.reshape(dims)
+            .map_err(|e| anyhow::anyhow!("reshape to {dims:?}: {e}"))
+    }
+
+    /// Read an `f32` literal back into a Vec.
+    pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("reading literal: {e}"))
     }
 }
 
-/// Build an `f32` literal of the given shape from a flat slice.
-pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
-    let expect: i64 = dims.iter().product();
-    anyhow::ensure!(
-        expect as usize == data.len(),
-        "literal shape {:?} != data len {}",
-        dims,
-        data.len()
-    );
-    let flat = xla::Literal::vec1(data);
-    if dims.len() == 1 {
-        return Ok(flat);
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use std::path::Path;
+
+    use anyhow::{bail, Context, Result};
+
+    use crate::runtime::manifest::Manifest;
+
+    const DISABLED: &str = "edgepipe was built without the `pjrt` \
+        feature; rebuild with `cargo build --features pjrt` (needs the \
+        `xla` crate and libxla_extension) to run AOT artifacts";
+
+    /// Opaque stand-in for `xla::Literal`; carries no data and is only
+    /// produced by [`literal_f32`] so callers type-check unchanged.
+    pub struct Literal;
+
+    /// Stub session: constructors always fail with a clear message.
+    pub struct RuntimeSession {
+        pub manifest: Manifest,
     }
-    flat.reshape(dims)
-        .map_err(|e| anyhow::anyhow!("reshape to {dims:?}: {e}"))
+
+    impl RuntimeSession {
+        pub fn open(artifact_dir: &Path) -> Result<RuntimeSession> {
+            // Validate the manifest anyway so configuration errors
+            // surface before the feature message.
+            let _ = Manifest::load(artifact_dir)?;
+            bail!("{DISABLED}")
+        }
+
+        pub fn open_default() -> Result<RuntimeSession> {
+            let dir = crate::runtime::find_artifact_dir().context(
+                "artifacts not found — run `make artifacts` (or set \
+                 EDGEPIPE_ARTIFACTS)",
+            )?;
+            Self::open(&dir)
+        }
+
+        pub fn load(&mut self, _name: &str) -> Result<&Literal> {
+            bail!("{DISABLED}")
+        }
+
+        pub fn preload(&mut self, _names: &[&str]) -> Result<()> {
+            bail!("{DISABLED}")
+        }
+
+        pub fn execute(
+            &mut self,
+            _name: &str,
+            _inputs: &[Literal],
+        ) -> Result<Vec<Literal>> {
+            bail!("{DISABLED}")
+        }
+    }
+
+    /// Shape-checks like the real helper, then returns an opaque token.
+    pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+        let expect: i64 = dims.iter().product();
+        anyhow::ensure!(
+            expect as usize == data.len(),
+            "literal shape {:?} != data len {}",
+            dims,
+            data.len()
+        );
+        Ok(Literal)
+    }
+
+    pub fn to_vec_f32(_lit: &Literal) -> Result<Vec<f32>> {
+        bail!("{DISABLED}")
+    }
 }
 
-/// Read an `f32` literal back into a Vec.
-pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    lit.to_vec::<f32>()
-        .map_err(|e| anyhow::anyhow!("reading literal: {e}"))
-}
+pub use imp::{literal_f32, to_vec_f32, Literal, RuntimeSession};
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::find_artifact_dir;
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn session_compiles_and_runs_sgd_block() {
+        use crate::runtime::find_artifact_dir;
         let Some(dir) = find_artifact_dir() else {
             eprintln!("skipping: artifacts not built");
             return;
@@ -125,8 +218,11 @@ mod tests {
         let w: Vec<f32> = (0..c.d).map(|i| i as f32 * 0.5).collect();
         let inputs = vec![
             literal_f32(&w, &[1, c.d as i64]).unwrap(),
-            literal_f32(&vec![0.0; c.k_max * c.d], &[c.k_max as i64, c.d as i64])
-                .unwrap(),
+            literal_f32(
+                &vec![0.0; c.k_max * c.d],
+                &[c.k_max as i64, c.d as i64],
+            )
+            .unwrap(),
             literal_f32(&vec![0.0; c.k_max], &[c.k_max as i64]).unwrap(),
             literal_f32(&vec![1.0; c.k_max], &[c.k_max as i64]).unwrap(),
             literal_f32(&[0.0, 0.0], &[1, 2]).unwrap(),
@@ -140,5 +236,19 @@ mod tests {
     #[test]
     fn literal_shape_mismatch_rejected() {
         assert!(literal_f32(&[1.0, 2.0, 3.0], &[2, 2]).is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_session_reports_disabled_feature() {
+        let dir = std::env::temp_dir().join("edgepipe_no_such_artifacts");
+        let err = RuntimeSession::open(&dir).unwrap_err();
+        // manifest load fails first for a missing dir — the message must
+        // point at one of the two real causes
+        let text = format!("{err:#}");
+        assert!(
+            text.contains("manifest") || text.contains("pjrt"),
+            "unhelpful error: {text}"
+        );
     }
 }

@@ -1,6 +1,9 @@
 //! Monte-Carlo sweep harness and figure-data producers.
 //!
-//! * [`runner`] — parallel seed×parameter sweeps over the DES fast path
+//! * [`scenario`] — declarative (channel × policy × traffic) scenario
+//!   specs with a named registry, all runnable through one scheduler
+//! * [`runner`] — parallel seed×parameter sweeps: the paper scenario
+//!   fast path plus scenario-generic estimators and grid crossings
 //! * [`fig3`]   — paper Fig. 3: Corollary-1 bound vs `n_c` per overhead
 //! * [`fig4`]   — paper Fig. 4: average training-loss curves vs time for
 //!   selected block sizes, the bound optimum ñ_c and the experimental
@@ -9,7 +12,15 @@
 pub mod fig3;
 pub mod fig4;
 pub mod runner;
+pub mod scenario;
 
 pub use fig3::{fig3_data, Fig3Output};
 pub use fig4::{fig4_data, Fig4Config, Fig4Output};
-pub use runner::{grid_final_losses, mc_final_loss, McStats};
+pub use runner::{
+    grid_final_losses, mc_final_loss, mc_scenario_loss, scenario_grid,
+    McStats,
+};
+pub use scenario::{
+    from_name, registry, ChannelSpec, PolicySpec, ScenarioRunner,
+    ScenarioSpec, TrafficSpec,
+};

@@ -1,11 +1,16 @@
-//! Parallel Monte-Carlo sweeps over the DES fast path.
+//! Parallel Monte-Carlo sweeps over the unified scheduler fast path.
+//!
+//! Every estimator here is scenario-generic: [`mc_scenario_loss`] runs
+//! ANY registered [`ScenarioSpec`] (channel × policy × traffic), and
+//! [`scenario_grid`] crosses a whole spec list in one parallel fan-out.
+//! The historical [`mc_final_loss`] / [`grid_final_losses`] entry points
+//! are the paper scenario special case and keep their exact seed
+//! semantics.
 
-use crate::channel::IdealChannel;
-use crate::coordinator::des::{run_des, DesConfig};
-use crate::coordinator::executor::NativeExecutor;
+use crate::coordinator::des::DesConfig;
 use crate::data::Dataset;
-use crate::model::RidgeModel;
-use crate::util::pool::{default_threads, parallel_tasks};
+use crate::sweep::scenario::{ScenarioRunner, ScenarioSpec};
+use crate::util::pool::{default_threads, parallel_map, parallel_tasks};
 use crate::util::stats::Welford;
 
 /// Mean/std of a Monte-Carlo estimate.
@@ -17,37 +22,93 @@ pub struct McStats {
     pub n: usize,
 }
 
-/// Average final training loss of the protocol at one configuration,
-/// over `seeds` Monte-Carlo repetitions (parallel across a thread pool).
+impl McStats {
+    fn of(losses: &[f64]) -> McStats {
+        let mut w = Welford::new();
+        for &l in losses {
+            w.push(l);
+        }
+        McStats { mean: w.mean(), std: w.std(), sem: w.sem(), n: losses.len() }
+    }
+}
+
+/// Strip a base config down to sweep mode: per-seed reseed, no curve /
+/// snapshot / event recording (the full-dataset evaluations would
+/// otherwise dominate the sweep cost).
+fn sweep_cfg(base: &DesConfig, seed_offset: u64) -> DesConfig {
+    DesConfig {
+        seed: base.seed.wrapping_add(seed_offset),
+        loss_every: 0,
+        record_blocks: false,
+        collect_snapshots: false,
+        event_capacity: 0,
+        ..base.clone()
+    }
+}
+
+/// Average final training loss of an arbitrary scenario over `seeds`
+/// Monte-Carlo repetitions (parallel across a thread pool).
+pub fn mc_scenario_loss(
+    ds: &Dataset,
+    base: &DesConfig,
+    spec: &ScenarioSpec,
+    seeds: usize,
+    threads: usize,
+) -> McStats {
+    let threads = if threads == 0 { default_threads() } else { threads };
+    let runner = ScenarioRunner::new(spec.clone(), ds);
+    let losses = parallel_tasks(seeds, threads, |s| {
+        runner
+            .run(&sweep_cfg(base, s as u64))
+            .expect("scenario run failed")
+            .final_loss
+    });
+    McStats::of(&losses)
+}
+
+/// Average final training loss of the paper's protocol at one
+/// configuration (ideal channel, fixed `n_c`, one device), over `seeds`
+/// Monte-Carlo repetitions.
 pub fn mc_final_loss(
     ds: &Dataset,
     base: &DesConfig,
     seeds: usize,
     threads: usize,
 ) -> McStats {
+    mc_scenario_loss(ds, base, &ScenarioSpec::paper(), seeds, threads)
+}
+
+/// Cross a list of scenarios in ONE parallel fan-out: every (spec, seed)
+/// pair becomes an independent job, so uneven scenario costs still
+/// balance across the pool. Returns `(label, stats)` rows in spec order.
+pub fn scenario_grid(
+    ds: &Dataset,
+    base: &DesConfig,
+    specs: &[ScenarioSpec],
+    seeds: usize,
+    threads: usize,
+) -> Vec<(String, McStats)> {
     let threads = if threads == 0 { default_threads() } else { threads };
-    let losses = parallel_tasks(seeds, threads, |s| {
-        let cfg = DesConfig {
-            seed: base.seed.wrapping_add(s as u64),
-            loss_every: 0,
-            record_blocks: false,
-            collect_snapshots: false,
-            event_capacity: 0,
-            ..base.clone()
-        };
-        let mut exec = NativeExecutor::new(
-            RidgeModel::new(ds.d, cfg.lambda, ds.n),
-            cfg.alpha,
-        );
-        run_des(ds, &cfg, &mut IdealChannel, &mut exec)
-            .expect("DES run failed")
+    let runners: Vec<ScenarioRunner> = specs
+        .iter()
+        .map(|spec| ScenarioRunner::new(spec.clone(), ds))
+        .collect();
+    let jobs: Vec<(usize, u64)> = (0..specs.len())
+        .flat_map(|i| (0..seeds as u64).map(move |s| (i, s)))
+        .collect();
+    let losses = parallel_map(&jobs, threads, |&(i, s)| {
+        runners[i]
+            .run(&sweep_cfg(base, s))
+            .expect("scenario run failed")
             .final_loss
     });
-    let mut w = Welford::new();
-    for &l in &losses {
-        w.push(l);
-    }
-    McStats { mean: w.mean(), std: w.std(), sem: w.sem(), n: seeds }
+    specs
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            (spec.label(), McStats::of(&losses[i * seeds..(i + 1) * seeds]))
+        })
+        .collect()
 }
 
 /// Final-loss statistics for each block size in `n_cs` (the experimental
@@ -84,7 +145,12 @@ pub fn log_grid(n: usize, points: usize) -> Vec<usize> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::channel::IdealChannel;
+    use crate::coordinator::des::run_des;
+    use crate::coordinator::executor::NativeExecutor;
     use crate::data::synth::{synth_calhousing, SynthSpec};
+    use crate::model::RidgeModel;
+    use crate::sweep::scenario::{PolicySpec, TrafficSpec};
 
     #[test]
     fn mc_stats_are_stable_across_thread_counts() {
@@ -98,6 +164,38 @@ mod tests {
     }
 
     #[test]
+    fn mc_final_loss_matches_direct_des_runs() {
+        // the scenario path must reproduce per-seed run_des exactly
+        let ds = synth_calhousing(&SynthSpec { n: 300, ..Default::default() });
+        let base = DesConfig::paper(30, 5.0, 600.0, 55);
+        let stats = mc_final_loss(&ds, &base, 3, 2);
+        let mut manual = Vec::new();
+        for s in 0..3u64 {
+            let cfg = DesConfig {
+                seed: base.seed.wrapping_add(s),
+                record_blocks: false,
+                ..base.clone()
+            };
+            let mut exec = NativeExecutor::new(
+                RidgeModel::new(ds.d, cfg.lambda, ds.n),
+                cfg.alpha,
+            );
+            manual.push(
+                run_des(&ds, &cfg, &mut IdealChannel, &mut exec)
+                    .unwrap()
+                    .final_loss,
+            );
+        }
+        // same Welford accumulation over the same per-seed losses
+        let manual_stats = McStats::of(&manual);
+        assert_eq!(
+            stats.mean, manual_stats.mean,
+            "scenario path diverged from run_des"
+        );
+        assert_eq!(stats.std, manual_stats.std);
+    }
+
+    #[test]
     fn grid_runs_every_point() {
         let ds = synth_calhousing(&SynthSpec { n: 300, ..Default::default() });
         let base = DesConfig::paper(1, 2.0, 500.0, 3);
@@ -106,6 +204,29 @@ mod tests {
         for (nc, stats) in rows {
             assert!(nc > 0);
             assert!(stats.mean.is_finite());
+        }
+    }
+
+    #[test]
+    fn scenario_grid_crosses_specs() {
+        let ds = synth_calhousing(&SynthSpec { n: 240, ..Default::default() });
+        let base = DesConfig::paper(24, 4.0, 480.0, 17);
+        let paper = ScenarioSpec::paper();
+        let specs = vec![
+            paper.clone(),
+            ScenarioSpec {
+                policy: PolicySpec::Sequential { n_c: 0 },
+                ..paper.clone()
+            },
+            ScenarioSpec { traffic: TrafficSpec::Devices(3), ..paper },
+        ];
+        let rows = scenario_grid(&ds, &base, &specs, 4, 3);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].0, "ideal|fixed|k1");
+        // pipelining must beat the sequential baseline on average
+        assert!(rows[0].1.mean < rows[1].1.mean);
+        for (_, stats) in &rows {
+            assert!(stats.mean.is_finite() && stats.n == 4);
         }
     }
 

@@ -1,0 +1,529 @@
+//! Scenario specifications: a declarative (channel × policy × traffic)
+//! registry over the generic scheduler, so Monte-Carlo sweeps and the
+//! CLI can run ANY protocol variant — not just the paper's single-device
+//! fixed-`n_c` setting — from one code path.
+//!
+//! A scenario is three orthogonal axes plus an optional store bound:
+//!
+//! * [`ChannelSpec`] — `ideal`, `erasure:<p>`, `rate:<r>[:<p>]`
+//! * [`PolicySpec`] — `fixed[:n_c]`, `warmup:<start>:<growth>[:<cap>]`,
+//!   `deadline:<frac>`, `sequential[:n_c]`, `allfirst`
+//! * [`TrafficSpec`] — `<k>` round-robin devices, or `online:<rate>`
+//!   streaming arrivals
+//!
+//! Each axis parses from the compact string form above (used by
+//! `scenario.*` config keys and the `edgepipe scenario` subcommand), and
+//! [`ScenarioRunner`] executes a spec deterministically for a given
+//! [`DesConfig`] — building a fresh channel/source/policy/executor per
+//! run so seeds can fan out across threads.
+
+use anyhow::{bail, Context, Result};
+
+use crate::channel::{
+    Channel, ErasureChannel, IdealChannel, RateLimitedChannel,
+};
+use crate::coordinator::des::DesConfig;
+use crate::coordinator::run::RunResult;
+use crate::coordinator::scheduler::{
+    run_schedule, BlockPolicy, FixedPolicy, OnlineArrivalSource,
+    OverlapMode, RoundRobinSource, SingleDeviceSource,
+};
+use crate::data::Dataset;
+use crate::extensions::adaptive::{DeadlineAwareSchedule, WarmupSchedule};
+use crate::extensions::multi_device::shard_dataset;
+use crate::model::RidgeModel;
+
+/// Which channel carries the blocks.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ChannelSpec {
+    /// Error-free (the paper's main analysis).
+    Ideal,
+    /// Packet erasure with ARQ retransmission at probability `p`.
+    Erasure { p: f64 },
+    /// Relative rate `rate` over an erasure link with probability `p`.
+    Rate { rate: f64, p: f64 },
+}
+
+impl ChannelSpec {
+    /// Parse `ideal` | `erasure:<p>` | `rate:<r>[:<p>]`.
+    pub fn parse(s: &str) -> Result<ChannelSpec> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts[0] {
+            "ideal" if parts.len() == 1 => Ok(ChannelSpec::Ideal),
+            "erasure" if parts.len() == 2 => {
+                let p: f64 = parts[1]
+                    .parse()
+                    .with_context(|| format!("bad erasure p '{}'", parts[1]))?;
+                if !(0.0..1.0).contains(&p) {
+                    bail!("erasure p must be in [0, 1), got {p}");
+                }
+                Ok(ChannelSpec::Erasure { p })
+            }
+            "rate" if parts.len() == 2 || parts.len() == 3 => {
+                let rate: f64 = parts[1]
+                    .parse()
+                    .with_context(|| format!("bad rate '{}'", parts[1]))?;
+                if rate <= 0.0 {
+                    bail!("rate must be positive, got {rate}");
+                }
+                let p: f64 = match parts.get(2) {
+                    Some(t) => t
+                        .parse()
+                        .with_context(|| format!("bad rate p '{t}'"))?,
+                    None => 0.0,
+                };
+                if !(0.0..1.0).contains(&p) {
+                    bail!("rate-channel p must be in [0, 1), got {p}");
+                }
+                Ok(ChannelSpec::Rate { rate, p })
+            }
+            other => bail!(
+                "unknown channel '{other}' \
+                 (expected ideal | erasure:<p> | rate:<r>[:<p>])"
+            ),
+        }
+    }
+
+    /// Instantiate a fresh channel (stateless across runs).
+    pub fn build(&self) -> Box<dyn Channel> {
+        match *self {
+            ChannelSpec::Ideal => Box::new(IdealChannel),
+            ChannelSpec::Erasure { p } => Box::new(ErasureChannel::new(p)),
+            ChannelSpec::Rate { rate, p } => Box::new(
+                RateLimitedChannel::new(rate, ErasureChannel::new(p)),
+            ),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            ChannelSpec::Ideal => "ideal".to_string(),
+            ChannelSpec::Erasure { p } => format!("erasure:{p}"),
+            ChannelSpec::Rate { rate, p } => format!("rate:{rate}:{p}"),
+        }
+    }
+}
+
+/// How block sizes are chosen (and whether compute overlaps the link).
+#[derive(Clone, Debug, PartialEq)]
+pub enum PolicySpec {
+    /// The paper's fixed `n_c` (0 = inherit the run config's `n_c`).
+    Fixed { n_c: usize },
+    /// Geometric warmup from `start`, ×`growth` per block, capped at
+    /// `cap` (0 = inherit the run config's `n_c`).
+    Warmup { start: usize, growth: f64, cap: usize },
+    /// Deadline-aware greedy sizing at `frac` of the remaining budget.
+    Deadline { frac: f64 },
+    /// Non-pipelined baseline: fixed blocks, edge idles while sending.
+    Sequential { n_c: usize },
+    /// Transmit-all-first baseline: one block of every sample.
+    AllFirst,
+}
+
+impl PolicySpec {
+    /// Parse `fixed[:n_c]` | `warmup:<start>:<growth>[:<cap>]` |
+    /// `deadline:<frac>` | `sequential[:n_c]` | `allfirst`.
+    pub fn parse(s: &str) -> Result<PolicySpec> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let usize_at = |i: usize| -> Result<usize> {
+            parts[i]
+                .parse::<usize>()
+                .with_context(|| format!("bad integer '{}' in '{s}'", parts[i]))
+        };
+        match parts[0] {
+            "fixed" if parts.len() == 1 => Ok(PolicySpec::Fixed { n_c: 0 }),
+            "fixed" if parts.len() == 2 => {
+                Ok(PolicySpec::Fixed { n_c: usize_at(1)? })
+            }
+            "warmup" if parts.len() == 3 || parts.len() == 4 => {
+                let start = usize_at(1)?;
+                if start == 0 {
+                    bail!("warmup start must be >= 1");
+                }
+                let growth: f64 = parts[2].parse().with_context(|| {
+                    format!("bad growth '{}' in '{s}'", parts[2])
+                })?;
+                if growth < 1.0 {
+                    bail!("warmup growth must be >= 1.0, got {growth}");
+                }
+                let cap =
+                    if parts.len() == 4 { usize_at(3)? } else { 0 };
+                Ok(PolicySpec::Warmup { start, growth, cap })
+            }
+            "deadline" if parts.len() == 2 => {
+                let frac: f64 = parts[1].parse().with_context(|| {
+                    format!("bad fraction '{}' in '{s}'", parts[1])
+                })?;
+                if !(0.0..=1.0).contains(&frac) || frac == 0.0 {
+                    bail!("deadline fraction must be in (0, 1], got {frac}");
+                }
+                Ok(PolicySpec::Deadline { frac })
+            }
+            "sequential" if parts.len() == 1 => {
+                Ok(PolicySpec::Sequential { n_c: 0 })
+            }
+            "sequential" if parts.len() == 2 => {
+                Ok(PolicySpec::Sequential { n_c: usize_at(1)? })
+            }
+            "allfirst" if parts.len() == 1 => Ok(PolicySpec::AllFirst),
+            other => bail!(
+                "unknown policy '{other}' (expected fixed[:n_c] | \
+                 warmup:<start>:<growth>[:<cap>] | deadline:<frac> | \
+                 sequential[:n_c] | allfirst)"
+            ),
+        }
+    }
+
+    /// Whether the edge computes while the channel is busy.
+    pub fn overlap(&self) -> OverlapMode {
+        match self {
+            PolicySpec::Sequential { .. } => OverlapMode::Sequential,
+            _ => OverlapMode::Pipelined,
+        }
+    }
+
+    /// Instantiate the block policy for a dataset of `n` samples.
+    pub fn build(&self, cfg: &DesConfig, n: usize) -> Box<dyn BlockPolicy> {
+        let inherit = |v: usize| {
+            let v = if v == 0 { cfg.n_c } else { v };
+            v.clamp(1, n.max(1))
+        };
+        match *self {
+            PolicySpec::Fixed { n_c } => Box::new(FixedPolicy(inherit(n_c))),
+            PolicySpec::Warmup { start, growth, cap } => {
+                let cap = inherit(cap).max(start);
+                Box::new(WarmupSchedule::new(start, growth, cap))
+            }
+            PolicySpec::Deadline { frac } => Box::new(DeadlineAwareSchedule {
+                t_budget: cfg.t_budget,
+                n_o: cfg.n_o,
+                aggressiveness: frac,
+            }),
+            PolicySpec::Sequential { n_c } => {
+                Box::new(FixedPolicy(inherit(n_c)))
+            }
+            PolicySpec::AllFirst => Box::new(FixedPolicy(n.max(1))),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            PolicySpec::Fixed { n_c: 0 } => "fixed".to_string(),
+            PolicySpec::Fixed { n_c } => format!("fixed:{n_c}"),
+            PolicySpec::Warmup { start, growth, cap: 0 } => {
+                format!("warmup:{start}:{growth}")
+            }
+            PolicySpec::Warmup { start, growth, cap } => {
+                format!("warmup:{start}:{growth}:{cap}")
+            }
+            PolicySpec::Deadline { frac } => format!("deadline:{frac}"),
+            PolicySpec::Sequential { n_c: 0 } => "sequential".to_string(),
+            PolicySpec::Sequential { n_c } => format!("sequential:{n_c}"),
+            PolicySpec::AllFirst => "allfirst".to_string(),
+        }
+    }
+}
+
+/// Who is transmitting.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TrafficSpec {
+    /// `k` devices with disjoint shards, round-robin on the uplink
+    /// (`k = 1` is the paper's single device).
+    Devices(usize),
+    /// One device whose samples arrive over time at `rate` per unit.
+    Online { rate: f64 },
+}
+
+impl TrafficSpec {
+    /// Parse `<k>` | `online:<rate>`.
+    pub fn parse(s: &str) -> Result<TrafficSpec> {
+        if let Some(rest) = s.strip_prefix("online:") {
+            let rate: f64 = rest
+                .parse()
+                .with_context(|| format!("bad arrival rate '{rest}'"))?;
+            if rate <= 0.0 {
+                bail!("arrival rate must be positive, got {rate}");
+            }
+            return Ok(TrafficSpec::Online { rate });
+        }
+        let k: usize = s
+            .parse()
+            .with_context(|| format!("bad device count '{s}'"))?;
+        if k == 0 {
+            bail!("device count must be >= 1");
+        }
+        Ok(TrafficSpec::Devices(k))
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            TrafficSpec::Devices(k) => format!("k{k}"),
+            TrafficSpec::Online { rate } => format!("online:{rate}"),
+        }
+    }
+}
+
+/// One fully-specified protocol scenario.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    pub channel: ChannelSpec,
+    pub policy: PolicySpec,
+    pub traffic: TrafficSpec,
+    /// Edge store capacity (None = unbounded).
+    pub store_capacity: Option<usize>,
+}
+
+impl ScenarioSpec {
+    /// The paper's reference scenario (ideal channel, fixed `n_c`, one
+    /// device) — [`mc_final_loss`](crate::sweep::runner::mc_final_loss)
+    /// runs exactly this.
+    pub fn paper() -> ScenarioSpec {
+        ScenarioSpec {
+            channel: ChannelSpec::Ideal,
+            policy: PolicySpec::Fixed { n_c: 0 },
+            traffic: TrafficSpec::Devices(1),
+            store_capacity: None,
+        }
+    }
+
+    /// Parse the three axis strings (`store` 0 = unbounded).
+    pub fn parse(
+        channel: &str,
+        policy: &str,
+        traffic: &str,
+        store: usize,
+    ) -> Result<ScenarioSpec> {
+        Ok(ScenarioSpec {
+            channel: ChannelSpec::parse(channel)?,
+            policy: PolicySpec::parse(policy)?,
+            traffic: TrafficSpec::parse(traffic)?,
+            store_capacity: if store == 0 { None } else { Some(store) },
+        })
+    }
+
+    /// Compact display label, e.g. `erasure:0.1|warmup:16:2|k4`.
+    pub fn label(&self) -> String {
+        let mut label = format!(
+            "{}|{}|{}",
+            self.channel.label(),
+            self.policy.label(),
+            self.traffic.label()
+        );
+        if let Some(cap) = self.store_capacity {
+            label.push_str(&format!("|cap{cap}"));
+        }
+        label
+    }
+}
+
+/// Named presets runnable as `edgepipe scenario --preset <name>`.
+pub fn registry() -> Vec<(&'static str, ScenarioSpec)> {
+    let base = ScenarioSpec::paper();
+    vec![
+        ("paper", base.clone()),
+        (
+            "sequential",
+            ScenarioSpec {
+                policy: PolicySpec::Sequential { n_c: 0 },
+                ..base.clone()
+            },
+        ),
+        (
+            "all-first",
+            ScenarioSpec { policy: PolicySpec::AllFirst, ..base.clone() },
+        ),
+        (
+            "erasure",
+            ScenarioSpec {
+                channel: ChannelSpec::Erasure { p: 0.1 },
+                ..base.clone()
+            },
+        ),
+        (
+            "warmup",
+            ScenarioSpec {
+                policy: PolicySpec::Warmup {
+                    start: 16,
+                    growth: 2.0,
+                    cap: 0,
+                },
+                ..base.clone()
+            },
+        ),
+        (
+            "multi4",
+            ScenarioSpec { traffic: TrafficSpec::Devices(4), ..base.clone() },
+        ),
+        (
+            "online",
+            ScenarioSpec {
+                traffic: TrafficSpec::Online { rate: 1.0 },
+                ..base.clone()
+            },
+        ),
+        (
+            "limited-memory",
+            ScenarioSpec { store_capacity: Some(1000), ..base },
+        ),
+    ]
+}
+
+/// Look a preset up by name.
+pub fn from_name(name: &str) -> Option<ScenarioSpec> {
+    registry()
+        .into_iter()
+        .find(|(n, _)| *n == name)
+        .map(|(_, spec)| spec)
+}
+
+/// Executes one [`ScenarioSpec`] deterministically per [`DesConfig`].
+/// Shards are built once at construction; every [`run`](Self::run) call
+/// builds a fresh channel/source/policy/executor, so a single runner can
+/// serve many seeds from many threads concurrently.
+pub struct ScenarioRunner<'a> {
+    ds: &'a Dataset,
+    spec: ScenarioSpec,
+    shards: Vec<Dataset>,
+}
+
+impl<'a> ScenarioRunner<'a> {
+    pub fn new(spec: ScenarioSpec, ds: &'a Dataset) -> ScenarioRunner<'a> {
+        let shards = match spec.traffic {
+            TrafficSpec::Devices(k) if k > 1 => shard_dataset(ds, k),
+            _ => Vec::new(),
+        };
+        ScenarioRunner { ds, spec, shards }
+    }
+
+    pub fn spec(&self) -> &ScenarioSpec {
+        &self.spec
+    }
+
+    /// One deterministic run of the scenario on the native backend.
+    pub fn run(&self, cfg: &DesConfig) -> Result<RunResult> {
+        let cfg = DesConfig {
+            store_capacity: self
+                .spec
+                .store_capacity
+                .or(cfg.store_capacity),
+            ..cfg.clone()
+        };
+        let mut channel = self.spec.channel.build();
+        let mut policy = self.spec.policy.build(&cfg, self.ds.n);
+        let mode = self.spec.policy.overlap();
+        let mut exec = crate::coordinator::executor::NativeExecutor::new(
+            RidgeModel::new(self.ds.d, cfg.lambda, self.ds.n),
+            cfg.alpha,
+        );
+        match self.spec.traffic {
+            TrafficSpec::Devices(1) => {
+                let mut source = SingleDeviceSource::new(self.ds, cfg.seed);
+                run_schedule(
+                    self.ds,
+                    &cfg,
+                    &mut source,
+                    policy.as_mut(),
+                    mode,
+                    channel.as_mut(),
+                    &mut exec,
+                )
+            }
+            TrafficSpec::Devices(_) => {
+                let mut source =
+                    RoundRobinSource::new(&self.shards, cfg.seed);
+                run_schedule(
+                    self.ds,
+                    &cfg,
+                    &mut source,
+                    policy.as_mut(),
+                    mode,
+                    channel.as_mut(),
+                    &mut exec,
+                )
+            }
+            TrafficSpec::Online { rate } => {
+                let mut source =
+                    OnlineArrivalSource::new(self.ds, rate, cfg.seed);
+                run_schedule(
+                    self.ds,
+                    &cfg,
+                    &mut source,
+                    policy.as_mut(),
+                    mode,
+                    channel.as_mut(),
+                    &mut exec,
+                )
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_axis() {
+        assert_eq!(ChannelSpec::parse("ideal").unwrap(), ChannelSpec::Ideal);
+        assert_eq!(
+            ChannelSpec::parse("erasure:0.25").unwrap(),
+            ChannelSpec::Erasure { p: 0.25 }
+        );
+        assert_eq!(
+            ChannelSpec::parse("rate:2.0:0.1").unwrap(),
+            ChannelSpec::Rate { rate: 2.0, p: 0.1 }
+        );
+        assert_eq!(
+            PolicySpec::parse("fixed:437").unwrap(),
+            PolicySpec::Fixed { n_c: 437 }
+        );
+        assert_eq!(
+            PolicySpec::parse("warmup:16:2.0").unwrap(),
+            PolicySpec::Warmup { start: 16, growth: 2.0, cap: 0 }
+        );
+        assert_eq!(
+            PolicySpec::parse("sequential").unwrap(),
+            PolicySpec::Sequential { n_c: 0 }
+        );
+        assert_eq!(
+            TrafficSpec::parse("4").unwrap(),
+            TrafficSpec::Devices(4)
+        );
+        assert_eq!(
+            TrafficSpec::parse("online:0.5").unwrap(),
+            TrafficSpec::Online { rate: 0.5 }
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(ChannelSpec::parse("laser").is_err());
+        assert!(ChannelSpec::parse("erasure").is_err());
+        assert!(ChannelSpec::parse("erasure:1.5").is_err());
+        assert!(PolicySpec::parse("warmup:0:2.0").is_err());
+        assert!(PolicySpec::parse("deadline:0").is_err());
+        assert!(PolicySpec::parse("bogus").is_err());
+        assert!(TrafficSpec::parse("0").is_err());
+        assert!(TrafficSpec::parse("online:-1").is_err());
+    }
+
+    #[test]
+    fn labels_round_trip() {
+        let spec = ScenarioSpec::parse("erasure:0.1", "warmup:8:2", "4", 500)
+            .unwrap();
+        assert_eq!(spec.label(), "erasure:0.1|warmup:8:2|k4|cap500");
+        let re = ScenarioSpec::parse("erasure:0.1", "warmup:8:2", "4", 500)
+            .unwrap();
+        assert_eq!(spec, re);
+    }
+
+    #[test]
+    fn registry_names_resolve() {
+        for (name, spec) in registry() {
+            let found =
+                from_name(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(found, spec);
+        }
+        assert!(from_name("no-such-scenario").is_none());
+    }
+}

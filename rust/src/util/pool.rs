@@ -2,9 +2,13 @@
 //!
 //! The sweep runner fans Monte-Carlo trials over cores with
 //! [`parallel_map`]; work is distributed by an atomic cursor so uneven
-//! trial costs (e.g. different `n_c` values) still balance.
+//! trial costs (e.g. different `n_c` values) still balance. A panicking
+//! task no longer poisons the shared results mutex and silently kills
+//! the whole sweep: the first panic is captured, the pool drains, and
+//! the panic is re-raised on the caller with the originating task index.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Number of worker threads to use by default (respects
@@ -23,6 +27,10 @@ pub fn default_threads() -> usize {
 /// Apply `f` to every item of `items` using `threads` workers, preserving
 /// input order in the returned vector. `f` must be `Sync` (called from
 /// many threads) and items are taken by reference.
+///
+/// If `f` panics for some item, the remaining workers stop picking up
+/// new work and the panic is re-raised here, prefixed with the failing
+/// task's index (payloads that aren't strings are re-raised verbatim).
 pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
 where
     T: Sync,
@@ -34,20 +42,49 @@ where
         return items.iter().map(&f).collect();
     }
     let cursor = AtomicUsize::new(0);
+    let abort = AtomicBool::new(false);
     let results: Mutex<Vec<Option<R>>> =
         Mutex::new((0..items.len()).map(|_| None).collect());
+    let first_panic: Mutex<Option<(usize, Box<dyn std::any::Any + Send>)>> =
+        Mutex::new(None);
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
+                if abort.load(Ordering::Relaxed) {
+                    break;
+                }
                 let i = cursor.fetch_add(1, Ordering::Relaxed);
                 if i >= items.len() {
                     break;
                 }
-                let r = f(&items[i]);
-                results.lock().unwrap()[i] = Some(r);
+                // catch the panic HERE so the results mutex is never
+                // poisoned and sibling tasks finish cleanly
+                match catch_unwind(AssertUnwindSafe(|| f(&items[i]))) {
+                    Ok(r) => results.lock().unwrap()[i] = Some(r),
+                    Err(payload) => {
+                        abort.store(true, Ordering::Relaxed);
+                        let mut slot = first_panic.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some((i, payload));
+                        }
+                        break;
+                    }
+                }
             });
         }
     });
+    if let Some((index, payload)) = first_panic.into_inner().unwrap() {
+        let message = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()));
+        match message {
+            Some(msg) => {
+                panic!("parallel_map: task {index} panicked: {msg}")
+            }
+            None => resume_unwind(payload),
+        }
+    }
     results
         .into_inner()
         .unwrap()
@@ -94,5 +131,43 @@ mod tests {
     fn empty_input() {
         let items: Vec<u32> = vec![];
         assert!(parallel_map(&items, 4, |&x| x).is_empty());
+    }
+
+    #[test]
+    fn panic_carries_task_index() {
+        let items: Vec<usize> = (0..64).collect();
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            parallel_map(&items, 4, |&x| {
+                if x == 33 {
+                    panic!("boom at {x}");
+                }
+                x
+            })
+        }));
+        let payload = result.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .expect("panic message should be a String");
+        assert!(
+            msg.contains("task 33") && msg.contains("boom at 33"),
+            "unexpected panic message: {msg}"
+        );
+    }
+
+    #[test]
+    fn panic_does_not_lose_sibling_results_mutex() {
+        // after a panicking sweep, a fresh sweep on the same pool
+        // machinery still works (no poisoned global state)
+        let items: Vec<usize> = (0..16).collect();
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            parallel_map(&items, 4, |&x| {
+                if x == 0 {
+                    panic!("first task dies");
+                }
+                x
+            })
+        }));
+        let ok = parallel_map(&items, 4, |&x| x + 1);
+        assert_eq!(ok.len(), 16);
     }
 }
