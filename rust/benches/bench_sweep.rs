@@ -1,0 +1,45 @@
+//! Perf: the zero-allocation Monte-Carlo sweep engine vs the
+//! pre-workspace baseline, on an `mc_final_loss`-style workload.
+//!
+//! Measures BOTH engine shapes in one process (identical `(n_c, seed)`
+//! jobs, bit-identical losses asserted):
+//!
+//! * baseline — a pool spawn per grid point, a fresh allocation set per
+//!   run (the pre-change engine shape);
+//! * optimized — one flat `(n_c, seed)` fan-out with per-worker
+//!   `RunWorkspace` reuse.
+//!
+//! Reports runs/sec, SGD updates/sec and allocations-per-run (this
+//! binary installs the counting allocator), and writes the result to
+//! `BENCH_sweep.json` so future PRs regress against it. Acceptance bar
+//! for this PR: speedup >= 1.5x on the default (paper-scale) workload.
+//!
+//! Run: `cargo bench --bench bench_sweep`
+//! (CI scale: `EDGEPIPE_BENCH_FAST=1 cargo bench --bench bench_sweep`)
+
+use edgepipe::bench::sweep::{run_sweep_bench, SweepBenchConfig};
+use edgepipe::util::alloc::{mark_installed, CountingAllocator};
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+fn main() {
+    mark_installed();
+    let cfg = SweepBenchConfig::from_env();
+    let report = run_sweep_bench(&cfg);
+    print!("{}", report.render());
+    let out = "BENCH_sweep.json";
+    std::fs::write(out, report.to_value().to_json_pretty())
+        .expect("write BENCH_sweep.json");
+    println!("wrote {out}");
+    // enforce the regression bar when asked (machine-dependent, so
+    // opt-in: EDGEPIPE_BENCH_MIN_SPEEDUP=1.5 makes this run fail below)
+    if let Ok(min) = std::env::var("EDGEPIPE_BENCH_MIN_SPEEDUP") {
+        let min: f64 = min.parse().expect("bad EDGEPIPE_BENCH_MIN_SPEEDUP");
+        assert!(
+            report.speedup >= min,
+            "sweep engine speedup {:.2}x below the required {min}x",
+            report.speedup
+        );
+    }
+}

@@ -5,6 +5,12 @@
 //! Features: warmup, timed iterations with per-iteration samples,
 //! mean/p50/p99, throughput reporting, `--filter substring` selection and
 //! `EDGEPIPE_BENCH_FAST=1` for CI-speed runs.
+//!
+//! [`sweep`] holds the tracked sweep benchmark (baseline-vs-optimized
+//! engine shapes, `BENCH_sweep.json`), shared by `edgepipe bench` and
+//! `cargo bench --bench bench_sweep`.
+
+pub mod sweep;
 
 use std::time::{Duration, Instant};
 
@@ -23,9 +29,10 @@ pub struct BenchConfig {
 }
 
 impl BenchConfig {
-    /// Build from env + argv (`--filter X`, `EDGEPIPE_BENCH_FAST`).
+    /// Build from env + argv (`--filter X`, `EDGEPIPE_BENCH_FAST`;
+    /// `"0"`/`""` count as unset).
     pub fn from_env() -> BenchConfig {
-        let fast = std::env::var("EDGEPIPE_BENCH_FAST").is_ok();
+        let fast = sweep::env_flag("EDGEPIPE_BENCH_FAST");
         let mut filter = String::new();
         let args: Vec<String> = std::env::args().collect();
         for i in 0..args.len() {

@@ -1,0 +1,310 @@
+//! The tracked sweep benchmark: Monte-Carlo `mc_final_loss`-style
+//! throughput, measured two ways in one process —
+//!
+//! * **baseline** — the pre-workspace engine shape: one pool spawn per
+//!   grid point, a fresh allocation set per run (`ScenarioRunner::run`);
+//! * **optimized** — the current engine: ONE flat `(n_c, seed)` fan-out,
+//!   per-worker [`RunWorkspace`] reuse (`ScenarioRunner::run_with`).
+//!
+//! Both paths compute bit-identical losses (asserted), so the ratio is
+//! pure engine overhead. `edgepipe bench --json BENCH_sweep.json` and
+//! `cargo bench --bench bench_sweep` both emit the same
+//! `BENCH_sweep.json` so future PRs can regress against a recorded
+//! baseline: compare `runs_per_sec` (and `allocs_per_run`, when the
+//! counting allocator is installed) across commits.
+
+use std::time::Instant;
+
+use crate::coordinator::des::DesConfig;
+use crate::coordinator::scheduler::RunWorkspace;
+use crate::data::split::train_split;
+use crate::data::synth::{synth_calhousing, SynthSpec};
+use crate::sweep::runner::log_grid;
+use crate::sweep::scenario::{ScenarioRunner, ScenarioSpec};
+use crate::util::alloc::allocations_during;
+use crate::util::json::{num, num_arr, obj, s, Value};
+use crate::util::pool::{default_threads, parallel_map_with, parallel_tasks};
+
+/// What to measure.
+#[derive(Clone, Debug)]
+pub struct SweepBenchConfig {
+    /// Raw synthetic dataset size (pre train-split).
+    pub n: usize,
+    /// Block-size grid resolution (log-spaced over `[1, n_train]`).
+    pub grid_points: usize,
+    /// Monte-Carlo seeds per grid point.
+    pub seeds: usize,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+    /// Per-packet overhead.
+    pub n_o: f64,
+}
+
+impl SweepBenchConfig {
+    /// Paper-scale workload (N = 18 576 raw → 16 718 train rows).
+    pub fn full() -> SweepBenchConfig {
+        SweepBenchConfig {
+            n: 18_576,
+            grid_points: 8,
+            seeds: 8,
+            threads: 0,
+            n_o: 100.0,
+        }
+    }
+
+    /// CI-scale workload (seconds, not minutes).
+    pub fn fast() -> SweepBenchConfig {
+        SweepBenchConfig {
+            n: 2_000,
+            grid_points: 5,
+            seeds: 4,
+            threads: 0,
+            n_o: 20.0,
+        }
+    }
+
+    /// `fast()` when `EDGEPIPE_BENCH_FAST` is truthy (set, non-empty,
+    /// not `"0"`), else `full()`.
+    pub fn from_env() -> SweepBenchConfig {
+        if env_flag("EDGEPIPE_BENCH_FAST") {
+            SweepBenchConfig::fast()
+        } else {
+            SweepBenchConfig::full()
+        }
+    }
+}
+
+/// Is the env var set to a truthy value (`"0"` and `""` count as
+/// unset)?
+pub fn env_flag(name: &str) -> bool {
+    matches!(std::env::var(name), Ok(v) if !v.is_empty() && v != "0")
+}
+
+/// One measurement of both engine shapes over the identical workload.
+#[derive(Clone, Debug)]
+pub struct SweepBenchReport {
+    pub n_train: usize,
+    pub d: usize,
+    pub grid: Vec<usize>,
+    pub seeds: usize,
+    pub threads: usize,
+    /// Total Monte-Carlo runs per phase (`grid.len() · seeds`).
+    pub runs: usize,
+    /// SGD updates executed per phase (identical across phases).
+    pub updates: u64,
+    pub baseline_secs: f64,
+    pub optimized_secs: f64,
+    pub baseline_runs_per_sec: f64,
+    pub runs_per_sec: f64,
+    /// `runs_per_sec / baseline_runs_per_sec`.
+    pub speedup: f64,
+    /// SGD updates/sec through the optimized engine.
+    pub updates_per_sec: f64,
+    /// Mean allocations per run (None without the counting allocator).
+    pub allocs_per_run_baseline: Option<f64>,
+    pub allocs_per_run: Option<f64>,
+}
+
+impl SweepBenchReport {
+    /// Human-readable summary block.
+    pub fn render(&self) -> String {
+        let fmt_allocs = |a: Option<f64>| match a {
+            Some(v) => format!("{v:.1}"),
+            None => "n/a (counting allocator not installed)".to_string(),
+        };
+        format!(
+            "sweep bench: N={} d={} grid={:?} seeds={} threads={} \
+             ({} runs, {} updates/phase)\n\
+             \x20 baseline  (pool per point, alloc per run): \
+             {:>10.3}s  {:>10.1} runs/s  allocs/run {}\n\
+             \x20 optimized (one fan-out, reused workspace): \
+             {:>10.3}s  {:>10.1} runs/s  allocs/run {}\n\
+             \x20 speedup: {:.2}x   sgd updates/s: {:.3e}\n",
+            self.n_train,
+            self.d,
+            self.grid,
+            self.seeds,
+            self.threads,
+            self.runs,
+            self.updates,
+            self.baseline_secs,
+            self.baseline_runs_per_sec,
+            fmt_allocs(self.allocs_per_run_baseline),
+            self.optimized_secs,
+            self.runs_per_sec,
+            fmt_allocs(self.allocs_per_run),
+            self.speedup,
+            self.updates_per_sec,
+        )
+    }
+
+    /// The `BENCH_sweep.json` document.
+    pub fn to_value(&self) -> Value {
+        let opt_num = |v: Option<f64>| match v {
+            Some(x) => num(x),
+            None => Value::Null,
+        };
+        obj(vec![
+            ("schema", num(1.0)),
+            ("bench", s("sweep")),
+            ("n_train", num(self.n_train as f64)),
+            ("d", num(self.d as f64)),
+            (
+                "grid",
+                num_arr(
+                    &self.grid.iter().map(|&g| g as f64).collect::<Vec<_>>(),
+                ),
+            ),
+            ("seeds", num(self.seeds as f64)),
+            ("threads", num(self.threads as f64)),
+            ("runs", num(self.runs as f64)),
+            ("updates", num(self.updates as f64)),
+            ("baseline_secs", num(self.baseline_secs)),
+            ("optimized_secs", num(self.optimized_secs)),
+            ("baseline_runs_per_sec", num(self.baseline_runs_per_sec)),
+            ("runs_per_sec", num(self.runs_per_sec)),
+            ("speedup", num(self.speedup)),
+            ("updates_per_sec", num(self.updates_per_sec)),
+            (
+                "allocs_per_run_baseline",
+                opt_num(self.allocs_per_run_baseline),
+            ),
+            ("allocs_per_run", opt_num(self.allocs_per_run)),
+        ])
+    }
+}
+
+/// The sweep-mode run configuration both phases share.
+fn bench_base(n_o: f64, t_budget: f64) -> DesConfig {
+    DesConfig {
+        loss_every: 0,
+        record_blocks: false,
+        ..DesConfig::paper(1, n_o, t_budget, 7)
+    }
+}
+
+fn per_seed(base: &DesConfig, n_c: usize, s: u64) -> DesConfig {
+    DesConfig {
+        n_c,
+        seed: base.seed.wrapping_add(s),
+        ..base.clone()
+    }
+}
+
+/// Run the tracked sweep benchmark: identical `(n_c, seed)` workloads
+/// through the baseline and optimized engine shapes, with a bitwise
+/// loss-equality assertion between the two (the optimization must not
+/// change results).
+pub fn run_sweep_bench(cfg: &SweepBenchConfig) -> SweepBenchReport {
+    let raw = synth_calhousing(&SynthSpec { n: cfg.n, ..Default::default() });
+    let (train, _) = train_split(&raw, 0.9, 42);
+    let threads =
+        if cfg.threads == 0 { default_threads() } else { cfg.threads };
+    let t_budget = 1.5 * train.n as f64;
+    let base = bench_base(cfg.n_o, t_budget);
+    let grid = log_grid(train.n, cfg.grid_points);
+    let runner = ScenarioRunner::new(ScenarioSpec::paper(), &train);
+    let jobs: Vec<(usize, u64)> = grid
+        .iter()
+        .flat_map(|&n_c| (0..cfg.seeds as u64).map(move |s| (n_c, s)))
+        .collect();
+
+    // warm caches and the page allocator: one seed per grid point
+    parallel_map_with(&grid, threads, RunWorkspace::new, |ws, &n_c| {
+        runner
+            .run_with(ws, &per_seed(&base, n_c, 0))
+            .expect("warmup run failed");
+    });
+
+    // baseline shape: a pool spawn per grid point, a fresh workspace
+    // (full allocation set) per run — the pre-change engine
+    let (baseline_losses, baseline_allocs, baseline_secs) = timed(|| {
+        let mut all: Vec<f64> = Vec::with_capacity(jobs.len());
+        for &n_c in &grid {
+            all.extend(parallel_tasks(cfg.seeds, threads, |s| {
+                runner
+                    .run(&per_seed(&base, n_c, s as u64))
+                    .expect("bench run failed")
+                    .final_loss
+            }));
+        }
+        all
+    });
+
+    // optimized shape: ONE flat fan-out, per-worker workspace reuse
+    let (opt_results, opt_allocs, optimized_secs) = timed(|| {
+        parallel_map_with(
+            &jobs,
+            threads,
+            RunWorkspace::new,
+            |ws, &(n_c, s)| {
+                let stats = runner
+                    .run_with(ws, &per_seed(&base, n_c, s))
+                    .expect("bench run failed");
+                (stats.final_loss, stats.updates as u64)
+            },
+        )
+    });
+    let opt_losses: Vec<f64> = opt_results.iter().map(|r| r.0).collect();
+    let updates: u64 = opt_results.iter().map(|r| r.1).sum();
+    assert_eq!(
+        baseline_losses, opt_losses,
+        "optimized engine changed sweep results"
+    );
+
+    let runs = jobs.len();
+    let per_run = |allocs: Option<u64>| allocs.map(|a| a as f64 / runs as f64);
+    SweepBenchReport {
+        n_train: train.n,
+        d: train.d,
+        grid,
+        seeds: cfg.seeds,
+        threads,
+        runs,
+        updates,
+        baseline_secs,
+        optimized_secs,
+        baseline_runs_per_sec: runs as f64 / baseline_secs,
+        runs_per_sec: runs as f64 / optimized_secs,
+        speedup: baseline_secs / optimized_secs,
+        updates_per_sec: updates as f64 / optimized_secs,
+        allocs_per_run_baseline: per_run(baseline_allocs),
+        allocs_per_run: per_run(opt_allocs),
+    }
+}
+
+fn timed<R>(f: impl FnOnce() -> R) -> (R, Option<u64>, f64) {
+    let t0 = Instant::now();
+    let (out, allocs) = allocations_during(f);
+    (out, allocs, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_bench_runs_and_phases_agree() {
+        // the loss-equality assertion inside run_sweep_bench is the
+        // real check; keep the workload tiny
+        let report = run_sweep_bench(&SweepBenchConfig {
+            n: 400,
+            grid_points: 3,
+            seeds: 2,
+            threads: 2,
+            n_o: 5.0,
+        });
+        assert_eq!(report.runs, report.grid.len() * 2);
+        assert!(report.updates > 0);
+        assert!(report.runs_per_sec > 0.0);
+        assert!(report.baseline_runs_per_sec > 0.0);
+        // JSON round-trips
+        let v = report.to_value();
+        assert_eq!(
+            v.get("runs").unwrap().as_usize().unwrap(),
+            report.runs
+        );
+        assert!(report.render().contains("speedup"));
+    }
+}
+

@@ -22,6 +22,8 @@ COMMANDS:
     sweep       Monte-Carlo final-loss sweep over block sizes
     scenario    Monte-Carlo sweep over registered scenarios
                 (channel × policy × device/traffic grids)
+    bench       sweep-engine throughput benchmark (baseline vs optimized;
+                runs/sec, SGD updates/sec, allocations/run)
     tightness   actual gap vs Theorem 1 vs Corollary 1
     adaptive    adaptive block-size schedules vs the fixed optimum ñ_c
     help        print this message
@@ -41,6 +43,17 @@ SCENARIO OPTIONS (scenario command):
     --devices <a,b,..>       traffic specs: <k> devices | online:<rate>
     (the cross product of the three lists runs in one parallel sweep)
 
+BENCH OPTIONS (bench command):
+    --json <path>            write the machine-readable report
+                             [default: BENCH_sweep.json]
+    --fast <0|1>             CI-scale preset for n/seeds/n_o (also:
+                             EDGEPIPE_BENCH_FAST=1; overrides those
+                             config keys — --points/threads still apply)
+    --points <k>             block-size grid resolution
+    (at full scale, dataset size / seeds / threads come from the usual
+     config keys, e.g. --set data.n_raw=2000 --set sweep.seeds=4
+     --set sweep.threads=8)
+
 EXAMPLES:
     edgepipe optimize --set protocol.n_o=100
     edgepipe train --set protocol.n_c=437 --set train.seed=3 --backend pjrt
@@ -49,6 +62,7 @@ EXAMPLES:
     edgepipe scenario --preset all --set sweep.seeds=20
     edgepipe scenario --channels ideal,erasure:0.1 \\
         --policies fixed,warmup:16:2 --devices 1,4
+    edgepipe bench --json BENCH_sweep.json
 ";
 
 /// Parsed command line.

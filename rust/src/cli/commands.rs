@@ -35,6 +35,7 @@ pub fn dispatch(args: &Args) -> Result<i32> {
         "baselines" => cmd_baselines(args),
         "sweep" => cmd_sweep(args),
         "scenario" => cmd_scenario(args),
+        "bench" => cmd_bench(args),
         "tightness" => cmd_tightness(args),
         "adaptive" => cmd_adaptive(args),
         other => {
@@ -483,6 +484,72 @@ fn cmd_scenario(args: &Args) -> Result<i32> {
     if !args.quiet {
         println!("wrote {}", out.display());
     }
+    Ok(0)
+}
+
+/// The tracked sweep-engine benchmark: baseline vs optimized engine
+/// shapes on identical workloads; writes `BENCH_sweep.json` so future
+/// changes regress against a recorded baseline.
+fn cmd_bench(args: &Args) -> Result<i32> {
+    use crate::bench::sweep::{env_flag, run_sweep_bench, SweepBenchConfig};
+
+    let cfg = load_config(args)?;
+    // an explicit --fast 0|1 wins over the EDGEPIPE_BENCH_FAST env var
+    // (where "0"/"" count as unset); anything else is a usage error
+    let fast = match args.extra.get("fast").map(String::as_str) {
+        Some("1") => true,
+        Some("0") => false,
+        Some(other) => bail!("--fast must be 0 or 1, got '{other}'"),
+        None => env_flag("EDGEPIPE_BENCH_FAST"),
+    };
+    let parse_points = |s: String| {
+        s.parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("--points must be an integer"))
+    };
+    // --fast selects the CI-scale preset for n/seeds/n_o (the usual
+    // config keys are ignored and a note is printed); --points and
+    // sweep.threads apply in both modes
+    let bench_cfg = if fast {
+        let preset = SweepBenchConfig::fast();
+        if !args.quiet {
+            println!(
+                "fast mode: CI-scale preset (n={}, seeds={}, n_o={}); \
+                 data.*/sweep.seeds/protocol.n_o config keys ignored",
+                preset.n, preset.seeds, preset.n_o
+            );
+        }
+        SweepBenchConfig {
+            threads: cfg.sweep.threads,
+            grid_points: match args.extra.get("points") {
+                Some(p) => parse_points(p.clone())?,
+                None => preset.grid_points,
+            },
+            ..preset
+        }
+    } else {
+        SweepBenchConfig {
+            n: cfg.data.n_raw,
+            grid_points: parse_points(args.extra_or("points", "8"))?,
+            seeds: cfg.sweep.seeds,
+            threads: cfg.sweep.threads,
+            n_o: cfg.protocol.n_o,
+        }
+    };
+    if !args.quiet {
+        println!(
+            "sweep bench: n_raw={} points={} seeds={} threads={} n_o={}",
+            bench_cfg.n,
+            bench_cfg.grid_points,
+            bench_cfg.seeds,
+            bench_cfg.threads,
+            bench_cfg.n_o
+        );
+    }
+    let report = run_sweep_bench(&bench_cfg);
+    print!("{}", report.render());
+    let json_path = args.extra_or("json", "BENCH_sweep.json");
+    std::fs::write(&json_path, report.to_value().to_json_pretty())?;
+    println!("wrote {json_path}");
     Ok(0)
 }
 

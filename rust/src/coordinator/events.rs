@@ -23,7 +23,7 @@ pub enum EventKind {
 }
 
 /// A bounded event recorder (drops beyond `cap` to keep sweeps cheap).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct EventLog {
     events: Vec<Event>,
     cap: usize,
@@ -34,6 +34,14 @@ impl EventLog {
     /// Recorder keeping at most `cap` events (0 disables recording).
     pub fn with_capacity(cap: usize) -> EventLog {
         EventLog { events: Vec::new(), cap, dropped: 0 }
+    }
+
+    /// Re-arm for a new run with capacity `cap`, keeping the backing
+    /// buffer (workspace reuse: no allocation after warm-up).
+    pub fn reset(&mut self, cap: usize) {
+        self.events.clear();
+        self.cap = cap;
+        self.dropped = 0;
     }
 
     pub fn push(&mut self, t: f64, kind: EventKind) {

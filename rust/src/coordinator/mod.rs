@@ -35,7 +35,7 @@ pub use executor::{BlockExecutor, NativeExecutor};
 pub use pipeline::run_pipelined;
 pub use run::{run_experiment, ExperimentOutput, RunResult};
 pub use scheduler::{
-    run_schedule, BlockFrame, BlockPolicy, FixedPolicy, OnlineArrivalSource,
-    OverlapMode, RoundRobinSource, SingleDeviceSource, SourcePoll,
-    TrafficSource,
+    run_schedule, run_schedule_with, BlockFrame, BlockPolicy, FixedPolicy,
+    OnlineArrivalSource, OverlapMode, RoundRobinSource, RunStats,
+    RunWorkspace, SingleDeviceSource, SourcePoll, TrafficSource,
 };

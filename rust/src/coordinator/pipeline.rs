@@ -135,7 +135,7 @@ pub fn run_pipelined(
     let blocks_delivered = run?;
     let summary = summary?;
 
-    let samples_delivered = trainer.store.ingested();
+    let samples_delivered = trainer.ingested();
     let case = if samples_delivered >= ds.n {
         TimelineCase::Full
     } else {
@@ -149,17 +149,19 @@ pub fn run_pipelined(
         },
     );
     let final_loss = trainer.full_loss();
+    let updates = trainer.updates;
+    let space = trainer.into_space();
     Ok(RunResult {
-        curve: trainer.curve,
+        curve: space.curve,
         final_loss,
-        final_w: trainer.w,
-        updates: trainer.updates,
+        final_w: space.w,
+        updates,
         blocks_sent: summary.blocks_sent,
         blocks_delivered,
         samples_delivered,
         retransmissions: summary.retransmissions,
         case,
-        snapshots: trainer.snapshots,
+        snapshots: space.snapshots,
         events: events.into_events(),
         backend: exec.name(),
     })

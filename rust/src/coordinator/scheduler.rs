@@ -24,7 +24,9 @@
 //! `STREAM_EDGE`), so `run_des == run_schedule(single device, fixed n_c,
 //! pipelined)` bit-for-bit — asserted by `rust/tests/scenario_parity.rs`.
 //! The hot loop stages each block in a reused [`BlockFrame`], so steady
-//! state performs no per-block allocation.
+//! state performs no per-block allocation; [`run_schedule_with`] goes
+//! further and recycles EVERY per-run buffer through a [`RunWorkspace`],
+//! so Monte-Carlo sweeps perform no per-run allocation after warm-up.
 
 use anyhow::Result;
 
@@ -37,7 +39,7 @@ use super::des::{DesConfig, STREAM_CHANNEL, STREAM_DEVICE};
 use super::events::{EventKind, EventLog};
 use super::executor::BlockExecutor;
 use super::run::RunResult;
-use super::trainer::EdgeTrainer;
+use super::trainer::{EdgeTrainer, TrainSpace};
 
 /// Reused per-block staging buffers: one allocation per run, not per
 /// block (frames are copied into the edge store on ingest, so reuse is
@@ -47,6 +49,12 @@ pub struct BlockFrame {
     pub x: Vec<f32>,
     /// Labels of the staged block.
     pub y: Vec<f32>,
+}
+
+impl Default for BlockFrame {
+    fn default() -> BlockFrame {
+        BlockFrame { x: Vec::new(), y: Vec::new() }
+    }
 }
 
 impl BlockFrame {
@@ -72,6 +80,97 @@ impl BlockFrame {
         self.x.clear();
         self.y.clear();
     }
+
+    /// Re-arm for a run staging blocks of up to `n_c` samples in `d`
+    /// dimensions (clears, then grows capacity only if needed).
+    pub fn reset(&mut self, n_c: usize, d: usize) {
+        self.clear();
+        self.x.reserve(n_c * d);
+        self.y.reserve(n_c);
+    }
+}
+
+/// Every reusable buffer one protocol run needs: the staging frame, the
+/// event log, the trainer's heap state (`TrainSpace`) and the traffic
+/// sources' index scratch. Thread one workspace through
+/// [`run_schedule_with`] (or `ScenarioRunner::run_with`) across many
+/// seeds and a sweep-mode run (no snapshots; single-device or online
+/// traffic) performs zero heap allocations after warm-up — the lever
+/// behind the sweep engine's throughput
+/// (`rust/benches/bench_sweep.rs`).
+///
+/// Reuse is pure: a run on a used workspace is bit-identical to a run
+/// on a fresh one (every buffer is cleared, every RNG re-seeded;
+/// asserted in `rust/tests/scenario_parity.rs`).
+#[derive(Default)]
+pub struct RunWorkspace {
+    pub(crate) frame: BlockFrame,
+    pub(crate) events: EventLog,
+    pub(crate) train: TrainSpace,
+    /// Index scratch for single-device / online-arrival sources.
+    pub(crate) src_buf: Vec<u32>,
+    /// Per-lane index scratch for the round-robin source.
+    pub(crate) lane_bufs: Vec<Vec<u32>>,
+}
+
+impl RunWorkspace {
+    pub fn new() -> RunWorkspace {
+        RunWorkspace::default()
+    }
+
+    /// Final parameters of the last run.
+    pub fn final_w(&self) -> &[f64] {
+        &self.train.w
+    }
+
+    /// (time, loss) curve of the last run.
+    pub fn curve(&self) -> &[(f64, f64)] {
+        &self.train.curve
+    }
+
+    /// Theorem-1 snapshots of the last run (when collected).
+    pub fn snapshots(&self) -> &[super::run::BlockSnapshot] {
+        &self.train.snapshots
+    }
+
+    /// Event stream of the last run (when recorded).
+    pub fn events(&self) -> &[super::events::Event] {
+        self.events.events()
+    }
+
+    /// Assemble a full [`RunResult`] from the last run's buffers plus
+    /// its [`RunStats`] (consumes the workspace).
+    pub fn into_result(self, stats: RunStats) -> RunResult {
+        RunResult {
+            curve: self.train.curve,
+            final_loss: stats.final_loss,
+            final_w: self.train.w,
+            updates: stats.updates,
+            blocks_sent: stats.blocks_sent,
+            blocks_delivered: stats.blocks_delivered,
+            samples_delivered: stats.samples_delivered,
+            retransmissions: stats.retransmissions,
+            case: stats.case,
+            snapshots: self.train.snapshots,
+            events: self.events.into_events(),
+            backend: stats.backend,
+        }
+    }
+}
+
+/// The allocation-free summary of one run: everything `RunResult`
+/// carries except the heap-backed outputs (curve, weights, snapshots,
+/// events), which stay in the [`RunWorkspace`] for reuse or inspection.
+#[derive(Clone, Copy, Debug)]
+pub struct RunStats {
+    pub final_loss: f64,
+    pub updates: usize,
+    pub blocks_sent: usize,
+    pub blocks_delivered: usize,
+    pub samples_delivered: usize,
+    pub retransmissions: u64,
+    pub case: TimelineCase,
+    pub backend: &'static str,
 }
 
 /// What a [`TrafficSource`] produced for the current poll.
@@ -174,11 +273,28 @@ pub struct SingleDeviceSource<'a> {
 
 impl<'a> SingleDeviceSource<'a> {
     pub fn new(ds: &'a Dataset, seed: u64) -> SingleDeviceSource<'a> {
+        Self::with_buf(ds, seed, Vec::with_capacity(ds.n))
+    }
+
+    /// Build reusing `buf` as the untransmitted-index scratch (cleared
+    /// and refilled; the workspace path — no allocation after warm-up).
+    pub fn with_buf(
+        ds: &'a Dataset,
+        seed: u64,
+        mut buf: Vec<u32>,
+    ) -> SingleDeviceSource<'a> {
+        buf.clear();
+        buf.extend(0..ds.n as u32);
         SingleDeviceSource {
             ds,
-            remaining: (0..ds.n as u32).collect(),
+            remaining: buf,
             rng: Pcg32::new(seed, STREAM_DEVICE),
         }
+    }
+
+    /// Hand the index scratch back for reuse.
+    pub fn into_buf(self) -> Vec<u32> {
+        self.remaining
     }
 }
 
@@ -223,19 +339,40 @@ pub struct RoundRobinSource<'a> {
 
 impl<'a> RoundRobinSource<'a> {
     pub fn new(shards: &'a [Dataset], seed: u64) -> RoundRobinSource<'a> {
+        Self::with_bufs(shards, seed, Vec::new())
+    }
+
+    /// Build reusing `bufs` as the per-lane index scratch (resized to
+    /// the shard count; each lane buffer is cleared and refilled).
+    pub fn with_bufs(
+        shards: &'a [Dataset],
+        seed: u64,
+        mut bufs: Vec<Vec<u32>>,
+    ) -> RoundRobinSource<'a> {
         assert!(!shards.is_empty(), "need at least one device");
+        bufs.resize_with(shards.len(), Vec::new);
         let lanes = shards
             .iter()
+            .zip(bufs)
             .enumerate()
-            .map(|(i, shard)| DeviceLane {
-                remaining: (0..shard.n as u32).collect(),
-                rng: Pcg32::new(
-                    seed.wrapping_add(1000 * i as u64),
-                    STREAM_DEVICE,
-                ),
+            .map(|(i, (shard, mut buf))| {
+                buf.clear();
+                buf.extend(0..shard.n as u32);
+                DeviceLane {
+                    remaining: buf,
+                    rng: Pcg32::new(
+                        seed.wrapping_add(1000 * i as u64),
+                        STREAM_DEVICE,
+                    ),
+                }
             })
             .collect();
         RoundRobinSource { shards, lanes, turn: 0 }
+    }
+
+    /// Hand the per-lane index scratch back for reuse.
+    pub fn into_bufs(self) -> Vec<Vec<u32>> {
+        self.lanes.into_iter().map(|l| l.remaining).collect()
     }
 }
 
@@ -296,14 +433,31 @@ impl<'a> OnlineArrivalSource<'a> {
     /// `rate` = samples arriving per normalized time unit (`> 0`;
     /// `f64::INFINITY` recovers the all-data-up-front setting).
     pub fn new(ds: &'a Dataset, rate: f64, seed: u64) -> Self {
+        Self::with_buf(ds, rate, seed, Vec::with_capacity(ds.n))
+    }
+
+    /// Build reusing `buf` as the arrived-but-unsent scratch (cleared;
+    /// the workspace path — no allocation after warm-up).
+    pub fn with_buf(
+        ds: &'a Dataset,
+        rate: f64,
+        seed: u64,
+        mut buf: Vec<u32>,
+    ) -> Self {
         assert!(rate > 0.0, "arrival rate must be positive");
+        buf.clear();
         OnlineArrivalSource {
             ds,
-            pool: Vec::with_capacity(ds.n),
+            pool: buf,
             arrived: 0,
             rate,
             rng: Pcg32::new(seed, STREAM_DEVICE),
         }
+    }
+
+    /// Hand the index scratch back for reuse.
+    pub fn into_buf(self) -> Vec<u32> {
+        self.pool
     }
 
     fn arrival_time(&self, i: usize) -> f64 {
@@ -356,7 +510,8 @@ impl TrafficSource for OnlineArrivalSource<'_> {
 ///
 /// Timing, counters and the event stream reproduce the seed `run_des`
 /// exactly when driven by `SingleDeviceSource` + `FixedPolicy` +
-/// `Pipelined`.
+/// `Pipelined`. Convenience wrapper over [`run_schedule_with`] with a
+/// fresh [`RunWorkspace`]; sweeps reuse one workspace instead.
 pub fn run_schedule(
     ds: &Dataset,
     cfg: &DesConfig,
@@ -366,10 +521,85 @@ pub fn run_schedule(
     channel: &mut dyn Channel,
     exec: &mut dyn BlockExecutor,
 ) -> Result<RunResult> {
-    let mut events = EventLog::with_capacity(cfg.event_capacity);
-    let mut trainer = EdgeTrainer::new(ds, cfg);
+    let mut ws = RunWorkspace::new();
+    let stats =
+        run_schedule_with(&mut ws, ds, cfg, source, policy, mode, channel, exec)?;
+    Ok(ws.into_result(stats))
+}
+
+/// [`run_schedule`] against a reusable [`RunWorkspace`]: identical
+/// semantics, but every buffer (frame, events, store, weights, SGD index
+/// batch, curve) comes from — and returns to — `ws`, so a run allocates
+/// nothing after the workspace has warmed up. Returns the stack-only
+/// [`RunStats`]; heap outputs stay in `ws` (see its accessors).
+#[allow(clippy::too_many_arguments)]
+pub fn run_schedule_with(
+    ws: &mut RunWorkspace,
+    ds: &Dataset,
+    cfg: &DesConfig,
+    source: &mut dyn TrafficSource,
+    policy: &mut dyn BlockPolicy,
+    mode: OverlapMode,
+    channel: &mut dyn Channel,
+    exec: &mut dyn BlockExecutor,
+) -> Result<RunStats> {
+    ws.events.reset(cfg.event_capacity);
+    ws.frame.reset(cfg.n_c.max(1).min(ds.n), ds.d);
+    let mut trainer =
+        EdgeTrainer::from_space(std::mem::take(&mut ws.train), ds, cfg);
+    let outcome = schedule_loop(
+        &mut trainer,
+        &mut ws.frame,
+        &mut ws.events,
+        ds,
+        cfg,
+        source,
+        policy,
+        mode,
+        channel,
+        exec,
+    );
+    let stats = outcome.map(|c| RunStats {
+        final_loss: trainer.full_loss(),
+        updates: trainer.updates,
+        blocks_sent: c.blocks_sent,
+        blocks_delivered: c.blocks_delivered,
+        samples_delivered: c.samples_delivered,
+        retransmissions: c.retransmissions,
+        case: c.case,
+        backend: exec.name(),
+    });
+    // the workspace gets its buffers back on success AND on error, so
+    // an error mid-sweep doesn't silently degrade later runs to
+    // fresh-allocation mode
+    ws.train = trainer.into_space();
+    stats
+}
+
+/// The fallible protocol loop's counters (everything `RunStats` needs
+/// beyond what the trainer itself holds).
+struct LoopCounters {
+    blocks_sent: usize,
+    blocks_delivered: usize,
+    samples_delivered: usize,
+    retransmissions: u64,
+    case: TimelineCase,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn schedule_loop(
+    trainer: &mut EdgeTrainer<'_>,
+    frame: &mut BlockFrame,
+    events: &mut EventLog,
+    ds: &Dataset,
+    cfg: &DesConfig,
+    source: &mut dyn TrafficSource,
+    policy: &mut dyn BlockPolicy,
+    mode: OverlapMode,
+    channel: &mut dyn Channel,
+    exec: &mut dyn BlockExecutor,
+) -> Result<LoopCounters> {
     let mut chan_rng = Pcg32::new(cfg.seed, STREAM_CHANNEL);
-    let mut frame = BlockFrame::with_capacity(cfg.n_c.max(1).min(ds.n), ds.d);
 
     let mut t_send = 0.0f64;
     let mut block = 1usize;
@@ -380,7 +610,7 @@ pub fn run_schedule(
 
     while t_send < cfg.t_budget {
         let n_c = policy.next_n_c(block, source.remaining(), t_send);
-        match source.poll(n_c, t_send, &mut frame) {
+        match source.poll(n_c, t_send, frame) {
             SourcePoll::Exhausted => break,
             SourcePoll::Idle { until } => {
                 // channel idle: the edge keeps computing (pipelined) or
@@ -388,7 +618,7 @@ pub fn run_schedule(
                 let until = until.max(t_send).min(cfg.t_budget);
                 match mode {
                     OverlapMode::Pipelined => {
-                        trainer.advance_to(until, exec, &mut events)?
+                        trainer.advance_to(until, exec, events)?
                     }
                     OverlapMode::Sequential => trainer.skip_to(until),
                 }
@@ -412,7 +642,7 @@ pub fn run_schedule(
             // ingest the delivered block
             match mode {
                 OverlapMode::Pipelined => {
-                    trainer.advance_to(delivery.arrival, exec, &mut events)?
+                    trainer.advance_to(delivery.arrival, exec, events)?
                 }
                 OverlapMode::Sequential => trainer.skip_to(delivery.arrival),
             }
@@ -430,7 +660,7 @@ pub fn run_schedule(
         } else {
             match mode {
                 OverlapMode::Pipelined => {
-                    trainer.advance_to(cfg.t_budget, exec, &mut events)?
+                    trainer.advance_to(cfg.t_budget, exec, events)?
                 }
                 OverlapMode::Sequential => trainer.skip_to(cfg.t_budget),
             }
@@ -443,7 +673,7 @@ pub fn run_schedule(
         block += 1;
     }
     // tail: no more transmissions; compute until the deadline (Fig. 2(b))
-    trainer.advance_to(cfg.t_budget, exec, &mut events)?;
+    trainer.advance_to(cfg.t_budget, exec, events)?;
     trainer.finish(exec)?;
 
     let case = if samples_delivered >= ds.n {
@@ -459,20 +689,12 @@ pub fn run_schedule(
         },
     );
 
-    let final_loss = trainer.full_loss();
-    Ok(RunResult {
-        curve: trainer.curve,
-        final_loss,
-        final_w: trainer.w,
-        updates: trainer.updates,
+    Ok(LoopCounters {
         blocks_sent,
         blocks_delivered,
         samples_delivered,
         retransmissions,
         case,
-        snapshots: trainer.snapshots,
-        events: events.into_events(),
-        backend: exec.name(),
     })
 }
 

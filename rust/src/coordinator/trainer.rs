@@ -1,6 +1,13 @@
 //! The edge node's training half, shared verbatim by every coordinator
 //! path (DES adapter, generic scheduler, threaded pipeline) so their
 //! semantics cannot diverge.
+//!
+//! The trainer's heap state lives in a detachable [`TrainSpace`] so
+//! Monte-Carlo sweeps can reuse one set of buffers across thousands of
+//! runs (`coordinator::scheduler::RunWorkspace`): a run takes the space
+//! by value, mutates it, and hands it back — re-seeding every RNG and
+//! clearing every buffer, so a reused space is bit-identical to a fresh
+//! one (asserted in `rust/tests/scenario_parity.rs`).
 
 use anyhow::Result;
 
@@ -13,12 +20,24 @@ use super::events::{EventKind, EventLog};
 use super::executor::BlockExecutor;
 use super::run::BlockSnapshot;
 
+/// The trainer's reusable heap buffers: parameters, the sample store,
+/// the SGD index batch, and the recorded outputs. One `TrainSpace`
+/// serves arbitrarily many runs; every buffer is cleared (capacity kept)
+/// when a run adopts it.
+#[derive(Debug, Default)]
+pub(crate) struct TrainSpace {
+    pub w: Vec<f64>,
+    pub store: SampleStore,
+    pub idx_buf: Vec<u32>,
+    pub curve: Vec<(f64, f64)>,
+    pub snapshots: Vec<BlockSnapshot>,
+}
+
 /// The edge node's training half: owns `w`, the sample store, the compute
 /// clock, loss recording and snapshot collection.
 pub(crate) struct EdgeTrainer<'a> {
     ds: &'a Dataset,
-    pub w: Vec<f64>,
-    pub store: SampleStore,
+    sp: TrainSpace,
     /// Next update would start at this time.
     cursor: f64,
     tau_p: f64,
@@ -26,43 +45,48 @@ pub(crate) struct EdgeTrainer<'a> {
     reg: f64,
     rng: Pcg32,
     evict_rng: Pcg32,
-    idx_buf: Vec<u32>,
     pub updates: usize,
-    pub curve: Vec<(f64, f64)>,
     loss_every: usize,
     since_record: usize,
-    pub snapshots: Vec<BlockSnapshot>,
     collect_snapshots: bool,
     record_blocks: bool,
 }
 
 impl<'a> EdgeTrainer<'a> {
+    /// Fresh trainer with its own (empty) buffers.
     pub fn new(ds: &'a Dataset, cfg: &DesConfig) -> EdgeTrainer<'a> {
+        Self::from_space(TrainSpace::default(), ds, cfg)
+    }
+
+    /// Adopt an existing [`TrainSpace`]: clears every buffer (keeping
+    /// capacity) and re-derives all per-run state from `cfg`, so the
+    /// resulting trainer is indistinguishable from [`new`](Self::new).
+    pub fn from_space(
+        mut sp: TrainSpace,
+        ds: &'a Dataset,
+        cfg: &DesConfig,
+    ) -> EdgeTrainer<'a> {
         let mut init_rng = Pcg32::new(cfg.seed, STREAM_INIT);
-        let w: Vec<f64> = (0..ds.d)
-            .map(|_| cfg.init_std * init_rng.next_gaussian())
-            .collect();
-        let store = match cfg.store_capacity {
-            Some(cap) => SampleStore::with_capacity(ds.d, cap),
-            None => SampleStore::new(ds.d),
-        };
+        sp.w.clear();
+        sp.w.extend((0..ds.d).map(|_| cfg.init_std * init_rng.next_gaussian()));
+        sp.store.reset(ds.d, cfg.store_capacity);
+        sp.idx_buf.clear();
+        sp.idx_buf.reserve(4096);
+        sp.curve.clear();
+        sp.snapshots.clear();
         let reg = cfg.lambda / ds.n as f64;
         let mut trainer = EdgeTrainer {
             ds,
-            w,
-            store,
+            sp,
             cursor: 0.0,
             tau_p: cfg.tau_p,
             t_budget: cfg.t_budget,
             reg,
             rng: Pcg32::new(cfg.seed, STREAM_EDGE),
             evict_rng: Pcg32::new(cfg.seed, STREAM_EVICT),
-            idx_buf: Vec::with_capacity(4096),
             updates: 0,
-            curve: Vec::new(),
             loss_every: cfg.loss_every,
             since_record: 0,
-            snapshots: Vec::new(),
             collect_snapshots: cfg.collect_snapshots,
             record_blocks: cfg.record_blocks,
         };
@@ -70,14 +94,25 @@ impl<'a> EdgeTrainer<'a> {
         trainer
     }
 
+    /// Release the buffers (with this run's outputs inside) for reuse or
+    /// for assembling a `RunResult`.
+    pub fn into_space(self) -> TrainSpace {
+        self.sp
+    }
+
+    /// Total samples ever ingested into the store.
+    pub fn ingested(&self) -> usize {
+        self.sp.store.ingested()
+    }
+
     /// Training loss over the FULL dataset (paper Fig. 4's y-axis).
     pub fn full_loss(&self) -> f64 {
-        self.ds.ridge_loss(&self.w, self.reg)
+        self.ds.ridge_loss(&self.sp.w, self.reg)
     }
 
     fn record_loss(&mut self, t: f64) {
         let loss = self.full_loss();
-        self.curve.push((t, loss));
+        self.sp.curve.push((t, loss));
         self.since_record = 0;
     }
 
@@ -90,24 +125,24 @@ impl<'a> EdgeTrainer<'a> {
         events: &mut EventLog,
     ) -> Result<()> {
         let until = until.min(self.t_budget);
-        if self.store.is_empty() {
+        if self.sp.store.is_empty() {
             self.cursor = self.cursor.max(until);
             return Ok(());
         }
-        let n = self.store.len() as u64;
+        let n = self.sp.store.len() as u64;
         // updates that *finish* by `until` (tiny epsilon absorbs fp drift
         // in repeated cursor += tau_p)
         let eps = 1e-9 * self.tau_p;
         let mut ran = 0usize;
         while self.cursor + self.tau_p <= until + eps {
-            self.idx_buf.push(self.rng.gen_range(n) as u32);
+            self.sp.idx_buf.push(self.rng.gen_range(n) as u32);
             self.cursor += self.tau_p;
             self.updates += 1;
             self.since_record += 1;
             ran += 1;
             let flush_for_record = self.loss_every > 0
                 && self.since_record >= self.loss_every;
-            if flush_for_record || self.idx_buf.len() >= 4096 {
+            if flush_for_record || self.sp.idx_buf.len() >= 4096 {
                 self.flush(exec)?;
                 if flush_for_record {
                     self.record_loss(self.cursor);
@@ -129,11 +164,11 @@ impl<'a> EdgeTrainer<'a> {
     }
 
     fn flush(&mut self, exec: &mut dyn BlockExecutor) -> Result<()> {
-        if self.idx_buf.is_empty() {
+        if self.sp.idx_buf.is_empty() {
             return Ok(());
         }
-        exec.run_block(&mut self.w, self.store.view(), &self.idx_buf)?;
-        self.idx_buf.clear();
+        exec.run_block(&mut self.sp.w, self.sp.store.view(), &self.sp.idx_buf)?;
+        self.sp.idx_buf.clear();
         Ok(())
     }
 
@@ -141,15 +176,15 @@ impl<'a> EdgeTrainer<'a> {
     /// and, when enabled, the Theorem-1 snapshot of (w, X_b)).
     pub fn ingest_block(&mut self, block: usize, t: f64, x: &[f32], y: &[f32]) {
         if self.collect_snapshots {
-            self.snapshots.push(BlockSnapshot {
+            self.sp.snapshots.push(BlockSnapshot {
                 block,
                 arrived_at: t,
-                w_end: self.w.clone(),
+                w_end: self.sp.w.clone(),
                 x: x.to_vec(),
                 y: y.to_vec(),
             });
         }
-        self.store.ingest(x, y, &mut self.evict_rng);
+        self.sp.store.ingest(x, y, &mut self.evict_rng);
         if self.record_blocks {
             self.record_loss(t);
         }

@@ -50,37 +50,15 @@ impl Dataset {
 
     /// Empirical ridge loss `(1/n) Σ (wᵀx−y)² + reg‖w‖²` in f64
     /// (reg = λ/N with N the FULL dataset size; pass it explicitly).
-    /// The d == 8 case takes a fixed-size vectorized path.
+    /// Evaluated by the batched multi-accumulator kernel
+    /// (`linalg::kernels::batch_ridge_loss`), which specializes the
+    /// paper's d == 8 workload — every final-loss evaluation in every
+    /// sweep lands here.
     pub fn ridge_loss(&self, w: &[f64], reg: f64) -> f64 {
         assert_eq!(w.len(), self.d);
-        let w2: f64 = w.iter().map(|v| v * v).sum();
-        let acc = if self.d == 8 {
-            let w8 = <&[f64; 8]>::try_from(w).unwrap();
-            let mut acc = 0.0;
-            for (row, &y) in self.x.chunks_exact(8).zip(&self.y) {
-                let r8 = <&[f32; 8]>::try_from(row).unwrap();
-                let mut dot = 0.0;
-                for j in 0..8 {
-                    dot += w8[j] * r8[j] as f64;
-                }
-                let e = dot - y as f64;
-                acc += e * e;
-            }
-            acc
-        } else {
-            let mut acc = 0.0;
-            for i in 0..self.n {
-                let row = self.row(i);
-                let mut dot = 0.0;
-                for j in 0..self.d {
-                    dot += w[j] * row[j] as f64;
-                }
-                let e = dot - self.y[i] as f64;
-                acc += e * e;
-            }
-            acc
-        };
-        acc / self.n as f64 + reg * w2
+        crate::linalg::kernels::batch_ridge_loss(
+            &self.x, &self.y, self.d, w, reg,
+        )
     }
 }
 

@@ -20,6 +20,14 @@ pub struct SampleStore {
     ingested: usize,
 }
 
+impl Default for SampleStore {
+    /// Placeholder store; [`reset`](SampleStore::reset) before use
+    /// (workspace plumbing).
+    fn default() -> SampleStore {
+        SampleStore::new(0)
+    }
+}
+
 impl SampleStore {
     /// Unbounded store (the paper's protocol).
     pub fn new(d: usize) -> SampleStore {
@@ -37,6 +45,24 @@ impl SampleStore {
             d,
             capacity: Some(capacity),
             ingested: 0,
+        }
+    }
+
+    /// Re-arm the store for a new run: drop all samples and adopt the
+    /// run's dimension/capacity, keeping the backing buffers so a
+    /// workspace-reused run performs no store allocation after warm-up.
+    pub fn reset(&mut self, d: usize, capacity: Option<usize>) {
+        if let Some(cap) = capacity {
+            assert!(cap > 0, "capacity must be positive");
+        }
+        self.x.clear();
+        self.y.clear();
+        self.d = d;
+        self.capacity = capacity;
+        self.ingested = 0;
+        if let Some(cap) = capacity {
+            self.x.reserve(cap * d);
+            self.y.reserve(cap);
         }
     }
 

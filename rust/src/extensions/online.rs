@@ -59,36 +59,36 @@ pub fn run_online_arrivals(
 }
 
 /// Sweep final loss across store capacities (the Abl-4 producer).
+/// One flat `(capacity, seed)` fan-out with per-worker workspaces.
 pub fn capacity_sweep(
     ds: &Dataset,
     cfg: &DesConfig,
     capacities: &[usize],
     seeds: usize,
 ) -> Vec<(usize, f64)> {
-    use crate::channel::IdealChannel;
-    use crate::coordinator::executor::NativeExecutor;
-    use crate::model::RidgeModel;
-    use crate::util::pool::{default_threads, parallel_map};
+    use crate::coordinator::scheduler::RunWorkspace;
+    use crate::sweep::scenario::{ScenarioRunner, ScenarioSpec};
+    use crate::util::pool::{default_threads, parallel_map_with};
 
+    let runner = ScenarioRunner::new(ScenarioSpec::paper(), ds);
     let jobs: Vec<(usize, u64)> = capacities
         .iter()
         .flat_map(|&cap| (0..seeds as u64).map(move |s| (cap, s)))
         .collect();
-    let losses = parallel_map(&jobs, default_threads(), |&(cap, s)| {
-        let run_cfg = DesConfig {
-            store_capacity: Some(cap),
-            seed: cfg.seed.wrapping_add(s),
-            record_blocks: false,
-            ..cfg.clone()
-        };
-        let mut exec = NativeExecutor::new(
-            RidgeModel::new(ds.d, run_cfg.lambda, ds.n),
-            run_cfg.alpha,
-        );
-        run_des(ds, &run_cfg, &mut IdealChannel, &mut exec)
-            .expect("online run")
-            .final_loss
-    });
+    let losses = parallel_map_with(
+        &jobs,
+        default_threads(),
+        RunWorkspace::new,
+        |ws, &(cap, s)| {
+            let run_cfg = DesConfig {
+                store_capacity: Some(cap),
+                seed: cfg.seed.wrapping_add(s),
+                record_blocks: false,
+                ..cfg.clone()
+            };
+            runner.run_with(ws, &run_cfg).expect("online run").final_loss
+        },
+    );
     capacities
         .iter()
         .enumerate()

@@ -22,7 +22,11 @@
 //!   `BlockPolicy` (fixed or adaptive `n_c`), `OverlapMode`
 //!   (pipelined vs sequential), over the [`channel`] and
 //!   [`coordinator::executor`] seams. The hot loop stages blocks in one
-//!   reused `BlockFrame` — no per-block allocation.
+//!   reused `BlockFrame` — no per-block allocation — and
+//!   `run_schedule_with` threads a reusable `RunWorkspace` through a
+//!   whole sweep — no per-run allocation after warm-up (see
+//!   ARCHITECTURE.md "Sweep hot path" and
+//!   `rust/benches/bench_sweep.rs`).
 //! * **Policy adapters** — `coordinator::des::run_des` (the paper's
 //!   reference run and Monte-Carlo fast path), [`baselines`]
 //!   (sequential, transmit-all-first), [`extensions`] (multi-device,
@@ -44,7 +48,9 @@
 //!   artifacts built by `make artifacts` (gated behind the `pjrt` cargo
 //!   feature; the native path is fully self-contained).
 //! * **Substrate** — everything needed offline: RNG, JSON, config, CLI,
-//!   linear algebra, dataset synthesis, a bench harness and a
+//!   linear algebra + vectorized f32→f64 kernels ([`linalg::kernels`]),
+//!   dataset synthesis, a bench harness (including the tracked sweep
+//!   benchmark behind `edgepipe bench`, [`bench::sweep`]) and a
 //!   property-testing kit ([`util`], [`linalg`], [`data`], [`bench`],
 //!   [`testkit`], [`metrics`], [`protocol`], [`model`]).
 //!

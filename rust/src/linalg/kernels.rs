@@ -1,0 +1,244 @@
+//! Vectorized f32→f64 compute kernels for the sweep hot path.
+//!
+//! The covariate data is f32 (matching the AOT artifact layout) while
+//! all accumulation is f64; these kernels widen on the fly and use
+//! multiple independent accumulators so the compiler can keep several
+//! fused multiply-adds in flight instead of serializing on one
+//! dependency chain. They back:
+//!
+//! * [`RidgeModel`](crate::model::RidgeModel)'s general-`d` loss /
+//!   gradient / SGD-step path (the `d == 8` paper workload keeps its
+//!   fixed-size specialization),
+//! * the batched store-wide loss evaluator
+//!   ([`batch_ridge_loss`]) used by `Dataset::ridge_loss` — i.e. every
+//!   final-loss evaluation in every sweep,
+//! * `ridge_solution`'s Gram-matrix accumulation ([`axpy_f32_f64`]),
+//! * the native cross-check path in `runtime::loss`.
+//!
+//! Equivalence with the scalar reference on odd dimensions and empty
+//! inputs is unit-tested below (multi-accumulator summation reorders
+//! floating-point adds, so comparisons are to ~1e-12 relative, not
+//! bit-exact; `axpy` is element-wise and exact).
+
+/// `Σ_j w[j] · x[j]` with the f32 row widened to f64.
+///
+/// Four independent accumulators over the unrolled body; the tail is
+/// sequential. `w` and `x` must have equal length.
+#[inline]
+pub fn dot_f32_f64(w: &[f64], x: &[f32]) -> f64 {
+    debug_assert_eq!(w.len(), x.len(), "dot length mismatch");
+    let n = w.len();
+    let chunks = n / 4;
+    let mut a0 = 0.0f64;
+    let mut a1 = 0.0f64;
+    let mut a2 = 0.0f64;
+    let mut a3 = 0.0f64;
+    for c in 0..chunks {
+        let b = c * 4;
+        a0 += w[b] * x[b] as f64;
+        a1 += w[b + 1] * x[b + 1] as f64;
+        a2 += w[b + 2] * x[b + 2] as f64;
+        a3 += w[b + 3] * x[b + 3] as f64;
+    }
+    let mut tail = 0.0f64;
+    for j in chunks * 4..n {
+        tail += w[j] * x[j] as f64;
+    }
+    (a0 + a1) + (a2 + a3) + tail
+}
+
+/// `y[j] += a · x[j]` with the f32 `x` widened to f64.
+///
+/// Element-wise (no reassociation): results are bit-identical to the
+/// scalar loop. `x` and `y` must have equal length.
+#[inline]
+pub fn axpy_f32_f64(a: f64, x: &[f32], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len(), "axpy length mismatch");
+    for (yj, &xj) in y.iter_mut().zip(x) {
+        *yj += a * xj as f64;
+    }
+}
+
+/// Sum of squared prediction errors `Σ_i (w·x_i − y_i)²` over a flat
+/// row-major batch (`x.len() == y.len() · d`).
+///
+/// Rows are processed four at a time into independent accumulators —
+/// the batched store-wide evaluator behind every final-loss computation.
+/// The `d == 8` paper workload takes a fixed-size inner path the
+/// compiler fully vectorizes.
+pub fn batch_sq_err(x: &[f32], y: &[f32], d: usize, w: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len() * d, "batch shape mismatch");
+    debug_assert_eq!(w.len(), d, "weight dimension mismatch");
+    let n = y.len();
+    if n == 0 {
+        return 0.0;
+    }
+    if d == 8 {
+        let w8 = <&[f64; 8]>::try_from(w).unwrap();
+        let mut acc = [0.0f64; 4];
+        let mut rows = x.chunks_exact(8);
+        let quads = n / 4;
+        for q in 0..quads {
+            let base = q * 4;
+            for k in 0..4 {
+                let r8 =
+                    <&[f32; 8]>::try_from(rows.next().unwrap()).unwrap();
+                let mut dot = 0.0f64;
+                for j in 0..8 {
+                    dot += w8[j] * r8[j] as f64;
+                }
+                let e = dot - y[base + k] as f64;
+                acc[k] += e * e;
+            }
+        }
+        let mut tail = 0.0f64;
+        for (row, &yi) in rows.by_ref().zip(&y[quads * 4..]) {
+            let r8 = <&[f32; 8]>::try_from(row).unwrap();
+            let mut dot = 0.0f64;
+            for j in 0..8 {
+                dot += w8[j] * r8[j] as f64;
+            }
+            let e = dot - yi as f64;
+            tail += e * e;
+        }
+        return (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail;
+    }
+    let mut acc = [0.0f64; 4];
+    let quads = n / 4;
+    for q in 0..quads {
+        let base = q * 4;
+        for k in 0..4 {
+            let i = base + k;
+            let e = dot_f32_f64(w, &x[i * d..(i + 1) * d]) - y[i] as f64;
+            acc[k] += e * e;
+        }
+    }
+    let mut tail = 0.0f64;
+    for i in quads * 4..n {
+        let e = dot_f32_f64(w, &x[i * d..(i + 1) * d]) - y[i] as f64;
+        tail += e * e;
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+/// Empirical ridge loss over a flat batch:
+/// `(1/n) Σ (w·x_i − y_i)² + reg · ‖w‖²` (empty batch: just the
+/// regularizer term).
+pub fn batch_ridge_loss(
+    x: &[f32],
+    y: &[f32],
+    d: usize,
+    w: &[f64],
+    reg: f64,
+) -> f64 {
+    let w2: f64 = w.iter().map(|v| v * v).sum();
+    if y.is_empty() {
+        return reg * w2;
+    }
+    batch_sq_err(x, y, d, w) / y.len() as f64 + reg * w2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// The dimensions the kernels must agree with the scalar reference
+    /// on: odd, sub-unroll, the paper's d = 8, and past one unroll.
+    const DIMS: &[usize] = &[1, 3, 7, 8, 9, 33];
+
+    fn scalar_dot(w: &[f64], x: &[f32]) -> f64 {
+        let mut acc = 0.0;
+        for j in 0..w.len() {
+            acc += w[j] * x[j] as f64;
+        }
+        acc
+    }
+
+    fn random_case(d: usize, n: usize, seed: u64) -> (Vec<f64>, Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg32::seeded(seed);
+        let w: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let x: Vec<f32> =
+            (0..n * d).map(|_| rng.next_gaussian() as f32).collect();
+        let y: Vec<f32> =
+            (0..n).map(|_| rng.next_gaussian() as f32).collect();
+        (w, x, y)
+    }
+
+    fn assert_close(a: f64, b: f64, what: &str) {
+        let scale = a.abs().max(b.abs()).max(1.0);
+        assert!(
+            (a - b).abs() <= 1e-12 * scale,
+            "{what}: {a} vs {b}"
+        );
+    }
+
+    #[test]
+    fn dot_matches_scalar_on_odd_dims() {
+        for &d in DIMS {
+            let (w, x, _) = random_case(d, 1, 7 + d as u64);
+            assert_close(
+                dot_f32_f64(&w, &x),
+                scalar_dot(&w, &x),
+                &format!("dot d={d}"),
+            );
+        }
+    }
+
+    #[test]
+    fn dot_empty_is_zero() {
+        assert_eq!(dot_f32_f64(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn axpy_matches_scalar_exactly() {
+        for &d in DIMS {
+            let (w, x, _) = random_case(d, 1, 100 + d as u64);
+            let mut y1 = w.clone();
+            let mut y2 = w.clone();
+            axpy_f32_f64(0.37, &x, &mut y1);
+            for j in 0..d {
+                y2[j] += 0.37 * x[j] as f64;
+            }
+            assert_eq!(y1, y2, "axpy must be element-wise exact (d={d})");
+        }
+    }
+
+    #[test]
+    fn axpy_empty_is_noop() {
+        let mut y: Vec<f64> = vec![];
+        axpy_f32_f64(2.0, &[], &mut y);
+        assert!(y.is_empty());
+    }
+
+    #[test]
+    fn batch_loss_matches_scalar_on_odd_dims_and_row_counts() {
+        // row counts straddle the 4-row unroll; dims straddle the
+        // 4-lane dot unroll and the d == 8 specialization
+        for &d in DIMS {
+            for n in [1usize, 2, 3, 4, 5, 7, 8, 17] {
+                let (w, x, y) = random_case(d, n, 1000 + (d * n) as u64);
+                let reg = 0.05 / n as f64;
+                let got = batch_ridge_loss(&x, &y, d, &w, reg);
+                // scalar reference (seed ridge_loss shape)
+                let mut acc = 0.0;
+                for i in 0..n {
+                    let e =
+                        scalar_dot(&w, &x[i * d..(i + 1) * d]) - y[i] as f64;
+                    acc += e * e;
+                }
+                let w2: f64 = w.iter().map(|v| v * v).sum();
+                let want = acc / n as f64 + reg * w2;
+                assert_close(got, want, &format!("batch loss d={d} n={n}"));
+            }
+        }
+    }
+
+    #[test]
+    fn batch_loss_empty_inputs() {
+        let w = [0.5, -0.5, 1.0];
+        assert_eq!(batch_sq_err(&[], &[], 3, &w), 0.0);
+        let w2: f64 = w.iter().map(|v| v * v).sum();
+        assert_eq!(batch_ridge_loss(&[], &[], 3, &w, 0.25), 0.25 * w2);
+    }
+}

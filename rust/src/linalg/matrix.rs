@@ -57,6 +57,11 @@ impl Mat {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Borrow row `i` mutably (kernel accumulation into Gram rows).
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
     /// Matrix product `self * other`.
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");

@@ -1,17 +1,22 @@
 //! Small dense linear algebra (d ≈ 8): matrices, Gram matrices, a Jacobi
-//! symmetric eigensolver and a Gauss–Jordan solver.
+//! symmetric eigensolver, a Gauss–Jordan solver, and the vectorized
+//! f32→f64 compute kernels behind the sweep hot path.
 //!
 //! Used to (i) synthesize datasets whose Gramian spectrum matches the
 //! paper's constants `L = 1.908`, `c = 0.061` exactly, (ii) estimate
-//! `(L, c)` from arbitrary data, and (iii) compute the exact ridge
-//! solution `w*` needed for optimality-gap curves.
+//! `(L, c)` from arbitrary data, (iii) compute the exact ridge
+//! solution `w*` needed for optimality-gap curves, and (iv) evaluate
+//! dot products / axpy updates / batched losses with multi-accumulator
+//! instruction-level parallelism ([`kernels`]).
 
 pub mod gram;
+pub mod kernels;
 pub mod matrix;
 pub mod solve;
 pub mod sym_eig;
 
 pub use gram::gram_matrix;
+pub use kernels::{axpy_f32_f64, batch_ridge_loss, batch_sq_err, dot_f32_f64};
 pub use matrix::Mat;
 pub use solve::solve;
 pub use sym_eig::jacobi_eigen;

@@ -4,8 +4,18 @@
 //! the subcommands in [`edgepipe::cli::commands`]. See `edgepipe help`.
 
 use edgepipe::cli::{dispatch, Args};
+use edgepipe::util::alloc::CountingAllocator;
+
+// Counting allocator so `edgepipe bench` can report allocations-per-run.
+// Cost for every other subcommand: one relaxed fetch_add per
+// alloc/realloc — noise next to malloc itself, and the sweep hot path
+// this binary cares about allocates ~nothing after warm-up. Revisit with
+// per-thread counters if a profile ever shows the shared cache line.
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
 
 fn main() {
+    edgepipe::util::alloc::mark_installed();
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = match Args::parse(&argv) {
         Ok(a) => a,

@@ -10,6 +10,7 @@
 use anyhow::Result;
 
 use crate::data::Dataset;
+use crate::linalg::kernels::{axpy_f32_f64, dot_f32_f64};
 use crate::linalg::{solve, Mat};
 
 use super::traits::PointModel;
@@ -62,10 +63,9 @@ impl RidgeModel {
             }
             return;
         }
-        let mut dot = 0.0;
-        for j in 0..w.len() {
-            dot += w[j] * x[j] as f64;
-        }
+        // general-d path: multi-accumulator dot, then a fused
+        // shrink-and-step sweep
+        let dot = dot_f32_f64(w, x);
         let two_alpha_err = 2.0 * alpha * (dot - y as f64);
         let shrink = 1.0 - alpha * self.reg2;
         for j in 0..w.len() {
@@ -80,24 +80,17 @@ impl PointModel for RidgeModel {
     }
 
     fn loss(&self, w: &[f64], x: &[f32], y: f32) -> f64 {
-        let mut dot = 0.0;
-        for j in 0..self.d {
-            dot += w[j] * x[j] as f64;
-        }
-        let e = dot - y as f64;
+        let e = dot_f32_f64(w, x) - y as f64;
         let w2: f64 = w.iter().map(|v| v * v).sum();
         e * e + self.reg * w2
     }
 
     fn grad_into(&self, w: &[f64], x: &[f32], y: f32, out: &mut [f64]) {
-        let mut dot = 0.0;
+        let e2 = 2.0 * (dot_f32_f64(w, x) - y as f64);
         for j in 0..self.d {
-            dot += w[j] * x[j] as f64;
+            out[j] = self.reg2 * w[j];
         }
-        let e2 = 2.0 * (dot - y as f64);
-        for j in 0..self.d {
-            out[j] = e2 * x[j] as f64 + self.reg2 * w[j];
-        }
+        axpy_f32_f64(e2, x, out);
     }
 
     fn sgd_step(&self, w: &mut [f64], x: &[f32], y: f32, alpha: f64) {
@@ -117,9 +110,8 @@ pub fn ridge_solution(ds: &Dataset, lambda: f64) -> Result<Vec<f64>> {
         for a in 0..d {
             let xa = row[a] as f64;
             xty[a] += xa * y;
-            for b in a..d {
-                xtx[(a, b)] += xa * row[b] as f64;
-            }
+            // upper triangle of the Gram row as one axpy kernel call
+            axpy_f32_f64(xa, &row[a..], &mut xtx.row_mut(a)[a..]);
         }
     }
     for a in 0..d {

@@ -1,8 +1,14 @@
 //! Full-dataset loss/gradient evaluation through the `dataset_loss` /
 //! `dataset_grad` / `batch_step` artifacts (masked fixed-capacity row
-//! buffer; one artifact serves every store size).
+//! buffer; one artifact serves every store size), plus the native
+//! kernel-backed evaluation of the same buffer
+//! ([`PjrtLossEvaluator::loss_native`] /
+//! [`grad_native`](PjrtLossEvaluator::grad_native)) used to cross-check
+//! artifacts and as the offline reference.
 
 use anyhow::{ensure, Result};
+
+use crate::linalg::kernels::{axpy_f32_f64, batch_ridge_loss, dot_f32_f64};
 
 use super::session::{literal_f32, to_vec_f32, RuntimeSession};
 
@@ -103,6 +109,39 @@ impl PjrtLossEvaluator {
         Ok(to_vec_f32(&out[0])?[0] as f64)
     }
 
+    /// Native (f64, batched-kernel) evaluation of the loaded rows —
+    /// the semantics `dataset_loss` computes in f32 on-device. Used to
+    /// cross-check artifacts and as the offline reference path.
+    /// Panics on an empty buffer (where [`loss`](Self::loss) errors).
+    pub fn loss_native(&self, w: &[f64]) -> f64 {
+        assert!(self.count > 0, "loss over an empty buffer");
+        batch_ridge_loss(
+            &self.xx[..self.count * self.d],
+            &self.yy[..self.count],
+            self.d,
+            w,
+            self.reg as f64,
+        )
+    }
+
+    /// Native (f64, kernel) mean ridge gradient over the loaded rows —
+    /// the semantics `dataset_grad` computes in f32 on-device.
+    /// Panics on an empty buffer (where [`grad`](Self::grad) errors).
+    pub fn grad_native(&self, w: &[f64]) -> Vec<f64> {
+        assert!(self.count > 0, "grad over an empty buffer");
+        let mut g = vec![0.0f64; self.d];
+        for (i, &yi) in self.yy[..self.count].iter().enumerate() {
+            let row = &self.xx[i * self.d..(i + 1) * self.d];
+            let e2 = 2.0 * (dot_f32_f64(w, row) - yi as f64);
+            axpy_f32_f64(e2, row, &mut g);
+        }
+        let n = self.count as f64;
+        for (gj, &wj) in g.iter_mut().zip(w) {
+            *gj = *gj / n + self.reg2 as f64 * wj;
+        }
+        g
+    }
+
     /// Empirical ridge gradient over the loaded rows at `w`.
     pub fn grad(&mut self, w: &[f64]) -> Result<Vec<f64>> {
         ensure!(self.count > 0, "grad over an empty buffer");
@@ -144,6 +183,12 @@ mod tests {
         let want = ds.ridge_loss(&w, lambda / ds.n as f64);
         let rel = (got - want).abs() / want;
         assert!(rel < 1e-4, "pjrt {got} vs native {want}");
+        // the kernel-backed buffer evaluation is the same number
+        let native = eval.loss_native(&w);
+        assert!(
+            (native - want).abs() / want < 1e-6,
+            "buffer-native {native} vs dataset {want}"
+        );
     }
 
     #[test]
@@ -158,19 +203,26 @@ mod tests {
         eval.append_rows(&ds.x, &ds.y).unwrap();
         let w = vec![0.3, -0.1, 0.2, 0.4, -0.5, 0.6, -0.7, 0.05];
         let got = eval.grad(&w).unwrap();
-        // native reference
+        // kernel-backed native reference over the same buffer
+        let want = eval.grad_native(&w);
+        // ...which must itself agree with the per-row model gradient
         use crate::model::{PointModel, RidgeModel};
         let model = RidgeModel::new(ds.d, lambda, ds.n);
-        let mut want = vec![0.0; ds.d];
+        let mut by_rows = vec![0.0; ds.d];
         let mut g = vec![0.0; ds.d];
         for i in 0..ds.n {
             model.grad_into(&w, ds.row(i), ds.y[i], &mut g);
             for j in 0..ds.d {
-                want[j] += g[j];
+                by_rows[j] += g[j];
             }
         }
-        for v in want.iter_mut() {
+        for (j, v) in by_rows.iter_mut().enumerate() {
             *v /= ds.n as f64;
+            assert!(
+                (*v - want[j]).abs() < 1e-9,
+                "kernel grad vs per-row grad at {j}: {} vs {v}",
+                want[j]
+            );
         }
         for j in 0..ds.d {
             assert!(

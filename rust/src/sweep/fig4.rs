@@ -6,14 +6,13 @@
 
 use crate::bound::corollary1::BoundParams;
 use crate::bound::optimizer::optimize_block_size;
-use crate::channel::IdealChannel;
-use crate::coordinator::des::{run_des, DesConfig};
-use crate::coordinator::executor::NativeExecutor;
+use crate::coordinator::des::DesConfig;
+use crate::coordinator::scheduler::RunWorkspace;
 use crate::data::Dataset;
 use crate::metrics::curve::mean_curve;
 use crate::metrics::writer::CsvTable;
-use crate::model::RidgeModel;
-use crate::util::pool::{default_threads, parallel_tasks};
+use crate::sweep::scenario::{ScenarioRunner, ScenarioSpec};
+use crate::util::pool::{default_threads, parallel_map_with};
 
 use super::runner::{grid_final_losses, log_grid, McStats};
 
@@ -94,33 +93,51 @@ pub struct Fig4Output {
     pub bound_penalty: f64,
 }
 
-fn mean_loss_curve(
+/// Per-seed loss curves for every plotted block size in ONE flat
+/// `(curve, seed)` fan-out (single pool spawn; workers reuse their
+/// [`RunWorkspace`] — the curve itself is the only per-run copy).
+/// Returns, per plot entry, the mean curve's (grid, values, final).
+fn mean_loss_curves(
     ds: &Dataset,
     base: &DesConfig,
-    n_c: usize,
+    n_cs: &[usize],
     seeds: usize,
     threads: usize,
     points: usize,
-) -> (Vec<f64>, Vec<f64>, f64) {
-    let curves: Vec<Vec<(f64, f64)>> = parallel_tasks(seeds, threads, |s| {
-        let cfg = DesConfig {
-            n_c,
-            seed: base.seed.wrapping_add(s as u64),
-            loss_every: (base.t_budget / base.tau_p / 400.0).max(1.0) as usize,
-            record_blocks: false,
-            ..base.clone()
-        };
-        let mut exec = NativeExecutor::new(
-            RidgeModel::new(ds.d, cfg.lambda, ds.n),
-            cfg.alpha,
-        );
-        run_des(ds, &cfg, &mut IdealChannel, &mut exec)
-            .expect("DES run failed")
-            .curve
-    });
-    let (grid, mean) = mean_curve(&curves, base.t_budget, points);
-    let final_loss = *mean.last().unwrap();
-    (grid, mean, final_loss)
+) -> Vec<(Vec<f64>, Vec<f64>, f64)> {
+    let runner = ScenarioRunner::new(ScenarioSpec::paper(), ds);
+    let jobs: Vec<(usize, u64)> = n_cs
+        .iter()
+        .flat_map(|&n_c| (0..seeds as u64).map(move |s| (n_c, s)))
+        .collect();
+    let curves = parallel_map_with(
+        &jobs,
+        threads,
+        RunWorkspace::new,
+        |ws, &(n_c, s)| {
+            let cfg = DesConfig {
+                n_c,
+                seed: base.seed.wrapping_add(s),
+                loss_every: (base.t_budget / base.tau_p / 400.0).max(1.0)
+                    as usize,
+                record_blocks: false,
+                ..base.clone()
+            };
+            runner.run_with(ws, &cfg).expect("DES run failed");
+            ws.curve().to_vec()
+        },
+    );
+    (0..n_cs.len())
+        .map(|i| {
+            let (grid, mean) = mean_curve(
+                &curves[i * seeds..(i + 1) * seeds],
+                base.t_budget,
+                points,
+            );
+            let final_loss = *mean.last().unwrap();
+            (grid, mean, final_loss)
+        })
+        .collect()
 }
 
 /// Produce the full Fig. 4 dataset.
@@ -172,18 +189,21 @@ pub fn fig4_data(
             plot.push((format!("n_c={nc}"), nc));
         }
     }
+    let plot_n_cs: Vec<usize> = plot.iter().map(|&(_, nc)| nc).collect();
+    let per_curve = mean_loss_curves(
+        ds,
+        &base,
+        &plot_n_cs,
+        cfg.seeds,
+        threads,
+        cfg.curve_points,
+    );
     let mut curves = Vec::new();
     let mut bound_final = f64::NAN;
     let mut exp_final = f64::NAN;
-    for (label, nc) in plot {
-        let (grid, mean, final_loss) = mean_loss_curve(
-            ds,
-            &base,
-            nc,
-            cfg.seeds,
-            threads,
-            cfg.curve_points,
-        );
+    for ((label, nc), (grid, mean, final_loss)) in
+        plot.into_iter().zip(per_curve)
+    {
         if label.starts_with("bound") {
             bound_final = final_loss;
         }

@@ -6,11 +6,21 @@
 //! The historical [`mc_final_loss`] / [`grid_final_losses`] entry points
 //! are the paper scenario special case and keep their exact seed
 //! semantics.
+//!
+//! Hot-path shape: every sweep is ONE flat `(point, seed)` fan-out over
+//! the pool — no pool per grid point — and every worker drives its jobs
+//! through a long-lived [`RunWorkspace`]
+//! (`ScenarioRunner::run_with`), so steady state performs no heap
+//! allocation per run. `rust/benches/bench_sweep.rs` tracks the
+//! resulting runs/sec against the pre-workspace baseline.
 
 use crate::coordinator::des::DesConfig;
+use crate::coordinator::scheduler::RunWorkspace;
 use crate::data::Dataset;
 use crate::sweep::scenario::{ScenarioRunner, ScenarioSpec};
-use crate::util::pool::{default_threads, parallel_map, parallel_tasks};
+use crate::util::pool::{
+    default_threads, parallel_map_with, parallel_tasks_with,
+};
 use crate::util::stats::Welford;
 
 /// Mean/std of a Monte-Carlo estimate.
@@ -57,12 +67,13 @@ pub fn mc_scenario_loss(
 ) -> McStats {
     let threads = if threads == 0 { default_threads() } else { threads };
     let runner = ScenarioRunner::new(spec.clone(), ds);
-    let losses = parallel_tasks(seeds, threads, |s| {
-        runner
-            .run(&sweep_cfg(base, s as u64))
-            .expect("scenario run failed")
-            .final_loss
-    });
+    let losses =
+        parallel_tasks_with(seeds, threads, RunWorkspace::new, |ws, s| {
+            runner
+                .run_with(ws, &sweep_cfg(base, s as u64))
+                .expect("scenario run failed")
+                .final_loss
+        });
     McStats::of(&losses)
 }
 
@@ -96,12 +107,13 @@ pub fn scenario_grid(
     let jobs: Vec<(usize, u64)> = (0..specs.len())
         .flat_map(|i| (0..seeds as u64).map(move |s| (i, s)))
         .collect();
-    let losses = parallel_map(&jobs, threads, |&(i, s)| {
-        runners[i]
-            .run(&sweep_cfg(base, s))
-            .expect("scenario run failed")
-            .final_loss
-    });
+    let losses =
+        parallel_map_with(&jobs, threads, RunWorkspace::new, |ws, &(i, s)| {
+            runners[i]
+                .run_with(ws, &sweep_cfg(base, s))
+                .expect("scenario run failed")
+                .final_loss
+        });
     specs
         .iter()
         .enumerate()
@@ -113,6 +125,11 @@ pub fn scenario_grid(
 
 /// Final-loss statistics for each block size in `n_cs` (the experimental
 /// optimum finder behind Fig. 4).
+///
+/// One flat `(n_c, seed)` fan-out serves the whole grid — a single pool
+/// spawn, workers' workspaces warm across grid points, and uneven
+/// per-`n_c` costs balance. Per-seed configs are exactly the historical
+/// per-point `mc_final_loss` ones, so results are unchanged.
 pub fn grid_final_losses(
     ds: &Dataset,
     base: &DesConfig,
@@ -120,10 +137,28 @@ pub fn grid_final_losses(
     seeds: usize,
     threads: usize,
 ) -> Vec<(usize, McStats)> {
+    let threads = if threads == 0 { default_threads() } else { threads };
+    let runner = ScenarioRunner::new(ScenarioSpec::paper(), ds);
+    let jobs: Vec<(usize, u64)> = n_cs
+        .iter()
+        .flat_map(|&n_c| (0..seeds as u64).map(move |s| (n_c, s)))
+        .collect();
+    let losses = parallel_map_with(
+        &jobs,
+        threads,
+        RunWorkspace::new,
+        |ws, &(n_c, s)| {
+            let cfg = DesConfig { n_c, ..sweep_cfg(base, s) };
+            runner
+                .run_with(ws, &cfg)
+                .expect("scenario run failed")
+                .final_loss
+        },
+    );
     n_cs.iter()
-        .map(|&n_c| {
-            let cfg = DesConfig { n_c, ..base.clone() };
-            (n_c, mc_final_loss(ds, &cfg, seeds, threads))
+        .enumerate()
+        .map(|(i, &n_c)| {
+            (n_c, McStats::of(&losses[i * seeds..(i + 1) * seeds]))
         })
         .collect()
 }

@@ -20,18 +20,20 @@
 use anyhow::{bail, Context, Result};
 
 use crate::channel::{
-    Channel, ErasureChannel, IdealChannel, RateLimitedChannel,
+    Channel, Delivery, ErasureChannel, IdealChannel, RateLimitedChannel,
 };
 use crate::coordinator::des::DesConfig;
 use crate::coordinator::run::RunResult;
 use crate::coordinator::scheduler::{
-    run_schedule, BlockPolicy, FixedPolicy, OnlineArrivalSource,
-    OverlapMode, RoundRobinSource, SingleDeviceSource,
+    run_schedule_with, BlockPolicy, FixedPolicy, OnlineArrivalSource,
+    OverlapMode, RoundRobinSource, RunStats, RunWorkspace,
+    SingleDeviceSource,
 };
 use crate::data::Dataset;
 use crate::extensions::adaptive::{DeadlineAwareSchedule, WarmupSchedule};
 use crate::extensions::multi_device::shard_dataset;
 use crate::model::RidgeModel;
+use crate::util::rng::Pcg32;
 
 /// Which channel carries the blocks.
 #[derive(Clone, Debug, PartialEq)]
@@ -84,15 +86,23 @@ impl ChannelSpec {
         }
     }
 
-    /// Instantiate a fresh channel (stateless across runs).
-    pub fn build(&self) -> Box<dyn Channel> {
+    /// Instantiate a fresh channel on the stack (stateless across runs;
+    /// the sweep hot path builds one per run without a heap allocation).
+    pub fn make(&self) -> ScenarioChannel {
         match *self {
-            ChannelSpec::Ideal => Box::new(IdealChannel),
-            ChannelSpec::Erasure { p } => Box::new(ErasureChannel::new(p)),
-            ChannelSpec::Rate { rate, p } => Box::new(
+            ChannelSpec::Ideal => ScenarioChannel::Ideal(IdealChannel),
+            ChannelSpec::Erasure { p } => {
+                ScenarioChannel::Erasure(ErasureChannel::new(p))
+            }
+            ChannelSpec::Rate { rate, p } => ScenarioChannel::Rate(
                 RateLimitedChannel::new(rate, ErasureChannel::new(p)),
             ),
         }
+    }
+
+    /// Boxed convenience form of [`make`](Self::make).
+    pub fn build(&self) -> Box<dyn Channel> {
+        Box::new(self.make())
     }
 
     pub fn label(&self) -> String {
@@ -100,6 +110,37 @@ impl ChannelSpec {
             ChannelSpec::Ideal => "ideal".to_string(),
             ChannelSpec::Erasure { p } => format!("erasure:{p}"),
             ChannelSpec::Rate { rate, p } => format!("rate:{rate}:{p}"),
+        }
+    }
+}
+
+/// A [`ChannelSpec`]'s channel, built by value (no `Box`) so the sweep
+/// hot path stays allocation-free.
+pub enum ScenarioChannel {
+    Ideal(IdealChannel),
+    Erasure(ErasureChannel),
+    Rate(RateLimitedChannel<ErasureChannel>),
+}
+
+impl Channel for ScenarioChannel {
+    fn transmit(
+        &mut self,
+        sent_at: f64,
+        duration: f64,
+        rng: &mut Pcg32,
+    ) -> Delivery {
+        match self {
+            ScenarioChannel::Ideal(c) => c.transmit(sent_at, duration, rng),
+            ScenarioChannel::Erasure(c) => c.transmit(sent_at, duration, rng),
+            ScenarioChannel::Rate(c) => c.transmit(sent_at, duration, rng),
+        }
+    }
+
+    fn describe(&self) -> String {
+        match self {
+            ScenarioChannel::Ideal(c) => c.describe(),
+            ScenarioChannel::Erasure(c) => c.describe(),
+            ScenarioChannel::Rate(c) => c.describe(),
         }
     }
 }
@@ -182,28 +223,40 @@ impl PolicySpec {
         }
     }
 
-    /// Instantiate the block policy for a dataset of `n` samples.
-    pub fn build(&self, cfg: &DesConfig, n: usize) -> Box<dyn BlockPolicy> {
+    /// Instantiate the block policy on the stack for a dataset of `n`
+    /// samples (no `Box` — the sweep hot path builds one per run).
+    pub fn make(&self, cfg: &DesConfig, n: usize) -> ScenarioPolicy {
         let inherit = |v: usize| {
             let v = if v == 0 { cfg.n_c } else { v };
             v.clamp(1, n.max(1))
         };
         match *self {
-            PolicySpec::Fixed { n_c } => Box::new(FixedPolicy(inherit(n_c))),
+            PolicySpec::Fixed { n_c } => {
+                ScenarioPolicy::Fixed(FixedPolicy(inherit(n_c)))
+            }
             PolicySpec::Warmup { start, growth, cap } => {
                 let cap = inherit(cap).max(start);
-                Box::new(WarmupSchedule::new(start, growth, cap))
+                ScenarioPolicy::Warmup(WarmupSchedule::new(start, growth, cap))
             }
-            PolicySpec::Deadline { frac } => Box::new(DeadlineAwareSchedule {
-                t_budget: cfg.t_budget,
-                n_o: cfg.n_o,
-                aggressiveness: frac,
-            }),
+            PolicySpec::Deadline { frac } => {
+                ScenarioPolicy::Deadline(DeadlineAwareSchedule {
+                    t_budget: cfg.t_budget,
+                    n_o: cfg.n_o,
+                    aggressiveness: frac,
+                })
+            }
             PolicySpec::Sequential { n_c } => {
-                Box::new(FixedPolicy(inherit(n_c)))
+                ScenarioPolicy::Fixed(FixedPolicy(inherit(n_c)))
             }
-            PolicySpec::AllFirst => Box::new(FixedPolicy(n.max(1))),
+            PolicySpec::AllFirst => {
+                ScenarioPolicy::Fixed(FixedPolicy(n.max(1)))
+            }
         }
+    }
+
+    /// Boxed convenience form of [`make`](Self::make).
+    pub fn build(&self, cfg: &DesConfig, n: usize) -> Box<dyn BlockPolicy> {
+        Box::new(self.make(cfg, n))
     }
 
     pub fn label(&self) -> String {
@@ -220,6 +273,35 @@ impl PolicySpec {
             PolicySpec::Sequential { n_c: 0 } => "sequential".to_string(),
             PolicySpec::Sequential { n_c } => format!("sequential:{n_c}"),
             PolicySpec::AllFirst => "allfirst".to_string(),
+        }
+    }
+}
+
+/// A [`PolicySpec`]'s block policy, built by value (no `Box`) so the
+/// sweep hot path stays allocation-free.
+pub enum ScenarioPolicy {
+    Fixed(FixedPolicy),
+    Warmup(WarmupSchedule),
+    Deadline(DeadlineAwareSchedule),
+}
+
+impl BlockPolicy for ScenarioPolicy {
+    fn next_n_c(&mut self, block: usize, remaining: usize, t_now: f64)
+        -> usize {
+        match self {
+            ScenarioPolicy::Fixed(p) => p.next_n_c(block, remaining, t_now),
+            ScenarioPolicy::Warmup(p) => p.next_n_c(block, remaining, t_now),
+            ScenarioPolicy::Deadline(p) => {
+                p.next_n_c(block, remaining, t_now)
+            }
+        }
+    }
+
+    fn name(&self) -> String {
+        match self {
+            ScenarioPolicy::Fixed(p) => p.name(),
+            ScenarioPolicy::Warmup(p) => p.name(),
+            ScenarioPolicy::Deadline(p) => p.name(),
         }
     }
 }
@@ -400,7 +482,28 @@ impl<'a> ScenarioRunner<'a> {
     }
 
     /// One deterministic run of the scenario on the native backend.
+    /// Convenience wrapper over [`run_with`](Self::run_with) with a
+    /// fresh [`RunWorkspace`].
     pub fn run(&self, cfg: &DesConfig) -> Result<RunResult> {
+        let mut ws = RunWorkspace::new();
+        let stats = self.run_with(&mut ws, cfg)?;
+        Ok(ws.into_result(stats))
+    }
+
+    /// One deterministic run against a reusable [`RunWorkspace`] — the
+    /// sweep hot path. Identical semantics and bit-identical outputs to
+    /// [`run`](Self::run) (asserted in `rust/tests/scenario_parity.rs`).
+    /// Channel, policy and executor are built on the stack and every
+    /// buffer (frame, store, weights, index scratch, event log) is
+    /// recycled through `ws`, so single-device and online-arrival runs
+    /// perform zero heap allocations after warm-up; the multi-device
+    /// path still makes O(k) small allocations per run for the lane
+    /// table (the per-lane index buffers themselves are recycled).
+    pub fn run_with(
+        &self,
+        ws: &mut RunWorkspace,
+        cfg: &DesConfig,
+    ) -> Result<RunStats> {
         let cfg = DesConfig {
             store_capacity: self
                 .spec
@@ -408,8 +511,8 @@ impl<'a> ScenarioRunner<'a> {
                 .or(cfg.store_capacity),
             ..cfg.clone()
         };
-        let mut channel = self.spec.channel.build();
-        let mut policy = self.spec.policy.build(&cfg, self.ds.n);
+        let mut channel = self.spec.channel.make();
+        let mut policy = self.spec.policy.make(&cfg, self.ds.n);
         let mode = self.spec.policy.overlap();
         let mut exec = crate::coordinator::executor::NativeExecutor::new(
             RidgeModel::new(self.ds.d, cfg.lambda, self.ds.n),
@@ -417,42 +520,62 @@ impl<'a> ScenarioRunner<'a> {
         );
         match self.spec.traffic {
             TrafficSpec::Devices(1) => {
-                let mut source = SingleDeviceSource::new(self.ds, cfg.seed);
-                run_schedule(
+                let mut source = SingleDeviceSource::with_buf(
+                    self.ds,
+                    cfg.seed,
+                    std::mem::take(&mut ws.src_buf),
+                );
+                let stats = run_schedule_with(
+                    ws,
                     self.ds,
                     &cfg,
                     &mut source,
-                    policy.as_mut(),
+                    &mut policy,
                     mode,
-                    channel.as_mut(),
+                    &mut channel,
                     &mut exec,
-                )
+                );
+                ws.src_buf = source.into_buf();
+                stats
             }
             TrafficSpec::Devices(_) => {
-                let mut source =
-                    RoundRobinSource::new(&self.shards, cfg.seed);
-                run_schedule(
+                let mut source = RoundRobinSource::with_bufs(
+                    &self.shards,
+                    cfg.seed,
+                    std::mem::take(&mut ws.lane_bufs),
+                );
+                let stats = run_schedule_with(
+                    ws,
                     self.ds,
                     &cfg,
                     &mut source,
-                    policy.as_mut(),
+                    &mut policy,
                     mode,
-                    channel.as_mut(),
+                    &mut channel,
                     &mut exec,
-                )
+                );
+                ws.lane_bufs = source.into_bufs();
+                stats
             }
             TrafficSpec::Online { rate } => {
-                let mut source =
-                    OnlineArrivalSource::new(self.ds, rate, cfg.seed);
-                run_schedule(
+                let mut source = OnlineArrivalSource::with_buf(
+                    self.ds,
+                    rate,
+                    cfg.seed,
+                    std::mem::take(&mut ws.src_buf),
+                );
+                let stats = run_schedule_with(
+                    ws,
                     self.ds,
                     &cfg,
                     &mut source,
-                    policy.as_mut(),
+                    &mut policy,
                     mode,
-                    channel.as_mut(),
+                    &mut channel,
                     &mut exec,
-                )
+                );
+                ws.src_buf = source.into_buf();
+                stats
             }
         }
     }

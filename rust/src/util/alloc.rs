@@ -1,0 +1,76 @@
+//! A counting global allocator for allocation-budget benchmarks.
+//!
+//! The sweep engine's contract is *zero heap allocations per run after
+//! warm-up*; [`CountingAllocator`] lets `edgepipe bench` and
+//! `rust/benches/bench_sweep.rs` measure that instead of asserting it.
+//! Binaries opt in with:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: edgepipe::util::alloc::CountingAllocator =
+//!     edgepipe::util::alloc::CountingAllocator;
+//! ```
+//!
+//! and call [`mark_installed`] at startup so [`allocation_count`] can
+//! distinguish "zero allocations" from "not counting". The counter is a
+//! single relaxed atomic increment per `alloc`/`realloc` — noise next to
+//! the allocation itself.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+/// `System` allocator wrapper counting `alloc`/`realloc` calls.
+pub struct CountingAllocator;
+
+// SAFETY: defers entirely to `System`; the counter has no effect on the
+// returned memory.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Declare that [`CountingAllocator`] is this process's global
+/// allocator (call once from `main`).
+pub fn mark_installed() {
+    INSTALLED.store(true, Ordering::Relaxed);
+}
+
+/// Allocations counted so far, or `None` when the counting allocator is
+/// not installed in this process (library consumers, tests).
+pub fn allocation_count() -> Option<u64> {
+    if INSTALLED.load(Ordering::Relaxed) {
+        Some(ALLOCATIONS.load(Ordering::Relaxed))
+    } else {
+        None
+    }
+}
+
+/// Allocations performed while running `f`, when counting is available.
+pub fn allocations_during<R>(f: impl FnOnce() -> R) -> (R, Option<u64>) {
+    let before = allocation_count();
+    let out = f();
+    let delta = match (before, allocation_count()) {
+        (Some(b), Some(a)) => Some(a - b),
+        _ => None,
+    };
+    (out, delta)
+}

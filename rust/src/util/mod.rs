@@ -2,6 +2,7 @@
 //! `xla` + `anyhow`, so RNG, JSON, stats, threading and time formatting are
 //! all implemented and tested here).
 
+pub mod alloc;
 pub mod json;
 pub mod pool;
 pub mod rng;

@@ -15,6 +15,7 @@ use edgepipe::channel::{Channel, ErasureChannel, IdealChannel};
 use edgepipe::coordinator::des::{run_des, DesConfig};
 use edgepipe::coordinator::executor::NativeExecutor;
 use edgepipe::coordinator::run::RunResult;
+use edgepipe::coordinator::RunWorkspace;
 use edgepipe::data::synth::{synth_calhousing, SynthSpec};
 use edgepipe::data::Dataset;
 use edgepipe::extensions::adaptive::{run_scheduled, WarmupSchedule};
@@ -231,6 +232,114 @@ fn erasure_scenario_matches_run_des_on_erasure_channel() {
         let via_spec = ScenarioRunner::new(spec, &ds).run(&cfg).unwrap();
         assert_identical(&des, &via_spec, "erasure channel via spec");
     });
+}
+
+#[test]
+fn workspace_reuse_is_bit_identical_to_fresh_runs() {
+    // ONE workspace threaded through successive seeds AND scenario
+    // kinds (single-device, sequential, erasure, warmup, multi-device,
+    // online arrivals, bounded store) must reproduce a fresh `run()`
+    // bit-for-bit every time — the purity contract of `run_with`.
+    let ds = synth_calhousing(&SynthSpec { n: 360, ..Default::default() });
+    let base = DesConfig {
+        alpha: 1e-3,
+        collect_snapshots: true,
+        event_capacity: 4096,
+        ..DesConfig::paper(40, 8.0, 700.0, 11)
+    };
+    let paper = ScenarioSpec::paper();
+    let specs = vec![
+        paper.clone(),
+        ScenarioSpec {
+            policy: PolicySpec::Sequential { n_c: 0 },
+            ..paper.clone()
+        },
+        ScenarioSpec {
+            channel: ChannelSpec::Erasure { p: 0.15 },
+            ..paper.clone()
+        },
+        ScenarioSpec {
+            policy: PolicySpec::Warmup { start: 8, growth: 2.0, cap: 0 },
+            ..paper.clone()
+        },
+        ScenarioSpec { traffic: TrafficSpec::Devices(3), ..paper.clone() },
+        ScenarioSpec {
+            traffic: TrafficSpec::Online { rate: 1.5 },
+            ..paper.clone()
+        },
+        ScenarioSpec { store_capacity: Some(120), ..paper },
+    ];
+    let mut ws = RunWorkspace::new();
+    for spec in specs {
+        let runner = ScenarioRunner::new(spec.clone(), &ds);
+        for s in 0..3u64 {
+            let cfg =
+                DesConfig { seed: base.seed.wrapping_add(s), ..base.clone() };
+            let fresh = runner.run(&cfg).unwrap();
+            let stats = runner.run_with(&mut ws, &cfg).unwrap();
+            let what = format!("{} seed {s}", spec.label());
+            assert_eq!(
+                stats.final_loss, fresh.final_loss,
+                "{what}: final_loss"
+            );
+            assert_eq!(ws.final_w(), &fresh.final_w[..], "{what}: final_w");
+            assert_eq!(ws.curve(), &fresh.curve[..], "{what}: curve");
+            assert_eq!(ws.events(), &fresh.events[..], "{what}: events");
+            assert_eq!(stats.updates, fresh.updates, "{what}: updates");
+            assert_eq!(
+                stats.blocks_sent, fresh.blocks_sent,
+                "{what}: blocks_sent"
+            );
+            assert_eq!(
+                stats.blocks_delivered, fresh.blocks_delivered,
+                "{what}: blocks_delivered"
+            );
+            assert_eq!(
+                stats.samples_delivered, fresh.samples_delivered,
+                "{what}: samples_delivered"
+            );
+            assert_eq!(
+                stats.retransmissions, fresh.retransmissions,
+                "{what}: retransmissions"
+            );
+            assert_eq!(stats.case, fresh.case, "{what}: case");
+            assert_eq!(
+                ws.snapshots().len(),
+                fresh.snapshots.len(),
+                "{what}: snapshot count"
+            );
+            for (a, b) in ws.snapshots().iter().zip(&fresh.snapshots) {
+                assert_eq!(a.w_end, b.w_end, "{what}: snapshot w_end");
+                assert_eq!(
+                    a.arrived_at, b.arrived_at,
+                    "{what}: snapshot time"
+                );
+                assert_eq!(a.x, b.x, "{what}: snapshot x");
+                assert_eq!(a.y, b.y, "{what}: snapshot y");
+            }
+        }
+    }
+}
+
+#[test]
+fn workspace_into_result_equals_fresh_run() {
+    // a workspace that already served other runs still assembles the
+    // exact RunResult for its final run
+    let ds = synth_calhousing(&SynthSpec { n: 300, ..Default::default() });
+    let cfg = DesConfig {
+        event_capacity: 4096,
+        ..DesConfig::paper(30, 5.0, 600.0, 5)
+    };
+    let runner = ScenarioRunner::new(ScenarioSpec::paper(), &ds);
+    let mut ws = RunWorkspace::new();
+    for s in 0..2u64 {
+        let warm = DesConfig { seed: cfg.seed.wrapping_add(s), ..cfg.clone() };
+        runner.run_with(&mut ws, &warm).unwrap();
+    }
+    let stats = runner.run_with(&mut ws, &cfg).unwrap();
+    let rebuilt = ws.into_result(stats);
+    let fresh = runner.run(&cfg).unwrap();
+    assert_identical(&fresh, &rebuilt, "into_result after reuse");
 }
 
 #[test]
