@@ -8,7 +8,7 @@
 
 use crate::data::Dataset;
 use crate::linalg::{gram_matrix, jacobi_eigen};
-use crate::model::{ridge_solution, RidgeModel};
+use crate::model::{ridge_solution, LogisticModel, PointModel, RidgeModel};
 use crate::sgd::{SgdEngine, StoreView};
 use crate::util::rng::Pcg32;
 
@@ -44,14 +44,30 @@ pub fn estimate_constants(
     // pilot run for D
     let w_star = ridge_solution(ds, lambda).expect("ridge solve");
     let model = RidgeModel::new(ds.d, lambda, ds.n);
-    let engine = SgdEngine::new(alpha);
     let mut rng = Pcg32::new(seed, 303);
-    let mut w: Vec<f64> = (0..ds.d).map(|_| rng.next_gaussian()).collect();
-    let store = StoreView::new(&ds.x, &ds.y, ds.d);
+    let w: Vec<f64> = (0..ds.d).map(|_| rng.next_gaussian()).collect();
+    let d_diam =
+        pilot_diameter(&model, alpha, ds, &w_star, w, pilot_updates, &mut rng);
+    BoundConstants { big_l, c, d_diam }
+}
 
+/// `D` estimate shared by the per-workload constant estimators: run
+/// `pilot_updates` SGD steps from `w`, sampling `‖w − w_ref‖` every 256
+/// updates, and return twice the largest radius seen (a diameter).
+fn pilot_diameter<M: PointModel>(
+    model: &M,
+    alpha: f64,
+    ds: &Dataset,
+    w_ref: &[f64],
+    mut w: Vec<f64>,
+    pilot_updates: usize,
+    rng: &mut Pcg32,
+) -> f64 {
+    let engine = SgdEngine::new(alpha);
+    let store = StoreView::new(&ds.x, &ds.y, ds.d);
     let dist = |w: &[f64]| -> f64 {
         w.iter()
-            .zip(&w_star)
+            .zip(w_ref)
             .map(|(a, b)| (a - b) * (a - b))
             .sum::<f64>()
             .sqrt()
@@ -61,11 +77,59 @@ pub fn estimate_constants(
     let mut done = 0;
     while done < pilot_updates {
         let k = chunk.min(pilot_updates - done);
-        engine.run_updates(&model, &mut w, store, k, &mut rng);
+        engine.run_updates(model, &mut w, store, k, rng);
         max_radius = max_radius.max(dist(&w));
         done += k;
     }
-    BoundConstants { big_l, c, d_diam: 2.0 * max_radius }
+    2.0 * max_radius
+}
+
+/// Conservative `(L, c, D)` for the logistic workload (labels in
+/// `{0, 1}`).
+///
+/// The logistic empirical-risk Hessian is
+/// `H(w) = (1/N) Σ σ'(wᵀx_i) x_i x_iᵀ + (2λ/N) I` with `σ' ≤ 1/4`, so
+/// `L = λ_max(Gram)/4 + 2λ/N` is a uniform smoothness bound; the only
+/// curvature guaranteed everywhere comes from the regularizer, so
+/// `c = 2λ/N` (valid, very loose — the resulting Corollary-1 values are
+/// upper bounds, not tight predictions). `D` comes from a pilot SGD run
+/// against a longer reference run's final iterate, mirroring
+/// [`estimate_constants`].
+pub fn estimate_logistic_constants(
+    ds: &Dataset,
+    lambda: f64,
+    alpha: f64,
+    pilot_updates: usize,
+    seed: u64,
+) -> BoundConstants {
+    let g = gram_matrix(&ds.x, ds.n, ds.d);
+    let eig = jacobi_eigen(&g);
+    let reg2 = 2.0 * lambda / ds.n as f64;
+    let big_l = 0.25 * eig.values[ds.d - 1] + reg2;
+    let c = reg2;
+
+    let model = LogisticModel::new(ds.d, lambda, ds.n);
+    let engine = SgdEngine::new(alpha);
+    let store = StoreView::new(&ds.x, &ds.y, ds.d);
+
+    // reference iterate: a longer run from the same init family
+    let mut ref_rng = Pcg32::new(seed, 304);
+    let mut w_ref: Vec<f64> =
+        (0..ds.d).map(|_| ref_rng.next_gaussian()).collect();
+    engine.run_updates(
+        &model,
+        &mut w_ref,
+        store,
+        4 * pilot_updates.max(1),
+        &mut ref_rng,
+    );
+
+    // pilot trajectory radius around the reference
+    let mut rng = Pcg32::new(seed, 303);
+    let w: Vec<f64> = (0..ds.d).map(|_| rng.next_gaussian()).collect();
+    let d_diam =
+        pilot_diameter(&model, alpha, ds, &w_ref, w, pilot_updates, &mut rng);
+    BoundConstants { big_l, c, d_diam }
 }
 
 #[cfg(test)]
@@ -98,5 +162,22 @@ mod tests {
             .sqrt();
         let k = estimate_constants(&ds, lambda, 1e-4, 100, 9);
         assert!(k.d_diam >= 2.0 * init_dist - 1e-9);
+    }
+
+    #[test]
+    fn logistic_constants_are_conservative() {
+        use crate::data::classify::{synth_logistic, LogitSpec};
+        let ds = synth_logistic(&LogitSpec { n: 800, ..Default::default() });
+        let lambda = 0.05;
+        let k = estimate_logistic_constants(&ds, lambda, 1e-2, 500, 3);
+        let ridge_like = estimate_constants(&ds, lambda, 1e-2, 1, 3);
+        // σ' ≤ 1/4 relates the two smoothness estimates:
+        // L_logit = λ_max(G)/4 + 2λ/N vs L_ridge = 2·λ_max(G) + 2λ/N
+        let reg2 = 2.0 * lambda / ds.n as f64;
+        let expected = (ridge_like.big_l - reg2) / 8.0 + reg2;
+        assert!((k.big_l - expected).abs() < 1e-9, "L = {}", k.big_l);
+        assert!((k.c - reg2).abs() < 1e-15, "c = {}", k.c);
+        assert!(k.d_diam > 0.0 && k.d_diam.is_finite());
+        assert!(k.big_l > k.c);
     }
 }

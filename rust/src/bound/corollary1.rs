@@ -50,6 +50,23 @@ impl BoundParams {
         }
     }
 
+    /// Parameters from estimated data constants with the paper's
+    /// variance model `M = M_G = 1` (the form every CLI/test consumer
+    /// uses; see `bound::constants`).
+    pub fn from_constants(
+        alpha: f64,
+        k: &super::constants::BoundConstants,
+    ) -> BoundParams {
+        BoundParams {
+            alpha,
+            big_l: k.big_l,
+            c: k.c,
+            m: 1.0,
+            m_g: 1.0,
+            d_diam: k.d_diam,
+        }
+    }
+
     /// γ = α(1 − ½αLM_G). Positive whenever α < 2/(L·M_G).
     pub fn gamma(&self) -> f64 {
         self.alpha * (1.0 - 0.5 * self.alpha * self.big_l * self.m_g)

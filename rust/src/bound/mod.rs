@@ -1,13 +1,23 @@
-//! Theorem 1 / Corollary 1: the convergence bound and the block-size
-//! optimizer built on it (the paper's analytical contribution).
+//! Theorem 1 / Corollary 1: the convergence bound, the block-size
+//! optimizer built on it (the paper's analytical contribution), and the
+//! Monte-Carlo validation layer ([`validate`]) that checks the
+//! recommendation against measured optimality gaps on non-ideal
+//! channels and the logistic workload.
 
 pub mod constants;
 pub mod corollary1;
 pub mod optimizer;
 pub mod sensitivity;
 pub mod theorem1;
+pub mod validate;
 
-pub use constants::{estimate_constants, BoundConstants};
+pub use constants::{
+    estimate_constants, estimate_logistic_constants, BoundConstants,
+};
 pub use corollary1::{corollary1_bound, BoundParams};
 pub use optimizer::{optimize_block_size, BoundOptimum};
 pub use sensitivity::{max_regret, sensitivity_sweep, SensitivityRow};
+pub use validate::{
+    bootstrap_mean_upper, check_recommendation, logistic_reference_loss,
+    recommend_block_size, CheckConfig, RecommendationCheck,
+};

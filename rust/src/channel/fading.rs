@@ -1,0 +1,291 @@
+//! Gilbert–Elliott two-state fading channel (bursty wireless links).
+//!
+//! Real edge uplinks are not i.i.d.: losses cluster in fades. The
+//! classic Gilbert–Elliott model captures this with a two-state Markov
+//! chain — a *good* state and a *bad* (fade) state, each with its own
+//! relative rate and per-attempt erasure probability. The chain is
+//! clocked **per packet**: one transition draw at the start of every
+//! [`transmit`](Channel::transmit) call, then the whole packet
+//! (including its ARQ retransmissions) experiences the resulting
+//! state's link parameters.
+//!
+//! Two invariants matter for the test harness:
+//!
+//! * **Degenerate chains consume no transition randomness.** The
+//!   transition uniform is only drawn when the outcome is actually
+//!   random (`p_flip > 0`), so a channel that can never leave the good
+//!   state (`p_gb = 0`) consumes the `STREAM_CHANNEL` RNG draw-for-draw
+//!   like [`ErasureChannel`] with `p_loss = p_loss_good`. With the
+//!   additional precondition `rate_good = 1` (the erasure channel is
+//!   unit-rate, and arrivals scale by `1/rate`), the resulting event
+//!   traces are bit-identical (asserted in
+//!   `rust/tests/golden_traces.rs`).
+//! * **ARQ semantics match [`ErasureChannel`] exactly** (one uniform per
+//!   attempt, same 1000-attempt cap), so the erasure channel is the
+//!   `p_gb = 0` special case, not a separate code path to keep in sync.
+
+use crate::util::rng::Pcg32;
+
+use super::{Channel, Delivery};
+
+/// One state's link parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkState {
+    /// Relative rate (1.0 = the paper's one-sample-per-unit link).
+    pub rate: f64,
+    /// Per-attempt erasure probability in [0, 1).
+    pub p_loss: f64,
+}
+
+impl LinkState {
+    pub fn new(rate: f64, p_loss: f64) -> LinkState {
+        assert!(rate > 0.0, "state rate must be positive, got {rate}");
+        assert!(
+            (0.0..1.0).contains(&p_loss),
+            "state p_loss must be in [0,1), got {p_loss}"
+        );
+        LinkState { rate, p_loss }
+    }
+
+    /// Expected channel occupancy per unit of nominal duration in this
+    /// state: E[attempts]/rate = 1/((1−p)·rate).
+    pub fn expected_slowdown(&self) -> f64 {
+        1.0 / ((1.0 - self.p_loss) * self.rate)
+    }
+}
+
+/// Gilbert–Elliott channel: good/bad [`LinkState`]s, per-packet Markov
+/// transitions, stop-and-wait ARQ within each packet.
+#[derive(Clone, Copy, Debug)]
+pub struct GilbertElliottChannel {
+    /// P(good → bad), sampled once per packet while in the good state.
+    pub p_gb: f64,
+    /// P(bad → good), sampled once per packet while in the bad state.
+    pub p_bg: f64,
+    /// Link parameters while the channel is good.
+    pub good: LinkState,
+    /// Link parameters while the channel is in a fade.
+    pub bad: LinkState,
+    /// Cap on ARQ attempts (same guard as [`ErasureChannel`]; 0 = ∞).
+    pub max_attempts: u32,
+    /// Current state (packets start in `good` for a fresh channel).
+    in_bad: bool,
+}
+
+impl GilbertElliottChannel {
+    /// Build a channel starting in the good state.
+    pub fn new(
+        p_gb: f64,
+        p_bg: f64,
+        good: LinkState,
+        bad: LinkState,
+    ) -> GilbertElliottChannel {
+        assert!(
+            (0.0..=1.0).contains(&p_gb) && (0.0..=1.0).contains(&p_bg),
+            "transition probabilities must be in [0,1], got ({p_gb},{p_bg})"
+        );
+        GilbertElliottChannel {
+            p_gb,
+            p_bg,
+            good,
+            bad,
+            max_attempts: 1000,
+            in_bad: false,
+        }
+    }
+
+    /// Stationary probability of the bad state. `p_gb = 0` pins the
+    /// chain to good (0); `p_bg = 0` with `p_gb > 0` makes bad
+    /// absorbing (1).
+    pub fn stationary_p_bad(&self) -> f64 {
+        if self.p_gb <= 0.0 {
+            0.0
+        } else if self.p_bg <= 0.0 {
+            1.0
+        } else {
+            self.p_gb / (self.p_gb + self.p_bg)
+        }
+    }
+
+    /// Expected long-run slowdown factor: the stationary mixture of the
+    /// per-state occupancies. (Approximation: within one packet, ARQ
+    /// attempts share the packet's state; across packets the mixture is
+    /// exact in the stationary regime.)
+    pub fn expected_slowdown(&self) -> f64 {
+        let pb = self.stationary_p_bad();
+        (1.0 - pb) * self.good.expected_slowdown()
+            + pb * self.bad.expected_slowdown()
+    }
+
+    /// Whether the channel is currently in a fade (test hook).
+    pub fn is_bad(&self) -> bool {
+        self.in_bad
+    }
+}
+
+impl Channel for GilbertElliottChannel {
+    fn transmit(
+        &mut self,
+        sent_at: f64,
+        duration: f64,
+        rng: &mut Pcg32,
+    ) -> Delivery {
+        // per-packet Markov step; the draw is skipped when the outcome
+        // is deterministic so degenerate chains stay stream-identical
+        // to ErasureChannel
+        let p_flip = if self.in_bad { self.p_bg } else { self.p_gb };
+        if p_flip >= 1.0 || (p_flip > 0.0 && rng.next_f64() < p_flip) {
+            self.in_bad = !self.in_bad;
+        }
+        let state = if self.in_bad { self.bad } else { self.good };
+        // ARQ loop identical to ErasureChannel::transmit
+        let mut attempts = 1u32;
+        while rng.next_f64() < state.p_loss {
+            if self.max_attempts > 0 && attempts >= self.max_attempts {
+                break;
+            }
+            attempts += 1;
+        }
+        Delivery {
+            arrival: sent_at + attempts as f64 * duration / state.rate,
+            attempts,
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "gilbert-elliott (p_gb={}, p_bg={}, good=({}, p={}), \
+             bad=({}, p={}), ARQ)",
+            self.p_gb,
+            self.p_bg,
+            self.good.rate,
+            self.good.p_loss,
+            self.bad.rate,
+            self.bad.p_loss
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::ErasureChannel;
+
+    fn bursty() -> GilbertElliottChannel {
+        GilbertElliottChannel::new(
+            0.2,
+            0.5,
+            LinkState::new(1.0, 0.05),
+            LinkState::new(0.5, 0.6),
+        )
+    }
+
+    #[test]
+    fn pinned_good_state_matches_erasure_stream_exactly() {
+        // p_gb = 0: no transition draws, so the fading channel must be
+        // draw-for-draw identical to ErasureChannel at the good p_loss
+        let p = 0.3;
+        let mut ge = GilbertElliottChannel::new(
+            0.0,
+            0.7,
+            LinkState::new(1.0, p),
+            LinkState::new(0.25, 0.9),
+        );
+        let mut er = ErasureChannel::new(p);
+        let mut rng_a = Pcg32::new(42, 4);
+        let mut rng_b = Pcg32::new(42, 4);
+        for i in 0..200 {
+            let t = i as f64 * 3.0;
+            let a = ge.transmit(t, 2.5, &mut rng_a);
+            let b = er.transmit(t, 2.5, &mut rng_b);
+            assert_eq!(a, b, "packet {i} diverged");
+        }
+        assert!(!ge.is_bad());
+    }
+
+    #[test]
+    fn deterministic_flip_probabilities_need_no_draw() {
+        // p_gb = 1, p_bg = 1: alternates every packet without consuming
+        // transition randomness (loss-free states: no ARQ randomness
+        // is consumed beyond the one per-attempt uniform each)
+        let mut ge = GilbertElliottChannel::new(
+            1.0,
+            1.0,
+            LinkState::new(1.0, 0.0),
+            LinkState::new(0.5, 0.0),
+        );
+        let mut rng = Pcg32::seeded(9);
+        let a = ge.transmit(0.0, 2.0, &mut rng);
+        assert!(ge.is_bad(), "first packet flips good -> bad");
+        assert_eq!(a.arrival, 4.0, "bad state halves the rate");
+        let b = ge.transmit(4.0, 2.0, &mut rng);
+        assert!(!ge.is_bad(), "second packet flips back");
+        assert_eq!(b.arrival, 6.0);
+    }
+
+    #[test]
+    fn bad_state_is_slower_on_average() {
+        let mut ge = bursty();
+        let mut rng = Pcg32::seeded(5);
+        let trials = 20_000;
+        let mut occupancy = 0.0;
+        for _ in 0..trials {
+            let d = ge.transmit(0.0, 1.0, &mut rng);
+            occupancy += d.arrival;
+        }
+        let mean = occupancy / trials as f64;
+        let want = ge.expected_slowdown();
+        // stationary mixture of 1/((1-p)·rate); generous tolerance for
+        // the per-packet (not per-attempt) state clocking
+        assert!(
+            (mean - want).abs() < 0.1 * want,
+            "mean occupancy {mean} vs stationary estimate {want}"
+        );
+        assert!(mean > 1.0, "fades must slow the link down");
+    }
+
+    #[test]
+    fn stationary_probability_edge_cases() {
+        let g = LinkState::new(1.0, 0.0);
+        let b = LinkState::new(1.0, 0.5);
+        assert_eq!(
+            GilbertElliottChannel::new(0.0, 0.5, g, b).stationary_p_bad(),
+            0.0
+        );
+        assert_eq!(
+            GilbertElliottChannel::new(0.5, 0.0, g, b).stationary_p_bad(),
+            1.0
+        );
+        let pi = GilbertElliottChannel::new(0.1, 0.3, g, b).stationary_p_bad();
+        assert!((pi - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn arrivals_are_monotone_in_send_time() {
+        let mut ge = bursty();
+        let mut rng = Pcg32::seeded(77);
+        let mut t = 0.0;
+        for _ in 0..500 {
+            let d = ge.transmit(t, 4.0, &mut rng);
+            assert!(d.arrival > t, "arrival must follow the send time");
+            t = d.arrival;
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_rate_rejected() {
+        LinkState::new(0.0, 0.1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_transition_probability_rejected() {
+        GilbertElliottChannel::new(
+            1.5,
+            0.5,
+            LinkState::new(1.0, 0.0),
+            LinkState::new(1.0, 0.0),
+        );
+    }
+}

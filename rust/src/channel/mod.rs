@@ -3,13 +3,17 @@
 //! The paper's main analysis assumes an error-free channel (Sec. 2); its
 //! Sec. 6 lists channel errors and rate selection as future work — both
 //! are implemented here as drop-in [`Channel`] implementations so the
-//! coordinator, benches and the ablations can exercise them.
+//! coordinator, benches and the ablations can exercise them, along with
+//! a bursty Gilbert–Elliott fading channel ([`fading`]) whose good/bad
+//! Markov states model the time-varying links of real edge deployments.
 
 pub mod erasure;
+pub mod fading;
 pub mod ideal;
 pub mod rate;
 
 pub use erasure::ErasureChannel;
+pub use fading::{GilbertElliottChannel, LinkState};
 pub use ideal::IdealChannel;
 pub use rate::RateLimitedChannel;
 

@@ -38,10 +38,20 @@ OPTIONS (all commands):
 SCENARIO OPTIONS (scenario command):
     --preset <name|all|list> run registry preset(s) / list their names
     --channels <a,b,..>      channel specs: ideal | erasure:<p> | rate:<r>[:<p>]
+                             | fading:<p_gb>:<p_bg>:<p_bad>[:<p_good>
+                               [:<r_bad>[:<r_good>]]]  (Gilbert–Elliott)
     --policies <a,b,..>      policy specs: fixed[:n_c] | warmup:<s>:<g>[:<cap>]
                              | deadline:<frac> | sequential[:n_c] | allfirst
     --devices <a,b,..>       traffic specs: <k> devices | online:<rate>
-    (the cross product of the three lists runs in one parallel sweep)
+    --workloads <a,b,..>     workload specs: ridge | logistic
+    (the cross product of the four lists runs in one parallel sweep)
+
+OPTIMIZE OPTIONS (optimize command):
+    --mc <seeds>             validate the channel-aware recommendation by
+                             Monte-Carlo: the measured optimality gap must
+                             stay under the Corollary-1 bound at 99%
+                             bootstrap confidence (axes come from the
+                             scenario.* config keys; exit 1 on violation)
 
 BENCH OPTIONS (bench command):
     --json <path>            write the machine-readable report
@@ -60,8 +70,8 @@ EXAMPLES:
     edgepipe fig3 --out out/fig3
     edgepipe fig4 --set protocol.n_o=100 --set sweep.seeds=10
     edgepipe scenario --preset all --set sweep.seeds=20
-    edgepipe scenario --channels ideal,erasure:0.1 \\
-        --policies fixed,warmup:16:2 --devices 1,4
+    edgepipe scenario --channels ideal,erasure:0.1,fading:0.05:0.25:0.6 \\
+        --policies fixed,warmup:16:2 --devices 1,4 --workloads ridge,logistic
     edgepipe bench --json BENCH_sweep.json
 ";
 

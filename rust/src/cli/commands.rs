@@ -64,14 +64,7 @@ fn bound_params(
         2000,
         cfg.train.seed,
     );
-    BoundParams {
-        alpha: cfg.train.alpha,
-        big_l: k.big_l,
-        c: k.c,
-        m: 1.0,
-        m_g: 1.0,
-        d_diam: k.d_diam,
-    }
+    BoundParams::from_constants(cfg.train.alpha, &k)
 }
 
 fn cmd_info(args: &Args) -> Result<i32> {
@@ -141,7 +134,107 @@ fn cmd_optimize(args: &Args) -> Result<i32> {
         "constants: L={:.4} c={:.4} D={:.3} α={} n_o={} T={}",
         params.big_l, params.c, params.d_diam, params.alpha, cfg.protocol.n_o, t
     );
+    // --mc <seeds>: validate the (channel-aware) recommendation against
+    // Monte-Carlo optimality gaps on the configured scenario axes
+    if let Some(seeds) = args.extra.get("mc") {
+        let seeds: usize = seeds
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--mc must be an integer"))?;
+        return validate_recommendation(&cfg, &ds, t, seeds, &params);
+    }
     Ok(0)
+}
+
+/// The `optimize --mc` body: run the scenario configured by the
+/// `scenario.*` keys at the channel-aware `ñ_c` and report whether the
+/// Corollary-1 bound covers the measured gap at 99% bootstrap
+/// confidence. `ridge_params` is the constant set `cmd_optimize`
+/// already estimated (reused for the ridge workload; logistic
+/// estimates its own conservative constants on its label view).
+fn validate_recommendation(
+    cfg: &ExperimentConfig,
+    ds: &crate::data::Dataset,
+    t: f64,
+    seeds: usize,
+    ridge_params: &BoundParams,
+) -> Result<i32> {
+    use crate::bound::{
+        check_recommendation, estimate_logistic_constants, CheckConfig,
+    };
+    use crate::data::classify::binarize_labels;
+    use crate::model::Workload;
+    use crate::sweep::scenario::ScenarioSpec;
+
+    let spec = ScenarioSpec::parse(
+        &cfg.scenario.channel,
+        &cfg.scenario.policy,
+        &cfg.scenario.traffic,
+        &cfg.scenario.workload,
+        cfg.scenario.store,
+    )?;
+    let base = DesConfig {
+        n_c: 1, // overridden by the recommendation
+        n_o: cfg.protocol.n_o,
+        tau_p: cfg.protocol.tau_p,
+        t_budget: t,
+        alpha: cfg.train.alpha,
+        lambda: cfg.train.lambda,
+        init_std: cfg.train.init_std,
+        seed: cfg.train.seed,
+        loss_every: 0,
+        record_blocks: false,
+        store_capacity: None,
+        collect_snapshots: false,
+        event_capacity: 0,
+        workload: spec.workload,
+    };
+    // workload-matched constants and reference optimum, on the label
+    // view the scenario actually trains (ridge trains on `ds` itself)
+    let reg = cfg.train.lambda / ds.n as f64;
+    let (params, loss_star) = match spec.workload {
+        Workload::Ridge => {
+            let w_star = ridge_solution(ds, cfg.train.lambda)?;
+            (ridge_params.clone(), ds.ridge_loss(&w_star, reg))
+        }
+        Workload::Logistic => {
+            let view = binarize_labels(ds);
+            let k = estimate_logistic_constants(
+                &view,
+                cfg.train.lambda,
+                cfg.train.alpha,
+                4000,
+                cfg.train.seed,
+            );
+            (
+                BoundParams::from_constants(cfg.train.alpha, &k),
+                crate::bound::logistic_reference_loss(
+                    &view,
+                    cfg.train.lambda,
+                    cfg.train.alpha,
+                    cfg.train.seed,
+                ),
+            )
+        }
+    };
+    let check = CheckConfig {
+        seeds,
+        threads: cfg.sweep.threads,
+        ..CheckConfig::default()
+    };
+    let out =
+        check_recommendation(ds, &base, &spec, &params, loss_star, &check);
+    println!(
+        "validation [{}]: ñ_c={} (slowdown {:.3}), bound {:.6}",
+        out.label, out.n_c, out.slowdown, out.bound
+    );
+    println!(
+        "  measured gap {:.6} (99% bootstrap upper {:.6}, {} seeds) -> {}",
+        out.mean_gap,
+        out.gap_upper,
+        seeds,
+        if out.holds { "bound HOLDS" } else { "bound VIOLATED" }
+    );
+    Ok(if out.holds { 0 } else { 1 })
 }
 
 /// Resolve the block size for a run: the configured `n_c`, else the
@@ -185,6 +278,7 @@ fn cmd_train(args: &Args) -> Result<i32> {
         store_capacity: None,
         collect_snapshots: false,
         event_capacity: 64,
+        workload: crate::model::Workload::Ridge,
     };
     if !args.quiet {
         println!(
@@ -399,6 +493,7 @@ fn cmd_scenario(args: &Args) -> Result<i32> {
         store_capacity: None,
         collect_snapshots: false,
         event_capacity: 0,
+        workload: crate::model::Workload::Ridge,
     };
 
     let split_list = |s: &str| -> Vec<String> {
@@ -423,16 +518,21 @@ fn cmd_scenario(args: &Args) -> Result<i32> {
             split_list(&args.extra_or("policies", &cfg.scenario.policy));
         let traffics =
             split_list(&args.extra_or("devices", &cfg.scenario.traffic));
+        let workloads =
+            split_list(&args.extra_or("workloads", &cfg.scenario.workload));
         let mut specs = Vec::new();
         for ch in &channels {
             for po in &policies {
                 for tr in &traffics {
-                    specs.push(ScenarioSpec::parse(
-                        ch,
-                        po,
-                        tr,
-                        cfg.scenario.store,
-                    )?);
+                    for wl in &workloads {
+                        specs.push(ScenarioSpec::parse(
+                            ch,
+                            po,
+                            tr,
+                            wl,
+                            cfg.scenario.store,
+                        )?);
+                    }
                 }
             }
         }
@@ -581,6 +681,7 @@ fn cmd_tightness(args: &Args) -> Result<i32> {
         store_capacity: None,
         collect_snapshots: true,
         event_capacity: 0,
+        workload: crate::model::Workload::Ridge,
     };
     let mut exec = NativeExecutor::new(
         RidgeModel::new(ds.d, des.lambda, ds.n),

@@ -148,13 +148,16 @@ impl Default for SweepConfig {
 /// compact axis strings parsed by `sweep::scenario`.
 #[derive(Clone, Debug)]
 pub struct ScenarioConfig {
-    /// Channel spec: `ideal` | `erasure:<p>` | `rate:<r>[:<p>]`.
+    /// Channel spec: `ideal` | `erasure:<p>` | `rate:<r>[:<p>]` |
+    /// `fading:<p_gb>:<p_bg>:<p_bad>[:<p_good>[:<r_bad>[:<r_good>]]]`.
     pub channel: String,
     /// Policy spec: `fixed[:n_c]` | `warmup:<start>:<growth>[:<cap>]` |
     /// `deadline:<frac>` | `sequential[:n_c]` | `allfirst`.
     pub policy: String,
     /// Traffic spec: `<k>` round-robin devices | `online:<rate>`.
     pub traffic: String,
+    /// Workload spec: `ridge` | `logistic`.
+    pub workload: String,
     /// Edge store capacity (0 = unbounded).
     pub store: usize,
 }
@@ -165,6 +168,7 @@ impl Default for ScenarioConfig {
             channel: "ideal".to_string(),
             policy: "fixed".to_string(),
             traffic: "1".to_string(),
+            workload: "ridge".to_string(),
             store: 0,
         }
     }
@@ -241,6 +245,9 @@ impl ExperimentConfig {
                 }
                 "scenario.traffic" => {
                     cfg.scenario.traffic = spec_string(value)?
+                }
+                "scenario.workload" => {
+                    cfg.scenario.workload = spec_string(value)?
                 }
                 "scenario.store" => {
                     cfg.scenario.store = value.as_usize()?
@@ -339,21 +346,24 @@ mod tests {
         let cfg = ExperimentConfig::load(
             None,
             &[
-                ("scenario.channel".into(), "erasure:0.2".into()),
+                ("scenario.channel".into(), "fading:0.05:0.25:0.6".into()),
                 ("scenario.policy".into(), "warmup:8:2.0".into()),
                 ("scenario.traffic".into(), "4".into()),
+                ("scenario.workload".into(), "logistic".into()),
                 ("scenario.store".into(), "500".into()),
             ],
         )
         .unwrap();
-        assert_eq!(cfg.scenario.channel, "erasure:0.2");
+        assert_eq!(cfg.scenario.channel, "fading:0.05:0.25:0.6");
         assert_eq!(cfg.scenario.policy, "warmup:8:2.0");
         assert_eq!(cfg.scenario.traffic, "4");
+        assert_eq!(cfg.scenario.workload, "logistic");
         assert_eq!(cfg.scenario.store, 500);
         // defaults
         let d = ExperimentConfig::default();
         assert_eq!(d.scenario.channel, "ideal");
         assert_eq!(d.scenario.traffic, "1");
+        assert_eq!(d.scenario.workload, "ridge");
     }
 
     #[test]

@@ -59,6 +59,9 @@ pub struct DesConfig {
     pub collect_snapshots: bool,
     /// Max events to record (0 disables the event log).
     pub event_capacity: usize,
+    /// Which per-sample loss the run trains/reports (the executor must
+    /// match; `ScenarioRunner` keeps the two in sync).
+    pub workload: crate::model::Workload,
 }
 
 impl DesConfig {
@@ -78,6 +81,7 @@ impl DesConfig {
             store_capacity: None,
             collect_snapshots: false,
             event_capacity: 0,
+            workload: crate::model::Workload::Ridge,
         }
     }
 }

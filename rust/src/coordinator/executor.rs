@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 
-use crate::model::RidgeModel;
+use crate::model::{PointModel, RidgeModel};
 use crate::sgd::{SgdEngine, StoreView};
 
 /// Applies one pipelined block of single-sample SGD updates (paper
@@ -29,19 +29,22 @@ pub trait BlockExecutor {
     fn name(&self) -> &'static str;
 }
 
-/// The native f64 executor (oracle + sweep fast path).
-pub struct NativeExecutor {
-    pub model: RidgeModel,
+/// The native f64 executor (oracle + sweep fast path), generic over the
+/// per-sample model so every [`PointModel`] workload (ridge, logistic)
+/// runs through the same engine. Defaults to the paper's [`RidgeModel`]
+/// so existing call sites and type annotations are unchanged.
+pub struct NativeExecutor<M: PointModel = RidgeModel> {
+    pub model: M,
     pub engine: SgdEngine,
 }
 
-impl NativeExecutor {
-    pub fn new(model: RidgeModel, alpha: f64) -> NativeExecutor {
+impl<M: PointModel> NativeExecutor<M> {
+    pub fn new(model: M, alpha: f64) -> NativeExecutor<M> {
         NativeExecutor { model, engine: SgdEngine::new(alpha) }
     }
 }
 
-impl BlockExecutor for NativeExecutor {
+impl<M: PointModel> BlockExecutor for NativeExecutor<M> {
     fn run_block(
         &mut self,
         w: &mut Vec<f64>,
@@ -71,6 +74,21 @@ mod tests {
         let mut w = vec![0.0, 0.0];
         exec.run_block(&mut w, store, &[0, 1, 0, 1]).unwrap();
         assert!(w[0] > 0.0 && w[1] < 0.0, "moved toward labels: {w:?}");
+        assert_eq!(exec.name(), "native");
+    }
+
+    #[test]
+    fn native_executor_is_generic_over_the_workload() {
+        use crate::model::LogisticModel;
+        // classes on either axis; labels in {0, 1}
+        let x = vec![1.0f32, 0.0, -1.0, 0.0];
+        let y = vec![1.0f32, 0.0];
+        let store = StoreView::new(&x, &y, 2);
+        let model = LogisticModel::new(2, 0.0, 2);
+        let mut exec = NativeExecutor::new(model, 0.5);
+        let mut w = vec![0.0, 0.0];
+        exec.run_block(&mut w, store, &[0, 1, 0, 1, 0, 1]).unwrap();
+        assert!(w[0] > 0.0, "w must point toward the positive class: {w:?}");
         assert_eq!(exec.name(), "native");
     }
 }

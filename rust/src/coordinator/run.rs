@@ -156,6 +156,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentOutput> {
         store_capacity: None,
         collect_snapshots: false,
         event_capacity: 0,
+        workload: crate::model::Workload::Ridge,
     };
     let mut exec = NativeExecutor::new(
         RidgeModel::new(train.d, cfg.train.lambda, train.n),

@@ -13,6 +13,7 @@ use anyhow::Result;
 
 use crate::data::Dataset;
 use crate::edge::SampleStore;
+use crate::model::Workload;
 use crate::util::rng::Pcg32;
 
 use super::des::{DesConfig, STREAM_EDGE, STREAM_EVICT, STREAM_INIT};
@@ -43,6 +44,7 @@ pub(crate) struct EdgeTrainer<'a> {
     tau_p: f64,
     t_budget: f64,
     reg: f64,
+    workload: Workload,
     rng: Pcg32,
     evict_rng: Pcg32,
     pub updates: usize,
@@ -82,6 +84,7 @@ impl<'a> EdgeTrainer<'a> {
             tau_p: cfg.tau_p,
             t_budget: cfg.t_budget,
             reg,
+            workload: cfg.workload,
             rng: Pcg32::new(cfg.seed, STREAM_EDGE),
             evict_rng: Pcg32::new(cfg.seed, STREAM_EVICT),
             updates: 0,
@@ -105,9 +108,10 @@ impl<'a> EdgeTrainer<'a> {
         self.sp.store.ingested()
     }
 
-    /// Training loss over the FULL dataset (paper Fig. 4's y-axis).
+    /// Training loss over the FULL dataset (paper Fig. 4's y-axis),
+    /// under the run's configured workload.
     pub fn full_loss(&self) -> f64 {
-        self.ds.ridge_loss(&self.sp.w, self.reg)
+        self.workload.full_loss(self.ds, &self.sp.w, self.reg)
     }
 
     fn record_loss(&mut self, t: f64) {

@@ -1,0 +1,167 @@
+//! Synthetic labeled data for the logistic-classification workload.
+//!
+//! Two deterministic sources of `{0, 1}`-labeled datasets:
+//!
+//! * [`synth_logistic`] — i.i.d. Gaussian covariates with labels from a
+//!   fixed linear separator (`ground_truth_w`) plus controllable margin
+//!   noise and label flips. With small noise/flip rates the data is
+//!   *near-separable*, which is what the metamorphic
+//!   "logistic tracks ridge sign decisions" test in
+//!   `rust/tests/golden_traces.rs` relies on.
+//! * [`binarize_labels`] — derive a classification view of an existing
+//!   regression dataset by thresholding labels at their median (the
+//!   standard above/below-median-house-value task on California
+//!   Housing). Covariates are shared, so channel/policy axes stay
+//!   comparable across workloads; this is what `ScenarioRunner` uses
+//!   when a scenario selects the logistic workload.
+
+use crate::util::rng::Pcg32;
+
+use super::dataset::Dataset;
+use super::synth::ground_truth_w;
+
+/// Parameters of the synthetic classification generator.
+#[derive(Clone, Debug)]
+pub struct LogitSpec {
+    /// Number of samples.
+    pub n: usize,
+    /// Feature dimension.
+    pub d: usize,
+    /// Std of the Gaussian noise added to the margin before
+    /// thresholding (0 = exactly linearly separable).
+    pub margin_noise: f64,
+    /// Probability of flipping each label after thresholding.
+    pub flip_prob: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for LogitSpec {
+    fn default() -> Self {
+        LogitSpec {
+            n: 20640,
+            d: 8,
+            margin_noise: 0.1,
+            flip_prob: 0.02,
+            seed: 1906_04488,
+        }
+    }
+}
+
+/// Generate i.i.d. standard-normal covariates with labels
+/// `y_i = 1[w°ᵀx_i + margin_noise·ε_i > 0]`, each flipped with
+/// probability `flip_prob` (`w°` is [`ground_truth_w`], the same
+/// direction the regression generator uses).
+pub fn synth_logistic(spec: &LogitSpec) -> Dataset {
+    assert!(spec.n > 0 && spec.d > 0, "need a non-empty dataset");
+    assert!(
+        (0.0..=0.5).contains(&spec.flip_prob),
+        "flip_prob must be in [0, 0.5], got {}",
+        spec.flip_prob
+    );
+    assert!(spec.margin_noise >= 0.0, "margin_noise must be >= 0");
+    let (n, d) = (spec.n, spec.d);
+    let mut rng = Pcg32::new(spec.seed, 202);
+    let w_true = ground_truth_w(d);
+
+    let mut x = vec![0.0f32; n * d];
+    for v in x.iter_mut() {
+        *v = rng.next_gaussian() as f32;
+    }
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let row = &x[i * d..(i + 1) * d];
+        let mut margin = 0.0f64;
+        for j in 0..d {
+            margin += row[j] as f64 * w_true[j];
+        }
+        margin += spec.margin_noise * rng.next_gaussian();
+        let mut label = if margin > 0.0 { 1.0f32 } else { 0.0f32 };
+        if spec.flip_prob > 0.0 && rng.next_f64() < spec.flip_prob {
+            label = 1.0 - label;
+        }
+        y[i] = label;
+    }
+    Dataset::new(x, y, n, d)
+}
+
+/// Classification view of a regression dataset: covariates shared
+/// verbatim, labels replaced by `1[y_i > median(y)]`. Deterministic
+/// (the median is the lower-middle order statistic, so exactly-equal
+/// labels land in class 0).
+pub fn binarize_labels(ds: &Dataset) -> Dataset {
+    assert!(ds.n > 0, "cannot binarize an empty dataset");
+    let mut sorted = ds.y.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN label"));
+    let median = sorted[(ds.n - 1) / 2];
+    let y = ds
+        .y
+        .iter()
+        .map(|&v| if v > median { 1.0f32 } else { 0.0f32 })
+        .collect();
+    Dataset::new(ds.x.clone(), y, ds.n, ds.d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = LogitSpec { n: 400, ..Default::default() };
+        let a = synth_logistic(&spec);
+        let b = synth_logistic(&spec);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let c = synth_logistic(&LogitSpec { seed: 7, ..spec });
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn labels_are_binary_and_balanced() {
+        let ds = synth_logistic(&LogitSpec {
+            n: 4000,
+            ..Default::default()
+        });
+        let ones = ds.y.iter().filter(|&&v| v == 1.0).count();
+        assert!(ds.y.iter().all(|&v| v == 0.0 || v == 1.0));
+        // symmetric separator through the origin -> roughly balanced
+        let frac = ones as f64 / ds.n as f64;
+        assert!((0.4..0.6).contains(&frac), "class balance {frac}");
+    }
+
+    #[test]
+    fn near_separable_labels_match_separator_sign() {
+        let ds = synth_logistic(&LogitSpec {
+            n: 2000,
+            margin_noise: 0.0,
+            flip_prob: 0.0,
+            ..Default::default()
+        });
+        let w = ground_truth_w(ds.d);
+        for i in 0..ds.n {
+            let row = ds.row(i);
+            let margin: f64 =
+                (0..ds.d).map(|j| row[j] as f64 * w[j]).sum();
+            let want = if margin > 0.0 { 1.0 } else { 0.0 };
+            assert_eq!(ds.y[i], want as f32, "sample {i}");
+        }
+    }
+
+    #[test]
+    fn binarize_thresholds_at_the_median() {
+        let ds = Dataset::new(
+            vec![0.0; 5 * 2],
+            vec![5.0, 1.0, 3.0, 2.0, 4.0],
+            5,
+            2,
+        );
+        let bin = binarize_labels(&ds);
+        // median = 3.0; strictly-above -> class 1
+        assert_eq!(bin.y, vec![1.0, 0.0, 0.0, 0.0, 1.0]);
+        assert_eq!(bin.x, ds.x);
+        // idempotent shape/determinism
+        let again = binarize_labels(&ds);
+        assert_eq!(bin.y, again.y);
+    }
+}

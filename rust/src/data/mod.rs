@@ -1,11 +1,14 @@
 //! Dataset substrate: the in-memory sample container, the synthetic
-//! California-Housing-like generator (DESIGN.md §3 substitution), CSV
+//! California-Housing-like generator (DESIGN.md §3 substitution), the
+//! labeled classification generator for the logistic workload, CSV
 //! load/save for dropping in the real dataset, and train/eval splitting.
 
+pub mod classify;
 pub mod csv;
 pub mod dataset;
 pub mod split;
 pub mod synth;
 
+pub use classify::{binarize_labels, synth_logistic, LogitSpec};
 pub use dataset::Dataset;
 pub use synth::{synth_calhousing, SynthSpec};

@@ -37,12 +37,17 @@
 //!   two-thread device/edge pipeline with backpressure, bit-identical to
 //!   the DES (`rust/tests/pipeline_parity.rs`).
 //! * **Scenario registry** ([`sweep::scenario`]) — declarative
-//!   (channel × policy × traffic) specs parsed from config/CLI strings;
-//!   [`sweep`] runs Monte-Carlo estimates and grid crossings over any of
-//!   them in one parallel fan-out, and the `edgepipe scenario`
-//!   subcommand exposes it all.
-//! * **Analysis** ([`bound`]) — the paper's Corollary-1 bound and the
-//!   block-size optimizer that picks `ñ_c`.
+//!   (channel × policy × traffic × workload) specs parsed from
+//!   config/CLI strings (channels include a Gilbert–Elliott fading
+//!   link, [`channel::fading`]; workloads cover ridge regression and
+//!   logistic classification, [`model::logistic`]); [`sweep`] runs
+//!   Monte-Carlo estimates and grid crossings over any of them in one
+//!   parallel fan-out, and the `edgepipe scenario` subcommand exposes
+//!   it all.
+//! * **Analysis** ([`bound`]) — the paper's Corollary-1 bound, the
+//!   block-size optimizer that picks `ñ_c`, and the channel-aware
+//!   Monte-Carlo validation of the recommendation
+//!   ([`bound::validate`], `edgepipe optimize --mc`).
 //! * **Backends** — a native f64 SGD engine ([`sgd`]) and a PJRT-backed
 //!   engine ([`runtime`], [`edge`]) executing the AOT JAX/Pallas
 //!   artifacts built by `make artifacts` (gated behind the `pjrt` cargo
@@ -51,8 +56,9 @@
 //!   linear algebra + vectorized f32→f64 kernels ([`linalg::kernels`]),
 //!   dataset synthesis, a bench harness (including the tracked sweep
 //!   benchmark behind `edgepipe bench`, [`bench::sweep`]) and a
-//!   property-testing kit ([`util`], [`linalg`], [`data`], [`bench`],
-//!   [`testkit`], [`metrics`], [`protocol`], [`model`]).
+//!   property-testing kit plus the golden-trace snapshot harness
+//!   ([`util`], [`linalg`], [`data`], [`bench`], [`testkit`],
+//!   [`metrics`], [`protocol`], [`model`]).
 //!
 //! Python/JAX/Pallas exist only at build time; the Rust binary is
 //! self-contained once `artifacts/` is built (and runs natively without

@@ -138,6 +138,64 @@ pub fn batch_ridge_loss(
     batch_sq_err(x, y, d, w) / y.len() as f64 + reg * w2
 }
 
+/// Numerically stable `ln(1 + e^z)` (softplus): never overflows for
+/// large `z`, never underflows to a spurious 0 for moderate negatives.
+#[inline]
+pub fn softplus(z: f64) -> f64 {
+    if z > 0.0 {
+        z + (-z).exp().ln_1p()
+    } else {
+        z.exp().ln_1p()
+    }
+}
+
+/// Numerically stable logistic sigmoid `1/(1 + e^{−z})`.
+#[inline]
+pub fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Empirical logistic loss over a flat batch with labels `y ∈ {0, 1}`:
+/// `(1/n) Σ [softplus(w·x_i) − y_i·(w·x_i)] + reg · ‖w‖²` (empty
+/// batch: just the regularizer term). Four-row unroll with independent
+/// accumulators, mirroring [`batch_sq_err`].
+pub fn batch_logistic_loss(
+    x: &[f32],
+    y: &[f32],
+    d: usize,
+    w: &[f64],
+    reg: f64,
+) -> f64 {
+    debug_assert_eq!(x.len(), y.len() * d, "batch shape mismatch");
+    debug_assert_eq!(w.len(), d, "weight dimension mismatch");
+    let w2: f64 = w.iter().map(|v| v * v).sum();
+    let n = y.len();
+    if n == 0 {
+        return reg * w2;
+    }
+    let mut acc = [0.0f64; 4];
+    let quads = n / 4;
+    for q in 0..quads {
+        let base = q * 4;
+        for k in 0..4 {
+            let i = base + k;
+            let z = dot_f32_f64(w, &x[i * d..(i + 1) * d]);
+            acc[k] += softplus(z) - y[i] as f64 * z;
+        }
+    }
+    let mut tail = 0.0f64;
+    for i in quads * 4..n {
+        let z = dot_f32_f64(w, &x[i * d..(i + 1) * d]);
+        tail += softplus(z) - y[i] as f64 * z;
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3]) + tail) / n as f64 + reg * w2
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -240,5 +298,154 @@ mod tests {
         assert_eq!(batch_sq_err(&[], &[], 3, &w), 0.0);
         let w2: f64 = w.iter().map(|v| v * v).sum();
         assert_eq!(batch_ridge_loss(&[], &[], 3, &w, 0.25), 0.25 * w2);
+        assert_eq!(batch_logistic_loss(&[], &[], 3, &w, 0.25), 0.25 * w2);
+    }
+
+    #[test]
+    fn logistic_loss_matches_scalar_on_odd_dims_and_row_counts() {
+        for &d in DIMS {
+            for n in [1usize, 2, 3, 4, 5, 7, 8, 17] {
+                let (w, x, _) = random_case(d, n, 4400 + (d * n) as u64);
+                // {0, 1} labels derived deterministically from the case
+                let y: Vec<f32> =
+                    (0..n).map(|i| (i % 2) as f32).collect();
+                let reg = 0.05 / n as f64;
+                let got = batch_logistic_loss(&x, &y, d, &w, reg);
+                let mut acc = 0.0;
+                for i in 0..n {
+                    let z = scalar_dot(&w, &x[i * d..(i + 1) * d]);
+                    acc += softplus(z) - y[i] as f64 * z;
+                }
+                let w2: f64 = w.iter().map(|v| v * v).sum();
+                let want = acc / n as f64 + reg * w2;
+                assert_close(got, want, &format!("logit loss d={d} n={n}"));
+            }
+        }
+    }
+
+    #[test]
+    fn softplus_and_sigmoid_are_stable_at_extremes() {
+        assert_eq!(softplus(-1000.0), 0.0);
+        assert!((softplus(1000.0) - 1000.0).abs() < 1e-12);
+        assert!((softplus(0.0) - std::f64::consts::LN_2).abs() < 1e-15);
+        assert_eq!(sigmoid(-1000.0), 0.0);
+        assert_eq!(sigmoid(1000.0), 1.0);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-15);
+        // complementary identity on moderate values
+        for z in [-3.0, -0.5, 0.0, 0.5, 3.0] {
+            assert!((sigmoid(z) + sigmoid(-z) - 1.0).abs() < 1e-15);
+        }
+    }
+
+    /// Compare two results that may be non-finite: both NaN, or exactly
+    /// equal (covers ±Inf sign agreement).
+    fn assert_same_class(a: f64, b: f64, what: &str) {
+        if a.is_nan() || b.is_nan() {
+            assert!(
+                a.is_nan() && b.is_nan(),
+                "{what}: NaN mismatch ({a} vs {b})"
+            );
+        } else {
+            assert_eq!(a, b, "{what}");
+        }
+    }
+
+    #[test]
+    fn nan_and_inf_propagation_matches_the_scalar_reference() {
+        // The multi-accumulator lanes reassociate additions; NaN and
+        // single-signed Inf must still land in the same class as the
+        // sequential scalar loop, in every lane position.
+        for &d in DIMS {
+            for poison in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+                for pos in [0, d / 2, d - 1] {
+                    let (w, mut x, _) = random_case(d, 1, 9000 + d as u64);
+                    x[pos] = poison;
+                    assert_same_class(
+                        dot_f32_f64(&w, &x),
+                        scalar_dot(&w, &x),
+                        &format!("dot d={d} poison={poison} pos={pos}"),
+                    );
+                }
+            }
+            // mixed ±Inf products collapse to NaN in both orders
+            if d >= 2 {
+                let mut w = vec![1.0f64; d];
+                w[d - 1] = -1.0;
+                let mut x = vec![0.0f32; d];
+                x[0] = f32::INFINITY;
+                x[d - 1] = f32::INFINITY; // w·x = +inf + (−inf)
+                assert_same_class(
+                    dot_f32_f64(&w, &x),
+                    scalar_dot(&w, &x),
+                    &format!("dot mixed inf d={d}"),
+                );
+                assert!(dot_f32_f64(&w, &x).is_nan());
+            }
+        }
+        // batched evaluators: one poisoned row must poison the total
+        // exactly like the scalar accumulation does
+        for n in [1usize, 4, 5, 9] {
+            for poison in [f32::NAN, f32::INFINITY] {
+                let d = 8; // exercises the specialized d == 8 path
+                let (w, mut x, y) = random_case(d, n, 9500 + n as u64);
+                x[(n - 1) * d + 3] = poison;
+                let got = batch_sq_err(&x, &y, d, &w);
+                let mut want = 0.0;
+                for i in 0..n {
+                    let e = scalar_dot(&w, &x[i * d..(i + 1) * d])
+                        - y[i] as f64;
+                    want += e * e;
+                }
+                assert_same_class(
+                    got,
+                    want,
+                    &format!("batch_sq_err n={n} poison={poison}"),
+                );
+                assert!(!got.is_finite(), "poison must not vanish");
+                let logit = batch_logistic_loss(&x, &y, d, &w, 0.01);
+                assert!(
+                    !logit.is_finite() || logit.is_nan(),
+                    "logistic loss swallowed a poisoned row: {logit}"
+                );
+            }
+        }
+    }
+
+    // The length checks are debug_assert!s (the hot path cannot afford
+    // them in release); assert the guard fires where tests run (debug).
+    #[cfg(debug_assertions)]
+    mod length_mismatch {
+        use super::*;
+
+        #[test]
+        #[should_panic(expected = "dot length mismatch")]
+        fn dot_rejects_mismatched_lengths() {
+            dot_f32_f64(&[1.0, 2.0], &[1.0f32]);
+        }
+
+        #[test]
+        #[should_panic(expected = "axpy length mismatch")]
+        fn axpy_rejects_mismatched_lengths() {
+            let mut y = vec![0.0f64; 3];
+            axpy_f32_f64(1.0, &[1.0f32, 2.0], &mut y);
+        }
+
+        #[test]
+        #[should_panic(expected = "batch shape mismatch")]
+        fn batch_sq_err_rejects_bad_shapes() {
+            batch_sq_err(&[1.0f32; 5], &[1.0f32; 2], 2, &[0.0, 0.0]);
+        }
+
+        #[test]
+        #[should_panic(expected = "weight dimension mismatch")]
+        fn batch_sq_err_rejects_bad_weight_dim() {
+            batch_sq_err(&[1.0f32; 4], &[1.0f32; 2], 2, &[0.0; 3]);
+        }
+
+        #[test]
+        #[should_panic(expected = "batch shape mismatch")]
+        fn batch_logistic_loss_rejects_bad_shapes() {
+            batch_logistic_loss(&[1.0f32; 5], &[1.0f32; 2], 2, &[0.0; 2], 0.0);
+        }
     }
 }

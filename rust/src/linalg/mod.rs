@@ -16,7 +16,10 @@ pub mod solve;
 pub mod sym_eig;
 
 pub use gram::gram_matrix;
-pub use kernels::{axpy_f32_f64, batch_ridge_loss, batch_sq_err, dot_f32_f64};
+pub use kernels::{
+    axpy_f32_f64, batch_logistic_loss, batch_ridge_loss, batch_sq_err,
+    dot_f32_f64, sigmoid, softplus,
+};
 pub use matrix::Mat;
 pub use solve::solve;
 pub use sym_eig::jacobi_eigen;

@@ -1,0 +1,173 @@
+//! Logistic-regression classification workload.
+//!
+//! The paper's abstract targets "a supervised learning task, e.g.
+//! regression or classification"; its experiments only exercise ridge
+//! regression. This module supplies the classification half with the
+//! same conventions as [`RidgeModel`](super::RidgeModel):
+//!
+//! Loss per sample (labels `y ∈ {0, 1}`, margin `z = wᵀx`):
+//! `ℓ(w, x) = softplus(z) − y·z + (λ/N)‖w‖²`
+//! Gradient: `∇ℓ = x (σ(z) − y) + (2λ/N) w`
+//!
+//! `N` is the FULL training-set size, matching the ridge `λ/N`
+//! convention, so per-sample losses average exactly to the empirical
+//! risk. With the L2 term the loss is `2λ/N`-strongly convex, which is
+//! what the bound layer's (conservative) logistic constants use.
+
+use crate::linalg::kernels::{dot_f32_f64, sigmoid, softplus};
+
+use super::traits::PointModel;
+
+/// Logistic-regression point model.
+#[derive(Clone, Debug)]
+pub struct LogisticModel {
+    d: usize,
+    /// λ/N — the per-sample regularizer coefficient.
+    pub reg: f64,
+    /// 2λ/N — the gradient's regularizer coefficient.
+    pub reg2: f64,
+}
+
+impl LogisticModel {
+    /// Build for feature dimension `d`, regularization `lambda`, and
+    /// full dataset size `n_full` (mirrors `RidgeModel::new`).
+    pub fn new(d: usize, lambda: f64, n_full: usize) -> LogisticModel {
+        let reg = lambda / n_full as f64;
+        LogisticModel { d, reg, reg2: 2.0 * reg }
+    }
+
+    /// Fused SGD step (saves the temp gradient buffer, mirroring the
+    /// ridge hot path): `w ← w(1 − α·2λ/N) − α(σ(wᵀx) − y)·x`.
+    #[inline]
+    pub fn sgd_step_fused(
+        &self,
+        w: &mut [f64],
+        x: &[f32],
+        y: f32,
+        alpha: f64,
+    ) {
+        debug_assert_eq!(w.len(), x.len());
+        let z = dot_f32_f64(w, x);
+        let alpha_err = alpha * (sigmoid(z) - y as f64);
+        let shrink = 1.0 - alpha * self.reg2;
+        for j in 0..w.len() {
+            w[j] = w[j] * shrink - alpha_err * x[j] as f64;
+        }
+    }
+}
+
+impl PointModel for LogisticModel {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn loss(&self, w: &[f64], x: &[f32], y: f32) -> f64 {
+        let z = dot_f32_f64(w, x);
+        let w2: f64 = w.iter().map(|v| v * v).sum();
+        softplus(z) - y as f64 * z + self.reg * w2
+    }
+
+    fn grad_into(&self, w: &[f64], x: &[f32], y: f32, out: &mut [f64]) {
+        let err = sigmoid(dot_f32_f64(w, x)) - y as f64;
+        for j in 0..self.d {
+            out[j] = self.reg2 * w[j] + err * x[j] as f64;
+        }
+    }
+
+    fn sgd_step(&self, w: &mut [f64], x: &[f32], y: f32, alpha: f64) {
+        self.sgd_step_fused(w, x, y, alpha);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> LogisticModel {
+        LogisticModel::new(3, 0.05, 100)
+    }
+
+    #[test]
+    fn loss_at_zero_margin_is_ln2() {
+        let m = model();
+        let w = [0.0, 0.0, 0.0];
+        let x = [1.0f32, -2.0, 0.5];
+        for y in [0.0f32, 1.0] {
+            let got = m.loss(&w, &x, y);
+            assert!(
+                (got - std::f64::consts::LN_2).abs() < 1e-12,
+                "y={y}: {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn loss_is_stable_at_extreme_margins() {
+        let m = LogisticModel::new(1, 0.0, 1);
+        // huge positive margin, label 1: loss ~ 0, never NaN/inf
+        let l1 = m.loss(&[500.0], &[2.0], 1.0);
+        assert!(l1.is_finite() && l1 < 1e-12, "l1={l1}");
+        // huge positive margin, label 0: loss ~ z, linear not inf
+        let l0 = m.loss(&[500.0], &[2.0], 0.0);
+        assert!((l0 - 1000.0).abs() < 1e-9, "l0={l0}");
+        // huge negative margin, label 0: ~ 0
+        let l2 = m.loss(&[-500.0], &[2.0], 0.0);
+        assert!(l2.is_finite() && l2 < 1e-12, "l2={l2}");
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let m = model();
+        let w = [0.3, -0.7, 1.1];
+        let x = [1.0f32, 0.5, -2.0];
+        for y in [0.0f32, 1.0] {
+            let mut g = [0.0; 3];
+            m.grad_into(&w, &x, y, &mut g);
+            let eps = 1e-6;
+            for j in 0..3 {
+                let mut wp = w;
+                wp[j] += eps;
+                let mut wm = w;
+                wm[j] -= eps;
+                let fd = (m.loss(&wp, &x, y) - m.loss(&wm, &x, y))
+                    / (2.0 * eps);
+                assert!(
+                    (g[j] - fd).abs() < 1e-6,
+                    "y={y} coord {j}: {} vs {fd}",
+                    g[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_step_equals_generic_step() {
+        let m = model();
+        let x = [1.0f32, -0.5, 0.25];
+        let y = 1.0f32;
+        let mut w1 = vec![0.2, 0.4, -0.6];
+        let mut w2 = w1.clone();
+        m.sgd_step_fused(&mut w1, &x, y, 1e-2);
+        let mut g = vec![0.0; 3];
+        m.grad_into(&w2.clone(), &x, y, &mut g);
+        for j in 0..3 {
+            w2[j] -= 1e-2 * g[j];
+        }
+        for j in 0..3 {
+            assert!((w1[j] - w2[j]).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn sgd_separates_linearly_separable_points() {
+        // two points on either side of the origin, labels by sign
+        let m = LogisticModel::new(2, 0.0, 2);
+        let mut w = vec![0.0, 0.0];
+        for _ in 0..2000 {
+            m.sgd_step(&mut w, &[1.0, 0.5], 1.0, 0.1);
+            m.sgd_step(&mut w, &[-1.0, -0.5], 0.0, 0.1);
+        }
+        let z_pos = w[0] * 1.0 + w[1] * 0.5;
+        assert!(z_pos > 1.0, "positive point must end deep on + side: {z_pos}");
+    }
+}

@@ -1,8 +1,92 @@
-//! Model layer: the ridge-regression workload of the paper plus the trait
-//! the SGD engine and coordinator are generic over.
+//! Model layer: the ridge-regression workload of the paper, the logistic
+//! classification workload, the trait the SGD engine and coordinator are
+//! generic over, and the [`Workload`] selector the scenario layer uses to
+//! pick between them.
 
+pub mod logistic;
 pub mod ridge;
 pub mod traits;
 
+pub use logistic::LogisticModel;
 pub use ridge::{ridge_solution, RidgeModel};
 pub use traits::PointModel;
+
+use anyhow::{bail, Result};
+
+use crate::data::Dataset;
+
+/// Which supervised learning task the edge node trains (the paper's
+/// abstract covers "regression or classification"; its experiments fix
+/// ridge). Selectable per scenario (`scenario.workload`, `--workloads`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Workload {
+    /// Ridge regression on real-valued labels (the paper's experiments).
+    #[default]
+    Ridge,
+    /// Logistic regression on `{0, 1}` labels.
+    Logistic,
+}
+
+impl Workload {
+    /// Parse `ridge` | `logistic` (alias `logit`).
+    pub fn parse(s: &str) -> Result<Workload> {
+        match s {
+            "ridge" => Ok(Workload::Ridge),
+            "logistic" | "logit" => Ok(Workload::Logistic),
+            other => bail!(
+                "unknown workload '{other}' (expected ridge | logistic)"
+            ),
+        }
+    }
+
+    /// Compact display/config form (round-trips through [`parse`](Self::parse)).
+    pub fn label(self) -> &'static str {
+        match self {
+            Workload::Ridge => "ridge",
+            Workload::Logistic => "logistic",
+        }
+    }
+
+    /// Full-dataset empirical risk of `w` under this workload's
+    /// per-sample loss (`reg` = λ/N). This is the quantity every loss
+    /// curve and final-loss sweep reports.
+    pub fn full_loss(self, ds: &Dataset, w: &[f64], reg: f64) -> f64 {
+        match self {
+            Workload::Ridge => ds.ridge_loss(w, reg),
+            Workload::Logistic => crate::linalg::kernels::batch_logistic_loss(
+                &ds.x, &ds.y, ds.d, w, reg,
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_labels_round_trip() {
+        for w in [Workload::Ridge, Workload::Logistic] {
+            assert_eq!(Workload::parse(w.label()).unwrap(), w);
+        }
+        assert_eq!(Workload::parse("logit").unwrap(), Workload::Logistic);
+        assert!(Workload::parse("svm").is_err());
+    }
+
+    #[test]
+    fn full_loss_dispatches_per_workload() {
+        let ds = Dataset::new(
+            vec![1.0, 0.0, 0.0, 1.0],
+            vec![1.0, 0.0],
+            2,
+            2,
+        );
+        let w = [0.0, 0.0];
+        let ridge = Workload::Ridge.full_loss(&ds, &w, 0.0);
+        // errors 1, 0 -> mean 0.5
+        assert!((ridge - 0.5).abs() < 1e-12);
+        let logit = Workload::Logistic.full_loss(&ds, &w, 0.0);
+        // zero margins -> ln 2 per sample
+        assert!((logit - std::f64::consts::LN_2).abs() < 1e-12);
+    }
+}

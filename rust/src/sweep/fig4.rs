@@ -162,6 +162,7 @@ pub fn fig4_data(
         store_capacity: None,
         collect_snapshots: false,
         event_capacity: 0,
+        workload: crate::model::Workload::Ridge,
     };
 
     // 1. bound optimum ñ_c (cheap, closed form)

@@ -3,13 +3,17 @@
 //! CLI can run ANY protocol variant — not just the paper's single-device
 //! fixed-`n_c` setting — from one code path.
 //!
-//! A scenario is three orthogonal axes plus an optional store bound:
+//! A scenario is four orthogonal axes plus an optional store bound:
 //!
-//! * [`ChannelSpec`] — `ideal`, `erasure:<p>`, `rate:<r>[:<p>]`
+//! * [`ChannelSpec`] — `ideal`, `erasure:<p>`, `rate:<r>[:<p>]`,
+//!   `fading:<p_gb>:<p_bg>:<p_bad>[:<p_good>[:<r_bad>[:<r_good>]]]`
+//!   (Gilbert–Elliott good/bad Markov states, clocked per packet)
 //! * [`PolicySpec`] — `fixed[:n_c]`, `warmup:<start>:<growth>[:<cap>]`,
 //!   `deadline:<frac>`, `sequential[:n_c]`, `allfirst`
 //! * [`TrafficSpec`] — `<k>` round-robin devices, or `online:<rate>`
 //!   streaming arrivals
+//! * [`Workload`] — `ridge` regression (the paper) or `logistic`
+//!   classification (labels derived by median-binarizing the dataset)
 //!
 //! Each axis parses from the compact string form above (used by
 //! `scenario.*` config keys and the `edgepipe scenario` subcommand), and
@@ -20,7 +24,8 @@
 use anyhow::{bail, Context, Result};
 
 use crate::channel::{
-    Channel, Delivery, ErasureChannel, IdealChannel, RateLimitedChannel,
+    Channel, Delivery, ErasureChannel, GilbertElliottChannel, IdealChannel,
+    LinkState, RateLimitedChannel,
 };
 use crate::coordinator::des::DesConfig;
 use crate::coordinator::run::RunResult;
@@ -29,10 +34,11 @@ use crate::coordinator::scheduler::{
     OverlapMode, RoundRobinSource, RunStats, RunWorkspace,
     SingleDeviceSource,
 };
+use crate::data::classify::binarize_labels;
 use crate::data::Dataset;
 use crate::extensions::adaptive::{DeadlineAwareSchedule, WarmupSchedule};
 use crate::extensions::multi_device::shard_dataset;
-use crate::model::RidgeModel;
+use crate::model::{LogisticModel, RidgeModel, Workload};
 use crate::util::rng::Pcg32;
 
 /// Which channel carries the blocks.
@@ -44,12 +50,70 @@ pub enum ChannelSpec {
     Erasure { p: f64 },
     /// Relative rate `rate` over an erasure link with probability `p`.
     Rate { rate: f64, p: f64 },
+    /// Gilbert–Elliott two-state fading: good/bad Markov states with
+    /// per-state erasure probability and rate, transitions clocked per
+    /// packet. `p_gb = 0` pins the chain to the good state, making it
+    /// stream-identical to `Erasure { p: p_good }`.
+    Fading {
+        p_gb: f64,
+        p_bg: f64,
+        p_good: f64,
+        p_bad: f64,
+        rate_good: f64,
+        rate_bad: f64,
+    },
 }
 
 impl ChannelSpec {
-    /// Parse `ideal` | `erasure:<p>` | `rate:<r>[:<p>]`.
+    /// Parse `ideal` | `erasure:<p>` | `rate:<r>[:<p>]` |
+    /// `fading:<p_gb>:<p_bg>:<p_bad>[:<p_good>[:<r_bad>[:<r_good>]]]`
+    /// (defaults: `p_good = 0`, `r_bad = r_good = 1`).
     pub fn parse(s: &str) -> Result<ChannelSpec> {
         let parts: Vec<&str> = s.split(':').collect();
+        let f64_at = |i: usize| -> Result<f64> {
+            parts[i]
+                .parse::<f64>()
+                .with_context(|| format!("bad number '{}' in '{s}'", parts[i]))
+        };
+        match parts[0] {
+            "fading" if (4..=7).contains(&parts.len()) => {
+                let p_gb = f64_at(1)?;
+                let p_bg = f64_at(2)?;
+                let p_bad = f64_at(3)?;
+                let p_good =
+                    if parts.len() > 4 { f64_at(4)? } else { 0.0 };
+                let rate_bad =
+                    if parts.len() > 5 { f64_at(5)? } else { 1.0 };
+                let rate_good =
+                    if parts.len() > 6 { f64_at(6)? } else { 1.0 };
+                for (name, p) in [("p_gb", p_gb), ("p_bg", p_bg)] {
+                    if !(0.0..=1.0).contains(&p) {
+                        bail!("fading {name} must be in [0, 1], got {p}");
+                    }
+                }
+                for (name, p) in [("p_bad", p_bad), ("p_good", p_good)] {
+                    if !(0.0..1.0).contains(&p) {
+                        bail!("fading {name} must be in [0, 1), got {p}");
+                    }
+                }
+                for (name, r) in
+                    [("rate_bad", rate_bad), ("rate_good", rate_good)]
+                {
+                    if r <= 0.0 {
+                        bail!("fading {name} must be positive, got {r}");
+                    }
+                }
+                return Ok(ChannelSpec::Fading {
+                    p_gb,
+                    p_bg,
+                    p_good,
+                    p_bad,
+                    rate_good,
+                    rate_bad,
+                });
+            }
+            _ => {}
+        }
         match parts[0] {
             "ideal" if parts.len() == 1 => Ok(ChannelSpec::Ideal),
             "erasure" if parts.len() == 2 => {
@@ -80,9 +144,28 @@ impl ChannelSpec {
                 Ok(ChannelSpec::Rate { rate, p })
             }
             other => bail!(
-                "unknown channel '{other}' \
-                 (expected ideal | erasure:<p> | rate:<r>[:<p>])"
+                "unknown or malformed channel '{other}' (expected ideal | \
+                 erasure:<p> | rate:<r>[:<p>] | \
+                 fading:<p_gb>:<p_bg>:<p_bad>[:<p_good>[:<r_bad>[:<r_good>]]])"
             ),
+        }
+    }
+
+    /// Expected long-run slowdown factor of the channel relative to the
+    /// ideal unit-rate link (≥ 1 for loss, ≤ 1 for a faster rate): the
+    /// factor by which the effective transmission budget shrinks. Used
+    /// by `bound::validate` to make the Corollary-1 recommendation
+    /// channel-aware. For fading this is the stationary mixture of the
+    /// per-state occupancies (exact in the stationary regime).
+    pub fn expected_slowdown(&self) -> f64 {
+        match *self {
+            ChannelSpec::Ideal => 1.0,
+            ChannelSpec::Erasure { p } => 1.0 / (1.0 - p),
+            ChannelSpec::Rate { rate, p } => 1.0 / ((1.0 - p) * rate),
+            ChannelSpec::Fading { .. } => match self.make() {
+                ScenarioChannel::Fading(ge) => ge.expected_slowdown(),
+                _ => unreachable!("fading spec builds a fading channel"),
+            },
         }
     }
 
@@ -97,6 +180,19 @@ impl ChannelSpec {
             ChannelSpec::Rate { rate, p } => ScenarioChannel::Rate(
                 RateLimitedChannel::new(rate, ErasureChannel::new(p)),
             ),
+            ChannelSpec::Fading {
+                p_gb,
+                p_bg,
+                p_good,
+                p_bad,
+                rate_good,
+                rate_bad,
+            } => ScenarioChannel::Fading(GilbertElliottChannel::new(
+                p_gb,
+                p_bg,
+                LinkState::new(rate_good, p_good),
+                LinkState::new(rate_bad, p_bad),
+            )),
         }
     }
 
@@ -110,6 +206,28 @@ impl ChannelSpec {
             ChannelSpec::Ideal => "ideal".to_string(),
             ChannelSpec::Erasure { p } => format!("erasure:{p}"),
             ChannelSpec::Rate { rate, p } => format!("rate:{rate}:{p}"),
+            ChannelSpec::Fading {
+                p_gb,
+                p_bg,
+                p_good,
+                p_bad,
+                rate_good,
+                rate_bad,
+            } => {
+                // print the shortest suffix-defaulted form that still
+                // round-trips through parse()
+                let mut label = format!("fading:{p_gb}:{p_bg}:{p_bad}");
+                if p_good != 0.0 || rate_bad != 1.0 || rate_good != 1.0 {
+                    label.push_str(&format!(":{p_good}"));
+                }
+                if rate_bad != 1.0 || rate_good != 1.0 {
+                    label.push_str(&format!(":{rate_bad}"));
+                }
+                if rate_good != 1.0 {
+                    label.push_str(&format!(":{rate_good}"));
+                }
+                label
+            }
         }
     }
 }
@@ -120,6 +238,7 @@ pub enum ScenarioChannel {
     Ideal(IdealChannel),
     Erasure(ErasureChannel),
     Rate(RateLimitedChannel<ErasureChannel>),
+    Fading(GilbertElliottChannel),
 }
 
 impl Channel for ScenarioChannel {
@@ -133,6 +252,7 @@ impl Channel for ScenarioChannel {
             ScenarioChannel::Ideal(c) => c.transmit(sent_at, duration, rng),
             ScenarioChannel::Erasure(c) => c.transmit(sent_at, duration, rng),
             ScenarioChannel::Rate(c) => c.transmit(sent_at, duration, rng),
+            ScenarioChannel::Fading(c) => c.transmit(sent_at, duration, rng),
         }
     }
 
@@ -141,6 +261,7 @@ impl Channel for ScenarioChannel {
             ScenarioChannel::Ideal(c) => c.describe(),
             ScenarioChannel::Erasure(c) => c.describe(),
             ScenarioChannel::Rate(c) => c.describe(),
+            ScenarioChannel::Fading(c) => c.describe(),
         }
     }
 }
@@ -351,39 +472,47 @@ pub struct ScenarioSpec {
     pub channel: ChannelSpec,
     pub policy: PolicySpec,
     pub traffic: TrafficSpec,
+    /// Which per-sample loss the edge trains (ridge = the paper).
+    pub workload: Workload,
     /// Edge store capacity (None = unbounded).
     pub store_capacity: Option<usize>,
 }
 
 impl ScenarioSpec {
     /// The paper's reference scenario (ideal channel, fixed `n_c`, one
-    /// device) — [`mc_final_loss`](crate::sweep::runner::mc_final_loss)
+    /// device, ridge) —
+    /// [`mc_final_loss`](crate::sweep::runner::mc_final_loss)
     /// runs exactly this.
     pub fn paper() -> ScenarioSpec {
         ScenarioSpec {
             channel: ChannelSpec::Ideal,
             policy: PolicySpec::Fixed { n_c: 0 },
             traffic: TrafficSpec::Devices(1),
+            workload: Workload::Ridge,
             store_capacity: None,
         }
     }
 
-    /// Parse the three axis strings (`store` 0 = unbounded).
+    /// Parse the four axis strings (`store` 0 = unbounded).
     pub fn parse(
         channel: &str,
         policy: &str,
         traffic: &str,
+        workload: &str,
         store: usize,
     ) -> Result<ScenarioSpec> {
         Ok(ScenarioSpec {
             channel: ChannelSpec::parse(channel)?,
             policy: PolicySpec::parse(policy)?,
             traffic: TrafficSpec::parse(traffic)?,
+            workload: Workload::parse(workload)?,
             store_capacity: if store == 0 { None } else { Some(store) },
         })
     }
 
-    /// Compact display label, e.g. `erasure:0.1|warmup:16:2|k4`.
+    /// Compact display label, e.g. `erasure:0.1|warmup:16:2|k4` (the
+    /// default ridge workload is omitted for continuity with pre-axis
+    /// labels).
     pub fn label(&self) -> String {
         let mut label = format!(
             "{}|{}|{}",
@@ -391,6 +520,9 @@ impl ScenarioSpec {
             self.policy.label(),
             self.traffic.label()
         );
+        if self.workload != Workload::Ridge {
+            label.push_str(&format!("|{}", self.workload.label()));
+        }
         if let Some(cap) = self.store_capacity {
             label.push_str(&format!("|cap{cap}"));
         }
@@ -445,7 +577,42 @@ pub fn registry() -> Vec<(&'static str, ScenarioSpec)> {
         ),
         (
             "limited-memory",
-            ScenarioSpec { store_capacity: Some(1000), ..base },
+            ScenarioSpec { store_capacity: Some(1000), ..base.clone() },
+        ),
+        (
+            // bursty link: fades every ~20 packets, lasting ~4 packets,
+            // losing 60% of attempts at half rate while faded
+            "fading",
+            ScenarioSpec {
+                channel: ChannelSpec::Fading {
+                    p_gb: 0.05,
+                    p_bg: 0.25,
+                    p_good: 0.0,
+                    p_bad: 0.6,
+                    rate_good: 1.0,
+                    rate_bad: 0.5,
+                },
+                ..base.clone()
+            },
+        ),
+        (
+            "logistic",
+            ScenarioSpec { workload: Workload::Logistic, ..base.clone() },
+        ),
+        (
+            "fading-logistic",
+            ScenarioSpec {
+                channel: ChannelSpec::Fading {
+                    p_gb: 0.05,
+                    p_bg: 0.25,
+                    p_good: 0.0,
+                    p_bad: 0.6,
+                    rate_good: 1.0,
+                    rate_bad: 0.5,
+                },
+                workload: Workload::Logistic,
+                ..base
+            },
         ),
     ]
 }
@@ -459,26 +626,43 @@ pub fn from_name(name: &str) -> Option<ScenarioSpec> {
 }
 
 /// Executes one [`ScenarioSpec`] deterministically per [`DesConfig`].
-/// Shards are built once at construction; every [`run`](Self::run) call
+/// Shards (and, for the logistic workload, the median-binarized label
+/// view) are built once at construction; every [`run`](Self::run) call
 /// builds a fresh channel/source/policy/executor, so a single runner can
 /// serve many seeds from many threads concurrently.
 pub struct ScenarioRunner<'a> {
     ds: &'a Dataset,
+    /// Classification view (labels binarized at the median) used when
+    /// the workload is logistic; covariates are shared with `ds`.
+    class_ds: Option<Dataset>,
     spec: ScenarioSpec,
     shards: Vec<Dataset>,
 }
 
 impl<'a> ScenarioRunner<'a> {
     pub fn new(spec: ScenarioSpec, ds: &'a Dataset) -> ScenarioRunner<'a> {
-        let shards = match spec.traffic {
-            TrafficSpec::Devices(k) if k > 1 => shard_dataset(ds, k),
-            _ => Vec::new(),
+        let class_ds = match spec.workload {
+            Workload::Ridge => None,
+            Workload::Logistic => Some(binarize_labels(ds)),
         };
-        ScenarioRunner { ds, spec, shards }
+        let shards = {
+            let eff = class_ds.as_ref().unwrap_or(ds);
+            match spec.traffic {
+                TrafficSpec::Devices(k) if k > 1 => shard_dataset(eff, k),
+                _ => Vec::new(),
+            }
+        };
+        ScenarioRunner { ds, class_ds, spec, shards }
     }
 
     pub fn spec(&self) -> &ScenarioSpec {
         &self.spec
+    }
+
+    /// The dataset the scenario actually trains on (the workload's
+    /// label view over the shared covariates).
+    pub fn data(&self) -> &Dataset {
+        self.class_ds.as_ref().unwrap_or(self.ds)
     }
 
     /// One deterministic run of the scenario on the native backend.
@@ -504,36 +688,57 @@ impl<'a> ScenarioRunner<'a> {
         ws: &mut RunWorkspace,
         cfg: &DesConfig,
     ) -> Result<RunStats> {
+        let ds = self.data();
         let cfg = DesConfig {
             store_capacity: self
                 .spec
                 .store_capacity
                 .or(cfg.store_capacity),
+            workload: self.spec.workload,
             ..cfg.clone()
         };
         let mut channel = self.spec.channel.make();
-        let mut policy = self.spec.policy.make(&cfg, self.ds.n);
+        let mut policy = self.spec.policy.make(&cfg, ds.n);
         let mode = self.spec.policy.overlap();
-        let mut exec = crate::coordinator::executor::NativeExecutor::new(
-            RidgeModel::new(self.ds.d, cfg.lambda, self.ds.n),
-            cfg.alpha,
-        );
+        // both executors live on the stack; only the workload's one is
+        // initialized and borrowed as the dyn seam
+        let mut ridge_exec;
+        let mut logit_exec;
+        let exec: &mut dyn crate::coordinator::executor::BlockExecutor =
+            match self.spec.workload {
+                Workload::Ridge => {
+                    ridge_exec =
+                        crate::coordinator::executor::NativeExecutor::new(
+                            RidgeModel::new(ds.d, cfg.lambda, ds.n),
+                            cfg.alpha,
+                        );
+                    &mut ridge_exec
+                }
+                Workload::Logistic => {
+                    logit_exec =
+                        crate::coordinator::executor::NativeExecutor::new(
+                            LogisticModel::new(ds.d, cfg.lambda, ds.n),
+                            cfg.alpha,
+                        );
+                    &mut logit_exec
+                }
+            };
         match self.spec.traffic {
             TrafficSpec::Devices(1) => {
                 let mut source = SingleDeviceSource::with_buf(
-                    self.ds,
+                    ds,
                     cfg.seed,
                     std::mem::take(&mut ws.src_buf),
                 );
                 let stats = run_schedule_with(
                     ws,
-                    self.ds,
+                    ds,
                     &cfg,
                     &mut source,
                     &mut policy,
                     mode,
                     &mut channel,
-                    &mut exec,
+                    exec,
                 );
                 ws.src_buf = source.into_buf();
                 stats
@@ -546,33 +751,33 @@ impl<'a> ScenarioRunner<'a> {
                 );
                 let stats = run_schedule_with(
                     ws,
-                    self.ds,
+                    ds,
                     &cfg,
                     &mut source,
                     &mut policy,
                     mode,
                     &mut channel,
-                    &mut exec,
+                    exec,
                 );
                 ws.lane_bufs = source.into_bufs();
                 stats
             }
             TrafficSpec::Online { rate } => {
                 let mut source = OnlineArrivalSource::with_buf(
-                    self.ds,
+                    ds,
                     rate,
                     cfg.seed,
                     std::mem::take(&mut ws.src_buf),
                 );
                 let stats = run_schedule_with(
                     ws,
-                    self.ds,
+                    ds,
                     &cfg,
                     &mut source,
                     &mut policy,
                     mode,
                     &mut channel,
-                    &mut exec,
+                    exec,
                 );
                 ws.src_buf = source.into_buf();
                 stats
@@ -595,6 +800,33 @@ mod tests {
         assert_eq!(
             ChannelSpec::parse("rate:2.0:0.1").unwrap(),
             ChannelSpec::Rate { rate: 2.0, p: 0.1 }
+        );
+        assert_eq!(
+            ChannelSpec::parse("fading:0.05:0.25:0.6").unwrap(),
+            ChannelSpec::Fading {
+                p_gb: 0.05,
+                p_bg: 0.25,
+                p_good: 0.0,
+                p_bad: 0.6,
+                rate_good: 1.0,
+                rate_bad: 1.0,
+            }
+        );
+        assert_eq!(
+            ChannelSpec::parse("fading:0.1:0.3:0.5:0.05:0.5:2").unwrap(),
+            ChannelSpec::Fading {
+                p_gb: 0.1,
+                p_bg: 0.3,
+                p_good: 0.05,
+                p_bad: 0.5,
+                rate_good: 2.0,
+                rate_bad: 0.5,
+            }
+        );
+        assert_eq!(Workload::parse("ridge").unwrap(), Workload::Ridge);
+        assert_eq!(
+            Workload::parse("logistic").unwrap(),
+            Workload::Logistic
         );
         assert_eq!(
             PolicySpec::parse("fixed:437").unwrap(),
@@ -623,21 +855,76 @@ mod tests {
         assert!(ChannelSpec::parse("laser").is_err());
         assert!(ChannelSpec::parse("erasure").is_err());
         assert!(ChannelSpec::parse("erasure:1.5").is_err());
+        assert!(ChannelSpec::parse("fading").is_err());
+        assert!(ChannelSpec::parse("fading:0.1:0.2").is_err());
+        assert!(ChannelSpec::parse("fading:1.5:0.2:0.5").is_err());
+        assert!(ChannelSpec::parse("fading:0.1:0.2:1.0").is_err());
+        assert!(ChannelSpec::parse("fading:0.1:0.2:0.5:0:0").is_err());
         assert!(PolicySpec::parse("warmup:0:2.0").is_err());
         assert!(PolicySpec::parse("deadline:0").is_err());
         assert!(PolicySpec::parse("bogus").is_err());
         assert!(TrafficSpec::parse("0").is_err());
         assert!(TrafficSpec::parse("online:-1").is_err());
+        assert!(Workload::parse("svm").is_err());
     }
 
     #[test]
     fn labels_round_trip() {
-        let spec = ScenarioSpec::parse("erasure:0.1", "warmup:8:2", "4", 500)
-            .unwrap();
+        let spec =
+            ScenarioSpec::parse("erasure:0.1", "warmup:8:2", "4", "ridge", 500)
+                .unwrap();
         assert_eq!(spec.label(), "erasure:0.1|warmup:8:2|k4|cap500");
-        let re = ScenarioSpec::parse("erasure:0.1", "warmup:8:2", "4", 500)
-            .unwrap();
+        let re =
+            ScenarioSpec::parse("erasure:0.1", "warmup:8:2", "4", "ridge", 500)
+                .unwrap();
         assert_eq!(spec, re);
+    }
+
+    #[test]
+    fn fading_and_workload_labels_round_trip() {
+        for s in [
+            "fading:0.05:0.25:0.6",
+            "fading:0.05:0.25:0.6:0.01",
+            "fading:0.05:0.25:0.6:0:0.5",
+            "fading:0.05:0.25:0.6:0:0.5:2",
+        ] {
+            let spec = ChannelSpec::parse(s).unwrap();
+            let re = ChannelSpec::parse(&spec.label()).unwrap();
+            assert_eq!(spec, re, "label '{}' of '{s}'", spec.label());
+        }
+        let spec = ScenarioSpec::parse(
+            "fading:0.05:0.25:0.6",
+            "fixed",
+            "1",
+            "logistic",
+            0,
+        )
+        .unwrap();
+        assert_eq!(spec.label(), "fading:0.05:0.25:0.6|fixed|k1|logistic");
+        assert_eq!(spec.workload, Workload::Logistic);
+        // the ridge default keeps historical labels unchanged
+        assert_eq!(ScenarioSpec::paper().label(), "ideal|fixed|k1");
+    }
+
+    #[test]
+    fn expected_slowdown_per_channel() {
+        assert_eq!(ChannelSpec::Ideal.expected_slowdown(), 1.0);
+        let er = ChannelSpec::Erasure { p: 0.5 }.expected_slowdown();
+        assert!((er - 2.0).abs() < 1e-12);
+        let rt = ChannelSpec::Rate { rate: 2.0, p: 0.0 }.expected_slowdown();
+        assert!((rt - 0.5).abs() < 1e-12);
+        // π_bad = 0.05/(0.05+0.25) = 1/6; slowdown =
+        // 5/6·1 + 1/6·(1/(0.4·0.5)) = 5/6 + 5/6 = 5/3
+        let fd = ChannelSpec::Fading {
+            p_gb: 0.05,
+            p_bg: 0.25,
+            p_good: 0.0,
+            p_bad: 0.6,
+            rate_good: 1.0,
+            rate_bad: 0.5,
+        }
+        .expected_slowdown();
+        assert!((fd - 5.0 / 3.0).abs() < 1e-12, "fading slowdown {fd}");
     }
 
     #[test]

@@ -1,0 +1,172 @@
+//! Golden-trace snapshots: deterministic event-stream fixtures.
+//!
+//! A protocol run's [`Event`] stream is a complete, loss-value-free
+//! record of what the scheduler did — when each block was sent, how
+//! many ARQ attempts it took, how many SGD updates ran in each compute
+//! window. Snapshotting it pins the *semantics* of every scenario axis:
+//! any change to RNG stream consumption, channel timing, policy sizing
+//! or trainer clocking shows up as a one-line diff.
+//!
+//! Format (`rust/tests/golden/<name>.trace`): a header line, then one
+//! event per line as `<f64 bits of t as hex> t=<t:?> <kind:?>`. Times
+//! are serialized through their exact bit pattern, so comparison is
+//! bit-exact and platform-independent; the human-readable forms are for
+//! diff readability only.
+//!
+//! Modes of [`assert_golden_trace`]:
+//!
+//! * fixture exists → compare, panic on the first diverging line;
+//! * `EDGEPIPE_REGEN_GOLDEN=1` → rewrite the fixture and pass (use
+//!   after an *intentional* semantic change, then commit the diff);
+//! * fixture missing → write it and pass ("bootstrap": the first
+//!   toolchain-bearing run materializes the fixtures; CI fails if the
+//!   working tree is dirty under `rust/tests/golden/` afterwards, so a
+//!   fixture can never silently regenerate on CI).
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use crate::coordinator::events::Event;
+
+/// Serializes fixture reads/writes: tests in one binary run on parallel
+/// threads, and two tests may assert against the SAME fixture (the
+/// fading ≡ erasure equivalence does); without the lock a bootstrap
+/// write could race a concurrent read into a spurious mismatch.
+static GOLDEN_LOCK: Mutex<()> = Mutex::new(());
+
+/// Directory holding the committed fixtures.
+pub fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust")
+        .join("tests")
+        .join("golden")
+}
+
+fn fixture_path(name: &str) -> PathBuf {
+    assert!(
+        name.chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-'),
+        "fixture names are [A-Za-z0-9_-]: '{name}'"
+    );
+    fixture_dir().join(format!("{name}.trace"))
+}
+
+/// Serialize an event stream into the canonical golden-trace text.
+pub fn render_trace(label: &str, events: &[Event]) -> String {
+    let mut out = String::new();
+    writeln!(out, "# edgepipe golden trace v1 · {label}").unwrap();
+    writeln!(out, "# events: {}", events.len()).unwrap();
+    for e in events {
+        writeln!(out, "{:016x} t={:?} {:?}", e.t.to_bits(), e.t, e.kind)
+            .unwrap();
+    }
+    out
+}
+
+/// Compare `rendered` against the committed fixture `name` (see the
+/// module docs for the regen/bootstrap modes).
+pub fn assert_golden_trace(name: &str, rendered: &str) {
+    let _guard = GOLDEN_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let path = fixture_path(name);
+    let regen = std::env::var("EDGEPIPE_REGEN_GOLDEN")
+        .map(|v| v == "1")
+        .unwrap_or(false);
+    if regen || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap())
+            .unwrap_or_else(|e| panic!("mkdir {}: {e}", path.display()));
+        std::fs::write(&path, rendered)
+            .unwrap_or_else(|e| panic!("write {}: {e}", path.display()));
+        eprintln!(
+            "golden: {} fixture {}",
+            if regen { "regenerated" } else { "bootstrapped" },
+            path.display()
+        );
+        return;
+    }
+    let expected = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    if expected == rendered {
+        return;
+    }
+    // locate the first diverging line for an actionable failure
+    let mut line_no = 0usize;
+    let mut want_line = "<missing>";
+    let mut got_line = "<missing>";
+    for (i, pair) in expected
+        .lines()
+        .map(Some)
+        .chain(std::iter::repeat(None))
+        .zip(rendered.lines().map(Some).chain(std::iter::repeat(None)))
+        .enumerate()
+    {
+        match pair {
+            (None, None) => break,
+            (w, g) if w != g => {
+                line_no = i + 1;
+                want_line = w.unwrap_or("<missing>");
+                got_line = g.unwrap_or("<missing>");
+                break;
+            }
+            _ => {}
+        }
+    }
+    panic!(
+        "golden trace '{name}' diverged from {} at line {line_no}:\n  \
+         fixture: {want_line}\n  actual : {got_line}\n\
+         If this change is intentional, rerun with \
+         EDGEPIPE_REGEN_GOLDEN=1 and commit the fixture diff.",
+        path.display()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::events::EventKind;
+
+    fn sample_events() -> Vec<Event> {
+        vec![
+            Event { t: 0.0, kind: EventKind::BlockSent { block: 1, payload: 8 } },
+            Event {
+                t: 18.0,
+                kind: EventKind::BlockDelivered {
+                    block: 1,
+                    payload: 8,
+                    attempts: 2,
+                },
+            },
+            Event { t: 18.0, kind: EventKind::UpdatesRun { count: 18 } },
+            Event {
+                t: 40.0,
+                kind: EventKind::Finished { updates: 40, delivered_samples: 8 },
+            },
+        ]
+    }
+
+    #[test]
+    fn render_is_deterministic_and_bit_exact() {
+        let a = render_trace("unit", &sample_events());
+        let b = render_trace("unit", &sample_events());
+        assert_eq!(a, b);
+        // the hex field is the exact f64 bit pattern
+        assert!(a.contains(&format!("{:016x}", 18.0f64.to_bits())));
+        assert_eq!(a.lines().count(), 2 + 4, "header + one line per event");
+    }
+
+    #[test]
+    fn distinct_times_render_distinct_lines() {
+        let mut evs = sample_events();
+        let a = render_trace("unit", &evs);
+        // perturb one time by 1 ulp — must change the rendering
+        evs[1].t = f64::from_bits(evs[1].t.to_bits() + 1);
+        let b = render_trace("unit", &evs);
+        assert_ne!(a, b, "1-ulp time changes must be visible");
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_fixture_names_are_rejected() {
+        assert_golden_trace("../escape", "x");
+    }
+}

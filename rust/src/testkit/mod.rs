@@ -1,4 +1,5 @@
-//! Property-testing mini-framework (the offline image has no proptest).
+//! Property-testing mini-framework (the offline image has no proptest)
+//! plus the golden-trace snapshot harness ([`golden`]).
 //!
 //! Provides seeded random generators and a `forall` runner that reports
 //! the failing case's seed and a shrunk reproduction hint. Used by the
@@ -12,6 +13,10 @@
 //!     assert_eq!(a + b, b + a);
 //! });
 //! ```
+
+pub mod golden;
+
+pub use golden::{assert_golden_trace, render_trace};
 
 use crate::util::rng::Pcg32;
 

@@ -316,6 +316,75 @@ mod tests {
     }
 
     #[test]
+    fn with_workspace_panic_carries_index_and_leaves_pool_reusable() {
+        // regression for the PR 1 fix, exercised through the WORKSPACE
+        // entry point the sweeps actually use: a panicking task must
+        // re-raise with its index, and the same machinery must serve a
+        // subsequent sweep with fresh workspaces as if nothing happened
+        let items: Vec<usize> = (0..64).collect();
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            parallel_map_with(
+                &items,
+                4,
+                || Vec::<usize>::with_capacity(8),
+                |ws, &x| {
+                    ws.push(x);
+                    if x == 21 {
+                        panic!("workspace task blew up at {x}");
+                    }
+                    x * 2
+                },
+            )
+        }));
+        let payload = result.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .expect("panic message should be a String");
+        assert!(
+            msg.contains("task 21") && msg.contains("blew up at 21"),
+            "unexpected panic message: {msg}"
+        );
+        // the pool machinery (and workspace construction) still works
+        let built = AtomicUsize::new(0);
+        let ok = parallel_map_with(
+            &items,
+            4,
+            || {
+                built.fetch_add(1, Ordering::Relaxed);
+                0u64
+            },
+            |_, &x| x + 1,
+        );
+        assert_eq!(ok, (1..=64).collect::<Vec<_>>());
+        assert!(built.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn non_string_panic_payload_is_resumed_verbatim() {
+        // payloads that aren't strings can't be prefixed with the task
+        // index — they must be re-raised unchanged, not swallowed
+        let items: Vec<usize> = (0..8).collect();
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            parallel_map_with(
+                &items,
+                2,
+                || (),
+                |_, &x| {
+                    if x == 3 {
+                        std::panic::panic_any(1337usize);
+                    }
+                    x
+                },
+            )
+        }));
+        let payload = result.unwrap_err();
+        let code = payload
+            .downcast_ref::<usize>()
+            .expect("typed payload must survive the re-raise");
+        assert_eq!(*code, 1337);
+    }
+
+    #[test]
     fn default_threads_is_positive() {
         // EDGEPIPE_MAX_THREADS itself can't be exercised here (setting
         // process-global env in parallel tests races); the parse/cap

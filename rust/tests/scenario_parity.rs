@@ -267,7 +267,34 @@ fn workspace_reuse_is_bit_identical_to_fresh_runs() {
             traffic: TrafficSpec::Online { rate: 1.5 },
             ..paper.clone()
         },
-        ScenarioSpec { store_capacity: Some(120), ..paper },
+        ScenarioSpec { store_capacity: Some(120), ..paper.clone() },
+        ScenarioSpec {
+            channel: ChannelSpec::Fading {
+                p_gb: 0.05,
+                p_bg: 0.25,
+                p_good: 0.0,
+                p_bad: 0.6,
+                rate_good: 1.0,
+                rate_bad: 0.5,
+            },
+            ..paper.clone()
+        },
+        ScenarioSpec {
+            workload: edgepipe::model::Workload::Logistic,
+            ..paper.clone()
+        },
+        ScenarioSpec {
+            channel: ChannelSpec::Fading {
+                p_gb: 0.1,
+                p_bg: 0.3,
+                p_good: 0.02,
+                p_bad: 0.5,
+                rate_good: 1.0,
+                rate_bad: 1.0,
+            },
+            workload: edgepipe::model::Workload::Logistic,
+            ..paper
+        },
     ];
     let mut ws = RunWorkspace::new();
     for spec in specs {
