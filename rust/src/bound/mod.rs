@@ -18,6 +18,7 @@ pub use corollary1::{corollary1_bound, BoundParams};
 pub use optimizer::{optimize_block_size, BoundOptimum};
 pub use sensitivity::{max_regret, sensitivity_sweep, SensitivityRow};
 pub use validate::{
-    bootstrap_mean_upper, check_recommendation, logistic_reference_loss,
-    recommend_block_size, CheckConfig, RecommendationCheck,
+    aggregate_slowdown, bootstrap_mean_upper, check_recommendation,
+    logistic_reference_loss, recommend_block_size, split_budget,
+    CheckConfig, RecommendationCheck,
 };

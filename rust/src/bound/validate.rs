@@ -51,6 +51,61 @@ pub struct RecommendationCheck {
     pub gaps: Vec<f64>,
 }
 
+/// Data-share-weighted aggregate slowdown of a heterogeneous multi-lane
+/// uplink: `Σ share_i · s_i / Σ share_i`.
+///
+/// With the uplink serialized, every sample of lane `i`'s shard
+/// occupies the channel for an expected `s_i` units per nominal unit,
+/// so pushing the whole dataset through costs the share-weighted mean
+/// of the per-lane slowdowns — this is the closed form
+/// `ScenarioSpec::expected_slowdown` uses (equal shares) and the one
+/// the seeded Monte-Carlo agreement test in
+/// `rust/tests/channel_stats.rs` validates against measured channel
+/// occupancy.
+pub fn aggregate_slowdown(slowdowns: &[f64], shares: &[f64]) -> f64 {
+    assert!(!slowdowns.is_empty(), "need at least one lane");
+    assert_eq!(slowdowns.len(), shares.len(), "one share per lane");
+    assert!(
+        slowdowns.iter().all(|s| *s > 0.0),
+        "lane slowdowns must be positive"
+    );
+    assert!(
+        shares.iter().all(|w| *w >= 0.0),
+        "lane shares must be non-negative"
+    );
+    let total: f64 = shares.iter().sum();
+    assert!(total > 0.0, "lane shares must not all be zero");
+    slowdowns
+        .iter()
+        .zip(shares)
+        .map(|(s, w)| s * w)
+        .sum::<f64>()
+        / total
+}
+
+/// Split a transmission budget `t_budget` across heterogeneous lanes in
+/// proportion to each lane's expected channel occupancy
+/// (`share_i · s_i`): the wall-clock share lane `i` needs to push its
+/// data share through the serialized uplink. Sums to `t_budget`
+/// exactly up to rounding; a homogeneous uplink with equal shares
+/// splits evenly.
+pub fn split_budget(
+    t_budget: f64,
+    slowdowns: &[f64],
+    shares: &[f64],
+) -> Vec<f64> {
+    assert!(t_budget >= 0.0, "budget must be non-negative");
+    // reuse aggregate_slowdown's validation
+    let mean = aggregate_slowdown(slowdowns, shares);
+    let total_shares: f64 = shares.iter().sum();
+    let denom = mean * total_shares;
+    slowdowns
+        .iter()
+        .zip(shares)
+        .map(|(s, w)| t_budget * (s * w) / denom)
+        .collect()
+}
+
 /// Channel-aware `ñ_c`: the Corollary-1 argmin evaluated with the
 /// budget shrunk by the channel's expected slowdown (`slowdown = 1`
 /// recovers [`optimize_block_size`] exactly).
@@ -152,7 +207,9 @@ pub fn check_recommendation(
         policy: PolicySpec::Fixed { n_c: 0 },
         ..spec.clone()
     };
-    let slowdown = spec.channel.expected_slowdown();
+    // scenario-level slowdown: the channel axis for single-lane
+    // traffic, the per-device aggregate for the heterogeneous uplink
+    let slowdown = spec.expected_slowdown();
     let opt = recommend_block_size(
         params,
         ds.n,
@@ -263,6 +320,37 @@ mod tests {
         let adj = recommend_block_size(&p, 2000, 3000.0, 10.0, 1.0, 2.5);
         let direct = optimize_block_size(&p, 2000, 1200.0, 10.0, 1.0);
         assert_eq!(adj.n_c, direct.n_c);
+    }
+
+    #[test]
+    fn aggregate_slowdown_closed_forms() {
+        // equal shares -> arithmetic mean
+        let agg = aggregate_slowdown(&[1.0, 2.0, 3.0], &[1.0, 1.0, 1.0]);
+        assert!((agg - 2.0).abs() < 1e-12);
+        // homogeneous lanes -> the common slowdown, any shares
+        let agg = aggregate_slowdown(&[1.5, 1.5], &[0.9, 0.1]);
+        assert!((agg - 1.5).abs() < 1e-12);
+        // shares weight the mixture (and need not be normalized)
+        let agg = aggregate_slowdown(&[1.0, 3.0], &[3.0, 1.0]);
+        assert!((agg - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn split_budget_sums_and_orders() {
+        let t = 1200.0;
+        let slow = [1.0, 2.0, 4.0];
+        let shares = [1.0, 1.0, 1.0];
+        let split = split_budget(t, &slow, &shares);
+        assert_eq!(split.len(), 3);
+        let sum: f64 = split.iter().sum();
+        assert!((sum - t).abs() < 1e-9, "split must cover the budget");
+        // slower lanes need proportionally more wall-clock
+        assert!(split[0] < split[1] && split[1] < split[2]);
+        assert!((split[2] / split[0] - 4.0).abs() < 1e-9);
+        // homogeneous uplink with equal shares splits evenly
+        let even = split_budget(t, &[2.0, 2.0], &[0.5, 0.5]);
+        assert!((even[0] - 600.0).abs() < 1e-9);
+        assert!((even[1] - 600.0).abs() < 1e-9);
     }
 
     #[test]

@@ -5,16 +5,20 @@
 //! are implemented here as drop-in [`Channel`] implementations so the
 //! coordinator, benches and the ablations can exercise them, along with
 //! a bursty Gilbert–Elliott fading channel ([`fading`]) whose good/bad
-//! Markov states model the time-varying links of real edge deployments.
+//! Markov states model the time-varying links of real edge deployments,
+//! and a heterogeneous multi-lane uplink ([`multilane`]) giving every
+//! device of a multi-device scenario its own link.
 
 pub mod erasure;
 pub mod fading;
 pub mod ideal;
+pub mod multilane;
 pub mod rate;
 
 pub use erasure::ErasureChannel;
 pub use fading::{GilbertElliottChannel, LinkState};
 pub use ideal::IdealChannel;
+pub use multilane::MultiLaneChannel;
 pub use rate::RateLimitedChannel;
 
 use crate::util::rng::Pcg32;
@@ -45,4 +49,13 @@ pub trait Channel: Send {
 
     /// Human-readable description for logs.
     fn describe(&self) -> String;
+
+    /// Route subsequent transmissions through device `lane`'s link (the
+    /// heterogeneous multi-device uplink, [`MultiLaneChannel`]). The
+    /// scheduler core calls this once per block, before
+    /// [`transmit`](Channel::transmit), with the transmitting device's
+    /// index. Single-link channels ignore it (default no-op); an
+    /// implementation must consume no randomness here, so routing never
+    /// perturbs the `STREAM_CHANNEL` RNG discipline.
+    fn select_lane(&mut self, _lane: usize) {}
 }

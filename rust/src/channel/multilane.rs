@@ -1,0 +1,169 @@
+//! Heterogeneous multi-lane uplink: one independent link per device.
+//!
+//! The paper's Sec. 6 multi-device extension shares ONE channel between
+//! all devices. Real edge fleets are heterogeneous — each device sees its
+//! own rate, loss and fading process — so [`MultiLaneChannel`] wraps one
+//! inner [`Channel`] per device ("lane") and routes every packet through
+//! the transmitting device's lane. The uplink stays serialized (the
+//! scheduler core still sends one block at a time and advances `t_send`
+//! to the arrival), but each lane keeps its own link parameters and its
+//! own state (e.g. a per-device Gilbert–Elliott fade).
+//!
+//! Routing is driven by the scheduler loop through
+//! [`Channel::select_lane`]: after the traffic source picks the next
+//! device, the loop selects that device's lane before calling
+//! [`transmit`](Channel::transmit). Two invariants keep the determinism
+//! contract intact:
+//!
+//! * `select_lane` consumes no randomness — all channel noise still
+//!   comes from the single `STREAM_CHANNEL` RNG, drawn in transmission
+//!   order exactly as for a shared channel;
+//! * a single-lane `MultiLaneChannel` is draw-for-draw identical to its
+//!   inner channel, so the heterogeneous `k = 1` scenario stays
+//!   bit-identical to `run_des` (asserted in
+//!   `rust/tests/scenario_parity.rs`).
+
+use crate::util::rng::Pcg32;
+
+use super::{Channel, Delivery};
+
+/// Per-device links for the heterogeneous multi-device uplink.
+pub struct MultiLaneChannel<C: Channel> {
+    lanes: Vec<C>,
+    active: usize,
+}
+
+impl<C: Channel> MultiLaneChannel<C> {
+    /// Wrap one channel per device; lane 0 starts active.
+    pub fn new(lanes: Vec<C>) -> MultiLaneChannel<C> {
+        assert!(!lanes.is_empty(), "need at least one lane");
+        MultiLaneChannel { lanes, active: 0 }
+    }
+
+    /// Number of lanes.
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// The currently selected lane index.
+    pub fn active_lane(&self) -> usize {
+        self.active
+    }
+
+    /// Borrow the per-lane channels (test/diagnostic hook).
+    pub fn lanes(&self) -> &[C] {
+        &self.lanes
+    }
+
+    /// Recover the per-lane channels (buffer recycling).
+    pub fn into_lanes(self) -> Vec<C> {
+        self.lanes
+    }
+}
+
+impl<C: Channel> Channel for MultiLaneChannel<C> {
+    fn transmit(
+        &mut self,
+        sent_at: f64,
+        duration: f64,
+        rng: &mut Pcg32,
+    ) -> Delivery {
+        self.lanes[self.active].transmit(sent_at, duration, rng)
+    }
+
+    fn describe(&self) -> String {
+        let lanes: Vec<String> =
+            self.lanes.iter().map(|l| l.describe()).collect();
+        format!("multi-lane [{}]", lanes.join(" | "))
+    }
+
+    fn select_lane(&mut self, lane: usize) {
+        assert!(
+            lane < self.lanes.len(),
+            "lane {lane} out of range (have {})",
+            self.lanes.len()
+        );
+        self.active = lane;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{ErasureChannel, IdealChannel, RateLimitedChannel};
+
+    #[test]
+    fn routes_packets_through_the_selected_lane() {
+        // lane 0 at rate 1, lane 1 at rate 0.5: the same packet takes
+        // twice as long on lane 1
+        let mut ch = MultiLaneChannel::new(vec![
+            RateLimitedChannel::new(1.0, IdealChannel),
+            RateLimitedChannel::new(0.5, IdealChannel),
+        ]);
+        let mut rng = Pcg32::seeded(1);
+        ch.select_lane(0);
+        assert_eq!(ch.transmit(0.0, 4.0, &mut rng).arrival, 4.0);
+        ch.select_lane(1);
+        assert_eq!(ch.transmit(4.0, 4.0, &mut rng).arrival, 12.0);
+        assert_eq!(ch.active_lane(), 1);
+    }
+
+    #[test]
+    fn single_lane_is_stream_identical_to_the_inner_channel() {
+        let p = 0.3;
+        let mut multi = MultiLaneChannel::new(vec![ErasureChannel::new(p)]);
+        let mut plain = ErasureChannel::new(p);
+        let mut rng_a = Pcg32::new(7, 4);
+        let mut rng_b = Pcg32::new(7, 4);
+        for i in 0..300 {
+            let t = i as f64 * 2.0;
+            multi.select_lane(0);
+            let a = multi.transmit(t, 1.5, &mut rng_a);
+            let b = plain.transmit(t, 1.5, &mut rng_b);
+            assert_eq!(a, b, "packet {i} diverged");
+        }
+    }
+
+    #[test]
+    fn lanes_keep_independent_state() {
+        use crate::channel::{GilbertElliottChannel, LinkState};
+        // lane 0 flips state every packet; lane 1 never leaves good.
+        // Routing through lane 1 must not advance lane 0's chain.
+        let flippy = GilbertElliottChannel::new(
+            1.0,
+            1.0,
+            LinkState::new(1.0, 0.0),
+            LinkState::new(0.5, 0.0),
+        );
+        let pinned = GilbertElliottChannel::new(
+            0.0,
+            0.0,
+            LinkState::new(1.0, 0.0),
+            LinkState::new(0.5, 0.0),
+        );
+        let mut ch = MultiLaneChannel::new(vec![flippy, pinned]);
+        let mut rng = Pcg32::seeded(3);
+        ch.select_lane(0);
+        ch.transmit(0.0, 1.0, &mut rng);
+        assert!(ch.lanes()[0].is_bad(), "lane 0 flipped into the fade");
+        ch.select_lane(1);
+        for _ in 0..5 {
+            ch.transmit(0.0, 1.0, &mut rng);
+        }
+        assert!(ch.lanes()[0].is_bad(), "lane 1 traffic advanced lane 0");
+        assert!(!ch.lanes()[1].is_bad());
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_lane_is_rejected() {
+        let mut ch = MultiLaneChannel::new(vec![IdealChannel]);
+        ch.select_lane(1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_lane_set_is_rejected() {
+        MultiLaneChannel::<IdealChannel>::new(Vec::new());
+    }
+}

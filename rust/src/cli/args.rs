@@ -43,8 +43,18 @@ SCENARIO OPTIONS (scenario command):
     --policies <a,b,..>      policy specs: fixed[:n_c] | warmup:<s>:<g>[:<cap>]
                              | deadline:<frac> | sequential[:n_c] | allfirst
     --devices <a,b,..>       traffic specs: <k> devices | online:<rate>
+                             | devices:<k>[:sched=..][:skew=..]
     --workloads <a,b,..>     workload specs: ridge | logistic
     (the cross product of the four lists runs in one parallel sweep)
+    --device-channels <a,b,..>  per-device channels for the heterogeneous
+                             uplink (1 spec broadcast, or exactly k);
+                             upgrades plain <k> traffic entries, incl.
+                             inside --preset specs
+    --device-sched <s>       device scheduler: rr | greedy (fastest
+                             expected finish) | pfair (data-debt
+                             proportional-fair)  [default: rr]
+    --device-skew <f>        label skew of device shards in [0,1]
+                             (0 = IID round-robin, 1 = label-sorted)
 
 OPTIMIZE OPTIONS (optimize command):
     --mc <seeds>             validate the channel-aware recommendation by
@@ -72,6 +82,9 @@ EXAMPLES:
     edgepipe scenario --preset all --set sweep.seeds=20
     edgepipe scenario --channels ideal,erasure:0.1,fading:0.05:0.25:0.6 \\
         --policies fixed,warmup:16:2 --devices 1,4 --workloads ridge,logistic
+    edgepipe scenario --devices 4 --device-sched greedy \\
+        --device-channels ideal,erasure:0.2,fading:0.05:0.25:0.6,rate:0.5 \\
+        --device-skew 0.5
     edgepipe bench --json BENCH_sweep.json
 ";
 

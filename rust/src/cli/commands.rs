@@ -464,7 +464,10 @@ fn cmd_sweep(args: &Args) -> Result<i32> {
 /// Monte-Carlo sweep over scenario specs (channel × policy × traffic).
 fn cmd_scenario(args: &Args) -> Result<i32> {
     use crate::sweep::runner::scenario_grid;
-    use crate::sweep::scenario::{from_name, registry, ScenarioSpec};
+    use crate::sweep::scenario::{
+        from_name, registry, ChannelSpec, HeteroSpec, ScenarioSpec,
+        SchedulerSpec, TrafficSpec,
+    };
 
     let cfg = load_config(args)?;
     let preset = args.extra_or("preset", "");
@@ -502,15 +505,58 @@ fn cmd_scenario(args: &Args) -> Result<i32> {
             .filter(|t| !t.is_empty())
             .collect()
     };
+    // heterogeneous-uplink options: when any is set, plain `<k>` traffic
+    // specs in the sweep are upgraded to `devices:<k>` with these
+    // per-device channels / scheduler / shard skew
+    let dev_channels_str =
+        args.extra_or("device-channels", &cfg.scenario.device_channels);
+    let dev_sched_str =
+        args.extra_or("device-sched", &cfg.scenario.device_sched);
+    let dev_skew: f64 = args
+        .extra_or("device-skew", &cfg.scenario.device_skew.to_string())
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--device-skew must be a number"))?;
+    let dev_sched = SchedulerSpec::parse(&dev_sched_str)?;
+    let dev_channels: Vec<ChannelSpec> = split_list(&dev_channels_str)
+        .iter()
+        .map(|s| ChannelSpec::parse(s))
+        .collect::<Result<_>>()?;
+    let hetero_requested = !dev_channels.is_empty()
+        || dev_sched != SchedulerSpec::RoundRobin
+        || dev_skew != 0.0;
+    let upgrade = |spec: ScenarioSpec| -> Result<ScenarioSpec> {
+        match spec.traffic {
+            TrafficSpec::Devices(k) if hetero_requested => {
+                Ok(ScenarioSpec {
+                    traffic: TrafficSpec::Hetero(HeteroSpec::new(
+                        k,
+                        dev_sched,
+                        dev_skew,
+                        dev_channels.clone(),
+                    )?),
+                    ..spec
+                })
+            }
+            _ => Ok(spec),
+        }
+    };
+    // presets get the same upgrade, so `--preset multi4 --device-sched
+    // greedy` heterogenizes the preset's plain Devices(k) traffic
+    // instead of silently ignoring the device flags (a count mismatch,
+    // e.g. 4 per-device channels against the k=1 `paper` preset, is a
+    // hard error)
     let specs: Vec<ScenarioSpec> = if preset == "all" {
-        registry().into_iter().map(|(_, spec)| spec).collect()
+        registry()
+            .into_iter()
+            .map(|(_, spec)| upgrade(spec))
+            .collect::<Result<_>>()?
     } else if !preset.is_empty() {
-        vec![from_name(&preset).ok_or_else(|| {
+        vec![upgrade(from_name(&preset).ok_or_else(|| {
             anyhow::anyhow!(
                 "unknown scenario preset '{preset}' \
                  (try `edgepipe scenario --preset list`)"
             )
-        })?]
+        })?)?]
     } else {
         let channels =
             split_list(&args.extra_or("channels", &cfg.scenario.channel));
@@ -525,13 +571,13 @@ fn cmd_scenario(args: &Args) -> Result<i32> {
             for po in &policies {
                 for tr in &traffics {
                     for wl in &workloads {
-                        specs.push(ScenarioSpec::parse(
+                        specs.push(upgrade(ScenarioSpec::parse(
                             ch,
                             po,
                             tr,
                             wl,
                             cfg.scenario.store,
-                        )?);
+                        )?)?);
                     }
                 }
             }
@@ -836,6 +882,107 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(dispatch(&args).unwrap(), 0);
+    }
+
+    #[test]
+    fn scenario_hetero_sweep_runs_end_to_end() {
+        // the acceptance-criterion invocation: a 4-device heterogeneous
+        // uplink with greedy scheduling and mixed per-device channels
+        let mut extra = std::collections::BTreeMap::new();
+        extra.insert("devices".to_string(), "4".to_string());
+        extra.insert("device-sched".to_string(), "greedy".to_string());
+        extra.insert("device-skew".to_string(), "0.5".to_string());
+        extra.insert(
+            "device-channels".to_string(),
+            "ideal,erasure:0.2,fading:0.05:0.25:0.6,rate:0.5:0.1"
+                .to_string(),
+        );
+        let args = Args {
+            command: "scenario".into(),
+            overrides: vec![
+                ("data.n_raw".into(), "400".into()),
+                ("protocol.n_c".into(), "40".into()),
+                ("sweep.seeds".into(), "2".into()),
+            ],
+            out_dir: std::env::temp_dir()
+                .join("edgepipe_hetero_test")
+                .to_string_lossy()
+                .into_owned(),
+            backend: "native".into(),
+            quiet: true,
+            extra,
+            ..Default::default()
+        };
+        assert_eq!(dispatch(&args).unwrap(), 0);
+    }
+
+    #[test]
+    fn device_flags_upgrade_presets_too() {
+        // --preset multi4 + --device-sched greedy must heterogenize the
+        // preset's Devices(4) traffic, not silently ignore the flag
+        let mut extra = std::collections::BTreeMap::new();
+        extra.insert("preset".to_string(), "multi4".to_string());
+        extra.insert("device-sched".to_string(), "greedy".to_string());
+        let args = Args {
+            command: "scenario".into(),
+            overrides: vec![
+                ("data.n_raw".into(), "300".into()),
+                ("protocol.n_c".into(), "30".into()),
+                ("sweep.seeds".into(), "2".into()),
+            ],
+            out_dir: std::env::temp_dir()
+                .join("edgepipe_hetero_preset_test")
+                .to_string_lossy()
+                .into_owned(),
+            backend: "native".into(),
+            quiet: true,
+            extra,
+            ..Default::default()
+        };
+        assert_eq!(dispatch(&args).unwrap(), 0);
+        // a channel-count mismatch against the preset's k errors out
+        let mut extra = std::collections::BTreeMap::new();
+        extra.insert("preset".to_string(), "multi4".to_string());
+        extra.insert(
+            "device-channels".to_string(),
+            "ideal,ideal".to_string(),
+        );
+        let args = Args {
+            command: "scenario".into(),
+            overrides: vec![
+                ("data.n_raw".into(), "300".into()),
+                ("protocol.n_c".into(), "30".into()),
+            ],
+            backend: "native".into(),
+            quiet: true,
+            extra,
+            ..Default::default()
+        };
+        assert!(dispatch(&args).is_err());
+    }
+
+    #[test]
+    fn hetero_flags_reject_mismatched_channel_counts() {
+        // 4 per-device channels cannot serve a k=3 sweep entry
+        let mut extra = std::collections::BTreeMap::new();
+        extra.insert("devices".to_string(), "3".to_string());
+        extra.insert(
+            "device-channels".to_string(),
+            "ideal,ideal,ideal,ideal".to_string(),
+        );
+        let args = Args {
+            command: "scenario".into(),
+            overrides: vec![
+                ("data.n_raw".into(), "200".into()),
+                ("protocol.n_c".into(), "20".into()),
+                ("sweep.seeds".into(), "1".into()),
+            ],
+            backend: "native".into(),
+            quiet: true,
+            extra,
+            ..Default::default()
+        };
+        assert!(dispatch(&args).is_err());
     }
 
     #[test]

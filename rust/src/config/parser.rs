@@ -173,11 +173,15 @@ pub fn parse_value(text: &str) -> Result<TomlValue> {
     if let Ok(f) = text.parse::<f64>() {
         return Ok(TomlValue::Float(f));
     }
-    // bare-word fallback so axis specs like `erasure:0.1` or `fixed:437`
-    // can be written unquoted in `--set` overrides and config files
+    // bare-word fallback so axis specs like `erasure:0.1`, `fixed:437`
+    // or `devices:4:sched=greedy:ch=ideal,erasure:0.1` can be written
+    // unquoted in `--set` overrides and config files (',' and '=' cover
+    // the device-spec grammar; arrays were already consumed above, so
+    // a bare comma cannot be confused with an array separator)
     if text.chars().next().is_some_and(|c| c.is_ascii_alphabetic())
         && text.chars().all(|c| {
-            c.is_ascii_alphanumeric() || matches!(c, ':' | '.' | '_' | '-')
+            c.is_ascii_alphanumeric()
+                || matches!(c, ':' | '.' | '_' | '-' | ',' | '=')
         })
     {
         return Ok(TomlValue::Str(text.to_string()));
@@ -280,6 +284,26 @@ mod tests {
         // numbers still win over the bare-word fallback
         assert_eq!(parse_value("437").unwrap(), TomlValue::Int(437));
         assert_eq!(parse_value("1e-4").unwrap(), TomlValue::Float(1e-4));
+    }
+
+    #[test]
+    fn device_spec_bare_words_parse_as_strings() {
+        // the hetero device grammar uses '=' and ','
+        let doc = parse_toml(
+            "[scenario]\ntraffic = devices:4:sched=greedy:ch=ideal,erasure:0.1\n\
+             device_channels = ideal,fading:0.05:0.25:0.6\n",
+        )
+        .unwrap();
+        assert_eq!(
+            doc["scenario.traffic"],
+            TomlValue::Str("devices:4:sched=greedy:ch=ideal,erasure:0.1".into())
+        );
+        assert_eq!(
+            doc["scenario.device_channels"],
+            TomlValue::Str("ideal,fading:0.05:0.25:0.6".into())
+        );
+        // leading-alphabetic rule still rejects junk
+        assert!(parse_value("=x").is_err());
     }
 
     #[test]

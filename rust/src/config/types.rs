@@ -154,12 +154,22 @@ pub struct ScenarioConfig {
     /// Policy spec: `fixed[:n_c]` | `warmup:<start>:<growth>[:<cap>]` |
     /// `deadline:<frac>` | `sequential[:n_c]` | `allfirst`.
     pub policy: String,
-    /// Traffic spec: `<k>` round-robin devices | `online:<rate>`.
+    /// Traffic spec: `<k>` round-robin devices | `online:<rate>` |
+    /// `devices:<k>[:sched=<rr|greedy|pfair>][:skew=<f>][:ch=<list>]`.
     pub traffic: String,
     /// Workload spec: `ridge` | `logistic`.
     pub workload: String,
     /// Edge store capacity (0 = unbounded).
     pub store: usize,
+    /// Per-device channel list for heterogeneous sweeps (comma-separated
+    /// `ChannelSpec`s; empty = lanes inherit the channel axis). Upgrades
+    /// plain `<k>` traffic specs to the heterogeneous uplink when set.
+    pub device_channels: String,
+    /// Device scheduler for heterogeneous sweeps: `rr` | `greedy` |
+    /// `pfair`.
+    pub device_sched: String,
+    /// Label skew of the device shards in [0, 1].
+    pub device_skew: f64,
 }
 
 impl Default for ScenarioConfig {
@@ -170,6 +180,9 @@ impl Default for ScenarioConfig {
             traffic: "1".to_string(),
             workload: "ridge".to_string(),
             store: 0,
+            device_channels: String::new(),
+            device_sched: "rr".to_string(),
+            device_skew: 0.0,
         }
     }
 }
@@ -252,6 +265,15 @@ impl ExperimentConfig {
                 "scenario.store" => {
                     cfg.scenario.store = value.as_usize()?
                 }
+                "scenario.device_channels" => {
+                    cfg.scenario.device_channels = spec_string(value)?
+                }
+                "scenario.device_sched" => {
+                    cfg.scenario.device_sched = spec_string(value)?
+                }
+                "scenario.device_skew" => {
+                    cfg.scenario.device_skew = value.as_f64()?
+                }
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -282,6 +304,9 @@ impl ExperimentConfig {
         if self.data.hess_min <= 0.0 || self.data.hess_max <= self.data.hess_min
         {
             bail!("need 0 < hess_min < hess_max");
+        }
+        if !(0.0..=1.0).contains(&self.scenario.device_skew) {
+            bail!("scenario.device_skew must be in [0, 1]");
         }
         Ok(())
     }
@@ -364,6 +389,42 @@ mod tests {
         assert_eq!(d.scenario.channel, "ideal");
         assert_eq!(d.scenario.traffic, "1");
         assert_eq!(d.scenario.workload, "ridge");
+        assert_eq!(d.scenario.device_channels, "");
+        assert_eq!(d.scenario.device_sched, "rr");
+        assert_eq!(d.scenario.device_skew, 0.0);
+    }
+
+    #[test]
+    fn device_keys_load_and_validate() {
+        let cfg = ExperimentConfig::load(
+            None,
+            &[
+                (
+                    "scenario.traffic".into(),
+                    "devices:4:sched=greedy".into(),
+                ),
+                (
+                    "scenario.device_channels".into(),
+                    "ideal,erasure:0.2,fading:0.05:0.25:0.6,rate:0.5".into(),
+                ),
+                ("scenario.device_sched".into(), "pfair".into()),
+                ("scenario.device_skew".into(), "0.7".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(cfg.scenario.traffic, "devices:4:sched=greedy");
+        assert_eq!(
+            cfg.scenario.device_channels,
+            "ideal,erasure:0.2,fading:0.05:0.25:0.6,rate:0.5"
+        );
+        assert_eq!(cfg.scenario.device_sched, "pfair");
+        assert_eq!(cfg.scenario.device_skew, 0.7);
+        // skew outside [0, 1] is rejected
+        assert!(ExperimentConfig::load(
+            None,
+            &[("scenario.device_skew".into(), "1.2".into())],
+        )
+        .is_err());
     }
 
     #[test]

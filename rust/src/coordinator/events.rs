@@ -10,8 +10,9 @@ pub struct Event {
 /// Protocol event kinds.
 #[derive(Clone, Debug, PartialEq)]
 pub enum EventKind {
-    /// Device started transmitting block `block` with `payload` samples.
-    BlockSent { block: usize, payload: usize },
+    /// Device `device` started transmitting block `block` with `payload`
+    /// samples (device 0 for single-device traffic).
+    BlockSent { block: usize, payload: usize, device: usize },
     /// Block `block` fully received by the edge (after `attempts` tries).
     BlockDelivered { block: usize, payload: usize, attempts: u32 },
     /// Block arrived after the deadline and was discarded.
@@ -82,7 +83,10 @@ mod tests {
     #[test]
     fn zero_capacity_disables() {
         let mut log = EventLog::with_capacity(0);
-        log.push(0.0, EventKind::BlockSent { block: 1, payload: 5 });
+        log.push(
+            0.0,
+            EventKind::BlockSent { block: 1, payload: 5, device: 0 },
+        );
         assert!(log.events().is_empty());
         assert_eq!(log.dropped(), 1);
     }

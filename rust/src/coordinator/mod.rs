@@ -35,7 +35,9 @@ pub use executor::{BlockExecutor, NativeExecutor};
 pub use pipeline::run_pipelined;
 pub use run::{run_experiment, ExperimentOutput, RunResult};
 pub use scheduler::{
-    run_schedule, run_schedule_with, BlockFrame, BlockPolicy, FixedPolicy,
-    OnlineArrivalSource, OverlapMode, RoundRobinSource, RunStats,
-    RunWorkspace, SingleDeviceSource, SourcePoll, TrafficSource,
+    run_schedule, run_schedule_with, BlockFrame, BlockPolicy,
+    DeviceScheduler, FixedPolicy, GreedyScheduler, LaneView,
+    OnlineArrivalSource, OverlapMode, PropFairScheduler,
+    RoundRobinScheduler, RoundRobinSource, RunStats, RunWorkspace,
+    ScheduledSource, SingleDeviceSource, SourcePoll, TrafficSource,
 };

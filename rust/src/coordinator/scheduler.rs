@@ -9,8 +9,9 @@
 //!
 //! * [`TrafficSource`] — *who sends which samples next*: one device
 //!   ([`SingleDeviceSource`]), `k` devices sharing the uplink round-robin
-//!   ([`RoundRobinSource`]), or a device whose samples arrive over time
-//!   ([`OnlineArrivalSource`]).
+//!   ([`RoundRobinSource`]), `k` heterogeneous devices picked by a
+//!   pluggable [`DeviceScheduler`] ([`ScheduledSource`]), or a device
+//!   whose samples arrive over time ([`OnlineArrivalSource`]).
 //! * [`BlockPolicy`] — *how large the next block is*: the paper's fixed
 //!   `n_c` ([`FixedPolicy`]) or any adaptive schedule
 //!   (`extensions::adaptive`).
@@ -109,7 +110,8 @@ pub struct RunWorkspace {
     pub(crate) train: TrainSpace,
     /// Index scratch for single-device / online-arrival sources.
     pub(crate) src_buf: Vec<u32>,
-    /// Per-lane index scratch for the round-robin source.
+    /// Per-lane index scratch for the round-robin and scheduled
+    /// multi-device sources.
     pub(crate) lane_bufs: Vec<Vec<u32>>,
 }
 
@@ -331,6 +333,13 @@ struct DeviceLane {
 /// uplink (paper Sec. 6). Device `i` draws from stream `STREAM_DEVICE`
 /// seeded `seed + 1000·i`, so `k = 1` is bit-identical to
 /// [`SingleDeviceSource`] (asserted in `scenario_parity.rs`).
+///
+/// Kept as a dedicated source (rather than a wrapper over
+/// [`ScheduledSource`] + [`RoundRobinScheduler`], to which it is
+/// bit-identical on stateless channels — asserted in
+/// `scenario_parity.rs`): it is the legacy zero-extra-state fast path
+/// and needs no slowdown table. Behavioral changes to either poll loop
+/// are policed by that parity test.
 pub struct RoundRobinSource<'a> {
     shards: &'a [Dataset],
     lanes: Vec<DeviceLane>,
@@ -373,6 +382,283 @@ impl<'a> RoundRobinSource<'a> {
     /// Hand the per-lane index scratch back for reuse.
     pub fn into_bufs(self) -> Vec<Vec<u32>> {
         self.lanes.into_iter().map(|l| l.remaining).collect()
+    }
+}
+
+/// One lane's observable state, handed to a [`DeviceScheduler`] pick.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneView {
+    /// Untransmitted samples still held by this device.
+    pub remaining: usize,
+    /// Samples this device has already transmitted.
+    pub sent: usize,
+    /// Expected slowdown of this device's uplink lane (strictly
+    /// positive — [`ScheduledSource`] enforces `> 0`, and the
+    /// proportional-fair debt divides by it; 1 = the ideal unit-rate
+    /// link — see `ChannelSpec::expected_slowdown`).
+    pub slowdown: f64,
+}
+
+/// Which device transmits next on a heterogeneous multi-lane uplink.
+///
+/// `pick` is called only when at least one lane has `remaining > 0` and
+/// must return such a lane; it sees every lane's backlog, service count
+/// and expected link slowdown, and may keep internal state (e.g. a
+/// rotation cursor). Implementations must be deterministic — device
+/// selection randomness lives in the per-lane sample draw
+/// (`STREAM_DEVICE`), not in the scheduler.
+pub trait DeviceScheduler {
+    /// Index of the next transmitting lane.
+    fn pick(&mut self, lanes: &[LaneView]) -> usize;
+
+    /// Name for logs.
+    fn name(&self) -> String;
+}
+
+/// Strict rotation over non-empty lanes — the Sec. 6 baseline. Exactly
+/// reproduces [`RoundRobinSource`]'s turn order (asserted in
+/// `rust/tests/scenario_parity.rs`).
+#[derive(Clone, Debug, Default)]
+pub struct RoundRobinScheduler {
+    turn: usize,
+}
+
+impl RoundRobinScheduler {
+    pub fn new() -> RoundRobinScheduler {
+        RoundRobinScheduler { turn: 0 }
+    }
+}
+
+impl DeviceScheduler for RoundRobinScheduler {
+    fn pick(&mut self, lanes: &[LaneView]) -> usize {
+        let k = lanes.len();
+        for off in 0..k {
+            let lane = (self.turn + off) % k;
+            if lanes[lane].remaining > 0 {
+                self.turn = lane + 1;
+                return lane;
+            }
+        }
+        panic!("pick() called with every lane empty");
+    }
+
+    fn name(&self) -> String {
+        "round-robin".to_string()
+    }
+}
+
+/// Fastest-expected-finish greedy: among lanes with data, pick the one
+/// with the smallest expected slowdown (its block occupies the shared
+/// uplink for the least expected time). Ties rotate round-robin from
+/// the last pick, so identical lanes make this scheduler *exactly*
+/// round-robin (asserted in `rust/tests/scenario_parity.rs`).
+#[derive(Clone, Debug, Default)]
+pub struct GreedyScheduler {
+    turn: usize,
+}
+
+impl GreedyScheduler {
+    pub fn new() -> GreedyScheduler {
+        GreedyScheduler { turn: 0 }
+    }
+}
+
+impl DeviceScheduler for GreedyScheduler {
+    fn pick(&mut self, lanes: &[LaneView]) -> usize {
+        let k = lanes.len();
+        let mut best: Option<usize> = None;
+        for off in 0..k {
+            let lane = (self.turn + off) % k;
+            if lanes[lane].remaining == 0 {
+                continue;
+            }
+            // strict < keeps the first lane in rotation order among
+            // ties — the round-robin pick when all lanes are identical
+            if best
+                .map_or(true, |b| lanes[lane].slowdown < lanes[b].slowdown)
+            {
+                best = Some(lane);
+            }
+        }
+        let lane = best.expect("pick() called with every lane empty");
+        self.turn = lane + 1;
+        lane
+    }
+
+    fn name(&self) -> String {
+        "greedy".to_string()
+    }
+}
+
+/// Data-debt proportional-fair: pick the lane maximizing
+/// `remaining / ((1 + sent) · slowdown)` — devices holding a large
+/// untransmitted backlog relative to the service they have already
+/// received go first, discounted by how slow their link is. Ties rotate
+/// round-robin from the last pick.
+#[derive(Clone, Debug, Default)]
+pub struct PropFairScheduler {
+    turn: usize,
+}
+
+impl PropFairScheduler {
+    pub fn new() -> PropFairScheduler {
+        PropFairScheduler { turn: 0 }
+    }
+}
+
+impl DeviceScheduler for PropFairScheduler {
+    fn pick(&mut self, lanes: &[LaneView]) -> usize {
+        let k = lanes.len();
+        let debt = |l: &LaneView| {
+            l.remaining as f64 / ((1.0 + l.sent as f64) * l.slowdown)
+        };
+        let mut best: Option<usize> = None;
+        for off in 0..k {
+            let lane = (self.turn + off) % k;
+            if lanes[lane].remaining == 0 {
+                continue;
+            }
+            if best.map_or(true, |b| debt(&lanes[lane]) > debt(&lanes[b])) {
+                best = Some(lane);
+            }
+        }
+        let lane = best.expect("pick() called with every lane empty");
+        self.turn = lane + 1;
+        lane
+    }
+
+    fn name(&self) -> String {
+        "proportional-fair".to_string()
+    }
+}
+
+/// `k` heterogeneous devices holding disjoint shards: a
+/// [`DeviceScheduler`] picks who transmits next, each device draws its
+/// own samples on stream `STREAM_DEVICE` seeded `seed + 1000·i` (the
+/// [`RoundRobinSource`] discipline, so `k = 1` is bit-identical to
+/// [`SingleDeviceSource`] under EVERY scheduler — asserted in
+/// `rust/tests/scenario_parity.rs`). Pair with a
+/// [`MultiLaneChannel`](crate::channel::MultiLaneChannel) to give each
+/// device its own link; the scheduler core routes each block to the
+/// picked device's lane via `Channel::select_lane`.
+pub struct ScheduledSource<'a, S: DeviceScheduler> {
+    shards: &'a [Dataset],
+    lanes: Vec<DeviceLane>,
+    /// Samples transmitted per lane (the scheduler's service counter).
+    sent: Vec<usize>,
+    /// Per-lane expected link slowdowns (shared with the lane channels).
+    slowdowns: &'a [f64],
+    /// LaneView scratch, rebuilt per poll (no per-poll allocation).
+    views: Vec<LaneView>,
+    sched: S,
+}
+
+impl<'a, S: DeviceScheduler> ScheduledSource<'a, S> {
+    pub fn new(
+        shards: &'a [Dataset],
+        seed: u64,
+        sched: S,
+        slowdowns: &'a [f64],
+    ) -> ScheduledSource<'a, S> {
+        Self::with_bufs(shards, seed, Vec::new(), sched, slowdowns)
+    }
+
+    /// Build reusing `bufs` as the per-lane index scratch (the same
+    /// recycling contract as [`RoundRobinSource::with_bufs`]).
+    pub fn with_bufs(
+        shards: &'a [Dataset],
+        seed: u64,
+        mut bufs: Vec<Vec<u32>>,
+        sched: S,
+        slowdowns: &'a [f64],
+    ) -> ScheduledSource<'a, S> {
+        assert!(!shards.is_empty(), "need at least one device");
+        assert_eq!(
+            shards.len(),
+            slowdowns.len(),
+            "one slowdown per device lane"
+        );
+        assert!(
+            slowdowns.iter().all(|s| *s > 0.0),
+            "lane slowdowns must be positive"
+        );
+        bufs.resize_with(shards.len(), Vec::new);
+        let lanes: Vec<DeviceLane> = shards
+            .iter()
+            .zip(bufs)
+            .enumerate()
+            .map(|(i, (shard, mut buf))| {
+                buf.clear();
+                buf.extend(0..shard.n as u32);
+                DeviceLane {
+                    remaining: buf,
+                    rng: Pcg32::new(
+                        seed.wrapping_add(1000 * i as u64),
+                        STREAM_DEVICE,
+                    ),
+                }
+            })
+            .collect();
+        ScheduledSource {
+            shards,
+            sent: vec![0; lanes.len()],
+            views: Vec::with_capacity(lanes.len()),
+            lanes,
+            slowdowns,
+            sched,
+        }
+    }
+
+    /// Hand the per-lane index scratch back for reuse.
+    pub fn into_bufs(self) -> Vec<Vec<u32>> {
+        self.lanes.into_iter().map(|l| l.remaining).collect()
+    }
+}
+
+impl<S: DeviceScheduler> TrafficSource for ScheduledSource<'_, S> {
+    fn remaining(&self) -> usize {
+        self.lanes.iter().map(|l| l.remaining.len()).sum()
+    }
+
+    fn poll(
+        &mut self,
+        n_c: usize,
+        _t_now: f64,
+        frame: &mut BlockFrame,
+    ) -> SourcePoll {
+        if self.lanes.iter().all(|l| l.remaining.is_empty()) {
+            return SourcePoll::Exhausted;
+        }
+        self.views.clear();
+        self.views.extend(self.lanes.iter().zip(self.sent.iter()).zip(
+            self.slowdowns.iter(),
+        ).map(
+            |((lane, &sent), &slowdown)| LaneView {
+                remaining: lane.remaining.len(),
+                sent,
+                slowdown,
+            },
+        ));
+        let device = self.sched.pick(&self.views);
+        let lane = &mut self.lanes[device];
+        assert!(
+            !lane.remaining.is_empty(),
+            "{} picked empty lane {device}",
+            self.sched.name()
+        );
+        draw_block(
+            &self.shards[device],
+            &mut lane.remaining,
+            &mut lane.rng,
+            n_c,
+            frame,
+        );
+        self.sent[device] += frame.len();
+        SourcePoll::Block { device }
+    }
+
+    fn name(&self) -> String {
+        format!("scheduled({}, {})", self.lanes.len(), self.sched.name())
     }
 }
 
@@ -610,7 +896,7 @@ fn schedule_loop(
 
     while t_send < cfg.t_budget {
         let n_c = policy.next_n_c(block, source.remaining(), t_send);
-        match source.poll(n_c, t_send, frame) {
+        let device = match source.poll(n_c, t_send, frame) {
             SourcePoll::Exhausted => break,
             SourcePoll::Idle { until } => {
                 // channel idle: the edge keeps computing (pipelined) or
@@ -629,12 +915,15 @@ fn schedule_loop(
                 t_send = until;
                 continue;
             }
-            SourcePoll::Block { .. } => {}
-        }
+            SourcePoll::Block { device } => device,
+        };
         let payload = frame.len();
         let duration = payload as f64 + cfg.n_o;
-        events.push(t_send, EventKind::BlockSent { block, payload });
+        events.push(t_send, EventKind::BlockSent { block, payload, device });
         blocks_sent += 1;
+        // route the block through the transmitting device's lane
+        // (no-op for single-link channels; consumes no randomness)
+        channel.select_lane(device);
         let delivery = channel.transmit(t_send, duration, &mut chan_rng);
         retransmissions += (delivery.attempts - 1) as u64;
         if delivery.arrival < cfg.t_budget {
@@ -815,6 +1104,110 @@ mod tests {
         assert_eq!(frame.len(), 32);
         assert_eq!(frame.x.capacity(), cap_x, "no per-block reallocation");
         assert_eq!(remaining.len(), ds.n - 64);
+    }
+
+    fn views(lanes: &[(usize, usize, f64)]) -> Vec<LaneView> {
+        lanes
+            .iter()
+            .map(|&(remaining, sent, slowdown)| LaneView {
+                remaining,
+                sent,
+                slowdown,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn greedy_prefers_the_fastest_lane_and_rotates_ties() {
+        let mut greedy = GreedyScheduler::new();
+        // lane 1 is fastest while it has data
+        let v = views(&[(10, 0, 2.0), (10, 0, 1.0), (10, 0, 1.5)]);
+        assert_eq!(greedy.pick(&v), 1);
+        // fastest lane empty -> next-fastest
+        let v = views(&[(10, 0, 2.0), (0, 10, 1.0), (10, 0, 1.5)]);
+        assert_eq!(greedy.pick(&v), 2);
+        // identical lanes: ties rotate exactly like round-robin
+        let mut greedy = GreedyScheduler::new();
+        let mut rr = RoundRobinScheduler::new();
+        let v = views(&[(5, 0, 1.0), (5, 0, 1.0), (5, 0, 1.0)]);
+        for _ in 0..7 {
+            assert_eq!(greedy.pick(&v), rr.pick(&v));
+        }
+    }
+
+    #[test]
+    fn proportional_fair_serves_the_largest_discounted_debt() {
+        let mut pf = PropFairScheduler::new();
+        // equal links: the big backlog goes first
+        let v = views(&[(5, 0, 1.0), (50, 0, 1.0)]);
+        assert_eq!(pf.pick(&v), 1);
+        // service discounts debt: heavily-served lane 1 yields
+        let v = views(&[(50, 0, 1.0), (50, 100, 1.0)]);
+        assert_eq!(pf.pick(&v), 0);
+        // a slow link discounts debt too
+        let v = views(&[(50, 0, 10.0), (20, 0, 1.0)]);
+        assert_eq!(pf.pick(&v), 1);
+    }
+
+    #[test]
+    fn scheduled_source_k1_draws_like_single_device() {
+        let ds = small_ds(150);
+        let shards =
+            crate::extensions::multi_device::shard_dataset(&ds, 1);
+        let slowdowns = [1.0];
+        let mut sched = ScheduledSource::new(
+            &shards,
+            42,
+            PropFairScheduler::new(),
+            &slowdowns,
+        );
+        let mut single = SingleDeviceSource::new(&ds, 42);
+        let mut fa = BlockFrame::with_capacity(16, ds.d);
+        let mut fb = BlockFrame::with_capacity(16, ds.d);
+        loop {
+            let a = sched.poll(16, 0.0, &mut fa);
+            let b = single.poll(16, 0.0, &mut fb);
+            match (a, b) {
+                (SourcePoll::Exhausted, SourcePoll::Exhausted) => break,
+                (
+                    SourcePoll::Block { device: da },
+                    SourcePoll::Block { device: db },
+                ) => {
+                    assert_eq!(da, db);
+                    assert_eq!(fa.x, fb.x, "staged covariates diverged");
+                    assert_eq!(fa.y, fb.y, "staged labels diverged");
+                }
+                _ => panic!("poll outcomes diverged"),
+            }
+        }
+    }
+
+    #[test]
+    fn scheduled_source_tracks_service_counts() {
+        let ds = small_ds(90);
+        let shards =
+            crate::extensions::multi_device::shard_dataset(&ds, 3);
+        let slowdowns = [1.0, 1.0, 1.0];
+        let mut source = ScheduledSource::new(
+            &shards,
+            7,
+            GreedyScheduler::new(),
+            &slowdowns,
+        );
+        let mut frame = BlockFrame::with_capacity(10, ds.d);
+        let mut order = Vec::new();
+        for _ in 0..9 {
+            match source.poll(10, 0.0, &mut frame) {
+                SourcePoll::Block { device } => order.push(device),
+                _ => panic!("unexpected poll result"),
+            }
+        }
+        // identical lanes -> greedy ties rotate round-robin
+        assert_eq!(order, vec![0, 1, 2, 0, 1, 2, 0, 1, 2]);
+        assert!(matches!(
+            source.poll(10, 0.0, &mut frame),
+            SourcePoll::Exhausted
+        ));
     }
 
     #[test]

@@ -1,14 +1,17 @@
 //! Dataset substrate: the in-memory sample container, the synthetic
 //! California-Housing-like generator (DESIGN.md §3 substitution), the
 //! labeled classification generator for the logistic workload, CSV
-//! load/save for dropping in the real dataset, and train/eval splitting.
+//! load/save for dropping in the real dataset, train/eval splitting,
+//! and multi-device sharding (IID round-robin and non-IID label skew).
 
 pub mod classify;
 pub mod csv;
 pub mod dataset;
+pub mod shard;
 pub mod split;
 pub mod synth;
 
 pub use classify::{binarize_labels, synth_logistic, LogitSpec};
 pub use dataset::Dataset;
+pub use shard::{shard_label_skew, shard_round_robin};
 pub use synth::{synth_calhousing, SynthSpec};

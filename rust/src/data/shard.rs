@@ -1,0 +1,211 @@
+//! Deterministic dataset sharding for multi-device scenarios.
+//!
+//! Two disjoint-cover partitions of a dataset into `k` device shards:
+//!
+//! * [`shard_round_robin`] — the IID layout (shard `s` holds dataset
+//!   rows `s, s+k, s+2k, …`), the historical
+//!   `extensions::multi_device::shard_dataset` semantics.
+//! * [`shard_label_skew`] — a non-IID label-skew layout: each shard
+//!   claims a `skew` fraction of its quota from its own contiguous
+//!   "home" range of the label-sorted order (device 0 gets the lowest
+//!   labels, device `k-1` the highest), and the rest is dealt evenly
+//!   across the whole label range. `skew = 1` gives fully sorted
+//!   contiguous shards; `skew = 0` spreads every shard evenly over the
+//!   label distribution. For the logistic workload (binary labels) this
+//!   is the classic per-device class imbalance of federated-learning
+//!   benchmarks.
+//!
+//! Both layouts are deterministic (no RNG): the multi-device
+//! determinism contract seeds only the per-device *sample draw*
+//! (`STREAM_DEVICE`, seed `+1000·i`), never the shard assignment.
+
+use super::dataset::Dataset;
+
+/// Near-equal quota of shard `s` out of `k` for `n` rows (sizes differ
+/// by at most one; earlier shards take the remainder).
+fn quota(n: usize, k: usize, s: usize) -> usize {
+    n / k + usize::from(s < n % k)
+}
+
+/// Shard `ds` into `k` near-equal disjoint shards, row `i` → shard
+/// `i mod k` (shard `s` holds rows `s, s+k, s+2k, …` in that order).
+pub fn shard_round_robin(ds: &Dataset, k: usize) -> Vec<Dataset> {
+    assert!(k >= 1 && k <= ds.n, "bad shard count");
+    (0..k)
+        .map(|s| {
+            let idx: Vec<usize> = (s..ds.n).step_by(k).collect();
+            ds.subset(&idx)
+        })
+        .collect()
+}
+
+/// Shard `ds` into `k` near-equal disjoint shards with label skew
+/// `skew ∈ [0, 1]`.
+///
+/// The label-sorted order is split into `k` contiguous "home" regions
+/// (region `s` has shard `s`'s quota). Each shard first claims the
+/// leading `round(skew · quota)` rows of its home region; every
+/// unclaimed row is then dealt cyclically (in label order) to the
+/// shards that still have capacity. The result is an exact partition
+/// with the same near-equal sizes as [`shard_round_robin`].
+pub fn shard_label_skew(ds: &Dataset, k: usize, skew: f64) -> Vec<Dataset> {
+    assert!(k >= 1 && k <= ds.n, "bad shard count");
+    assert!(
+        (0.0..=1.0).contains(&skew),
+        "skew must be in [0, 1], got {skew}"
+    );
+    let n = ds.n;
+    // stable sort by label: ties keep dataset order, so the layout is
+    // fully deterministic
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        ds.label(a)
+            .partial_cmp(&ds.label(b))
+            .expect("NaN label")
+            .then(a.cmp(&b))
+    });
+
+    let mut shard_idx: Vec<Vec<usize>> =
+        (0..k).map(|s| Vec::with_capacity(quota(n, k, s))).collect();
+    let mut leftover: Vec<usize> = Vec::new();
+    let mut start = 0usize;
+    for (s, idx) in shard_idx.iter_mut().enumerate() {
+        let q = quota(n, k, s);
+        let claimed = (skew * q as f64).round() as usize; // ≤ q
+        idx.extend_from_slice(&order[start..start + claimed]);
+        leftover.extend_from_slice(&order[start + claimed..start + q]);
+        start += q;
+    }
+    // deal the unclaimed rows (still in global label order) cyclically
+    // to shards below quota, so every shard samples the whole range
+    let mut cursor = 0usize;
+    for row in leftover {
+        while shard_idx[cursor % k].len() >= quota(n, k, cursor % k) {
+            cursor += 1;
+        }
+        shard_idx[cursor % k].push(row);
+        cursor += 1;
+    }
+    shard_idx.iter().map(|idx| ds.subset(idx)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{synth_calhousing, SynthSpec};
+
+    fn check_partition(ds: &Dataset, shards: &[Dataset], k: usize) {
+        assert_eq!(shards.len(), k);
+        let total: usize = shards.iter().map(|s| s.n).sum();
+        assert_eq!(total, ds.n, "shards must cover every sample");
+        for s in shards {
+            assert!(
+                s.n >= ds.n / k && s.n <= ds.n / k + 1,
+                "shard size {} vs n/k {}",
+                s.n,
+                ds.n / k
+            );
+        }
+        // exact multiset cover: every (row, label) pair accounted for
+        let mut labels: Vec<f32> =
+            shards.iter().flat_map(|s| s.y.iter().copied()).collect();
+        let mut want: Vec<f32> = ds.y.clone();
+        labels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(labels, want, "shard labels are not a permutation");
+    }
+
+    #[test]
+    fn label_skew_partitions_at_every_skew() {
+        let ds =
+            synth_calhousing(&SynthSpec { n: 203, ..Default::default() });
+        for &skew in &[0.0, 0.3, 0.5, 0.77, 1.0] {
+            for k in [1usize, 2, 3, 5, 8] {
+                let shards = shard_label_skew(&ds, k, skew);
+                check_partition(&ds, &shards, k);
+            }
+        }
+    }
+
+    #[test]
+    fn full_skew_gives_sorted_contiguous_shards() {
+        let ds =
+            synth_calhousing(&SynthSpec { n: 240, ..Default::default() });
+        let shards = shard_label_skew(&ds, 4, 1.0);
+        for w in shards.windows(2) {
+            let max_lo = w[0].y.iter().cloned().fold(f32::MIN, f32::max);
+            let min_hi = w[1].y.iter().cloned().fold(f32::MAX, f32::min);
+            assert!(
+                max_lo <= min_hi,
+                "shard label ranges overlap: {max_lo} > {min_hi}"
+            );
+        }
+    }
+
+    #[test]
+    fn skew_increases_label_concentration() {
+        let ds =
+            synth_calhousing(&SynthSpec { n: 600, ..Default::default() });
+        // spread of shard label-means grows with skew
+        let spread = |skew: f64| -> f64 {
+            let shards = shard_label_skew(&ds, 4, skew);
+            let means: Vec<f64> = shards
+                .iter()
+                .map(|s| {
+                    s.y.iter().map(|&v| v as f64).sum::<f64>() / s.n as f64
+                })
+                .collect();
+            let grand = means.iter().sum::<f64>() / means.len() as f64;
+            means.iter().map(|m| (m - grand).powi(2)).sum::<f64>()
+        };
+        let (lo, mid, hi) = (spread(0.0), spread(0.5), spread(1.0));
+        assert!(lo < mid && mid < hi, "spread not monotone: {lo} {mid} {hi}");
+        assert!(hi > 10.0 * lo.max(1e-12), "full skew barely concentrates");
+    }
+
+    #[test]
+    fn zero_skew_spreads_every_shard_over_the_range() {
+        let ds =
+            synth_calhousing(&SynthSpec { n: 400, ..Default::default() });
+        let shards = shard_label_skew(&ds, 4, 0.0);
+        let grand =
+            ds.y.iter().map(|&v| v as f64).sum::<f64>() / ds.n as f64;
+        for s in &shards {
+            let mean = s.y.iter().map(|&v| v as f64).sum::<f64>() / s.n as f64;
+            let std = {
+                let var = ds
+                    .y
+                    .iter()
+                    .map(|&v| (v as f64 - grand).powi(2))
+                    .sum::<f64>()
+                    / ds.n as f64;
+                var.sqrt()
+            };
+            assert!(
+                (mean - grand).abs() < 0.2 * std,
+                "shard mean {mean} far from grand mean {grand}"
+            );
+        }
+    }
+
+    #[test]
+    fn round_robin_matches_historical_layout() {
+        let ds =
+            synth_calhousing(&SynthSpec { n: 103, ..Default::default() });
+        let shards = shard_round_robin(&ds, 4);
+        check_partition(&ds, &shards, 4);
+        for (s, shard) in shards.iter().enumerate() {
+            for j in 0..shard.n {
+                assert_eq!(shard.row(j), ds.row(s + j * 4));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_skew_rejected() {
+        let ds =
+            synth_calhousing(&SynthSpec { n: 20, ..Default::default() });
+        shard_label_skew(&ds, 2, 1.5);
+    }
+}

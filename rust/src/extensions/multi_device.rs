@@ -20,21 +20,50 @@ use crate::coordinator::des::DesConfig;
 use crate::coordinator::executor::BlockExecutor;
 use crate::coordinator::run::RunResult;
 use crate::coordinator::scheduler::{
-    run_schedule, FixedPolicy, OverlapMode, RoundRobinSource,
+    run_schedule, DeviceScheduler, FixedPolicy, OverlapMode,
+    RoundRobinSource, ScheduledSource,
 };
 use crate::data::Dataset;
 
+pub use crate::data::shard::{shard_label_skew, shard_round_robin};
+
 /// Shard `ds` into `k` near-equal disjoint shards (round-robin rows:
 /// shard `s` holds dataset rows `s, s+k, s+2k, ...` in that order).
+/// Alias of [`crate::data::shard::shard_round_robin`]; the non-IID
+/// label-skew layout lives next to it ([`shard_label_skew`]).
 pub fn shard_dataset(ds: &Dataset, k: usize) -> Vec<Dataset> {
-    assert!(k >= 1 && k <= ds.n, "bad shard count");
-    (0..k)
-        .map(|s| {
-            let idx: Vec<usize> =
-                (s..ds.n).step_by(k).collect();
-            ds.subset(&idx)
-        })
-        .collect()
+    shard_round_robin(ds, k)
+}
+
+/// Run the heterogeneous multi-device protocol: a [`DeviceScheduler`]
+/// picks the transmitting device each block, each device draws its own
+/// samples (stream seed `+1000·i`), and `channel` carries every block —
+/// pass a [`MultiLaneChannel`](crate::channel::MultiLaneChannel) to give
+/// each device its own link (the scheduler core routes blocks to the
+/// transmitting device's lane). `slowdowns[i]` is device `i`'s expected
+/// link slowdown, the signal the greedy/proportional-fair schedulers
+/// rank lanes by (all-ones for a homogeneous uplink).
+pub fn run_scheduled_devices<S: DeviceScheduler>(
+    ds: &Dataset,
+    shards: &[Dataset],
+    slowdowns: &[f64],
+    cfg: &DesConfig,
+    sched: S,
+    channel: &mut dyn Channel,
+    exec: &mut dyn BlockExecutor,
+) -> Result<RunResult> {
+    let mut source =
+        ScheduledSource::new(shards, cfg.seed, sched, slowdowns);
+    let mut policy = FixedPolicy(cfg.n_c.max(1));
+    run_schedule(
+        ds,
+        cfg,
+        &mut source,
+        &mut policy,
+        OverlapMode::Pipelined,
+        channel,
+        exec,
+    )
 }
 
 /// Run the multi-device protocol: devices take turns sending blocks of
@@ -106,6 +135,56 @@ mod tests {
         assert_eq!(res.samples_delivered, ds.n);
         assert!(res.final_loss < res.curve[0].1);
         assert_eq!(res.case, TimelineCase::Full);
+    }
+
+    #[test]
+    fn scheduled_round_robin_matches_run_multi_device() {
+        use crate::channel::MultiLaneChannel;
+        use crate::coordinator::scheduler::RoundRobinScheduler;
+        // homogeneous lanes + round-robin scheduling == the legacy
+        // shared-channel round-robin run, bit for bit
+        let ds =
+            synth_calhousing(&SynthSpec { n: 300, ..Default::default() });
+        let shards = shard_dataset(&ds, 3);
+        let cfg = DesConfig {
+            alpha: 1e-3,
+            event_capacity: 4096,
+            ..DesConfig::paper(25, 5.0, 900.0, 17)
+        };
+        let mut exec_a = NativeExecutor::new(
+            RidgeModel::new(ds.d, cfg.lambda, ds.n),
+            cfg.alpha,
+        );
+        let legacy = run_multi_device(
+            &ds,
+            &shards,
+            &cfg,
+            &mut IdealChannel,
+            &mut exec_a,
+        )
+        .unwrap();
+        let mut exec_b = NativeExecutor::new(
+            RidgeModel::new(ds.d, cfg.lambda, ds.n),
+            cfg.alpha,
+        );
+        let mut lanes = MultiLaneChannel::new(vec![
+            IdealChannel,
+            IdealChannel,
+            IdealChannel,
+        ]);
+        let sched = run_scheduled_devices(
+            &ds,
+            &shards,
+            &[1.0, 1.0, 1.0],
+            &cfg,
+            RoundRobinScheduler::new(),
+            &mut lanes,
+            &mut exec_b,
+        )
+        .unwrap();
+        assert_eq!(legacy.final_w, sched.final_w);
+        assert_eq!(legacy.events, sched.events);
+        assert_eq!(legacy.updates, sched.updates);
     }
 
     #[test]

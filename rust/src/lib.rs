@@ -18,10 +18,12 @@
 //! * **Scheduler core** ([`coordinator::scheduler`]) — the single
 //!   event-driven loop `run_schedule`, advancing normalized time and
 //!   dispatching to pluggable traits: `TrafficSource` (who sends which
-//!   samples: single device, k-device round-robin, online arrivals),
-//!   `BlockPolicy` (fixed or adaptive `n_c`), `OverlapMode`
-//!   (pipelined vs sequential), over the [`channel`] and
-//!   [`coordinator::executor`] seams. The hot loop stages blocks in one
+//!   samples: single device, k-device round-robin, heterogeneous
+//!   devices picked by a `DeviceScheduler` — round-robin / greedy /
+//!   proportional-fair — online arrivals), `BlockPolicy` (fixed or
+//!   adaptive `n_c`), `OverlapMode` (pipelined vs sequential), over the
+//!   [`channel`] (including the per-device multi-lane uplink,
+//!   [`channel::multilane`]) and [`coordinator::executor`] seams. The hot loop stages blocks in one
 //!   reused `BlockFrame` — no per-block allocation — and
 //!   `run_schedule_with` threads a reusable `RunWorkspace` through a
 //!   whole sweep — no per-run allocation after warm-up (see

@@ -21,6 +21,6 @@ pub use runner::{
     McStats,
 };
 pub use scenario::{
-    from_name, registry, ChannelSpec, PolicySpec, ScenarioRunner,
-    ScenarioSpec, TrafficSpec,
+    from_name, registry, ChannelSpec, HeteroSpec, PolicySpec,
+    ScenarioRunner, ScenarioSpec, SchedulerSpec, TrafficSpec,
 };

@@ -10,8 +10,13 @@
 //!   (Gilbert–Elliott good/bad Markov states, clocked per packet)
 //! * [`PolicySpec`] — `fixed[:n_c]`, `warmup:<start>:<growth>[:<cap>]`,
 //!   `deadline:<frac>`, `sequential[:n_c]`, `allfirst`
-//! * [`TrafficSpec`] — `<k>` round-robin devices, or `online:<rate>`
-//!   streaming arrivals
+//! * [`TrafficSpec`] — `<k>` round-robin devices on ONE shared channel,
+//!   `online:<rate>` streaming arrivals, or the heterogeneous multi-lane
+//!   uplink `devices:<k>[:sched=<rr|greedy|pfair>][:skew=<f>]`
+//!   `[:ch=<spec>,<spec>,…]` — per-device channels (one spec broadcast,
+//!   or exactly `k`; omitted = the scenario's channel axis on every
+//!   lane), a pluggable [`DeviceScheduler`] and non-IID label-skew
+//!   sharding
 //! * [`Workload`] — `ridge` regression (the paper) or `logistic`
 //!   classification (labels derived by median-binarizing the dataset)
 //!
@@ -25,19 +30,20 @@ use anyhow::{bail, Context, Result};
 
 use crate::channel::{
     Channel, Delivery, ErasureChannel, GilbertElliottChannel, IdealChannel,
-    LinkState, RateLimitedChannel,
+    LinkState, MultiLaneChannel, RateLimitedChannel,
 };
 use crate::coordinator::des::DesConfig;
 use crate::coordinator::run::RunResult;
 use crate::coordinator::scheduler::{
-    run_schedule_with, BlockPolicy, FixedPolicy, OnlineArrivalSource,
-    OverlapMode, RoundRobinSource, RunStats, RunWorkspace,
-    SingleDeviceSource,
+    run_schedule_with, BlockPolicy, DeviceScheduler, FixedPolicy,
+    GreedyScheduler, LaneView, OnlineArrivalSource, OverlapMode,
+    PropFairScheduler, RoundRobinScheduler, RoundRobinSource, RunStats,
+    RunWorkspace, ScheduledSource, SingleDeviceSource,
 };
 use crate::data::classify::binarize_labels;
+use crate::data::shard::{shard_label_skew, shard_round_robin};
 use crate::data::Dataset;
 use crate::extensions::adaptive::{DeadlineAwareSchedule, WarmupSchedule};
-use crate::extensions::multi_device::shard_dataset;
 use crate::model::{LogisticModel, RidgeModel, Workload};
 use crate::util::rng::Pcg32;
 
@@ -427,18 +433,159 @@ impl BlockPolicy for ScenarioPolicy {
     }
 }
 
+/// Which [`DeviceScheduler`] picks the transmitting device on a
+/// heterogeneous multi-lane uplink.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerSpec {
+    /// Strict rotation (the Sec. 6 baseline).
+    RoundRobin,
+    /// Fastest-expected-finish greedy via the lanes' expected slowdowns
+    /// (ties rotate, so identical lanes reduce to round-robin).
+    Greedy,
+    /// Data-debt proportional-fair:
+    /// `remaining / ((1 + sent) · slowdown)`.
+    PropFair,
+}
+
+impl SchedulerSpec {
+    /// Parse `rr` | `greedy` | `pfair`.
+    pub fn parse(s: &str) -> Result<SchedulerSpec> {
+        match s {
+            "rr" | "round-robin" | "roundrobin" => {
+                Ok(SchedulerSpec::RoundRobin)
+            }
+            "greedy" => Ok(SchedulerSpec::Greedy),
+            "pfair" | "prop-fair" | "propfair" => Ok(SchedulerSpec::PropFair),
+            other => bail!(
+                "unknown device scheduler '{other}' \
+                 (expected rr | greedy | pfair)"
+            ),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedulerSpec::RoundRobin => "rr",
+            SchedulerSpec::Greedy => "greedy",
+            SchedulerSpec::PropFair => "pfair",
+        }
+    }
+
+    /// Instantiate the scheduler on the stack (fresh rotation state).
+    pub fn make(&self) -> ScenarioScheduler {
+        match self {
+            SchedulerSpec::RoundRobin => {
+                ScenarioScheduler::RoundRobin(RoundRobinScheduler::new())
+            }
+            SchedulerSpec::Greedy => {
+                ScenarioScheduler::Greedy(GreedyScheduler::new())
+            }
+            SchedulerSpec::PropFair => {
+                ScenarioScheduler::PropFair(PropFairScheduler::new())
+            }
+        }
+    }
+}
+
+/// A [`SchedulerSpec`]'s scheduler, built by value (no `Box`) so the
+/// sweep hot path stays allocation-free.
+pub enum ScenarioScheduler {
+    RoundRobin(RoundRobinScheduler),
+    Greedy(GreedyScheduler),
+    PropFair(PropFairScheduler),
+}
+
+impl DeviceScheduler for ScenarioScheduler {
+    fn pick(&mut self, lanes: &[LaneView]) -> usize {
+        match self {
+            ScenarioScheduler::RoundRobin(s) => s.pick(lanes),
+            ScenarioScheduler::Greedy(s) => s.pick(lanes),
+            ScenarioScheduler::PropFair(s) => s.pick(lanes),
+        }
+    }
+
+    fn name(&self) -> String {
+        match self {
+            ScenarioScheduler::RoundRobin(s) => s.name(),
+            ScenarioScheduler::Greedy(s) => s.name(),
+            ScenarioScheduler::PropFair(s) => s.name(),
+        }
+    }
+}
+
+/// The heterogeneous multi-lane uplink: `k` devices with their own
+/// channels, a pluggable device scheduler and label-skew sharding.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HeteroSpec {
+    /// Device count (`k >= 1`).
+    pub k: usize,
+    /// Who transmits next.
+    pub sched: SchedulerSpec,
+    /// Label-skew of the shards (0 = IID round-robin sharding,
+    /// 1 = fully label-sorted contiguous shards).
+    pub skew: f64,
+    /// Per-device channels: empty = every lane inherits the scenario's
+    /// channel axis; one spec = broadcast to all lanes; else exactly
+    /// `k` specs, lane `i` gets `channels[i]`.
+    pub channels: Vec<ChannelSpec>,
+}
+
+impl HeteroSpec {
+    /// Validated constructor (shared by the parser and the CLI).
+    pub fn new(
+        k: usize,
+        sched: SchedulerSpec,
+        skew: f64,
+        channels: Vec<ChannelSpec>,
+    ) -> Result<HeteroSpec> {
+        if k == 0 {
+            bail!("device count must be >= 1");
+        }
+        if !(0.0..=1.0).contains(&skew) {
+            bail!("device skew must be in [0, 1], got {skew}");
+        }
+        if !(channels.is_empty()
+            || channels.len() == 1
+            || channels.len() == k)
+        {
+            bail!(
+                "need 0, 1 or {k} device channels, got {}",
+                channels.len()
+            );
+        }
+        Ok(HeteroSpec { k, sched, skew, channels })
+    }
+
+    /// Lane `i`'s channel spec, with `default` (the scenario channel
+    /// axis) filling in when no per-device channels were given.
+    pub fn lane_channel(&self, i: usize, default: &ChannelSpec)
+        -> ChannelSpec {
+        match self.channels.len() {
+            0 => default.clone(),
+            1 => self.channels[0].clone(),
+            _ => self.channels[i].clone(),
+        }
+    }
+}
+
 /// Who is transmitting.
 #[derive(Clone, Debug, PartialEq)]
 pub enum TrafficSpec {
-    /// `k` devices with disjoint shards, round-robin on the uplink
-    /// (`k = 1` is the paper's single device).
+    /// `k` devices with disjoint IID shards, round-robin on ONE shared
+    /// uplink channel (`k = 1` is the paper's single device).
     Devices(usize),
     /// One device whose samples arrive over time at `rate` per unit.
     Online { rate: f64 },
+    /// Heterogeneous multi-lane uplink: per-device channels + pluggable
+    /// device scheduler + label-skew shards ([`HeteroSpec`]).
+    Hetero(HeteroSpec),
 }
 
 impl TrafficSpec {
-    /// Parse `<k>` | `online:<rate>`.
+    /// Parse `<k>` | `online:<rate>` |
+    /// `devices:<k>[:sched=<rr|greedy|pfair>][:skew=<f>]`
+    /// `[:ch=<spec>,<spec>,…]` (the `ch=` option must come last — channel
+    /// specs contain `:` and `,` themselves).
     pub fn parse(s: &str) -> Result<TrafficSpec> {
         if let Some(rest) = s.strip_prefix("online:") {
             let rate: f64 = rest
@@ -448,6 +595,47 @@ impl TrafficSpec {
                 bail!("arrival rate must be positive, got {rate}");
             }
             return Ok(TrafficSpec::Online { rate });
+        }
+        if let Some(rest) = s.strip_prefix("devices:") {
+            // split the ch= tail off first: everything after ":ch=" is
+            // the comma-separated per-device channel list
+            let (head, ch_list) = match rest.find(":ch=") {
+                Some(i) => (&rest[..i], Some(&rest[i + 4..])),
+                None => (rest, None),
+            };
+            let mut parts = head.split(':');
+            let k_part = parts.next().unwrap_or("");
+            let k: usize = k_part.parse().with_context(|| {
+                format!("bad device count '{k_part}' in '{s}'")
+            })?;
+            let mut sched = SchedulerSpec::RoundRobin;
+            let mut skew = 0.0f64;
+            for part in parts {
+                if let Some(v) = part.strip_prefix("sched=") {
+                    sched = SchedulerSpec::parse(v)?;
+                } else if let Some(v) = part.strip_prefix("skew=") {
+                    skew = v.parse().with_context(|| {
+                        format!("bad skew '{v}' in '{s}'")
+                    })?;
+                } else {
+                    bail!(
+                        "unknown device option '{part}' in '{s}' \
+                         (expected sched=<rr|greedy|pfair>, skew=<f>, \
+                         or a trailing ch=<spec>,<spec>,…)"
+                    );
+                }
+            }
+            let channels = match ch_list {
+                Some("") => bail!("empty ch= list in '{s}'"),
+                Some(list) => list
+                    .split(',')
+                    .map(ChannelSpec::parse)
+                    .collect::<Result<Vec<_>>>()?,
+                None => Vec::new(),
+            };
+            return Ok(TrafficSpec::Hetero(HeteroSpec::new(
+                k, sched, skew, channels,
+            )?));
         }
         let k: usize = s
             .parse()
@@ -459,9 +647,25 @@ impl TrafficSpec {
     }
 
     pub fn label(&self) -> String {
-        match *self {
+        match self {
             TrafficSpec::Devices(k) => format!("k{k}"),
             TrafficSpec::Online { rate } => format!("online:{rate}"),
+            TrafficSpec::Hetero(h) => {
+                // shortest suffix-defaulted form that round-trips
+                let mut label = format!("devices:{}", h.k);
+                if h.sched != SchedulerSpec::RoundRobin {
+                    label.push_str(&format!(":sched={}", h.sched.label()));
+                }
+                if h.skew != 0.0 {
+                    label.push_str(&format!(":skew={}", h.skew));
+                }
+                if !h.channels.is_empty() {
+                    let specs: Vec<String> =
+                        h.channels.iter().map(|c| c.label()).collect();
+                    label.push_str(&format!(":ch={}", specs.join(",")));
+                }
+                label
+            }
         }
     }
 }
@@ -527,6 +731,29 @@ impl ScenarioSpec {
             label.push_str(&format!("|cap{cap}"));
         }
         label
+    }
+
+    /// Expected long-run slowdown of the scenario's whole uplink.
+    ///
+    /// For single-channel traffic this is the channel axis's
+    /// [`ChannelSpec::expected_slowdown`]. For the heterogeneous
+    /// multi-lane uplink it is the data-share-weighted aggregate of the
+    /// per-lane slowdowns (`bound::validate::aggregate_slowdown` with
+    /// equal shares — shards are near-equal by construction): every lane
+    /// must push its shard through the shared serialized uplink, so the
+    /// effective budget shrinks by the mean per-sample occupancy.
+    pub fn expected_slowdown(&self) -> f64 {
+        match &self.traffic {
+            TrafficSpec::Hetero(h) => {
+                (0..h.k)
+                    .map(|i| {
+                        h.lane_channel(i, &self.channel).expected_slowdown()
+                    })
+                    .sum::<f64>()
+                    / h.k as f64
+            }
+            _ => self.channel.expected_slowdown(),
+        }
     }
 }
 
@@ -600,6 +827,51 @@ pub fn registry() -> Vec<(&'static str, ScenarioSpec)> {
             ScenarioSpec { workload: Workload::Logistic, ..base.clone() },
         ),
         (
+            // heterogeneous fleet: a clean lane, a lossy lane and a
+            // bursty fading lane, scheduled fastest-expected-finish with
+            // moderately label-skewed shards
+            "hetero3",
+            ScenarioSpec {
+                traffic: TrafficSpec::Hetero(HeteroSpec {
+                    k: 3,
+                    sched: SchedulerSpec::Greedy,
+                    skew: 0.5,
+                    channels: vec![
+                        ChannelSpec::Ideal,
+                        ChannelSpec::Erasure { p: 0.2 },
+                        ChannelSpec::Fading {
+                            p_gb: 0.05,
+                            p_bg: 0.25,
+                            p_good: 0.0,
+                            p_bad: 0.6,
+                            rate_good: 1.0,
+                            rate_bad: 0.5,
+                        },
+                    ],
+                }),
+                ..base.clone()
+            },
+        ),
+        (
+            // proportional-fair service of four rate-diverse devices
+            // holding strongly non-IID shards
+            "pfair4",
+            ScenarioSpec {
+                traffic: TrafficSpec::Hetero(HeteroSpec {
+                    k: 4,
+                    sched: SchedulerSpec::PropFair,
+                    skew: 0.8,
+                    channels: vec![
+                        ChannelSpec::Rate { rate: 2.0, p: 0.0 },
+                        ChannelSpec::Rate { rate: 1.0, p: 0.1 },
+                        ChannelSpec::Rate { rate: 0.5, p: 0.1 },
+                        ChannelSpec::Erasure { p: 0.3 },
+                    ],
+                }),
+                ..base.clone()
+            },
+        ),
+        (
             "fading-logistic",
             ScenarioSpec {
                 channel: ChannelSpec::Fading {
@@ -637,6 +909,11 @@ pub struct ScenarioRunner<'a> {
     class_ds: Option<Dataset>,
     spec: ScenarioSpec,
     shards: Vec<Dataset>,
+    /// Resolved per-lane channel specs (heterogeneous traffic only).
+    lane_channels: Vec<ChannelSpec>,
+    /// Per-lane expected slowdowns, the greedy/proportional-fair
+    /// schedulers' ranking signal (heterogeneous traffic only).
+    lane_slowdowns: Vec<f64>,
 }
 
 impl<'a> ScenarioRunner<'a> {
@@ -647,12 +924,37 @@ impl<'a> ScenarioRunner<'a> {
         };
         let shards = {
             let eff = class_ds.as_ref().unwrap_or(ds);
-            match spec.traffic {
-                TrafficSpec::Devices(k) if k > 1 => shard_dataset(eff, k),
+            match &spec.traffic {
+                TrafficSpec::Devices(k) if *k > 1 => {
+                    shard_round_robin(eff, *k)
+                }
+                // skew = 0 keeps the exact IID round-robin layout, so a
+                // zero-skew hetero scenario shards like Devices(k)
+                TrafficSpec::Hetero(h) if h.skew == 0.0 => {
+                    shard_round_robin(eff, h.k)
+                }
+                TrafficSpec::Hetero(h) => {
+                    shard_label_skew(eff, h.k, h.skew)
+                }
                 _ => Vec::new(),
             }
         };
-        ScenarioRunner { ds, class_ds, spec, shards }
+        let lane_channels: Vec<ChannelSpec> = match &spec.traffic {
+            TrafficSpec::Hetero(h) => (0..h.k)
+                .map(|i| h.lane_channel(i, &spec.channel))
+                .collect(),
+            _ => Vec::new(),
+        };
+        let lane_slowdowns: Vec<f64> =
+            lane_channels.iter().map(|c| c.expected_slowdown()).collect();
+        ScenarioRunner {
+            ds,
+            class_ds,
+            spec,
+            shards,
+            lane_channels,
+            lane_slowdowns,
+        }
     }
 
     pub fn spec(&self) -> &ScenarioSpec {
@@ -681,8 +983,10 @@ impl<'a> ScenarioRunner<'a> {
     /// buffer (frame, store, weights, index scratch, event log) is
     /// recycled through `ws`, so single-device and online-arrival runs
     /// perform zero heap allocations after warm-up; the multi-device
-    /// path still makes O(k) small allocations per run for the lane
-    /// table (the per-lane index buffers themselves are recycled).
+    /// paths (shared-channel round-robin AND the heterogeneous
+    /// multi-lane uplink) still make O(k) small allocations per run for
+    /// the lane/channel tables (the per-lane index buffers themselves
+    /// are recycled through `ws`).
     pub fn run_with(
         &self,
         ws: &mut RunWorkspace,
@@ -697,7 +1001,23 @@ impl<'a> ScenarioRunner<'a> {
             workload: self.spec.workload,
             ..cfg.clone()
         };
-        let mut channel = self.spec.channel.make();
+        // both channel shapes live on the stack; heterogeneous traffic
+        // routes blocks through per-device lanes, everything else uses
+        // the single channel axis
+        let mut single_chan;
+        let mut multi_chan;
+        let channel: &mut dyn Channel = match &self.spec.traffic {
+            TrafficSpec::Hetero(_) => {
+                multi_chan = MultiLaneChannel::new(
+                    self.lane_channels.iter().map(|c| c.make()).collect(),
+                );
+                &mut multi_chan
+            }
+            _ => {
+                single_chan = self.spec.channel.make();
+                &mut single_chan
+            }
+        };
         let mut policy = self.spec.policy.make(&cfg, ds.n);
         let mode = self.spec.policy.overlap();
         // both executors live on the stack; only the workload's one is
@@ -723,7 +1043,7 @@ impl<'a> ScenarioRunner<'a> {
                     &mut logit_exec
                 }
             };
-        match self.spec.traffic {
+        match &self.spec.traffic {
             TrafficSpec::Devices(1) => {
                 let mut source = SingleDeviceSource::with_buf(
                     ds,
@@ -737,7 +1057,7 @@ impl<'a> ScenarioRunner<'a> {
                     &mut source,
                     &mut policy,
                     mode,
-                    &mut channel,
+                    channel,
                     exec,
                 );
                 ws.src_buf = source.into_buf();
@@ -756,7 +1076,28 @@ impl<'a> ScenarioRunner<'a> {
                     &mut source,
                     &mut policy,
                     mode,
-                    &mut channel,
+                    channel,
+                    exec,
+                );
+                ws.lane_bufs = source.into_bufs();
+                stats
+            }
+            TrafficSpec::Hetero(h) => {
+                let mut source = ScheduledSource::with_bufs(
+                    &self.shards,
+                    cfg.seed,
+                    std::mem::take(&mut ws.lane_bufs),
+                    h.sched.make(),
+                    &self.lane_slowdowns,
+                );
+                let stats = run_schedule_with(
+                    ws,
+                    ds,
+                    &cfg,
+                    &mut source,
+                    &mut policy,
+                    mode,
+                    channel,
                     exec,
                 );
                 ws.lane_bufs = source.into_bufs();
@@ -765,7 +1106,7 @@ impl<'a> ScenarioRunner<'a> {
             TrafficSpec::Online { rate } => {
                 let mut source = OnlineArrivalSource::with_buf(
                     ds,
-                    rate,
+                    *rate,
                     cfg.seed,
                     std::mem::take(&mut ws.src_buf),
                 );
@@ -776,7 +1117,7 @@ impl<'a> ScenarioRunner<'a> {
                     &mut source,
                     &mut policy,
                     mode,
-                    &mut channel,
+                    channel,
                     exec,
                 );
                 ws.src_buf = source.into_buf();
@@ -848,6 +1189,116 @@ mod tests {
             TrafficSpec::parse("online:0.5").unwrap(),
             TrafficSpec::Online { rate: 0.5 }
         );
+        assert_eq!(
+            TrafficSpec::parse("devices:3").unwrap(),
+            TrafficSpec::Hetero(HeteroSpec {
+                k: 3,
+                sched: SchedulerSpec::RoundRobin,
+                skew: 0.0,
+                channels: Vec::new(),
+            })
+        );
+        assert_eq!(
+            TrafficSpec::parse(
+                "devices:4:sched=greedy:skew=0.5:ch=fading:0.05:0.25:0.6,\
+                 erasure:0.1,ideal,rate:2:0.1"
+            )
+            .unwrap(),
+            TrafficSpec::Hetero(HeteroSpec {
+                k: 4,
+                sched: SchedulerSpec::Greedy,
+                skew: 0.5,
+                channels: vec![
+                    ChannelSpec::Fading {
+                        p_gb: 0.05,
+                        p_bg: 0.25,
+                        p_good: 0.0,
+                        p_bad: 0.6,
+                        rate_good: 1.0,
+                        rate_bad: 1.0,
+                    },
+                    ChannelSpec::Erasure { p: 0.1 },
+                    ChannelSpec::Ideal,
+                    ChannelSpec::Rate { rate: 2.0, p: 0.1 },
+                ],
+            })
+        );
+        assert_eq!(
+            TrafficSpec::parse("devices:2:sched=pfair:ch=erasure:0.3")
+                .unwrap(),
+            TrafficSpec::Hetero(HeteroSpec {
+                k: 2,
+                sched: SchedulerSpec::PropFair,
+                skew: 0.0,
+                channels: vec![ChannelSpec::Erasure { p: 0.3 }],
+            })
+        );
+        assert_eq!(
+            SchedulerSpec::parse("rr").unwrap(),
+            SchedulerSpec::RoundRobin
+        );
+    }
+
+    #[test]
+    fn hetero_traffic_labels_round_trip() {
+        for s in [
+            "devices:1",
+            "devices:3:sched=greedy",
+            "devices:4:skew=0.8",
+            "devices:2:sched=pfair:skew=0.25:ch=ideal,fading:0.05:0.25:0.6",
+            "devices:3:ch=erasure:0.2",
+        ] {
+            let spec = TrafficSpec::parse(s).unwrap();
+            assert_eq!(spec.label(), s, "canonical form of '{s}'");
+            let re = TrafficSpec::parse(&spec.label()).unwrap();
+            assert_eq!(spec, re, "round trip of '{s}'");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_device_specs() {
+        assert!(TrafficSpec::parse("devices:0").is_err());
+        assert!(TrafficSpec::parse("devices:x").is_err());
+        assert!(TrafficSpec::parse("devices:2:sched=fifo").is_err());
+        assert!(TrafficSpec::parse("devices:2:skew=1.5").is_err());
+        assert!(TrafficSpec::parse("devices:2:turbo=1").is_err());
+        assert!(TrafficSpec::parse("devices:2:ch=").is_err());
+        // 3 channels for 2 devices: neither broadcast nor exact
+        assert!(
+            TrafficSpec::parse("devices:2:ch=ideal,ideal,ideal").is_err()
+        );
+    }
+
+    #[test]
+    fn hetero_slowdown_is_the_lane_mean() {
+        let spec = ScenarioSpec {
+            traffic: TrafficSpec::Hetero(HeteroSpec {
+                k: 2,
+                sched: SchedulerSpec::Greedy,
+                skew: 0.0,
+                channels: vec![
+                    ChannelSpec::Ideal,
+                    ChannelSpec::Erasure { p: 0.5 },
+                ],
+            }),
+            ..ScenarioSpec::paper()
+        };
+        // (1 + 2) / 2
+        assert!((spec.expected_slowdown() - 1.5).abs() < 1e-12);
+        // empty lane list inherits the channel axis on every lane
+        let inherit = ScenarioSpec {
+            channel: ChannelSpec::Erasure { p: 0.5 },
+            traffic: TrafficSpec::Hetero(HeteroSpec {
+                k: 3,
+                sched: SchedulerSpec::RoundRobin,
+                skew: 0.0,
+                channels: Vec::new(),
+            }),
+            ..ScenarioSpec::paper()
+        };
+        assert!((inherit.expected_slowdown() - 2.0).abs() < 1e-12);
+        // non-hetero traffic: the channel axis as before
+        assert_eq!(ScenarioSpec::paper().expected_slowdown(), 1.0);
     }
 
     #[test]

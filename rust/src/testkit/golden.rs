@@ -127,7 +127,14 @@ mod tests {
 
     fn sample_events() -> Vec<Event> {
         vec![
-            Event { t: 0.0, kind: EventKind::BlockSent { block: 1, payload: 8 } },
+            Event {
+                t: 0.0,
+                kind: EventKind::BlockSent {
+                    block: 1,
+                    payload: 8,
+                    device: 0,
+                },
+            },
             Event {
                 t: 18.0,
                 kind: EventKind::BlockDelivered {

@@ -1,0 +1,233 @@
+//! Seeded Monte-Carlo agreement of the channel-statistics closed forms
+//! with simulation — the statistical layer behind the channel-aware
+//! bound recommendation:
+//!
+//! 1. `GilbertElliott::stationary_p_bad` matches the long-run fraction
+//!    of packets clocked in the bad state;
+//! 2. `GilbertElliott::expected_slowdown` matches the mean measured
+//!    channel occupancy per unit of nominal duration;
+//! 3. `bound::validate::aggregate_slowdown` (the per-device aggregate
+//!    used for the heterogeneous uplink) matches the measured occupancy
+//!    of a `MultiLaneChannel` served round-robin — both directly and
+//!    through a full heterogeneous scenario run's event stream.
+//!
+//! Everything is seeded (fixed Pcg32 streams, fixed trial counts), so
+//! these are deterministic regression tests, not flaky statistics.
+
+use edgepipe::bound::aggregate_slowdown;
+use edgepipe::channel::{
+    Channel, ErasureChannel, GilbertElliottChannel, IdealChannel, LinkState,
+    MultiLaneChannel,
+};
+use edgepipe::coordinator::des::DesConfig;
+use edgepipe::coordinator::EventKind;
+use edgepipe::data::synth::{synth_calhousing, SynthSpec};
+use edgepipe::sweep::scenario::{
+    ChannelSpec, HeteroSpec, ScenarioRunner, ScenarioSpec, SchedulerSpec,
+    TrafficSpec,
+};
+use edgepipe::util::rng::Pcg32;
+
+fn bursty() -> GilbertElliottChannel {
+    GilbertElliottChannel::new(
+        0.2,
+        0.5,
+        LinkState::new(1.0, 0.05),
+        LinkState::new(0.5, 0.6),
+    )
+}
+
+#[test]
+fn stationary_bad_state_probability_matches_monte_carlo() {
+    let mut ge = bursty();
+    let want = ge.stationary_p_bad(); // 0.2/(0.2+0.5) = 2/7
+    assert!((want - 2.0 / 7.0).abs() < 1e-12);
+    let mut rng = Pcg32::new(2024, 4);
+    let trials = 40_000usize;
+    let mut bad = 0usize;
+    for _ in 0..trials {
+        ge.transmit(0.0, 1.0, &mut rng);
+        bad += usize::from(ge.is_bad());
+    }
+    let measured = bad as f64 / trials as f64;
+    // the chain is autocorrelated (flip prob 0.3 per packet), which
+    // inflates the MC variance over the i.i.d. binomial sem — 0.015 is
+    // ~5σ with the inflation factored in
+    assert!(
+        (measured - want).abs() < 0.015,
+        "measured p(bad) {measured} vs stationary {want}"
+    );
+}
+
+#[test]
+fn expected_slowdown_matches_measured_occupancy() {
+    // across three parameterizations, including a degenerate chain
+    let channels = [
+        bursty(),
+        GilbertElliottChannel::new(
+            0.5,
+            0.5,
+            LinkState::new(2.0, 0.0),
+            LinkState::new(0.25, 0.3),
+        ),
+        // p_gb = 0: pinned good, slowdown = good-state occupancy exactly
+        GilbertElliottChannel::new(
+            0.0,
+            0.3,
+            LinkState::new(1.0, 0.2),
+            LinkState::new(0.5, 0.9),
+        ),
+    ];
+    for (i, mut ge) in channels.into_iter().enumerate() {
+        let want = ge.expected_slowdown();
+        let mut rng = Pcg32::new(77 + i as u64, 4);
+        let trials = 30_000usize;
+        let mut occupancy = 0.0;
+        for _ in 0..trials {
+            occupancy += ge.transmit(0.0, 1.0, &mut rng).arrival;
+        }
+        let measured = occupancy / trials as f64;
+        // per-packet (not per-attempt) state clocking: the mixture is
+        // exact in the stationary regime, so 5% covers MC noise
+        assert!(
+            (measured - want).abs() < 0.05 * want,
+            "channel {i}: measured slowdown {measured} vs closed form {want}"
+        );
+    }
+}
+
+#[test]
+fn aggregate_slowdown_matches_multilane_occupancy() {
+    // a heterogeneous 3-lane uplink served round-robin with equal data
+    // shares: measured mean occupancy per unit nominal duration must
+    // match the equal-share aggregate of the per-lane closed forms
+    let specs = [
+        ChannelSpec::Ideal,
+        ChannelSpec::Erasure { p: 0.4 },
+        ChannelSpec::Fading {
+            p_gb: 0.2,
+            p_bg: 0.5,
+            p_good: 0.05,
+            p_bad: 0.6,
+            rate_good: 1.0,
+            rate_bad: 0.5,
+        },
+    ];
+    let lane_slowdowns: Vec<f64> =
+        specs.iter().map(|s| s.expected_slowdown()).collect();
+    let want = aggregate_slowdown(&lane_slowdowns, &[1.0, 1.0, 1.0]);
+
+    let mut multi =
+        MultiLaneChannel::new(specs.iter().map(|s| s.make()).collect());
+    let mut rng = Pcg32::new(99, 4);
+    let trials = 30_000usize;
+    let mut occupancy = 0.0;
+    for i in 0..trials {
+        multi.select_lane(i % 3);
+        occupancy += multi.transmit(0.0, 1.0, &mut rng).arrival;
+    }
+    let measured = occupancy / trials as f64;
+    assert!(
+        (measured - want).abs() < 0.05 * want,
+        "measured aggregate {measured} vs closed form {want}"
+    );
+}
+
+#[test]
+fn scenario_event_stream_reproduces_the_aggregate_slowdown() {
+    // end-to-end: a heterogeneous round-robin scenario's event stream
+    // (send → delivery spans) must measure the same aggregate slowdown
+    // the bound layer computes. Round-robin + equal shards keep the
+    // channel-time shares equal, matching the closed form's weights.
+    let ds = synth_calhousing(&SynthSpec { n: 900, ..Default::default() });
+    let channels = vec![
+        ChannelSpec::Ideal,
+        ChannelSpec::Erasure { p: 0.3 },
+        ChannelSpec::Rate { rate: 0.5, p: 0.0 },
+    ];
+    let spec = ScenarioSpec {
+        traffic: TrafficSpec::Hetero(
+            HeteroSpec::new(
+                3,
+                SchedulerSpec::RoundRobin,
+                0.0,
+                channels.clone(),
+            )
+            .unwrap(),
+        ),
+        ..ScenarioSpec::paper()
+    };
+    let want = spec.expected_slowdown();
+    let runner = ScenarioRunner::new(spec, &ds);
+    let mut nominal = 0.0f64;
+    let mut occupied = 0.0f64;
+    for seed in 0..8u64 {
+        let cfg = DesConfig {
+            record_blocks: false,
+            event_capacity: 1 << 14,
+            // generous budget so late lanes still transmit
+            ..DesConfig::paper(30, 5.0, 20_000.0, 400 + seed)
+        };
+        let run = runner.run(&cfg).unwrap();
+        let mut sent_at = 0.0f64;
+        let mut payload_at_send = 0.0f64;
+        for e in &run.events {
+            match e.kind {
+                EventKind::BlockSent { payload, .. } => {
+                    sent_at = e.t;
+                    payload_at_send = payload as f64 + cfg.n_o;
+                }
+                EventKind::BlockDelivered { .. } => {
+                    nominal += payload_at_send;
+                    occupied += e.t - sent_at;
+                }
+                _ => {}
+            }
+        }
+    }
+    let measured = occupied / nominal;
+    assert!(
+        (measured - want).abs() < 0.08 * want,
+        "event-stream slowdown {measured} vs aggregate closed form {want}"
+    );
+}
+
+#[test]
+fn erasure_is_the_degenerate_fading_aggregate() {
+    // sanity tie between the layers: a single-lane "aggregate" is the
+    // lane's own closed form, and the fading p_gb=0 lane equals erasure
+    let er = ChannelSpec::Erasure { p: 0.25 }.expected_slowdown();
+    assert!((aggregate_slowdown(&[er], &[1.0]) - er).abs() < 1e-12);
+    let pinned = ChannelSpec::Fading {
+        p_gb: 0.0,
+        p_bg: 0.7,
+        p_good: 0.25,
+        p_bad: 0.9,
+        rate_good: 1.0,
+        rate_bad: 0.25,
+    }
+    .expected_slowdown();
+    assert!((pinned - er).abs() < 1e-12);
+    // and the two channels consume the RNG stream identically
+    let mut a = ErasureChannel::new(0.25);
+    let mut b = GilbertElliottChannel::new(
+        0.0,
+        0.7,
+        LinkState::new(1.0, 0.25),
+        LinkState::new(0.25, 0.9),
+    );
+    let mut rng_a = Pcg32::new(5, 4);
+    let mut rng_b = Pcg32::new(5, 4);
+    for i in 0..500 {
+        let t = i as f64;
+        assert_eq!(
+            a.transmit(t, 2.0, &mut rng_a),
+            b.transmit(t, 2.0, &mut rng_b),
+            "packet {i}"
+        );
+    }
+    // ideal lanes cannot slow anything down
+    let mut ideal = IdealChannel;
+    let mut rng = Pcg32::new(6, 4);
+    assert_eq!(ideal.transmit(1.0, 3.0, &mut rng).arrival, 4.0);
+}

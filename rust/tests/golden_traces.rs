@@ -127,6 +127,18 @@ fn golden_fading_logistic_scenario() {
     );
 }
 
+/// Acceptance criterion: the heterogeneous 3-device registry preset
+/// (greedy scheduling, label-skewed shards, ideal/erasure/fading lanes)
+/// has a committed golden fixture. The trace pins device selection
+/// (`BlockSent { device }`), per-lane channel timing and the RNG stream
+/// discipline of the multi-lane uplink in one diff-able artifact.
+#[test]
+fn golden_hetero3_scenario() {
+    let spec = edgepipe::sweep::scenario::from_name("hetero3")
+        .expect("hetero3 preset registered");
+    snapshot("hetero3_greedy", &spec);
+}
+
 // ------------------------------------------- 2. metamorphic properties
 
 /// Acceptance criterion: p(bad) = 0 fading at unit good rate + ridge ≡

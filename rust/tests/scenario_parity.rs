@@ -8,6 +8,10 @@
 //! * the baseline policies (`sequential`, `allfirst`) and adaptive
 //!   schedules run through `ScenarioSpec` equal their dedicated entry
 //!   points exactly;
+//! * the heterogeneous multi-lane uplink collapses correctly: `k = 1`
+//!   equals `run_des` under EVERY device scheduler, identical lanes
+//!   make greedy ≡ round-robin, and a homogeneous hetero uplink on a
+//!   stateless channel equals the legacy shared-channel `Devices(k)`;
 //! * `shard_dataset` shards are disjoint and cover the dataset.
 
 use edgepipe::baselines::{sequential, transmit_all_first};
@@ -22,7 +26,8 @@ use edgepipe::extensions::adaptive::{run_scheduled, WarmupSchedule};
 use edgepipe::extensions::multi_device::{run_multi_device, shard_dataset};
 use edgepipe::model::RidgeModel;
 use edgepipe::sweep::scenario::{
-    ChannelSpec, PolicySpec, ScenarioRunner, ScenarioSpec, TrafficSpec,
+    ChannelSpec, HeteroSpec, PolicySpec, ScenarioRunner, ScenarioSpec,
+    SchedulerSpec, TrafficSpec,
 };
 use edgepipe::testkit::forall;
 
@@ -134,6 +139,198 @@ fn multi_device_scenario_matches_run_multi_device() {
     };
     let via_spec = ScenarioRunner::new(spec, &ds).run(&cfg).unwrap();
     assert_identical(&direct, &via_spec, "multi-device k=4 via spec");
+}
+
+/// Acceptance criterion: `k = 1` heterogeneous traffic is bit-identical
+/// to `run_des` for EVERY device scheduler — a single lane leaves no
+/// scheduling freedom, and the lane's sample stream / channel stream
+/// must match the single-device discipline draw for draw.
+#[test]
+fn hetero_k1_is_bit_identical_to_run_des_for_every_scheduler() {
+    forall("hetero k=1 == des", 6, |g| {
+        let n = g.usize_in(60..=300);
+        let p = g.f64_in(0.05, 0.3);
+        let cfg = DesConfig {
+            record_blocks: g.bool_with(0.5),
+            event_capacity: 4096,
+            ..DesConfig::paper(
+                g.usize_in(1..=n / 2),
+                g.f64_in(0.0, 20.0).round(),
+                g.f64_in(50.0, 2.5 * n as f64).round(),
+                g.u64_in(0..=1 << 40),
+            )
+        };
+        let ds = synth_calhousing(&SynthSpec { n, ..Default::default() });
+        let mut channel: Box<dyn Channel> = Box::new(ErasureChannel::new(p));
+        let des =
+            run_des(&ds, &cfg, channel.as_mut(), &mut mk_exec(&ds, &cfg))
+                .unwrap();
+        for sched in [
+            SchedulerSpec::RoundRobin,
+            SchedulerSpec::Greedy,
+            SchedulerSpec::PropFair,
+        ] {
+            let spec = ScenarioSpec {
+                channel: ChannelSpec::Erasure { p },
+                traffic: TrafficSpec::Hetero(
+                    HeteroSpec::new(1, sched, 0.0, Vec::new()).unwrap(),
+                ),
+                ..ScenarioSpec::paper()
+            };
+            let hetero = ScenarioRunner::new(spec, &ds).run(&cfg).unwrap();
+            assert_identical(
+                &des,
+                &hetero,
+                &format!("hetero k=1, sched={}", sched.label()),
+            );
+        }
+    });
+}
+
+/// Acceptance criterion: identical lanes leave greedy no signal, so its
+/// rotating tie-break must reproduce round-robin exactly — across
+/// channels, including a stateful per-lane fading link.
+#[test]
+fn homogeneous_greedy_is_bit_identical_to_round_robin() {
+    let ds = synth_calhousing(&SynthSpec { n: 420, ..Default::default() });
+    let cfg = DesConfig {
+        alpha: 1e-3,
+        event_capacity: 4096,
+        ..DesConfig::paper(30, 8.0, 1400.0, 29)
+    };
+    for channel in [
+        ChannelSpec::Ideal,
+        ChannelSpec::Erasure { p: 0.2 },
+        ChannelSpec::Fading {
+            p_gb: 0.05,
+            p_bg: 0.25,
+            p_good: 0.0,
+            p_bad: 0.6,
+            rate_good: 1.0,
+            rate_bad: 0.5,
+        },
+    ] {
+        let mk = |sched: SchedulerSpec| ScenarioSpec {
+            channel: channel.clone(),
+            traffic: TrafficSpec::Hetero(
+                HeteroSpec::new(4, sched, 0.3, Vec::new()).unwrap(),
+            ),
+            ..ScenarioSpec::paper()
+        };
+        let rr = ScenarioRunner::new(mk(SchedulerSpec::RoundRobin), &ds)
+            .run(&cfg)
+            .unwrap();
+        let greedy = ScenarioRunner::new(mk(SchedulerSpec::Greedy), &ds)
+            .run(&cfg)
+            .unwrap();
+        assert_identical(
+            &rr,
+            &greedy,
+            &format!("homogeneous greedy vs rr on {}", channel.label()),
+        );
+    }
+}
+
+/// A homogeneous heterogeneous-uplink (all lanes the same STATELESS
+/// channel, round-robin, zero skew) equals the legacy shared-channel
+/// `Devices(k)` bit for bit: same shard layout, same per-lane sample
+/// streams, same single channel-noise stream.
+#[test]
+fn homogeneous_hetero_round_robin_matches_legacy_devices() {
+    let ds = synth_calhousing(&SynthSpec { n: 360, ..Default::default() });
+    let cfg = DesConfig {
+        alpha: 1e-3,
+        event_capacity: 4096,
+        ..DesConfig::paper(24, 6.0, 1200.0, 41)
+    };
+    for channel in
+        [ChannelSpec::Ideal, ChannelSpec::Erasure { p: 0.15 }]
+    {
+        let legacy = ScenarioRunner::new(
+            ScenarioSpec {
+                channel: channel.clone(),
+                traffic: TrafficSpec::Devices(3),
+                ..ScenarioSpec::paper()
+            },
+            &ds,
+        )
+        .run(&cfg)
+        .unwrap();
+        let hetero = ScenarioRunner::new(
+            ScenarioSpec {
+                channel: channel.clone(),
+                traffic: TrafficSpec::Hetero(
+                    HeteroSpec::new(
+                        3,
+                        SchedulerSpec::RoundRobin,
+                        0.0,
+                        Vec::new(),
+                    )
+                    .unwrap(),
+                ),
+                ..ScenarioSpec::paper()
+            },
+            &ds,
+        )
+        .run(&cfg)
+        .unwrap();
+        assert_identical(
+            &legacy,
+            &hetero,
+            &format!("hetero rr vs Devices(3) on {}", channel.label()),
+        );
+    }
+}
+
+/// Heterogeneous lanes actually route: with one lane rate-limited far
+/// below the others, the greedy scheduler drains the fast lanes first
+/// and the slow device transmits last.
+#[test]
+fn greedy_prefers_fast_lanes_end_to_end() {
+    use edgepipe::coordinator::EventKind;
+    let ds = synth_calhousing(&SynthSpec { n: 240, ..Default::default() });
+    let cfg = DesConfig {
+        record_blocks: false,
+        event_capacity: 4096,
+        ..DesConfig::paper(24, 6.0, 5000.0, 3)
+    };
+    let spec = ScenarioSpec {
+        traffic: TrafficSpec::Hetero(
+            HeteroSpec::new(
+                3,
+                SchedulerSpec::Greedy,
+                0.0,
+                vec![
+                    ChannelSpec::Rate { rate: 0.25, p: 0.0 },
+                    ChannelSpec::Ideal,
+                    ChannelSpec::Ideal,
+                ],
+            )
+            .unwrap(),
+        ),
+        ..ScenarioSpec::paper()
+    };
+    let run = ScenarioRunner::new(spec, &ds).run(&cfg).unwrap();
+    let devices: Vec<usize> = run
+        .events
+        .iter()
+        .filter_map(|e| match e.kind {
+            EventKind::BlockSent { device, .. } => Some(device),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(run.samples_delivered, ds.n, "budget covers everything");
+    // lanes 1 and 2 (fast) drain completely before lane 0 starts
+    let first_slow =
+        devices.iter().position(|&d| d == 0).expect("lane 0 transmits");
+    let last_fast = devices
+        .iter()
+        .rposition(|&d| d != 0)
+        .expect("fast lanes transmit");
+    assert!(
+        last_fast < first_slow,
+        "greedy interleaved the slow lane: {devices:?}"
+    );
 }
 
 #[test]
@@ -293,6 +490,57 @@ fn workspace_reuse_is_bit_identical_to_fresh_runs() {
                 rate_bad: 1.0,
             },
             workload: edgepipe::model::Workload::Logistic,
+            ..paper.clone()
+        },
+        // heterogeneous uplink: ScheduledSource + MultiLaneChannel join
+        // the purity contract (per-lane index buffers recycle through
+        // the same ws.lane_bufs as RoundRobinSource)
+        ScenarioSpec {
+            traffic: TrafficSpec::Hetero(
+                HeteroSpec::new(
+                    3,
+                    SchedulerSpec::Greedy,
+                    0.5,
+                    vec![
+                        ChannelSpec::Ideal,
+                        ChannelSpec::Erasure { p: 0.2 },
+                        ChannelSpec::Fading {
+                            p_gb: 0.05,
+                            p_bg: 0.25,
+                            p_good: 0.0,
+                            p_bad: 0.6,
+                            rate_good: 1.0,
+                            rate_bad: 0.5,
+                        },
+                    ],
+                )
+                .unwrap(),
+            ),
+            ..paper.clone()
+        },
+        ScenarioSpec {
+            traffic: TrafficSpec::Hetero(
+                HeteroSpec::new(
+                    4,
+                    SchedulerSpec::PropFair,
+                    0.8,
+                    vec![ChannelSpec::Rate { rate: 0.5, p: 0.1 }],
+                )
+                .unwrap(),
+            ),
+            workload: edgepipe::model::Workload::Logistic,
+            ..paper.clone()
+        },
+        ScenarioSpec {
+            traffic: TrafficSpec::Hetero(
+                HeteroSpec::new(
+                    1,
+                    SchedulerSpec::RoundRobin,
+                    0.0,
+                    Vec::new(),
+                )
+                .unwrap(),
+            ),
             ..paper
         },
     ];

@@ -1,0 +1,172 @@
+//! Spec-string round-trip properties, driven by the seeded `testkit`
+//! property harness: for every scenario axis — channel, policy, traffic
+//! (including the heterogeneous `devices:` grammar), workload — the
+//! canonical label must re-parse to the identical spec
+//! (`parse ∘ label ≡ id`), across randomly generated specs.
+//!
+//! Rust's `{}` float formatting emits the shortest representation that
+//! round-trips through `str::parse::<f64>`, so exact `PartialEq` (not
+//! approximate comparison) is the right assertion here: any label that
+//! drops, reorders or re-defaults a field is a real grammar bug.
+
+use edgepipe::model::Workload;
+use edgepipe::sweep::scenario::{
+    ChannelSpec, HeteroSpec, PolicySpec, ScenarioSpec, SchedulerSpec,
+    TrafficSpec,
+};
+use edgepipe::testkit::{forall, Gen};
+
+fn gen_channel(g: &mut Gen) -> ChannelSpec {
+    match g.usize_in(0..=3) {
+        0 => ChannelSpec::Ideal,
+        1 => ChannelSpec::Erasure { p: g.f64_in(0.0, 0.99) },
+        2 => ChannelSpec::Rate {
+            rate: g.f64_log(0.05, 20.0),
+            p: g.f64_in(0.0, 0.99),
+        },
+        _ => ChannelSpec::Fading {
+            p_gb: g.f64_in(0.0, 1.0),
+            p_bg: g.f64_in(0.0, 1.0),
+            // exercise the suffix-defaulted label forms too
+            p_good: if g.bool_with(0.3) { 0.0 } else { g.f64_in(0.0, 0.99) },
+            p_bad: g.f64_in(0.0, 0.99),
+            rate_good: if g.bool_with(0.3) {
+                1.0
+            } else {
+                g.f64_log(0.1, 10.0)
+            },
+            rate_bad: if g.bool_with(0.3) {
+                1.0
+            } else {
+                g.f64_log(0.1, 10.0)
+            },
+        },
+    }
+}
+
+fn gen_policy(g: &mut Gen) -> PolicySpec {
+    match g.usize_in(0..=4) {
+        0 => PolicySpec::Fixed { n_c: g.usize_in(0..=5000) },
+        1 => PolicySpec::Warmup {
+            start: g.usize_in(1..=256),
+            growth: 1.0 + g.f64_in(0.0, 7.0),
+            cap: if g.bool_with(0.4) { 0 } else { g.usize_in(1..=5000) },
+        },
+        2 => PolicySpec::Deadline { frac: g.f64_in(0.001, 1.0) },
+        3 => PolicySpec::Sequential { n_c: g.usize_in(0..=5000) },
+        _ => PolicySpec::AllFirst,
+    }
+}
+
+fn gen_sched(g: &mut Gen) -> SchedulerSpec {
+    *g.choose(&[
+        SchedulerSpec::RoundRobin,
+        SchedulerSpec::Greedy,
+        SchedulerSpec::PropFair,
+    ])
+}
+
+fn gen_traffic(g: &mut Gen) -> TrafficSpec {
+    match g.usize_in(0..=2) {
+        0 => TrafficSpec::Devices(g.usize_in(1..=64)),
+        1 => TrafficSpec::Online { rate: g.f64_log(0.01, 100.0) },
+        _ => {
+            let k = g.usize_in(1..=8);
+            let channels = match g.usize_in(0..=2) {
+                0 => Vec::new(),
+                1 => vec![gen_channel(g)],
+                _ => (0..k).map(|_| gen_channel(g)).collect(),
+            };
+            let skew = match g.usize_in(0..=2) {
+                0 => 0.0,
+                1 => 1.0,
+                _ => g.f64_in(0.0, 1.0),
+            };
+            TrafficSpec::Hetero(
+                HeteroSpec::new(k, gen_sched(g), skew, channels)
+                    .expect("generator produced an invalid HeteroSpec"),
+            )
+        }
+    }
+}
+
+#[test]
+fn channel_labels_round_trip() {
+    forall("channel parse∘label == id", 300, |g| {
+        let spec = gen_channel(g);
+        let label = spec.label();
+        let re = ChannelSpec::parse(&label)
+            .unwrap_or_else(|e| panic!("label '{label}' unparseable: {e}"));
+        assert_eq!(spec, re, "label '{label}' round-tripped differently");
+    });
+}
+
+#[test]
+fn policy_labels_round_trip() {
+    forall("policy parse∘label == id", 300, |g| {
+        let spec = gen_policy(g);
+        let label = spec.label();
+        let re = PolicySpec::parse(&label)
+            .unwrap_or_else(|e| panic!("label '{label}' unparseable: {e}"));
+        assert_eq!(spec, re, "label '{label}' round-tripped differently");
+    });
+}
+
+#[test]
+fn traffic_labels_round_trip_including_device_strings() {
+    forall("traffic parse∘label == id", 300, |g| {
+        let spec = gen_traffic(g);
+        let label = spec.label();
+        // `k<k>` is a display label, not an input form: Devices round
+        // trips through its input string instead
+        let input = match &spec {
+            TrafficSpec::Devices(k) => k.to_string(),
+            _ => label.clone(),
+        };
+        let re = TrafficSpec::parse(&input)
+            .unwrap_or_else(|e| panic!("spec '{input}' unparseable: {e}"));
+        assert_eq!(spec, re, "'{input}' round-tripped differently");
+        // and the canonical label is idempotent
+        assert_eq!(re.label(), label, "label not canonical for '{input}'");
+    });
+}
+
+#[test]
+fn workload_labels_round_trip() {
+    for w in [Workload::Ridge, Workload::Logistic] {
+        assert_eq!(Workload::parse(w.label()).unwrap(), w);
+    }
+}
+
+#[test]
+fn whole_scenarios_round_trip_axis_by_axis() {
+    forall("scenario axes parse∘label == id", 150, |g| {
+        let spec = ScenarioSpec {
+            channel: gen_channel(g),
+            policy: gen_policy(g),
+            traffic: gen_traffic(g),
+            workload: *g.choose(&[Workload::Ridge, Workload::Logistic]),
+            store_capacity: if g.bool_with(0.5) {
+                None
+            } else {
+                Some(g.usize_in(1..=100_000))
+            },
+        };
+        let traffic_input = match &spec.traffic {
+            TrafficSpec::Devices(k) => k.to_string(),
+            t => t.label(),
+        };
+        let re = ScenarioSpec::parse(
+            &spec.channel.label(),
+            &spec.policy.label(),
+            &traffic_input,
+            spec.workload.label(),
+            spec.store_capacity.unwrap_or(0),
+        )
+        .unwrap_or_else(|e| {
+            panic!("scenario '{}' unparseable: {e}", spec.label())
+        });
+        assert_eq!(spec, re, "scenario '{}' diverged", spec.label());
+        assert_eq!(spec.label(), re.label());
+    });
+}
