@@ -1,12 +1,15 @@
 //! Theorem 1 / Corollary 1: the convergence bound, the block-size
-//! optimizer built on it (the paper's analytical contribution), and the
+//! optimizer built on it (the paper's analytical contribution), the
 //! Monte-Carlo validation layer ([`validate`]) that checks the
 //! recommendation against measured optimality gaps on non-ideal
-//! channels and the logistic workload.
+//! channels and the logistic workload, and the mid-run re-optimizer
+//! ([`replan`]) the closed-loop payload controller runs at block
+//! boundaries.
 
 pub mod constants;
 pub mod corollary1;
 pub mod optimizer;
+pub mod replan;
 pub mod sensitivity;
 pub mod theorem1;
 pub mod validate;
@@ -16,6 +19,7 @@ pub use constants::{
 };
 pub use corollary1::{corollary1_bound, BoundParams};
 pub use optimizer::{optimize_block_size, BoundOptimum};
+pub use replan::{ControlPlan, Replanner, PLAN_REL_TOL};
 pub use sensitivity::{max_regret, sensitivity_sweep, SensitivityRow};
 pub use validate::{
     aggregate_slowdown, bootstrap_mean_upper, check_recommendation,

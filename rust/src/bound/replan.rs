@@ -1,0 +1,300 @@
+//! Mid-run budget re-optimization: re-solve the Corollary-1 block-size
+//! problem at block boundaries with the *remaining* inputs substituted
+//! in — the acting half of the closed-loop payload controller.
+//!
+//! The paper picks one `ñ_c` ahead of time from the bias–variance
+//! bound. On a time-varying channel the inputs that optimization
+//! depends on drift as the run unfolds: the remaining deadline budget
+//! shrinks with every fade-stretched transmission, the untransmitted
+//! sample count shrinks with every delivery, and the expected slowdown
+//! of the link ahead is whatever the channel estimator
+//! (`channel::estimator`) currently believes. [`Replanner`] re-runs the
+//! exact integer argmin over that residual problem whenever the
+//! slowdown estimate has actually moved; with an unchanged estimate
+//! re-planning is a **no-op by construction** (the current plan is kept
+//! without re-solving), which is what makes the closed-loop policy
+//! bit-identical to the paper's fixed schedule on static channels
+//! (`rust/tests/scenario_parity.rs`).
+//!
+//! [`ControlPlan`] is the deterministic pre-run plan both the
+//! controller and its tests share: workload-matched bound constants
+//! estimated with a FIXED pilot seed (the plan describes the scenario,
+//! not one Monte-Carlo repetition — every sweep seed gets the same
+//! plan), plus the channel-aware initial recommendation.
+
+use crate::coordinator::des::DesConfig;
+use crate::data::Dataset;
+use crate::model::Workload;
+
+use super::constants::{estimate_constants, estimate_logistic_constants};
+use super::corollary1::BoundParams;
+use super::optimizer::optimize_block_size;
+use super::validate::recommend_block_size;
+
+/// Pilot-run seed for the plan's constant estimation. Fixed (not the
+/// run seed) so one scenario has ONE plan across all Monte-Carlo
+/// repetitions and the `ScenarioRunner` can cache it.
+pub const PLAN_PILOT_SEED: u64 = 1906;
+
+/// Pilot-run SGD updates for the `D` estimate (matches the CLI's
+/// `estimate_constants` call).
+pub const PLAN_PILOT_UPDATES: usize = 2000;
+
+/// Relative slowdown drift below which the controller keeps its current
+/// plan instead of re-solving. Any exact no-change (the static-channel
+/// case) is below every positive tolerance; fading estimates move by
+/// whole state mixtures, far above it.
+pub const PLAN_REL_TOL: f64 = 1e-9;
+
+/// The deterministic pre-run control plan: bound constants matched to
+/// the workload, the original problem size/budget, and the
+/// channel-aware initial recommendation `ñ_c`.
+#[derive(Clone, Debug)]
+pub struct ControlPlan {
+    /// Workload-matched Corollary-1 constants.
+    pub params: BoundParams,
+    /// Total training-set size N.
+    pub n: usize,
+    /// The full deadline T.
+    pub t_budget: f64,
+    /// Per-packet overhead n_o.
+    pub n_o: f64,
+    /// Time per SGD update τ_p.
+    pub tau_p: f64,
+    /// A-priori expected slowdown the initial recommendation used.
+    pub slowdown0: f64,
+    /// The channel-aware initial recommendation
+    /// (`recommend_block_size` at `slowdown0`).
+    pub n_c0: usize,
+}
+
+impl ControlPlan {
+    /// Build the plan for a dataset and run configuration.
+    ///
+    /// `ds` must be the dataset the scenario actually trains (for the
+    /// logistic workload: the binarized label view,
+    /// `ScenarioRunner::data`). Constants are estimated with the fixed
+    /// [`PLAN_PILOT_SEED`], so the plan is a pure function of
+    /// (dataset, λ, α, T, n_o, τ_p, workload, slowdown prior) —
+    /// identical across Monte-Carlo seeds.
+    pub fn compute(ds: &Dataset, cfg: &DesConfig, slowdown0: f64) -> ControlPlan {
+        let k = match cfg.workload {
+            Workload::Ridge => estimate_constants(
+                ds,
+                cfg.lambda,
+                cfg.alpha,
+                PLAN_PILOT_UPDATES,
+                PLAN_PILOT_SEED,
+            ),
+            Workload::Logistic => estimate_logistic_constants(
+                ds,
+                cfg.lambda,
+                cfg.alpha,
+                PLAN_PILOT_UPDATES,
+                PLAN_PILOT_SEED,
+            ),
+        };
+        let params = BoundParams::from_constants(cfg.alpha, &k);
+        let n_c0 = recommend_block_size(
+            &params,
+            ds.n,
+            cfg.t_budget,
+            cfg.n_o,
+            cfg.tau_p,
+            slowdown0,
+        )
+        .n_c;
+        ControlPlan {
+            params,
+            n: ds.n,
+            t_budget: cfg.t_budget,
+            n_o: cfg.n_o,
+            tau_p: cfg.tau_p,
+            slowdown0,
+            n_c0,
+        }
+    }
+}
+
+/// The remaining-budget re-optimizer: keeps the currently planned
+/// `n_c`, and re-solves the Corollary-1 argmin over the residual
+/// problem (untransmitted samples, remaining wall-clock budget shrunk
+/// by the estimated slowdown) whenever the slowdown estimate drifts.
+///
+/// Deterministic: consumes no RNG; its decisions are a pure function of
+/// the plan and the `(remaining, t_now, slowdown)` inputs it is handed.
+#[derive(Clone, Debug)]
+pub struct Replanner {
+    plan: ControlPlan,
+    rel_tol: f64,
+    /// The slowdown estimate the current `n_c` was solved under.
+    last_slowdown: f64,
+    n_c: usize,
+}
+
+impl Replanner {
+    pub fn new(plan: ControlPlan, rel_tol: f64) -> Replanner {
+        assert!(rel_tol >= 0.0, "tolerance must be non-negative");
+        assert!(plan.slowdown0 > 0.0, "plan slowdown must be positive");
+        Replanner {
+            last_slowdown: plan.slowdown0,
+            n_c: plan.n_c0,
+            rel_tol,
+            plan,
+        }
+    }
+
+    /// The currently planned payload size.
+    pub fn current(&self) -> usize {
+        self.n_c
+    }
+
+    /// The plan this re-planner executes.
+    pub fn plan(&self) -> &ControlPlan {
+        &self.plan
+    }
+
+    /// Re-plan at a block boundary: `remaining` untransmitted samples,
+    /// current time `t_now`, estimated slowdown of the link ahead.
+    /// Returns the (possibly updated) planned `n_c`.
+    ///
+    /// No-op cases, in order: an unchanged slowdown estimate (relative
+    /// drift within tolerance — re-planning with unchanged inputs must
+    /// not disturb the schedule), nothing left to send, or a residual
+    /// budget of zero or less (nothing to optimize over).
+    pub fn replan(
+        &mut self,
+        remaining: usize,
+        t_now: f64,
+        slowdown: f64,
+    ) -> usize {
+        assert!(slowdown > 0.0, "slowdown must be positive, got {slowdown}");
+        let drift = (slowdown - self.last_slowdown).abs();
+        if drift <= self.rel_tol * self.last_slowdown {
+            return self.n_c;
+        }
+        let residual_budget = (self.plan.t_budget - t_now) / slowdown;
+        if remaining == 0 || residual_budget <= 0.0 {
+            // nothing to optimize over — and the drifted estimate is NOT
+            // recorded, so a later call with real inputs still re-solves
+            return self.n_c;
+        }
+        self.last_slowdown = slowdown;
+        self.n_c = optimize_block_size(
+            &self.plan.params,
+            remaining,
+            residual_budget,
+            self.plan.n_o,
+            self.plan.tau_p,
+        )
+        .n_c;
+        self.n_c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{synth_calhousing, SynthSpec};
+
+    fn plan_fixture() -> ControlPlan {
+        ControlPlan {
+            params: BoundParams::paper_fig3(3.0),
+            n: 2000,
+            t_budget: 3000.0,
+            n_o: 10.0,
+            tau_p: 1.0,
+            slowdown0: 1.25,
+            n_c0: recommend_block_size(
+                &BoundParams::paper_fig3(3.0),
+                2000,
+                3000.0,
+                10.0,
+                1.0,
+                1.25,
+            )
+            .n_c,
+        }
+    }
+
+    #[test]
+    fn unchanged_slowdown_is_a_no_op() {
+        let plan = plan_fixture();
+        let n_c0 = plan.n_c0;
+        let mut rp = Replanner::new(plan, PLAN_REL_TOL);
+        // bitwise-equal estimate: no re-solve, regardless of elapsed
+        // time or delivered count
+        for t in [0.0, 500.0, 2900.0] {
+            assert_eq!(rp.replan(1234, t, 1.25), n_c0);
+        }
+        // sub-tolerance drift is also a no-op
+        assert_eq!(rp.replan(1234, 100.0, 1.25 * (1.0 + 1e-12)), n_c0);
+    }
+
+    #[test]
+    fn drifted_slowdown_resolves_the_residual_problem() {
+        let plan = plan_fixture();
+        let params = plan.params.clone();
+        let (n_o, tau_p, t_budget) = (plan.n_o, plan.tau_p, plan.t_budget);
+        let mut rp = Replanner::new(plan, PLAN_REL_TOL);
+        let (remaining, t_now, slowdown) = (900usize, 1200.0, 3.0);
+        let got = rp.replan(remaining, t_now, slowdown);
+        let want = optimize_block_size(
+            &params,
+            remaining,
+            (t_budget - t_now) / slowdown,
+            n_o,
+            tau_p,
+        )
+        .n_c;
+        assert_eq!(got, want, "replan must be the residual argmin");
+        assert_eq!(rp.current(), want);
+        // the new estimate becomes the reference: repeating it no-ops
+        assert_eq!(rp.replan(remaining - 100, t_now + 50.0, 3.0), want);
+    }
+
+    #[test]
+    fn exhausted_inputs_keep_the_current_plan_and_do_not_absorb_drift() {
+        let plan = plan_fixture();
+        let params = plan.params.clone();
+        let (n_o, tau_p, t_budget) = (plan.n_o, plan.tau_p, plan.t_budget);
+        let n_c0 = plan.n_c0;
+        let mut rp = Replanner::new(plan, PLAN_REL_TOL);
+        assert_eq!(rp.replan(0, 100.0, 2.0), n_c0, "nothing left to send");
+        assert_eq!(
+            rp.replan(500, 5000.0, 2.0),
+            n_c0,
+            "budget already spent"
+        );
+        // the drift seen on those no-op calls was NOT recorded: the
+        // next real call at the same slowdown still re-solves
+        let got = rp.replan(500, 1000.0, 2.0);
+        let want = optimize_block_size(
+            &params,
+            500,
+            (t_budget - 1000.0) / 2.0,
+            n_o,
+            tau_p,
+        )
+        .n_c;
+        assert_eq!(got, want, "drift must survive exhausted-input calls");
+    }
+
+    #[test]
+    fn plan_is_seed_independent_and_matches_the_recommendation() {
+        let ds = synth_calhousing(&SynthSpec { n: 800, ..Default::default() });
+        let mk_cfg = |seed: u64| DesConfig {
+            record_blocks: false,
+            ..DesConfig::paper(1, 10.0, 1200.0, seed)
+        };
+        let a = ControlPlan::compute(&ds, &mk_cfg(1), 1.5);
+        let b = ControlPlan::compute(&ds, &mk_cfg(999), 1.5);
+        assert_eq!(a.n_c0, b.n_c0, "the plan must not depend on the run seed");
+        assert_eq!(a.params.big_l, b.params.big_l);
+        assert_eq!(a.params.d_diam, b.params.d_diam);
+        // and n_c0 is exactly the channel-aware recommendation
+        let want = recommend_block_size(&a.params, ds.n, 1200.0, 10.0, 1.0, 1.5);
+        assert_eq!(a.n_c0, want.n_c);
+        assert!(a.n_c0 >= 1 && a.n_c0 <= ds.n);
+    }
+}

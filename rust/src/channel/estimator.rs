@@ -1,0 +1,396 @@
+//! Online channel-state estimation from per-packet delivery
+//! observations — the sensing half of the closed-loop payload
+//! controller.
+//!
+//! The scheduler core already produces, for every transmitted block, the
+//! tuple (nominal duration, measured channel occupancy, ARQ attempt
+//! count) — exactly what the edge node observes from ACK timing. This
+//! module turns that stream into a slowdown estimate the re-planner
+//! (`bound::replan`) can substitute into the Corollary-1 optimizer:
+//!
+//! * [`GeBeliefEstimator`] — an exact Bayesian filter for the
+//!   Gilbert–Elliott channel with KNOWN parameters: a two-state HMM
+//!   whose per-packet transition matches `GilbertElliottChannel`'s
+//!   clocking, with closed-form belief updates from the geometric ARQ
+//!   attempt likelihood and the (state-identifying, when the rates
+//!   differ) implied service rate.
+//! * [`EmaRateEstimator`] — a moving-average occupancy tracker for
+//!   UNKNOWN channels: no model, just an exponentially weighted mean of
+//!   the measured per-packet slowdown.
+//!
+//! Both are deterministic functions of the observation stream — they
+//! consume no RNG, so a policy built on them preserves the scheduler's
+//! RNG-stream discipline bit for bit (asserted by the ControlPolicy ≡
+//! FixedPolicy parity test in `rust/tests/scenario_parity.rs`).
+
+use super::fading::LinkState;
+
+/// What the edge observes about one completed block transmission: the
+/// nominal channel time the block would need on the ideal unit-rate
+/// link, the time the channel was actually occupied (arrival − send),
+/// and the ARQ attempt count carried by the delivery ACK.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PacketObs {
+    /// Nominal duration `payload + n_o` (ideal unit-rate link).
+    pub nominal: f64,
+    /// Measured occupancy: `arrival − sent_at`.
+    pub occupancy: f64,
+    /// ARQ attempts the delivery took (1 = no loss).
+    pub attempts: u32,
+}
+
+impl PacketObs {
+    /// Measured slowdown of this packet (occupancy per nominal unit).
+    pub fn slowdown(&self) -> f64 {
+        self.occupancy / self.nominal
+    }
+}
+
+/// The Gilbert–Elliott parameters the belief filter conditions on
+/// (mirrors `GilbertElliottChannel`; a degenerate chain with
+/// `p_gb = 0` models any static channel as "pinned good").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GeParams {
+    /// P(good → bad) per packet.
+    pub p_gb: f64,
+    /// P(bad → good) per packet.
+    pub p_bg: f64,
+    /// Link parameters while good.
+    pub good: LinkState,
+    /// Link parameters while in a fade.
+    pub bad: LinkState,
+}
+
+impl GeParams {
+    pub fn new(p_gb: f64, p_bg: f64, good: LinkState, bad: LinkState) -> GeParams {
+        assert!(
+            (0.0..=1.0).contains(&p_gb) && (0.0..=1.0).contains(&p_bg),
+            "transition probabilities must be in [0,1], got ({p_gb},{p_bg})"
+        );
+        GeParams { p_gb, p_bg, good, bad }
+    }
+
+    /// Stationary P(bad) — the channel's own closed form
+    /// ([`super::fading::stationary_p_bad`]), so filter and channel
+    /// share one degenerate-chain convention.
+    pub fn stationary_p_bad(&self) -> f64 {
+        super::fading::stationary_p_bad(self.p_gb, self.p_bg)
+    }
+
+    /// Expected slowdown at bad-state probability `p_bad`.
+    fn mix_slowdown(&self, p_bad: f64) -> f64 {
+        (1.0 - p_bad) * self.good.expected_slowdown()
+            + p_bad * self.bad.expected_slowdown()
+    }
+
+    /// Per-state likelihood of one observation: the geometric ARQ
+    /// attempt count `p^(a−1)·(1−p)` times an indicator that the
+    /// implied service rate (`attempts · nominal / occupancy`) matches
+    /// the state's rate. When the two states share a rate the indicator
+    /// is uninformative and the attempt count does the discriminating.
+    fn likelihood(&self, state: &LinkState, obs: &PacketObs) -> f64 {
+        let attempts_lh = if state.p_loss <= 0.0 {
+            if obs.attempts == 1 {
+                1.0
+            } else {
+                0.0
+            }
+        } else {
+            state.p_loss.powi(obs.attempts as i32 - 1) * (1.0 - state.p_loss)
+        };
+        if obs.occupancy <= 0.0 || obs.nominal <= 0.0 {
+            return attempts_lh;
+        }
+        let implied_rate = obs.attempts as f64 * obs.nominal / obs.occupancy;
+        let rate_match =
+            (implied_rate - state.rate).abs() <= 1e-6 * state.rate;
+        if rate_match {
+            attempts_lh
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Exact two-state HMM filter over the Gilbert–Elliott chain: maintains
+/// the posterior P(the last packet was transmitted in the bad state)
+/// and updates it in closed form per observation. Fresh channels start
+/// in the good state (belief 0), matching `GilbertElliottChannel`.
+#[derive(Clone, Copy, Debug)]
+pub struct GeBeliefEstimator {
+    params: GeParams,
+    /// Posterior P(bad) for the most recently observed packet.
+    belief: f64,
+}
+
+impl GeBeliefEstimator {
+    pub fn new(params: GeParams) -> GeBeliefEstimator {
+        GeBeliefEstimator { params, belief: 0.0 }
+    }
+
+    /// Posterior P(bad) of the last observed packet.
+    pub fn belief(&self) -> f64 {
+        self.belief
+    }
+
+    /// Predictive P(bad) for the NEXT packet (one Markov step ahead of
+    /// the posterior — the per-packet clocking of the channel).
+    pub fn predicted_p_bad(&self) -> f64 {
+        self.belief * (1.0 - self.params.p_bg)
+            + (1.0 - self.belief) * self.params.p_gb
+    }
+
+    /// Fold one packet observation into the belief: predict one Markov
+    /// step, then condition on the ARQ/timing likelihoods. If the
+    /// observation is impossible under BOTH states (mis-specified
+    /// parameters), the likelihood term is skipped and only the
+    /// transition prediction is kept.
+    pub fn observe(&mut self, obs: &PacketObs) {
+        let prior = self.predicted_p_bad();
+        let l_bad = self.params.likelihood(&self.params.bad, obs);
+        let l_good = self.params.likelihood(&self.params.good, obs);
+        let denom = prior * l_bad + (1.0 - prior) * l_good;
+        self.belief = if denom > 0.0 {
+            prior * l_bad / denom
+        } else {
+            prior
+        };
+    }
+
+    /// Expected mean slowdown over the next `horizon` packets given the
+    /// current belief: the deviation of the predictive P(bad) from the
+    /// stationary distribution decays geometrically with the chain's
+    /// mixing factor `λ = 1 − p_gb − p_bg`, so the horizon average has
+    /// the closed form `π + (b₁ − π)·(1 − λ^h)/(h(1 − λ))`. `horizon`
+    /// is clamped to ≥ 1; as `horizon → ∞` this approaches the
+    /// stationary mixture, at `horizon = 1` it is the myopic one-packet
+    /// estimate.
+    pub fn horizon_slowdown(&self, horizon: f64) -> f64 {
+        let h = horizon.max(1.0);
+        let pi = self.params.stationary_p_bad();
+        let lambda = 1.0 - self.params.p_gb - self.params.p_bg;
+        let b1 = self.predicted_p_bad();
+        let mixing = if (1.0 - lambda).abs() < 1e-12 {
+            1.0 // frozen chain: the deviation never decays
+        } else {
+            (1.0 - lambda.powf(h)) / (h * (1.0 - lambda))
+        };
+        let p_bad = (pi + (b1 - pi) * mixing).clamp(0.0, 1.0);
+        self.params.mix_slowdown(p_bad)
+    }
+}
+
+/// Model-free fallback for unknown channels: an exponentially weighted
+/// moving average of the measured per-packet slowdown, primed at the
+/// scenario's a-priori expected slowdown so the very first plan matches
+/// the static recommendation.
+#[derive(Clone, Copy, Debug)]
+pub struct EmaRateEstimator {
+    est: f64,
+    weight: f64,
+}
+
+impl EmaRateEstimator {
+    /// `prior` seeds the estimate; `weight ∈ (0, 1]` is the EMA step
+    /// (how fast observations displace the prior).
+    pub fn new(prior: f64, weight: f64) -> EmaRateEstimator {
+        assert!(prior > 0.0, "prior slowdown must be positive, got {prior}");
+        assert!(
+            weight > 0.0 && weight <= 1.0,
+            "EMA weight must be in (0, 1], got {weight}"
+        );
+        EmaRateEstimator { est: prior, weight }
+    }
+
+    pub fn observe(&mut self, obs: &PacketObs) {
+        if obs.nominal <= 0.0 || obs.occupancy <= 0.0 {
+            return;
+        }
+        self.est = (1.0 - self.weight) * self.est
+            + self.weight * obs.slowdown();
+    }
+
+    pub fn estimate(&self) -> f64 {
+        self.est
+    }
+}
+
+/// The estimator behind a `ControlPolicy`, built by value (no `Box`) so
+/// the sweep hot path stays allocation-free.
+#[derive(Clone, Copy, Debug)]
+pub enum ControlEstimator {
+    /// Bayesian Gilbert–Elliott belief filter (known channel params).
+    Ge(GeBeliefEstimator),
+    /// Moving-average slowdown tracker (unknown channel).
+    Ema(EmaRateEstimator),
+}
+
+impl ControlEstimator {
+    pub fn observe(&mut self, obs: &PacketObs) {
+        match self {
+            ControlEstimator::Ge(e) => e.observe(obs),
+            ControlEstimator::Ema(e) => e.observe(obs),
+        }
+    }
+
+    /// Expected mean slowdown over the next `horizon` packets (the EMA
+    /// estimator has no dynamics and ignores the horizon).
+    pub fn horizon_slowdown(&self, horizon: f64) -> f64 {
+        match self {
+            ControlEstimator::Ge(e) => e.horizon_slowdown(horizon),
+            ControlEstimator::Ema(e) => e.estimate(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ControlEstimator::Ge(_) => "ge",
+            ControlEstimator::Ema(_) => "ema",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// States distinguished by loss rate only (equal rates), so the
+    /// geometric attempt likelihood does all the work — the posteriors
+    /// are hand-computable.
+    fn loss_only_params() -> GeParams {
+        GeParams::new(
+            0.2,
+            0.5,
+            LinkState::new(1.0, 0.1),
+            LinkState::new(1.0, 0.6),
+        )
+    }
+
+    fn obs(nominal: f64, attempts: u32, rate: f64) -> PacketObs {
+        PacketObs {
+            nominal,
+            occupancy: attempts as f64 * nominal / rate,
+            attempts,
+        }
+    }
+
+    #[test]
+    fn two_step_posterior_matches_hand_computation() {
+        let mut est = GeBeliefEstimator::new(loss_only_params());
+        assert_eq!(est.belief(), 0.0, "fresh channels start good");
+
+        // packet 1, one attempt. Predict: b₁ = 0·0.5 + 1·0.2 = 0.2.
+        // Likelihoods: L_good = 1−0.1 = 0.9, L_bad = 1−0.6 = 0.4.
+        // Posterior: 0.2·0.4 / (0.2·0.4 + 0.8·0.9) = 0.08/0.80 = 0.1.
+        est.observe(&obs(5.0, 1, 1.0));
+        assert!((est.belief() - 0.1).abs() < 1e-12, "b1 = {}", est.belief());
+
+        // packet 2, three attempts. Predict: 0.1·0.5 + 0.9·0.2 = 0.23.
+        // L_good = 0.1²·0.9 = 0.009, L_bad = 0.6²·0.4 = 0.144.
+        // Posterior: 0.23·0.144 / (0.23·0.144 + 0.77·0.009)
+        //          = 0.03312/0.04005 = 368/445.
+        est.observe(&obs(5.0, 3, 1.0));
+        assert!(
+            (est.belief() - 368.0 / 445.0).abs() < 1e-12,
+            "b2 = {}",
+            est.belief()
+        );
+    }
+
+    #[test]
+    fn distinct_rates_identify_the_state_exactly() {
+        let params = GeParams::new(
+            0.3,
+            0.4,
+            LinkState::new(1.0, 0.0),
+            LinkState::new(0.5, 0.0),
+        );
+        let mut est = GeBeliefEstimator::new(params);
+        // occupancy implies rate 0.5 -> only the bad state explains it
+        est.observe(&obs(4.0, 1, 0.5));
+        assert_eq!(est.belief(), 1.0);
+        // next packet at rate 1.0 -> back to certainly good
+        est.observe(&obs(4.0, 1, 1.0));
+        assert_eq!(est.belief(), 0.0);
+    }
+
+    #[test]
+    fn pinned_good_chain_never_leaves_belief_zero() {
+        // p_gb = 0 models a static channel: whatever the observations,
+        // the posterior stays exactly 0 and the slowdown estimate stays
+        // exactly the good-state occupancy — the invariant behind the
+        // ControlPolicy ≡ FixedPolicy parity on static channels.
+        let params = GeParams::new(
+            0.0,
+            0.7,
+            LinkState::new(1.0, 0.3),
+            LinkState::new(0.25, 0.9),
+        );
+        let mut est = GeBeliefEstimator::new(params);
+        let s0 = est.horizon_slowdown(1.0);
+        assert_eq!(s0, params.good.expected_slowdown());
+        for attempts in [1u32, 2, 7, 1, 30] {
+            est.observe(&obs(3.0, attempts, 1.0));
+            assert_eq!(est.belief(), 0.0);
+            assert_eq!(est.horizon_slowdown(10.0), s0);
+            assert_eq!(est.horizon_slowdown(1e6), s0);
+        }
+    }
+
+    #[test]
+    fn impossible_observation_keeps_the_transition_prior() {
+        // rates match neither state -> likelihoods are both 0; the
+        // filter must fall back to the predicted prior, not NaN
+        let mut est = GeBeliefEstimator::new(loss_only_params());
+        est.observe(&obs(2.0, 1, 0.333));
+        assert!((est.belief() - 0.2).abs() < 1e-12, "{}", est.belief());
+    }
+
+    #[test]
+    fn horizon_average_interpolates_belief_and_stationary() {
+        let params = loss_only_params();
+        let mut est = GeBeliefEstimator::new(params);
+        // a burst of losses drives the belief toward bad
+        for _ in 0..4 {
+            est.observe(&obs(5.0, 6, 1.0));
+        }
+        let myopic = est.horizon_slowdown(1.0);
+        let long = est.horizon_slowdown(1e9);
+        let stationary = params.mix_slowdown(params.stationary_p_bad());
+        // belief is above stationary, so the myopic estimate is the
+        // most pessimistic and the long-horizon one decays to π
+        assert!(est.belief() > params.stationary_p_bad());
+        assert!(myopic > long, "{myopic} vs {long}");
+        assert!(
+            (long - stationary).abs() < 1e-6 * stationary,
+            "{long} vs stationary {stationary}"
+        );
+        // intermediate horizons sit in between
+        let mid = est.horizon_slowdown(10.0);
+        assert!(mid <= myopic && mid >= long);
+    }
+
+    #[test]
+    fn ema_tracks_the_measured_slowdown() {
+        let mut est = EmaRateEstimator::new(1.0, 0.5);
+        assert_eq!(est.estimate(), 1.0);
+        est.observe(&PacketObs { nominal: 10.0, occupancy: 30.0, attempts: 3 });
+        assert!((est.estimate() - 2.0).abs() < 1e-12);
+        est.observe(&PacketObs { nominal: 10.0, occupancy: 30.0, attempts: 3 });
+        assert!((est.estimate() - 2.5).abs() < 1e-12);
+        // degenerate observations are ignored
+        est.observe(&PacketObs { nominal: 0.0, occupancy: 5.0, attempts: 1 });
+        assert!((est.estimate() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_transition_probability_rejected() {
+        GeParams::new(
+            1.5,
+            0.5,
+            LinkState::new(1.0, 0.0),
+            LinkState::new(1.0, 0.0),
+        );
+    }
+}

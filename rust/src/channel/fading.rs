@@ -54,6 +54,21 @@ impl LinkState {
     }
 }
 
+/// Stationary P(bad) of a two-state chain with per-packet transition
+/// probabilities `p_gb`/`p_bg` — THE degenerate-chain convention
+/// (`p_gb ≤ 0` pins good → 0; `p_bg ≤ 0` with `p_gb > 0` makes bad
+/// absorbing → 1), shared by the channel and the belief estimator
+/// (`channel::estimator::GeParams`) so the two can never drift apart.
+pub fn stationary_p_bad(p_gb: f64, p_bg: f64) -> f64 {
+    if p_gb <= 0.0 {
+        0.0
+    } else if p_bg <= 0.0 {
+        1.0
+    } else {
+        p_gb / (p_gb + p_bg)
+    }
+}
+
 /// Gilbert–Elliott channel: good/bad [`LinkState`]s, per-packet Markov
 /// transitions, stop-and-wait ARQ within each packet.
 #[derive(Clone, Copy, Debug)]
@@ -98,13 +113,7 @@ impl GilbertElliottChannel {
     /// chain to good (0); `p_bg = 0` with `p_gb > 0` makes bad
     /// absorbing (1).
     pub fn stationary_p_bad(&self) -> f64 {
-        if self.p_gb <= 0.0 {
-            0.0
-        } else if self.p_bg <= 0.0 {
-            1.0
-        } else {
-            self.p_gb / (self.p_gb + self.p_bg)
-        }
+        stationary_p_bad(self.p_gb, self.p_bg)
     }
 
     /// Expected long-run slowdown factor: the stationary mixture of the

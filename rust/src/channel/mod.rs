@@ -7,15 +7,24 @@
 //! a bursty Gilbert–Elliott fading channel ([`fading`]) whose good/bad
 //! Markov states model the time-varying links of real edge deployments,
 //! and a heterogeneous multi-lane uplink ([`multilane`]) giving every
-//! device of a multi-device scenario its own link.
+//! device of a multi-device scenario its own link. The [`estimator`]
+//! module closes the loop from the other side: online channel-state
+//! estimation (a Gilbert–Elliott belief filter and a moving-average
+//! rate tracker) from the per-packet delivery observations the
+//! scheduler produces.
 
 pub mod erasure;
+pub mod estimator;
 pub mod fading;
 pub mod ideal;
 pub mod multilane;
 pub mod rate;
 
 pub use erasure::ErasureChannel;
+pub use estimator::{
+    ControlEstimator, EmaRateEstimator, GeBeliefEstimator, GeParams,
+    PacketObs,
+};
 pub use fading::{GilbertElliottChannel, LinkState};
 pub use ideal::IdealChannel;
 pub use multilane::MultiLaneChannel;

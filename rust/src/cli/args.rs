@@ -26,6 +26,9 @@ COMMANDS:
                 runs/sec, SGD updates/sec, allocations/run)
     tightness   actual gap vs Theorem 1 vs Corollary 1
     adaptive    adaptive block-size schedules vs the fixed optimum ñ_c
+    control     closed-loop control comparison: fixed ñ_c vs open-loop
+                warmup vs channel-adaptive control across fading
+                severities (final loss + deadline-outage rate)
     help        print this message
 
 OPTIONS (all commands):
@@ -42,6 +45,11 @@ SCENARIO OPTIONS (scenario command):
                                [:<r_bad>[:<r_good>]]]  (Gilbert–Elliott)
     --policies <a,b,..>      policy specs: fixed[:n_c] | warmup:<s>:<g>[:<cap>]
                              | deadline:<frac> | sequential[:n_c] | allfirst
+                             | control[:est=<ge|ema>][:replan=<k>]
+                             (closed-loop: ge = Gilbert-Elliott belief
+                             filter on the channel axis params, ema =
+                             model-free moving average; re-plans the
+                             Corollary-1 ñ_c every k block boundaries)
     --devices <a,b,..>       traffic specs: <k> devices | online:<rate>
                              | devices:<k>[:sched=..][:skew=..]
     --workloads <a,b,..>     workload specs: ridge | logistic
@@ -55,6 +63,13 @@ SCENARIO OPTIONS (scenario command):
                              proportional-fair)  [default: rr]
     --device-skew <f>        label skew of device shards in [0,1]
                              (0 = IID round-robin, 1 = label-sorted)
+
+CONTROL OPTIONS (control command):
+    --severities <a,b,..>    channel specs to sweep (default: ideal +
+                             three fading severities of increasing depth)
+    --policies <a,b,..>      policies to compare at the per-channel
+                             recommended ñ_c [default:
+                             fixed,warmup:16:2,control,control:est=ema]
 
 OPTIMIZE OPTIONS (optimize command):
     --mc <seeds>             validate the channel-aware recommendation by
@@ -85,6 +100,8 @@ EXAMPLES:
     edgepipe scenario --devices 4 --device-sched greedy \\
         --device-channels ideal,erasure:0.2,fading:0.05:0.25:0.6,rate:0.5 \\
         --device-skew 0.5
+    edgepipe scenario --preset adaptive_fading --set sweep.seeds=24
+    edgepipe control --set sweep.seeds=24
     edgepipe bench --json BENCH_sweep.json
 ";
 

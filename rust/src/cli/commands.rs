@@ -38,6 +38,7 @@ pub fn dispatch(args: &Args) -> Result<i32> {
         "bench" => cmd_bench(args),
         "tightness" => cmd_tightness(args),
         "adaptive" => cmd_adaptive(args),
+        "control" => cmd_control(args),
         other => {
             eprintln!("unknown command '{other}'\n\n{HELP}");
             Ok(2)
@@ -50,6 +51,38 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
         args.config_path.as_deref().map(Path::new),
         &args.overrides,
     )
+}
+
+/// Split a comma-separated CLI list, trimming entries and dropping
+/// empties (shared by the scenario and control sweep surfaces).
+fn split_list(s: &str) -> Vec<String> {
+    s.split(',')
+        .map(|t| t.trim().to_string())
+        .filter(|t| !t.is_empty())
+        .collect()
+}
+
+/// The sweep-mode base [`DesConfig`] the Monte-Carlo surfaces share
+/// (`scenario`, `control`, `optimize --mc`): protocol/train keys from
+/// the experiment config, all recording off, ridge workload (callers
+/// override fields like `workload` via struct update where needed).
+fn sweep_base(cfg: &ExperimentConfig, t: f64, n_c: usize) -> DesConfig {
+    DesConfig {
+        n_c,
+        n_o: cfg.protocol.n_o,
+        tau_p: cfg.protocol.tau_p,
+        t_budget: t,
+        alpha: cfg.train.alpha,
+        lambda: cfg.train.lambda,
+        init_std: cfg.train.init_std,
+        seed: cfg.train.seed,
+        loss_every: 0,
+        record_blocks: false,
+        store_capacity: None,
+        collect_snapshots: false,
+        event_capacity: 0,
+        workload: crate::model::Workload::Ridge,
+    }
 }
 
 /// Resolve the bound parameters for a dataset (estimating constants).
@@ -172,22 +205,8 @@ fn validate_recommendation(
         &cfg.scenario.workload,
         cfg.scenario.store,
     )?;
-    let base = DesConfig {
-        n_c: 1, // overridden by the recommendation
-        n_o: cfg.protocol.n_o,
-        tau_p: cfg.protocol.tau_p,
-        t_budget: t,
-        alpha: cfg.train.alpha,
-        lambda: cfg.train.lambda,
-        init_std: cfg.train.init_std,
-        seed: cfg.train.seed,
-        loss_every: 0,
-        record_blocks: false,
-        store_capacity: None,
-        collect_snapshots: false,
-        event_capacity: 0,
-        workload: spec.workload,
-    };
+    // n_c = 1 is overridden by the recommendation
+    let base = DesConfig { workload: spec.workload, ..sweep_base(cfg, t, 1) };
     // workload-matched constants and reference optimum, on the label
     // view the scenario actually trains (ridge trains on `ds` itself)
     let reg = cfg.train.lambda / ds.n as f64;
@@ -482,29 +501,8 @@ fn cmd_scenario(args: &Args) -> Result<i32> {
     let ds = build_dataset(&cfg)?;
     let t = cfg.protocol.deadline(ds.n);
     let n_c = resolve_n_c(&cfg, &ds, t);
-    let base = DesConfig {
-        n_c,
-        n_o: cfg.protocol.n_o,
-        tau_p: cfg.protocol.tau_p,
-        t_budget: t,
-        alpha: cfg.train.alpha,
-        lambda: cfg.train.lambda,
-        init_std: cfg.train.init_std,
-        seed: cfg.train.seed,
-        loss_every: 0,
-        record_blocks: false,
-        store_capacity: None,
-        collect_snapshots: false,
-        event_capacity: 0,
-        workload: crate::model::Workload::Ridge,
-    };
+    let base = sweep_base(&cfg, t, n_c);
 
-    let split_list = |s: &str| -> Vec<String> {
-        s.split(',')
-            .map(|t| t.trim().to_string())
-            .filter(|t| !t.is_empty())
-            .collect()
-    };
     // heterogeneous-uplink options: when any is set, plain `<k>` traffic
     // specs in the sweep are upgraded to `devices:<k>` with these
     // per-device channels / scheduler / shard skew
@@ -537,6 +535,16 @@ fn cmd_scenario(args: &Args) -> Result<i32> {
                     ..spec
                 })
             }
+            // an explicit devices: spec already fixes its options; the
+            // flags cannot be merged in, and silently dropping them
+            // would run a different uplink than the user asked for
+            TrafficSpec::Hetero(_) if hetero_requested => bail!(
+                "--device-channels/--device-sched/--device-skew cannot \
+                 modify the explicit hetero traffic spec '{}': set the \
+                 options inside the devices:… string, or use a plain \
+                 <k> entry",
+                spec.traffic.label()
+            ),
             _ => Ok(spec),
         }
     };
@@ -830,6 +838,101 @@ fn cmd_adaptive(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+/// The closed-loop comparison: fixed `ñ_c` vs open-loop warmup vs
+/// channel-adaptive control across fading severities, reporting final
+/// loss and deadline-outage rates (`sweep::control`).
+fn cmd_control(args: &Args) -> Result<i32> {
+    use crate::sweep::control::{control_comparison, fading_severities};
+    use crate::sweep::scenario::{ChannelSpec, PolicySpec};
+
+    let cfg = load_config(args)?;
+    let ds = build_dataset(&cfg)?;
+    let t = cfg.protocol.deadline(ds.n);
+    // n_c = 1 is overridden per severity by the recommendation
+    let base = sweep_base(&cfg, t, 1);
+    let channels: Vec<ChannelSpec> =
+        match args.extra.get("severities").map(String::as_str) {
+            Some(list) => split_list(list)
+                .iter()
+                .map(|s| ChannelSpec::parse(s))
+                .collect::<Result<_>>()?,
+            None => fading_severities(),
+        };
+    let policies: Vec<PolicySpec> = split_list(&args.extra_or(
+        "policies",
+        "fixed,warmup:16:2,control,control:est=ema",
+    ))
+    .iter()
+    .map(|s| PolicySpec::parse(s))
+    .collect::<Result<_>>()?;
+    if channels.is_empty() || policies.is_empty() {
+        bail!("need at least one severity and one policy");
+    }
+    if !args.quiet {
+        println!(
+            "control sweep: N={} n_o={} T={t} seeds={} \
+             ({} severities x {} policies)",
+            ds.n,
+            base.n_o,
+            cfg.sweep.seeds,
+            channels.len(),
+            policies.len()
+        );
+    }
+    let rows = control_comparison(
+        &ds,
+        &base,
+        &channels,
+        &policies,
+        cfg.sweep.seeds,
+        cfg.sweep.threads,
+    );
+    let mut table = CsvTable::new(&[
+        "channel",
+        "policy",
+        "n_c",
+        "final_loss_mean",
+        "final_loss_std",
+        "outage_rate",
+        "mean_delivered",
+        "seeds",
+    ]);
+    let mut last_channel = String::new();
+    for row in &rows {
+        if row.channel != last_channel {
+            println!(
+                "{} (slowdown-aware ñ_c = {}):",
+                row.channel, row.n_c
+            );
+            last_channel = row.channel.clone();
+        }
+        println!(
+            "  {:<24} loss {:.6} ± {:.6}  outage {:>5.1}%  delivered {:>8.1}",
+            row.policy,
+            row.loss.mean,
+            row.loss.std,
+            100.0 * row.outage_rate,
+            row.mean_delivered
+        );
+        table.push_raw(vec![
+            row.channel.clone(),
+            row.policy.clone(),
+            format!("{}", row.n_c),
+            format!("{}", row.loss.mean),
+            format!("{}", row.loss.std),
+            format!("{}", row.outage_rate),
+            format!("{}", row.mean_delivered),
+            format!("{}", row.loss.n),
+        ]);
+    }
+    let out = Path::new(&args.out_dir).join("control_sweep.csv");
+    write_csv(&table, &out)?;
+    if !args.quiet {
+        println!("wrote {}", out.display());
+    }
+    Ok(0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -962,6 +1065,37 @@ mod tests {
     }
 
     #[test]
+    fn device_flags_reject_explicit_hetero_specs() {
+        // flags cannot silently merge into (or be dropped from) an
+        // explicit devices:… traffic spec — hard error, both for a
+        // sweep entry and for a hetero preset
+        for (key, value) in [
+            ("devices", "devices:2:sched=pfair"),
+            ("preset", "hetero3"),
+        ] {
+            let mut extra = std::collections::BTreeMap::new();
+            extra.insert(key.to_string(), value.to_string());
+            extra.insert("device-skew".to_string(), "0.5".to_string());
+            let args = Args {
+                command: "scenario".into(),
+                overrides: vec![
+                    ("data.n_raw".into(), "200".into()),
+                    ("protocol.n_c".into(), "20".into()),
+                    ("sweep.seeds".into(), "1".into()),
+                ],
+                backend: "native".into(),
+                quiet: true,
+                extra,
+                ..Default::default()
+            };
+            assert!(
+                dispatch(&args).is_err(),
+                "{key}={value} must reject device flags"
+            );
+        }
+    }
+
+    #[test]
     fn hetero_flags_reject_mismatched_channel_counts() {
         // 4 per-device channels cannot serve a k=3 sweep entry
         let mut extra = std::collections::BTreeMap::new();
@@ -977,6 +1111,44 @@ mod tests {
                 ("protocol.n_c".into(), "20".into()),
                 ("sweep.seeds".into(), "1".into()),
             ],
+            backend: "native".into(),
+            quiet: true,
+            extra,
+            ..Default::default()
+        };
+        assert!(dispatch(&args).is_err());
+    }
+
+    #[test]
+    fn control_sweep_runs_end_to_end() {
+        let mut extra = std::collections::BTreeMap::new();
+        extra.insert(
+            "severities".to_string(),
+            "ideal,fading:0.1:0.15:0.5:0:0.3".to_string(),
+        );
+        extra.insert("policies".to_string(), "fixed,control".to_string());
+        let args = Args {
+            command: "control".into(),
+            overrides: vec![
+                ("data.n_raw".into(), "300".into()),
+                ("sweep.seeds".into(), "2".into()),
+            ],
+            out_dir: std::env::temp_dir()
+                .join("edgepipe_control_test")
+                .to_string_lossy()
+                .into_owned(),
+            backend: "native".into(),
+            quiet: true,
+            extra,
+            ..Default::default()
+        };
+        assert_eq!(dispatch(&args).unwrap(), 0);
+        // malformed policy and severity lists are hard errors
+        let mut extra = std::collections::BTreeMap::new();
+        extra.insert("policies".to_string(), "control:replan=0".to_string());
+        let args = Args {
+            command: "control".into(),
+            overrides: vec![("data.n_raw".into(), "200".into())],
             backend: "native".into(),
             quiet: true,
             extra,

@@ -152,7 +152,9 @@ pub struct ScenarioConfig {
     /// `fading:<p_gb>:<p_bg>:<p_bad>[:<p_good>[:<r_bad>[:<r_good>]]]`.
     pub channel: String,
     /// Policy spec: `fixed[:n_c]` | `warmup:<start>:<growth>[:<cap>]` |
-    /// `deadline:<frac>` | `sequential[:n_c]` | `allfirst`.
+    /// `deadline:<frac>` | `sequential[:n_c]` | `allfirst` |
+    /// `control[:est=<ge|ema>][:replan=<k>]` (closed-loop
+    /// channel-adaptive re-planning).
     pub policy: String,
     /// Traffic spec: `<k>` round-robin devices | `online:<rate>` |
     /// `devices:<k>[:sched=<rr|greedy|pfair>][:skew=<f>][:ch=<list>]`.

@@ -36,8 +36,8 @@ pub use pipeline::run_pipelined;
 pub use run::{run_experiment, ExperimentOutput, RunResult};
 pub use scheduler::{
     run_schedule, run_schedule_with, BlockFrame, BlockPolicy,
-    DeviceScheduler, FixedPolicy, GreedyScheduler, LaneView,
-    OnlineArrivalSource, OverlapMode, PropFairScheduler,
+    ControlPolicy, DeviceScheduler, FixedPolicy, GreedyScheduler,
+    LaneView, OnlineArrivalSource, OverlapMode, PropFairScheduler,
     RoundRobinScheduler, RoundRobinSource, RunStats, RunWorkspace,
     ScheduledSource, SingleDeviceSource, SourcePoll, TrafficSource,
 };

@@ -60,7 +60,7 @@ pub fn run_pipelined(
     let seed = cfg.seed;
 
     let (summary, run) = std::thread::scope(
-        |scope| -> (Result<DeviceSummary>, Result<usize>) {
+        |scope| -> (Result<DeviceSummary>, Result<(usize, usize)>) {
             // ---------------- device transmitter thread ----------------
             let device_handle = scope.spawn(move || -> Result<DeviceSummary> {
                 let mut device = DeviceTransmitter::new(ds, n_c, seed);
@@ -93,8 +93,9 @@ pub fn run_pipelined(
             });
 
             // ---------------- edge trainer (this thread) ----------------
-            let edge = (|| -> Result<usize> {
+            let edge = (|| -> Result<(usize, usize)> {
                 let mut delivered = 0usize;
+                let mut missed = 0usize;
                 while let Ok(pkt) = rx.recv() {
                     if pkt.arrival < t_budget {
                         trainer.advance_to(pkt.arrival, exec, &mut events)?;
@@ -115,6 +116,7 @@ pub fn run_pipelined(
                         );
                     } else {
                         trainer.advance_to(t_budget, exec, &mut events)?;
+                        missed += 1;
                         events.push(
                             t_budget,
                             EventKind::BlockMissedDeadline { block: pkt.block },
@@ -123,7 +125,7 @@ pub fn run_pipelined(
                 }
                 trainer.advance_to(t_budget, exec, &mut events)?;
                 trainer.finish(exec)?;
-                Ok(delivered)
+                Ok((delivered, missed))
             })();
 
             let summary = device_handle
@@ -132,7 +134,7 @@ pub fn run_pipelined(
             (summary, edge)
         },
     );
-    let blocks_delivered = run?;
+    let (blocks_delivered, blocks_missed) = run?;
     let summary = summary?;
 
     let samples_delivered = trainer.ingested();
@@ -159,6 +161,7 @@ pub fn run_pipelined(
         blocks_sent: summary.blocks_sent,
         blocks_delivered,
         samples_delivered,
+        blocks_missed,
         retransmissions: summary.retransmissions,
         case,
         snapshots: space.snapshots,

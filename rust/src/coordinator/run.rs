@@ -47,6 +47,8 @@ pub struct RunResult {
     pub blocks_delivered: usize,
     /// Samples available at the edge at the deadline.
     pub samples_delivered: usize,
+    /// Blocks sent but arriving after the deadline (discarded).
+    pub blocks_missed: usize,
     /// Total channel retransmissions (erasure channel; 0 when ideal).
     pub retransmissions: u64,
     /// Whether the full dataset made it (Fig. 2 case).
@@ -59,10 +61,26 @@ pub struct RunResult {
     pub backend: &'static str,
 }
 
+/// THE deadline-outage predicate: the schedule missed `T` — a sent
+/// block arrived late, or the dataset was not fully delivered in time.
+/// One definition shared by [`RunResult`] and
+/// [`RunStats`](super::scheduler::RunStats) (and hence the run JSON and
+/// the control sweeps), so the two surfaces cannot disagree on what an
+/// outage is. Averaged over Monte-Carlo seeds this is the outage
+/// probability (`sweep::control`).
+pub fn deadline_outage(blocks_missed: usize, case: TimelineCase) -> bool {
+    blocks_missed > 0 || case == TimelineCase::Partial
+}
+
 impl RunResult {
     /// Optimality gap of the final iterate given the optimal loss.
     pub fn final_gap(&self, loss_star: f64) -> f64 {
         self.final_loss - loss_star
+    }
+
+    /// Deadline-outage indicator ([`deadline_outage`]).
+    pub fn deadline_outage(&self) -> bool {
+        deadline_outage(self.blocks_missed, self.case)
     }
 }
 

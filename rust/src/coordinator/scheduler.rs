@@ -31,6 +31,8 @@
 
 use anyhow::Result;
 
+use crate::bound::replan::Replanner;
+use crate::channel::estimator::{ControlEstimator, PacketObs};
 use crate::channel::Channel;
 use crate::data::Dataset;
 use crate::protocol::TimelineCase;
@@ -151,6 +153,7 @@ impl RunWorkspace {
             blocks_sent: stats.blocks_sent,
             blocks_delivered: stats.blocks_delivered,
             samples_delivered: stats.samples_delivered,
+            blocks_missed: stats.blocks_missed,
             retransmissions: stats.retransmissions,
             case: stats.case,
             snapshots: self.train.snapshots,
@@ -170,9 +173,20 @@ pub struct RunStats {
     pub blocks_sent: usize,
     pub blocks_delivered: usize,
     pub samples_delivered: usize,
+    /// Blocks sent but arriving after the deadline (discarded).
+    pub blocks_missed: usize,
     pub retransmissions: u64,
     pub case: TimelineCase,
     pub backend: &'static str,
+}
+
+impl RunStats {
+    /// Deadline-outage indicator
+    /// ([`deadline_outage`](super::run::deadline_outage) — one shared
+    /// definition with `RunResult`).
+    pub fn deadline_outage(&self) -> bool {
+        super::run::deadline_outage(self.blocks_missed, self.case)
+    }
 }
 
 /// What a [`TrafficSource`] produced for the current poll.
@@ -207,12 +221,21 @@ pub trait TrafficSource {
 }
 
 /// A per-block payload-size policy (the paper fixes one `n_c`; adaptive
-/// schedules live in `extensions::adaptive`).
+/// schedules live in `extensions::adaptive`, the closed-loop
+/// [`ControlPolicy`] below).
 pub trait BlockPolicy {
     /// Payload for the `block`-th transmission (1-indexed), given how
     /// many samples remain untransmitted and the current time.
     fn next_n_c(&mut self, block: usize, remaining: usize, t_now: f64)
         -> usize;
+
+    /// Observe one completed transmission (nominal duration, measured
+    /// channel occupancy, ARQ attempts) — the scheduler core calls this
+    /// once per sent block, right after the channel resolves it.
+    /// Closed-loop policies feed their channel estimator here; open-loop
+    /// policies keep the default no-op. Implementations must consume no
+    /// RNG, so observing never perturbs the stream discipline.
+    fn observe(&mut self, _obs: &PacketObs) {}
 
     /// Name for logs.
     fn name(&self) -> String;
@@ -228,6 +251,72 @@ impl BlockPolicy for FixedPolicy {
 
     fn name(&self) -> String {
         format!("fixed({})", self.0)
+    }
+}
+
+/// The closed-loop channel-adaptive payload controller: an online
+/// channel estimator ([`ControlEstimator`]) digests the per-packet
+/// ACK/timing observations the scheduler feeds through
+/// [`BlockPolicy::observe`], and a remaining-budget re-optimizer
+/// ([`Replanner`]) re-solves the Corollary-1 argmin at block
+/// boundaries with the elapsed time, untransmitted-sample count and
+/// estimated channel slowdown substituted in.
+///
+/// Deterministic by construction: it consumes no RNG and reads only
+/// observed events, so it preserves the scheduler's stream discipline.
+/// On a static channel with exact estimator constants the slowdown
+/// estimate never moves, re-planning is a no-op, and the controller is
+/// bit-identical to `FixedPolicy(ñ_c)` at the channel-aware
+/// recommendation (asserted in `rust/tests/scenario_parity.rs`).
+pub struct ControlPolicy {
+    est: ControlEstimator,
+    replanner: Replanner,
+    /// Re-plan every `replan_every`-th block boundary (1 = every block).
+    replan_every: usize,
+}
+
+impl ControlPolicy {
+    pub fn new(
+        est: ControlEstimator,
+        replanner: Replanner,
+        replan_every: usize,
+    ) -> ControlPolicy {
+        assert!(replan_every >= 1, "replan interval must be >= 1");
+        ControlPolicy { est, replanner, replan_every }
+    }
+
+    /// The currently planned payload size (test hook).
+    pub fn planned_n_c(&self) -> usize {
+        self.replanner.current()
+    }
+}
+
+impl BlockPolicy for ControlPolicy {
+    fn next_n_c(&mut self, block: usize, remaining: usize, t_now: f64)
+        -> usize {
+        if (block - 1) % self.replan_every == 0 {
+            // expected remaining blocks under the current plan — the
+            // estimator's mixing horizon
+            let horizon = (remaining as f64
+                / self.replanner.current().max(1) as f64)
+                .ceil()
+                .max(1.0);
+            let slowdown = self.est.horizon_slowdown(horizon);
+            self.replanner.replan(remaining, t_now, slowdown);
+        }
+        self.replanner.current().min(remaining).max(1)
+    }
+
+    fn observe(&mut self, obs: &PacketObs) {
+        self.est.observe(obs);
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "control(est={}, replan={})",
+            self.est.name(),
+            self.replan_every
+        )
     }
 }
 
@@ -851,6 +940,7 @@ pub fn run_schedule_with(
         blocks_sent: c.blocks_sent,
         blocks_delivered: c.blocks_delivered,
         samples_delivered: c.samples_delivered,
+        blocks_missed: c.blocks_missed,
         retransmissions: c.retransmissions,
         case: c.case,
         backend: exec.name(),
@@ -868,6 +958,7 @@ struct LoopCounters {
     blocks_sent: usize,
     blocks_delivered: usize,
     samples_delivered: usize,
+    blocks_missed: usize,
     retransmissions: u64,
     case: TimelineCase,
 }
@@ -892,6 +983,7 @@ fn schedule_loop(
     let mut blocks_sent = 0usize;
     let mut blocks_delivered = 0usize;
     let mut samples_delivered = 0usize;
+    let mut blocks_missed = 0usize;
     let mut retransmissions = 0u64;
 
     while t_send < cfg.t_budget {
@@ -926,6 +1018,14 @@ fn schedule_loop(
         channel.select_lane(device);
         let delivery = channel.transmit(t_send, duration, &mut chan_rng);
         retransmissions += (delivery.attempts - 1) as u64;
+        // feed the delivery observation to the policy (no-op for
+        // open-loop policies; closed-loop control updates its channel
+        // belief — consumes no randomness either way)
+        policy.observe(&PacketObs {
+            nominal: duration,
+            occupancy: delivery.arrival - t_send,
+            attempts: delivery.attempts,
+        });
         if delivery.arrival < cfg.t_budget {
             // train (or idle) through the transmission window, then
             // ingest the delivered block
@@ -953,6 +1053,7 @@ fn schedule_loop(
                 }
                 OverlapMode::Sequential => trainer.skip_to(cfg.t_budget),
             }
+            blocks_missed += 1;
             events.push(
                 cfg.t_budget,
                 EventKind::BlockMissedDeadline { block },
@@ -982,6 +1083,7 @@ fn schedule_loop(
         blocks_sent,
         blocks_delivered,
         samples_delivered,
+        blocks_missed,
         retransmissions,
         case,
     })
@@ -1208,6 +1310,101 @@ mod tests {
             source.poll(10, 0.0, &mut frame),
             SourcePoll::Exhausted
         ));
+    }
+
+    #[test]
+    fn missed_deadline_blocks_are_counted_and_flag_outage() {
+        // block = 110 time units, B_d = 10 -> 4 delivered inside T=500,
+        // a 5th sent block misses the deadline
+        let ds = small_ds(1000);
+        let cfg = DesConfig::paper(100, 10.0, 500.0, 3);
+        let mut source = SingleDeviceSource::new(&ds, cfg.seed);
+        let mut policy = FixedPolicy(cfg.n_c);
+        let run = run_schedule(
+            &ds,
+            &cfg,
+            &mut source,
+            &mut policy,
+            OverlapMode::Pipelined,
+            &mut IdealChannel,
+            &mut exec(&ds, &cfg),
+        )
+        .unwrap();
+        assert_eq!(run.blocks_sent, 5);
+        assert_eq!(run.blocks_delivered, 4);
+        assert_eq!(run.blocks_missed, 1);
+        assert!(run.deadline_outage());
+        // a generous budget delivers everything: no outage
+        let cfg = DesConfig::paper(100, 10.0, 3000.0, 3);
+        let mut source = SingleDeviceSource::new(&ds, cfg.seed);
+        let mut policy = FixedPolicy(cfg.n_c);
+        let run = run_schedule(
+            &ds,
+            &cfg,
+            &mut source,
+            &mut policy,
+            OverlapMode::Pipelined,
+            &mut IdealChannel,
+            &mut exec(&ds, &cfg),
+        )
+        .unwrap();
+        assert_eq!(run.blocks_missed, 0);
+        assert!(!run.deadline_outage());
+    }
+
+    #[test]
+    fn control_policy_sizes_like_fixed_on_a_pinned_good_channel() {
+        use crate::bound::replan::{ControlPlan, Replanner, PLAN_REL_TOL};
+        use crate::bound::BoundParams;
+        use crate::channel::estimator::{
+            ControlEstimator, GeBeliefEstimator, GeParams,
+        };
+        use crate::channel::LinkState;
+
+        // a plan whose channel never leaves the good state: the
+        // estimate never moves, so every next_n_c call must size
+        // exactly like FixedPolicy(n_c0) — even across observations
+        let params = BoundParams::paper_fig3(3.0);
+        let plan = ControlPlan {
+            params,
+            n: 2000,
+            t_budget: 3000.0,
+            n_o: 10.0,
+            tau_p: 1.0,
+            slowdown0: LinkState::new(1.0, 0.2).expected_slowdown(),
+            n_c0: 64,
+        };
+        let ge = GeParams::new(
+            0.0,
+            1.0,
+            LinkState::new(1.0, 0.2),
+            LinkState::new(1.0, 0.2),
+        );
+        let mut control = ControlPolicy::new(
+            ControlEstimator::Ge(GeBeliefEstimator::new(ge)),
+            Replanner::new(plan, PLAN_REL_TOL),
+            1,
+        );
+        let mut fixed = FixedPolicy(64);
+        let mut remaining = 2000usize;
+        let mut t = 0.0;
+        let mut block = 1usize;
+        while remaining > 0 {
+            let a = control.next_n_c(block, remaining, t);
+            let b = fixed.next_n_c(block, remaining, t);
+            assert_eq!(a, b, "block {block} diverged");
+            // noisy ARQ observations must not move the pinned belief
+            control.observe(&PacketObs {
+                nominal: a as f64 + 10.0,
+                occupancy: (a as f64 + 10.0)
+                    * (1.0 + (block % 3) as f64),
+                attempts: 1 + (block % 3) as u32,
+            });
+            remaining -= a;
+            t += (a as f64 + 10.0) * 1.25;
+            block += 1;
+        }
+        assert_eq!(control.planned_n_c(), 64);
     }
 
     #[test]

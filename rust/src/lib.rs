@@ -20,8 +20,11 @@
 //!   dispatching to pluggable traits: `TrafficSource` (who sends which
 //!   samples: single device, k-device round-robin, heterogeneous
 //!   devices picked by a `DeviceScheduler` — round-robin / greedy /
-//!   proportional-fair — online arrivals), `BlockPolicy` (fixed or
-//!   adaptive `n_c`), `OverlapMode` (pipelined vs sequential), over the
+//!   proportional-fair — online arrivals), `BlockPolicy` (fixed,
+//!   adaptive, or the closed-loop channel-adaptive `ControlPolicy` —
+//!   an online channel estimator, [`channel::estimator`], feeding the
+//!   Corollary-1 remaining-budget re-planner, [`bound::replan`]),
+//!   `OverlapMode` (pipelined vs sequential), over the
 //!   [`channel`] (including the per-device multi-lane uplink,
 //!   [`channel::multilane`]) and [`coordinator::executor`] seams. The hot loop stages blocks in one
 //!   reused `BlockFrame` — no per-block allocation — and
@@ -47,9 +50,11 @@
 //!   parallel fan-out, and the `edgepipe scenario` subcommand exposes
 //!   it all.
 //! * **Analysis** ([`bound`]) — the paper's Corollary-1 bound, the
-//!   block-size optimizer that picks `ñ_c`, and the channel-aware
+//!   block-size optimizer that picks `ñ_c`, the channel-aware
 //!   Monte-Carlo validation of the recommendation
-//!   ([`bound::validate`], `edgepipe optimize --mc`).
+//!   ([`bound::validate`], `edgepipe optimize --mc`), and the
+//!   fixed-vs-warmup-vs-control comparison sweep across fading
+//!   severities ([`sweep::control`], `edgepipe control`).
 //! * **Backends** — a native f64 SGD engine ([`sgd`]) and a PJRT-backed
 //!   engine ([`runtime`], [`edge`]) executing the AOT JAX/Pallas
 //!   artifacts built by `make artifacts` (gated behind the `pjrt` cargo

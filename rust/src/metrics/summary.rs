@@ -48,6 +48,8 @@ pub fn run_to_json(result: &RunResult, loss_star: Option<f64>) -> Value {
         ("blocks_sent", num(result.blocks_sent as f64)),
         ("blocks_delivered", num(result.blocks_delivered as f64)),
         ("samples_delivered", num(result.samples_delivered as f64)),
+        ("blocks_missed", num(result.blocks_missed as f64)),
+        ("deadline_outage", num(result.deadline_outage() as u8 as f64)),
         ("retransmissions", num(result.retransmissions as f64)),
         ("case", s(&format!("{:?}", result.case))),
         ("backend", s(result.backend)),
@@ -75,6 +77,7 @@ mod tests {
             blocks_sent: 5,
             blocks_delivered: 4,
             samples_delivered: 400,
+            blocks_missed: 1,
             retransmissions: 2,
             case: TimelineCase::Partial,
             snapshots: vec![],

@@ -1,0 +1,233 @@
+//! The closed-loop comparison sweep: fixed `ñ_c` vs open-loop warmup vs
+//! channel-adaptive control, across fading severities — the fig-style
+//! producer behind `edgepipe control`.
+//!
+//! For every channel in the severity grid, the base `n_c` is resolved to
+//! the channel-aware Corollary-1 recommendation for THAT channel (the
+//! same plan the control policy starts from, so every policy competes
+//! from the same static optimum: `fixed` runs it unchanged, `warmup`
+//! ramps up to it, `control` re-plans it online). Each (channel, policy)
+//! cell reports the Monte-Carlo mean/std of the final loss, the
+//! deadline-outage rate (fraction of seeds whose schedule missed `T` —
+//! a late block or an undelivered dataset) and the mean delivered
+//! sample count. All jobs fan out flat over the worker pool with
+//! recycled [`RunWorkspace`]s, like every other sweep.
+
+use crate::bound::replan::ControlPlan;
+use crate::coordinator::des::DesConfig;
+use crate::coordinator::scheduler::RunWorkspace;
+use crate::data::Dataset;
+use crate::sweep::runner::McStats;
+use crate::sweep::scenario::{
+    ChannelSpec, PolicySpec, ScenarioRunner, ScenarioSpec,
+};
+use crate::util::pool::{default_threads, parallel_map_with};
+use crate::util::stats::Welford;
+
+/// One (channel, policy) cell of the comparison.
+#[derive(Clone, Debug)]
+pub struct ControlCompareRow {
+    /// Channel-axis label (the fading severity).
+    pub channel: String,
+    /// Policy-axis label.
+    pub policy: String,
+    /// The channel-aware recommended `ñ_c` the cell ran with.
+    pub n_c: usize,
+    /// Final-loss statistics over the seeds.
+    pub loss: McStats,
+    /// Fraction of seeds whose schedule missed the deadline.
+    pub outage_rate: f64,
+    /// Mean samples delivered by the deadline.
+    pub mean_delivered: f64,
+}
+
+/// The default severity grid: the ideal link, then three Gilbert–Elliott
+/// channels of increasing fade frequency/depth (the last one is the
+/// `adaptive_fading` preset's channel).
+pub fn fading_severities() -> Vec<ChannelSpec> {
+    vec![
+        ChannelSpec::Ideal,
+        // shallow, quick fades: ~1 packet in 12, 0.7x rate
+        ChannelSpec::Fading {
+            p_gb: 0.05,
+            p_bg: 0.5,
+            p_good: 0.0,
+            p_bad: 0.3,
+            rate_good: 1.0,
+            rate_bad: 0.7,
+        },
+        // the registry's bursty link
+        ChannelSpec::Fading {
+            p_gb: 0.05,
+            p_bg: 0.25,
+            p_good: 0.0,
+            p_bad: 0.6,
+            rate_good: 1.0,
+            rate_bad: 0.5,
+        },
+        // severe slow-mixing fades (the adaptive_fading preset)
+        ChannelSpec::Fading {
+            p_gb: 0.1,
+            p_bg: 0.15,
+            p_good: 0.0,
+            p_bad: 0.5,
+            rate_good: 1.0,
+            rate_bad: 0.3,
+        },
+    ]
+}
+
+/// Cross `channels × policies × seeds` in one flat parallel fan-out.
+/// Rows come back in (channel-major, policy-minor) order.
+pub fn control_comparison(
+    ds: &Dataset,
+    base: &DesConfig,
+    channels: &[ChannelSpec],
+    policies: &[PolicySpec],
+    seeds: usize,
+    threads: usize,
+) -> Vec<ControlCompareRow> {
+    assert!(seeds >= 1, "need at least one seed");
+    let threads = if threads == 0 { default_threads() } else { threads };
+
+    // one runner per (channel, policy); the per-channel recommended n_c
+    // is the channel-aware control plan's n_c0 — computed once per
+    // channel here, and (deterministically) recomputed to the identical
+    // value inside each control-policy runner's own plan cache, so
+    // every policy in a row competes from the same static optimum
+    let mut runners: Vec<(usize, ScenarioRunner)> = Vec::new();
+    for channel in channels {
+        let row_spec = ScenarioSpec {
+            channel: channel.clone(),
+            ..ScenarioSpec::paper()
+        };
+        let n_rec =
+            ControlPlan::compute(ds, base, row_spec.expected_slowdown()).n_c0;
+        for policy in policies {
+            let spec = ScenarioSpec {
+                policy: policy.clone(),
+                ..row_spec.clone()
+            };
+            runners.push((n_rec, ScenarioRunner::new(spec, ds)));
+        }
+    }
+
+    let jobs: Vec<(usize, u64)> = (0..runners.len())
+        .flat_map(|i| (0..seeds as u64).map(move |s| (i, s)))
+        .collect();
+    let outcomes = parallel_map_with(
+        &jobs,
+        threads,
+        RunWorkspace::new,
+        |ws, &(i, s)| {
+            let (n_rec, runner) = &runners[i];
+            let cfg = DesConfig {
+                n_c: *n_rec,
+                seed: base.seed.wrapping_add(s),
+                loss_every: 0,
+                record_blocks: false,
+                collect_snapshots: false,
+                event_capacity: 0,
+                ..base.clone()
+            };
+            let stats =
+                runner.run_with(ws, &cfg).expect("control sweep run failed");
+            (
+                stats.final_loss,
+                stats.deadline_outage(),
+                stats.samples_delivered,
+            )
+        },
+    );
+
+    runners
+        .iter()
+        .enumerate()
+        .map(|(i, (n_rec, runner))| {
+            let cell = &outcomes[i * seeds..(i + 1) * seeds];
+            let mut w = Welford::new();
+            let mut outages = 0usize;
+            let mut delivered = 0usize;
+            for (loss, outage, samples) in cell {
+                w.push(*loss);
+                outages += usize::from(*outage);
+                delivered += *samples;
+            }
+            ControlCompareRow {
+                channel: runner.spec().channel.label(),
+                policy: runner.spec().policy.label(),
+                n_c: *n_rec,
+                loss: McStats {
+                    mean: w.mean(),
+                    std: w.std(),
+                    sem: w.sem(),
+                    n: cell.len(),
+                },
+                outage_rate: outages as f64 / cell.len() as f64,
+                mean_delivered: delivered as f64 / cell.len() as f64,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{synth_calhousing, SynthSpec};
+    use crate::sweep::scenario::EstimatorSpec;
+
+    #[test]
+    fn comparison_covers_the_grid_and_is_thread_stable() {
+        let ds = synth_calhousing(&SynthSpec { n: 300, ..Default::default() });
+        let base = DesConfig {
+            record_blocks: false,
+            ..DesConfig::paper(1, 8.0, 450.0, 41)
+        };
+        let channels = vec![
+            ChannelSpec::Ideal,
+            ChannelSpec::Fading {
+                p_gb: 0.1,
+                p_bg: 0.15,
+                p_good: 0.0,
+                p_bad: 0.5,
+                rate_good: 1.0,
+                rate_bad: 0.3,
+            },
+        ];
+        let policies = vec![
+            PolicySpec::Fixed { n_c: 0 },
+            PolicySpec::Control {
+                est: EstimatorSpec::Ge,
+                replan_every: 1,
+            },
+        ];
+        let a = control_comparison(&ds, &base, &channels, &policies, 3, 1);
+        let b = control_comparison(&ds, &base, &channels, &policies, 3, 4);
+        assert_eq!(a.len(), 4, "2 channels x 2 policies");
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.loss.mean, rb.loss.mean, "thread count changed results");
+            assert_eq!(ra.outage_rate, rb.outage_rate);
+            assert!(ra.loss.mean.is_finite());
+            assert!((0.0..=1.0).contains(&ra.outage_rate));
+            assert!(ra.n_c >= 1 && ra.n_c <= ds.n);
+        }
+        // on the ideal channel control == fixed (static no-op), so the
+        // two ideal rows must agree exactly, seed for seed
+        assert_eq!(a[0].loss.mean, a[1].loss.mean);
+        assert_eq!(a[0].mean_delivered, a[1].mean_delivered);
+        // both severities ran the same policy list in order
+        assert_eq!(a[0].policy, "fixed");
+        assert_eq!(a[1].policy, "control");
+    }
+
+    #[test]
+    fn default_severity_grid_is_ordered_by_slowdown() {
+        let grid = fading_severities();
+        assert!(grid.len() >= 3);
+        let slowdowns: Vec<f64> =
+            grid.iter().map(|c| c.expected_slowdown()).collect();
+        for w in slowdowns.windows(2) {
+            assert!(w[1] > w[0], "severities must worsen monotonically");
+        }
+    }
+}

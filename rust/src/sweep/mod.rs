@@ -4,16 +4,21 @@
 //!   specs with a named registry, all runnable through one scheduler
 //! * [`runner`] — parallel seed×parameter sweeps: the paper scenario
 //!   fast path plus scenario-generic estimators and grid crossings
+//! * [`control`] — the closed-loop comparison sweep: fixed `ñ_c` vs
+//!   open-loop warmup vs channel-adaptive control across fading
+//!   severities, with deadline-outage rates
 //! * [`fig3`]   — paper Fig. 3: Corollary-1 bound vs `n_c` per overhead
 //! * [`fig4`]   — paper Fig. 4: average training-loss curves vs time for
 //!   selected block sizes, the bound optimum ñ_c and the experimental
 //!   optimum n_c*
 
+pub mod control;
 pub mod fig3;
 pub mod fig4;
 pub mod runner;
 pub mod scenario;
 
+pub use control::{control_comparison, fading_severities, ControlCompareRow};
 pub use fig3::{fig3_data, Fig3Output};
 pub use fig4::{fig4_data, Fig4Config, Fig4Output};
 pub use runner::{
@@ -21,6 +26,6 @@ pub use runner::{
     McStats,
 };
 pub use scenario::{
-    from_name, registry, ChannelSpec, HeteroSpec, PolicySpec,
-    ScenarioRunner, ScenarioSpec, SchedulerSpec, TrafficSpec,
+    from_name, registry, ChannelSpec, EstimatorSpec, HeteroSpec,
+    PolicySpec, ScenarioRunner, ScenarioSpec, SchedulerSpec, TrafficSpec,
 };

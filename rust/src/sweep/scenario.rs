@@ -9,7 +9,9 @@
 //!   `fading:<p_gb>:<p_bg>:<p_bad>[:<p_good>[:<r_bad>[:<r_good>]]]`
 //!   (Gilbert–Elliott good/bad Markov states, clocked per packet)
 //! * [`PolicySpec`] — `fixed[:n_c]`, `warmup:<start>:<growth>[:<cap>]`,
-//!   `deadline:<frac>`, `sequential[:n_c]`, `allfirst`
+//!   `deadline:<frac>`, `sequential[:n_c]`, `allfirst`, or the
+//!   closed-loop `control[:est=<ge|ema>][:replan=<k>]` (online channel
+//!   estimation + Corollary-1 re-planning at block boundaries)
 //! * [`TrafficSpec`] — `<k>` round-robin devices on ONE shared channel,
 //!   `online:<rate>` streaming arrivals, or the heterogeneous multi-lane
 //!   uplink `devices:<k>[:sched=<rr|greedy|pfair>][:skew=<f>]`
@@ -26,8 +28,15 @@
 //! [`DesConfig`] — building a fresh channel/source/policy/executor per
 //! run so seeds can fan out across threads.
 
+use std::sync::Mutex;
+
 use anyhow::{bail, Context, Result};
 
+use crate::bound::replan::{ControlPlan, Replanner, PLAN_REL_TOL};
+use crate::channel::estimator::{
+    ControlEstimator, EmaRateEstimator, GeBeliefEstimator, GeParams,
+    PacketObs,
+};
 use crate::channel::{
     Channel, Delivery, ErasureChannel, GilbertElliottChannel, IdealChannel,
     LinkState, MultiLaneChannel, RateLimitedChannel,
@@ -35,10 +44,10 @@ use crate::channel::{
 use crate::coordinator::des::DesConfig;
 use crate::coordinator::run::RunResult;
 use crate::coordinator::scheduler::{
-    run_schedule_with, BlockPolicy, DeviceScheduler, FixedPolicy,
-    GreedyScheduler, LaneView, OnlineArrivalSource, OverlapMode,
-    PropFairScheduler, RoundRobinScheduler, RoundRobinSource, RunStats,
-    RunWorkspace, ScheduledSource, SingleDeviceSource,
+    run_schedule_with, BlockPolicy, ControlPolicy, DeviceScheduler,
+    FixedPolicy, GreedyScheduler, LaneView, OnlineArrivalSource,
+    OverlapMode, PropFairScheduler, RoundRobinScheduler, RoundRobinSource,
+    RunStats, RunWorkspace, ScheduledSource, SingleDeviceSource,
 };
 use crate::data::classify::binarize_labels;
 use crate::data::shard::{shard_label_skew, shard_round_robin};
@@ -46,6 +55,9 @@ use crate::data::Dataset;
 use crate::extensions::adaptive::{DeadlineAwareSchedule, WarmupSchedule};
 use crate::model::{LogisticModel, RidgeModel, Workload};
 use crate::util::rng::Pcg32;
+
+/// EMA step of the unknown-channel (`est=ema`) slowdown tracker.
+const CONTROL_EMA_WEIGHT: f64 = 0.2;
 
 /// Which channel carries the blocks.
 #[derive(Clone, Debug, PartialEq)]
@@ -207,6 +219,41 @@ impl ChannelSpec {
         Box::new(self.make())
     }
 
+    /// The Gilbert–Elliott parameters the `est=ge` belief filter
+    /// conditions on: exact for `fading`; the static channels are the
+    /// degenerate pinned-good chain (`p_gb = 0`), under which the
+    /// belief — and therefore the slowdown estimate — never moves, the
+    /// invariant behind the ControlPolicy ≡ FixedPolicy parity.
+    pub fn ge_params(&self) -> GeParams {
+        match *self {
+            ChannelSpec::Ideal => {
+                let link = LinkState::new(1.0, 0.0);
+                GeParams::new(0.0, 1.0, link, link)
+            }
+            ChannelSpec::Erasure { p } => {
+                let link = LinkState::new(1.0, p);
+                GeParams::new(0.0, 1.0, link, link)
+            }
+            ChannelSpec::Rate { rate, p } => {
+                let link = LinkState::new(rate, p);
+                GeParams::new(0.0, 1.0, link, link)
+            }
+            ChannelSpec::Fading {
+                p_gb,
+                p_bg,
+                p_good,
+                p_bad,
+                rate_good,
+                rate_bad,
+            } => GeParams::new(
+                p_gb,
+                p_bg,
+                LinkState::new(rate_good, p_good),
+                LinkState::new(rate_bad, p_bad),
+            ),
+        }
+    }
+
     pub fn label(&self) -> String {
         match *self {
             ChannelSpec::Ideal => "ideal".to_string(),
@@ -272,6 +319,42 @@ impl Channel for ScenarioChannel {
     }
 }
 
+/// Which channel estimator a closed-loop `control` policy runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EstimatorSpec {
+    /// Bayesian Gilbert–Elliott belief filter conditioned on the
+    /// scenario's channel parameters (exact for `fading`, degenerate
+    /// pinned-good for the static channels). On heterogeneous
+    /// multi-lane traffic — whose aggregate has no single
+    /// Gilbert–Elliott model — the runner falls back to [`Ema`](Self::Ema).
+    Ge,
+    /// Model-free exponentially weighted moving average of the measured
+    /// per-packet slowdown (for unknown channels; also the right choice
+    /// on the heterogeneous multi-lane uplink, whose aggregate has no
+    /// single Gilbert–Elliott model).
+    Ema,
+}
+
+impl EstimatorSpec {
+    /// Parse `ge` | `ema`.
+    pub fn parse(s: &str) -> Result<EstimatorSpec> {
+        match s {
+            "ge" => Ok(EstimatorSpec::Ge),
+            "ema" => Ok(EstimatorSpec::Ema),
+            other => bail!(
+                "unknown channel estimator '{other}' (expected ge | ema)"
+            ),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            EstimatorSpec::Ge => "ge",
+            EstimatorSpec::Ema => "ema",
+        }
+    }
+}
+
 /// How block sizes are chosen (and whether compute overlaps the link).
 #[derive(Clone, Debug, PartialEq)]
 pub enum PolicySpec {
@@ -286,13 +369,41 @@ pub enum PolicySpec {
     Sequential { n_c: usize },
     /// Transmit-all-first baseline: one block of every sample.
     AllFirst,
+    /// Closed-loop channel-adaptive control: an online channel
+    /// estimator + the Corollary-1 remaining-budget re-optimizer,
+    /// re-planned every `replan_every` blocks (`bound::replan`,
+    /// `channel::estimator`, `coordinator::scheduler::ControlPolicy`).
+    Control { est: EstimatorSpec, replan_every: usize },
 }
 
 impl PolicySpec {
     /// Parse `fixed[:n_c]` | `warmup:<start>:<growth>[:<cap>]` |
-    /// `deadline:<frac>` | `sequential[:n_c]` | `allfirst`.
+    /// `deadline:<frac>` | `sequential[:n_c]` | `allfirst` |
+    /// `control[:est=<ge|ema>][:replan=<k>]`.
     pub fn parse(s: &str) -> Result<PolicySpec> {
         let parts: Vec<&str> = s.split(':').collect();
+        if parts[0] == "control" {
+            let mut est = EstimatorSpec::Ge;
+            let mut replan_every = 1usize;
+            for part in &parts[1..] {
+                if let Some(v) = part.strip_prefix("est=") {
+                    est = EstimatorSpec::parse(v)?;
+                } else if let Some(v) = part.strip_prefix("replan=") {
+                    replan_every = v.parse().with_context(|| {
+                        format!("bad replan interval '{v}' in '{s}'")
+                    })?;
+                    if replan_every == 0 {
+                        bail!("control replan interval must be >= 1");
+                    }
+                } else {
+                    bail!(
+                        "unknown control option '{part}' in '{s}' \
+                         (expected est=<ge|ema>, replan=<k>)"
+                    );
+                }
+            }
+            return Ok(PolicySpec::Control { est, replan_every });
+        }
         let usize_at = |i: usize| -> Result<usize> {
             parts[i]
                 .parse::<usize>()
@@ -337,7 +448,8 @@ impl PolicySpec {
             other => bail!(
                 "unknown policy '{other}' (expected fixed[:n_c] | \
                  warmup:<start>:<growth>[:<cap>] | deadline:<frac> | \
-                 sequential[:n_c] | allfirst)"
+                 sequential[:n_c] | allfirst | \
+                 control[:est=<ge|ema>][:replan=<k>])"
             ),
         }
     }
@@ -352,6 +464,11 @@ impl PolicySpec {
 
     /// Instantiate the block policy on the stack for a dataset of `n`
     /// samples (no `Box` — the sweep hot path builds one per run).
+    ///
+    /// `Control` cannot be built here: its plan needs the dataset and
+    /// the scenario's channel prior, which only `ScenarioRunner` has —
+    /// it builds the `ControlPolicy` itself (`run_with`); calling
+    /// `make`/`build` on a `Control` spec panics.
     pub fn make(&self, cfg: &DesConfig, n: usize) -> ScenarioPolicy {
         let inherit = |v: usize| {
             let v = if v == 0 { cfg.n_c } else { v };
@@ -378,6 +495,10 @@ impl PolicySpec {
             PolicySpec::AllFirst => {
                 ScenarioPolicy::Fixed(FixedPolicy(n.max(1)))
             }
+            PolicySpec::Control { .. } => panic!(
+                "ControlPolicy needs dataset context; run control \
+                 scenarios through ScenarioRunner"
+            ),
         }
     }
 
@@ -400,6 +521,17 @@ impl PolicySpec {
             PolicySpec::Sequential { n_c: 0 } => "sequential".to_string(),
             PolicySpec::Sequential { n_c } => format!("sequential:{n_c}"),
             PolicySpec::AllFirst => "allfirst".to_string(),
+            PolicySpec::Control { est, replan_every } => {
+                // shortest suffix-defaulted form that round-trips
+                let mut label = "control".to_string();
+                if est != EstimatorSpec::Ge {
+                    label.push_str(&format!(":est={}", est.label()));
+                }
+                if replan_every != 1 {
+                    label.push_str(&format!(":replan={replan_every}"));
+                }
+                label
+            }
         }
     }
 }
@@ -410,6 +542,7 @@ pub enum ScenarioPolicy {
     Fixed(FixedPolicy),
     Warmup(WarmupSchedule),
     Deadline(DeadlineAwareSchedule),
+    Control(ControlPolicy),
 }
 
 impl BlockPolicy for ScenarioPolicy {
@@ -421,6 +554,17 @@ impl BlockPolicy for ScenarioPolicy {
             ScenarioPolicy::Deadline(p) => {
                 p.next_n_c(block, remaining, t_now)
             }
+            ScenarioPolicy::Control(p) => {
+                p.next_n_c(block, remaining, t_now)
+            }
+        }
+    }
+
+    fn observe(&mut self, obs: &PacketObs) {
+        // only the closed-loop policy consumes observations; the
+        // open-loop schedules keep the trait's no-op
+        if let ScenarioPolicy::Control(p) = self {
+            p.observe(obs);
         }
     }
 
@@ -429,6 +573,7 @@ impl BlockPolicy for ScenarioPolicy {
             ScenarioPolicy::Fixed(p) => p.name(),
             ScenarioPolicy::Warmup(p) => p.name(),
             ScenarioPolicy::Deadline(p) => p.name(),
+            ScenarioPolicy::Control(p) => p.name(),
         }
     }
 }
@@ -883,6 +1028,29 @@ pub fn registry() -> Vec<(&'static str, ScenarioSpec)> {
                     rate_bad: 0.5,
                 },
                 workload: Workload::Logistic,
+                ..base.clone()
+            },
+        ),
+        (
+            // severe, slow-mixing fades (~6-7 packets each, 40% of the
+            // time, 50% loss at 0.3x rate while faded): the regime
+            // where a fixed a-priori n_c wastes budget and the
+            // closed-loop controller (GE belief filter + Corollary-1
+            // re-planning at every block boundary) earns its keep
+            "adaptive_fading",
+            ScenarioSpec {
+                channel: ChannelSpec::Fading {
+                    p_gb: 0.1,
+                    p_bg: 0.15,
+                    p_good: 0.0,
+                    p_bad: 0.5,
+                    rate_good: 1.0,
+                    rate_bad: 0.3,
+                },
+                policy: PolicySpec::Control {
+                    est: EstimatorSpec::Ge,
+                    replan_every: 1,
+                },
                 ..base
             },
         ),
@@ -914,6 +1082,36 @@ pub struct ScenarioRunner<'a> {
     /// Per-lane expected slowdowns, the greedy/proportional-fair
     /// schedulers' ranking signal (heterogeneous traffic only).
     lane_slowdowns: Vec<f64>,
+    /// Memoized control plan (Control policy only): the plan is a pure
+    /// function of (dataset, λ, α, T, n_o, τ_p, workload, slowdown
+    /// prior) — computed once, shared across all Monte-Carlo seeds and
+    /// worker threads.
+    control_cache: Mutex<Option<(PlanKey, ControlPlan)>>,
+}
+
+/// The run-config fields a [`ControlPlan`] depends on (f64s compared by
+/// exact bit pattern: same inputs → same cached plan).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct PlanKey {
+    lambda: u64,
+    alpha: u64,
+    t_budget: u64,
+    n_o: u64,
+    tau_p: u64,
+    workload: Workload,
+}
+
+impl PlanKey {
+    fn of(cfg: &DesConfig) -> PlanKey {
+        PlanKey {
+            lambda: cfg.lambda.to_bits(),
+            alpha: cfg.alpha.to_bits(),
+            t_budget: cfg.t_budget.to_bits(),
+            n_o: cfg.n_o.to_bits(),
+            tau_p: cfg.tau_p.to_bits(),
+            workload: cfg.workload,
+        }
+    }
 }
 
 impl<'a> ScenarioRunner<'a> {
@@ -954,11 +1152,73 @@ impl<'a> ScenarioRunner<'a> {
             shards,
             lane_channels,
             lane_slowdowns,
+            control_cache: Mutex::new(None),
         }
     }
 
     pub fn spec(&self) -> &ScenarioSpec {
         &self.spec
+    }
+
+    /// The control plan for `cfg` (Control policy only): computed on
+    /// first use with the scenario's a-priori expected slowdown, then
+    /// cached — every Monte-Carlo seed reuses the identical plan, so
+    /// sweeps pay the constant estimation once.
+    pub fn control_plan(&self, cfg: &DesConfig) -> ControlPlan {
+        let key = PlanKey::of(cfg);
+        let mut guard = self
+            .control_cache
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        if let Some((k, plan)) = guard.as_ref() {
+            if *k == key {
+                return plan.clone();
+            }
+        }
+        let plan = ControlPlan::compute(
+            self.data(),
+            cfg,
+            self.spec.expected_slowdown(),
+        );
+        *guard = Some((key, plan.clone()));
+        plan
+    }
+
+    /// Build the policy for one run: open-loop policies come straight
+    /// from the spec; the closed-loop controller glues the channel
+    /// estimator (conditioned on the channel axis, or EMA-primed at the
+    /// scenario slowdown prior) to the remaining-budget re-planner.
+    ///
+    /// The GE belief filter models ONE link; a heterogeneous multi-lane
+    /// uplink's aggregate has no single Gilbert–Elliott chain, so
+    /// `est=ge` on hetero traffic falls back to the model-free EMA
+    /// tracker (primed at the lane-aggregate prior) instead of silently
+    /// conditioning on the channel-axis chain — the two estimator specs
+    /// are bit-identical there (asserted in
+    /// `rust/tests/scenario_parity.rs`).
+    fn make_policy(&self, cfg: &DesConfig, n: usize) -> ScenarioPolicy {
+        match self.spec.policy {
+            PolicySpec::Control { est, replan_every } => {
+                let plan = self.control_plan(cfg);
+                let hetero =
+                    matches!(self.spec.traffic, TrafficSpec::Hetero(_));
+                let estimator = match est {
+                    EstimatorSpec::Ge if !hetero => ControlEstimator::Ge(
+                        GeBeliefEstimator::new(self.spec.channel.ge_params()),
+                    ),
+                    _ => ControlEstimator::Ema(EmaRateEstimator::new(
+                        plan.slowdown0,
+                        CONTROL_EMA_WEIGHT,
+                    )),
+                };
+                ScenarioPolicy::Control(ControlPolicy::new(
+                    estimator,
+                    Replanner::new(plan, PLAN_REL_TOL),
+                    replan_every,
+                ))
+            }
+            _ => self.spec.policy.make(cfg, n),
+        }
     }
 
     /// The dataset the scenario actually trains on (the workload's
@@ -1018,7 +1278,7 @@ impl<'a> ScenarioRunner<'a> {
                 &mut single_chan
             }
         };
-        let mut policy = self.spec.policy.make(&cfg, ds.n);
+        let mut policy = self.make_policy(&cfg, ds.n);
         let mode = self.spec.policy.overlap();
         // both executors live on the stack; only the workload's one is
         // initialized and borrowed as the dyn seam
@@ -1182,6 +1442,18 @@ mod tests {
             PolicySpec::Sequential { n_c: 0 }
         );
         assert_eq!(
+            PolicySpec::parse("control").unwrap(),
+            PolicySpec::Control { est: EstimatorSpec::Ge, replan_every: 1 }
+        );
+        assert_eq!(
+            PolicySpec::parse("control:est=ema").unwrap(),
+            PolicySpec::Control { est: EstimatorSpec::Ema, replan_every: 1 }
+        );
+        assert_eq!(
+            PolicySpec::parse("control:replan=4:est=ge").unwrap(),
+            PolicySpec::Control { est: EstimatorSpec::Ge, replan_every: 4 }
+        );
+        assert_eq!(
             TrafficSpec::parse("4").unwrap(),
             TrafficSpec::Devices(4)
         );
@@ -1314,6 +1586,9 @@ mod tests {
         assert!(PolicySpec::parse("warmup:0:2.0").is_err());
         assert!(PolicySpec::parse("deadline:0").is_err());
         assert!(PolicySpec::parse("bogus").is_err());
+        assert!(PolicySpec::parse("control:est=kalman").is_err());
+        assert!(PolicySpec::parse("control:replan=0").is_err());
+        assert!(PolicySpec::parse("control:turbo=1").is_err());
         assert!(TrafficSpec::parse("0").is_err());
         assert!(TrafficSpec::parse("online:-1").is_err());
         assert!(Workload::parse("svm").is_err());
@@ -1386,5 +1661,58 @@ mod tests {
             assert_eq!(found, spec);
         }
         assert!(from_name("no-such-scenario").is_none());
+    }
+
+    #[test]
+    fn control_labels_round_trip() {
+        for s in ["control", "control:est=ema", "control:replan=8",
+            "control:est=ema:replan=3"]
+        {
+            let spec = PolicySpec::parse(s).unwrap();
+            assert_eq!(spec.label(), s, "canonical form of '{s}'");
+            assert_eq!(PolicySpec::parse(&spec.label()).unwrap(), spec);
+        }
+        // option order is free on input; the label is canonical
+        let spec = PolicySpec::parse("control:replan=3:est=ema").unwrap();
+        assert_eq!(spec.label(), "control:est=ema:replan=3");
+        // the preset is registered and closed-loop
+        let preset = from_name("adaptive_fading").expect("preset registered");
+        assert!(matches!(preset.policy, PolicySpec::Control { .. }));
+        assert_eq!(preset.policy.overlap(), OverlapMode::Pipelined);
+    }
+
+    #[test]
+    fn ge_params_match_the_channel_closed_forms() {
+        // static channels: pinned-good chain whose good state carries
+        // the channel's own (rate, p) — the estimator's initial
+        // slowdown equals the channel's expected slowdown EXACTLY
+        for spec in [
+            ChannelSpec::Ideal,
+            ChannelSpec::Erasure { p: 0.25 },
+            ChannelSpec::Rate { rate: 0.5, p: 0.1 },
+        ] {
+            let ge = spec.ge_params();
+            assert_eq!(ge.p_gb, 0.0, "{}", spec.label());
+            assert_eq!(
+                ge.good.expected_slowdown(),
+                spec.expected_slowdown(),
+                "{}",
+                spec.label()
+            );
+        }
+        // fading: the filter conditions on the true chain
+        let fading = ChannelSpec::Fading {
+            p_gb: 0.05,
+            p_bg: 0.25,
+            p_good: 0.0,
+            p_bad: 0.6,
+            rate_good: 1.0,
+            rate_bad: 0.5,
+        };
+        let ge = fading.ge_params();
+        assert_eq!(ge.p_gb, 0.05);
+        assert_eq!(ge.p_bg, 0.25);
+        assert_eq!(ge.bad.rate, 0.5);
+        assert_eq!(ge.bad.p_loss, 0.6);
     }
 }

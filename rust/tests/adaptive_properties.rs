@@ -1,0 +1,132 @@
+//! Seeded property tests for the open-loop block-size schedules in
+//! `extensions::adaptive` — the policies the closed-loop controller is
+//! compared against:
+//!
+//! * warmup is monotone non-decreasing and caps at its configured cap
+//!   (the fixed-`ñ_c` optimum in the standard wiring);
+//! * no schedule ever requests more than the remaining dataset, and a
+//!   drained schedule grants exactly `n` samples in total;
+//! * deadline-aware sizing shrinks monotonically as the deadline nears
+//!   and stays legal (≥ 1) past the budget.
+
+use edgepipe::coordinator::scheduler::BlockPolicy;
+use edgepipe::extensions::adaptive::{DeadlineAwareSchedule, WarmupSchedule};
+use edgepipe::testkit::forall;
+
+#[test]
+fn warmup_is_monotone_non_decreasing_and_caps() {
+    forall("warmup monotone + cap", 80, |g| {
+        let start = g.usize_in(1..=128);
+        let growth = 1.0 + g.f64_in(0.0, 4.0);
+        let cap = start + g.usize_in(0..=4000);
+        let mut s = WarmupSchedule::new(start, growth, cap);
+        // plenty of data: the remaining clamp never binds here
+        let plenty = usize::MAX / 2;
+        let mut prev = 0usize;
+        let mut reached_cap = false;
+        for b in 1..=64usize {
+            let nc = s.next_n_c(b, plenty, 0.0);
+            assert!(nc >= 1 && nc <= cap, "block {b}: {nc} vs cap {cap}");
+            assert!(
+                nc >= prev,
+                "block {b}: warmup shrank {prev} -> {nc} (start={start}, \
+                 growth={growth}, cap={cap})"
+            );
+            if reached_cap {
+                assert_eq!(nc, cap, "block {b}: left the cap after reaching it");
+            }
+            reached_cap |= nc == cap;
+            prev = nc;
+        }
+        // real growth must actually reach the cap within 64 blocks
+        // (1.2^63 > 4128 >= cap - start)
+        if growth >= 1.2 {
+            assert!(reached_cap, "growth {growth} never reached cap {cap}");
+        }
+    });
+}
+
+#[test]
+fn warmup_never_over_requests_and_drains_exactly_n() {
+    forall("warmup drains n", 80, |g| {
+        let n = g.usize_in(1..=5000);
+        let start = g.usize_in(1..=64);
+        let growth = 1.0 + g.f64_in(0.0, 3.0);
+        let cap = start + g.usize_in(0..=1000);
+        let mut s = WarmupSchedule::new(start, growth, cap);
+        let mut remaining = n;
+        let mut total = 0usize;
+        let mut block = 1usize;
+        while remaining > 0 {
+            let nc = s.next_n_c(block, remaining, block as f64);
+            assert!(nc >= 1, "block {block}: empty grant");
+            assert!(
+                nc <= remaining,
+                "block {block}: requested {nc} of {remaining} remaining"
+            );
+            assert!(nc <= cap, "block {block}: {nc} above cap {cap}");
+            total += nc;
+            remaining -= nc;
+            block += 1;
+            assert!(block <= n + 2, "schedule failed to make progress");
+        }
+        assert_eq!(total, n, "total scheduled samples must equal n");
+    });
+}
+
+#[test]
+fn deadline_aware_shrinks_toward_the_deadline_and_stays_legal() {
+    forall("deadline-aware monotone", 80, |g| {
+        let t_budget = g.f64_in(100.0, 5000.0);
+        let n_o = g.f64_in(0.0, 50.0);
+        let frac = g.f64_in(0.01, 1.0);
+        let remaining = g.usize_in(1..=100_000);
+        let mut s = DeadlineAwareSchedule {
+            t_budget,
+            n_o,
+            aggressiveness: frac,
+        };
+        let mut prev = usize::MAX;
+        for i in 0..=10usize {
+            let t = t_budget * i as f64 / 10.0;
+            let nc = s.next_n_c(i + 1, remaining, t);
+            assert!(nc >= 1 && nc <= remaining, "t={t}: {nc}");
+            assert!(
+                nc <= prev,
+                "t={t}: grew {prev} -> {nc} approaching the deadline"
+            );
+            prev = nc;
+        }
+        // past the budget it still emits a minimal legal block
+        assert_eq!(s.next_n_c(99, remaining, t_budget + 10.0), 1);
+    });
+}
+
+#[test]
+fn deadline_aware_drains_exactly_n() {
+    forall("deadline-aware drains n", 80, |g| {
+        let n = g.usize_in(1..=5000);
+        let t_budget = g.f64_in(10.0, 4000.0);
+        let mut s = DeadlineAwareSchedule {
+            t_budget,
+            n_o: g.f64_in(0.0, 30.0),
+            aggressiveness: g.f64_in(0.05, 1.0),
+        };
+        let mut remaining = n;
+        let mut total = 0usize;
+        let mut t = 0.0f64;
+        let mut block = 1usize;
+        while remaining > 0 {
+            let nc = s.next_n_c(block, remaining, t);
+            assert!(nc >= 1 && nc <= remaining, "block {block}: {nc}");
+            total += nc;
+            remaining -= nc;
+            // advance past the deadline too: the schedule must stay
+            // legal even when the budget has run out
+            t += nc as f64 + 1.0;
+            block += 1;
+            assert!(block <= n + 2, "schedule failed to make progress");
+        }
+        assert_eq!(total, n, "total scheduled samples must equal n");
+    });
+}

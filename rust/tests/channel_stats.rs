@@ -16,8 +16,9 @@
 
 use edgepipe::bound::aggregate_slowdown;
 use edgepipe::channel::{
-    Channel, ErasureChannel, GilbertElliottChannel, IdealChannel, LinkState,
-    MultiLaneChannel,
+    Channel, ErasureChannel, GeBeliefEstimator, GeParams,
+    GilbertElliottChannel, IdealChannel, LinkState, MultiLaneChannel,
+    PacketObs,
 };
 use edgepipe::coordinator::des::DesConfig;
 use edgepipe::coordinator::EventKind;
@@ -189,6 +190,60 @@ fn scenario_event_stream_reproduces_the_aggregate_slowdown() {
     assert!(
         (measured - want).abs() < 0.08 * want,
         "event-stream slowdown {measured} vs aggregate closed form {want}"
+    );
+}
+
+#[test]
+fn ge_belief_estimator_converges_to_the_stationary_distribution() {
+    // drive the belief filter with a long observed trace of the true
+    // channel: the mean posterior P(bad) must converge to the chain's
+    // stationary distribution (tower property: E[posterior] = P(bad)),
+    // and — since the two states have distinct rates, which identify
+    // the state from timing — the posterior must track the realized
+    // state almost perfectly packet by packet.
+    let mut ge = bursty();
+    let params = GeParams::new(
+        0.2,
+        0.5,
+        LinkState::new(1.0, 0.05),
+        LinkState::new(0.5, 0.6),
+    );
+    let mut est = GeBeliefEstimator::new(params);
+    let want = ge.stationary_p_bad(); // 2/7
+    let mut rng = Pcg32::new(512, 4);
+    let trials = 30_000usize;
+    let mut belief_sum = 0.0f64;
+    let mut tracked = 0usize;
+    let mut slowdown_sum = 0.0f64;
+    for _ in 0..trials {
+        let d = ge.transmit(0.0, 1.0, &mut rng);
+        est.observe(&PacketObs {
+            nominal: 1.0,
+            occupancy: d.arrival,
+            attempts: d.attempts,
+        });
+        belief_sum += est.belief();
+        tracked += usize::from((est.belief() > 0.5) == ge.is_bad());
+        slowdown_sum += est.horizon_slowdown(1e9);
+    }
+    let mean_belief = belief_sum / trials as f64;
+    // autocorrelated chain: same tolerance rationale as the
+    // stationary-p(bad) Monte-Carlo test above
+    assert!(
+        (mean_belief - want).abs() < 0.02,
+        "mean posterior {mean_belief} vs stationary {want}"
+    );
+    let track_rate = tracked as f64 / trials as f64;
+    assert!(
+        track_rate > 0.95,
+        "rate-identified states should be tracked: {track_rate}"
+    );
+    // the long-horizon slowdown forecast averages to the closed form
+    let mean_slowdown = slowdown_sum / trials as f64;
+    let want_slowdown = ge.expected_slowdown();
+    assert!(
+        (mean_slowdown - want_slowdown).abs() < 0.05 * want_slowdown,
+        "mean forecast {mean_slowdown} vs closed form {want_slowdown}"
     );
 }
 

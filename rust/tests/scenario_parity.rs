@@ -15,6 +15,7 @@
 //! * `shard_dataset` shards are disjoint and cover the dataset.
 
 use edgepipe::baselines::{sequential, transmit_all_first};
+use edgepipe::bound::replan::ControlPlan;
 use edgepipe::channel::{Channel, ErasureChannel, IdealChannel};
 use edgepipe::coordinator::des::{run_des, DesConfig};
 use edgepipe::coordinator::executor::NativeExecutor;
@@ -26,8 +27,8 @@ use edgepipe::extensions::adaptive::{run_scheduled, WarmupSchedule};
 use edgepipe::extensions::multi_device::{run_multi_device, shard_dataset};
 use edgepipe::model::RidgeModel;
 use edgepipe::sweep::scenario::{
-    ChannelSpec, HeteroSpec, PolicySpec, ScenarioRunner, ScenarioSpec,
-    SchedulerSpec, TrafficSpec,
+    ChannelSpec, EstimatorSpec, HeteroSpec, PolicySpec, ScenarioRunner,
+    ScenarioSpec, SchedulerSpec, TrafficSpec,
 };
 use edgepipe::testkit::forall;
 
@@ -333,6 +334,87 @@ fn greedy_prefers_fast_lanes_end_to_end() {
     );
 }
 
+/// Acceptance criterion: on a static channel with exact estimator
+/// constants, the closed-loop `ControlPolicy` is bit-identical to
+/// `FixedPolicy(ñ_c)` at the channel-aware recommendation — the
+/// Gilbert–Elliott belief of a pinned-good chain never moves, so
+/// re-planning with unchanged inputs is a no-op and the controller
+/// degenerates to the paper's fixed schedule, event stream and all.
+#[test]
+fn control_policy_is_bit_identical_to_fixed_on_static_channels() {
+    let ds = synth_calhousing(&SynthSpec { n: 420, ..Default::default() });
+    let cfg = DesConfig {
+        alpha: 1e-3,
+        collect_snapshots: true,
+        event_capacity: 4096,
+        ..DesConfig::paper(40, 10.0, 900.0, 37)
+    };
+    for channel in [
+        ChannelSpec::Ideal,
+        ChannelSpec::Erasure { p: 0.2 },
+        ChannelSpec::Rate { rate: 0.5, p: 0.1 },
+    ] {
+        let control_spec = ScenarioSpec {
+            channel: channel.clone(),
+            policy: PolicySpec::Control {
+                est: EstimatorSpec::Ge,
+                replan_every: 1,
+            },
+            ..ScenarioSpec::paper()
+        };
+        // the exact plan the controller starts from (shared code path:
+        // ScenarioRunner::control_plan calls the same constructor)
+        let plan =
+            ControlPlan::compute(&ds, &cfg, control_spec.expected_slowdown());
+        let fixed_spec = ScenarioSpec {
+            channel: channel.clone(),
+            policy: PolicySpec::Fixed { n_c: plan.n_c0 },
+            ..ScenarioSpec::paper()
+        };
+        let control =
+            ScenarioRunner::new(control_spec, &ds).run(&cfg).unwrap();
+        let fixed = ScenarioRunner::new(fixed_spec, &ds).run(&cfg).unwrap();
+        assert_identical(
+            &fixed,
+            &control,
+            &format!("control vs fixed({}) on {}", plan.n_c0, channel.label()),
+        );
+    }
+}
+
+/// On heterogeneous traffic the GE filter has no single chain to
+/// condition on, so `est=ge` must fall back to the EMA tracker —
+/// bit-identically to asking for `est=ema` outright.
+#[test]
+fn hetero_control_ge_falls_back_to_ema() {
+    let ds = synth_calhousing(&SynthSpec { n: 240, ..Default::default() });
+    let cfg = DesConfig {
+        alpha: 1e-3,
+        event_capacity: 4096,
+        ..DesConfig::paper(24, 6.0, 600.0, 5)
+    };
+    let mk = |est: EstimatorSpec| ScenarioSpec {
+        policy: PolicySpec::Control { est, replan_every: 1 },
+        traffic: TrafficSpec::Hetero(
+            HeteroSpec::new(
+                2,
+                SchedulerSpec::Greedy,
+                0.0,
+                vec![ChannelSpec::Ideal, ChannelSpec::Erasure { p: 0.2 }],
+            )
+            .unwrap(),
+        ),
+        ..ScenarioSpec::paper()
+    };
+    let ge = ScenarioRunner::new(mk(EstimatorSpec::Ge), &ds)
+        .run(&cfg)
+        .unwrap();
+    let ema = ScenarioRunner::new(mk(EstimatorSpec::Ema), &ds)
+        .run(&cfg)
+        .unwrap();
+    assert_identical(&ema, &ge, "hetero control est=ge vs est=ema");
+}
+
 #[test]
 fn sequential_scenario_matches_baseline_entry_point() {
     let ds = synth_calhousing(&SynthSpec { n: 600, ..Default::default() });
@@ -435,8 +517,9 @@ fn erasure_scenario_matches_run_des_on_erasure_channel() {
 fn workspace_reuse_is_bit_identical_to_fresh_runs() {
     // ONE workspace threaded through successive seeds AND scenario
     // kinds (single-device, sequential, erasure, warmup, multi-device,
-    // online arrivals, bounded store) must reproduce a fresh `run()`
-    // bit-for-bit every time — the purity contract of `run_with`.
+    // online arrivals, bounded store, closed-loop control) must
+    // reproduce a fresh `run()` bit-for-bit every time — the purity
+    // contract of `run_with`.
     let ds = synth_calhousing(&SynthSpec { n: 360, ..Default::default() });
     let base = DesConfig {
         alpha: 1e-3,
@@ -541,6 +624,40 @@ fn workspace_reuse_is_bit_identical_to_fresh_runs() {
                 )
                 .unwrap(),
             ),
+            ..paper.clone()
+        },
+        // closed-loop control joins the purity contract: the policy is
+        // rebuilt per run (fresh estimator belief + re-planner state),
+        // so a reused workspace must stay bit-identical — under both
+        // estimators, on the channel the controller actually adapts to
+        ScenarioSpec {
+            channel: ChannelSpec::Fading {
+                p_gb: 0.1,
+                p_bg: 0.15,
+                p_good: 0.0,
+                p_bad: 0.5,
+                rate_good: 1.0,
+                rate_bad: 0.3,
+            },
+            policy: PolicySpec::Control {
+                est: EstimatorSpec::Ge,
+                replan_every: 1,
+            },
+            ..paper.clone()
+        },
+        ScenarioSpec {
+            channel: ChannelSpec::Fading {
+                p_gb: 0.05,
+                p_bg: 0.25,
+                p_good: 0.0,
+                p_bad: 0.6,
+                rate_good: 1.0,
+                rate_bad: 0.5,
+            },
+            policy: PolicySpec::Control {
+                est: EstimatorSpec::Ema,
+                replan_every: 4,
+            },
             ..paper
         },
     ];

@@ -11,8 +11,8 @@
 
 use edgepipe::model::Workload;
 use edgepipe::sweep::scenario::{
-    ChannelSpec, HeteroSpec, PolicySpec, ScenarioSpec, SchedulerSpec,
-    TrafficSpec,
+    ChannelSpec, EstimatorSpec, HeteroSpec, PolicySpec, ScenarioSpec,
+    SchedulerSpec, TrafficSpec,
 };
 use edgepipe::testkit::{forall, Gen};
 
@@ -45,7 +45,7 @@ fn gen_channel(g: &mut Gen) -> ChannelSpec {
 }
 
 fn gen_policy(g: &mut Gen) -> PolicySpec {
-    match g.usize_in(0..=4) {
+    match g.usize_in(0..=5) {
         0 => PolicySpec::Fixed { n_c: g.usize_in(0..=5000) },
         1 => PolicySpec::Warmup {
             start: g.usize_in(1..=256),
@@ -54,6 +54,15 @@ fn gen_policy(g: &mut Gen) -> PolicySpec {
         },
         2 => PolicySpec::Deadline { frac: g.f64_in(0.001, 1.0) },
         3 => PolicySpec::Sequential { n_c: g.usize_in(0..=5000) },
+        4 => PolicySpec::Control {
+            est: *g.choose(&[EstimatorSpec::Ge, EstimatorSpec::Ema]),
+            // exercise the suffix-defaulted label form too
+            replan_every: if g.bool_with(0.4) {
+                1
+            } else {
+                g.usize_in(1..=64)
+            },
+        },
         _ => PolicySpec::AllFirst,
     }
 }
