@@ -1,14 +1,13 @@
-//! END-TO-END DRIVER: the full three-layer stack on the paper's real
-//! workload.
+//! END-TO-END DRIVER: the full stack on the paper's real workload.
 //!
-//! Layer 3 (this binary, Rust) runs the pipelined coordinator on the
-//! 18 576-sample ridge workload with the bound-optimized block size;
-//! every SGD update executes through Layer 2/1 — the AOT-compiled
-//! JAX+Pallas `sgd_block` artifact — on the PJRT CPU client. Loss checks
-//! run through the `dataset_loss` artifact AND the native f64 oracle, and
-//! the whole trajectory is cross-validated against the native engine.
+//! Runs the pipelined coordinator on the 18 576-sample ridge workload
+//! with the bound-optimized block size through the native engine, then
+//! re-estimates the final loss by Monte-Carlo twice — once on the
+//! scalar per-seed path and once on the batched-seed engine
+//! (`sweep/batch.rs`, 8 lanes) — and checks the two estimates are
+//! bit-identical while reporting the wall-clock ratio.
 //!
-//! Requires `make artifacts`. Set `E2E_FAST=1` for a shortened run.
+//! Set `E2E_FAST=1` for a shortened run.
 //!
 //! ```bash
 //! cargo run --release --example e2e_edge_training
@@ -16,7 +15,7 @@
 
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 use edgepipe::bound::corollary1::BoundParams;
 use edgepipe::bound::{estimate_constants, optimize_block_size};
 use edgepipe::channel::IdealChannel;
@@ -26,7 +25,7 @@ use edgepipe::data::split::train_split;
 use edgepipe::data::synth::{synth_calhousing, SynthSpec};
 use edgepipe::metrics::writer::{write_csv, CsvTable};
 use edgepipe::model::{ridge_solution, RidgeModel};
-use edgepipe::runtime::{PjrtExecutor, PjrtLossEvaluator, RuntimeSession};
+use edgepipe::sweep::mc_final_loss_lanes;
 use edgepipe::util::timefmt::{fmt_count, fmt_duration};
 
 fn main() -> Result<()> {
@@ -62,83 +61,75 @@ fn main() -> Result<()> {
         k.big_l, k.c, k.d_diam
     );
 
-    // ---------------- PJRT-backed pipelined run ----------------
+    // ---------------- pipelined reference run ----------------
     let cfg = DesConfig {
         n_c,
         loss_every: 2000,
         record_blocks: false,
         ..DesConfig::paper(n_c, n_o, t_budget, 42)
     };
-    let session = RuntimeSession::open_default()
-        .context("run `make artifacts` first")?;
-    let mut pjrt_exec = PjrtExecutor::new(session, alpha, lambda, train.n)?;
-    let t0 = Instant::now();
-    let pjrt_run = run_des(&train, &cfg, &mut IdealChannel, &mut pjrt_exec)?;
-    let pjrt_time = t0.elapsed();
-    println!(
-        "PJRT run: {} SGD updates in {} artifact calls, wall {}",
-        fmt_count(pjrt_run.updates as u64),
-        fmt_count(pjrt_exec.calls()),
-        fmt_duration(pjrt_time)
-    );
-
-    // ---------------- native cross-validation ----------------
-    let mut native_exec = NativeExecutor::new(
+    let mut exec = NativeExecutor::new(
         RidgeModel::new(train.d, lambda, train.n),
         alpha,
     );
-    let t1 = Instant::now();
-    let native_run =
-        run_des(&train, &cfg, &mut IdealChannel, &mut native_exec)?;
-    let native_time = t1.elapsed();
-    let max_dw = pjrt_run
-        .final_w
-        .iter()
-        .zip(&native_run.final_w)
-        .map(|(a, b)| (a - b).abs())
-        .fold(0.0f64, f64::max);
+    let t0 = Instant::now();
+    let run = run_des(&train, &cfg, &mut IdealChannel, &mut exec)?;
     println!(
-        "native run: wall {} — trajectory divergence max|Δw| = {max_dw:.2e} \
-         (f32 artifact vs f64 native)",
-        fmt_duration(native_time)
+        "native run: {} SGD updates in {} blocks, wall {}",
+        fmt_count(run.updates as u64),
+        run.blocks_sent,
+        fmt_duration(t0.elapsed())
     );
-    anyhow::ensure!(max_dw < 1e-2, "backends diverged: {max_dw}");
 
-    // ---------------- loss agreement through the artifact ----------------
-    let session2 = RuntimeSession::open_default()?;
-    let mut loss_eval = PjrtLossEvaluator::new(session2, lambda, train.n)?;
-    loss_eval.append_rows(&train.x, &train.y)?;
-    let pjrt_loss = loss_eval.loss(&pjrt_run.final_w)?;
-    let native_loss = pjrt_run.final_loss;
+    // ---------------- scalar vs batched Monte-Carlo ----------------
+    let seeds = if fast { 8 } else { 24 };
+    let sweep_cfg = DesConfig {
+        loss_every: 0,
+        record_blocks: false,
+        ..cfg.clone()
+    };
+    let t1 = Instant::now();
+    let scalar = mc_final_loss_lanes(&train, &sweep_cfg, seeds, 0, 1);
+    let scalar_time = t1.elapsed();
+    let t2 = Instant::now();
+    let batched = mc_final_loss_lanes(&train, &sweep_cfg, seeds, 0, 8);
+    let batched_time = t2.elapsed();
     println!(
-        "final training loss: pjrt artifact {pjrt_loss:.6} vs native \
-         {native_loss:.6}"
+        "MC over {seeds} seeds: scalar {} vs 8-lane batched {} \
+         (mean loss {:.6})",
+        fmt_duration(scalar_time),
+        fmt_duration(batched_time),
+        batched.mean
     );
     anyhow::ensure!(
-        (pjrt_loss - native_loss).abs() / native_loss < 1e-3,
-        "loss paths disagree"
+        scalar.mean.to_bits() == batched.mean.to_bits()
+            && scalar.std.to_bits() == batched.std.to_bits(),
+        "batched engine diverged from scalar: {} vs {}",
+        scalar.mean,
+        batched.mean
     );
+    println!("batched-seed engine bit-identical to scalar ✓");
 
     // ---------------- report vs optimum ----------------
     let w_star = ridge_solution(&train, lambda)?;
     let loss_star = train.ridge_loss(&w_star, lambda / train.n as f64);
     println!(
         "optimality gap at deadline: {:.3e} (L(w*) = {loss_star:.6})",
-        pjrt_run.final_loss - loss_star
+        run.final_loss - loss_star
     );
 
     // loss curve out
     let mut table = CsvTable::new(&["time", "loss"]);
-    for &(t, l) in &pjrt_run.curve {
+    for &(t, l) in &run.curve {
         table.push_nums(&[t, l]);
     }
     let out = std::path::Path::new("out").join("e2e_loss_curve.csv");
     write_csv(&table, &out)?;
     println!(
         "loss curve ({} points) -> {}",
-        pjrt_run.curve.len(),
+        run.curve.len(),
         out.display()
     );
-    println!("E2E OK: all three layers compose.");
+    println!("E2E OK: coordinator, bound, and batched sweeps compose.");
     Ok(())
 }

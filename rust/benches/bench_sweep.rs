@@ -1,18 +1,20 @@
-//! Perf: the zero-allocation Monte-Carlo sweep engine vs the
-//! pre-workspace baseline, on an `mc_final_loss`-style workload.
+//! Perf: the Monte-Carlo sweep engines measured against each other on
+//! an `mc_final_loss`-style workload.
 //!
-//! Measures BOTH engine shapes in one process (identical `(n_c, seed)`
+//! Measures every engine shape in one process (identical `(n_c, seed)`
 //! jobs, bit-identical losses asserted):
 //!
 //! * baseline — a pool spawn per grid point, a fresh allocation set per
 //!   run (the pre-change engine shape);
 //! * optimized — one flat `(n_c, seed)` fan-out with per-worker
-//!   `RunWorkspace` reuse.
+//!   `RunWorkspace` reuse (the scalar engine);
+//! * batched — the batched-seed engine (`sweep/batch.rs`) at each lane
+//!   width L ∈ {4, 8, 16}: seed-groups traced once, replayed through
+//!   SoA SGD kernels.
 //!
 //! Reports runs/sec, SGD updates/sec and allocations-per-run (this
 //! binary installs the counting allocator), and writes the result to
-//! `BENCH_sweep.json` so future PRs regress against it. Acceptance bar
-//! for this PR: speedup >= 1.5x on the default (paper-scale) workload.
+//! `BENCH_sweep.json` (schema 2) so future PRs regress against it.
 //!
 //! Run: `cargo bench --bench bench_sweep`
 //! (CI scale: `EDGEPIPE_BENCH_FAST=1 cargo bench --bench bench_sweep`)
@@ -32,14 +34,27 @@ fn main() {
     std::fs::write(out, report.to_value().to_json_pretty())
         .expect("write BENCH_sweep.json");
     println!("wrote {out}");
-    // enforce the regression bar when asked (machine-dependent, so
-    // opt-in: EDGEPIPE_BENCH_MIN_SPEEDUP=1.5 makes this run fail below)
+    // enforce the regression bars when asked (machine-dependent, so
+    // opt-in: EDGEPIPE_BENCH_MIN_SPEEDUP=1.5 makes this run fail below).
+    // The bar applies to BOTH tracked ratios: workspace-reuse vs the
+    // pre-workspace baseline, and the widest-lane batched engine vs the
+    // scalar optimized engine.
     if let Ok(min) = std::env::var("EDGEPIPE_BENCH_MIN_SPEEDUP") {
         let min: f64 = min.parse().expect("bad EDGEPIPE_BENCH_MIN_SPEEDUP");
         assert!(
             report.speedup >= min,
             "sweep engine speedup {:.2}x below the required {min}x",
             report.speedup
+        );
+        let widest = report
+            .widest_lane_row()
+            .expect("bench measured no lane widths");
+        assert!(
+            widest.speedup >= min,
+            "batched engine (L={}) speedup {:.2}x vs scalar below the \
+             required {min}x",
+            widest.lanes,
+            widest.speedup
         );
     }
 }

@@ -1,17 +1,23 @@
 //! The tracked sweep benchmark: Monte-Carlo `mc_final_loss`-style
-//! throughput, measured two ways in one process —
+//! throughput, measured three ways in one process —
 //!
 //! * **baseline** — the pre-workspace engine shape: one pool spawn per
 //!   grid point, a fresh allocation set per run (`ScenarioRunner::run`);
-//! * **optimized** — the current engine: ONE flat `(n_c, seed)` fan-out,
-//!   per-worker [`RunWorkspace`] reuse (`ScenarioRunner::run_with`).
+//! * **optimized** — the scalar engine: ONE flat `(n_c, seed)` fan-out,
+//!   per-worker [`RunWorkspace`] reuse (`ScenarioRunner::run_with`);
+//! * **batched** — the batched-seed engine (`sweep/batch.rs`) at each
+//!   supported lane width L ∈ {4, 8, 16}: the identical job list chunked
+//!   into seed-groups, traced once and replayed through SoA kernels.
 //!
-//! Both paths compute bit-identical losses (asserted), so the ratio is
+//! All phases compute bit-identical losses (asserted), so the ratios are
 //! pure engine overhead. `edgepipe bench --json BENCH_sweep.json` and
 //! `cargo bench --bench bench_sweep` both emit the same
-//! `BENCH_sweep.json` so future PRs can regress against a recorded
-//! baseline: compare `runs_per_sec` (and `allocs_per_run`, when the
-//! counting allocator is installed) across commits.
+//! `BENCH_sweep.json` (schema 2) so future PRs can regress against a
+//! recorded baseline: compare `runs_per_sec` and the per-lane `lanes`
+//! rows (and `allocs_per_run`, when the counting allocator is
+//! installed) across commits. `EDGEPIPE_BENCH_MIN_SPEEDUP` turns the
+//! largest-lane batched speedup into a hard gate (see
+//! `rust/benches/bench_sweep.rs`).
 
 use std::time::Instant;
 
@@ -19,9 +25,11 @@ use crate::coordinator::des::DesConfig;
 use crate::coordinator::scheduler::RunWorkspace;
 use crate::data::split::train_split;
 use crate::data::synth::{synth_calhousing, SynthSpec};
+use crate::linalg::batch::LANE_WIDTHS;
+use crate::sweep::batch::grouped_losses;
 use crate::sweep::runner::log_grid;
 use crate::sweep::scenario::{ScenarioRunner, ScenarioSpec};
-use crate::util::alloc::allocations_during;
+use crate::util::alloc::{allocations_during, allocs_per_unit};
 use crate::util::json::{num, num_arr, obj, s, Value};
 use crate::util::pool::{default_threads, parallel_map_with, parallel_tasks};
 
@@ -80,7 +88,25 @@ pub fn env_flag(name: &str) -> bool {
     matches!(std::env::var(name), Ok(v) if !v.is_empty() && v != "0")
 }
 
-/// One measurement of both engine shapes over the identical workload.
+/// One batched-engine measurement at a fixed lane width, over the same
+/// job list as the scalar phases.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneBenchRow {
+    /// Lane width L.
+    pub lanes: usize,
+    pub secs: f64,
+    pub runs_per_sec: f64,
+    /// SGD updates/sec through the batched engine (same update total as
+    /// the scalar phases).
+    pub updates_per_sec: f64,
+    /// `runs_per_sec / scalar optimized runs_per_sec`.
+    pub speedup: f64,
+    /// Mean allocations per Monte-Carlo run (each lane is one run;
+    /// None without the counting allocator).
+    pub allocs_per_run: Option<f64>,
+}
+
+/// One measurement of every engine shape over the identical workload.
 #[derive(Clone, Debug)]
 pub struct SweepBenchReport {
     pub n_train: usize,
@@ -103,6 +129,8 @@ pub struct SweepBenchReport {
     /// Mean allocations per run (None without the counting allocator).
     pub allocs_per_run_baseline: Option<f64>,
     pub allocs_per_run: Option<f64>,
+    /// Batched-seed engine rows, one per lane width in [`LANE_WIDTHS`].
+    pub lanes: Vec<LaneBenchRow>,
 }
 
 impl SweepBenchReport {
@@ -112,7 +140,7 @@ impl SweepBenchReport {
             Some(v) => format!("{v:.1}"),
             None => "n/a (counting allocator not installed)".to_string(),
         };
-        format!(
+        let mut out = format!(
             "sweep bench: N={} d={} grid={:?} seeds={} threads={} \
              ({} runs, {} updates/phase)\n\
              \x20 baseline  (pool per point, alloc per run): \
@@ -135,17 +163,53 @@ impl SweepBenchReport {
             fmt_allocs(self.allocs_per_run),
             self.speedup,
             self.updates_per_sec,
-        )
+        );
+        for row in &self.lanes {
+            out.push_str(&format!(
+                "\x20 batched L={:<2} (traced seed-groups, SoA replay): \
+                 {:>10.3}s  {:>10.1} runs/s  allocs/run {}  \
+                 ({:.2}x vs scalar, {:.3e} upd/s)\n",
+                row.lanes,
+                row.secs,
+                row.runs_per_sec,
+                fmt_allocs(row.allocs_per_run),
+                row.speedup,
+                row.updates_per_sec,
+            ));
+        }
+        out
     }
 
-    /// The `BENCH_sweep.json` document.
+    /// The batched row at the widest measured lane count (the gate
+    /// target for `EDGEPIPE_BENCH_MIN_SPEEDUP`).
+    pub fn widest_lane_row(&self) -> Option<&LaneBenchRow> {
+        self.lanes.iter().max_by_key(|r| r.lanes)
+    }
+
+    /// The `BENCH_sweep.json` document (schema 2: adds the per-lane
+    /// `lanes` rows of the batched-seed engine).
     pub fn to_value(&self) -> Value {
         let opt_num = |v: Option<f64>| match v {
             Some(x) => num(x),
             None => Value::Null,
         };
+        let lane_rows: Vec<Value> = self
+            .lanes
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("lanes", num(r.lanes as f64)),
+                    ("secs", num(r.secs)),
+                    ("runs_per_sec", num(r.runs_per_sec)),
+                    ("updates_per_sec", num(r.updates_per_sec)),
+                    ("speedup", num(r.speedup)),
+                    ("allocs_per_run", opt_num(r.allocs_per_run)),
+                ])
+            })
+            .collect();
         obj(vec![
-            ("schema", num(1.0)),
+            ("schema", num(2.0)),
+            ("lanes", Value::Arr(lane_rows)),
             ("bench", s("sweep")),
             ("n_train", num(self.n_train as f64)),
             ("d", num(self.d as f64)),
@@ -253,7 +317,36 @@ pub fn run_sweep_bench(cfg: &SweepBenchConfig) -> SweepBenchReport {
     );
 
     let runs = jobs.len();
-    let per_run = |allocs: Option<u64>| allocs.map(|a| a as f64 / runs as f64);
+
+    // batched-seed phases: the IDENTICAL job list, grouped per lane
+    // width. grouped_losses flattens point-major in seed order — the
+    // same flat order as `jobs` — so plain Vec equality is the bitwise
+    // per-run loss assertion.
+    let refs: Vec<&ScenarioRunner> = grid.iter().map(|_| &runner).collect();
+    let lanes: Vec<LaneBenchRow> = LANE_WIDTHS
+        .iter()
+        .map(|&width| {
+            let (lane_losses, lane_allocs, secs) = timed(|| {
+                grouped_losses(&refs, cfg.seeds, threads, width, |p, s| {
+                    per_seed(&base, grid[p], s)
+                })
+            });
+            assert_eq!(
+                opt_losses, lane_losses,
+                "batched engine (L={width}) changed sweep results"
+            );
+            LaneBenchRow {
+                lanes: width,
+                secs,
+                runs_per_sec: runs as f64 / secs,
+                updates_per_sec: updates as f64 / secs,
+                speedup: optimized_secs / secs,
+                allocs_per_run: allocs_per_unit(lane_allocs, runs),
+            }
+        })
+        .collect();
+
+    let per_run = |allocs: Option<u64>| allocs_per_unit(allocs, runs);
     SweepBenchReport {
         n_train: train.n,
         d: train.d,
@@ -270,6 +363,7 @@ pub fn run_sweep_bench(cfg: &SweepBenchConfig) -> SweepBenchReport {
         updates_per_sec: updates as f64 / optimized_secs,
         allocs_per_run_baseline: per_run(baseline_allocs),
         allocs_per_run: per_run(opt_allocs),
+        lanes,
     }
 }
 
@@ -298,13 +392,29 @@ mod tests {
         assert!(report.updates > 0);
         assert!(report.runs_per_sec > 0.0);
         assert!(report.baseline_runs_per_sec > 0.0);
-        // JSON round-trips
+        // one batched row per supported lane width, all measured
+        assert_eq!(report.lanes.len(), LANE_WIDTHS.len());
+        for (row, &width) in report.lanes.iter().zip(LANE_WIDTHS.iter()) {
+            assert_eq!(row.lanes, width);
+            assert!(row.secs > 0.0 && row.runs_per_sec > 0.0);
+            assert!(row.speedup.is_finite() && row.speedup > 0.0);
+        }
+        assert_eq!(report.widest_lane_row().unwrap().lanes, 16);
+        // JSON round-trips at schema 2 with the lane rows
         let v = report.to_value();
         assert_eq!(
             v.get("runs").unwrap().as_usize().unwrap(),
             report.runs
         );
+        assert_eq!(v.get("schema").unwrap().as_usize().unwrap(), 2);
+        let rows = v.get("lanes").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), LANE_WIDTHS.len());
+        assert_eq!(
+            rows[2].get("lanes").unwrap().as_usize().unwrap(),
+            16
+        );
         assert!(report.render().contains("speedup"));
+        assert!(report.render().contains("batched L=16"));
     }
 }
 

@@ -35,7 +35,7 @@ OPTIONS (all commands):
     --config <path>          TOML config file
     --set <section.key=val>  override any config key (repeatable)
     --out <dir>              output directory for CSV/JSON [default: out]
-    --backend <native|pjrt>  executor backend for `train` [default: native]
+    --backend <native>       executor backend for `train` [default: native]
     --quiet                  suppress progress logging
 
 SCENARIO OPTIONS (scenario command):
@@ -89,9 +89,19 @@ BENCH OPTIONS (bench command):
      config keys, e.g. --set data.n_raw=2000 --set sweep.seeds=4
      --set sweep.threads=8)
 
+ENVIRONMENT:
+    EDGEPIPE_LANES=<n>       Monte-Carlo lane count for the batched-seed
+                             sweep engine, snapped to 1|4|8|16
+                             [default: 8]; 1 = scalar engine. Per-seed
+                             results are bit-identical at every setting.
+    EDGEPIPE_THREADS=<n>     sweep worker threads (0/unset = auto)
+    EDGEPIPE_BENCH_FAST=1    CI-scale bench preset (see --fast)
+    EDGEPIPE_BENCH_MIN_SPEEDUP=<x>  hard regression bar for
+                             `cargo bench --bench bench_sweep`
+
 EXAMPLES:
     edgepipe optimize --set protocol.n_o=100
-    edgepipe train --set protocol.n_c=437 --set train.seed=3 --backend pjrt
+    edgepipe train --set protocol.n_c=437 --set train.seed=3
     edgepipe fig3 --out out/fig3
     edgepipe fig4 --set protocol.n_o=100 --set sweep.seeds=10
     edgepipe scenario --preset all --set sweep.seeds=20
@@ -162,8 +172,8 @@ impl Args {
                 other => bail!("unexpected argument '{other}'"),
             }
         }
-        if !matches!(args.backend.as_str(), "native" | "pjrt") {
-            bail!("--backend must be 'native' or 'pjrt'");
+        if args.backend.as_str() != "native" {
+            bail!("--backend must be 'native'");
         }
         Ok(args)
     }
@@ -200,7 +210,7 @@ mod tests {
             "--set",
             "train.seed=3",
             "--backend",
-            "pjrt",
+            "native",
             "--out",
             "results",
         ])
@@ -208,7 +218,7 @@ mod tests {
         assert_eq!(a.command, "train");
         assert_eq!(a.overrides.len(), 2);
         assert_eq!(a.overrides[0], ("protocol.n_c".into(), "437".into()));
-        assert_eq!(a.backend, "pjrt");
+        assert_eq!(a.backend, "native");
         assert_eq!(a.out_dir, "results");
     }
 

@@ -313,13 +313,6 @@ fn cmd_train(args: &Args) -> Result<i32> {
             );
             run_des(&ds, &des, &mut IdealChannel, &mut exec)?
         }
-        "pjrt" => {
-            let session = crate::runtime::RuntimeSession::open_default()?;
-            let mut exec = crate::runtime::PjrtExecutor::new(
-                session, des.alpha, des.lambda, ds.n,
-            )?;
-            run_des(&ds, &des, &mut IdealChannel, &mut exec)?
-        }
         other => bail!("unknown backend {other}"),
     };
     let w_star = ridge_solution(&ds, cfg.train.lambda)?;

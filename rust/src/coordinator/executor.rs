@@ -1,10 +1,11 @@
 //! The per-block SGD executor abstraction.
 //!
 //! The coordinator samples the SGD indices ξ (so sampling is identical
-//! across backends) and hands the executor a block of indices to apply.
-//! Implementations: [`NativeExecutor`] (pure Rust, f64) here, and
-//! `runtime::PjrtExecutor` (the AOT JAX/Pallas artifact, f32) — their
-//! trajectories agree to f32 tolerance (integration-tested).
+//! across executors) and hands the executor a block of indices to
+//! apply. Implementations: [`NativeExecutor`] (pure Rust, f64 — the
+//! oracle and the sweep fast path) and [`TraceExecutor`] (records the
+//! index stream for the batched-seed engine's lane replay instead of
+//! executing it).
 
 use anyhow::Result;
 
@@ -14,8 +15,8 @@ use crate::sgd::{SgdEngine, StoreView};
 /// Applies one pipelined block of single-sample SGD updates (paper
 /// eq. (2)) for a pre-sampled index sequence.
 ///
-/// Not `Send`: the PJRT executor wraps non-Send PJRT handles. The
-/// threaded pipeline keeps the executor on the edge (caller) thread.
+/// Deliberately not required to be `Send`: the threaded pipeline keeps
+/// the executor on the edge (caller) thread.
 pub trait BlockExecutor {
     /// Apply updates `w ← w − α∇ℓ(w, store[ξ])` for each ξ in `indices`.
     fn run_block(
@@ -60,6 +61,42 @@ impl<M: PointModel> BlockExecutor for NativeExecutor<M> {
     }
 }
 
+/// Records the flushed SGD index stream instead of executing it — the
+/// batched-seed engine's trace pass. Never touches `w`, so after a
+/// traced run the workspace still holds the run's `w_init`. Indices
+/// append in flush order, which IS the scalar engine's execution order;
+/// against an append-only (unbounded) store the tape replays to a
+/// bit-identical trajectory.
+pub struct TraceExecutor<'a> {
+    /// Flat index tape, appended in execution order.
+    pub tape: &'a mut Vec<u32>,
+}
+
+impl<'a> TraceExecutor<'a> {
+    pub fn new(tape: &'a mut Vec<u32>) -> TraceExecutor<'a> {
+        tape.clear();
+        TraceExecutor { tape }
+    }
+}
+
+impl BlockExecutor for TraceExecutor<'_> {
+    fn run_block(
+        &mut self,
+        _w: &mut Vec<f64>,
+        _store: StoreView<'_>,
+        indices: &[u32],
+    ) -> Result<()> {
+        self.tape.extend_from_slice(indices);
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        // the replay applies the native engine's arithmetic, so runs
+        // report the same backend label either way
+        "native"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -90,5 +127,21 @@ mod tests {
         exec.run_block(&mut w, store, &[0, 1, 0, 1, 0, 1]).unwrap();
         assert!(w[0] > 0.0, "w must point toward the positive class: {w:?}");
         assert_eq!(exec.name(), "native");
+    }
+
+    #[test]
+    fn trace_executor_records_without_touching_w() {
+        let x = vec![1.0f32, 0.0, 0.0, 1.0];
+        let y = vec![2.0f32, -2.0];
+        let store = StoreView::new(&x, &y, 2);
+        let mut tape = vec![9u32]; // stale content must be cleared
+        let mut exec = TraceExecutor::new(&mut tape);
+        let mut w = vec![0.5, -0.5];
+        exec.run_block(&mut w, store, &[0, 1]).unwrap();
+        exec.run_block(&mut w, store, &[1]).unwrap();
+        assert_eq!(w, vec![0.5, -0.5], "trace pass must not touch w");
+        assert_eq!(exec.name(), "native");
+        drop(exec);
+        assert_eq!(tape, vec![0, 1, 1], "flush-order index stream");
     }
 }

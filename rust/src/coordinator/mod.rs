@@ -15,11 +15,12 @@
 //!   thread, edge trainer thread, mpsc packet channel) exercising the
 //!   actual concurrent system structure.
 //!
-//! All paths drive a [`BlockExecutor`](executor::BlockExecutor) — native
-//! Rust SGD or the PJRT executor running the AOT JAX/Pallas artifacts —
-//! and consume identical RNG streams, so `des == pipeline ==
-//! run_schedule(single, fixed)` exactly (asserted in
-//! `rust/tests/pipeline_parity.rs` and `rust/tests/scenario_parity.rs`).
+//! All paths drive a [`BlockExecutor`](executor::BlockExecutor) —
+//! native Rust SGD, or the recording [`TraceExecutor`] behind the
+//! batched-seed sweep engine — and consume identical RNG streams, so
+//! `des == pipeline == run_schedule(single, fixed)` exactly (asserted
+//! in `rust/tests/pipeline_parity.rs` and
+//! `rust/tests/scenario_parity.rs`).
 
 pub mod des;
 pub mod events;
@@ -31,7 +32,7 @@ mod trainer;
 
 pub use des::{run_des, DesConfig, DeviceTransmitter};
 pub use events::{Event, EventKind};
-pub use executor::{BlockExecutor, NativeExecutor};
+pub use executor::{BlockExecutor, NativeExecutor, TraceExecutor};
 pub use pipeline::run_pipelined;
 pub use run::{run_experiment, ExperimentOutput, RunResult};
 pub use scheduler::{

@@ -918,10 +918,37 @@ pub fn run_schedule_with(
     channel: &mut dyn Channel,
     exec: &mut dyn BlockExecutor,
 ) -> Result<RunStats> {
+    run_schedule_with_opts(
+        ws, ds, cfg, source, policy, mode, channel, exec, true,
+    )
+}
+
+/// [`run_schedule_with`] with loss evaluation optionally disabled.
+/// `eval_losses = false` is the batched-seed trace pass: the DES
+/// trajectory (RNG draws, timelines, index stream, counters) is
+/// unchanged — loss recording is pure — but no full-dataset loss is
+/// computed and `RunStats::final_loss` comes back `NAN`; the batch
+/// runner recomputes per-lane losses once after replay.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_schedule_with_opts(
+    ws: &mut RunWorkspace,
+    ds: &Dataset,
+    cfg: &DesConfig,
+    source: &mut dyn TrafficSource,
+    policy: &mut dyn BlockPolicy,
+    mode: OverlapMode,
+    channel: &mut dyn Channel,
+    exec: &mut dyn BlockExecutor,
+    eval_losses: bool,
+) -> Result<RunStats> {
     ws.events.reset(cfg.event_capacity);
     ws.frame.reset(cfg.n_c.max(1).min(ds.n), ds.d);
-    let mut trainer =
-        EdgeTrainer::from_space(std::mem::take(&mut ws.train), ds, cfg);
+    let mut trainer = EdgeTrainer::from_space_opts(
+        std::mem::take(&mut ws.train),
+        ds,
+        cfg,
+        eval_losses,
+    );
     let outcome = schedule_loop(
         &mut trainer,
         &mut ws.frame,
@@ -935,7 +962,7 @@ pub fn run_schedule_with(
         exec,
     );
     let stats = outcome.map(|c| RunStats {
-        final_loss: trainer.full_loss(),
+        final_loss: if eval_losses { trainer.full_loss() } else { f64::NAN },
         updates: trainer.updates,
         blocks_sent: c.blocks_sent,
         blocks_delivered: c.blocks_delivered,

@@ -52,6 +52,10 @@ pub(crate) struct EdgeTrainer<'a> {
     since_record: usize,
     collect_snapshots: bool,
     record_blocks: bool,
+    /// When false, loss recording is skipped entirely (the batched-seed
+    /// trace pass re-runs the DES for its index tape only; the losses
+    /// are recomputed once per lane after replay).
+    eval_losses: bool,
 }
 
 impl<'a> EdgeTrainer<'a> {
@@ -64,9 +68,22 @@ impl<'a> EdgeTrainer<'a> {
     /// capacity) and re-derives all per-run state from `cfg`, so the
     /// resulting trainer is indistinguishable from [`new`](Self::new).
     pub fn from_space(
+        sp: TrainSpace,
+        ds: &'a Dataset,
+        cfg: &DesConfig,
+    ) -> EdgeTrainer<'a> {
+        Self::from_space_opts(sp, ds, cfg, true)
+    }
+
+    /// [`from_space`](Self::from_space) with loss evaluation optionally
+    /// disabled (`eval_losses = false` is the trace-pass mode; the RNG
+    /// draws, timelines, and index stream are unaffected since
+    /// `record_loss` is pure).
+    pub fn from_space_opts(
         mut sp: TrainSpace,
         ds: &'a Dataset,
         cfg: &DesConfig,
+        eval_losses: bool,
     ) -> EdgeTrainer<'a> {
         let mut init_rng = Pcg32::new(cfg.seed, STREAM_INIT);
         sp.w.clear();
@@ -92,6 +109,7 @@ impl<'a> EdgeTrainer<'a> {
             since_record: 0,
             collect_snapshots: cfg.collect_snapshots,
             record_blocks: cfg.record_blocks,
+            eval_losses,
         };
         trainer.record_loss(0.0);
         trainer
@@ -115,9 +133,12 @@ impl<'a> EdgeTrainer<'a> {
     }
 
     fn record_loss(&mut self, t: f64) {
+        self.since_record = 0;
+        if !self.eval_losses {
+            return;
+        }
         let loss = self.full_loss();
         self.sp.curve.push((t, loss));
-        self.since_record = 0;
     }
 
     /// Advance the compute clock to `until`, running SGD updates while

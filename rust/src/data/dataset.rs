@@ -1,8 +1,8 @@
 //! The in-memory training set `X = {x_1..x_N}` with labels.
 //!
 //! Stored flat row-major (`n × d` f32, matching the AOT artifact layout)
-//! so the device can transmit contiguous rows and the PJRT path can copy
-//! straight into executable buffers.
+//! so the device can transmit contiguous rows and kernels can gather
+//! straight from contiguous memory.
 
 /// A labelled dataset with flat row-major covariates.
 #[derive(Clone, Debug)]

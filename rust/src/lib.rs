@@ -55,10 +55,11 @@
 //!   ([`bound::validate`], `edgepipe optimize --mc`), and the
 //!   fixed-vs-warmup-vs-control comparison sweep across fading
 //!   severities ([`sweep::control`], `edgepipe control`).
-//! * **Backends** — a native f64 SGD engine ([`sgd`]) and a PJRT-backed
-//!   engine ([`runtime`], [`edge`]) executing the AOT JAX/Pallas
-//!   artifacts built by `make artifacts` (gated behind the `pjrt` cargo
-//!   feature; the native path is fully self-contained).
+//! * **Engines** — the native f64 SGD engine ([`sgd`], [`edge`]) and
+//!   the batched-seed sweep engine ([`sweep::batch`]): Monte-Carlo
+//!   seed-groups traced once each through the DES, then replayed
+//!   lane-batched through SoA SGD kernels ([`linalg::batch`],
+//!   [`model::lane`]) — bit-identical per seed, `EDGEPIPE_LANES` wide.
 //! * **Substrate** — everything needed offline: RNG, JSON, config, CLI,
 //!   linear algebra + vectorized f32→f64 kernels ([`linalg::kernels`]),
 //!   dataset synthesis, a bench harness (including the tracked sweep
@@ -67,9 +68,8 @@
 //!   ([`util`], [`linalg`], [`data`], [`bench`], [`testkit`],
 //!   [`metrics`], [`protocol`], [`model`]).
 //!
-//! Python/JAX/Pallas exist only at build time; the Rust binary is
-//! self-contained once `artifacts/` is built (and runs natively without
-//! them).
+//! Python/JAX/Pallas exist only at build time (artifact manifests that
+//! [`runtime`] parses); the Rust binary is fully self-contained.
 
 pub mod baselines;
 pub mod bench;

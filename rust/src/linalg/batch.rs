@@ -1,0 +1,576 @@
+//! Lane-striped SoA kernels for the batched-seed Monte-Carlo engine.
+//!
+//! `L` seed-lanes of the *same scenario point* share one
+//! structure-of-arrays weight state: element `j` of lane `l` lives at
+//! `w[j * L + l]`, so a loop over lanes at fixed `j` is a contiguous
+//! vector op the compiler autovectorizes on stable Rust (explicit
+//! fixed-width accumulator arrays, no `std::simd`). Covariates are
+//! gathered into the same layout per step (`x[j * L + l]`, f32) with
+//! labels widened once into `y[l]`.
+//!
+//! **Bit-exactness contract.** Batching is *across* lanes only: each
+//! lane's per-update arithmetic order is exactly the scalar model's, so
+//! every lane's trajectory — and final loss — is bit-identical to a
+//! scalar run by construction. Concretely, the per-lane reassociation
+//! rule pinned here (and in ARCHITECTURE.md, "Batched-seed execution")
+//! is:
+//!
+//! * general `d`: the lane dot uses [`dot_f32_f64`]'s association —
+//!   four accumulators over chunks of 4, sequential tail, combined
+//!   `(a0 + a1) + (a2 + a3) + tail` ([`lane_dot`]);
+//! * ridge `d == 8`: a single sequential accumulator
+//!   ([`lane_dot_seq`]), matching `RidgeModel`'s fixed-size fused step;
+//! * the weight update `w[j] = w[j]·shrink − coeff·x[j]` is
+//!   element-wise (no reassociation) in both engines.
+//!
+//! Because the rule is "same association per lane", the parity bound is
+//! 0 ULP — the tests below assert bit equality, not closeness.
+//!
+//! **Inactive lanes** (timeline drained, or a ragged group smaller than
+//! the lane width) are neutralized per update by `coeff = 0.0`,
+//! `shrink = 1.0` *and* zero-filled covariate columns, which preserves
+//! the lane's weights bit-for-bit — including `NaN`/`±Inf` columns,
+//! since `w·1.0 − 0.0·0.0 = w` for every finite, infinite, or NaN `w`.
+//! Lanes never share an accumulator, so a poisoned lane cannot
+//! contaminate its neighbors.
+//!
+//! [`dot_f32_f64`]: crate::linalg::kernels::dot_f32_f64
+
+use crate::linalg::kernels::sigmoid;
+
+/// Widest supported lane count (SoA scratch is sized for this).
+pub const MAX_LANES: usize = 16;
+
+/// The lane widths the batched engine monomorphizes for.
+pub const LANE_WIDTHS: [usize; 3] = [4, 8, 16];
+
+/// Snap a requested lane count to a supported width: `0`/`1` mean
+/// scalar, `2..=5 → 4`, `6..=11 → 8`, `≥ 12 → 16`.
+pub fn snap_lanes(requested: usize) -> usize {
+    match requested {
+        0 | 1 => 1,
+        2..=5 => 4,
+        6..=11 => 8,
+        _ => 16,
+    }
+}
+
+/// Per-lane `z[l] = Σ_j w[j·L + l] · x[j·L + l]` with
+/// [`dot_f32_f64`](crate::linalg::kernels::dot_f32_f64)'s pinned
+/// association applied independently in every lane: four accumulator
+/// arrays over chunks of 4 dimensions, a sequential tail, combined
+/// `(a0 + a1) + (a2 + a3) + tail`.
+#[inline]
+pub fn lane_dot<const L: usize>(
+    w: &[f64],
+    x: &[f32],
+    d: usize,
+    out: &mut [f64; L],
+) {
+    debug_assert_eq!(w.len(), d * L, "lane dot shape mismatch");
+    debug_assert_eq!(x.len(), d * L, "lane dot shape mismatch");
+    let chunks = d / 4;
+    let mut a0 = [0.0f64; L];
+    let mut a1 = [0.0f64; L];
+    let mut a2 = [0.0f64; L];
+    let mut a3 = [0.0f64; L];
+    for c in 0..chunks {
+        let b = c * 4 * L;
+        for l in 0..L {
+            a0[l] += w[b + l] * x[b + l] as f64;
+        }
+        for l in 0..L {
+            a1[l] += w[b + L + l] * x[b + L + l] as f64;
+        }
+        for l in 0..L {
+            a2[l] += w[b + 2 * L + l] * x[b + 2 * L + l] as f64;
+        }
+        for l in 0..L {
+            a3[l] += w[b + 3 * L + l] * x[b + 3 * L + l] as f64;
+        }
+    }
+    let mut tail = [0.0f64; L];
+    for j in chunks * 4..d {
+        let b = j * L;
+        for l in 0..L {
+            tail[l] += w[b + l] * x[b + l] as f64;
+        }
+    }
+    for l in 0..L {
+        out[l] = (a0[l] + a1[l]) + (a2[l] + a3[l]) + tail[l];
+    }
+}
+
+/// Per-lane dot with a *single sequential accumulator* — the
+/// association of `RidgeModel`'s fixed `d == 8` fused step, applied
+/// independently in every lane.
+#[inline]
+pub fn lane_dot_seq<const L: usize>(
+    w: &[f64],
+    x: &[f32],
+    d: usize,
+    out: &mut [f64; L],
+) {
+    debug_assert_eq!(w.len(), d * L, "lane dot shape mismatch");
+    debug_assert_eq!(x.len(), d * L, "lane dot shape mismatch");
+    let mut acc = [0.0f64; L];
+    for j in 0..d {
+        let b = j * L;
+        for l in 0..L {
+            acc[l] += w[b + l] * x[b + l] as f64;
+        }
+    }
+    *out = acc;
+}
+
+/// Per-lane axpy `y[j·L + l] += a[l] · x[j·L + l]` — element-wise per
+/// lane, so bit-identical to
+/// [`axpy_f32_f64`](crate::linalg::kernels::axpy_f32_f64) per column.
+#[inline]
+pub fn lane_axpy<const L: usize>(
+    a: &[f64; L],
+    x: &[f32],
+    y: &mut [f64],
+    d: usize,
+) {
+    debug_assert_eq!(x.len(), d * L, "lane axpy shape mismatch");
+    debug_assert_eq!(y.len(), d * L, "lane axpy shape mismatch");
+    for j in 0..d {
+        let b = j * L;
+        for l in 0..L {
+            y[b + l] += a[l] * x[b + l] as f64;
+        }
+    }
+}
+
+/// Dense lane-striped weight update
+/// `w[j·L + l] = w[j·L + l] · shrink[l] − coeff[l] · x[j·L + l]` —
+/// the element-wise second half of both models' fused SGD step.
+/// Neutral lanes pass `coeff = 0.0`, `shrink = 1.0` (with zero-filled
+/// `x` columns) and keep their weights bit-for-bit.
+#[inline]
+pub fn lane_update<const L: usize>(
+    w: &mut [f64],
+    x: &[f32],
+    d: usize,
+    coeff: &[f64; L],
+    shrink: &[f64; L],
+) {
+    debug_assert_eq!(w.len(), d * L, "lane update shape mismatch");
+    debug_assert_eq!(x.len(), d * L, "lane update shape mismatch");
+    for j in 0..d {
+        let b = j * L;
+        for l in 0..L {
+            w[b + l] = w[b + l] * shrink[l] - coeff[l] * x[b + l] as f64;
+        }
+    }
+}
+
+/// Fused lane-batched ridge SGD step, matching
+/// `RidgeModel::sgd_step` per lane bit-for-bit: sequential dot on the
+/// fixed `d == 8` path, [`lane_dot`] association otherwise, then
+/// `w ← w·(1 − α·reg2) − 2α(z − y)·x` on active lanes.
+pub fn lane_ridge_step<const L: usize>(
+    w: &mut [f64],
+    x: &[f32],
+    y: &[f64; L],
+    active: &[bool; L],
+    d: usize,
+    alpha: f64,
+    reg2: f64,
+) {
+    let mut z = [0.0f64; L];
+    if d == 8 {
+        lane_dot_seq::<L>(w, x, d, &mut z);
+    } else {
+        lane_dot::<L>(w, x, d, &mut z);
+    }
+    let shrink_on = 1.0 - alpha * reg2;
+    let mut coeff = [0.0f64; L];
+    let mut shrink = [1.0f64; L];
+    for l in 0..L {
+        if active[l] {
+            coeff[l] = 2.0 * alpha * (z[l] - y[l]);
+            shrink[l] = shrink_on;
+        }
+    }
+    lane_update::<L>(w, x, d, &coeff, &shrink);
+}
+
+/// Fused lane-batched logistic SGD step, matching
+/// `LogisticModel::sgd_step` per lane bit-for-bit ([`lane_dot`]
+/// association for every `d`, then
+/// `w ← w·(1 − α·reg2) − α(σ(z) − y)·x` on active lanes).
+pub fn lane_logistic_step<const L: usize>(
+    w: &mut [f64],
+    x: &[f32],
+    y: &[f64; L],
+    active: &[bool; L],
+    d: usize,
+    alpha: f64,
+    reg2: f64,
+) {
+    let mut z = [0.0f64; L];
+    lane_dot::<L>(w, x, d, &mut z);
+    let shrink_on = 1.0 - alpha * reg2;
+    let mut coeff = [0.0f64; L];
+    let mut shrink = [1.0f64; L];
+    for l in 0..L {
+        if active[l] {
+            coeff[l] = alpha * (sigmoid(z[l]) - y[l]);
+            shrink[l] = shrink_on;
+        }
+    }
+    lane_update::<L>(w, x, d, &coeff, &shrink);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::kernels::{axpy_f32_f64, dot_f32_f64};
+    use crate::model::{LogisticModel, PointModel, RidgeModel};
+    use crate::util::rng::Pcg32;
+
+    const DIMS: &[usize] = &[1, 3, 7, 8, 9, 33];
+
+    /// Pack per-lane AoS rows into the SoA layout (`soa[j·L + l]`).
+    fn pack_f64<const L: usize>(cols: &[Vec<f64>], d: usize) -> Vec<f64> {
+        let mut soa = vec![0.0f64; d * L];
+        for (l, col) in cols.iter().enumerate() {
+            for j in 0..d {
+                soa[j * L + l] = col[j];
+            }
+        }
+        soa
+    }
+
+    fn pack_f32<const L: usize>(cols: &[Vec<f32>], d: usize) -> Vec<f32> {
+        let mut soa = vec![0.0f32; d * L];
+        for (l, col) in cols.iter().enumerate() {
+            for j in 0..d {
+                soa[j * L + l] = col[j];
+            }
+        }
+        soa
+    }
+
+    fn unpack_col<const L: usize>(soa: &[f64], d: usize, l: usize) -> Vec<f64> {
+        (0..d).map(|j| soa[j * L + l]).collect()
+    }
+
+    fn lane_case<const L: usize>(
+        d: usize,
+        seed: u64,
+    ) -> (Vec<Vec<f64>>, Vec<Vec<f32>>, Vec<f64>) {
+        let mut rng = Pcg32::seeded(seed);
+        let ws: Vec<Vec<f64>> = (0..L)
+            .map(|_| (0..d).map(|_| rng.next_gaussian()).collect())
+            .collect();
+        let xs: Vec<Vec<f32>> = (0..L)
+            .map(|_| (0..d).map(|_| rng.next_gaussian() as f32).collect())
+            .collect();
+        let ys: Vec<f64> =
+            (0..L).map(|_| rng.next_gaussian() as f32 as f64).collect();
+        (ws, xs, ys)
+    }
+
+    /// Assert two f64 slices are bit-identical (NaN-safe).
+    fn assert_bits(a: &[f64], b: &[f64], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (va, vb)) in a.iter().zip(b).enumerate() {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "{what}: bit mismatch at {i}: {va} vs {vb}"
+            );
+        }
+    }
+
+    fn dot_parity_case<const L: usize>(d: usize, seed: u64) {
+        let (ws, xs, _) = lane_case::<L>(d, seed);
+        let w_soa = pack_f64::<L>(&ws, d);
+        let x_soa = pack_f32::<L>(&xs, d);
+        let mut got = [0.0f64; L];
+        lane_dot::<L>(&w_soa, &x_soa, d, &mut got);
+        for l in 0..L {
+            let want = dot_f32_f64(&ws[l], &xs[l]);
+            assert_eq!(
+                got[l].to_bits(),
+                want.to_bits(),
+                "lane_dot L={L} d={d} lane {l}: {} vs {want}",
+                got[l]
+            );
+        }
+        // sequential variant vs a plain sequential scalar loop
+        let mut got_seq = [0.0f64; L];
+        lane_dot_seq::<L>(&w_soa, &x_soa, d, &mut got_seq);
+        for l in 0..L {
+            let mut want = 0.0f64;
+            for j in 0..d {
+                want += ws[l][j] * xs[l][j] as f64;
+            }
+            assert_eq!(
+                got_seq[l].to_bits(),
+                want.to_bits(),
+                "lane_dot_seq L={L} d={d} lane {l}"
+            );
+        }
+    }
+
+    #[test]
+    fn lane_dot_matches_scalar_bitwise_on_all_dims_and_widths() {
+        for &d in DIMS {
+            dot_parity_case::<4>(d, 10 + d as u64);
+            dot_parity_case::<8>(d, 20 + d as u64);
+            dot_parity_case::<16>(d, 30 + d as u64);
+        }
+    }
+
+    fn axpy_parity_case<const L: usize>(d: usize, seed: u64) {
+        let (ws, xs, ys) = lane_case::<L>(d, seed);
+        let mut soa = pack_f64::<L>(&ws, d);
+        let x_soa = pack_f32::<L>(&xs, d);
+        let mut a = [0.0f64; L];
+        for l in 0..L {
+            a[l] = ys[l];
+        }
+        lane_axpy::<L>(&a, &x_soa, &mut soa, d);
+        for l in 0..L {
+            let mut want = ws[l].clone();
+            axpy_f32_f64(a[l], &xs[l], &mut want);
+            assert_bits(
+                &unpack_col::<L>(&soa, d, l),
+                &want,
+                &format!("lane_axpy L={L} d={d} lane {l}"),
+            );
+        }
+    }
+
+    #[test]
+    fn lane_axpy_matches_scalar_bitwise() {
+        for &d in DIMS {
+            axpy_parity_case::<4>(d, 40 + d as u64);
+            axpy_parity_case::<8>(d, 50 + d as u64);
+            axpy_parity_case::<16>(d, 60 + d as u64);
+        }
+    }
+
+    /// Run `steps` fused lane steps against the real scalar models with
+    /// the given active mask; inactive lanes get zero-filled covariate
+    /// columns (as the batch runner gathers them) and must keep their
+    /// weights bit-for-bit.
+    fn step_parity_case<const L: usize>(
+        d: usize,
+        steps: usize,
+        active: [bool; L],
+        logistic: bool,
+        seed: u64,
+    ) {
+        let alpha = 1e-2;
+        let lambda = 0.05;
+        let n_full = 100;
+        let ridge = RidgeModel::new(d, lambda, n_full);
+        let logit = LogisticModel::new(d, lambda, n_full);
+        let reg2 = 2.0 * lambda / n_full as f64;
+
+        let (ws, _, _) = lane_case::<L>(d, seed);
+        let mut soa = pack_f64::<L>(&ws, d);
+        let mut scalar_w = ws.clone();
+        let mut rng = Pcg32::seeded(seed ^ 0xbeef);
+        for step in 0..steps {
+            // fresh per-lane samples each step
+            let mut xs: Vec<Vec<f32>> = Vec::new();
+            let mut y = [0.0f64; L];
+            let mut y32 = [0.0f32; L];
+            for l in 0..L {
+                let row: Vec<f32> = (0..d)
+                    .map(|_| rng.next_gaussian() as f32)
+                    .collect();
+                y32[l] = if logistic {
+                    ((l + step) % 2) as f32
+                } else {
+                    rng.next_gaussian() as f32
+                };
+                xs.push(row);
+            }
+            // inactive lanes gather zeros, like the batch runner
+            for l in 0..L {
+                if active[l] {
+                    y[l] = y32[l] as f64;
+                } else {
+                    xs[l].iter_mut().for_each(|v| *v = 0.0);
+                }
+            }
+            let x_soa = pack_f32::<L>(&xs, d);
+            if logistic {
+                lane_logistic_step::<L>(
+                    &mut soa, &x_soa, &y, &active, d, alpha, reg2,
+                );
+            } else {
+                lane_ridge_step::<L>(
+                    &mut soa, &x_soa, &y, &active, d, alpha, reg2,
+                );
+            }
+            for l in 0..L {
+                if !active[l] {
+                    continue;
+                }
+                if logistic {
+                    logit.sgd_step(&mut scalar_w[l], &xs[l], y32[l], alpha);
+                } else {
+                    ridge.sgd_step(&mut scalar_w[l], &xs[l], y32[l], alpha);
+                }
+            }
+        }
+        let kind = if logistic { "logistic" } else { "ridge" };
+        for l in 0..L {
+            assert_bits(
+                &unpack_col::<L>(&soa, d, l),
+                &scalar_w[l],
+                &format!("{kind} step L={L} d={d} lane {l} active={}", active[l]),
+            );
+        }
+    }
+
+    #[test]
+    fn fused_steps_match_scalar_models_bitwise() {
+        for &d in DIMS {
+            for logistic in [false, true] {
+                step_parity_case::<4>(d, 5, [true; 4], logistic, 70 + d as u64);
+                step_parity_case::<8>(d, 5, [true; 8], logistic, 80 + d as u64);
+                step_parity_case::<16>(
+                    d,
+                    3,
+                    [true; 16],
+                    logistic,
+                    90 + d as u64,
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_masks_with_holes_leave_inactive_lanes_untouched() {
+        // masks with interior holes, a dead tail, and a single survivor
+        let mut hole8 = [true; 8];
+        hole8[1] = false;
+        hole8[5] = false;
+        let mut tail8 = [false; 8];
+        tail8[..3].iter_mut().for_each(|v| *v = true);
+        let mut solo8 = [false; 8];
+        solo8[6] = true;
+        for mask in [hole8, tail8, solo8] {
+            for logistic in [false, true] {
+                step_parity_case::<8>(8, 4, mask, logistic, 0xa11);
+                step_parity_case::<8>(9, 4, mask, logistic, 0xa12);
+            }
+        }
+        let mut hole4 = [true; 4];
+        hole4[2] = false;
+        step_parity_case::<4>(3, 4, hole4, false, 0xa13);
+        let mut hole16 = [true; 16];
+        hole16[0] = false;
+        hole16[9] = false;
+        hole16[15] = false;
+        step_parity_case::<16>(7, 3, hole16, true, 0xa14);
+    }
+
+    #[test]
+    fn all_inactive_step_is_a_bitwise_noop() {
+        step_parity_case::<4>(8, 3, [false; 4], false, 0xb01);
+        step_parity_case::<8>(5, 3, [false; 8], true, 0xb02);
+    }
+
+    #[test]
+    fn empty_inputs_are_noops() {
+        let mut out = [1.0f64; 4];
+        lane_dot::<4>(&[], &[], 0, &mut out);
+        assert_eq!(out, [0.0; 4]);
+        lane_dot_seq::<4>(&[], &[], 0, &mut out);
+        assert_eq!(out, [0.0; 4]);
+        let mut w: Vec<f64> = vec![];
+        lane_axpy::<4>(&[2.0; 4], &[], &mut w, 0);
+        lane_update::<4>(&mut w, &[], 0, &[1.0; 4], &[0.5; 4]);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn poisoned_lane_does_not_contaminate_neighbors() {
+        const L: usize = 8;
+        let d = 8;
+        let alpha = 1e-2;
+        let reg2 = 0.01;
+        let ridge = RidgeModel::new(d, 0.05, 10);
+        let (ws, xs, ys) = lane_case::<L>(d, 0xc0de);
+        let mut soa = pack_f64::<L>(&ws, d);
+        // poison lane 3's weights with NaN and lane 5's sample with Inf
+        for j in 0..d {
+            soa[j * L + 3] = f64::NAN;
+        }
+        let mut xs = xs;
+        xs[5][2] = f32::INFINITY;
+        let x_soa = pack_f32::<L>(&xs, d);
+        let mut y = [0.0f64; L];
+        for l in 0..L {
+            y[l] = ys[l];
+        }
+        lane_ridge_step::<L>(
+            &mut soa, &x_soa, &y, &[true; L], d, alpha, reg2,
+        );
+        for l in 0..L {
+            let col = unpack_col::<L>(&soa, d, l);
+            match l {
+                3 => assert!(
+                    col.iter().all(|v| v.is_nan()),
+                    "poisoned lane lost its NaN"
+                ),
+                5 => assert!(
+                    col.iter().any(|v| !v.is_finite()),
+                    "Inf sample must poison its own lane"
+                ),
+                _ => {
+                    // healthy lanes: bit-exact vs the scalar model
+                    // (RidgeModel::new(d, 0.05, 10) has reg2 = 0.01)
+                    let mut want = ws[l].clone();
+                    ridge.sgd_step(&mut want, &xs[l], ys[l] as f32, alpha);
+                    assert_bits(&col, &want, &format!("healthy lane {l}"));
+                }
+            }
+        }
+        // an inactive NaN lane is preserved bit-for-bit too
+        let mut soa2 = pack_f64::<L>(&ws, d);
+        for j in 0..d {
+            soa2[j * L] = f64::NAN;
+        }
+        let before = unpack_col::<L>(&soa2, d, 0);
+        let mut mask = [true; L];
+        mask[0] = false;
+        let mut xs0 = xs.clone();
+        xs0[0].iter_mut().for_each(|v| *v = 0.0);
+        let x_soa0 = pack_f32::<L>(&xs0, d);
+        lane_ridge_step::<L>(
+            &mut soa2, &x_soa0, &y, &mask, d, alpha, reg2,
+        );
+        let after = unpack_col::<L>(&soa2, d, 0);
+        for (a, b) in before.iter().zip(&after) {
+            assert!(a.is_nan() && b.is_nan(), "inactive NaN lane changed");
+        }
+    }
+
+    #[test]
+    fn snap_lanes_covers_the_supported_widths() {
+        assert_eq!(snap_lanes(0), 1);
+        assert_eq!(snap_lanes(1), 1);
+        assert_eq!(snap_lanes(2), 4);
+        assert_eq!(snap_lanes(4), 4);
+        assert_eq!(snap_lanes(5), 4);
+        assert_eq!(snap_lanes(6), 8);
+        assert_eq!(snap_lanes(8), 8);
+        assert_eq!(snap_lanes(11), 8);
+        assert_eq!(snap_lanes(12), 16);
+        assert_eq!(snap_lanes(64), 16);
+        for w in LANE_WIDTHS {
+            assert_eq!(snap_lanes(w), w);
+        }
+    }
+}

@@ -13,59 +13,81 @@
 //!   ([`batch_ridge_loss`]) used by `Dataset::ridge_loss` — i.e. every
 //!   final-loss evaluation in every sweep,
 //! * `ridge_solution`'s Gram-matrix accumulation ([`axpy_f32_f64`]),
-//! * the native cross-check path in `runtime::loss`.
+//! * the lane-striped batched-seed kernels in [`crate::linalg::batch`],
+//!   which reuse [`dot_f32_f64`]'s accumulator association per lane.
 //!
 //! Equivalence with the scalar reference on odd dimensions and empty
 //! inputs is unit-tested below (multi-accumulator summation reorders
 //! floating-point adds, so comparisons are to ~1e-12 relative, not
 //! bit-exact; `axpy` is element-wise and exact).
+//!
+//! **The pinned dot association** (relied on by the batched-seed engine
+//! for bit-identical scalar↔lane parity): four independent accumulators
+//! over chunks of 4, a sequential tail, combined as
+//! `(a0 + a1) + (a2 + a3) + tail`. Any change here must update
+//! `linalg/batch.rs` and the ULP note in ARCHITECTURE.md in lockstep.
 
 /// `Σ_j w[j] · x[j]` with the f32 row widened to f64.
 ///
-/// Four independent accumulators over the unrolled body; the tail is
-/// sequential. `w` and `x` must have equal length.
+/// Four independent accumulators (an explicit fixed-width array, so the
+/// compiler sees one vector register) over the unrolled body; the tail
+/// is sequential. The association `(a0 + a1) + (a2 + a3) + tail` is the
+/// pinned rule mirrored per-lane by `linalg/batch.rs` — identical to
+/// the named-variable form this replaced, bit for bit. `w` and `x` must
+/// have equal length.
 #[inline]
 pub fn dot_f32_f64(w: &[f64], x: &[f32]) -> f64 {
     debug_assert_eq!(w.len(), x.len(), "dot length mismatch");
     let n = w.len();
     let chunks = n / 4;
-    let mut a0 = 0.0f64;
-    let mut a1 = 0.0f64;
-    let mut a2 = 0.0f64;
-    let mut a3 = 0.0f64;
+    let mut acc = [0.0f64; 4];
     for c in 0..chunks {
         let b = c * 4;
-        a0 += w[b] * x[b] as f64;
-        a1 += w[b + 1] * x[b + 1] as f64;
-        a2 += w[b + 2] * x[b + 2] as f64;
-        a3 += w[b + 3] * x[b + 3] as f64;
+        let w4: &[f64; 4] = w[b..b + 4].try_into().unwrap();
+        let x4: &[f32; 4] = x[b..b + 4].try_into().unwrap();
+        for k in 0..4 {
+            acc[k] += w4[k] * x4[k] as f64;
+        }
     }
     let mut tail = 0.0f64;
     for j in chunks * 4..n {
         tail += w[j] * x[j] as f64;
     }
-    (a0 + a1) + (a2 + a3) + tail
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
 }
 
 /// `y[j] += a · x[j]` with the f32 `x` widened to f64.
 ///
 /// Element-wise (no reassociation): results are bit-identical to the
-/// scalar loop. `x` and `y` must have equal length.
+/// scalar loop regardless of the 8-wide chunking, which only exists so
+/// the body is a fixed-size loop the autovectorizer unrolls whole.
+/// `x` and `y` must have equal length.
 #[inline]
 pub fn axpy_f32_f64(a: f64, x: &[f32], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len(), "axpy length mismatch");
-    for (yj, &xj) in y.iter_mut().zip(x) {
-        *yj += a * xj as f64;
+    let n = y.len();
+    let chunks = n / 8;
+    for c in 0..chunks {
+        let b = c * 8;
+        let y8: &mut [f64; 8] = (&mut y[b..b + 8]).try_into().unwrap();
+        let x8: &[f32; 8] = x[b..b + 8].try_into().unwrap();
+        for k in 0..8 {
+            y8[k] += a * x8[k] as f64;
+        }
+    }
+    for j in chunks * 8..n {
+        y[j] += a * x[j] as f64;
     }
 }
 
 /// Sum of squared prediction errors `Σ_i (w·x_i − y_i)²` over a flat
 /// row-major batch (`x.len() == y.len() · d`).
 ///
-/// Rows are processed four at a time into independent accumulators —
-/// the batched store-wide evaluator behind every final-loss computation.
-/// The `d == 8` paper workload takes a fixed-size inner path the
-/// compiler fully vectorizes.
+/// Rows are processed in groups into independent accumulators — the
+/// batched store-wide evaluator behind every final-loss computation.
+/// The `d == 8` paper workload takes a fixed-size inner path with
+/// eight rows in flight (an 8×8 tile the compiler fully vectorizes);
+/// general `d` keeps four rows of [`dot_f32_f64`] chains in flight.
 pub fn batch_sq_err(x: &[f32], y: &[f32], d: usize, w: &[f64]) -> f64 {
     debug_assert_eq!(x.len(), y.len() * d, "batch shape mismatch");
     debug_assert_eq!(w.len(), d, "weight dimension mismatch");
@@ -75,12 +97,12 @@ pub fn batch_sq_err(x: &[f32], y: &[f32], d: usize, w: &[f64]) -> f64 {
     }
     if d == 8 {
         let w8 = <&[f64; 8]>::try_from(w).unwrap();
-        let mut acc = [0.0f64; 4];
+        let mut acc = [0.0f64; 8];
         let mut rows = x.chunks_exact(8);
-        let quads = n / 4;
-        for q in 0..quads {
-            let base = q * 4;
-            for k in 0..4 {
+        let octs = n / 8;
+        for q in 0..octs {
+            let base = q * 8;
+            for k in 0..8 {
                 let r8 =
                     <&[f32; 8]>::try_from(rows.next().unwrap()).unwrap();
                 let mut dot = 0.0f64;
@@ -92,7 +114,7 @@ pub fn batch_sq_err(x: &[f32], y: &[f32], d: usize, w: &[f64]) -> f64 {
             }
         }
         let mut tail = 0.0f64;
-        for (row, &yi) in rows.by_ref().zip(&y[quads * 4..]) {
+        for (row, &yi) in rows.by_ref().zip(&y[octs * 8..]) {
             let r8 = <&[f32; 8]>::try_from(row).unwrap();
             let mut dot = 0.0f64;
             for j in 0..8 {
@@ -101,7 +123,9 @@ pub fn batch_sq_err(x: &[f32], y: &[f32], d: usize, w: &[f64]) -> f64 {
             let e = dot - yi as f64;
             tail += e * e;
         }
-        return (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail;
+        return ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+            + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+            + tail;
     }
     let mut acc = [0.0f64; 4];
     let quads = n / 4;

@@ -5,16 +5,23 @@
 //! Used to (i) synthesize datasets whose Gramian spectrum matches the
 //! paper's constants `L = 1.908`, `c = 0.061` exactly, (ii) estimate
 //! `(L, c)` from arbitrary data, (iii) compute the exact ridge
-//! solution `w*` needed for optimality-gap curves, and (iv) evaluate
+//! solution `w*` needed for optimality-gap curves, (iv) evaluate
 //! dot products / axpy updates / batched losses with multi-accumulator
-//! instruction-level parallelism ([`kernels`]).
+//! instruction-level parallelism ([`kernels`]), and (v) run the
+//! lane-striped SoA kernels behind the batched-seed Monte-Carlo engine
+//! ([`batch`]).
 
+pub mod batch;
 pub mod gram;
 pub mod kernels;
 pub mod matrix;
 pub mod solve;
 pub mod sym_eig;
 
+pub use batch::{
+    lane_axpy, lane_dot, lane_dot_seq, lane_logistic_step, lane_ridge_step,
+    lane_update, snap_lanes, LANE_WIDTHS, MAX_LANES,
+};
 pub use gram::gram_matrix;
 pub use kernels::{
     axpy_f32_f64, batch_logistic_loss, batch_ridge_loss, batch_sq_err,

@@ -1,0 +1,252 @@
+//! [`LaneModel`]: SoA weight state for the batched-seed engine.
+//!
+//! Wraps the scalar point models ([`RidgeModel`](super::RidgeModel),
+//! [`LogisticModel`](super::LogisticModel)) with a lane-striped weight
+//! vector (`w[j * width + l]`, see `linalg/batch.rs` for the layout and
+//! the bit-exactness contract) and dispatches each fused SGD step to
+//! the monomorphized lane kernel for the configured width. Model
+//! constants follow the scalar constructors exactly: `reg = λ/N` over
+//! the FULL training-set size, `reg2 = 2·reg`.
+
+use crate::linalg::batch::{
+    lane_logistic_step, lane_ridge_step, LANE_WIDTHS, MAX_LANES,
+};
+
+use super::Workload;
+
+/// SoA weights for up to [`MAX_LANES`] seed-lanes of one scenario point.
+#[derive(Clone, Debug)]
+pub struct LaneModel {
+    workload: Workload,
+    d: usize,
+    width: usize,
+    reg2: f64,
+    /// Lane-striped weights, `d * width` long, `w[j * width + l]`.
+    w: Vec<f64>,
+}
+
+impl LaneModel {
+    /// Build for feature dimension `d`, lane width `width` (one of
+    /// [`LANE_WIDTHS`]), regularization `lambda`, and full dataset size
+    /// `n_full` — the same `(λ, N)` convention as the scalar models.
+    pub fn new(
+        workload: Workload,
+        d: usize,
+        width: usize,
+        lambda: f64,
+        n_full: usize,
+    ) -> LaneModel {
+        let mut m = LaneModel {
+            workload,
+            d,
+            width,
+            reg2: 0.0,
+            w: Vec::new(),
+        };
+        m.reset(workload, d, width, lambda, n_full);
+        m
+    }
+
+    /// Re-initialize in place (weights zeroed, buffer reused) — the
+    /// workspace-recycling entry point.
+    pub fn reset(
+        &mut self,
+        workload: Workload,
+        d: usize,
+        width: usize,
+        lambda: f64,
+        n_full: usize,
+    ) {
+        assert!(
+            LANE_WIDTHS.contains(&width),
+            "unsupported lane width {width} (expected one of {LANE_WIDTHS:?})"
+        );
+        self.workload = workload;
+        self.d = d;
+        self.width = width;
+        self.reg2 = 2.0 * lambda / n_full as f64;
+        self.w.clear();
+        self.w.resize(d * width, 0.0);
+    }
+
+    /// Lane width this model was monomorphized for.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Feature dimension.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Copy a scalar weight vector into lane `l`'s column.
+    pub fn load_column(&mut self, l: usize, w: &[f64]) {
+        debug_assert!(l < self.width, "lane out of range");
+        debug_assert_eq!(w.len(), self.d, "weight dimension mismatch");
+        for j in 0..self.d {
+            self.w[j * self.width + l] = w[j];
+        }
+    }
+
+    /// Copy lane `l`'s column out into a scalar weight vector.
+    pub fn extract_column_into(&self, l: usize, out: &mut [f64]) {
+        debug_assert!(l < self.width, "lane out of range");
+        debug_assert_eq!(out.len(), self.d, "weight dimension mismatch");
+        for j in 0..self.d {
+            out[j] = self.w[j * self.width + l];
+        }
+    }
+
+    /// One fused SGD step over all lanes. `x_soa` is the gathered
+    /// lane-striped sample block (`d * width`, zero-filled in inactive
+    /// columns), `y`/`active` are indexed by lane (entries past
+    /// `width` are ignored). Active lanes take exactly the scalar
+    /// model's update; inactive lanes keep their weights bit-for-bit.
+    pub fn step(
+        &mut self,
+        x_soa: &[f32],
+        y: &[f64; MAX_LANES],
+        active: &[bool; MAX_LANES],
+        alpha: f64,
+    ) {
+        debug_assert_eq!(x_soa.len(), self.d * self.width);
+        match self.width {
+            4 => self.step_w::<4>(x_soa, y, active, alpha),
+            8 => self.step_w::<8>(x_soa, y, active, alpha),
+            16 => self.step_w::<16>(x_soa, y, active, alpha),
+            w => unreachable!("unsupported lane width {w}"),
+        }
+    }
+
+    fn step_w<const L: usize>(
+        &mut self,
+        x_soa: &[f32],
+        y: &[f64; MAX_LANES],
+        active: &[bool; MAX_LANES],
+        alpha: f64,
+    ) {
+        let y_l: &[f64; L] = y[..L].try_into().unwrap();
+        let active_l: &[bool; L] = active[..L].try_into().unwrap();
+        match self.workload {
+            Workload::Ridge => lane_ridge_step::<L>(
+                &mut self.w,
+                x_soa,
+                y_l,
+                active_l,
+                self.d,
+                alpha,
+                self.reg2,
+            ),
+            Workload::Logistic => lane_logistic_step::<L>(
+                &mut self.w,
+                x_soa,
+                y_l,
+                active_l,
+                self.d,
+                alpha,
+                self.reg2,
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{LogisticModel, PointModel, RidgeModel};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn columns_round_trip() {
+        let mut m = LaneModel::new(Workload::Ridge, 5, 4, 0.05, 10);
+        let col = [1.0, -2.0, 3.0, -4.0, 5.0];
+        m.load_column(2, &col);
+        let mut out = [0.0; 5];
+        m.extract_column_into(2, &mut out);
+        assert_eq!(out, col);
+        // neighbors untouched
+        m.extract_column_into(1, &mut out);
+        assert_eq!(out, [0.0; 5]);
+    }
+
+    /// The wrapper must route through the same specialization the
+    /// scalar model picks (ridge d == 8 sequential dot vs general
+    /// 4-chunk dot), so trajectories stay bit-identical per lane.
+    #[test]
+    fn lane_trajectories_match_scalar_models_bitwise() {
+        for (workload, d) in [
+            (Workload::Ridge, 8),
+            (Workload::Ridge, 7),
+            (Workload::Logistic, 8),
+            (Workload::Logistic, 5),
+        ] {
+            let (lambda, n_full, alpha, width) = (0.05, 50, 1e-2, 8usize);
+            let mut lane = LaneModel::new(workload, d, width, lambda, n_full);
+            let ridge = RidgeModel::new(d, lambda, n_full);
+            let logit = LogisticModel::new(d, lambda, n_full);
+            let mut rng = Pcg32::seeded(42 + d as u64);
+            let mut scalar_w: Vec<Vec<f64>> = (0..width)
+                .map(|_| (0..d).map(|_| rng.next_gaussian()).collect())
+                .collect();
+            for (l, col) in scalar_w.iter().enumerate() {
+                lane.load_column(l, col);
+            }
+            let mut y = [0.0f64; MAX_LANES];
+            let mut active = [false; MAX_LANES];
+            active[..width].iter_mut().for_each(|a| *a = true);
+            let mut x_soa = vec![0.0f32; d * width];
+            for step in 0..6 {
+                let mut rows: Vec<Vec<f32>> = Vec::new();
+                for l in 0..width {
+                    let row: Vec<f32> = (0..d)
+                        .map(|_| rng.next_gaussian() as f32)
+                        .collect();
+                    let label = match workload {
+                        Workload::Ridge => rng.next_gaussian() as f32,
+                        Workload::Logistic => ((l + step) % 2) as f32,
+                    };
+                    y[l] = label as f64;
+                    for j in 0..d {
+                        x_soa[j * width + l] = row[j];
+                    }
+                    rows.push(row);
+                }
+                lane.step(&x_soa, &y, &active, alpha);
+                for l in 0..width {
+                    let yl = y[l] as f32;
+                    match workload {
+                        Workload::Ridge => ridge.sgd_step(
+                            &mut scalar_w[l],
+                            &rows[l],
+                            yl,
+                            alpha,
+                        ),
+                        Workload::Logistic => logit.sgd_step(
+                            &mut scalar_w[l],
+                            &rows[l],
+                            yl,
+                            alpha,
+                        ),
+                    }
+                }
+            }
+            let mut col = vec![0.0f64; d];
+            for l in 0..width {
+                lane.extract_column_into(l, &mut col);
+                for j in 0..d {
+                    assert_eq!(
+                        col[j].to_bits(),
+                        scalar_w[l][j].to_bits(),
+                        "{workload:?} d={d} lane {l} coord {j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unsupported lane width")]
+    fn rejects_unsupported_widths() {
+        LaneModel::new(Workload::Ridge, 4, 5, 0.05, 10);
+    }
+}

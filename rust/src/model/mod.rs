@@ -3,10 +3,12 @@
 //! generic over, and the [`Workload`] selector the scenario layer uses to
 //! pick between them.
 
+pub mod lane;
 pub mod logistic;
 pub mod ridge;
 pub mod traits;
 
+pub use lane::LaneModel;
 pub use logistic::LogisticModel;
 pub use ridge::{ridge_solution, RidgeModel};
 pub use traits::PointModel;

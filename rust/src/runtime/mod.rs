@@ -1,28 +1,18 @@
-//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//! Build-artifact manifest support for the JAX/Pallas build-time layer.
 //!
 //! `make artifacts` (build time, Python) lowers each Layer-2 entry point
 //! to HLO **text** plus a `manifest.json` describing shapes; this module
-//! is the request-path half: it compiles the text on the PJRT CPU client
-//! once and executes it from the coordinator's hot loop. Python never
-//! runs here.
+//! parses and locates those artifacts so Rust-side tooling can validate
+//! what the build produced. Python never runs here, and nothing on the
+//! request path depends on the artifacts — the crate's only executors
+//! are the native engine and the batched-seed sweep engine
+//! (`sweep/batch.rs`).
 //!
 //! * [`manifest`] — parse + validate `artifacts/manifest.json`
-//! * [`session`]  — PJRT client + compiled-executable cache
-//! * [`executor`] — [`PjrtExecutor`], the `BlockExecutor` backend running
-//!   the `sgd_block` Pallas kernel
-//! * [`loss`]     — full-dataset loss/gradient evaluation via artifacts
-//! * [`mlp`]      — the MLP training step used by the extension example
 
-pub mod executor;
-pub mod loss;
 pub mod manifest;
-pub mod mlp;
-pub mod session;
 
-pub use executor::PjrtExecutor;
-pub use loss::PjrtLossEvaluator;
 pub use manifest::{ArtifactMeta, Manifest, TensorMeta};
-pub use session::RuntimeSession;
 
 /// Default artifact directory, relative to the repo root.
 pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

@@ -72,8 +72,8 @@ impl SgdEngine {
     }
 
     /// Like [`run_updates`](Self::run_updates) but records the chosen
-    /// sample indices (used by the PJRT parity test: the same index
-    /// sequence must produce the same trajectory on both backends).
+    /// sample indices (used by parity tests: the same index sequence
+    /// must produce the same trajectory on every execution path).
     pub fn run_updates_traced<M: PointModel>(
         &self,
         model: &M,

@@ -1,9 +1,10 @@
 //! Native SGD engine: the f64 oracle / fast-sweep backend.
 //!
-//! The PJRT path ([`crate::runtime`]) is the "production" executor; this
-//! native engine exists to (i) cross-validate the artifacts bit-for-bit at
-//! f32 tolerance, and (ii) run the wide Monte-Carlo sweeps behind Fig. 3/4
-//! at tens of millions of updates per second.
+//! The arithmetic oracle for every other execution path: the threaded
+//! pipeline, the golden traces, and the batched-seed sweep engine
+//! (`sweep/batch.rs`) all cross-validate against it bit-for-bit. Runs
+//! the wide Monte-Carlo sweeps behind Fig. 3/4 at tens of millions of
+//! updates per second.
 
 pub mod engine;
 

@@ -1,0 +1,443 @@
+//! The batched-seed Monte-Carlo engine: L seed-lanes of one scenario
+//! point through one SoA weight state.
+//!
+//! # Why this is possible
+//!
+//! In sweep mode (`loss_every == 0`, no block-boundary curve, no
+//! snapshots) the DES trajectory is independent of the weights: every
+//! RNG stream (init, device, channel, edge sampling, eviction) is
+//! seeded from the config alone, policies decide from channel outcomes
+//! and time, and loss recording — the only consumer of `w` mid-run —
+//! is pure. So the engine runs each lane's full DES once with a
+//! [`TraceExecutor`](crate::coordinator::executor::TraceExecutor) that
+//! records the flushed SGD index stream instead of executing it (the
+//! *trace pass*), then replays all lanes' tapes lane-batched through a
+//! [`LaneModel`] under an active-lane mask (the *replay pass*).
+//! Timelines diverge per seed — lanes simply exhaust their tapes at
+//! different steps — and when fewer than `max(2, width/4)` lanes remain
+//! active the survivors *drain* through the scalar
+//! [`SgdEngine`](crate::sgd::SgdEngine) with the real point model.
+//!
+//! # Bit-exactness
+//!
+//! Replay against the lane's **final** store is sound because the
+//! unbounded store only appends (`X̃_{b+1} = X̃_b ∪ X_b`): row `i`'s
+//! bytes never change after ingest, so an index drawn mid-run reads
+//! identical bytes at replay time. A bounded (reservoir) store
+//! overwrites rows, so those scenarios — and any config that records
+//! curves or snapshots — take the scalar path ([`batchable`]). The
+//! lane kernels preserve each lane's arithmetic order exactly
+//! (`linalg/batch.rs`), the drain IS the scalar engine, and the
+//! per-lane final loss is recomputed with the same
+//! `Workload::full_loss` call the trainer uses — so every lane's final
+//! loss is **bit-identical** to the scalar engine's (0 ULP; asserted
+//! in `rust/tests/batch_parity.rs`).
+//!
+//! # Knob
+//!
+//! `EDGEPIPE_LANES` picks the lane count for MC fan-outs (default 8,
+//! snapped to {1, 4, 8, 16}; `0`/`1` disable batching). The `_lanes`
+//! function variants take the count explicitly so parallel tests never
+//! race on process-global env.
+
+use anyhow::Result;
+
+use crate::coordinator::des::DesConfig;
+use crate::coordinator::scheduler::{RunStats, RunWorkspace};
+use crate::linalg::batch::MAX_LANES;
+use crate::model::{LaneModel, LogisticModel, RidgeModel, Workload};
+use crate::sgd::SgdEngine;
+use crate::sweep::scenario::ScenarioRunner;
+use crate::util::pool::parallel_map_with;
+
+/// Environment knob selecting the Monte-Carlo lane count.
+pub const LANES_ENV: &str = "EDGEPIPE_LANES";
+
+/// The lane count MC fan-outs use: `EDGEPIPE_LANES` snapped to a
+/// supported width ({1, 4, 8, 16}), defaulting to 8 — batching is ON by
+/// default for sweeps.
+pub fn batch_lanes() -> usize {
+    let requested = std::env::var(LANES_ENV)
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(8);
+    crate::linalg::batch::snap_lanes(requested)
+}
+
+/// Whether a run config (after the spec's overrides,
+/// `ScenarioRunner::effective_cfg`) is eligible for traced replay:
+/// sweep mode only — curves and snapshots need the scalar engine — and
+/// an append-only store (a bounded reservoir overwrites rows, which
+/// would break tape replay against the final store).
+pub fn batchable(cfg: &DesConfig) -> bool {
+    cfg.loss_every == 0
+        && !cfg.record_blocks
+        && !cfg.collect_snapshots
+        && cfg.store_capacity.is_none()
+}
+
+/// Per-lane result of a batched group: what the MC estimators and the
+/// bench need from [`RunStats`], without the heap outputs.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneOutcome {
+    pub final_loss: f64,
+    pub updates: usize,
+}
+
+impl LaneOutcome {
+    const EMPTY: LaneOutcome = LaneOutcome { final_loss: f64::NAN, updates: 0 };
+}
+
+/// One lane's recyclable state: a full DES workspace plus its index
+/// tape.
+#[derive(Default)]
+struct LaneSlot {
+    ws: RunWorkspace,
+    tape: Vec<u32>,
+}
+
+/// Every reusable buffer a batched seed-group needs — the batched
+/// counterpart of [`RunWorkspace`], recycled per worker thread across
+/// groups exactly like scalar sweeps recycle their workspaces.
+#[derive(Default)]
+pub struct BatchWorkspace {
+    lanes: Vec<LaneSlot>,
+    model: Option<LaneModel>,
+    /// Gathered lane-striped sample block for one replay step.
+    x_soa: Vec<f32>,
+    /// Per-group staged configs (no heap inside `DesConfig`, so refills
+    /// are allocation-free once capacity exists).
+    cfgs: Vec<DesConfig>,
+}
+
+impl BatchWorkspace {
+    pub fn new() -> BatchWorkspace {
+        BatchWorkspace::default()
+    }
+
+    fn ensure_lanes(&mut self, count: usize) {
+        while self.lanes.len() < count {
+            self.lanes.push(LaneSlot::default());
+        }
+    }
+}
+
+/// Smallest supported lane width that fits `count` lanes.
+fn width_for(count: usize) -> usize {
+    match count {
+        0..=4 => 4,
+        5..=8 => 8,
+        _ => 16,
+    }
+}
+
+/// Replay drains to scalar when fewer lanes than this remain active.
+fn drain_threshold(width: usize) -> usize {
+    (width / 4).max(2)
+}
+
+/// Run one seed-group — `count ≤ 16` runs of the SAME scenario point
+/// whose configs differ only in seed — lane-batched. Falls back to
+/// scalar per-lane runs when `count == 1` or the config is not
+/// [`batchable`]; either way the outcomes are bit-identical to
+/// `count` scalar `run_with` calls.
+pub fn run_group(
+    runner: &ScenarioRunner<'_>,
+    bw: &mut BatchWorkspace,
+    count: usize,
+    mut cfg_for: impl FnMut(usize) -> DesConfig,
+) -> Result<[LaneOutcome; MAX_LANES]> {
+    assert!(
+        (1..=MAX_LANES).contains(&count),
+        "group size {count} out of range"
+    );
+    bw.ensure_lanes(count);
+    bw.cfgs.clear();
+    for l in 0..count {
+        bw.cfgs.push(cfg_for(l));
+    }
+    let mut out = [LaneOutcome::EMPTY; MAX_LANES];
+
+    let eff0 = runner.effective_cfg(&bw.cfgs[0]);
+    if count == 1 || !batchable(&eff0) {
+        for l in 0..count {
+            let stats = runner.run_with(&mut bw.lanes[l].ws, &bw.cfgs[l])?;
+            out[l] = LaneOutcome {
+                final_loss: stats.final_loss,
+                updates: stats.updates,
+            };
+        }
+        return Ok(out);
+    }
+
+    // --- trace pass: full DES per lane, recording the index stream ---
+    for l in 0..count {
+        let lane = &mut bw.lanes[l];
+        let stats: RunStats =
+            runner.run_traced(&mut lane.ws, &bw.cfgs[l], &mut lane.tape)?;
+        out[l].updates = stats.updates;
+        debug_assert_eq!(
+            stats.updates,
+            lane.tape.len(),
+            "tape must hold exactly the run's updates"
+        );
+    }
+
+    // --- replay pass: lockstep lane-batched SGD over the tapes ---
+    let ds = runner.data();
+    let d = ds.d;
+    let width = width_for(count);
+    let workload = eff0.workload;
+    let alpha = eff0.alpha;
+    let lambda = eff0.lambda;
+    let mut model = bw.model.take().unwrap_or_else(|| {
+        LaneModel::new(workload, d, width, lambda, ds.n)
+    });
+    model.reset(workload, d, width, lambda, ds.n);
+    for (l, lane) in bw.lanes[..count].iter().enumerate() {
+        // the trace pass leaves w_init untouched in the workspace
+        model.load_column(l, &lane.ws.train.w);
+    }
+    bw.x_soa.clear();
+    bw.x_soa.resize(d * width, 0.0);
+    let mut y = [0.0f64; MAX_LANES];
+    let mut active = [false; MAX_LANES];
+    let drain_below = drain_threshold(width);
+    let mut t = 0usize;
+    loop {
+        let mut n_active = 0usize;
+        for l in 0..count {
+            let a = t < bw.lanes[l].tape.len();
+            active[l] = a;
+            if a {
+                n_active += 1;
+            }
+        }
+        if n_active < drain_below {
+            break;
+        }
+        for l in 0..width {
+            if l < count && active[l] {
+                let lane = &bw.lanes[l];
+                let view = lane.ws.train.store.view();
+                let i = lane.tape[t] as usize;
+                let row = view.row(i);
+                for j in 0..d {
+                    bw.x_soa[j * width + l] = row[j];
+                }
+                y[l] = view.y[i] as f64;
+            } else {
+                // neutral column: preserves the lane's weights exactly
+                for j in 0..d {
+                    bw.x_soa[j * width + l] = 0.0;
+                }
+                y[l] = 0.0;
+            }
+        }
+        model.step(&bw.x_soa, &y, &active, alpha);
+        t += 1;
+    }
+    // write every lane's column back, then drain stragglers scalar
+    for (l, lane) in bw.lanes[..count].iter_mut().enumerate() {
+        model.extract_column_into(l, &mut lane.ws.train.w);
+    }
+    bw.model = Some(model);
+    let engine = SgdEngine::new(alpha);
+    let ridge = RidgeModel::new(d, lambda, ds.n);
+    let logit = LogisticModel::new(d, lambda, ds.n);
+    for lane in bw.lanes[..count].iter_mut() {
+        if t >= lane.tape.len() {
+            continue;
+        }
+        let rest = &lane.tape[t..];
+        let train = &mut lane.ws.train;
+        match workload {
+            Workload::Ridge => engine.run_indices(
+                &ridge,
+                &mut train.w,
+                train.store.view(),
+                rest,
+            ),
+            Workload::Logistic => engine.run_indices(
+                &logit,
+                &mut train.w,
+                train.store.view(),
+                rest,
+            ),
+        }
+    }
+
+    // --- final losses: the same evaluation the trainer performs ---
+    let reg = lambda / ds.n as f64;
+    for (l, lane) in bw.lanes[..count].iter().enumerate() {
+        out[l].final_loss = workload.full_loss(ds, &lane.ws.train.w, reg);
+    }
+    Ok(out)
+}
+
+/// One batched fan-out job: a seed-group of one runner (scenario/grid
+/// point).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct GroupJob {
+    /// Index into the caller's runner table.
+    pub point: usize,
+    /// First seed offset of the group.
+    pub seed0: u64,
+    /// Lanes in this group (`1..=MAX_LANES`).
+    pub len: usize,
+}
+
+/// Chunk `points × seeds` into lane-sized groups, point-major in seed
+/// order — flattening group results in job order reproduces the scalar
+/// fan-out's `(point, seed)` order exactly.
+pub(crate) fn group_jobs(
+    points: usize,
+    seeds: usize,
+    lanes: usize,
+) -> Vec<GroupJob> {
+    let lanes = lanes.clamp(1, MAX_LANES);
+    let mut jobs = Vec::new();
+    for point in 0..points {
+        let mut s = 0usize;
+        while s < seeds {
+            let len = lanes.min(seeds - s);
+            jobs.push(GroupJob { point, seed0: s as u64, len });
+            s += len;
+        }
+    }
+    jobs
+}
+
+/// The grouped Monte-Carlo fan-out shared by every batched estimator:
+/// runs every `(point, seed)` pair of `runners × seeds` through
+/// lane-batched groups and returns final losses flattened point-major
+/// in seed order — element-for-element (and bit-for-bit) what the
+/// scalar fan-out returns.
+pub(crate) fn grouped_losses(
+    runners: &[&ScenarioRunner<'_>],
+    seeds: usize,
+    threads: usize,
+    lanes: usize,
+    cfg_for: impl Fn(usize, u64) -> DesConfig + Sync,
+) -> Vec<f64> {
+    let jobs = group_jobs(runners.len(), seeds, lanes);
+    let groups = parallel_map_with(
+        &jobs,
+        threads,
+        BatchWorkspace::new,
+        |bw, job| {
+            let outs = run_group(runners[job.point], bw, job.len, |l| {
+                cfg_for(job.point, job.seed0 + l as u64)
+            })
+            .expect("scenario run failed");
+            let mut losses = [f64::NAN; MAX_LANES];
+            for l in 0..job.len {
+                losses[l] = outs[l].final_loss;
+            }
+            (losses, job.len)
+        },
+    );
+    let mut flat = Vec::with_capacity(runners.len() * seeds);
+    for (losses, len) in groups {
+        flat.extend_from_slice(&losses[..len]);
+    }
+    flat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{synth_calhousing, SynthSpec};
+    use crate::sweep::scenario::ScenarioSpec;
+
+    #[test]
+    fn batchable_gate() {
+        let sweep = DesConfig {
+            loss_every: 0,
+            record_blocks: false,
+            collect_snapshots: false,
+            ..DesConfig::paper(40, 5.0, 400.0, 7)
+        };
+        assert!(batchable(&sweep));
+        assert!(!batchable(&DesConfig { loss_every: 10, ..sweep.clone() }));
+        assert!(!batchable(&DesConfig { record_blocks: true, ..sweep.clone() }));
+        assert!(!batchable(&DesConfig {
+            collect_snapshots: true,
+            ..sweep.clone()
+        }));
+        assert!(!batchable(&DesConfig {
+            store_capacity: Some(64),
+            ..sweep
+        }));
+    }
+
+    #[test]
+    fn group_jobs_cover_every_pair_in_order() {
+        let jobs = group_jobs(2, 5, 4);
+        let mut pairs = Vec::new();
+        for j in &jobs {
+            assert!(j.len >= 1 && j.len <= 4);
+            for l in 0..j.len {
+                pairs.push((j.point, j.seed0 + l as u64));
+            }
+        }
+        let want: Vec<(usize, u64)> = (0..2)
+            .flat_map(|p| (0..5u64).map(move |s| (p, s)))
+            .collect();
+        assert_eq!(pairs, want, "point-major seed order");
+        // ragged tail: 5 seeds over width 4 → groups of 4 + 1
+        assert_eq!(jobs[0].len, 4);
+        assert_eq!(jobs[1].len, 1);
+    }
+
+    #[test]
+    fn width_and_drain_rules() {
+        assert_eq!(width_for(2), 4);
+        assert_eq!(width_for(4), 4);
+        assert_eq!(width_for(5), 8);
+        assert_eq!(width_for(8), 8);
+        assert_eq!(width_for(9), 16);
+        assert_eq!(width_for(16), 16);
+        assert_eq!(drain_threshold(4), 2);
+        assert_eq!(drain_threshold(8), 2);
+        assert_eq!(drain_threshold(16), 4);
+    }
+
+    /// End-to-end group parity on a small paper scenario: the batched
+    /// group's outcomes must be bit-identical to scalar runs, including
+    /// a ragged group and a reused workspace.
+    #[test]
+    fn run_group_matches_scalar_bitwise() {
+        let ds = synth_calhousing(&SynthSpec { n: 300, ..Default::default() });
+        let base = DesConfig {
+            loss_every: 0,
+            record_blocks: false,
+            collect_snapshots: false,
+            event_capacity: 0,
+            ..DesConfig::paper(30, 5.0, 600.0, 55)
+        };
+        let runner = ScenarioRunner::new(ScenarioSpec::paper(), &ds);
+        let cfg_for = |s: usize| DesConfig {
+            seed: base.seed.wrapping_add(s as u64),
+            ..base.clone()
+        };
+        let mut bw = BatchWorkspace::new();
+        for count in [3usize, 6, 2] {
+            // (6 exercises width 8; the loop reuses the workspace)
+            let outs = run_group(&runner, &mut bw, count, cfg_for).unwrap();
+            for l in 0..count {
+                let mut ws = RunWorkspace::new();
+                let stats = runner.run_with(&mut ws, &cfg_for(l)).unwrap();
+                assert_eq!(
+                    outs[l].final_loss.to_bits(),
+                    stats.final_loss.to_bits(),
+                    "count={count} lane {l} final loss"
+                );
+                assert_eq!(
+                    outs[l].updates, stats.updates,
+                    "count={count} lane {l} updates"
+                );
+            }
+        }
+    }
+}

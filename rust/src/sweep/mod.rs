@@ -4,6 +4,10 @@
 //!   specs with a named registry, all runnable through one scheduler
 //! * [`runner`] — parallel seed×parameter sweeps: the paper scenario
 //!   fast path plus scenario-generic estimators and grid crossings
+//! * [`batch`]  — the batched-seed engine: groups of seeds of one
+//!   scenario point traced once each, then replayed lane-batched
+//!   through SoA SGD kernels (`EDGEPIPE_LANES`), bit-identical to the
+//!   scalar path per seed
 //! * [`control`] — the closed-loop comparison sweep: fixed `ñ_c` vs
 //!   open-loop warmup vs channel-adaptive control across fading
 //!   severities, with deadline-outage rates
@@ -12,18 +16,23 @@
 //!   selected block sizes, the bound optimum ñ_c and the experimental
 //!   optimum n_c*
 
+pub mod batch;
 pub mod control;
 pub mod fig3;
 pub mod fig4;
 pub mod runner;
 pub mod scenario;
 
+pub use batch::{
+    batch_lanes, batchable, run_group, BatchWorkspace, LaneOutcome,
+};
 pub use control::{control_comparison, fading_severities, ControlCompareRow};
 pub use fig3::{fig3_data, Fig3Output};
 pub use fig4::{fig4_data, Fig4Config, Fig4Output};
 pub use runner::{
-    grid_final_losses, mc_final_loss, mc_scenario_loss, scenario_grid,
-    McStats,
+    grid_final_losses, grid_final_losses_lanes, mc_final_loss,
+    mc_final_loss_lanes, mc_scenario_loss, mc_scenario_loss_lanes,
+    scenario_grid, scenario_grid_lanes, McStats,
 };
 pub use scenario::{
     from_name, registry, ChannelSpec, EstimatorSpec, HeteroSpec,

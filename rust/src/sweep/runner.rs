@@ -7,20 +7,22 @@
 //! are the paper scenario special case and keep their exact seed
 //! semantics.
 //!
-//! Hot-path shape: every sweep is ONE flat `(point, seed)` fan-out over
-//! the pool — no pool per grid point — and every worker drives its jobs
-//! through a long-lived [`RunWorkspace`]
-//! (`ScenarioRunner::run_with`), so steady state performs no heap
-//! allocation per run. `rust/benches/bench_sweep.rs` tracks the
-//! resulting runs/sec against the pre-workspace baseline.
+//! Hot-path shape: every sweep is ONE flat fan-out over the pool — no
+//! pool per grid point — chunked into lane-sized seed-groups that the
+//! batched-seed engine ([`crate::sweep::batch`]) traces once each and
+//! replays through SoA SGD kernels, `EDGEPIPE_LANES` wide (default 8;
+//! `1` recovers the scalar path run-for-run). Per-seed losses are
+//! bit-identical either way. Every worker recycles one
+//! [`BatchWorkspace`](crate::sweep::batch::BatchWorkspace) across its
+//! groups, so steady state performs no heap allocation per run.
+//! `rust/benches/bench_sweep.rs` tracks the resulting runs/sec against
+//! both the pre-workspace baseline and the scalar engine.
 
 use crate::coordinator::des::DesConfig;
-use crate::coordinator::scheduler::RunWorkspace;
 use crate::data::Dataset;
+use crate::sweep::batch::{batch_lanes, grouped_losses};
 use crate::sweep::scenario::{ScenarioRunner, ScenarioSpec};
-use crate::util::pool::{
-    default_threads, parallel_map_with, parallel_tasks_with,
-};
+use crate::util::pool::default_threads;
 use crate::util::stats::Welford;
 
 /// Mean/std of a Monte-Carlo estimate.
@@ -57,7 +59,8 @@ fn sweep_cfg(base: &DesConfig, seed_offset: u64) -> DesConfig {
 }
 
 /// Average final training loss of an arbitrary scenario over `seeds`
-/// Monte-Carlo repetitions (parallel across a thread pool).
+/// Monte-Carlo repetitions (parallel across a thread pool, seed-groups
+/// lane-batched per `EDGEPIPE_LANES`).
 pub fn mc_scenario_loss(
     ds: &Dataset,
     base: &DesConfig,
@@ -65,15 +68,26 @@ pub fn mc_scenario_loss(
     seeds: usize,
     threads: usize,
 ) -> McStats {
+    mc_scenario_loss_lanes(ds, base, spec, seeds, threads, batch_lanes())
+}
+
+/// [`mc_scenario_loss`] with an explicit lane count (`1` = scalar
+/// engine). Per-seed losses are bit-identical across lane counts, so
+/// the stats are too; the explicit knob exists for the bench and for
+/// tests that must not race on process-global env.
+pub fn mc_scenario_loss_lanes(
+    ds: &Dataset,
+    base: &DesConfig,
+    spec: &ScenarioSpec,
+    seeds: usize,
+    threads: usize,
+    lanes: usize,
+) -> McStats {
     let threads = if threads == 0 { default_threads() } else { threads };
     let runner = ScenarioRunner::new(spec.clone(), ds);
-    let losses =
-        parallel_tasks_with(seeds, threads, RunWorkspace::new, |ws, s| {
-            runner
-                .run_with(ws, &sweep_cfg(base, s as u64))
-                .expect("scenario run failed")
-                .final_loss
-        });
+    let losses = grouped_losses(&[&runner], seeds, threads, lanes, |_, s| {
+        sweep_cfg(base, s)
+    });
     McStats::of(&losses)
 }
 
@@ -89,6 +103,24 @@ pub fn mc_final_loss(
     mc_scenario_loss(ds, base, &ScenarioSpec::paper(), seeds, threads)
 }
 
+/// [`mc_final_loss`] with an explicit lane count (`1` = scalar engine).
+pub fn mc_final_loss_lanes(
+    ds: &Dataset,
+    base: &DesConfig,
+    seeds: usize,
+    threads: usize,
+    lanes: usize,
+) -> McStats {
+    mc_scenario_loss_lanes(
+        ds,
+        base,
+        &ScenarioSpec::paper(),
+        seeds,
+        threads,
+        lanes,
+    )
+}
+
 /// Cross a list of scenarios in ONE parallel fan-out: every (spec, seed)
 /// pair becomes an independent job, so uneven scenario costs still
 /// balance across the pool. Returns `(label, stats)` rows in spec order.
@@ -99,21 +131,27 @@ pub fn scenario_grid(
     seeds: usize,
     threads: usize,
 ) -> Vec<(String, McStats)> {
+    scenario_grid_lanes(ds, base, specs, seeds, threads, batch_lanes())
+}
+
+/// [`scenario_grid`] with an explicit lane count (`1` = scalar engine).
+pub fn scenario_grid_lanes(
+    ds: &Dataset,
+    base: &DesConfig,
+    specs: &[ScenarioSpec],
+    seeds: usize,
+    threads: usize,
+    lanes: usize,
+) -> Vec<(String, McStats)> {
     let threads = if threads == 0 { default_threads() } else { threads };
     let runners: Vec<ScenarioRunner> = specs
         .iter()
         .map(|spec| ScenarioRunner::new(spec.clone(), ds))
         .collect();
-    let jobs: Vec<(usize, u64)> = (0..specs.len())
-        .flat_map(|i| (0..seeds as u64).map(move |s| (i, s)))
-        .collect();
-    let losses =
-        parallel_map_with(&jobs, threads, RunWorkspace::new, |ws, &(i, s)| {
-            runners[i]
-                .run_with(ws, &sweep_cfg(base, s))
-                .expect("scenario run failed")
-                .final_loss
-        });
+    let refs: Vec<&ScenarioRunner> = runners.iter().collect();
+    let losses = grouped_losses(&refs, seeds, threads, lanes, |_, s| {
+        sweep_cfg(base, s)
+    });
     specs
         .iter()
         .enumerate()
@@ -137,24 +175,26 @@ pub fn grid_final_losses(
     seeds: usize,
     threads: usize,
 ) -> Vec<(usize, McStats)> {
+    grid_final_losses_lanes(ds, base, n_cs, seeds, threads, batch_lanes())
+}
+
+/// [`grid_final_losses`] with an explicit lane count (`1` = scalar
+/// engine).
+pub fn grid_final_losses_lanes(
+    ds: &Dataset,
+    base: &DesConfig,
+    n_cs: &[usize],
+    seeds: usize,
+    threads: usize,
+    lanes: usize,
+) -> Vec<(usize, McStats)> {
     let threads = if threads == 0 { default_threads() } else { threads };
     let runner = ScenarioRunner::new(ScenarioSpec::paper(), ds);
-    let jobs: Vec<(usize, u64)> = n_cs
-        .iter()
-        .flat_map(|&n_c| (0..seeds as u64).map(move |s| (n_c, s)))
-        .collect();
-    let losses = parallel_map_with(
-        &jobs,
-        threads,
-        RunWorkspace::new,
-        |ws, &(n_c, s)| {
-            let cfg = DesConfig { n_c, ..sweep_cfg(base, s) };
-            runner
-                .run_with(ws, &cfg)
-                .expect("scenario run failed")
-                .final_loss
-        },
-    );
+    // one shared runner serves every grid point; configs differ per point
+    let refs: Vec<&ScenarioRunner> = n_cs.iter().map(|_| &runner).collect();
+    let losses = grouped_losses(&refs, seeds, threads, lanes, |point, s| {
+        DesConfig { n_c: n_cs[point], ..sweep_cfg(base, s) }
+    });
     n_cs.iter()
         .enumerate()
         .map(|(i, &n_c)| {
@@ -262,6 +302,36 @@ mod tests {
         assert!(rows[0].1.mean < rows[1].1.mean);
         for (_, stats) in &rows {
             assert!(stats.mean.is_finite() && stats.n == 4);
+        }
+    }
+
+    #[test]
+    fn lane_counts_do_not_change_results() {
+        // the batched engine must be bit-identical to scalar per seed,
+        // including ragged groups (6 seeds over width 4 → 4 + 2)
+        let ds = synth_calhousing(&SynthSpec { n: 300, ..Default::default() });
+        let base = DesConfig::paper(30, 5.0, 600.0, 9);
+        let spec = ScenarioSpec::paper();
+        let scalar = mc_scenario_loss_lanes(&ds, &base, &spec, 6, 2, 1);
+        for lanes in [4usize, 8, 16] {
+            let batched =
+                mc_scenario_loss_lanes(&ds, &base, &spec, 6, 2, lanes);
+            assert_eq!(
+                scalar.mean.to_bits(),
+                batched.mean.to_bits(),
+                "lanes={lanes} mean"
+            );
+            assert_eq!(
+                scalar.std.to_bits(),
+                batched.std.to_bits(),
+                "lanes={lanes} std"
+            );
+        }
+        let g1 = grid_final_losses_lanes(&ds, &base, &[10, 40], 3, 2, 1);
+        let g8 = grid_final_losses_lanes(&ds, &base, &[10, 40], 3, 2, 8);
+        for (a, b) in g1.iter().zip(&g8) {
+            assert_eq!(a.0, b.0);
+            assert_eq!(a.1.mean.to_bits(), b.1.mean.to_bits());
         }
     }
 

@@ -43,8 +43,11 @@ use crate::channel::{
 };
 use crate::coordinator::des::DesConfig;
 use crate::coordinator::run::RunResult;
+use crate::coordinator::executor::{
+    BlockExecutor, NativeExecutor, TraceExecutor,
+};
 use crate::coordinator::scheduler::{
-    run_schedule_with, BlockPolicy, ControlPolicy, DeviceScheduler,
+    run_schedule_with_opts, BlockPolicy, ControlPolicy, DeviceScheduler,
     FixedPolicy, GreedyScheduler, LaneView, OnlineArrivalSource,
     OverlapMode, PropFairScheduler, RoundRobinScheduler, RoundRobinSource,
     RunStats, RunWorkspace, ScheduledSource, SingleDeviceSource,
@@ -1253,14 +1256,73 @@ impl<'a> ScenarioRunner<'a> {
         cfg: &DesConfig,
     ) -> Result<RunStats> {
         let ds = self.data();
-        let cfg = DesConfig {
-            store_capacity: self
-                .spec
-                .store_capacity
-                .or(cfg.store_capacity),
+        let cfg = self.effective_cfg(cfg);
+        // both executors live on the stack; only the workload's one is
+        // initialized and borrowed as the dyn seam
+        let mut ridge_exec;
+        let mut logit_exec;
+        let exec: &mut dyn BlockExecutor = match self.spec.workload {
+            Workload::Ridge => {
+                ridge_exec = NativeExecutor::new(
+                    RidgeModel::new(ds.d, cfg.lambda, ds.n),
+                    cfg.alpha,
+                );
+                &mut ridge_exec
+            }
+            Workload::Logistic => {
+                logit_exec = NativeExecutor::new(
+                    LogisticModel::new(ds.d, cfg.lambda, ds.n),
+                    cfg.alpha,
+                );
+                &mut logit_exec
+            }
+        };
+        self.dispatch_run(ws, &cfg, exec, true)
+    }
+
+    /// The per-run config the scenario actually executes: the spec's
+    /// store-capacity and workload overrides applied on top of `cfg`.
+    /// Public so callers (and `sweep::batch::batchable`) can reason
+    /// about what a run will actually do.
+    pub fn effective_cfg(&self, cfg: &DesConfig) -> DesConfig {
+        DesConfig {
+            store_capacity: self.spec.store_capacity.or(cfg.store_capacity),
             workload: self.spec.workload,
             ..cfg.clone()
-        };
+        }
+    }
+
+    /// The batched-seed engine's trace pass: the full DES with a
+    /// [`TraceExecutor`], recording the flushed SGD index stream into
+    /// `tape` (cleared first) without executing it or evaluating any
+    /// loss. After the call `ws` holds the run's `w_init` and its final
+    /// store; the returned stats carry real protocol counters but a
+    /// `NAN` final loss. Bit-identical traffic/channel/policy decisions
+    /// to [`run_with`](Self::run_with) — the sweep-mode trajectory does
+    /// not depend on `w` (asserted in `rust/tests/batch_parity.rs`).
+    pub(crate) fn run_traced(
+        &self,
+        ws: &mut RunWorkspace,
+        cfg: &DesConfig,
+        tape: &mut Vec<u32>,
+    ) -> Result<RunStats> {
+        let cfg = self.effective_cfg(cfg);
+        let mut exec = TraceExecutor::new(tape);
+        self.dispatch_run(ws, &cfg, &mut exec, false)
+    }
+
+    /// The channel/policy/traffic dispatch shared by
+    /// [`run_with`](Self::run_with) and [`run_traced`](Self::run_traced).
+    /// `cfg` must already be the effective config
+    /// ([`effective_cfg`](Self::effective_cfg)).
+    fn dispatch_run(
+        &self,
+        ws: &mut RunWorkspace,
+        cfg: &DesConfig,
+        exec: &mut dyn BlockExecutor,
+        eval_losses: bool,
+    ) -> Result<RunStats> {
+        let ds = self.data();
         // both channel shapes live on the stack; heterogeneous traffic
         // routes blocks through per-device lanes, everything else uses
         // the single channel axis
@@ -1278,31 +1340,8 @@ impl<'a> ScenarioRunner<'a> {
                 &mut single_chan
             }
         };
-        let mut policy = self.make_policy(&cfg, ds.n);
+        let mut policy = self.make_policy(cfg, ds.n);
         let mode = self.spec.policy.overlap();
-        // both executors live on the stack; only the workload's one is
-        // initialized and borrowed as the dyn seam
-        let mut ridge_exec;
-        let mut logit_exec;
-        let exec: &mut dyn crate::coordinator::executor::BlockExecutor =
-            match self.spec.workload {
-                Workload::Ridge => {
-                    ridge_exec =
-                        crate::coordinator::executor::NativeExecutor::new(
-                            RidgeModel::new(ds.d, cfg.lambda, ds.n),
-                            cfg.alpha,
-                        );
-                    &mut ridge_exec
-                }
-                Workload::Logistic => {
-                    logit_exec =
-                        crate::coordinator::executor::NativeExecutor::new(
-                            LogisticModel::new(ds.d, cfg.lambda, ds.n),
-                            cfg.alpha,
-                        );
-                    &mut logit_exec
-                }
-            };
         match &self.spec.traffic {
             TrafficSpec::Devices(1) => {
                 let mut source = SingleDeviceSource::with_buf(
@@ -1310,15 +1349,16 @@ impl<'a> ScenarioRunner<'a> {
                     cfg.seed,
                     std::mem::take(&mut ws.src_buf),
                 );
-                let stats = run_schedule_with(
+                let stats = run_schedule_with_opts(
                     ws,
                     ds,
-                    &cfg,
+                    cfg,
                     &mut source,
                     &mut policy,
                     mode,
                     channel,
                     exec,
+                    eval_losses,
                 );
                 ws.src_buf = source.into_buf();
                 stats
@@ -1329,15 +1369,16 @@ impl<'a> ScenarioRunner<'a> {
                     cfg.seed,
                     std::mem::take(&mut ws.lane_bufs),
                 );
-                let stats = run_schedule_with(
+                let stats = run_schedule_with_opts(
                     ws,
                     ds,
-                    &cfg,
+                    cfg,
                     &mut source,
                     &mut policy,
                     mode,
                     channel,
                     exec,
+                    eval_losses,
                 );
                 ws.lane_bufs = source.into_bufs();
                 stats
@@ -1350,15 +1391,16 @@ impl<'a> ScenarioRunner<'a> {
                     h.sched.make(),
                     &self.lane_slowdowns,
                 );
-                let stats = run_schedule_with(
+                let stats = run_schedule_with_opts(
                     ws,
                     ds,
-                    &cfg,
+                    cfg,
                     &mut source,
                     &mut policy,
                     mode,
                     channel,
                     exec,
+                    eval_losses,
                 );
                 ws.lane_bufs = source.into_bufs();
                 stats
@@ -1370,15 +1412,16 @@ impl<'a> ScenarioRunner<'a> {
                     cfg.seed,
                     std::mem::take(&mut ws.src_buf),
                 );
-                let stats = run_schedule_with(
+                let stats = run_schedule_with_opts(
                     ws,
                     ds,
-                    &cfg,
+                    cfg,
                     &mut source,
                     &mut policy,
                     mode,
                     channel,
                     exec,
+                    eval_losses,
                 );
                 ws.src_buf = source.into_buf();
                 stats

@@ -64,6 +64,18 @@ pub fn allocation_count() -> Option<u64> {
     }
 }
 
+/// Normalize a phase's allocation count to a per-unit mean — e.g. per
+/// Monte-Carlo run, so lane-batched phases (which amortize one gather
+/// buffer and one SoA model across a whole seed-group) report on the
+/// same per-run axis as the scalar engine. `None` in, or zero units,
+/// yields `None`.
+pub fn allocs_per_unit(allocs: Option<u64>, units: usize) -> Option<f64> {
+    match (allocs, units) {
+        (Some(a), u) if u > 0 => Some(a as f64 / u as f64),
+        _ => None,
+    }
+}
+
 /// Allocations performed while running `f`, when counting is available.
 pub fn allocations_during<R>(f: impl FnOnce() -> R) -> (R, Option<u64>) {
     let before = allocation_count();
@@ -73,4 +85,16 @@ pub fn allocations_during<R>(f: impl FnOnce() -> R) -> (R, Option<u64>) {
         _ => None,
     };
     (out, delta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_unit_normalization() {
+        assert_eq!(allocs_per_unit(Some(120), 24), Some(5.0));
+        assert_eq!(allocs_per_unit(Some(7), 0), None);
+        assert_eq!(allocs_per_unit(None, 24), None);
+    }
 }

@@ -1,0 +1,171 @@
+//! Batched-seed engine ≡ scalar engine, bit-for-bit.
+//!
+//! The batched-seed sweep engine (`sweep/batch.rs`) traces each seed's
+//! DES once and replays the SGD tape lane-batched through SoA kernels.
+//! Its contract is exact equality — every lane's final loss must carry
+//! the SAME bits as the scalar per-seed run — across every scenario
+//! axis: channels (ideal, erasure, Gilbert–Elliott fading), policies
+//! (fixed, warmup, closed-loop control), traffic (single device,
+//! multi-device, online arrivals), and both workloads. Configs the
+//! engine cannot replay (bounded stores, curve recording) must fall
+//! back to the scalar path, transparently.
+
+use edgepipe::coordinator::des::DesConfig;
+use edgepipe::coordinator::scheduler::RunWorkspace;
+use edgepipe::data::synth::{synth_calhousing, SynthSpec};
+use edgepipe::model::Workload;
+use edgepipe::sweep::scenario::{
+    ChannelSpec, EstimatorSpec, PolicySpec, ScenarioRunner, ScenarioSpec,
+    TrafficSpec,
+};
+use edgepipe::sweep::{
+    batchable, mc_scenario_loss_lanes, run_group, scenario_grid_lanes,
+    BatchWorkspace,
+};
+
+fn small_ds() -> edgepipe::data::Dataset {
+    synth_calhousing(&SynthSpec { n: 320, ..Default::default() })
+}
+
+fn sweep_base(seed: u64) -> DesConfig {
+    DesConfig {
+        loss_every: 0,
+        record_blocks: false,
+        collect_snapshots: false,
+        event_capacity: 0,
+        ..DesConfig::paper(32, 5.0, 640.0, seed)
+    }
+}
+
+/// Every scenario axis the engine claims to support, one spec each.
+fn axis_specs() -> Vec<ScenarioSpec> {
+    let paper = ScenarioSpec::paper();
+    vec![
+        paper.clone(),
+        ScenarioSpec {
+            channel: ChannelSpec::Erasure { p: 0.2 },
+            ..paper.clone()
+        },
+        ScenarioSpec {
+            channel: ChannelSpec::Fading {
+                p_gb: 0.05,
+                p_bg: 0.25,
+                p_good: 0.0,
+                p_bad: 0.6,
+                rate_good: 1.0,
+                rate_bad: 1.0,
+            },
+            policy: PolicySpec::Control {
+                est: EstimatorSpec::Ge,
+                replan_every: 2,
+            },
+            ..paper.clone()
+        },
+        ScenarioSpec {
+            policy: PolicySpec::Warmup { start: 4, growth: 2.0, cap: 64 },
+            ..paper.clone()
+        },
+        ScenarioSpec { workload: Workload::Logistic, ..paper.clone() },
+        ScenarioSpec { traffic: TrafficSpec::Devices(3), ..paper.clone() },
+        ScenarioSpec {
+            traffic: TrafficSpec::Online { rate: 0.8 },
+            ..paper
+        },
+    ]
+}
+
+#[test]
+fn every_axis_matches_scalar_bitwise() {
+    let ds = small_ds();
+    let base = sweep_base(19);
+    for (k, spec) in axis_specs().into_iter().enumerate() {
+        // 5 seeds exercises a ragged 8-wide group with 3 dead lanes
+        let scalar = mc_scenario_loss_lanes(&ds, &base, &spec, 5, 2, 1);
+        for lanes in [4usize, 8, 16] {
+            let batched =
+                mc_scenario_loss_lanes(&ds, &base, &spec, 5, 2, lanes);
+            assert_eq!(
+                scalar.mean.to_bits(),
+                batched.mean.to_bits(),
+                "spec #{k} {} lanes={lanes}: mean diverged",
+                spec.label()
+            );
+            assert_eq!(
+                scalar.std.to_bits(),
+                batched.std.to_bits(),
+                "spec #{k} {} lanes={lanes}: std diverged",
+                spec.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn grid_crossing_matches_scalar_bitwise() {
+    let ds = small_ds();
+    let base = sweep_base(7);
+    let specs = axis_specs();
+    let scalar = scenario_grid_lanes(&ds, &base, &specs, 4, 3, 1);
+    let batched = scenario_grid_lanes(&ds, &base, &specs, 4, 3, 8);
+    assert_eq!(scalar.len(), batched.len());
+    for (a, b) in scalar.iter().zip(&batched) {
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1.mean.to_bits(), b.1.mean.to_bits(), "{}", a.0);
+        assert_eq!(a.1.std.to_bits(), b.1.std.to_bits(), "{}", a.0);
+    }
+}
+
+#[test]
+fn run_group_reports_scalar_update_counts() {
+    let ds = small_ds();
+    let base = sweep_base(31);
+    let runner = ScenarioRunner::new(ScenarioSpec::paper(), &ds);
+    let cfg_for = |s: usize| DesConfig {
+        seed: base.seed.wrapping_add(s as u64),
+        ..base.clone()
+    };
+    let mut bw = BatchWorkspace::new();
+    let outs = run_group(&runner, &mut bw, 5, cfg_for).unwrap();
+    for l in 0..5 {
+        let mut ws = RunWorkspace::new();
+        let stats = runner.run_with(&mut ws, &cfg_for(l)).unwrap();
+        assert_eq!(outs[l].updates, stats.updates, "lane {l} updates");
+        assert_eq!(
+            outs[l].final_loss.to_bits(),
+            stats.final_loss.to_bits(),
+            "lane {l} final loss"
+        );
+    }
+}
+
+#[test]
+fn bounded_store_falls_back_to_scalar() {
+    let ds = small_ds();
+    let base = sweep_base(11);
+    let spec = ScenarioSpec {
+        store_capacity: Some(48),
+        ..ScenarioSpec::paper()
+    };
+    // the reservoir store overwrites rows, so the traced-replay gate
+    // must reject it...
+    let runner = ScenarioRunner::new(spec.clone(), &ds);
+    assert!(!batchable(&runner.effective_cfg(&base)));
+    // ...and the batched entry points still return scalar results
+    let scalar = mc_scenario_loss_lanes(&ds, &base, &spec, 4, 2, 1);
+    let batched = mc_scenario_loss_lanes(&ds, &base, &spec, 4, 2, 8);
+    assert_eq!(scalar.mean.to_bits(), batched.mean.to_bits());
+}
+
+#[test]
+fn curve_recording_configs_are_not_batchable() {
+    // run_group must take the scalar path whenever the config records
+    // anything mid-run — semantics the tape replay cannot reproduce
+    let sweep = sweep_base(3);
+    assert!(batchable(&sweep));
+    assert!(!batchable(&DesConfig { loss_every: 100, ..sweep.clone() }));
+    assert!(!batchable(&DesConfig { record_blocks: true, ..sweep.clone() }));
+    assert!(!batchable(&DesConfig {
+        collect_snapshots: true,
+        ..sweep
+    }));
+}
