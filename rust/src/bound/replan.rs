@@ -130,6 +130,11 @@ pub struct Replanner {
     /// The slowdown estimate the current `n_c` was solved under.
     last_slowdown: f64,
     n_c: usize,
+    /// Force the next [`replan`](Self::replan) through the drift gate
+    /// (set by [`invalidate`](Self::invalidate) when the residual
+    /// problem changed without the slowdown moving — e.g. a device
+    /// eviction shed part of the workload).
+    force: bool,
 }
 
 impl Replanner {
@@ -141,7 +146,17 @@ impl Replanner {
             n_c: plan.n_c0,
             rel_tol,
             plan,
+            force: false,
         }
+    }
+
+    /// Mark the current plan stale: the next [`replan`](Self::replan)
+    /// re-solves even if the slowdown estimate has not drifted. Used by
+    /// the graceful-degradation path when capacity is lost (device
+    /// eviction) — the residual problem shrank while the channel belief
+    /// stayed put.
+    pub fn invalidate(&mut self) {
+        self.force = true;
     }
 
     /// The currently planned payload size.
@@ -170,15 +185,17 @@ impl Replanner {
     ) -> usize {
         assert!(slowdown > 0.0, "slowdown must be positive, got {slowdown}");
         let drift = (slowdown - self.last_slowdown).abs();
-        if drift <= self.rel_tol * self.last_slowdown {
+        if !self.force && drift <= self.rel_tol * self.last_slowdown {
             return self.n_c;
         }
         let residual_budget = (self.plan.t_budget - t_now) / slowdown;
         if remaining == 0 || residual_budget <= 0.0 {
-            // nothing to optimize over — and the drifted estimate is NOT
-            // recorded, so a later call with real inputs still re-solves
+            // nothing to optimize over — and the drifted estimate (or a
+            // pending invalidation) is NOT absorbed, so a later call
+            // with real inputs still re-solves
             return self.n_c;
         }
+        self.force = false;
         self.last_slowdown = slowdown;
         self.n_c = optimize_block_size(
             &self.plan.params,
@@ -278,6 +295,44 @@ mod tests {
         )
         .n_c;
         assert_eq!(got, want, "drift must survive exhausted-input calls");
+    }
+
+    #[test]
+    fn invalidation_forces_a_resolve_without_slowdown_drift() {
+        let plan = plan_fixture();
+        let params = plan.params.clone();
+        let (n_o, tau_p, t_budget) = (plan.n_o, plan.tau_p, plan.t_budget);
+        let n_c0 = plan.n_c0;
+        let mut rp = Replanner::new(plan, PLAN_REL_TOL);
+        // unchanged slowdown: no-op...
+        assert_eq!(rp.replan(1500, 200.0, 1.25), n_c0);
+        // ...until invalidated: same slowdown, residual problem re-solved
+        rp.invalidate();
+        let got = rp.replan(400, 200.0, 1.25);
+        let want = optimize_block_size(
+            &params,
+            400,
+            (t_budget - 200.0) / 1.25,
+            n_o,
+            tau_p,
+        )
+        .n_c;
+        assert_eq!(got, want, "invalidate must force the residual argmin");
+        // the invalidation is one-shot: the next unchanged call no-ops
+        assert_eq!(rp.replan(399, 210.0, 1.25), want);
+    }
+
+    #[test]
+    fn invalidation_survives_exhausted_input_calls() {
+        let plan = plan_fixture();
+        let n_c0 = plan.n_c0;
+        let mut rp = Replanner::new(plan, PLAN_REL_TOL);
+        rp.invalidate();
+        // nothing to optimize over: keep the plan, keep the pending flag
+        assert_eq!(rp.replan(0, 100.0, 1.25), n_c0);
+        // the next real call still re-solves
+        let got = rp.replan(400, 200.0, 1.25);
+        assert_eq!(rp.current(), got);
     }
 
     #[test]

@@ -11,11 +11,14 @@
 //! module closes the loop from the other side: online channel-state
 //! estimation (a Gilbert–Elliott belief filter and a moving-average
 //! rate tracker) from the per-packet delivery observations the
-//! scheduler produces.
+//! scheduler produces. The [`fault`] module scripts deterministic fault
+//! injection — link outages, ACK loss, permanent device dropout,
+//! trainer preemption — over any of these via a [`FaultPlan`] wrapper.
 
 pub mod erasure;
 pub mod estimator;
 pub mod fading;
+pub mod fault;
 pub mod ideal;
 pub mod multilane;
 pub mod rate;
@@ -25,6 +28,7 @@ pub use estimator::{
     ControlEstimator, EmaRateEstimator, GeBeliefEstimator, GeParams,
     PacketObs,
 };
+pub use fault::{FaultPlan, FaultSpec, FaultTolerance, FaultWindow, RetrySpec};
 pub use fading::{GilbertElliottChannel, LinkState};
 pub use ideal::IdealChannel;
 pub use multilane::MultiLaneChannel;

@@ -63,6 +63,15 @@ SCENARIO OPTIONS (scenario command):
                              proportional-fair)  [default: rr]
     --device-skew <f>        label skew of device shards in [0,1]
                              (0 = IID round-robin, 1 = label-sorted)
+    --faults <a,b,..>        fault plans crossed with every selected
+                             scenario on its channel axis. Each plan is
+                             '+'-joined clauses: outage:<start>:<dur>
+                             [:<period>] | ackloss:<p> | drop:<dev>:<t>
+                             | preempt:<start>:<dur>[:<period>] |
+                             retry:<timeout>[:<budget>[:<evict>]]; `off`
+                             = the unmodified (bit-identical) scenario.
+                             Any channel spec also takes the same plan
+                             inline as a :fault=<spec> suffix.
 
 CONTROL OPTIONS (control command):
     --severities <a,b,..>    channel specs to sweep (default: ideal +
@@ -111,6 +120,9 @@ EXAMPLES:
         --device-channels ideal,erasure:0.2,fading:0.05:0.25:0.6,rate:0.5 \\
         --device-skew 0.5
     edgepipe scenario --preset adaptive_fading --set sweep.seeds=24
+    edgepipe scenario --channels erasure:0.1 --policies control:est=ema \\
+        --faults off,outage:2000:500+retry:4:3,drop:0:5000+retry:4:2:2
+    edgepipe scenario --preset hetero3_dropout_control --set sweep.seeds=24
     edgepipe control --set sweep.seeds=24
     edgepipe bench --json BENCH_sweep.json
 ";

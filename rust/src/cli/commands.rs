@@ -82,6 +82,7 @@ fn sweep_base(cfg: &ExperimentConfig, t: f64, n_c: usize) -> DesConfig {
         collect_snapshots: false,
         event_capacity: 0,
         workload: crate::model::Workload::Ridge,
+        faults: Default::default(),
     }
 }
 
@@ -298,6 +299,7 @@ fn cmd_train(args: &Args) -> Result<i32> {
         collect_snapshots: false,
         event_capacity: 64,
         workload: crate::model::Workload::Ridge,
+        faults: Default::default(),
     };
     if !args.quiet {
         println!(
@@ -475,6 +477,7 @@ fn cmd_sweep(args: &Args) -> Result<i32> {
 
 /// Monte-Carlo sweep over scenario specs (channel × policy × traffic).
 fn cmd_scenario(args: &Args) -> Result<i32> {
+    use crate::channel::FaultSpec;
     use crate::sweep::runner::scenario_grid;
     use crate::sweep::scenario::{
         from_name, registry, ChannelSpec, HeteroSpec, ScenarioSpec,
@@ -584,6 +587,29 @@ fn cmd_scenario(args: &Args) -> Result<i32> {
             }
         }
         specs
+    };
+    // --faults <spec>,<spec>,… crosses every selected scenario with each
+    // fault plan on its channel axis (`off` = the unmodified scenario;
+    // clauses join with '+', never ',', so the list split is safe).
+    // Hetero lanes that inherit the channel axis inherit its plan too.
+    let fault_list =
+        split_list(&args.extra_or("faults", &cfg.scenario.fault));
+    let faults: Vec<FaultSpec> = fault_list
+        .iter()
+        .map(|s| FaultSpec::parse(s))
+        .collect::<Result<_>>()?;
+    let specs: Vec<ScenarioSpec> = if faults.is_empty() {
+        specs
+    } else {
+        specs
+            .iter()
+            .flat_map(|spec| {
+                faults.iter().map(|f| ScenarioSpec {
+                    channel: spec.channel.with_fault(f),
+                    ..spec.clone()
+                })
+            })
+            .collect()
     };
     if specs.is_empty() {
         bail!("no scenarios selected");
@@ -729,6 +755,7 @@ fn cmd_tightness(args: &Args) -> Result<i32> {
         collect_snapshots: true,
         event_capacity: 0,
         workload: crate::model::Workload::Ridge,
+        faults: Default::default(),
     };
     let mut exec = NativeExecutor::new(
         RidgeModel::new(ds.d, des.lambda, ds.n),
@@ -1103,6 +1130,51 @@ mod tests {
                 ("data.n_raw".into(), "200".into()),
                 ("protocol.n_c".into(), "20".into()),
                 ("sweep.seeds".into(), "1".into()),
+            ],
+            backend: "native".into(),
+            quiet: true,
+            extra,
+            ..Default::default()
+        };
+        assert!(dispatch(&args).is_err());
+    }
+
+    #[test]
+    fn scenario_fault_sweep_runs_end_to_end() {
+        // --faults crosses the grid: the same scenario fault-free (off)
+        // and under a dropout with the hardened ARQ
+        let mut extra = std::collections::BTreeMap::new();
+        extra.insert("channels".to_string(), "ideal".to_string());
+        extra.insert("policies".to_string(), "fixed".to_string());
+        extra.insert(
+            "faults".to_string(),
+            "off,drop:0:200+retry:3:1:2".to_string(),
+        );
+        let args = Args {
+            command: "scenario".into(),
+            overrides: vec![
+                ("data.n_raw".into(), "400".into()),
+                ("protocol.n_c".into(), "40".into()),
+                ("sweep.seeds".into(), "2".into()),
+            ],
+            out_dir: std::env::temp_dir()
+                .join("edgepipe_fault_test")
+                .to_string_lossy()
+                .into_owned(),
+            backend: "native".into(),
+            quiet: true,
+            extra,
+            ..Default::default()
+        };
+        assert_eq!(dispatch(&args).unwrap(), 0);
+        // a malformed fault list is a hard error, with the grammar named
+        let mut extra = std::collections::BTreeMap::new();
+        extra.insert("faults".to_string(), "meteor:1".to_string());
+        let args = Args {
+            command: "scenario".into(),
+            overrides: vec![
+                ("data.n_raw".into(), "200".into()),
+                ("protocol.n_c".into(), "20".into()),
             ],
             backend: "native".into(),
             quiet: true,

@@ -176,12 +176,13 @@ pub fn parse_value(text: &str) -> Result<TomlValue> {
     // bare-word fallback so axis specs like `erasure:0.1`, `fixed:437`
     // or `devices:4:sched=greedy:ch=ideal,erasure:0.1` can be written
     // unquoted in `--set` overrides and config files (',' and '=' cover
-    // the device-spec grammar; arrays were already consumed above, so
-    // a bare comma cannot be confused with an array separator)
+    // the device-spec grammar, '+' joins fault clauses; arrays were
+    // already consumed above, so a bare comma cannot be confused with
+    // an array separator)
     if text.chars().next().is_some_and(|c| c.is_ascii_alphabetic())
         && text.chars().all(|c| {
             c.is_ascii_alphanumeric()
-                || matches!(c, ':' | '.' | '_' | '-' | ',' | '=')
+                || matches!(c, ':' | '.' | '_' | '-' | ',' | '=' | '+')
         })
     {
         return Ok(TomlValue::Str(text.to_string()));
@@ -304,6 +305,21 @@ mod tests {
         );
         // leading-alphabetic rule still rejects junk
         assert!(parse_value("=x").is_err());
+    }
+
+    #[test]
+    fn fault_spec_bare_words_parse_as_strings() {
+        // fault clauses join with '+'
+        let doc = parse_toml(
+            "[scenario]\nfault = outage:100:25+retry:4:2:2\n",
+        )
+        .unwrap();
+        assert_eq!(
+            doc["scenario.fault"],
+            TomlValue::Str("outage:100:25+retry:4:2:2".into())
+        );
+        // a leading '+' is still junk, not a bare word
+        assert!(parse_value("+retry:4").is_err());
     }
 
     #[test]

@@ -172,6 +172,13 @@ pub struct ScenarioConfig {
     pub device_sched: String,
     /// Label skew of the device shards in [0, 1].
     pub device_skew: f64,
+    /// Fault-injection spec applied to the channel axis (see
+    /// `channel::fault::FaultSpec`): `off` (or empty) disables, else
+    /// `+`-joined clauses like `outage:<start>:<dur>[:<period>]`,
+    /// `ackloss:<p>`, `drop:<device>:<t>`,
+    /// `preempt:<start>:<dur>[:<period>]`,
+    /// `retry:<timeout>[:<budget>[:<evict>]]`.
+    pub fault: String,
 }
 
 impl Default for ScenarioConfig {
@@ -185,9 +192,46 @@ impl Default for ScenarioConfig {
             device_channels: String::new(),
             device_sched: "rr".to_string(),
             device_skew: 0.0,
+            fault: String::new(),
         }
     }
 }
+
+/// Every key [`ExperimentConfig::from_doc`] accepts — the unknown-key
+/// typo guard lists these so a near-miss is self-correcting.
+pub const VALID_KEYS: &[&str] = &[
+    "protocol.n_c",
+    "protocol.n_o",
+    "protocol.tau_p",
+    "protocol.t_factor",
+    "protocol.t_abs",
+    "train.alpha",
+    "train.lambda",
+    "train.init_std",
+    "train.seed",
+    "train.loss_stride",
+    "data.n_raw",
+    "data.d",
+    "data.train_frac",
+    "data.hess_max",
+    "data.hess_min",
+    "data.noise_std",
+    "data.seed",
+    "data.csv_path",
+    "sweep.n_os",
+    "sweep.n_cs",
+    "sweep.seeds",
+    "sweep.threads",
+    "scenario.channel",
+    "scenario.policy",
+    "scenario.traffic",
+    "scenario.workload",
+    "scenario.store",
+    "scenario.device_channels",
+    "scenario.device_sched",
+    "scenario.device_skew",
+    "scenario.fault",
+];
 
 /// The full experiment configuration.
 #[derive(Clone, Debug, Default)]
@@ -276,7 +320,30 @@ impl ExperimentConfig {
                 "scenario.device_skew" => {
                     cfg.scenario.device_skew = value.as_f64()?
                 }
-                other => bail!("unknown config key '{other}'"),
+                "scenario.fault" => {
+                    cfg.scenario.fault = spec_string(value)?
+                }
+                other => {
+                    // point typos at the nearest section's key list
+                    let section =
+                        other.split('.').next().unwrap_or(other);
+                    let near: Vec<&str> = VALID_KEYS
+                        .iter()
+                        .copied()
+                        .filter(|k| {
+                            k.starts_with(section) && k[section.len()..]
+                                .starts_with('.')
+                        })
+                        .collect();
+                    let hint = if near.is_empty() {
+                        VALID_KEYS.join(", ")
+                    } else {
+                        near.join(", ")
+                    };
+                    bail!(
+                        "unknown config key '{other}' (valid keys: {hint})"
+                    )
+                }
             }
         }
         cfg.validate()?;
@@ -310,6 +377,8 @@ impl ExperimentConfig {
         if !(0.0..=1.0).contains(&self.scenario.device_skew) {
             bail!("scenario.device_skew must be in [0, 1]");
         }
+        crate::channel::FaultSpec::parse(&self.scenario.fault)
+            .context("bad scenario.fault")?;
         Ok(())
     }
 }
@@ -348,6 +417,43 @@ mod tests {
     fn unknown_key_is_rejected() {
         let doc = parse_toml("[protocol]\nn_x = 1\n").unwrap();
         assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn unknown_key_error_lists_valid_keys() {
+        let doc = parse_toml("[scenario]\nfualt = \"off\"\n").unwrap();
+        let err =
+            ExperimentConfig::from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("unknown config key 'scenario.fualt'"), "{err}");
+        // the hint is scoped to the typo'd section and names the fix
+        assert!(err.contains("scenario.fault"), "{err}");
+        assert!(err.contains("scenario.channel"), "{err}");
+        assert!(!err.contains("train.alpha"), "{err}");
+        // a key with no recognizable section lists everything
+        let doc = parse_toml("bogus = 1\n").unwrap();
+        let err =
+            ExperimentConfig::from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("train.alpha"), "{err}");
+    }
+
+    #[test]
+    fn fault_key_loads_and_validates() {
+        let cfg = ExperimentConfig::load(
+            None,
+            &[(
+                "scenario.fault".into(),
+                "outage:100:25+retry:4:2:2".into(),
+            )],
+        )
+        .unwrap();
+        assert_eq!(cfg.scenario.fault, "outage:100:25+retry:4:2:2");
+        assert_eq!(ExperimentConfig::default().scenario.fault, "");
+        // a malformed spec is rejected at load time, not run time
+        assert!(ExperimentConfig::load(
+            None,
+            &[("scenario.fault".into(), "meteor:1".into())],
+        )
+        .is_err());
     }
 
     #[test]

@@ -62,6 +62,13 @@ pub struct DesConfig {
     /// Which per-sample loss the run trains/reports (the executor must
     /// match; `ScenarioRunner` keeps the two in sync).
     pub workload: crate::model::Workload,
+    /// Protocol hardening + trainer preemption (timeout/retry/eviction
+    /// knobs and compute-preemption windows). The all-default value is
+    /// the paper's original protocol: unbounded ARQ, no timeouts, no
+    /// eviction, never preempted — and keeps every fault-free path
+    /// bit-identical. `ScenarioRunner` threads the knobs in from a
+    /// channel spec's `fault=` suffix (`retry:`/`preempt:` clauses).
+    pub faults: crate::channel::FaultTolerance,
 }
 
 impl DesConfig {
@@ -82,6 +89,7 @@ impl DesConfig {
             collect_snapshots: false,
             event_capacity: 0,
             workload: crate::model::Workload::Ridge,
+            faults: crate::channel::FaultTolerance::default(),
         }
     }
 }

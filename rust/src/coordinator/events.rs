@@ -17,6 +17,16 @@ pub enum EventKind {
     BlockDelivered { block: usize, payload: usize, attempts: u32 },
     /// Block arrived after the deadline and was discarded.
     BlockMissedDeadline { block: usize },
+    /// Send attempt `resend` (0 = the initial send) of block `block` hit
+    /// its per-packet ARQ timeout (fault-tolerance layer only).
+    BlockTimedOut { block: usize, resend: u32 },
+    /// Block `block` was given up on after exhausting its retry budget;
+    /// its samples are shed (fault-tolerance layer only).
+    BlockAbandoned { block: usize },
+    /// Device `device` was evicted after consecutive timeouts; its
+    /// undelivered shard of `lost_samples` is shed (fault-tolerance
+    /// layer only).
+    DeviceEvicted { device: usize, lost_samples: usize },
     /// The edge ran `count` SGD updates ending at time `t`.
     UpdatesRun { count: usize },
     /// Run finished (deadline reached or data exhausted + tail done).

@@ -163,6 +163,13 @@ pub fn run_pipelined(
         samples_delivered,
         blocks_missed,
         retransmissions: summary.retransmissions,
+        // the threaded pipeline is the paper's fault-free path: the ARQ
+        // hardening lives in the generic scheduler only
+        timeouts: 0,
+        blocks_abandoned: 0,
+        evictions: 0,
+        samples_lost: 0,
+        degraded_completion: false,
         case,
         snapshots: space.snapshots,
         events: events.into_events(),

@@ -155,6 +155,11 @@ impl RunWorkspace {
             samples_delivered: stats.samples_delivered,
             blocks_missed: stats.blocks_missed,
             retransmissions: stats.retransmissions,
+            timeouts: stats.timeouts,
+            blocks_abandoned: stats.blocks_abandoned,
+            evictions: stats.evictions,
+            samples_lost: stats.samples_lost,
+            degraded_completion: stats.degraded_completion,
             case: stats.case,
             snapshots: self.train.snapshots,
             events: self.events.into_events(),
@@ -176,6 +181,19 @@ pub struct RunStats {
     /// Blocks sent but arriving after the deadline (discarded).
     pub blocks_missed: usize,
     pub retransmissions: u64,
+    /// Per-packet ARQ timeouts (0 unless `DesConfig::faults` arms the
+    /// timeout machinery).
+    pub timeouts: u64,
+    /// Blocks given up on (retry budget exhausted or device evicted).
+    pub blocks_abandoned: usize,
+    /// Devices evicted after consecutive timeouts.
+    pub evictions: usize,
+    /// Samples deliberately shed (abandoned blocks + evicted devices'
+    /// undelivered shards).
+    pub samples_lost: usize,
+    /// Every sample was delivered or deliberately shed and nothing
+    /// arrived late — the run degraded gracefully instead of stalling.
+    pub degraded_completion: bool,
     pub case: TimelineCase,
     pub backend: &'static str,
 }
@@ -185,7 +203,11 @@ impl RunStats {
     /// ([`deadline_outage`](super::run::deadline_outage) — one shared
     /// definition with `RunResult`).
     pub fn deadline_outage(&self) -> bool {
-        super::run::deadline_outage(self.blocks_missed, self.case)
+        super::run::deadline_outage(
+            self.blocks_missed,
+            self.case,
+            self.degraded_completion,
+        )
     }
 }
 
@@ -218,6 +240,36 @@ pub trait TrafficSource {
 
     /// Name for logs.
     fn name(&self) -> String;
+
+    /// Permanently remove device `device` from the schedule, dropping
+    /// every sample it has not yet transmitted; returns how many
+    /// samples were dropped. Called by the scheduler core when the
+    /// fault-tolerance layer evicts a device after `evict_after`
+    /// consecutive ARQ timeouts. Sources that cannot shed anything keep
+    /// the default no-op (drop nothing, return 0). Must consume no RNG.
+    fn evict(&mut self, _device: usize) -> usize {
+        0
+    }
+}
+
+/// A protocol-level fault observation fed to
+/// [`BlockPolicy::observe_fault`] — what the graceful-degradation hook
+/// sees when the ARQ machinery gives up on a packet or a device.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultObs {
+    /// A packet hit its per-packet timeout: the channel was occupied for
+    /// AT LEAST `waited` (a censored observation — the true occupancy
+    /// may be unbounded).
+    Timeout {
+        device: usize,
+        /// Fault-free duration the packet would have taken.
+        nominal: f64,
+        /// How long the scheduler actually waited before giving up.
+        waited: f64,
+    },
+    /// A device was evicted after consecutive timeouts; its undelivered
+    /// shard (`lost_samples`, including the in-flight block) is gone.
+    Eviction { device: usize, lost_samples: usize },
 }
 
 /// A per-block payload-size policy (the paper fixes one `n_c`; adaptive
@@ -236,6 +288,14 @@ pub trait BlockPolicy {
     /// policies keep the default no-op. Implementations must consume no
     /// RNG, so observing never perturbs the stream discipline.
     fn observe(&mut self, _obs: &PacketObs) {}
+
+    /// Observe a protocol fault (packet timeout, device eviction) — the
+    /// graceful-degradation hook. Closed-loop policies fold the
+    /// censored occupancy into their channel belief and force a re-plan
+    /// when capacity is lost, so the Corollary-1 argmin is re-solved
+    /// over the residual problem; open-loop policies keep the default
+    /// no-op. Must consume no RNG.
+    fn observe_fault(&mut self, _obs: &FaultObs) {}
 
     /// Name for logs.
     fn name(&self) -> String;
@@ -309,6 +369,29 @@ impl BlockPolicy for ControlPolicy {
 
     fn observe(&mut self, obs: &PacketObs) {
         self.est.observe(obs);
+    }
+
+    fn observe_fault(&mut self, obs: &FaultObs) {
+        match *obs {
+            FaultObs::Timeout { nominal, waited, .. } => {
+                // censored observation: the packet occupied the link for
+                // at least `waited`. Feeding the finite censoring point
+                // (not INFINITY, which would poison an EMA forever)
+                // still drags the slowdown estimate up, shrinking the
+                // re-planned payloads.
+                self.est.observe(&PacketObs {
+                    nominal,
+                    occupancy: waited,
+                    attempts: 1,
+                });
+            }
+            FaultObs::Eviction { .. } => {
+                // lost capacity changes the residual problem even when
+                // the slowdown estimate has not moved: force the next
+                // replan through the drift gate
+                self.replanner.invalidate();
+            }
+        }
     }
 
     fn name(&self) -> String {
@@ -409,6 +492,15 @@ impl TrafficSource for SingleDeviceSource<'_> {
 
     fn name(&self) -> String {
         "single-device".to_string()
+    }
+
+    fn evict(&mut self, device: usize) -> usize {
+        if device != 0 {
+            return 0;
+        }
+        let shed = self.remaining.len();
+        self.remaining.clear();
+        shed
     }
 }
 
@@ -749,6 +841,14 @@ impl<S: DeviceScheduler> TrafficSource for ScheduledSource<'_, S> {
     fn name(&self) -> String {
         format!("scheduled({}, {})", self.lanes.len(), self.sched.name())
     }
+
+    fn evict(&mut self, device: usize) -> usize {
+        self.lanes.get_mut(device).map_or(0, |lane| {
+            let shed = lane.remaining.len();
+            lane.remaining.clear();
+            shed
+        })
+    }
 }
 
 impl TrafficSource for RoundRobinSource<'_> {
@@ -784,6 +884,14 @@ impl TrafficSource for RoundRobinSource<'_> {
 
     fn name(&self) -> String {
         format!("round-robin({})", self.lanes.len())
+    }
+
+    fn evict(&mut self, device: usize) -> usize {
+        self.lanes.get_mut(device).map_or(0, |lane| {
+            let shed = lane.remaining.len();
+            lane.remaining.clear();
+            shed
+        })
     }
 }
 
@@ -878,6 +986,18 @@ impl TrafficSource for OnlineArrivalSource<'_> {
     fn name(&self) -> String {
         format!("online-arrivals({})", self.rate)
     }
+
+    fn evict(&mut self, device: usize) -> usize {
+        if device != 0 {
+            return 0;
+        }
+        // shed the arrived pool AND every future arrival: an evicted
+        // device never transmits again
+        let shed = self.pool.len() + (self.ds.n - self.arrived);
+        self.pool.clear();
+        self.arrived = self.ds.n;
+        shed
+    }
 }
 
 /// Run the pipelined protocol under pluggable traffic/block/overlap
@@ -969,6 +1089,11 @@ pub(crate) fn run_schedule_with_opts(
         samples_delivered: c.samples_delivered,
         blocks_missed: c.blocks_missed,
         retransmissions: c.retransmissions,
+        timeouts: c.timeouts,
+        blocks_abandoned: c.blocks_abandoned,
+        evictions: c.evictions,
+        samples_lost: c.samples_lost,
+        degraded_completion: c.degraded_completion,
         case: c.case,
         backend: exec.name(),
     });
@@ -987,6 +1112,11 @@ struct LoopCounters {
     samples_delivered: usize,
     blocks_missed: usize,
     retransmissions: u64,
+    timeouts: u64,
+    blocks_abandoned: usize,
+    evictions: usize,
+    samples_lost: usize,
+    degraded_completion: bool,
     case: TimelineCase,
 }
 
@@ -1005,6 +1135,14 @@ fn schedule_loop(
 ) -> Result<LoopCounters> {
     let mut chan_rng = Pcg32::new(cfg.seed, STREAM_CHANNEL);
 
+    // protocol-hardening knobs (all-default = the paper's original
+    // protocol: wait for every ACK however long it takes)
+    let hard = &cfg.faults;
+    let timeout_enabled = hard.enabled();
+    // per-device consecutive-timeout counters, grown on demand so the
+    // fault-free path allocates nothing extra
+    let mut consec_timeouts: Vec<u32> = Vec::new();
+
     let mut t_send = 0.0f64;
     let mut block = 1usize;
     let mut blocks_sent = 0usize;
@@ -1012,6 +1150,10 @@ fn schedule_loop(
     let mut samples_delivered = 0usize;
     let mut blocks_missed = 0usize;
     let mut retransmissions = 0u64;
+    let mut timeouts = 0u64;
+    let mut blocks_abandoned = 0usize;
+    let mut evictions = 0usize;
+    let mut samples_lost = 0usize;
 
     while t_send < cfg.t_budget {
         let n_c = policy.next_n_c(block, source.remaining(), t_send);
@@ -1043,50 +1185,159 @@ fn schedule_loop(
         // route the block through the transmitting device's lane
         // (no-op for single-link channels; consumes no randomness)
         channel.select_lane(device);
-        let delivery = channel.transmit(t_send, duration, &mut chan_rng);
-        retransmissions += (delivery.attempts - 1) as u64;
-        // feed the delivery observation to the policy (no-op for
-        // open-loop policies; closed-loop control updates its channel
-        // belief — consumes no randomness either way)
-        policy.observe(&PacketObs {
-            nominal: duration,
-            occupancy: delivery.arrival - t_send,
-            attempts: delivery.attempts,
-        });
-        if delivery.arrival < cfg.t_budget {
-            // train (or idle) through the transmission window, then
-            // ingest the delivered block
-            match mode {
-                OverlapMode::Pipelined => {
-                    trainer.advance_to(delivery.arrival, exec, events)?
-                }
-                OverlapMode::Sequential => trainer.skip_to(delivery.arrival),
-            }
-            trainer.ingest_block(block, delivery.arrival, &frame.x, &frame.y);
-            blocks_delivered += 1;
-            samples_delivered += payload;
-            events.push(
-                delivery.arrival,
-                EventKind::BlockDelivered {
-                    block,
-                    payload,
+        // ARQ retry loop: one iteration per send attempt of THIS block.
+        // With the timeout machinery disarmed (the default) the first
+        // iteration always breaks, so the fault-free path is the
+        // historical single-shot transmit, bit for bit.
+        let mut resend = 0u32;
+        loop {
+            let delivery = channel.transmit(t_send, duration, &mut chan_rng);
+            // NaN/INFINITY-proof: a non-finite occupancy always times out
+            let timed_out = timeout_enabled
+                && !(delivery.arrival - t_send
+                    <= hard.timeout_mult * duration);
+            if !timed_out {
+                retransmissions += (delivery.attempts - 1) as u64;
+                // feed the delivery observation to the policy (no-op for
+                // open-loop policies; closed-loop control updates its
+                // channel belief — consumes no randomness either way)
+                policy.observe(&PacketObs {
+                    nominal: duration,
+                    occupancy: delivery.arrival - t_send,
                     attempts: delivery.attempts,
-                },
+                });
+                if timeout_enabled {
+                    if let Some(c) = consec_timeouts.get_mut(device) {
+                        *c = 0;
+                    }
+                }
+                if delivery.arrival < cfg.t_budget {
+                    // train (or idle) through the transmission window,
+                    // then ingest the delivered block
+                    match mode {
+                        OverlapMode::Pipelined => {
+                            trainer.advance_to(delivery.arrival, exec, events)?
+                        }
+                        OverlapMode::Sequential => {
+                            trainer.skip_to(delivery.arrival)
+                        }
+                    }
+                    trainer.ingest_block(
+                        block,
+                        delivery.arrival,
+                        &frame.x,
+                        &frame.y,
+                    );
+                    blocks_delivered += 1;
+                    samples_delivered += payload;
+                    events.push(
+                        delivery.arrival,
+                        EventKind::BlockDelivered {
+                            block,
+                            payload,
+                            attempts: delivery.attempts,
+                        },
+                    );
+                } else {
+                    match mode {
+                        OverlapMode::Pipelined => {
+                            trainer.advance_to(cfg.t_budget, exec, events)?
+                        }
+                        OverlapMode::Sequential => {
+                            trainer.skip_to(cfg.t_budget)
+                        }
+                    }
+                    blocks_missed += 1;
+                    events.push(
+                        cfg.t_budget,
+                        EventKind::BlockMissedDeadline { block },
+                    );
+                }
+                t_send = delivery.arrival;
+                break;
+            }
+            // --- the attempt hit its per-packet timeout: give up on
+            // the in-flight packet at t_out and decide what to do next
+            timeouts += 1;
+            let t_out = t_send + hard.timeout_mult * duration;
+            events.push(
+                t_out.min(cfg.t_budget),
+                EventKind::BlockTimedOut { block, resend },
             );
-        } else {
             match mode {
                 OverlapMode::Pipelined => {
-                    trainer.advance_to(cfg.t_budget, exec, events)?
+                    trainer.advance_to(t_out.min(cfg.t_budget), exec, events)?
                 }
-                OverlapMode::Sequential => trainer.skip_to(cfg.t_budget),
+                OverlapMode::Sequential => {
+                    trainer.skip_to(t_out.min(cfg.t_budget))
+                }
             }
-            blocks_missed += 1;
-            events.push(
-                cfg.t_budget,
-                EventKind::BlockMissedDeadline { block },
-            );
+            policy.observe_fault(&FaultObs::Timeout {
+                device,
+                nominal: duration,
+                waited: hard.timeout_mult * duration,
+            });
+            t_send = t_out;
+            if consec_timeouts.len() <= device {
+                consec_timeouts.resize(device + 1, 0);
+            }
+            consec_timeouts[device] += 1;
+            if hard.evict_after > 0
+                && consec_timeouts[device] >= hard.evict_after
+            {
+                // evict the device: shed its undelivered shard (bias)
+                // instead of letting it block the deadline (variance)
+                let lost = payload + source.evict(device);
+                evictions += 1;
+                blocks_abandoned += 1;
+                samples_lost += lost;
+                events.push(
+                    t_send.min(cfg.t_budget),
+                    EventKind::DeviceEvicted { device, lost_samples: lost },
+                );
+                policy.observe_fault(&FaultObs::Eviction {
+                    device,
+                    lost_samples: lost,
+                });
+                break;
+            }
+            if resend >= hard.retry_budget {
+                // retry budget exhausted: abandon the block, keep the
+                // device
+                blocks_abandoned += 1;
+                samples_lost += payload;
+                events.push(
+                    t_send.min(cfg.t_budget),
+                    EventKind::BlockAbandoned { block },
+                );
+                break;
+            }
+            resend += 1;
+            // deterministic exponential backoff: duration · 2^(resend−1)
+            let backoff = duration * (1u64 << (resend - 1).min(20)) as f64;
+            let t_retry = t_send + backoff;
+            match mode {
+                OverlapMode::Pipelined => trainer.advance_to(
+                    t_retry.min(cfg.t_budget),
+                    exec,
+                    events,
+                )?,
+                OverlapMode::Sequential => {
+                    trainer.skip_to(t_retry.min(cfg.t_budget))
+                }
+            }
+            t_send = t_retry;
+            if t_send >= cfg.t_budget {
+                // no time left to retry: the block misses the deadline
+                blocks_missed += 1;
+                events.push(
+                    cfg.t_budget,
+                    EventKind::BlockMissedDeadline { block },
+                );
+                break;
+            }
+            // retry the SAME frame (the samples were never delivered)
         }
-        t_send = delivery.arrival;
         block += 1;
     }
     // tail: no more transmissions; compute until the deadline (Fig. 2(b))
@@ -1098,6 +1349,12 @@ fn schedule_loop(
     } else {
         TimelineCase::Partial
     };
+    // graceful degradation: every sample was either delivered or
+    // deliberately shed, and nothing arrived late — the protocol traded
+    // bias for the deadline instead of stalling
+    let degraded_completion = blocks_missed == 0
+        && samples_lost > 0
+        && samples_delivered + samples_lost >= ds.n;
     events.push(
         cfg.t_budget,
         EventKind::Finished {
@@ -1112,6 +1369,11 @@ fn schedule_loop(
         samples_delivered,
         blocks_missed,
         retransmissions,
+        timeouts,
+        blocks_abandoned,
+        evictions,
+        samples_lost,
+        degraded_completion,
         case,
     })
 }
@@ -1432,6 +1694,145 @@ mod tests {
             block += 1;
         }
         assert_eq!(control.planned_n_c(), 64);
+    }
+
+    #[test]
+    fn sources_shed_their_backlog_on_eviction() {
+        let ds = small_ds(120);
+        let mut frame = BlockFrame::with_capacity(10, ds.d);
+
+        let mut single = SingleDeviceSource::new(&ds, 5);
+        single.poll(10, 0.0, &mut frame);
+        assert_eq!(single.evict(1), 0, "unknown device sheds nothing");
+        assert_eq!(single.evict(0), 110);
+        assert!(matches!(single.poll(10, 0.0, &mut frame), SourcePoll::Exhausted));
+        assert_eq!(single.evict(0), 0, "second eviction is a no-op");
+
+        let shards = crate::extensions::multi_device::shard_dataset(&ds, 3);
+        let mut rr = RoundRobinSource::new(&shards, 5);
+        rr.poll(10, 0.0, &mut frame); // device 0 sends 10
+        assert_eq!(rr.evict(0), 30);
+        assert_eq!(rr.remaining(), 80);
+        // the evicted lane never transmits again
+        for _ in 0..8 {
+            match rr.poll(10, 0.0, &mut frame) {
+                SourcePoll::Block { device } => assert_ne!(device, 0),
+                _ => panic!("unexpected poll result"),
+            }
+        }
+        assert!(matches!(rr.poll(10, 0.0, &mut frame), SourcePoll::Exhausted));
+
+        let mut online = OnlineArrivalSource::new(&ds, 1.0, 5);
+        online.poll(10, 30.0, &mut frame); // 31 arrived, 10 sent
+        assert_eq!(online.evict(0), 110, "pool + future arrivals shed");
+        assert!(matches!(
+            online.poll(10, 500.0, &mut frame),
+            SourcePoll::Exhausted
+        ));
+    }
+
+    #[test]
+    fn permanent_dropout_evicts_and_degrades_gracefully() {
+        use crate::channel::{FaultPlan, FaultSpec, IdealChannel};
+
+        // device 0's link dies at t = 0; with ARQ hardening the
+        // scheduler times out, retries within budget, evicts, and sheds
+        // the whole shard instead of stalling to the deadline
+        let ds = small_ds(300);
+        let spec = FaultSpec::parse("drop:0:0.0+retry:2:1:2").unwrap();
+        let cfg = DesConfig {
+            faults: spec.tolerance(),
+            ..DesConfig::paper(50, 5.0, 2000.0, 9)
+        };
+        let mut source = SingleDeviceSource::new(&ds, cfg.seed);
+        let mut policy = FixedPolicy(cfg.n_c);
+        let run = run_schedule(
+            &ds,
+            &cfg,
+            &mut source,
+            &mut policy,
+            OverlapMode::Pipelined,
+            &mut FaultPlan::new(spec, IdealChannel),
+            &mut exec(&ds, &cfg),
+        )
+        .unwrap();
+        assert_eq!(run.blocks_delivered, 0);
+        assert_eq!(run.timeouts, 2, "initial attempt + one retry");
+        assert_eq!(run.evictions, 1);
+        assert_eq!(run.blocks_abandoned, 1);
+        assert_eq!(run.samples_lost, ds.n);
+        assert_eq!(run.blocks_missed, 0);
+        assert!(run.degraded_completion);
+        assert_eq!(run.case, TimelineCase::Partial);
+        assert!(
+            !run.deadline_outage(),
+            "a degraded completion is not an outage"
+        );
+
+        // the fault-blind baseline on the same dead link stalls forever
+        // and flags an outage
+        let spec = FaultSpec::parse("drop:0:0.0").unwrap();
+        let cfg = DesConfig {
+            faults: Default::default(),
+            ..DesConfig::paper(50, 5.0, 2000.0, 9)
+        };
+        let mut source = SingleDeviceSource::new(&ds, cfg.seed);
+        let mut policy = FixedPolicy(cfg.n_c);
+        let run = run_schedule(
+            &ds,
+            &cfg,
+            &mut source,
+            &mut policy,
+            OverlapMode::Pipelined,
+            &mut FaultPlan::new(spec, IdealChannel),
+            &mut exec(&ds, &cfg),
+        )
+        .unwrap();
+        assert_eq!(run.blocks_missed, 1);
+        assert_eq!(run.timeouts, 0);
+        assert!(!run.degraded_completion);
+        assert!(run.deadline_outage());
+    }
+
+    #[test]
+    fn retry_budget_bounds_abandonment_without_eviction() {
+        use crate::channel::{FaultPlan, FaultSpec, IdealChannel};
+
+        // a long outage outlasts each block's whole retry ladder; the
+        // retry budget (3) caps every abandoned block at 4 attempts and
+        // the device survives (evict disabled), so the blocks sent
+        // after the outage ends still deliver
+        let ds = small_ds(200);
+        let spec = FaultSpec::parse("outage:0:2000+retry:2:3").unwrap();
+        let cfg = DesConfig {
+            faults: spec.tolerance(),
+            ..DesConfig::paper(40, 5.0, 3000.0, 11)
+        };
+        let mut source = SingleDeviceSource::new(&ds, cfg.seed);
+        let mut policy = FixedPolicy(cfg.n_c);
+        let run = run_schedule(
+            &ds,
+            &cfg,
+            &mut source,
+            &mut policy,
+            OverlapMode::Pipelined,
+            &mut FaultPlan::new(spec, IdealChannel),
+            &mut exec(&ds, &cfg),
+        )
+        .unwrap();
+        assert_eq!(run.evictions, 0);
+        assert!(run.blocks_abandoned >= 1);
+        assert!(run.timeouts >= 4);
+        // per abandoned block: exactly budget+1 = 4 attempts
+        assert_eq!(run.timeouts % 4, 0);
+        assert!(run.blocks_delivered > 0, "device recovers after outage");
+        assert_eq!(
+            run.samples_delivered + run.samples_lost,
+            ds.n,
+            "every sample is delivered or deliberately shed"
+        );
+        assert!(run.degraded_completion);
+        assert!(!run.deadline_outage());
     }
 
     #[test]

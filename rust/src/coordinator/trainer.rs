@@ -11,6 +11,7 @@
 
 use anyhow::Result;
 
+use crate::channel::fault::{next_window, FaultWindow};
 use crate::data::Dataset;
 use crate::edge::SampleStore;
 use crate::model::Workload;
@@ -47,6 +48,10 @@ pub(crate) struct EdgeTrainer<'a> {
     workload: Workload,
     rng: Pcg32,
     evict_rng: Pcg32,
+    /// Scripted compute-preemption windows (`fault=preempt:...`): SGD is
+    /// frozen while a window is active. Empty = never preempted, and the
+    /// walker is bypassed entirely (the fault-free fast path).
+    preempt: Vec<FaultWindow>,
     pub updates: usize,
     loss_every: usize,
     since_record: usize,
@@ -104,6 +109,7 @@ impl<'a> EdgeTrainer<'a> {
             workload: cfg.workload,
             rng: Pcg32::new(cfg.seed, STREAM_EDGE),
             evict_rng: Pcg32::new(cfg.seed, STREAM_EVICT),
+            preempt: cfg.faults.preempt.clone(),
             updates: 0,
             loss_every: cfg.loss_every,
             since_record: 0,
@@ -142,8 +148,42 @@ impl<'a> EdgeTrainer<'a> {
     }
 
     /// Advance the compute clock to `until`, running SGD updates while
-    /// the store is non-empty (paper eq. (2)).
+    /// the store is non-empty (paper eq. (2)) — except inside scripted
+    /// preemption windows, where the clock passes but no update runs.
     pub fn advance_to(
+        &mut self,
+        until: f64,
+        exec: &mut dyn BlockExecutor,
+        events: &mut EventLog,
+    ) -> Result<()> {
+        if self.preempt.is_empty() {
+            return self.advance_segment(until, exec, events);
+        }
+        let until = until.min(self.t_budget);
+        loop {
+            // bind before matching: both arms mutate self
+            let win = next_window(&self.preempt, self.cursor);
+            match win {
+                Some((w_start, w_end)) if w_start < until => {
+                    // compute up to the window, then freeze through it
+                    self.advance_segment(
+                        w_start.max(self.cursor),
+                        exec,
+                        events,
+                    )?;
+                    self.skip_to(w_end.min(until));
+                    if w_end >= until {
+                        return Ok(());
+                    }
+                }
+                _ => return self.advance_segment(until, exec, events),
+            }
+        }
+    }
+
+    /// One preemption-free compute segment (the historical `advance_to`
+    /// body — the whole story when no `preempt` windows are scripted).
+    fn advance_segment(
         &mut self,
         until: f64,
         exec: &mut dyn BlockExecutor,

@@ -24,6 +24,21 @@ pub fn render_run(result: &RunResult, loss_star: Option<f64>) -> String {
             result.retransmissions
         ));
     }
+    if result.timeouts > 0 || result.samples_lost > 0 {
+        out.push_str(&format!(
+            "faults: {} timeouts, {} blocks abandoned, {} evictions, \
+             {} samples shed{}\n",
+            result.timeouts,
+            result.blocks_abandoned,
+            result.evictions,
+            result.samples_lost,
+            if result.degraded_completion {
+                " (degraded completion)"
+            } else {
+                ""
+            }
+        ));
+    }
     if let Some(star) = loss_star {
         out.push_str(&format!(
             "optimality gap: {:.3e} (L(w*) = {star:.6})\n",
@@ -51,6 +66,14 @@ pub fn run_to_json(result: &RunResult, loss_star: Option<f64>) -> Value {
         ("blocks_missed", num(result.blocks_missed as f64)),
         ("deadline_outage", num(result.deadline_outage() as u8 as f64)),
         ("retransmissions", num(result.retransmissions as f64)),
+        ("timeouts", num(result.timeouts as f64)),
+        ("blocks_abandoned", num(result.blocks_abandoned as f64)),
+        ("evictions", num(result.evictions as f64)),
+        ("samples_lost", num(result.samples_lost as f64)),
+        (
+            "degraded_completion",
+            num(result.degraded_completion as u8 as f64),
+        ),
         ("case", s(&format!("{:?}", result.case))),
         ("backend", s(result.backend)),
         ("final_w", crate::util::json::num_arr(&result.final_w)),
@@ -79,6 +102,11 @@ mod tests {
             samples_delivered: 400,
             blocks_missed: 1,
             retransmissions: 2,
+            timeouts: 3,
+            blocks_abandoned: 1,
+            evictions: 1,
+            samples_lost: 100,
+            degraded_completion: false,
             case: TimelineCase::Partial,
             snapshots: vec![],
             events: vec![],
@@ -91,6 +119,7 @@ mod tests {
         let r = render_run(&fake_run(), Some(0.4));
         assert!(r.contains("final loss 1.000000"));
         assert!(r.contains("retransmissions: 2"));
+        assert!(r.contains("faults: 3 timeouts, 1 blocks abandoned"));
         assert!(r.contains("optimality gap"));
     }
 

@@ -163,6 +163,7 @@ pub fn fig4_data(
         collect_snapshots: false,
         event_capacity: 0,
         workload: crate::model::Workload::Ridge,
+        faults: Default::default(),
     };
 
     // 1. bound optimum ñ_c (cheap, closed form)

@@ -7,7 +7,10 @@
 //!
 //! * [`ChannelSpec`] — `ideal`, `erasure:<p>`, `rate:<r>[:<p>]`,
 //!   `fading:<p_gb>:<p_bg>:<p_bad>[:<p_good>[:<r_bad>[:<r_good>]]]`
-//!   (Gilbert–Elliott good/bad Markov states, clocked per packet)
+//!   (Gilbert–Elliott good/bad Markov states, clocked per packet); any
+//!   channel takes an optional `:fault=<spec>` suffix wrapping it in a
+//!   scripted [`FaultPlan`] (see [`FaultSpec`]) — `fault=off` (or no
+//!   suffix) is the identity and parses back to the bare channel
 //! * [`PolicySpec`] — `fixed[:n_c]`, `warmup:<start>:<growth>[:<cap>]`,
 //!   `deadline:<frac>`, `sequential[:n_c]`, `allfirst`, or the
 //!   closed-loop `control[:est=<ge|ema>][:replan=<k>]` (online channel
@@ -38,8 +41,9 @@ use crate::channel::estimator::{
     PacketObs,
 };
 use crate::channel::{
-    Channel, Delivery, ErasureChannel, GilbertElliottChannel, IdealChannel,
-    LinkState, MultiLaneChannel, RateLimitedChannel,
+    Channel, Delivery, ErasureChannel, FaultPlan, FaultSpec,
+    GilbertElliottChannel, IdealChannel, LinkState, MultiLaneChannel,
+    RateLimitedChannel,
 };
 use crate::coordinator::des::DesConfig;
 use crate::coordinator::run::RunResult;
@@ -48,7 +52,7 @@ use crate::coordinator::executor::{
 };
 use crate::coordinator::scheduler::{
     run_schedule_with_opts, BlockPolicy, ControlPolicy, DeviceScheduler,
-    FixedPolicy, GreedyScheduler, LaneView, OnlineArrivalSource,
+    FaultObs, FixedPolicy, GreedyScheduler, LaneView, OnlineArrivalSource,
     OverlapMode, PropFairScheduler, RoundRobinScheduler, RoundRobinSource,
     RunStats, RunWorkspace, ScheduledSource, SingleDeviceSource,
 };
@@ -83,13 +87,26 @@ pub enum ChannelSpec {
         rate_good: f64,
         rate_bad: f64,
     },
+    /// Any of the above wrapped in a scripted [`FaultPlan`]
+    /// (`<channel>:fault=<spec>`). A disabled spec never constructs
+    /// this variant — `fault=off` parses back to the bare channel, so
+    /// fault-free scenarios are structurally (and bit-) identical.
+    Faulty { inner: Box<ChannelSpec>, fault: FaultSpec },
 }
 
 impl ChannelSpec {
     /// Parse `ideal` | `erasure:<p>` | `rate:<r>[:<p>]` |
     /// `fading:<p_gb>:<p_bg>:<p_bad>[:<p_good>[:<r_bad>[:<r_good>]]]`
-    /// (defaults: `p_good = 0`, `r_bad = r_good = 1`).
+    /// (defaults: `p_good = 0`, `r_bad = r_good = 1`), each with an
+    /// optional `:fault=<spec>` suffix ([`FaultSpec::parse`]).
     pub fn parse(s: &str) -> Result<ChannelSpec> {
+        // the fault suffix comes off first: clauses contain ':' and '+'
+        // but never ":fault=", so the split is unambiguous
+        if let Some(i) = s.find(":fault=") {
+            let inner = ChannelSpec::parse(&s[..i])?;
+            let fault = FaultSpec::parse(&s[i + 7..])?;
+            return Ok(inner.with_fault(&fault));
+        }
         let parts: Vec<&str> = s.split(':').collect();
         let f64_at = |i: usize| -> Result<f64> {
             parts[i]
@@ -187,11 +204,18 @@ impl ChannelSpec {
                 ScenarioChannel::Fading(ge) => ge.expected_slowdown(),
                 _ => unreachable!("fading spec builds a fading channel"),
             },
+            // deliberately fault-blind: the a-priori Corollary-1
+            // recommendation must not anticipate scripted faults (the
+            // whole point of the graceful-degradation comparison)
+            ChannelSpec::Faulty { ref inner, .. } => {
+                inner.expected_slowdown()
+            }
         }
     }
 
     /// Instantiate a fresh channel on the stack (stateless across runs;
-    /// the sweep hot path builds one per run without a heap allocation).
+    /// the sweep hot path builds one per run without a heap allocation —
+    /// except [`Faulty`](Self::Faulty), which boxes its wrapper).
     pub fn make(&self) -> ScenarioChannel {
         match *self {
             ChannelSpec::Ideal => ScenarioChannel::Ideal(IdealChannel),
@@ -214,12 +238,58 @@ impl ChannelSpec {
                 LinkState::new(rate_good, p_good),
                 LinkState::new(rate_bad, p_bad),
             )),
+            ChannelSpec::Faulty { ref inner, ref fault } => {
+                ScenarioChannel::Faulty(Box::new(FaultPlan::new(
+                    fault.clone(),
+                    inner.make(),
+                )))
+            }
+        }
+    }
+
+    /// [`make`](Self::make) with the fault plan (if any) pinned to
+    /// device `lane` — required inside a
+    /// [`MultiLaneChannel`](crate::channel::MultiLaneChannel), which
+    /// routes packets to lane channels without forwarding
+    /// [`Channel::select_lane`].
+    pub fn make_for_lane(&self, lane: usize) -> ScenarioChannel {
+        match self.make() {
+            ScenarioChannel::Faulty(plan) => {
+                ScenarioChannel::Faulty(Box::new(plan.for_lane(lane)))
+            }
+            other => other,
         }
     }
 
     /// Boxed convenience form of [`make`](Self::make).
     pub fn build(&self) -> Box<dyn Channel> {
         Box::new(self.make())
+    }
+
+    /// Wrap this channel in `fault` (replacing any existing plan); a
+    /// disabled spec unwraps instead, so `with_fault(off)` is the bare
+    /// channel — the parity invariant behind `fault=off` ≡ absent.
+    pub fn with_fault(&self, fault: &FaultSpec) -> ChannelSpec {
+        let inner = match self {
+            ChannelSpec::Faulty { inner, .. } => inner.as_ref().clone(),
+            other => other.clone(),
+        };
+        if fault.is_disabled() {
+            inner
+        } else {
+            ChannelSpec::Faulty {
+                inner: Box::new(inner),
+                fault: fault.clone(),
+            }
+        }
+    }
+
+    /// The scripted fault plan, if one is attached.
+    pub fn fault_spec(&self) -> Option<&FaultSpec> {
+        match self {
+            ChannelSpec::Faulty { fault, .. } => Some(fault),
+            _ => None,
+        }
     }
 
     /// The Gilbert–Elliott parameters the `est=ge` belief filter
@@ -254,6 +324,9 @@ impl ChannelSpec {
                 LinkState::new(rate_good, p_good),
                 LinkState::new(rate_bad, p_bad),
             ),
+            // fault-blind, like expected_slowdown: the belief filter
+            // conditions on the nominal channel only
+            ChannelSpec::Faulty { ref inner, .. } => inner.ge_params(),
         }
     }
 
@@ -284,6 +357,9 @@ impl ChannelSpec {
                 }
                 label
             }
+            ChannelSpec::Faulty { ref inner, ref fault } => {
+                format!("{}:fault={}", inner.label(), fault.label())
+            }
         }
     }
 }
@@ -295,6 +371,9 @@ pub enum ScenarioChannel {
     Erasure(ErasureChannel),
     Rate(RateLimitedChannel<ErasureChannel>),
     Fading(GilbertElliottChannel),
+    /// Boxed to break the `FaultPlan<ScenarioChannel>` recursion — the
+    /// one allocation is paid only by fault-injected runs.
+    Faulty(Box<FaultPlan<ScenarioChannel>>),
 }
 
 impl Channel for ScenarioChannel {
@@ -309,6 +388,7 @@ impl Channel for ScenarioChannel {
             ScenarioChannel::Erasure(c) => c.transmit(sent_at, duration, rng),
             ScenarioChannel::Rate(c) => c.transmit(sent_at, duration, rng),
             ScenarioChannel::Fading(c) => c.transmit(sent_at, duration, rng),
+            ScenarioChannel::Faulty(c) => c.transmit(sent_at, duration, rng),
         }
     }
 
@@ -318,6 +398,15 @@ impl Channel for ScenarioChannel {
             ScenarioChannel::Erasure(c) => c.describe(),
             ScenarioChannel::Rate(c) => c.describe(),
             ScenarioChannel::Fading(c) => c.describe(),
+            ScenarioChannel::Faulty(c) => c.describe(),
+        }
+    }
+
+    fn select_lane(&mut self, lane: usize) {
+        // only the fault plan keys off the active device; the nominal
+        // channels keep the trait's no-op
+        if let ScenarioChannel::Faulty(c) = self {
+            c.select_lane(lane);
         }
     }
 }
@@ -568,6 +657,12 @@ impl BlockPolicy for ScenarioPolicy {
         // open-loop schedules keep the trait's no-op
         if let ScenarioPolicy::Control(p) = self {
             p.observe(obs);
+        }
+    }
+
+    fn observe_fault(&mut self, obs: &FaultObs) {
+        if let ScenarioPolicy::Control(p) = self {
+            p.observe_fault(obs);
         }
     }
 
@@ -1035,6 +1130,35 @@ pub fn registry() -> Vec<(&'static str, ScenarioSpec)> {
             },
         ),
         (
+            // the hetero3 fleet under faults: the bursty lane's device
+            // dies permanently at t = 150 and the protocol runs the
+            // hardened ARQ (timeout 4x, budget 2, evict after 2
+            // consecutive timeouts), so the closed-loop controller
+            // re-plans around the shed shard instead of stalling on it
+            "hetero3_dropout_control",
+            ScenarioSpec {
+                traffic: TrafficSpec::Hetero(HeteroSpec {
+                    k: 3,
+                    sched: SchedulerSpec::Greedy,
+                    skew: 0.5,
+                    channels: vec![
+                        ChannelSpec::Ideal,
+                        ChannelSpec::Erasure { p: 0.2 },
+                        ChannelSpec::parse(
+                            "fading:0.05:0.25:0.6:0:0.5\
+                             :fault=drop:2:150+retry:4:2:2",
+                        )
+                        .expect("preset fault spec parses"),
+                    ],
+                }),
+                policy: PolicySpec::Control {
+                    est: EstimatorSpec::Ema,
+                    replan_every: 1,
+                },
+                ..base.clone()
+            },
+        ),
+        (
             // severe, slow-mixing fades (~6-7 packets each, 40% of the
             // time, 50% loss at 0.3x rate while faded): the regime
             // where a fixed a-priori n_c wastes budget and the
@@ -1281,13 +1405,27 @@ impl<'a> ScenarioRunner<'a> {
     }
 
     /// The per-run config the scenario actually executes: the spec's
-    /// store-capacity and workload overrides applied on top of `cfg`.
+    /// store-capacity and workload overrides applied on top of `cfg`,
+    /// plus any scheduler/trainer-side fault tolerance (retry/timeout,
+    /// eviction, preemption windows) carried by the channel axis's
+    /// `fault=` suffix — an explicit `cfg.faults` wins over the spec's.
     /// Public so callers (and `sweep::batch::batchable`) can reason
     /// about what a run will actually do.
     pub fn effective_cfg(&self, cfg: &DesConfig) -> DesConfig {
+        let faults = if cfg.faults.is_trivial() {
+            std::iter::once(&self.spec.channel)
+                .chain(self.lane_channels.iter())
+                .filter_map(|c| c.fault_spec())
+                .map(|f| f.tolerance())
+                .find(|t| !t.is_trivial())
+                .unwrap_or_else(|| cfg.faults.clone())
+        } else {
+            cfg.faults.clone()
+        };
         DesConfig {
             store_capacity: self.spec.store_capacity.or(cfg.store_capacity),
             workload: self.spec.workload,
+            faults,
             ..cfg.clone()
         }
     }
@@ -1330,8 +1468,14 @@ impl<'a> ScenarioRunner<'a> {
         let mut multi_chan;
         let channel: &mut dyn Channel = match &self.spec.traffic {
             TrafficSpec::Hetero(_) => {
+                // per-lane fault plans must be pinned to their device:
+                // MultiLaneChannel routes without forwarding select_lane
                 multi_chan = MultiLaneChannel::new(
-                    self.lane_channels.iter().map(|c| c.make()).collect(),
+                    self.lane_channels
+                        .iter()
+                        .enumerate()
+                        .map(|(i, c)| c.make_for_lane(i))
+                        .collect(),
                 );
                 &mut multi_chan
             }
@@ -1757,5 +1901,99 @@ mod tests {
         assert_eq!(ge.p_bg, 0.25);
         assert_eq!(ge.bad.rate, 0.5);
         assert_eq!(ge.bad.p_loss, 0.6);
+    }
+
+    #[test]
+    fn fault_suffix_parses_and_round_trips() {
+        for s in [
+            "ideal:fault=outage:100:25",
+            "erasure:0.2:fault=drop:0:150+retry:4:2:2",
+            "rate:2:0.1:fault=ackloss:0.3",
+            "fading:0.05:0.25:0.6:fault=outage:50:10:120+retry:3",
+        ] {
+            let spec = ChannelSpec::parse(s).unwrap();
+            assert!(
+                matches!(spec, ChannelSpec::Faulty { .. }),
+                "'{s}' should wrap"
+            );
+            assert_eq!(spec.label(), s, "canonical form of '{s}'");
+            assert_eq!(ChannelSpec::parse(&spec.label()).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn fault_off_parses_to_the_bare_channel() {
+        // `fault=off` (and an empty spec) is structurally the bare
+        // channel — the fault-free parity invariant starts at parse time
+        assert_eq!(
+            ChannelSpec::parse("ideal:fault=off").unwrap(),
+            ChannelSpec::Ideal
+        );
+        assert_eq!(
+            ChannelSpec::parse("erasure:0.1:fault=off").unwrap(),
+            ChannelSpec::Erasure { p: 0.1 }
+        );
+        assert_eq!(
+            ChannelSpec::parse("erasure:0.1:fault=").unwrap(),
+            ChannelSpec::Erasure { p: 0.1 }
+        );
+        assert!(ChannelSpec::parse("ideal:fault=bogus:1").is_err());
+    }
+
+    #[test]
+    fn with_fault_wraps_replaces_and_unwraps() {
+        let base = ChannelSpec::Erasure { p: 0.1 };
+        let outage = FaultSpec::parse("outage:10:5").unwrap();
+        let ack = FaultSpec::parse("ackloss:0.2").unwrap();
+        let off = FaultSpec::parse("off").unwrap();
+        let wrapped = base.with_fault(&outage);
+        assert_eq!(wrapped.label(), "erasure:0.1:fault=outage:10:5");
+        // replacing does not nest
+        let replaced = wrapped.with_fault(&ack);
+        assert_eq!(replaced.label(), "erasure:0.1:fault=ackloss:0.2");
+        // off unwraps back to the bare channel
+        assert_eq!(wrapped.with_fault(&off), base);
+        assert_eq!(base.with_fault(&off), base);
+    }
+
+    #[test]
+    fn faulty_channels_are_fault_blind_a_priori() {
+        let inner = ChannelSpec::Erasure { p: 0.5 };
+        let faulty =
+            ChannelSpec::parse("erasure:0.5:fault=outage:10:5").unwrap();
+        assert_eq!(
+            faulty.expected_slowdown(),
+            inner.expected_slowdown(),
+            "the Corollary-1 prior must not anticipate scripted faults"
+        );
+        assert_eq!(
+            faulty.ge_params().good.expected_slowdown(),
+            inner.ge_params().good.expected_slowdown()
+        );
+    }
+
+    #[test]
+    fn effective_cfg_threads_the_spec_fault_tolerance() {
+        use crate::data::synth::{synth_calhousing, SynthSpec};
+        let ds = synth_calhousing(&SynthSpec { n: 32, ..Default::default() });
+        let cfg = DesConfig::paper(8, 2.0, 100.0, 1);
+        // channel-axis retry clause lands in cfg.faults
+        let spec = ScenarioSpec {
+            channel: ChannelSpec::parse("ideal:fault=retry:4:2:2").unwrap(),
+            ..ScenarioSpec::paper()
+        };
+        let eff = ScenarioRunner::new(spec, &ds).effective_cfg(&cfg);
+        assert_eq!(eff.faults.timeout_mult, 4.0);
+        assert_eq!(eff.faults.retry_budget, 2);
+        assert_eq!(eff.faults.evict_after, 2);
+        // a per-lane clause on hetero traffic lands too
+        let spec = from_name("hetero3_dropout_control").unwrap();
+        let eff = ScenarioRunner::new(spec, &ds).effective_cfg(&cfg);
+        assert_eq!(eff.faults.timeout_mult, 4.0);
+        assert_eq!(eff.faults.evict_after, 2);
+        // fault-free specs keep the config's (trivial) tolerance
+        let eff = ScenarioRunner::new(ScenarioSpec::paper(), &ds)
+            .effective_cfg(&cfg);
+        assert!(eff.faults.is_trivial());
     }
 }

@@ -1,0 +1,279 @@
+//! Fault-layer parity: the fault-injection machinery must be invisible
+//! unless a fault actually fires.
+//!
+//! Three contracts, each load-bearing for the robustness layer:
+//!
+//! 1. `fault=off` (and an absent suffix) parse to the *structurally
+//!    identical* spec — a disabled plan never constructs a `FaultPlan`,
+//!    so fault-free bit-identity holds by construction.
+//! 2. An *armed but dormant* plan — clauses that cannot fire within the
+//!    run horizon, including an armed `retry:` tolerance that switches
+//!    the scheduler onto its ARQ-aware path — is bit-for-bit identical
+//!    to the bare scenario across every axis: channels, policies,
+//!    traffic shapes, workloads. This is the strong form of the
+//!    "a clause that cannot fire draws nothing" contract: wrapping the
+//!    channel and arming the timeout machinery must not perturb a
+//!    single RNG draw, event, or loss bit.
+//! 3. Scenarios whose faults DO fire stay batchable, and the
+//!    batched-seed SoA engine replays them bit-identically to the
+//!    scalar engine at every lane width.
+
+use edgepipe::channel::FaultSpec;
+use edgepipe::coordinator::des::DesConfig;
+use edgepipe::coordinator::run::RunResult;
+use edgepipe::coordinator::scheduler::RunWorkspace;
+use edgepipe::data::synth::{synth_calhousing, SynthSpec};
+use edgepipe::model::Workload;
+use edgepipe::sweep::scenario::{
+    ChannelSpec, EstimatorSpec, HeteroSpec, PolicySpec, ScenarioRunner,
+    ScenarioSpec, SchedulerSpec, TrafficSpec,
+};
+use edgepipe::sweep::{batchable, from_name, mc_scenario_loss_lanes};
+
+/// Every clause armed, none able to fire before `t = 100000` — far past
+/// any run horizon used here. The `retry:` clause matters most: it
+/// flips `DesConfig::faults` non-trivial, so the scheduler runs its
+/// timeout/eviction bookkeeping on every delivery.
+const DORMANT_ARMED: &str =
+    "outage:100000:10+drop:0:100000+preempt:100000:5+retry:100000:3:2";
+
+/// Channel-side clauses only (trivial tolerance): exercises the
+/// `FaultPlan` wrapper transparency without touching the scheduler.
+const DORMANT_WRAPPER: &str = "outage:100000:10+drop:0:100000";
+
+fn parity_ds() -> edgepipe::data::Dataset {
+    synth_calhousing(&SynthSpec { n: 240, ..Default::default() })
+}
+
+fn trace_cfg(seed: u64) -> DesConfig {
+    DesConfig {
+        record_blocks: false,
+        event_capacity: 1 << 14,
+        ..DesConfig::paper(24, 6.0, 420.0, seed)
+    }
+}
+
+fn fading() -> ChannelSpec {
+    ChannelSpec::Fading {
+        p_gb: 0.05,
+        p_bg: 0.25,
+        p_good: 0.0,
+        p_bad: 0.6,
+        rate_good: 1.0,
+        rate_bad: 1.0,
+    }
+}
+
+/// One spec per scenario axis the fault layer must stay invisible on.
+fn axis_specs() -> Vec<ScenarioSpec> {
+    let paper = ScenarioSpec::paper();
+    vec![
+        paper.clone(),
+        ScenarioSpec {
+            channel: ChannelSpec::Erasure { p: 0.2 },
+            ..paper.clone()
+        },
+        ScenarioSpec {
+            channel: fading(),
+            policy: PolicySpec::Control {
+                est: EstimatorSpec::Ge,
+                replan_every: 2,
+            },
+            ..paper.clone()
+        },
+        ScenarioSpec {
+            policy: PolicySpec::Warmup { start: 4, growth: 2.0, cap: 64 },
+            ..paper.clone()
+        },
+        ScenarioSpec { workload: Workload::Logistic, ..paper.clone() },
+        ScenarioSpec { traffic: TrafficSpec::Devices(3), ..paper.clone() },
+        ScenarioSpec {
+            traffic: TrafficSpec::Online { rate: 0.8 },
+            ..paper
+        },
+    ]
+}
+
+fn hetero(lanes: Vec<ChannelSpec>) -> ScenarioSpec {
+    ScenarioSpec {
+        traffic: TrafficSpec::Hetero(
+            HeteroSpec::new(3, SchedulerSpec::Greedy, 0.5, lanes)
+                .expect("valid hetero spec"),
+        ),
+        ..ScenarioSpec::paper()
+    }
+}
+
+fn assert_bit_identical(ctx: &str, bare: &RunResult, faulted: &RunResult) {
+    assert_eq!(
+        bare.final_loss.to_bits(),
+        faulted.final_loss.to_bits(),
+        "{ctx}: final loss diverged"
+    );
+    assert_eq!(bare.final_w.len(), faulted.final_w.len(), "{ctx}: dim");
+    for (i, (a, b)) in bare.final_w.iter().zip(&faulted.final_w).enumerate()
+    {
+        assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: final_w[{i}] diverged");
+    }
+    assert_eq!(bare.curve.len(), faulted.curve.len(), "{ctx}: curve len");
+    for ((ta, la), (tb, lb)) in bare.curve.iter().zip(&faulted.curve) {
+        assert_eq!(ta.to_bits(), tb.to_bits(), "{ctx}: curve time diverged");
+        assert_eq!(la.to_bits(), lb.to_bits(), "{ctx}: curve loss diverged");
+    }
+    assert_eq!(bare.updates, faulted.updates, "{ctx}: updates");
+    assert_eq!(bare.blocks_sent, faulted.blocks_sent, "{ctx}: sent");
+    assert_eq!(
+        bare.blocks_delivered, faulted.blocks_delivered,
+        "{ctx}: delivered"
+    );
+    assert_eq!(bare.blocks_missed, faulted.blocks_missed, "{ctx}: missed");
+    assert_eq!(
+        bare.retransmissions, faulted.retransmissions,
+        "{ctx}: retransmissions"
+    );
+    assert_eq!(bare.case, faulted.case, "{ctx}: timeline case");
+    // dormant plans must never trip the fault counters...
+    assert_eq!(faulted.timeouts, 0, "{ctx}: phantom timeout");
+    assert_eq!(faulted.blocks_abandoned, 0, "{ctx}: phantom abandonment");
+    assert_eq!(faulted.evictions, 0, "{ctx}: phantom eviction");
+    assert_eq!(faulted.samples_lost, 0, "{ctx}: phantom shed samples");
+    assert!(!faulted.degraded_completion, "{ctx}: phantom degradation");
+    // ...and the event log must match event-for-event
+    assert_eq!(
+        format!("{:?}", bare.events),
+        format!("{:?}", faulted.events),
+        "{ctx}: event log diverged"
+    );
+}
+
+#[test]
+fn fault_off_and_absent_are_the_same_channel_spec() {
+    for s in [
+        "ideal",
+        "erasure:0.2",
+        "rate:0.5:0.1",
+        "fading:0.05:0.25:0.6",
+        "fading:0.05:0.25:0.6:0:0.5",
+    ] {
+        let bare = ChannelSpec::parse(s).unwrap();
+        for suffix in [":fault=off", ":fault="] {
+            let wrapped =
+                ChannelSpec::parse(&format!("{s}{suffix}")).unwrap();
+            assert_eq!(bare, wrapped, "'{s}{suffix}' must be the bare spec");
+            assert_eq!(bare.label(), wrapped.label());
+        }
+        // the programmatic route agrees with the grammar
+        assert_eq!(bare, bare.with_fault(&FaultSpec::default()));
+        assert_eq!(bare, bare.with_fault(&FaultSpec::parse("off").unwrap()));
+    }
+}
+
+#[test]
+fn dormant_fault_plans_are_bit_identical_on_every_axis() {
+    let ds = parity_ds();
+    for dormant in [DORMANT_WRAPPER, DORMANT_ARMED] {
+        let fault = FaultSpec::parse(dormant).unwrap();
+        assert!(!fault.is_disabled(), "'{dormant}' must construct a plan");
+        for (k, spec) in axis_specs().into_iter().enumerate() {
+            let faulted = ScenarioSpec {
+                channel: spec.channel.with_fault(&fault),
+                ..spec.clone()
+            };
+            assert_ne!(spec.label(), faulted.label(), "spec #{k}: no wrap?");
+            for seed in [13u64, 77] {
+                let cfg = trace_cfg(seed);
+                let a = ScenarioRunner::new(spec.clone(), &ds)
+                    .run(&cfg)
+                    .unwrap();
+                let b = ScenarioRunner::new(faulted.clone(), &ds)
+                    .run(&cfg)
+                    .unwrap();
+                let ctx = format!(
+                    "spec #{k} '{}' + '{dormant}' seed {seed}",
+                    spec.label()
+                );
+                assert_bit_identical(&ctx, &a, &b);
+            }
+        }
+    }
+}
+
+#[test]
+fn dormant_fault_plans_are_bit_identical_on_hetero_lanes() {
+    let ds = parity_ds();
+    let lanes = vec![ChannelSpec::Ideal, ChannelSpec::Erasure { p: 0.2 }, fading()];
+    let fault = FaultSpec::parse(DORMANT_ARMED).unwrap();
+    let bare = hetero(lanes.clone());
+    let faulted =
+        hetero(lanes.iter().map(|c| c.with_fault(&fault)).collect());
+    for seed in [13u64, 77] {
+        let cfg = trace_cfg(seed);
+        let a = ScenarioRunner::new(bare.clone(), &ds).run(&cfg).unwrap();
+        let b = ScenarioRunner::new(faulted.clone(), &ds).run(&cfg).unwrap();
+        let ctx = format!("hetero3 + '{DORMANT_ARMED}' seed {seed}");
+        assert_bit_identical(&ctx, &a, &b);
+    }
+}
+
+#[test]
+fn live_fault_scenarios_stay_batchable_and_batch_bitwise() {
+    let ds = synth_calhousing(&SynthSpec { n: 320, ..Default::default() });
+    let base = DesConfig {
+        loss_every: 0,
+        record_blocks: false,
+        collect_snapshots: false,
+        event_capacity: 0,
+        ..DesConfig::paper(32, 5.0, 640.0, 19)
+    };
+    let paper = ScenarioSpec::paper();
+    let specs = vec![
+        ScenarioSpec {
+            channel: ChannelSpec::parse(
+                "erasure:0.1:fault=outage:80:40:200+retry:4:2",
+            )
+            .unwrap(),
+            ..paper.clone()
+        },
+        ScenarioSpec {
+            channel: ChannelSpec::parse("ideal:fault=drop:0:200+retry:4:2:2")
+                .unwrap(),
+            ..paper
+        },
+        from_name("hetero3_dropout_control")
+            .expect("hetero3_dropout_control preset registered"),
+    ];
+    for (k, spec) in specs.iter().enumerate() {
+        let runner = ScenarioRunner::new(spec.clone(), &ds);
+        // fault scenarios must not silently fall off the fast path
+        assert!(
+            batchable(&runner.effective_cfg(&base)),
+            "spec #{k} {} must stay batchable",
+            spec.label()
+        );
+        // ...and must actually fire, or the parity below is vacuous
+        let mut ws = RunWorkspace::new();
+        let stats = runner.run_with(&mut ws, &base).unwrap();
+        assert!(
+            stats.timeouts > 0,
+            "spec #{k} {}: faults never fired",
+            spec.label()
+        );
+        let scalar = mc_scenario_loss_lanes(&ds, &base, spec, 5, 2, 1);
+        for lanes in [4usize, 8] {
+            let batched =
+                mc_scenario_loss_lanes(&ds, &base, spec, 5, 2, lanes);
+            assert_eq!(
+                scalar.mean.to_bits(),
+                batched.mean.to_bits(),
+                "spec #{k} {} lanes={lanes}: mean diverged",
+                spec.label()
+            );
+            assert_eq!(
+                scalar.std.to_bits(),
+                batched.std.to_bits(),
+                "spec #{k} {} lanes={lanes}: std diverged",
+                spec.label()
+            );
+        }
+    }
+}

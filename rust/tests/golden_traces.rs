@@ -139,6 +139,32 @@ fn golden_hetero3_scenario() {
     snapshot("hetero3_greedy", &spec);
 }
 
+/// Acceptance criterion: the fault-injection layer's protocol semantics
+/// are pinned bit-exactly on the `hetero3_dropout_control` preset — the
+/// hetero3 fleet whose bursty lane dies permanently at t = 150 under
+/// the hardened ARQ (timeout 4x, budget 2, evict after 2 consecutive
+/// timeouts). The fixture freezes the timeout ladder
+/// (`BlockTimedOut { resend }`), the eviction decision
+/// (`DeviceEvicted { lost_samples }`), the re-scheduling of the two
+/// surviving lanes and the controller's re-planned payloads in one
+/// diff-able artifact.
+#[test]
+fn golden_hetero3_dropout_control_scenario() {
+    let spec = edgepipe::sweep::scenario::from_name("hetero3_dropout_control")
+        .expect("hetero3_dropout_control preset registered");
+    let ds = trace_ds();
+    let cfg = trace_cfg();
+    let run = run_scenario(&spec, &ds, &cfg);
+    // the scripted dropout must actually bite in this window
+    assert!(run.timeouts > 0, "no ARQ timeouts fired");
+    assert!(run.evictions >= 1, "the dropped lane was never evicted");
+    assert!(run.samples_lost > 0, "eviction must shed the dead shard");
+    assert_golden_trace(
+        "hetero3_dropout_control",
+        &render_trace(&spec.label(), &run.events),
+    );
+}
+
 /// Acceptance criterion: the closed-loop controller's decision trace on
 /// the `adaptive_fading` preset is pinned bit-exactly. The fixture
 /// freezes the whole control loop — the GE belief trajectory (through

@@ -9,6 +9,7 @@
 //! approximate comparison) is the right assertion here: any label that
 //! drops, reorders or re-defaults a field is a real grammar bug.
 
+use edgepipe::channel::FaultSpec;
 use edgepipe::model::Workload;
 use edgepipe::sweep::scenario::{
     ChannelSpec, EstimatorSpec, HeteroSpec, PolicySpec, ScenarioSpec,
@@ -17,7 +18,7 @@ use edgepipe::sweep::scenario::{
 use edgepipe::testkit::{forall, Gen};
 
 fn gen_channel(g: &mut Gen) -> ChannelSpec {
-    match g.usize_in(0..=3) {
+    let base = match g.usize_in(0..=3) {
         0 => ChannelSpec::Ideal,
         1 => ChannelSpec::Erasure { p: g.f64_in(0.0, 0.99) },
         2 => ChannelSpec::Rate {
@@ -41,6 +42,22 @@ fn gen_channel(g: &mut Gen) -> ChannelSpec {
                 g.f64_log(0.1, 10.0)
             },
         },
+    };
+    // occasionally wrap in a fault plan: the `:fault=` suffix must
+    // round-trip on every base channel, including inside the hetero
+    // `ch=` lane lists below (randomized *fault-spec* round-trips live
+    // in rust/tests/fault_robustness.rs)
+    if g.bool_with(0.2) {
+        let fault = FaultSpec::parse(*g.choose(&[
+            "outage:50:10:200",
+            "ackloss:0.25",
+            "drop:1:300+retry:4:2:2",
+            "preempt:10:5+retry:2",
+        ]))
+        .expect("fault spec literal valid");
+        base.with_fault(&fault)
+    } else {
+        base
     }
 }
 
