@@ -89,10 +89,10 @@ fn main() -> Result<()> {
         ..cfg.clone()
     };
     let t1 = Instant::now();
-    let scalar = mc_final_loss_lanes(&train, &sweep_cfg, seeds, 0, 1);
+    let scalar = mc_final_loss_lanes(&train, &sweep_cfg, seeds, 0, 1)?;
     let scalar_time = t1.elapsed();
     let t2 = Instant::now();
-    let batched = mc_final_loss_lanes(&train, &sweep_cfg, seeds, 0, 8);
+    let batched = mc_final_loss_lanes(&train, &sweep_cfg, seeds, 0, 8)?;
     let batched_time = t2.elapsed();
     println!(
         "MC over {seeds} seeds: scalar {} vs 8-lane batched {} \

@@ -40,7 +40,7 @@ fn main() -> Result<()> {
         1.0,
         &[1.0, 10.0, 100.0, 1000.0],
         160,
-    );
+    )?;
     print!("{}", out.render());
 
     let dir = std::path::Path::new("out");

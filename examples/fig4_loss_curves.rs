@@ -39,7 +39,7 @@ fn main() -> Result<()> {
         search_points: if fast { 10 } else { 24 },
         ..Fig4Config::paper(n_o, t_budget)
     };
-    let out = fig4_data(&train, &params, &cfg);
+    let out = fig4_data(&train, &params, &cfg)?;
     print!("{}", out.render());
 
     let dir = std::path::Path::new("out");

@@ -35,7 +35,8 @@ fn main() {
             1.0,
             &[1.0, 10.0, 100.0, 1000.0],
             160,
-        );
+        )
+        .expect("fig3 grid");
         print!("{}", out.render());
     });
 

@@ -34,7 +34,7 @@ fn main() {
             search_points: if fast { 8 } else { 24 },
             ..Fig4Config::paper(100.0, t)
         };
-        let out = fig4_data(&train, &params, &cfg);
+        let out = fig4_data(&train, &params, &cfg).expect("fig4 sweep");
         print!("{}", out.render());
         println!("search grid:");
         for (nc, s) in &out.search {

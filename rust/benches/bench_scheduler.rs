@@ -77,6 +77,7 @@ fn main() {
                     seeds,
                     0,
                 )
+                .expect("mc sweep")
                 .mean,
             );
         },

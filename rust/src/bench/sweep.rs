@@ -266,7 +266,7 @@ pub fn run_sweep_bench(cfg: &SweepBenchConfig) -> SweepBenchReport {
         if cfg.threads == 0 { default_threads() } else { cfg.threads };
     let t_budget = 1.5 * train.n as f64;
     let base = bench_base(cfg.n_o, t_budget);
-    let grid = log_grid(train.n, cfg.grid_points);
+    let grid = log_grid(train.n, cfg.grid_points).expect("bench grid");
     let runner = ScenarioRunner::new(ScenarioSpec::paper(), &train);
     let jobs: Vec<(usize, u64)> = grid
         .iter()
@@ -330,6 +330,7 @@ pub fn run_sweep_bench(cfg: &SweepBenchConfig) -> SweepBenchReport {
                 grouped_losses(&refs, cfg.seeds, threads, width, |p, s| {
                     per_seed(&base, grid[p], s)
                 })
+                .expect("bench sweep run failed")
             });
             assert_eq!(
                 opt_losses, lane_losses,

@@ -21,7 +21,10 @@ COMMANDS:
     baselines   compare pipelined vs sequential vs transmit-all-first
     sweep       Monte-Carlo final-loss sweep over block sizes
     scenario    Monte-Carlo sweep over registered scenarios
-                (channel × policy × device/traffic grids)
+                (channel × policy × device/traffic grids); --stream /
+                --resume run it as a journaled constant-memory pipeline
+    serve       long-running scenario service: line-delimited JSON
+                requests over TCP (or stdin), warm runner/result cache
     bench       sweep-engine throughput benchmark (baseline vs optimized;
                 runs/sec, SGD updates/sec, allocations/run)
     tightness   actual gap vs Theorem 1 vs Corollary 1
@@ -72,6 +75,30 @@ SCENARIO OPTIONS (scenario command):
                              = the unmodified (bit-identical) scenario.
                              Any channel spec also takes the same plan
                              inline as a :fault=<spec> suffix.
+    --stream <file>          run the sweep as a streaming pipeline,
+                             appending one JSONL row per completed seed
+                             group to <file>; constant memory in the
+                             grid size, results bit-identical to the
+                             in-memory sweep. Failed groups become
+                             error rows (exit 1), never panics.
+    --resume <file>          replay a --stream journal first: completed
+                             groups are reused, error rows and the
+                             truncated tail re-run, new groups append
+                             to <file> (or to --stream if also given).
+                             The journal header pins scenarios, seeds,
+                             lanes and config; mismatches are errors.
+
+SERVE OPTIONS (serve command):
+    --addr <host:port>       TCP listen address [default: 127.0.0.1:4088]
+    --stdin 1                serve one session on stdin/stdout instead
+    --max-seeds <n>          per-request seed-count cap [default: 4096]
+    (requests are one JSON object per line: axis strings as in the
+     scenario flags — {\"channel\":\"erasure:0.1\",\"policy\":\"fixed\",
+     \"traffic\":\"1\",\"workload\":\"ridge\",\"store\":0} — plus
+     \"seeds\", \"seed0\", \"n_c\", optional \"id\" echoed back;
+     {\"cmd\":\"ping\"} and {\"cmd\":\"shutdown\"} control the loop.
+     Replies carry mean/std/sem/n and \"cache\":\"hit|miss\"; identical
+     (scenario, n_c, seed0, seeds) requests are served from cache.)
 
 CONTROL OPTIONS (control command):
     --severities <a,b,..>    channel specs to sweep (default: ideal +
@@ -123,6 +150,11 @@ EXAMPLES:
     edgepipe scenario --channels erasure:0.1 --policies control:est=ema \\
         --faults off,outage:2000:500+retry:4:3,drop:0:5000+retry:4:2:2
     edgepipe scenario --preset hetero3_dropout_control --set sweep.seeds=24
+    edgepipe scenario --preset all --set sweep.seeds=1000 \\
+        --stream out/sweep.jsonl          # journaled, constant memory
+    edgepipe scenario --preset all --set sweep.seeds=1000 \\
+        --resume out/sweep.jsonl          # pick up where a kill stopped
+    edgepipe serve --addr 127.0.0.1:4088 --set protocol.n_c=437
     edgepipe control --set sweep.seeds=24
     edgepipe bench --json BENCH_sweep.json
 ";

@@ -35,6 +35,7 @@ pub fn dispatch(args: &Args) -> Result<i32> {
         "baselines" => cmd_baselines(args),
         "sweep" => cmd_sweep(args),
         "scenario" => cmd_scenario(args),
+        "serve" => cmd_serve(args),
         "bench" => cmd_bench(args),
         "tightness" => cmd_tightness(args),
         "adaptive" => cmd_adaptive(args),
@@ -354,7 +355,7 @@ fn cmd_fig3(args: &Args) -> Result<i32> {
         cfg.protocol.tau_p,
         &cfg.sweep.n_os,
         160,
-    );
+    )?;
     print!("{}", out.render());
     let dir = Path::new(&args.out_dir);
     write_csv(&out.curve_table(), &dir.join("fig3_curves.csv"))?;
@@ -382,7 +383,7 @@ fn cmd_fig4(args: &Args) -> Result<i32> {
         threads: cfg.sweep.threads,
         ..Fig4Config::paper(cfg.protocol.n_o, t)
     };
-    let out = fig4_data(&ds, &params, &f4);
+    let out = fig4_data(&ds, &params, &f4)?;
     print!("{}", out.render());
     let dir = Path::new(&args.out_dir);
     write_csv(&out.curve_table(), &dir.join("fig4_curves.csv"))?;
@@ -443,7 +444,7 @@ fn cmd_sweep(args: &Args) -> Result<i32> {
     let ds = build_dataset(&cfg)?;
     let t = cfg.protocol.deadline(ds.n);
     let grid = if cfg.sweep.n_cs.is_empty() {
-        log_grid(ds.n, 24)
+        log_grid(ds.n, 24)?
     } else {
         cfg.sweep.n_cs.clone()
     };
@@ -457,7 +458,7 @@ fn cmd_sweep(args: &Args) -> Result<i32> {
         &grid,
         cfg.sweep.seeds,
         cfg.sweep.threads,
-    );
+    )?;
     let mut table =
         CsvTable::new(&["n_c", "final_loss_mean", "final_loss_std"]);
     println!("final loss vs n_c (n_o={}, seeds={}):", des.n_o, cfg.sweep.seeds);
@@ -625,8 +626,48 @@ fn cmd_scenario(args: &Args) -> Result<i32> {
         );
     }
 
-    let rows =
-        scenario_grid(&ds, &base, &specs, cfg.sweep.seeds, cfg.sweep.threads);
+    // --stream <file> journals every completed group as JSONL and
+    // aggregates in constant memory; --resume <file> replays a journal
+    // first (appending new groups to the same file unless --stream
+    // names another). Both run the streaming pipeline, which is
+    // bit-identical to the in-memory path row-for-row.
+    let stream_path = args.extra.get("stream").map(std::path::PathBuf::from);
+    let resume_path = args.extra.get("resume").map(std::path::PathBuf::from);
+    let (rows, failed) = if stream_path.is_some() || resume_path.is_some() {
+        use crate::sweep::stream::{stream_scenario_grid, StreamOptions};
+        let opts = StreamOptions {
+            seeds: cfg.sweep.seeds,
+            threads: cfg.sweep.threads,
+            journal: stream_path,
+            resume: resume_path,
+            ..StreamOptions::default()
+        };
+        let outcome = stream_scenario_grid(&ds, &base, &specs, &opts)?;
+        if !args.quiet {
+            println!(
+                "streamed {} group(s) ({} reused from journal)",
+                outcome.groups_run, outcome.groups_reused
+            );
+        }
+        for e in &outcome.errors {
+            eprintln!(
+                "error: {} seeds {}..: {}",
+                e.label,
+                e.seed0,
+                e.message
+            );
+        }
+        (outcome.rows, !outcome.errors.is_empty())
+    } else {
+        let rows = scenario_grid(
+            &ds,
+            &base,
+            &specs,
+            cfg.sweep.seeds,
+            cfg.sweep.threads,
+        )?;
+        (rows, false)
+    };
     let mut table = CsvTable::new(&[
         "scenario",
         "final_loss_mean",
@@ -647,16 +688,58 @@ fn cmd_scenario(args: &Args) -> Result<i32> {
             format!("{}", s.n),
         ]);
     }
+    // rows with no surviving seeds carry NaN stats; never let them
+    // panic the ranking
     let best = rows
         .iter()
-        .min_by(|a, b| a.1.mean.partial_cmp(&b.1.mean).unwrap())
-        .unwrap();
-    println!("best scenario: {} ({:.6})", best.0, best.1.mean);
+        .filter(|r| r.1.n > 0)
+        .min_by(|a, b| {
+            a.1.mean
+                .partial_cmp(&b.1.mean)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+    if let Some(best) = best {
+        println!("best scenario: {} ({:.6})", best.0, best.1.mean);
+    }
     let out = Path::new(&args.out_dir).join("scenario_sweep.csv");
     write_csv(&table, &out)?;
     if !args.quiet {
         println!("wrote {}", out.display());
     }
+    Ok(if failed { 1 } else { 0 })
+}
+
+/// Long-running scenario service: line-delimited JSON requests over TCP
+/// (or stdin/stdout with `--stdin 1`), reusing warm runners, a
+/// persistent batch workspace and a result cache across requests.
+fn cmd_serve(args: &Args) -> Result<i32> {
+    use crate::sweep::serve::{serve_connection, serve_tcp, ServeState};
+
+    let cfg = load_config(args)?;
+    let ds = build_dataset(&cfg)?;
+    let t = cfg.protocol.deadline(ds.n);
+    let n_c = resolve_n_c(&cfg, &ds, t);
+    let base = sweep_base(&cfg, t, n_c);
+    let max_seeds: usize =
+        args.extra_or("max-seeds", "4096").parse().map_err(|_| {
+            anyhow::anyhow!("--max-seeds must be a positive integer")
+        })?;
+    if !args.quiet {
+        println!(
+            "serve: N={} n_c={} n_o={} T={t} (max {} seeds/request)",
+            ds.n, base.n_c, base.n_o, max_seeds
+        );
+    }
+    let mut state = ServeState::new(&ds, base, max_seeds, 0);
+    if args.extra_or("stdin", "0") == "1" {
+        serve_connection(
+            &mut state,
+            std::io::stdin().lock(),
+            std::io::stdout().lock(),
+        )?;
+        return Ok(0);
+    }
+    serve_tcp(&mut state, &args.extra_or("addr", "127.0.0.1:4088"))?;
     Ok(0)
 }
 
@@ -1005,6 +1088,52 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(dispatch(&args).unwrap(), 0);
+    }
+
+    #[test]
+    fn scenario_stream_and_resume_match_in_memory_csv() {
+        let base_dir = std::env::temp_dir().join("edgepipe_stream_cli_test");
+        let journal =
+            base_dir.join(format!("j_{}.jsonl", std::process::id()));
+        let mk = |out: &str, flag: Option<(&str, &std::path::Path)>| {
+            let mut extra = std::collections::BTreeMap::new();
+            extra.insert("channels".to_string(), "ideal".to_string());
+            extra
+                .insert("policies".to_string(), "fixed,sequential".to_string());
+            if let Some((k, p)) = flag {
+                extra.insert(k.to_string(), p.to_string_lossy().into_owned());
+            }
+            Args {
+                command: "scenario".into(),
+                overrides: vec![
+                    ("data.n_raw".into(), "400".into()),
+                    ("protocol.n_c".into(), "40".into()),
+                    ("sweep.seeds".into(), "3".into()),
+                ],
+                out_dir: base_dir.join(out).to_string_lossy().into_owned(),
+                backend: "native".into(),
+                quiet: true,
+                extra,
+                ..Default::default()
+            }
+        };
+        let _ = std::fs::remove_file(&journal);
+        assert_eq!(dispatch(&mk("mem", None)).unwrap(), 0);
+        let streaming = mk("stream", Some(("stream", &journal)));
+        assert_eq!(dispatch(&streaming).unwrap(), 0);
+        let read = |out: &str| {
+            std::fs::read_to_string(
+                base_dir.join(out).join("scenario_sweep.csv"),
+            )
+            .unwrap()
+        };
+        let mem = read("mem");
+        assert_eq!(mem, read("stream"), "streamed CSV must be byte-identical");
+        // replaying the full journal reproduces the CSV without re-runs
+        let resuming = mk("resumed", Some(("resume", &journal)));
+        assert_eq!(dispatch(&resuming).unwrap(), 0);
+        assert_eq!(mem, read("resumed"), "resumed CSV must be byte-identical");
+        let _ = std::fs::remove_file(&journal);
     }
 
     #[test]

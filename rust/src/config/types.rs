@@ -377,6 +377,12 @@ impl ExperimentConfig {
         if !(0.0..=1.0).contains(&self.scenario.device_skew) {
             bail!("scenario.device_skew must be in [0, 1]");
         }
+        if self.sweep.seeds == 0 {
+            bail!(
+                "sweep.seeds must be >= 1 (a 0-seed Monte-Carlo estimate \
+                 is undefined)"
+            );
+        }
         crate::channel::FaultSpec::parse(&self.scenario.fault)
             .context("bad scenario.fault")?;
         Ok(())
@@ -462,6 +468,25 @@ mod tests {
         assert!(ExperimentConfig::from_doc(&doc).is_err());
         let doc = parse_toml("[protocol]\ntau_p = 0.0\n").unwrap();
         assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn zero_seed_sweeps_are_rejected_at_the_boundary() {
+        // seeds = 0 would produce an undefined (NaN) MC estimate; both
+        // the TOML and the --set override routes must refuse it early
+        let doc = parse_toml("[sweep]\nseeds = 0\n").unwrap();
+        let err = ExperimentConfig::from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("sweep.seeds"), "{err}");
+        assert!(ExperimentConfig::load(
+            None,
+            &[("sweep.seeds".into(), "0".into())],
+        )
+        .is_err());
+        assert!(ExperimentConfig::load(
+            None,
+            &[("sweep.seeds".into(), "1".into())],
+        )
+        .is_ok());
     }
 
     #[test]

@@ -64,6 +64,47 @@ pub fn write_csv(table: &CsvTable, path: &Path) -> Result<()> {
     Ok(())
 }
 
+/// Append-mode JSON-lines journal writer: one JSON value per line,
+/// flushed per line, so a killed process leaves at most one truncated
+/// trailing line (which the resume reader skips). Opening never
+/// truncates — resuming a sweep appends below the existing rows.
+pub struct JsonlWriter {
+    file: std::io::BufWriter<std::fs::File>,
+    path: std::path::PathBuf,
+}
+
+impl JsonlWriter {
+    /// Open `path` for appending, creating it (and parent dirs) if
+    /// missing.
+    pub fn append(path: &Path) -> Result<JsonlWriter> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening journal {}", path.display()))?;
+        Ok(JsonlWriter {
+            file: std::io::BufWriter::new(file),
+            path: path.to_path_buf(),
+        })
+    }
+
+    /// Write one JSON line (the value must already be serialized,
+    /// newline-free) and flush it to the OS so the row survives a kill.
+    pub fn write_line(&mut self, line: &str) -> Result<()> {
+        debug_assert!(!line.contains('\n'), "journal rows are single lines");
+        self.file
+            .write_all(line.as_bytes())
+            .and_then(|_| self.file.write_all(b"\n"))
+            .and_then(|_| self.file.flush())
+            .with_context(|| format!("writing journal {}", self.path.display()))
+    }
+}
+
 /// Write a JSON value (pretty) to disk, creating parent dirs.
 pub fn write_json(value: &Value, path: &Path) -> Result<()> {
     if let Some(parent) = path.parent() {
@@ -92,6 +133,26 @@ mod tests {
     fn column_mismatch_panics() {
         let mut t = CsvTable::new(&["a"]);
         t.push_nums(&[1.0, 2.0]);
+    }
+
+    #[test]
+    fn jsonl_appends_one_flushed_line_per_write() {
+        let dir = std::env::temp_dir().join("edgepipe_writer_test");
+        let p = dir.join(format!("j_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        {
+            let mut w = JsonlWriter::append(&p).unwrap();
+            w.write_line("{\"i\":0}").unwrap();
+            w.write_line("{\"i\":1}").unwrap();
+        }
+        // a second open APPENDS — resume must not clobber history
+        {
+            let mut w = JsonlWriter::append(&p).unwrap();
+            w.write_line("{\"i\":2}").unwrap();
+        }
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "{\"i\":0}\n{\"i\":1}\n{\"i\":2}\n");
+        std::fs::remove_file(&p).unwrap();
     }
 
     #[test]

@@ -40,7 +40,7 @@
 //! function variants take the count explicitly so parallel tests never
 //! race on process-global env.
 
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::des::DesConfig;
 use crate::coordinator::scheduler::{RunStats, RunWorkspace};
@@ -48,7 +48,7 @@ use crate::linalg::batch::MAX_LANES;
 use crate::model::{LaneModel, LogisticModel, RidgeModel, Workload};
 use crate::sgd::SgdEngine;
 use crate::sweep::scenario::ScenarioRunner;
-use crate::util::pool::parallel_map_with;
+use crate::util::pool::try_parallel_map_with;
 
 /// Environment knob selecting the Monte-Carlo lane count.
 pub const LANES_ENV: &str = "EDGEPIPE_LANES";
@@ -147,10 +147,9 @@ pub fn run_group(
     count: usize,
     mut cfg_for: impl FnMut(usize) -> DesConfig,
 ) -> Result<[LaneOutcome; MAX_LANES]> {
-    assert!(
-        (1..=MAX_LANES).contains(&count),
-        "group size {count} out of range"
-    );
+    if !(1..=MAX_LANES).contains(&count) {
+        bail!("group size {count} out of range (must be 1..={MAX_LANES})");
+    }
     bw.ensure_lanes(count);
     bw.cfgs.clear();
     for l in 0..count {
@@ -277,8 +276,8 @@ pub fn run_group(
 
 /// One batched fan-out job: a seed-group of one runner (scenario/grid
 /// point).
-#[derive(Clone, Copy, Debug)]
-pub(crate) struct GroupJob {
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GroupJob {
     /// Index into the caller's runner table.
     pub point: usize,
     /// First seed offset of the group.
@@ -287,25 +286,56 @@ pub(crate) struct GroupJob {
     pub len: usize,
 }
 
-/// Chunk `points × seeds` into lane-sized groups, point-major in seed
-/// order — flattening group results in job order reproduces the scalar
-/// fan-out's `(point, seed)` order exactly.
-pub(crate) fn group_jobs(
+/// Lazy enumeration of the lane-sized groups covering `points × seeds`,
+/// point-major in seed order (see [`group_jobs_iter`]). The streaming
+/// pipeline drives this iterator directly so an arbitrarily large grid
+/// never materializes its job list.
+#[derive(Clone, Debug)]
+pub struct GroupJobs {
     points: usize,
     seeds: usize,
     lanes: usize,
-) -> Vec<GroupJob> {
-    let lanes = lanes.clamp(1, MAX_LANES);
-    let mut jobs = Vec::new();
-    for point in 0..points {
-        let mut s = 0usize;
-        while s < seeds {
-            let len = lanes.min(seeds - s);
-            jobs.push(GroupJob { point, seed0: s as u64, len });
-            s += len;
+    point: usize,
+    s: usize,
+}
+
+impl Iterator for GroupJobs {
+    type Item = GroupJob;
+
+    fn next(&mut self) -> Option<GroupJob> {
+        while self.point < self.points {
+            if self.s < self.seeds {
+                let len = self.lanes.min(self.seeds - self.s);
+                let job =
+                    GroupJob { point: self.point, seed0: self.s as u64, len };
+                self.s += len;
+                return Some(job);
+            }
+            self.point += 1;
+            self.s = 0;
         }
+        None
     }
-    jobs
+}
+
+/// Chunk `points × seeds` into lane-sized groups, point-major in seed
+/// order — flattening group results in job order reproduces the scalar
+/// fan-out's `(point, seed)` order exactly. `lanes` is clamped to
+/// `1..=MAX_LANES`.
+pub fn group_jobs_iter(points: usize, seeds: usize, lanes: usize) -> GroupJobs {
+    GroupJobs {
+        points,
+        seeds,
+        lanes: lanes.clamp(1, MAX_LANES),
+        point: 0,
+        s: 0,
+    }
+}
+
+/// Eager form of [`group_jobs_iter`] for fan-outs that want the whole
+/// job list up front (the in-memory pool path).
+pub fn group_jobs(points: usize, seeds: usize, lanes: usize) -> Vec<GroupJob> {
+    group_jobs_iter(points, seeds, lanes).collect()
 }
 
 /// The grouped Monte-Carlo fan-out shared by every batched estimator:
@@ -313,35 +343,46 @@ pub(crate) fn group_jobs(
 /// lane-batched groups and returns final losses flattened point-major
 /// in seed order — element-for-element (and bit-for-bit) what the
 /// scalar fan-out returns.
+///
+/// A failed run no longer panics the pool: every group carries its own
+/// `Result`, sibling groups complete, and the first error *in job
+/// order* is returned with its `(point, seed range)` attached.
 pub(crate) fn grouped_losses(
     runners: &[&ScenarioRunner<'_>],
     seeds: usize,
     threads: usize,
     lanes: usize,
     cfg_for: impl Fn(usize, u64) -> DesConfig + Sync,
-) -> Vec<f64> {
+) -> Result<Vec<f64>> {
     let jobs = group_jobs(runners.len(), seeds, lanes);
-    let groups = parallel_map_with(
+    let groups = try_parallel_map_with(
         &jobs,
         threads,
         BatchWorkspace::new,
         |bw, job| {
             let outs = run_group(runners[job.point], bw, job.len, |l| {
                 cfg_for(job.point, job.seed0 + l as u64)
-            })
-            .expect("scenario run failed");
+            })?;
             let mut losses = [f64::NAN; MAX_LANES];
             for l in 0..job.len {
                 losses[l] = outs[l].final_loss;
             }
-            (losses, job.len)
+            Ok::<_, anyhow::Error>((losses, job.len))
         },
     );
     let mut flat = Vec::with_capacity(runners.len() * seeds);
-    for (losses, len) in groups {
+    for (group, job) in groups.into_iter().zip(&jobs) {
+        let (losses, len) = group.with_context(|| {
+            format!(
+                "scenario run failed: point {} seed group {}..{}",
+                job.point,
+                job.seed0,
+                job.seed0 + job.len as u64
+            )
+        })?;
         flat.extend_from_slice(&losses[..len]);
     }
-    flat
+    Ok(flat)
 }
 
 #[cfg(test)]
@@ -388,6 +429,45 @@ mod tests {
         // ragged tail: 5 seeds over width 4 → groups of 4 + 1
         assert_eq!(jobs[0].len, 4);
         assert_eq!(jobs[1].len, 1);
+    }
+
+    #[test]
+    fn group_jobs_iter_matches_eager_and_is_resumable() {
+        for (points, seeds, lanes) in
+            [(2, 5, 4), (3, 1, 8), (1, 17, 4), (4, 8, 16), (0, 5, 4), (2, 0, 4)]
+        {
+            let lazy: Vec<GroupJob> =
+                group_jobs_iter(points, seeds, lanes).collect();
+            assert_eq!(
+                lazy,
+                group_jobs(points, seeds, lanes),
+                "points={points} seeds={seeds} lanes={lanes}"
+            );
+        }
+        // the iterator is cheap state, not a materialized list: cloning
+        // mid-walk resumes from the same position
+        let mut it = group_jobs_iter(3, 5, 4);
+        it.next();
+        let rest_a: Vec<GroupJob> = it.clone().collect();
+        let rest_b: Vec<GroupJob> = it.collect();
+        assert_eq!(rest_a, rest_b);
+        assert_eq!(rest_a.len(), 3 * 2 - 1);
+    }
+
+    #[test]
+    fn run_group_size_errors_are_results_not_panics() {
+        let ds = synth_calhousing(&SynthSpec { n: 120, ..Default::default() });
+        let runner = ScenarioRunner::new(ScenarioSpec::paper(), &ds);
+        let base = DesConfig::paper(24, 5.0, 400.0, 7);
+        let mut bw = BatchWorkspace::new();
+        for count in [0usize, MAX_LANES + 1] {
+            let err = run_group(&runner, &mut bw, count, |_| base.clone())
+                .expect_err("out-of-range group size must be an Err");
+            assert!(
+                err.to_string().contains("out of range"),
+                "unexpected error: {err:#}"
+            );
+        }
     }
 
     #[test]

@@ -2,6 +2,8 @@
 //! for several overhead values `n_o`, with the bound optimum ñ_c (the
 //! crosses) and the full-delivery boundary `T = B_d(n_c+n_o)` (the dots).
 
+use anyhow::Result;
+
 use crate::bound::corollary1::{corollary1_bound, BoundParams};
 use crate::bound::optimizer::optimize_block_size;
 use crate::metrics::writer::CsvTable;
@@ -42,8 +44,8 @@ pub fn fig3_data(
     tau_p: f64,
     n_os: &[f64],
     grid_points: usize,
-) -> Fig3Output {
-    let grid = log_grid(n, grid_points);
+) -> Result<Fig3Output> {
+    let grid = log_grid(n, grid_points)?;
     let curves = n_os
         .iter()
         .map(|&n_o| {
@@ -71,13 +73,13 @@ pub fn fig3_data(
             }
         })
         .collect();
-    Fig3Output {
+    Ok(Fig3Output {
         curves,
         params: *params,
         n,
         t_budget,
         tau_p,
-    }
+    })
 }
 
 impl Fig3Output {
@@ -160,7 +162,8 @@ mod tests {
             1.0,
             &[1.0, 10.0, 100.0, 1000.0],
             60,
-        );
+        )
+        .unwrap();
         assert_eq!(out.curves.len(), 4);
         // optima increase with overhead (paper Sec. 4 discussion)
         let opts: Vec<usize> = out.curves.iter().map(|c| c.opt_n_c).collect();

@@ -4,6 +4,8 @@
 //! how much final loss is lost by trusting the bound instead of running
 //! the (expensive) experimental sweep (paper: ≈ 3.8 %).
 
+use anyhow::{Context, Result};
+
 use crate::bound::corollary1::BoundParams;
 use crate::bound::optimizer::optimize_block_size;
 use crate::coordinator::des::DesConfig;
@@ -12,7 +14,7 @@ use crate::data::Dataset;
 use crate::metrics::curve::mean_curve;
 use crate::metrics::writer::CsvTable;
 use crate::sweep::scenario::{ScenarioRunner, ScenarioSpec};
-use crate::util::pool::{default_threads, parallel_map_with};
+use crate::util::pool::{default_threads, try_parallel_map_with};
 
 use super::runner::{grid_final_losses, log_grid, McStats};
 
@@ -104,13 +106,13 @@ fn mean_loss_curves(
     seeds: usize,
     threads: usize,
     points: usize,
-) -> Vec<(Vec<f64>, Vec<f64>, f64)> {
+) -> Result<Vec<(Vec<f64>, Vec<f64>, f64)>> {
     let runner = ScenarioRunner::new(ScenarioSpec::paper(), ds);
     let jobs: Vec<(usize, u64)> = n_cs
         .iter()
         .flat_map(|&n_c| (0..seeds as u64).map(move |s| (n_c, s)))
         .collect();
-    let curves = parallel_map_with(
+    let results = try_parallel_map_with(
         &jobs,
         threads,
         RunWorkspace::new,
@@ -123,11 +125,17 @@ fn mean_loss_curves(
                 record_blocks: false,
                 ..base.clone()
             };
-            runner.run_with(ws, &cfg).expect("DES run failed");
-            ws.curve().to_vec()
+            runner.run_with(ws, &cfg)?;
+            Ok::<_, anyhow::Error>(ws.curve().to_vec())
         },
     );
-    (0..n_cs.len())
+    let mut curves = Vec::with_capacity(jobs.len());
+    for (r, &(n_c, s)) in results.into_iter().zip(&jobs) {
+        curves.push(r.with_context(|| {
+            format!("DES run failed: n_c {n_c} seed offset {s}")
+        })?);
+    }
+    Ok((0..n_cs.len())
         .map(|i| {
             let (grid, mean) = mean_curve(
                 &curves[i * seeds..(i + 1) * seeds],
@@ -137,7 +145,7 @@ fn mean_loss_curves(
             let final_loss = *mean.last().unwrap();
             (grid, mean, final_loss)
         })
-        .collect()
+        .collect())
 }
 
 /// Produce the full Fig. 4 dataset.
@@ -145,7 +153,7 @@ pub fn fig4_data(
     ds: &Dataset,
     params: &BoundParams,
     cfg: &Fig4Config,
-) -> Fig4Output {
+) -> Result<Fig4Output> {
     let threads =
         if cfg.threads == 0 { default_threads() } else { cfg.threads };
     let base = DesConfig {
@@ -172,13 +180,13 @@ pub fn fig4_data(
             .n_c;
 
     // 2. experimental optimum n_c*: MC sweep over a log grid
-    let grid = log_grid(ds.n, cfg.search_points);
-    let search = grid_final_losses(ds, &base, &grid, cfg.seeds, threads);
+    let grid = log_grid(ds.n, cfg.search_points)?;
+    let search = grid_final_losses(ds, &base, &grid, cfg.seeds, threads)?;
     let exp_n_c = search
         .iter()
         .min_by(|a, b| a.1.mean.partial_cmp(&b.1.mean).unwrap())
-        .expect("non-empty search grid")
-        .0;
+        .map(|&(n_c, _)| n_c)
+        .ok_or_else(|| anyhow::anyhow!("empty experimental search grid"))?;
 
     // 3. average loss curves for ñ_c, n_c* and the references
     let mut plot: Vec<(String, usize)> = vec![
@@ -199,7 +207,7 @@ pub fn fig4_data(
         cfg.seeds,
         threads,
         cfg.curve_points,
-    );
+    )?;
     let mut curves = Vec::new();
     let mut bound_final = f64::NAN;
     let mut exp_final = f64::NAN;
@@ -221,7 +229,7 @@ pub fn fig4_data(
         });
     }
     let bound_penalty = (bound_final - exp_final) / exp_final;
-    Fig4Output {
+    Ok(Fig4Output {
         curves,
         bound_n_c,
         exp_n_c,
@@ -229,7 +237,7 @@ pub fn fig4_data(
         exp_final,
         search,
         bound_penalty,
-    }
+    })
 }
 
 impl Fig4Output {
@@ -296,7 +304,7 @@ mod tests {
             reference_n_cs: vec![600],
             ..Fig4Config::paper(10.0, 900.0)
         };
-        let out = fig4_data(&ds, &params, &cfg);
+        let out = fig4_data(&ds, &params, &cfg).unwrap();
         assert!(out.curves.len() >= 2);
         for c in &out.curves {
             assert_eq!(c.grid.len(), 30);

@@ -8,6 +8,11 @@
 //!   scenario point traced once each, then replayed lane-batched
 //!   through SoA SGD kernels (`EDGEPIPE_LANES`), bit-identical to the
 //!   scalar path per seed
+//! * [`stream`] — the streaming sweep pipeline: gen → run → metrics →
+//!   aggregate over bounded channels, JSONL journaling and resume,
+//!   constant memory in the grid size, bit-identical to [`runner`]
+//! * [`serve`]  — `edgepipe serve`: a line-delimited JSON scenario
+//!   service reusing the warm runner/workspace machinery as a cache
 //! * [`control`] — the closed-loop comparison sweep: fixed `ñ_c` vs
 //!   open-loop warmup vs channel-adaptive control across fading
 //!   severities, with deadline-outage rates
@@ -22,9 +27,12 @@ pub mod fig3;
 pub mod fig4;
 pub mod runner;
 pub mod scenario;
+pub mod serve;
+pub mod stream;
 
 pub use batch::{
-    batch_lanes, batchable, run_group, BatchWorkspace, LaneOutcome,
+    batch_lanes, batchable, group_jobs, group_jobs_iter, run_group,
+    BatchWorkspace, GroupJob, LaneOutcome,
 };
 pub use control::{control_comparison, fading_severities, ControlCompareRow};
 pub use fig3::{fig3_data, Fig3Output};
@@ -37,4 +45,9 @@ pub use runner::{
 pub use scenario::{
     from_name, registry, ChannelSpec, EstimatorSpec, HeteroSpec,
     PolicySpec, ScenarioRunner, ScenarioSpec, SchedulerSpec, TrafficSpec,
+};
+pub use serve::{serve_connection, serve_tcp, ServeReply, ServeState};
+pub use stream::{
+    stream_grid_with, stream_scenario_grid, StreamError, StreamOptions,
+    StreamOutcome,
 };

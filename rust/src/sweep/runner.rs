@@ -18,6 +18,8 @@
 //! `rust/benches/bench_sweep.rs` tracks the resulting runs/sec against
 //! both the pre-workspace baseline and the scalar engine.
 
+use anyhow::{bail, Result};
+
 use crate::coordinator::des::DesConfig;
 use crate::data::Dataset;
 use crate::sweep::batch::{batch_lanes, grouped_losses};
@@ -35,19 +37,40 @@ pub struct McStats {
 }
 
 impl McStats {
-    fn of(losses: &[f64]) -> McStats {
+    /// Welford statistics over a loss slice. Well-defined on the empty
+    /// slice: `n = 0` with NaN mean/std/sem (there is no estimate, and
+    /// NaN says so louder than a fake 0.0) — though `seeds == 0` is
+    /// rejected upstream at the config boundary, so an empty slice only
+    /// reaches here through direct library use.
+    pub fn of(losses: &[f64]) -> McStats {
         let mut w = Welford::new();
         for &l in losses {
             w.push(l);
         }
-        McStats { mean: w.mean(), std: w.std(), sem: w.sem(), n: losses.len() }
+        McStats::from_welford(&w)
+    }
+
+    /// Finalize a [`Welford`] accumulator into MC statistics — the
+    /// streaming aggregator's counterpart of [`McStats::of`], and
+    /// bit-identical to it when fed the same values in the same order.
+    pub fn from_welford(w: &Welford) -> McStats {
+        let n = w.count() as usize;
+        if n == 0 {
+            return McStats {
+                mean: f64::NAN,
+                std: f64::NAN,
+                sem: f64::NAN,
+                n: 0,
+            };
+        }
+        McStats { mean: w.mean(), std: w.std(), sem: w.sem(), n }
     }
 }
 
 /// Strip a base config down to sweep mode: per-seed reseed, no curve /
 /// snapshot / event recording (the full-dataset evaluations would
 /// otherwise dominate the sweep cost).
-fn sweep_cfg(base: &DesConfig, seed_offset: u64) -> DesConfig {
+pub(crate) fn sweep_cfg(base: &DesConfig, seed_offset: u64) -> DesConfig {
     DesConfig {
         seed: base.seed.wrapping_add(seed_offset),
         loss_every: 0,
@@ -67,7 +90,7 @@ pub fn mc_scenario_loss(
     spec: &ScenarioSpec,
     seeds: usize,
     threads: usize,
-) -> McStats {
+) -> Result<McStats> {
     mc_scenario_loss_lanes(ds, base, spec, seeds, threads, batch_lanes())
 }
 
@@ -82,13 +105,13 @@ pub fn mc_scenario_loss_lanes(
     seeds: usize,
     threads: usize,
     lanes: usize,
-) -> McStats {
+) -> Result<McStats> {
     let threads = if threads == 0 { default_threads() } else { threads };
     let runner = ScenarioRunner::new(spec.clone(), ds);
     let losses = grouped_losses(&[&runner], seeds, threads, lanes, |_, s| {
         sweep_cfg(base, s)
-    });
-    McStats::of(&losses)
+    })?;
+    Ok(McStats::of(&losses))
 }
 
 /// Average final training loss of the paper's protocol at one
@@ -99,7 +122,7 @@ pub fn mc_final_loss(
     base: &DesConfig,
     seeds: usize,
     threads: usize,
-) -> McStats {
+) -> Result<McStats> {
     mc_scenario_loss(ds, base, &ScenarioSpec::paper(), seeds, threads)
 }
 
@@ -110,7 +133,7 @@ pub fn mc_final_loss_lanes(
     seeds: usize,
     threads: usize,
     lanes: usize,
-) -> McStats {
+) -> Result<McStats> {
     mc_scenario_loss_lanes(
         ds,
         base,
@@ -130,7 +153,7 @@ pub fn scenario_grid(
     specs: &[ScenarioSpec],
     seeds: usize,
     threads: usize,
-) -> Vec<(String, McStats)> {
+) -> Result<Vec<(String, McStats)>> {
     scenario_grid_lanes(ds, base, specs, seeds, threads, batch_lanes())
 }
 
@@ -142,7 +165,7 @@ pub fn scenario_grid_lanes(
     seeds: usize,
     threads: usize,
     lanes: usize,
-) -> Vec<(String, McStats)> {
+) -> Result<Vec<(String, McStats)>> {
     let threads = if threads == 0 { default_threads() } else { threads };
     let runners: Vec<ScenarioRunner> = specs
         .iter()
@@ -151,14 +174,14 @@ pub fn scenario_grid_lanes(
     let refs: Vec<&ScenarioRunner> = runners.iter().collect();
     let losses = grouped_losses(&refs, seeds, threads, lanes, |_, s| {
         sweep_cfg(base, s)
-    });
-    specs
+    })?;
+    Ok(specs
         .iter()
         .enumerate()
         .map(|(i, spec)| {
             (spec.label(), McStats::of(&losses[i * seeds..(i + 1) * seeds]))
         })
-        .collect()
+        .collect())
 }
 
 /// Final-loss statistics for each block size in `n_cs` (the experimental
@@ -174,7 +197,7 @@ pub fn grid_final_losses(
     n_cs: &[usize],
     seeds: usize,
     threads: usize,
-) -> Vec<(usize, McStats)> {
+) -> Result<Vec<(usize, McStats)>> {
     grid_final_losses_lanes(ds, base, n_cs, seeds, threads, batch_lanes())
 }
 
@@ -187,25 +210,34 @@ pub fn grid_final_losses_lanes(
     seeds: usize,
     threads: usize,
     lanes: usize,
-) -> Vec<(usize, McStats)> {
+) -> Result<Vec<(usize, McStats)>> {
     let threads = if threads == 0 { default_threads() } else { threads };
     let runner = ScenarioRunner::new(ScenarioSpec::paper(), ds);
     // one shared runner serves every grid point; configs differ per point
     let refs: Vec<&ScenarioRunner> = n_cs.iter().map(|_| &runner).collect();
     let losses = grouped_losses(&refs, seeds, threads, lanes, |point, s| {
         DesConfig { n_c: n_cs[point], ..sweep_cfg(base, s) }
-    });
-    n_cs.iter()
+    })?;
+    Ok(n_cs
+        .iter()
         .enumerate()
         .map(|(i, &n_c)| {
             (n_c, McStats::of(&losses[i * seeds..(i + 1) * seeds]))
         })
-        .collect()
+        .collect())
 }
 
-/// A log-spaced integer grid over `[1, n]` with `points` unique values.
-pub fn log_grid(n: usize, points: usize) -> Vec<usize> {
-    assert!(n >= 1 && points >= 2);
+/// A log-spaced integer grid over `[1, n]` with at most `points` values
+/// (log-rounding collisions are deduped, so small `n` can yield fewer).
+/// Errors on a degenerate request (`n == 0` or `points < 2`) instead of
+/// panicking — both are reachable from CLI flags.
+pub fn log_grid(n: usize, points: usize) -> Result<Vec<usize>> {
+    if n < 1 {
+        bail!("log grid needs a non-empty dataset (n = {n})");
+    }
+    if points < 2 {
+        bail!("log grid needs at least 2 points (got {points})");
+    }
     let mut grid: Vec<usize> = (0..points)
         .map(|i| {
             let t = i as f64 / (points - 1) as f64;
@@ -214,7 +246,7 @@ pub fn log_grid(n: usize, points: usize) -> Vec<usize> {
         .map(|v| v.clamp(1, n))
         .collect();
     grid.dedup();
-    grid
+    Ok(grid)
 }
 
 #[cfg(test)]
@@ -231,8 +263,8 @@ mod tests {
     fn mc_stats_are_stable_across_thread_counts() {
         let ds = synth_calhousing(&SynthSpec { n: 400, ..Default::default() });
         let base = DesConfig::paper(40, 5.0, 800.0, 100);
-        let a = mc_final_loss(&ds, &base, 6, 1);
-        let b = mc_final_loss(&ds, &base, 6, 4);
+        let a = mc_final_loss(&ds, &base, 6, 1).unwrap();
+        let b = mc_final_loss(&ds, &base, 6, 4).unwrap();
         assert_eq!(a.mean, b.mean, "thread count must not change results");
         assert_eq!(a.n, 6);
         assert!(a.std >= 0.0);
@@ -243,7 +275,7 @@ mod tests {
         // the scenario path must reproduce per-seed run_des exactly
         let ds = synth_calhousing(&SynthSpec { n: 300, ..Default::default() });
         let base = DesConfig::paper(30, 5.0, 600.0, 55);
-        let stats = mc_final_loss(&ds, &base, 3, 2);
+        let stats = mc_final_loss(&ds, &base, 3, 2).unwrap();
         let mut manual = Vec::new();
         for s in 0..3u64 {
             let cfg = DesConfig {
@@ -274,7 +306,7 @@ mod tests {
     fn grid_runs_every_point() {
         let ds = synth_calhousing(&SynthSpec { n: 300, ..Default::default() });
         let base = DesConfig::paper(1, 2.0, 500.0, 3);
-        let rows = grid_final_losses(&ds, &base, &[10, 50, 150], 3, 2);
+        let rows = grid_final_losses(&ds, &base, &[10, 50, 150], 3, 2).unwrap();
         assert_eq!(rows.len(), 3);
         for (nc, stats) in rows {
             assert!(nc > 0);
@@ -295,7 +327,7 @@ mod tests {
             },
             ScenarioSpec { traffic: TrafficSpec::Devices(3), ..paper },
         ];
-        let rows = scenario_grid(&ds, &base, &specs, 4, 3);
+        let rows = scenario_grid(&ds, &base, &specs, 4, 3).unwrap();
         assert_eq!(rows.len(), 3);
         assert_eq!(rows[0].0, "ideal|fixed|k1");
         // pipelining must beat the sequential baseline on average
@@ -312,10 +344,10 @@ mod tests {
         let ds = synth_calhousing(&SynthSpec { n: 300, ..Default::default() });
         let base = DesConfig::paper(30, 5.0, 600.0, 9);
         let spec = ScenarioSpec::paper();
-        let scalar = mc_scenario_loss_lanes(&ds, &base, &spec, 6, 2, 1);
+        let scalar = mc_scenario_loss_lanes(&ds, &base, &spec, 6, 2, 1).unwrap();
         for lanes in [4usize, 8, 16] {
             let batched =
-                mc_scenario_loss_lanes(&ds, &base, &spec, 6, 2, lanes);
+                mc_scenario_loss_lanes(&ds, &base, &spec, 6, 2, lanes).unwrap();
             assert_eq!(
                 scalar.mean.to_bits(),
                 batched.mean.to_bits(),
@@ -327,8 +359,10 @@ mod tests {
                 "lanes={lanes} std"
             );
         }
-        let g1 = grid_final_losses_lanes(&ds, &base, &[10, 40], 3, 2, 1);
-        let g8 = grid_final_losses_lanes(&ds, &base, &[10, 40], 3, 2, 8);
+        let g1 =
+            grid_final_losses_lanes(&ds, &base, &[10, 40], 3, 2, 1).unwrap();
+        let g8 =
+            grid_final_losses_lanes(&ds, &base, &[10, 40], 3, 2, 8).unwrap();
         for (a, b) in g1.iter().zip(&g8) {
             assert_eq!(a.0, b.0);
             assert_eq!(a.1.mean.to_bits(), b.1.mean.to_bits());
@@ -337,11 +371,39 @@ mod tests {
 
     #[test]
     fn log_grid_shape() {
-        let g = log_grid(18576, 40);
+        let g = log_grid(18576, 40).unwrap();
         assert_eq!(*g.first().unwrap(), 1);
         assert_eq!(*g.last().unwrap(), 18576);
         for w in g.windows(2) {
             assert!(w[1] > w[0], "grid must be strictly increasing");
         }
+    }
+
+    #[test]
+    fn log_grid_degenerate_requests_are_errors() {
+        assert!(log_grid(0, 10).is_err(), "n = 0 must not panic");
+        assert!(log_grid(100, 0).is_err());
+        assert!(log_grid(100, 1).is_err());
+        // tiny n: rounding collisions dedup below `points`
+        let g = log_grid(2, 24).unwrap();
+        assert_eq!(g, vec![1, 2]);
+    }
+
+    #[test]
+    fn empty_mc_stats_are_well_defined() {
+        let s = McStats::of(&[]);
+        assert_eq!(s.n, 0);
+        assert!(s.mean.is_nan() && s.std.is_nan() && s.sem.is_nan());
+        // the accumulator route agrees with the slice route bit-for-bit
+        let mut w = Welford::new();
+        for &l in &[0.5f64, 1.25, -3.0] {
+            w.push(l);
+        }
+        let a = McStats::of(&[0.5, 1.25, -3.0]);
+        let b = McStats::from_welford(&w);
+        assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+        assert_eq!(a.std.to_bits(), b.std.to_bits());
+        assert_eq!(a.sem.to_bits(), b.sem.to_bits());
+        assert_eq!(a.n, b.n);
     }
 }

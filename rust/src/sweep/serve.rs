@@ -1,0 +1,415 @@
+//! `edgepipe serve`: a line-delimited JSON scenario service.
+//!
+//! One request per line, one JSON reply per line. A request names a
+//! scenario by its axis strings (the same grammar as the `scenario`
+//! command flags) plus a seed range, and gets back the Monte-Carlo
+//! final-loss statistics:
+//!
+//! ```text
+//! → {"id":1,"channel":"erasure:0.1","policy":"fixed","seeds":8}
+//! ← {"id":1,"ok":true,"label":"erasure:0.1|fixed|k1","n_c":437,
+//!    "seed0":0,"seeds":8,"mean":…,"std":…,"sem":…,"n":8,"cache":"miss"}
+//! ```
+//!
+//! The service is a warm cache around the sweep machinery: each
+//! distinct scenario label builds its [`ScenarioRunner`] (and memoized
+//! `ControlPlan`) once, one [`BatchWorkspace`] persists across
+//! requests, and identical `(label, n_c, seed0, seeds)` work is deduped
+//! to a cached [`McStats`] (`"cache":"hit"`). Results are bit-identical
+//! to [`mc_scenario_loss_lanes`] at the same lane width — the batched
+//! engine's 0-ULP contract carries over unchanged.
+//!
+//! Every malformed or failing request produces an `{"ok":false,
+//! "error":…}` reply on its line — never a panic, never a dropped
+//! connection. This is why the satellite bugfixes (fallible
+//! `run_group`/`grouped_losses`, `seeds == 0` rejected at the boundary)
+//! had to land with this PR: a `.expect` three layers down would have
+//! been a remote crash trigger.
+//!
+//! Control lines: `{"cmd":"ping"}` → `{"ok":true,"pong":true}`;
+//! `{"cmd":"shutdown"}` replies and stops the accept loop.
+//!
+//! [`mc_scenario_loss_lanes`]: crate::sweep::runner::mc_scenario_loss_lanes
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::des::DesConfig;
+use crate::data::Dataset;
+use crate::linalg::batch::snap_lanes;
+use crate::sweep::batch::{
+    batch_lanes, group_jobs_iter, run_group, BatchWorkspace,
+};
+use crate::sweep::runner::{sweep_cfg, McStats};
+use crate::sweep::scenario::{ScenarioRunner, ScenarioSpec};
+use crate::sweep::stream::loss_value;
+use crate::util::json::{self, num, obj, s, Value};
+use crate::util::stats::Welford;
+
+/// What [`ServeState::handle_line`] wants done with its reply.
+pub enum ServeReply {
+    /// Write the line and keep reading.
+    Response(String),
+    /// Write the line, then stop serving.
+    Shutdown(String),
+}
+
+/// `(label, n_c, seed0, seeds)` — everything a result depends on
+/// besides the shared base config.
+type CacheKey = (String, usize, u64, usize);
+
+/// Warm per-process service state: runners, result cache, workspace.
+pub struct ServeState<'a> {
+    ds: &'a Dataset,
+    base: DesConfig,
+    max_seeds: usize,
+    lanes: usize,
+    runners: HashMap<String, ScenarioRunner<'a>>,
+    cache: HashMap<CacheKey, McStats>,
+    bw: BatchWorkspace,
+}
+
+impl<'a> ServeState<'a> {
+    /// `lanes` 0 = the `EDGEPIPE_LANES` default; otherwise snapped to a
+    /// supported width.
+    pub fn new(
+        ds: &'a Dataset,
+        base: DesConfig,
+        max_seeds: usize,
+        lanes: usize,
+    ) -> ServeState<'a> {
+        ServeState {
+            ds,
+            base,
+            max_seeds: max_seeds.max(1),
+            lanes: if lanes == 0 { batch_lanes() } else { snap_lanes(lanes) },
+            runners: HashMap::new(),
+            cache: HashMap::new(),
+            bw: BatchWorkspace::new(),
+        }
+    }
+
+    /// Cached results so far (for logging/tests).
+    pub fn cached_results(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Handle one request line. Always yields a reply line; errors
+    /// become `{"ok":false,"error":…}` responses, never panics or
+    /// dropped lines.
+    pub fn handle_line(&mut self, line: &str) -> ServeReply {
+        let parsed = match json::parse(line.trim()) {
+            Ok(v) => v,
+            Err(e) => {
+                return ServeReply::Response(error_reply(
+                    Value::Null,
+                    &format!("bad request: {e:#}"),
+                ))
+            }
+        };
+        let id = parsed.opt("id").cloned().unwrap_or(Value::Null);
+        if let Some(cmd) = parsed.opt("cmd") {
+            return match cmd.as_str() {
+                Ok("ping") => ServeReply::Response(
+                    obj(vec![
+                        ("id", id),
+                        ("ok", Value::Bool(true)),
+                        ("pong", Value::Bool(true)),
+                    ])
+                    .to_json(),
+                ),
+                Ok("shutdown") => ServeReply::Shutdown(
+                    obj(vec![
+                        ("id", id),
+                        ("ok", Value::Bool(true)),
+                        ("shutdown", Value::Bool(true)),
+                    ])
+                    .to_json(),
+                ),
+                Ok(other) => ServeReply::Response(error_reply(
+                    id,
+                    &format!("unknown cmd '{other}'"),
+                )),
+                Err(_) => {
+                    ServeReply::Response(error_reply(id, "cmd must be a string"))
+                }
+            };
+        }
+        match self.run_request(&parsed) {
+            Ok(body) => ServeReply::Response(with_id(body, id).to_json()),
+            Err(e) => ServeReply::Response(error_reply(id, &format!("{e:#}"))),
+        }
+    }
+
+    /// Parse, validate and run (or cache-hit) one scenario request.
+    fn run_request(&mut self, v: &Value) -> Result<Value> {
+        let spec = ScenarioSpec::parse(
+            &str_field(v, "channel", "ideal")?,
+            &str_field(v, "policy", "fixed")?,
+            &str_field(v, "traffic", "1")?,
+            &str_field(v, "workload", "ridge")?,
+            usize_field(v, "store", 0)?,
+        )?;
+        let seeds = usize_field(v, "seeds", 10)?;
+        if seeds == 0 {
+            bail!("seeds must be >= 1 (a 0-seed estimate is undefined)");
+        }
+        if seeds > self.max_seeds {
+            bail!("seeds {} exceeds --max-seeds {}", seeds, self.max_seeds);
+        }
+        let seed0 = usize_field(v, "seed0", 0)? as u64;
+        let n_c = usize_field(v, "n_c", self.base.n_c)?;
+        if n_c == 0 || n_c > self.ds.n {
+            bail!("n_c {} out of range (must be 1..={})", n_c, self.ds.n);
+        }
+
+        let label = spec.label();
+        let key = (label.clone(), n_c, seed0, seeds);
+        let hit = self.cache.contains_key(&key);
+        let stats = match self.cache.get(&key) {
+            Some(stats) => *stats,
+            None => {
+                let base = DesConfig { n_c, ..self.base.clone() };
+                let ds = self.ds;
+                let runner = self
+                    .runners
+                    .entry(label.clone())
+                    .or_insert_with(|| ScenarioRunner::new(spec, ds));
+                let mut w = Welford::new();
+                for job in group_jobs_iter(1, seeds, self.lanes) {
+                    let outs =
+                        run_group(runner, &mut self.bw, job.len, |l| {
+                            sweep_cfg(&base, seed0 + job.seed0 + l as u64)
+                        })
+                        .with_context(|| {
+                            format!(
+                                "{label}: seed group {}..{}",
+                                seed0 + job.seed0,
+                                seed0 + job.seed0 + job.len as u64
+                            )
+                        })?;
+                    for l in 0..job.len {
+                        w.push(outs[l].final_loss);
+                    }
+                }
+                let stats = McStats::from_welford(&w);
+                self.cache.insert(key, stats);
+                stats
+            }
+        };
+        Ok(obj(vec![
+            ("ok", Value::Bool(true)),
+            ("label", s(&label)),
+            ("n_c", num(n_c as f64)),
+            ("seed0", num(seed0 as f64)),
+            ("seeds", num(seeds as f64)),
+            ("mean", loss_value(stats.mean)),
+            ("std", loss_value(stats.std)),
+            ("sem", loss_value(stats.sem)),
+            ("n", num(stats.n as f64)),
+            ("cache", s(if hit { "hit" } else { "miss" })),
+        ]))
+    }
+}
+
+fn with_id(mut v: Value, id: Value) -> Value {
+    if let Value::Obj(m) = &mut v {
+        m.insert("id".to_string(), id);
+    }
+    v
+}
+
+fn error_reply(id: Value, message: &str) -> String {
+    obj(vec![
+        ("id", id),
+        ("ok", Value::Bool(false)),
+        ("error", s(message)),
+    ])
+    .to_json()
+}
+
+fn str_field(v: &Value, key: &str, default: &str) -> Result<String> {
+    match v.opt(key) {
+        Some(val) => Ok(val
+            .as_str()
+            .with_context(|| format!("field '{key}'"))?
+            .to_string()),
+        None => Ok(default.to_string()),
+    }
+}
+
+fn usize_field(v: &Value, key: &str, default: usize) -> Result<usize> {
+    match v.opt(key) {
+        Some(val) => {
+            val.as_usize().with_context(|| format!("field '{key}'"))
+        }
+        None => Ok(default),
+    }
+}
+
+/// Serve one connection (or stdin): read request lines, write reply
+/// lines, flush each. Returns `Ok(true)` when a shutdown command asked
+/// the caller to stop accepting.
+pub fn serve_connection<R: BufRead, W: Write>(
+    state: &mut ServeState<'_>,
+    reader: R,
+    mut writer: W,
+) -> Result<bool> {
+    for line in reader.lines() {
+        let line = line.context("reading request line")?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match state.handle_line(&line) {
+            ServeReply::Response(reply) => {
+                writeln!(writer, "{reply}")?;
+                writer.flush()?;
+            }
+            ServeReply::Shutdown(reply) => {
+                writeln!(writer, "{reply}")?;
+                writer.flush()?;
+                return Ok(true);
+            }
+        }
+    }
+    Ok(false)
+}
+
+/// Accept loop: one connection at a time (the state's warm cache is
+/// deliberately shared, not sharded). A dropped connection logs and
+/// keeps serving; only `{"cmd":"shutdown"}` stops the loop.
+pub fn serve_tcp(state: &mut ServeState<'_>, addr: &str) -> Result<()> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    println!("edgepipe serve: listening on {}", listener.local_addr()?);
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(stream) => stream,
+            Err(e) => {
+                eprintln!("serve: accept failed: {e}");
+                continue;
+            }
+        };
+        let reader = BufReader::new(
+            stream.try_clone().context("cloning connection")?,
+        );
+        match serve_connection(state, reader, stream) {
+            Ok(true) => break,
+            Ok(false) => {}
+            // a bad client must not take the service down
+            Err(e) => eprintln!("serve: connection error: {e:#}"),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{synth_calhousing, SynthSpec};
+
+    fn tiny_state(ds: &Dataset) -> ServeState<'_> {
+        let base = DesConfig {
+            loss_every: 0,
+            record_blocks: false,
+            collect_snapshots: false,
+            event_capacity: 0,
+            ..DesConfig::paper(16, 5.0, 120.0, 7)
+        };
+        ServeState::new(ds, base, 64, 4)
+    }
+
+    fn reply_of(r: ServeReply) -> (String, bool) {
+        match r {
+            ServeReply::Response(text) => (text, false),
+            ServeReply::Shutdown(text) => (text, true),
+        }
+    }
+
+    #[test]
+    fn control_lines_and_malformed_requests_reply_in_place() {
+        let ds = synth_calhousing(&SynthSpec { n: 96, ..Default::default() });
+        let mut state = tiny_state(&ds);
+        let (pong, stop) =
+            reply_of(state.handle_line(r#"{"id":7,"cmd":"ping"}"#));
+        assert!(!stop);
+        let v = json::parse(&pong).unwrap();
+        assert_eq!(v.get("id").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(v.get("pong").unwrap(), &Value::Bool(true));
+
+        for (line, needle) in [
+            ("this is not json", "bad request"),
+            (r#"{"cmd":"reboot"}"#, "unknown cmd"),
+            (r#"{"cmd":3}"#, "cmd must be a string"),
+            (r#"{"policy":"warp-drive"}"#, "warp-drive"),
+            (r#"{"seeds":0}"#, "seeds must be >= 1"),
+            (r#"{"seeds":65}"#, "--max-seeds"),
+            (r#"{"n_c":0}"#, "out of range"),
+            (r#"{"seeds":"three"}"#, "field 'seeds'"),
+        ] {
+            let (text, stop) = reply_of(state.handle_line(line));
+            assert!(!stop, "{line} must not stop the service");
+            let v = json::parse(&text).expect("error replies are JSON");
+            assert_eq!(v.get("ok").unwrap(), &Value::Bool(false), "{line}");
+            assert!(
+                v.get("error").unwrap().as_str().unwrap().contains(needle),
+                "{line}: wanted '{needle}' in {text}"
+            );
+        }
+
+        let (bye, stop) = reply_of(state.handle_line(r#"{"cmd":"shutdown"}"#));
+        assert!(stop);
+        assert!(json::parse(&bye).is_ok());
+    }
+
+    #[test]
+    fn identical_requests_hit_the_cache_with_identical_bits() {
+        let ds = synth_calhousing(&SynthSpec { n: 96, ..Default::default() });
+        let mut state = tiny_state(&ds);
+        let req = r#"{"channel":"erasure:0.2","seeds":3,"seed0":2}"#;
+        let (a, _) = reply_of(state.handle_line(req));
+        let (b, _) = reply_of(state.handle_line(req));
+        let va = json::parse(&a).unwrap();
+        let vb = json::parse(&b).unwrap();
+        assert_eq!(va.get("cache").unwrap().as_str().unwrap(), "miss");
+        assert_eq!(vb.get("cache").unwrap().as_str().unwrap(), "hit");
+        assert_eq!(state.cached_results(), 1);
+        for key in ["mean", "std", "sem", "n"] {
+            assert_eq!(va.get(key).unwrap(), vb.get(key).unwrap(), "{key}");
+        }
+        assert_eq!(va.get("n").unwrap().as_usize().unwrap(), 3);
+        // a different seed window is different work, not a stale hit
+        let (c, _) = reply_of(
+            state.handle_line(r#"{"channel":"erasure:0.2","seeds":3}"#),
+        );
+        let vc = json::parse(&c).unwrap();
+        assert_eq!(vc.get("cache").unwrap().as_str().unwrap(), "miss");
+    }
+
+    #[test]
+    fn serve_connection_round_trips_lines_until_shutdown() {
+        let ds = synth_calhousing(&SynthSpec { n: 96, ..Default::default() });
+        let mut state = tiny_state(&ds);
+        let input = "\n{\"id\":1,\"cmd\":\"ping\"}\n{\"id\":2,\"seeds\":2}\n\
+                     {\"id\":3,\"cmd\":\"shutdown\"}\n{\"id\":4,\"cmd\":\"ping\"}\n";
+        let mut out = Vec::new();
+        let stopped = serve_connection(
+            &mut state,
+            std::io::Cursor::new(input),
+            &mut out,
+        )
+        .unwrap();
+        assert!(stopped, "shutdown must stop the loop");
+        let text = String::from_utf8(out).unwrap();
+        let ids: Vec<usize> = text
+            .lines()
+            .map(|l| json::parse(l).unwrap().get("id").unwrap().as_usize())
+            .collect::<Result<_>>()
+            .unwrap();
+        // blank line skipped, everything after shutdown unread
+        assert_eq!(ids, vec![1, 2, 3]);
+    }
+}

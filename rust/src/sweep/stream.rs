@@ -1,0 +1,698 @@
+//! Streaming sweep pipeline: scenario-gen → run → metrics → aggregate
+//! over bounded channels, in constant memory.
+//!
+//! The in-memory estimators ([`scenario_grid`] and friends) materialize
+//! the full `points × seeds` loss vector before aggregating — fine for
+//! figure-sized grids, fatal for the "10M-run sweep" workloads the
+//! traffic axis targets. This module re-plumbs the SAME batched
+//! seed-group fan-out as a four-stage pipeline over bounded `mpsc`
+//! channels:
+//!
+//! ```text
+//! gen ──(idx, GroupJob)──▶ run workers ──Row──▶ metrics ──Row──▶ aggregate
+//!  lazy [`group_jobs_iter`]  BatchWorkspace      JSONL journal    per-point
+//!  enumeration               per worker          (flushed/line)   Welford
+//! ```
+//!
+//! Only O(workers + queue) rows are in flight at any moment; the
+//! aggregator folds each completed group into a per-point [`Welford`]
+//! accumulator in **job-index order** (a small reorder buffer absorbs
+//! worker races), so the final `(label, McStats)` rows are bit-identical
+//! to a fresh in-memory [`scenario_grid`] run over the same spec list.
+//!
+//! # The JSONL journal
+//!
+//! With a journal path set, every *executed* group appends one line:
+//!
+//! ```text
+//! {"v":1,"kind":"header","labels":[...],"seeds":6,"lanes":4,"fingerprint":"..."}
+//! {"v":1,"i":0,"point":0,"label":"ideal|fixed|k1","seed0":0,"len":4,"losses":[...]}
+//! {"v":1,"i":1,"point":0,"label":"ideal|fixed|k1","seed0":4,"len":2,"error":"..."}
+//! ```
+//!
+//! Lines are flushed individually, so a killed sweep leaves at most one
+//! truncated trailing line. Loss values round-trip **exactly**: finite
+//! numbers use Rust's shortest-exact `f64` formatting, and the
+//! JSON-unrepresentable specials (NaN, ±inf, -0.0) are encoded as
+//! strings that `str::parse::<f64>` restores bit-for-bit.
+//!
+//! `--resume <file>` replays the journal: completed `(point, seed0)`
+//! groups are *reused* (their losses feed the aggregator without
+//! re-running), error rows and the truncated tail re-run, and the final
+//! aggregates are bit-identical to an uninterrupted run. The header
+//! row pins `labels × seeds × lanes × config-fingerprint`; resuming
+//! against a journal from a different sweep is an error, not a silent
+//! wrong answer.
+//!
+//! # Error path
+//!
+//! A failed (or panicking) group run becomes an error *row* — the
+//! journal stays valid, sibling groups complete, and the outcome lists
+//! the failures per `(point, seed0)`. No panic ever reaches the pool;
+//! `rust/tests/stream_parity.rs` asserts all of this.
+//!
+//! [`scenario_grid`]: crate::sweep::runner::scenario_grid
+//! [`Welford`]: crate::util::stats::Welford
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::BufRead;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::sync_channel;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::des::DesConfig;
+use crate::data::Dataset;
+use crate::linalg::batch::{snap_lanes, MAX_LANES};
+use crate::metrics::writer::JsonlWriter;
+use crate::sweep::batch::{
+    batch_lanes, group_jobs_iter, run_group, BatchWorkspace, GroupJob,
+};
+use crate::sweep::runner::{sweep_cfg, McStats};
+use crate::sweep::scenario::{ScenarioRunner, ScenarioSpec};
+use crate::util::json::{self, num, obj, s, Value};
+use crate::util::pool::default_threads;
+use crate::util::stats::Welford;
+
+/// Journal format version this build writes and accepts.
+const JOURNAL_VERSION: f64 = 1.0;
+
+/// Knobs for a streamed sweep.
+#[derive(Clone, Debug)]
+pub struct StreamOptions {
+    /// Monte-Carlo repetitions per point (must be >= 1).
+    pub seeds: usize,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+    /// Seed-group lane count (0 = `EDGEPIPE_LANES` default; otherwise
+    /// snapped to a supported width like the in-memory path).
+    pub lanes: usize,
+    /// Bounded-channel capacity between stages (0 = auto:
+    /// `max(4, 2 × threads)`).
+    pub queue: usize,
+    /// Append executed groups to this JSONL journal.
+    pub journal: Option<PathBuf>,
+    /// Replay this journal first, reusing its completed groups. When
+    /// `journal` is unset, new groups are appended to the same file.
+    pub resume: Option<PathBuf>,
+    /// Config fingerprint pinned in the journal header (empty = filled
+    /// in by [`stream_scenario_grid`] from the base `DesConfig`).
+    pub fingerprint: String,
+}
+
+impl Default for StreamOptions {
+    fn default() -> StreamOptions {
+        StreamOptions {
+            seeds: 10,
+            threads: 0,
+            lanes: 0,
+            queue: 0,
+            journal: None,
+            resume: None,
+            fingerprint: String::new(),
+        }
+    }
+}
+
+/// One failed group in a streamed sweep.
+#[derive(Clone, Debug)]
+pub struct StreamError {
+    pub point: usize,
+    pub label: String,
+    pub seed0: u64,
+    pub message: String,
+}
+
+/// Result of a streamed sweep.
+#[derive(Clone, Debug)]
+pub struct StreamOutcome {
+    /// `(label, stats)` rows in spec order — bit-identical to the
+    /// in-memory [`scenario_grid`](crate::sweep::runner::scenario_grid)
+    /// when every group succeeds (errored groups simply drop their
+    /// seeds from that point's accumulator, lowering its `n`).
+    pub rows: Vec<(String, McStats)>,
+    /// Failed groups, in job order.
+    pub errors: Vec<StreamError>,
+    /// Groups actually executed this run.
+    pub groups_run: usize,
+    /// Groups reused from the resume journal.
+    pub groups_reused: usize,
+}
+
+/// A completed group traveling run → metrics → aggregate.
+struct Row {
+    index: usize,
+    point: usize,
+    seed0: u64,
+    len: usize,
+    reused: bool,
+    result: Result<Vec<f64>, String>,
+}
+
+/// Encode one loss for the journal so it round-trips bit-exactly.
+/// Finite values keep Rust's shortest-exact `Display` form (via
+/// [`Value::Num`]); NaN, ±inf and -0.0 — which plain JSON numbers
+/// cannot carry — become strings `str::parse::<f64>` restores exactly.
+pub(crate) fn loss_value(x: f64) -> Value {
+    if x.is_finite() && !(x == 0.0 && x.is_sign_negative()) {
+        Value::Num(x)
+    } else {
+        Value::Str(format!("{x}"))
+    }
+}
+
+/// Decode a journal loss written by [`loss_value`].
+pub(crate) fn value_loss(v: &Value) -> Result<f64> {
+    match v {
+        Value::Num(n) => Ok(*n),
+        Value::Str(text) => text
+            .parse::<f64>()
+            .with_context(|| format!("bad loss value '{text}'")),
+        other => bail!("bad loss value {other:?}"),
+    }
+}
+
+/// The config facts a journal is only valid for: everything that
+/// changes per-seed losses besides the spec labels themselves.
+pub fn base_fingerprint(base: &DesConfig) -> String {
+    format!(
+        "seed={};n_c={};n_o={};tau_p={};t={};alpha={};lambda={};init={};\
+         workload={:?}",
+        base.seed,
+        base.n_c,
+        base.n_o,
+        base.tau_p,
+        base.t_budget,
+        base.alpha,
+        base.lambda,
+        base.init_std,
+        base.workload,
+    )
+}
+
+fn header_json(
+    labels: &[String],
+    seeds: usize,
+    lanes: usize,
+    fingerprint: &str,
+) -> String {
+    obj(vec![
+        ("v", num(JOURNAL_VERSION)),
+        ("kind", s("header")),
+        ("labels", Value::Arr(labels.iter().map(|l| s(l)).collect())),
+        ("seeds", num(seeds as f64)),
+        ("lanes", num(lanes as f64)),
+        ("fingerprint", s(fingerprint)),
+    ])
+    .to_json()
+}
+
+fn row_json(row: &Row, labels: &[String]) -> String {
+    let mut pairs = vec![
+        ("v", num(JOURNAL_VERSION)),
+        ("i", num(row.index as f64)),
+        ("point", num(row.point as f64)),
+        ("label", s(&labels[row.point])),
+        ("seed0", num(row.seed0 as f64)),
+        ("len", num(row.len as f64)),
+    ];
+    match &row.result {
+        Ok(losses) => pairs.push((
+            "losses",
+            Value::Arr(losses.iter().map(|&l| loss_value(l)).collect()),
+        )),
+        Err(message) => pairs.push(("error", s(message))),
+    }
+    obj(pairs).to_json()
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|m| m.to_string()))
+        .map(|m| format!("run panicked: {m}"))
+        .unwrap_or_else(|| "run panicked (non-string payload)".to_string())
+}
+
+/// Replay a journal, returning completed `(point, seed0) → losses`
+/// groups. Lenient per line — unparseable lines (e.g. the truncated
+/// tail of a killed run), error rows, and rows that don't fit the
+/// current grid are skipped and simply re-run — but strict about
+/// headers: every header row must match the current sweep exactly, and
+/// at least one must be present.
+fn read_journal(
+    path: &Path,
+    labels: &[String],
+    seeds: usize,
+    lanes: usize,
+    fingerprint: &str,
+) -> Result<HashMap<(usize, u64), Vec<f64>>> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening resume journal {}", path.display()))?;
+    let mut done = HashMap::new();
+    let mut saw_header = false;
+    for line in std::io::BufReader::new(file).lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Ok(v) = json::parse(line) else {
+            continue; // truncated tail of a killed run
+        };
+        if v.opt("kind").and_then(|k| k.as_str().ok()) == Some("header") {
+            verify_header(&v, labels, seeds, lanes, fingerprint)
+                .with_context(|| {
+                    format!("journal {} is for a different sweep", path.display())
+                })?;
+            saw_header = true;
+            continue;
+        }
+        if v.opt("error").is_some() {
+            continue; // failed group: re-run it
+        }
+        let Some(row) = parse_data_row(&v, labels, seeds, lanes) else {
+            continue;
+        };
+        done.insert((row.0, row.1), row.2);
+    }
+    if !saw_header {
+        bail!(
+            "{} is not a sweep journal (no header row survived)",
+            path.display()
+        );
+    }
+    Ok(done)
+}
+
+fn verify_header(
+    v: &Value,
+    labels: &[String],
+    seeds: usize,
+    lanes: usize,
+    fingerprint: &str,
+) -> Result<()> {
+    let jl = v.get("labels")?.as_arr()?;
+    if jl.len() != labels.len()
+        || jl
+            .iter()
+            .zip(labels)
+            .any(|(a, b)| a.as_str().map(|a| a != b).unwrap_or(true))
+    {
+        bail!("scenario labels differ");
+    }
+    let js = v.get("seeds")?.as_usize()?;
+    if js != seeds {
+        bail!("seed count differs (journal {js}, requested {seeds})");
+    }
+    let jw = v.get("lanes")?.as_usize()?;
+    if jw != lanes {
+        bail!(
+            "lane width differs (journal {jw}, requested {lanes}) — group \
+             boundaries would not line up"
+        );
+    }
+    let jf = v.get("fingerprint")?.as_str()?;
+    if jf != fingerprint {
+        bail!(
+            "config fingerprint differs\n  journal:   {jf}\n  requested: \
+             {fingerprint}"
+        );
+    }
+    Ok(())
+}
+
+/// Extract `(point, seed0, losses)` from a data row if it belongs to
+/// the current grid; `None` skips (and re-runs) the row.
+fn parse_data_row(
+    v: &Value,
+    labels: &[String],
+    seeds: usize,
+    lanes: usize,
+) -> Option<(usize, u64, Vec<f64>)> {
+    let point = v.opt("point")?.as_usize().ok()?;
+    let label = v.opt("label")?.as_str().ok()?;
+    let seed0 = v.opt("seed0")?.as_usize().ok()?;
+    let len = v.opt("len")?.as_usize().ok()?;
+    if point >= labels.len() || labels[point] != label {
+        return None;
+    }
+    // groups start at lane-width boundaries; anything else is foreign
+    let expected = lanes.min(seeds.checked_sub(seed0)?);
+    if seed0 % lanes != 0 || len != expected || len == 0 {
+        return None;
+    }
+    let losses = v.opt("losses")?.as_arr().ok()?;
+    if losses.len() != len {
+        return None;
+    }
+    let losses: Option<Vec<f64>> =
+        losses.iter().map(|l| value_loss(l).ok()).collect();
+    Some((point, seed0 as u64, losses?))
+}
+
+/// Run the four-stage streaming pipeline over an arbitrary group-run
+/// stage. This seam is what `stream_parity.rs` injects failures and
+/// panics through; production sweeps go through
+/// [`stream_scenario_grid`], which plugs in the batched-seed engine.
+///
+/// `run` receives each [`GroupJob`] with a per-worker
+/// [`BatchWorkspace`] and returns the group's per-lane final losses
+/// (`[..job.len]` is read). It must be pure with respect to the
+/// workspace, exactly like the in-memory pool contract.
+pub fn stream_grid_with<F>(
+    labels: &[String],
+    opts: &StreamOptions,
+    run: F,
+) -> Result<StreamOutcome>
+where
+    F: Fn(&mut BatchWorkspace, &GroupJob) -> Result<[f64; MAX_LANES]> + Sync,
+{
+    if labels.is_empty() {
+        bail!("streaming sweep needs at least one scenario");
+    }
+    if opts.seeds == 0 {
+        bail!("streaming sweep needs seeds >= 1");
+    }
+    let points = labels.len();
+    let seeds = opts.seeds;
+    let lanes = if opts.lanes == 0 {
+        batch_lanes()
+    } else {
+        snap_lanes(opts.lanes)
+    };
+    let threads =
+        if opts.threads == 0 { default_threads() } else { opts.threads };
+    let threads = threads.max(1);
+    let queue = if opts.queue == 0 { (2 * threads).max(4) } else { opts.queue };
+    let groups_per_point = seeds.div_ceil(lanes);
+    let total = points * groups_per_point;
+
+    let done = match &opts.resume {
+        Some(path) => {
+            read_journal(path, labels, seeds, lanes, &opts.fingerprint)?
+        }
+        None => HashMap::new(),
+    };
+    let journal_path = opts.journal.as_ref().or(opts.resume.as_ref());
+    let mut journal = match journal_path {
+        Some(path) => {
+            let mut w = JsonlWriter::append(path)?;
+            w.write_line(&header_json(labels, seeds, lanes, &opts.fingerprint))?;
+            Some(w)
+        }
+        None => None,
+    };
+
+    let (job_tx, job_rx) = sync_channel::<(usize, GroupJob)>(queue);
+    let (row_tx, row_rx) = sync_channel::<Row>(queue);
+    let (agg_tx, agg_rx) = sync_channel::<Row>(queue);
+    let job_rx = Mutex::new(job_rx);
+
+    let mut welfords: Vec<Welford> = vec![Welford::new(); points];
+    let mut errors: Vec<StreamError> = Vec::new();
+    let mut groups_run = 0usize;
+    let mut groups_reused = 0usize;
+
+    std::thread::scope(|scope| -> Result<()> {
+        // --- stage 1: scenario gen (lazy; never materializes the grid)
+        scope.spawn(move || {
+            for item in group_jobs_iter(points, seeds, lanes).enumerate() {
+                if job_tx.send(item).is_err() {
+                    break; // downstream shut down (error path)
+                }
+            }
+        });
+
+        // --- stage 2: run workers, one BatchWorkspace each
+        let job_rx = &job_rx;
+        let done = &done;
+        let run = &run;
+        for _ in 0..threads {
+            let tx = row_tx.clone();
+            scope.spawn(move || {
+                let mut bw = BatchWorkspace::new();
+                loop {
+                    let msg = job_rx.lock().unwrap().recv();
+                    let Ok((index, job)) = msg else { break };
+                    let row = match done.get(&(job.point, job.seed0)) {
+                        Some(losses) => Row {
+                            index,
+                            point: job.point,
+                            seed0: job.seed0,
+                            len: job.len,
+                            reused: true,
+                            result: Ok(losses.clone()),
+                        },
+                        None => {
+                            // a panic must cost one row, not the pool
+                            let result = match catch_unwind(
+                                AssertUnwindSafe(|| run(&mut bw, &job)),
+                            ) {
+                                Ok(Ok(losses)) => {
+                                    Ok(losses[..job.len].to_vec())
+                                }
+                                Ok(Err(e)) => Err(format!("{e:#}")),
+                                Err(payload) => {
+                                    // workspace state is suspect now
+                                    bw = BatchWorkspace::new();
+                                    Err(panic_message(payload))
+                                }
+                            };
+                            Row {
+                                index,
+                                point: job.point,
+                                seed0: job.seed0,
+                                len: job.len,
+                                reused: false,
+                                result,
+                            }
+                        }
+                    };
+                    if tx.send(row).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(row_tx); // workers hold the only remaining clones
+
+        // --- stage 3: metrics/journal (order as completed, not sorted —
+        // resume tolerates any order, and sorting would buffer rows)
+        let metrics = scope.spawn(move || -> Result<()> {
+            for row in row_rx {
+                if !row.reused {
+                    if let Some(w) = journal.as_mut() {
+                        w.write_line(&row_json(&row, labels))?;
+                    }
+                }
+                if agg_tx.send(row).is_err() {
+                    break;
+                }
+            }
+            Ok(())
+        });
+
+        // --- stage 4: aggregate on the calling thread, in job order
+        let mut reorder: BTreeMap<usize, Row> = BTreeMap::new();
+        let mut next = 0usize;
+        for row in agg_rx {
+            reorder.insert(row.index, row);
+            while let Some(row) = reorder.remove(&next) {
+                match row.result {
+                    Ok(losses) => {
+                        // same per-point push order as McStats::of over
+                        // the in-memory flat vector → bit-identical
+                        let w = &mut welfords[row.point];
+                        for &l in &losses {
+                            w.push(l);
+                        }
+                    }
+                    Err(message) => errors.push(StreamError {
+                        point: row.point,
+                        label: labels[row.point].clone(),
+                        seed0: row.seed0,
+                        message,
+                    }),
+                }
+                if row.reused {
+                    groups_reused += 1;
+                } else {
+                    groups_run += 1;
+                }
+                next += 1;
+            }
+        }
+        metrics.join().expect("metrics stage panicked")?;
+        if next != total {
+            bail!("stream pipeline ended early ({next}/{total} groups)");
+        }
+        Ok(())
+    })?;
+
+    Ok(StreamOutcome {
+        rows: labels
+            .iter()
+            .zip(&welfords)
+            .map(|(label, w)| (label.clone(), McStats::from_welford(w)))
+            .collect(),
+        errors,
+        groups_run,
+        groups_reused,
+    })
+}
+
+/// Stream a scenario grid: the constant-memory, journaled, resumable
+/// counterpart of [`scenario_grid`](crate::sweep::runner::scenario_grid),
+/// bit-identical to it row-for-row. Runners (and their memoized
+/// `ControlPlan`s) are built once and shared across every seed group of
+/// their point.
+pub fn stream_scenario_grid(
+    ds: &Dataset,
+    base: &DesConfig,
+    specs: &[ScenarioSpec],
+    opts: &StreamOptions,
+) -> Result<StreamOutcome> {
+    let runners: Vec<ScenarioRunner> = specs
+        .iter()
+        .map(|spec| ScenarioRunner::new(spec.clone(), ds))
+        .collect();
+    let labels: Vec<String> = specs.iter().map(|spec| spec.label()).collect();
+    let mut opts = opts.clone();
+    if opts.fingerprint.is_empty() {
+        opts.fingerprint = base_fingerprint(base);
+    }
+    stream_grid_with(&labels, &opts, |bw, job| {
+        let outs = run_group(&runners[job.point], bw, job.len, |l| {
+            sweep_cfg(base, job.seed0 + l as u64)
+        })
+        .with_context(|| {
+            format!(
+                "point {} ({}) seed group {}..{}",
+                job.point,
+                labels[job.point],
+                job.seed0,
+                job.seed0 + job.len as u64
+            )
+        })?;
+        let mut losses = [f64::NAN; MAX_LANES];
+        for l in 0..job.len {
+            losses[l] = outs[l].final_loss;
+        }
+        Ok(losses)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn losses_round_trip_exactly_including_specials() {
+        let cases = [
+            1.0,
+            -1.5,
+            0.1 + 0.2, // shortest-repr exercise
+            1.0e-300,
+            -0.0,
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::MIN_POSITIVE / 2.0, // subnormal
+        ];
+        for &x in &cases {
+            let row = Value::Arr(vec![loss_value(x)]).to_json();
+            let parsed = json::parse(&row).unwrap();
+            let back = value_loss(&parsed.as_arr().unwrap()[0]).unwrap();
+            assert_eq!(
+                x.to_bits(),
+                back.to_bits(),
+                "{x} did not round-trip ({row})"
+            );
+        }
+    }
+
+    #[test]
+    fn header_and_row_lines_parse_back() {
+        let labels = vec!["a|b|c".to_string(), "d|e|f".to_string()];
+        let h = header_json(&labels, 6, 4, "fp");
+        let v = json::parse(&h).unwrap();
+        assert!(verify_header(&v, &labels, 6, 4, "fp").is_ok());
+        assert!(verify_header(&v, &labels, 7, 4, "fp").is_err());
+        assert!(verify_header(&v, &labels, 6, 8, "fp").is_err());
+        assert!(verify_header(&v, &labels, 6, 4, "other").is_err());
+        assert!(verify_header(&v, &labels[..1].to_vec(), 6, 4, "fp").is_err());
+
+        let ok = Row {
+            index: 3,
+            point: 1,
+            seed0: 4,
+            len: 2,
+            reused: false,
+            result: Ok(vec![0.25, f64::NAN]),
+        };
+        let v = json::parse(&row_json(&ok, &labels)).unwrap();
+        let (point, seed0, losses) =
+            parse_data_row(&v, &labels, 6, 4).expect("valid row");
+        assert_eq!((point, seed0), (1, 4));
+        assert_eq!(losses[0], 0.25);
+        assert!(losses[1].is_nan());
+        // rows from a foreign grid are skipped, not trusted
+        assert!(parse_data_row(&v, &labels, 12, 4).is_none(), "len mismatch");
+        assert!(parse_data_row(&v, &labels[..1].to_vec(), 6, 4).is_none());
+
+        let err = Row { result: Err("boom".into()), ..ok };
+        let v = json::parse(&row_json(&err, &labels)).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str().unwrap(), "boom");
+        assert!(v.opt("losses").is_none());
+    }
+
+    #[test]
+    fn read_journal_is_lenient_per_line_and_strict_on_headers() {
+        let dir = std::env::temp_dir().join("edgepipe_stream_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("j_{}.jsonl", std::process::id()));
+        let labels = vec!["x".to_string()];
+        let text = format!(
+            "{}\n{}\nnot json at all\n{}\n{{\"i\":9,\"poin",
+            header_json(&labels, 6, 4, "fp"),
+            row_json(
+                &Row {
+                    index: 0,
+                    point: 0,
+                    seed0: 0,
+                    len: 4,
+                    reused: false,
+                    result: Ok(vec![1.0, 2.0, 3.0, 4.0]),
+                },
+                &labels,
+            ),
+            row_json(
+                &Row {
+                    index: 1,
+                    point: 0,
+                    seed0: 4,
+                    len: 2,
+                    reused: false,
+                    result: Err("boom".into()),
+                },
+                &labels,
+            ),
+        );
+        std::fs::write(&p, text).unwrap();
+        let done = read_journal(&p, &labels, 6, 4, "fp").unwrap();
+        // the Ok row survives; garbage, the error row and the truncated
+        // tail are skipped for re-running
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[&(0, 0)], vec![1.0, 2.0, 3.0, 4.0]);
+        // wrong fingerprint → hard error, not silent reuse
+        assert!(read_journal(&p, &labels, 6, 4, "other").is_err());
+        // a file with no header is not a journal
+        std::fs::write(&p, "garbage\n").unwrap();
+        assert!(read_journal(&p, &labels, 6, 4, "fp").is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+}

@@ -161,6 +161,35 @@ where
         .collect()
 }
 
+/// Fallible variant of [`parallel_map_with`]: `f` returns `Result`, and
+/// each item's outcome lands in its own slot instead of aborting the
+/// pool. One bad item fails *that row only* — sibling tasks keep
+/// running, and the caller decides whether the first `Err` (in input
+/// order) sinks the whole fan-out or just one row (the streaming sweep
+/// journal records it as an error row; `serve` turns it into an error
+/// response).
+///
+/// This is a thin, documented wrapper: `parallel_map_with` is already
+/// generic over any `R: Send`, so per-slot `Result` composes for free.
+/// Panics are NOT converted to `Err` — they are still caught, the pool
+/// still drains, and the first panic is re-raised with its task index
+/// exactly as in [`parallel_map_with`].
+pub fn try_parallel_map_with<T, R, E, W, M, F>(
+    items: &[T],
+    threads: usize,
+    make_ws: M,
+    f: F,
+) -> Vec<Result<R, E>>
+where
+    T: Sync,
+    R: Send,
+    E: Send,
+    M: Fn() -> W + Sync,
+    F: Fn(&mut W, &T) -> Result<R, E> + Sync,
+{
+    parallel_map_with(items, threads, make_ws, f)
+}
+
 /// Apply `f` to every item of `items` using `threads` workers, preserving
 /// input order in the returned vector (workspace-free convenience over
 /// [`parallel_map_with`]).
@@ -382,6 +411,50 @@ mod tests {
             .downcast_ref::<usize>()
             .expect("typed payload must survive the re-raise");
         assert_eq!(*code, 1337);
+    }
+
+    #[test]
+    fn try_map_one_error_does_not_abort_siblings() {
+        // the whole point of the fallible variant: an Err row is data,
+        // not a pool abort — every other slot still completes
+        let items: Vec<usize> = (0..64).collect();
+        let out = try_parallel_map_with(
+            &items,
+            4,
+            || (),
+            |_, &x| {
+                if x == 17 {
+                    Err(format!("bad item {x}"))
+                } else {
+                    Ok(x * 2)
+                }
+            },
+        );
+        assert_eq!(out.len(), 64);
+        for (i, r) in out.iter().enumerate() {
+            if i == 17 {
+                assert_eq!(r.as_deref(), Err("bad item 17"));
+            } else {
+                assert_eq!(*r, Ok(i * 2), "sibling {i} must complete");
+            }
+        }
+    }
+
+    #[test]
+    fn try_map_preserves_order_with_workspaces() {
+        let items: Vec<usize> = (0..97).collect();
+        let out: Vec<Result<usize, String>> = try_parallel_map_with(
+            &items,
+            3,
+            || 0usize,
+            |scratch, &x| {
+                *scratch += 1; // stateful scratch must not leak
+                Ok(x + 1)
+            },
+        );
+        let want: Vec<Result<usize, String>> =
+            (1..=97).map(Ok).collect();
+        assert_eq!(out, want);
     }
 
     #[test]

@@ -80,10 +80,12 @@ fn every_axis_matches_scalar_bitwise() {
     let base = sweep_base(19);
     for (k, spec) in axis_specs().into_iter().enumerate() {
         // 5 seeds exercises a ragged 8-wide group with 3 dead lanes
-        let scalar = mc_scenario_loss_lanes(&ds, &base, &spec, 5, 2, 1);
+        let scalar =
+            mc_scenario_loss_lanes(&ds, &base, &spec, 5, 2, 1).unwrap();
         for lanes in [4usize, 8, 16] {
             let batched =
-                mc_scenario_loss_lanes(&ds, &base, &spec, 5, 2, lanes);
+                mc_scenario_loss_lanes(&ds, &base, &spec, 5, 2, lanes)
+                    .unwrap();
             assert_eq!(
                 scalar.mean.to_bits(),
                 batched.mean.to_bits(),
@@ -105,8 +107,8 @@ fn grid_crossing_matches_scalar_bitwise() {
     let ds = small_ds();
     let base = sweep_base(7);
     let specs = axis_specs();
-    let scalar = scenario_grid_lanes(&ds, &base, &specs, 4, 3, 1);
-    let batched = scenario_grid_lanes(&ds, &base, &specs, 4, 3, 8);
+    let scalar = scenario_grid_lanes(&ds, &base, &specs, 4, 3, 1).unwrap();
+    let batched = scenario_grid_lanes(&ds, &base, &specs, 4, 3, 8).unwrap();
     assert_eq!(scalar.len(), batched.len());
     for (a, b) in scalar.iter().zip(&batched) {
         assert_eq!(a.0, b.0);
@@ -151,8 +153,8 @@ fn bounded_store_falls_back_to_scalar() {
     let runner = ScenarioRunner::new(spec.clone(), &ds);
     assert!(!batchable(&runner.effective_cfg(&base)));
     // ...and the batched entry points still return scalar results
-    let scalar = mc_scenario_loss_lanes(&ds, &base, &spec, 4, 2, 1);
-    let batched = mc_scenario_loss_lanes(&ds, &base, &spec, 4, 2, 8);
+    let scalar = mc_scenario_loss_lanes(&ds, &base, &spec, 4, 2, 1).unwrap();
+    let batched = mc_scenario_loss_lanes(&ds, &base, &spec, 4, 2, 8).unwrap();
     assert_eq!(scalar.mean.to_bits(), batched.mean.to_bits());
 }
 

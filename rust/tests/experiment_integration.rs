@@ -31,7 +31,8 @@ fn small_paper_setup() -> (edgepipe::data::Dataset, BoundParams, f64) {
 fn fig3_shape_matches_paper_narrative() {
     let (train, params, t) = small_paper_setup();
     let out =
-        fig3_data(&params, train.n, t, 1.0, &[1.0, 10.0, 100.0, 500.0], 80);
+        fig3_data(&params, train.n, t, 1.0, &[1.0, 10.0, 100.0, 500.0], 80)
+            .unwrap();
     // ñ_c strictly increasing in n_o; curve has an interior minimum
     let mut prev = 0usize;
     for c in &out.curves {
@@ -56,7 +57,7 @@ fn fig4_bound_guidance_close_to_experimental_optimum() {
         reference_n_cs: vec![train.n],
         ..Fig4Config::paper(50.0, t)
     };
-    let out = fig4_data(&train, &params, &cfg);
+    let out = fig4_data(&train, &params, &cfg).unwrap();
     // the paper's quantitative headline: the bound's ñ_c costs only a
     // few percent vs the experimental optimum (paper: 3.8%)
     assert!(

@@ -258,10 +258,10 @@ fn live_fault_scenarios_stay_batchable_and_batch_bitwise() {
             "spec #{k} {}: faults never fired",
             spec.label()
         );
-        let scalar = mc_scenario_loss_lanes(&ds, &base, spec, 5, 2, 1);
+        let scalar = mc_scenario_loss_lanes(&ds, &base, spec, 5, 2, 1).unwrap();
         for lanes in [4usize, 8] {
-            let batched =
-                mc_scenario_loss_lanes(&ds, &base, spec, 5, 2, lanes);
+            let batched = mc_scenario_loss_lanes(&ds, &base, spec, 5, 2, lanes)
+                .unwrap();
             assert_eq!(
                 scalar.mean.to_bits(),
                 batched.mean.to_bits(),

@@ -1,0 +1,361 @@
+//! Streaming pipeline ≡ in-memory sweep, and the panic-free error path.
+//!
+//! Four contracts, each an acceptance criterion for the streaming
+//! sweep + serve surface:
+//!
+//! 1. A streamed scenario sweep produces `(label, McStats)` rows
+//!    **bit-identical** to the in-memory `scenario_grid_lanes` over the
+//!    same specs — and so does a streamed sweep that was interrupted
+//!    (journal truncated mid-line, as a `kill -9` leaves it) and then
+//!    resumed.
+//! 2. An injected per-group failure surfaces as an error row in the
+//!    outcome and the journal — the journal stays line-parseable, the
+//!    sibling groups complete, and resuming re-runs exactly the failed
+//!    group.
+//! 3. A *panicking* group run costs one error row, never the pipeline:
+//!    no panic reaches the worker pool.
+//! 4. The serve loop answers identical requests from cache with
+//!    identical bits, which also match the standalone Monte-Carlo
+//!    estimator; malformed requests get error replies on their line.
+
+use std::path::PathBuf;
+
+use edgepipe::coordinator::des::DesConfig;
+use edgepipe::data::synth::{synth_calhousing, SynthSpec};
+use edgepipe::linalg::batch::MAX_LANES;
+use edgepipe::sweep::runner::{mc_scenario_loss_lanes, scenario_grid_lanes};
+use edgepipe::sweep::scenario::{ChannelSpec, PolicySpec, ScenarioSpec};
+use edgepipe::sweep::serve::{serve_connection, ServeState};
+use edgepipe::sweep::stream::{
+    stream_grid_with, stream_scenario_grid, StreamOptions,
+};
+use edgepipe::sweep::McStats;
+use edgepipe::util::json::{self, Value};
+
+const SEEDS: usize = 5;
+const LANES: usize = 4;
+
+fn small_ds() -> edgepipe::data::Dataset {
+    synth_calhousing(&SynthSpec { n: 240, ..Default::default() })
+}
+
+fn sweep_base(seed: u64) -> DesConfig {
+    DesConfig {
+        loss_every: 0,
+        record_blocks: false,
+        collect_snapshots: false,
+        event_capacity: 0,
+        ..DesConfig::paper(24, 6.0, 420.0, seed)
+    }
+}
+
+fn specs() -> Vec<ScenarioSpec> {
+    let paper = ScenarioSpec::paper();
+    vec![
+        paper.clone(),
+        ScenarioSpec {
+            channel: ChannelSpec::Erasure { p: 0.2 },
+            ..paper.clone()
+        },
+        ScenarioSpec {
+            policy: PolicySpec::Warmup { start: 4, growth: 2.0, cap: 64 },
+            ..paper
+        },
+    ]
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("edgepipe_stream_parity");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{name}_{}.jsonl", std::process::id()))
+}
+
+fn assert_rows_bitwise(
+    expected: &[(String, McStats)],
+    got: &[(String, McStats)],
+    ctx: &str,
+) {
+    assert_eq!(expected.len(), got.len(), "{ctx}: row count");
+    for (e, g) in expected.iter().zip(got) {
+        assert_eq!(e.0, g.0, "{ctx}: label");
+        assert_eq!(e.1.n, g.1.n, "{ctx}: {} n", e.0);
+        assert_eq!(
+            e.1.mean.to_bits(),
+            g.1.mean.to_bits(),
+            "{ctx}: {} mean diverged",
+            e.0
+        );
+        assert_eq!(
+            e.1.std.to_bits(),
+            g.1.std.to_bits(),
+            "{ctx}: {} std diverged",
+            e.0
+        );
+        assert_eq!(
+            e.1.sem.to_bits(),
+            g.1.sem.to_bits(),
+            "{ctx}: {} sem diverged",
+            e.0
+        );
+    }
+}
+
+#[test]
+fn streamed_and_interrupted_resumed_sweeps_match_in_memory_bitwise() {
+    let ds = small_ds();
+    let base = sweep_base(19);
+    let specs = specs();
+    let expected =
+        scenario_grid_lanes(&ds, &base, &specs, SEEDS, 2, LANES).unwrap();
+
+    let journal = tmp("full");
+    let _ = std::fs::remove_file(&journal);
+    let opts = StreamOptions {
+        seeds: SEEDS,
+        threads: 2,
+        lanes: LANES,
+        journal: Some(journal.clone()),
+        ..StreamOptions::default()
+    };
+    let streamed = stream_scenario_grid(&ds, &base, &specs, &opts).unwrap();
+    assert!(streamed.errors.is_empty());
+    // 3 points × ceil(5/4) groups, none reused on a fresh run
+    assert_eq!(streamed.groups_run, 6);
+    assert_eq!(streamed.groups_reused, 0);
+    assert_rows_bitwise(&expected, &streamed.rows, "fresh stream");
+
+    // the journal is valid JSONL: header first, every line parses
+    let text = std::fs::read_to_string(&journal).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 7, "header + one row per group");
+    for (i, line) in lines.iter().enumerate() {
+        let v = json::parse(line).unwrap_or_else(|e| {
+            panic!("journal line {i} is not JSON ({e}): {line}")
+        });
+        assert!(v.opt("error").is_none(), "no error rows on a clean run");
+    }
+
+    // interrupt: keep the header and two completed rows, then the
+    // truncated tail a kill mid-write leaves behind
+    let partial = tmp("part");
+    let mut kept = lines[..3].join("\n");
+    kept.push_str("\n{\"i\":9,\"poin");
+    std::fs::write(&partial, kept).unwrap();
+
+    let resumed_opts = StreamOptions {
+        seeds: SEEDS,
+        threads: 2,
+        lanes: LANES,
+        resume: Some(partial.clone()),
+        ..StreamOptions::default()
+    };
+    let resumed =
+        stream_scenario_grid(&ds, &base, &specs, &resumed_opts).unwrap();
+    assert_eq!(resumed.groups_reused, 2, "both surviving rows reused");
+    assert_eq!(resumed.groups_run, 4);
+    assert!(resumed.errors.is_empty());
+    assert_rows_bitwise(&expected, &resumed.rows, "interrupted + resumed");
+
+    // the resume appended its re-runs to the same journal; a second
+    // resume now reuses everything and still matches bitwise
+    let replayed =
+        stream_scenario_grid(&ds, &base, &specs, &resumed_opts).unwrap();
+    assert_eq!(replayed.groups_reused, 6);
+    assert_eq!(replayed.groups_run, 0);
+    assert_rows_bitwise(&expected, &replayed.rows, "full journal replay");
+
+    // a journal from different sweep parameters must be rejected
+    let wrong_seeds = StreamOptions {
+        seeds: SEEDS + 1,
+        resume: Some(partial.clone()),
+        ..resumed_opts
+    };
+    assert!(stream_scenario_grid(&ds, &base, &specs, &wrong_seeds).is_err());
+
+    let _ = std::fs::remove_file(&journal);
+    let _ = std::fs::remove_file(&partial);
+}
+
+/// Deterministic per-lane losses so parity is checkable without a DES.
+fn synthetic_losses(point: usize, seed0: u64, len: usize) -> [f64; MAX_LANES] {
+    let mut out = [f64::NAN; MAX_LANES];
+    for (lane, slot) in out.iter_mut().take(len).enumerate() {
+        *slot = (point * 100) as f64 + seed0 as f64 + lane as f64 * 0.5;
+    }
+    out
+}
+
+#[test]
+fn injected_failures_become_error_rows_and_resume_reruns_them() {
+    let labels = vec!["alpha".to_string(), "beta".to_string()];
+    let journal = tmp("inject");
+    let _ = std::fs::remove_file(&journal);
+    let opts = StreamOptions {
+        seeds: 6,
+        threads: 2,
+        lanes: 4,
+        journal: Some(journal.clone()),
+        fingerprint: "inject-fp".to_string(),
+        ..StreamOptions::default()
+    };
+    let out = stream_grid_with(&labels, &opts, |_bw, job| {
+        if job.point == 1 && job.seed0 == 4 {
+            anyhow::bail!("injected failure");
+        }
+        Ok(synthetic_losses(job.point, job.seed0, job.len))
+    })
+    .unwrap();
+
+    // the failure is an error row, not a panic and not a lost sweep
+    assert_eq!(out.errors.len(), 1);
+    assert_eq!(out.errors[0].point, 1);
+    assert_eq!(out.errors[0].label, "beta");
+    assert_eq!(out.errors[0].seed0, 4);
+    assert!(out.errors[0].message.contains("injected failure"));
+    assert_eq!(out.groups_run, 4); // 2 points × 2 groups, all executed
+    assert_eq!(out.rows[0].1.n, 6, "sibling point unaffected");
+    assert_eq!(out.rows[1].1.n, 4, "failed group's seeds dropped");
+
+    // the journal survived the failure: all lines parse, one error row
+    let text = std::fs::read_to_string(&journal).unwrap();
+    let error_rows = text
+        .lines()
+        .map(|l| json::parse(l).expect("valid line"))
+        .filter(|v| v.opt("error").is_some())
+        .count();
+    assert_eq!(error_rows, 1);
+
+    // resuming with the failure gone re-runs ONLY the failed group
+    let resume_opts = StreamOptions {
+        resume: Some(journal.clone()),
+        journal: None,
+        ..opts
+    };
+    let healed = stream_grid_with(&labels, &resume_opts, |_bw, job| {
+        Ok(synthetic_losses(job.point, job.seed0, job.len))
+    })
+    .unwrap();
+    assert!(healed.errors.is_empty());
+    assert_eq!(healed.groups_reused, 3);
+    assert_eq!(healed.groups_run, 1);
+
+    // ...and the healed result is bit-identical to a never-failed run
+    let fresh_opts = StreamOptions {
+        seeds: 6,
+        threads: 2,
+        lanes: 4,
+        fingerprint: "inject-fp".to_string(),
+        ..StreamOptions::default()
+    };
+    let fresh = stream_grid_with(&labels, &fresh_opts, |_bw, job| {
+        Ok(synthetic_losses(job.point, job.seed0, job.len))
+    })
+    .unwrap();
+    assert_rows_bitwise(&fresh.rows, &healed.rows, "healed vs fresh");
+
+    let _ = std::fs::remove_file(&journal);
+}
+
+#[test]
+fn a_panicking_group_costs_one_error_row_not_the_pipeline() {
+    let labels = vec!["panicky".to_string()];
+    let opts = StreamOptions {
+        seeds: 8,
+        threads: 2,
+        lanes: 4,
+        fingerprint: "panic-fp".to_string(),
+        ..StreamOptions::default()
+    };
+    let out = stream_grid_with(&labels, &opts, |_bw, job| {
+        if job.seed0 == 0 {
+            panic!("kaboom in group {}", job.seed0);
+        }
+        Ok(synthetic_losses(0, job.seed0, job.len))
+    })
+    .expect("a panicking group must not sink the pipeline");
+    assert_eq!(out.errors.len(), 1);
+    assert!(
+        out.errors[0].message.contains("kaboom"),
+        "panic payload preserved: {}",
+        out.errors[0].message
+    );
+    assert_eq!(out.groups_run, 2);
+    assert_eq!(out.rows[0].1.n, 4, "the sibling group still aggregated");
+}
+
+#[test]
+fn serve_loop_caches_and_matches_the_standalone_estimator() {
+    let ds = small_ds();
+    let base = sweep_base(19);
+    let mut state = ServeState::new(&ds, base.clone(), 64, LANES);
+
+    let req = r#"{"id":1,"channel":"erasure:0.2","seeds":5}"#;
+    let input = format!(
+        "{req}\n{}\n{}\n{}\n",
+        req.replace("\"id\":1", "\"id\":2"),
+        r#"{"id":3,"policy":"warp-drive"}"#,
+        r#"{"id":4,"cmd":"shutdown"}"#,
+    );
+    let mut out = Vec::new();
+    let stopped = serve_connection(
+        &mut state,
+        std::io::Cursor::new(input),
+        &mut out,
+    )
+    .unwrap();
+    assert!(stopped, "shutdown must stop the loop");
+
+    let replies: Vec<Value> = String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(|l| json::parse(l).expect("every reply is JSON"))
+        .collect();
+    assert_eq!(replies.len(), 4);
+
+    let loss = |v: &Value, key: &str| -> f64 {
+        match v.get(key).unwrap() {
+            Value::Num(n) => *n,
+            Value::Str(text) => text.parse().unwrap(),
+            other => panic!("{key}: unexpected {other:?}"),
+        }
+    };
+    // first request computes, second is a pure cache hit — same bits
+    assert_eq!(replies[0].get("ok").unwrap(), &Value::Bool(true));
+    assert_eq!(replies[0].get("cache").unwrap().as_str().unwrap(), "miss");
+    assert_eq!(replies[1].get("cache").unwrap().as_str().unwrap(), "hit");
+    for key in ["mean", "std", "sem"] {
+        assert_eq!(
+            loss(&replies[0], key).to_bits(),
+            loss(&replies[1], key).to_bits(),
+            "{key}: cache hit must carry identical bits"
+        );
+    }
+
+    // ...and both match the standalone Monte-Carlo estimator bitwise
+    let spec = ScenarioSpec {
+        channel: ChannelSpec::Erasure { p: 0.2 },
+        ..ScenarioSpec::paper()
+    };
+    let mc =
+        mc_scenario_loss_lanes(&ds, &base, &spec, 5, 2, LANES).unwrap();
+    assert_eq!(loss(&replies[0], "mean").to_bits(), mc.mean.to_bits());
+    assert_eq!(loss(&replies[0], "std").to_bits(), mc.std.to_bits());
+    assert_eq!(
+        replies[0].get("n").unwrap().as_usize().unwrap(),
+        mc.n
+    );
+
+    // the bad request got an error reply in place, id echoed
+    assert_eq!(replies[2].get("ok").unwrap(), &Value::Bool(false));
+    assert_eq!(replies[2].get("id").unwrap().as_usize().unwrap(), 3);
+    assert!(replies[2]
+        .get("error")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .contains("warp-drive"));
+
+    // shutdown acknowledged on its line
+    assert_eq!(replies[3].get("id").unwrap().as_usize().unwrap(), 4);
+    assert_eq!(replies[3].get("ok").unwrap(), &Value::Bool(true));
+}
