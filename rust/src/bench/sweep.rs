@@ -9,22 +9,37 @@
 //!   supported lane width L ∈ {4, 8, 16}: the identical job list chunked
 //!   into seed-groups, traced once and replayed through SoA kernels.
 //!
+//! A fourth phase measures the sharded DES at fleet scale: for each
+//! device count k in [`SweepBenchConfig::devices`] (up to 10 240 in the
+//! full preset), the identical k-device scenario runs through the
+//! inline single-shard event loop and again over [`SCALING_SHARDS`]
+//! shard workers, asserted bit-identical, producing the
+//! `device_scaling` rows.
+//!
 //! All phases compute bit-identical losses (asserted), so the ratios are
 //! pure engine overhead. `edgepipe bench --json BENCH_sweep.json` and
 //! `cargo bench --bench bench_sweep` both emit the same
-//! `BENCH_sweep.json` (schema 2) so future PRs can regress against a
-//! recorded baseline: compare `runs_per_sec` and the per-lane `lanes`
-//! rows (and `allocs_per_run`, when the counting allocator is
-//! installed) across commits. `EDGEPIPE_BENCH_MIN_SPEEDUP` turns the
-//! largest-lane batched speedup into a hard gate (see
-//! `rust/benches/bench_sweep.rs`).
+//! `BENCH_sweep.json` (schema 3) so future PRs can regress against a
+//! recorded baseline: compare `runs_per_sec`, the per-lane `lanes`
+//! rows and the `device_scaling` rows (and `allocs_per_run`, when the
+//! counting allocator is installed) across commits.
+//! `EDGEPIPE_BENCH_MIN_SPEEDUP` turns the largest-lane batched speedup
+//! into a hard gate (see `rust/benches/bench_sweep.rs`).
 
 use std::time::Instant;
 
+use crate::channel::{IdealChannel, MultiLaneChannel};
 use crate::coordinator::des::DesConfig;
-use crate::coordinator::scheduler::RunWorkspace;
+use crate::coordinator::executor::NativeExecutor;
+use crate::coordinator::scheduler::{
+    run_schedule, FixedPolicy, GreedyScheduler, OverlapMode, RunWorkspace,
+};
+use crate::coordinator::shard::ShardedSource;
+use crate::data::shard::shard_round_robin;
 use crate::data::split::train_split;
 use crate::data::synth::{synth_calhousing, SynthSpec};
+use crate::data::Dataset;
+use crate::model::RidgeModel;
 use crate::linalg::batch::LANE_WIDTHS;
 use crate::sweep::batch::grouped_losses;
 use crate::sweep::runner::log_grid;
@@ -46,10 +61,16 @@ pub struct SweepBenchConfig {
     pub threads: usize,
     /// Per-packet overhead.
     pub n_o: f64,
+    /// Device counts for the sharded-DES scaling phase (one
+    /// [`DeviceScalingRow`] each). Counts exceeding the train-split
+    /// size are skipped — every device needs at least one sample.
+    pub devices: Vec<usize>,
 }
 
 impl SweepBenchConfig {
     /// Paper-scale workload (N = 18 576 raw → 16 718 train rows).
+    /// The 10 240-device point is the fleet-scale target of the
+    /// sharded DES: ~1.6 samples per device, pure scheduling overhead.
     pub fn full() -> SweepBenchConfig {
         SweepBenchConfig {
             n: 18_576,
@@ -57,6 +78,7 @@ impl SweepBenchConfig {
             seeds: 8,
             threads: 0,
             n_o: 100.0,
+            devices: vec![64, 1024, 10_240],
         }
     }
 
@@ -68,6 +90,7 @@ impl SweepBenchConfig {
             seeds: 4,
             threads: 0,
             n_o: 20.0,
+            devices: vec![32, 256],
         }
     }
 
@@ -106,6 +129,30 @@ pub struct LaneBenchRow {
     pub allocs_per_run: Option<f64>,
 }
 
+/// One device-count point of the sharded-DES scaling phase: the same
+/// `k`-device scenario run end-to-end with the inline single-shard
+/// event loop and again with [`SCALING_SHARDS`] shard workers. Both
+/// runs are asserted bit-identical (loss, updates, samples) before the
+/// timing is trusted — sharding is an execution strategy, not a
+/// semantics.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceScalingRow {
+    /// Device count k (one dataset shard + one channel lane each).
+    pub devices: usize,
+    /// Shard workers in the multi-shard run.
+    pub shards: usize,
+    pub secs_single: f64,
+    pub secs_sharded: f64,
+    /// `secs_single / secs_sharded`.
+    pub speedup: f64,
+    /// Samples delivered per run (identical across both runs).
+    pub samples: usize,
+}
+
+/// Shard-worker count the scaling phase measures against the inline
+/// single-shard loop (capped to the device count by the source).
+pub const SCALING_SHARDS: usize = 4;
+
 /// One measurement of every engine shape over the identical workload.
 #[derive(Clone, Debug)]
 pub struct SweepBenchReport {
@@ -131,6 +178,8 @@ pub struct SweepBenchReport {
     pub allocs_per_run: Option<f64>,
     /// Batched-seed engine rows, one per lane width in [`LANE_WIDTHS`].
     pub lanes: Vec<LaneBenchRow>,
+    /// Sharded-DES device-count scaling rows, one per measured count.
+    pub device_scaling: Vec<DeviceScalingRow>,
 }
 
 impl SweepBenchReport {
@@ -177,6 +226,18 @@ impl SweepBenchReport {
                 row.updates_per_sec,
             ));
         }
+        for row in &self.device_scaling {
+            out.push_str(&format!(
+                "\x20 devices k={:<6} (sharded DES, {} shards): \
+                 single {:>9.3}s  sharded {:>9.3}s  ({:.2}x, {} samples)\n",
+                row.devices,
+                row.shards,
+                row.secs_single,
+                row.secs_sharded,
+                row.speedup,
+                row.samples,
+            ));
+        }
         out
     }
 
@@ -186,8 +247,9 @@ impl SweepBenchReport {
         self.lanes.iter().max_by_key(|r| r.lanes)
     }
 
-    /// The `BENCH_sweep.json` document (schema 2: adds the per-lane
-    /// `lanes` rows of the batched-seed engine).
+    /// The `BENCH_sweep.json` document (schema 3: adds the sharded-DES
+    /// `device_scaling` rows; schema 2 added the per-lane `lanes` rows
+    /// of the batched-seed engine).
     pub fn to_value(&self) -> Value {
         let opt_num = |v: Option<f64>| match v {
             Some(x) => num(x),
@@ -207,9 +269,24 @@ impl SweepBenchReport {
                 ])
             })
             .collect();
+        let scaling_rows: Vec<Value> = self
+            .device_scaling
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("devices", num(r.devices as f64)),
+                    ("shards", num(r.shards as f64)),
+                    ("secs_single", num(r.secs_single)),
+                    ("secs_sharded", num(r.secs_sharded)),
+                    ("speedup", num(r.speedup)),
+                    ("samples", num(r.samples as f64)),
+                ])
+            })
+            .collect();
         obj(vec![
-            ("schema", num(2.0)),
+            ("schema", num(3.0)),
             ("lanes", Value::Arr(lane_rows)),
+            ("device_scaling", Value::Arr(scaling_rows)),
             ("bench", s("sweep")),
             ("n_train", num(self.n_train as f64)),
             ("d", num(self.d as f64)),
@@ -347,6 +424,17 @@ pub fn run_sweep_bench(cfg: &SweepBenchConfig) -> SweepBenchReport {
         })
         .collect();
 
+    // sharded-DES device-count scaling: the same k-device scenario,
+    // inline single-shard event loop vs SCALING_SHARDS shard workers;
+    // counts the train split can't populate are skipped
+    let device_scaling: Vec<DeviceScalingRow> = cfg
+        .devices
+        .iter()
+        .copied()
+        .filter(|&k| k >= 2 && k <= train.n)
+        .map(|k| device_scaling_row(&train, k, cfg.n_o))
+        .collect();
+
     let per_run = |allocs: Option<u64>| allocs_per_unit(allocs, runs);
     SweepBenchReport {
         n_train: train.n,
@@ -365,6 +453,71 @@ pub fn run_sweep_bench(cfg: &SweepBenchConfig) -> SweepBenchReport {
         allocs_per_run_baseline: per_run(baseline_allocs),
         allocs_per_run: per_run(opt_allocs),
         lanes,
+        device_scaling,
+    }
+}
+
+/// Measure one device-count point of the sharded-DES scaling phase:
+/// the identical k-device scenario (round-robin shards, one ideal
+/// channel lane per device, greedy scheduler) run at 1 shard and at
+/// [`SCALING_SHARDS`], asserted bit-identical before timing.
+fn device_scaling_row(
+    train: &Dataset,
+    k: usize,
+    n_o: f64,
+) -> DeviceScalingRow {
+    let shards_ds = shard_round_robin(train, k);
+    let slowdowns = vec![1.0; k];
+    // small blocks keep per-device draws tiny (the fleet regime the
+    // sharded loop targets); the budget is effectively unbounded so
+    // every run ends by source exhaustion, not by deadline
+    let dcfg = DesConfig { n_c: 4, ..bench_base(n_o, 1e12) };
+    let mut run = |n_shards: usize| {
+        let mut source = ShardedSource::new(
+            &shards_ds,
+            dcfg.seed,
+            GreedyScheduler::new(),
+            &slowdowns,
+            n_shards,
+        );
+        let mut policy = FixedPolicy(dcfg.n_c);
+        let mut channel = MultiLaneChannel::uniform(k, |_| IdealChannel);
+        let mut exec = NativeExecutor::new(
+            RidgeModel::new(train.d, dcfg.lambda, train.n),
+            dcfg.alpha,
+        );
+        let t0 = Instant::now();
+        let res = run_schedule(
+            train,
+            &dcfg,
+            &mut source,
+            &mut policy,
+            OverlapMode::Pipelined,
+            &mut channel,
+            &mut exec,
+        )
+        .expect("device-scaling run failed");
+        (res, t0.elapsed().as_secs_f64())
+    };
+    let (single, secs_single) = run(1);
+    let (sharded, secs_sharded) = run(SCALING_SHARDS);
+    assert_eq!(
+        single.final_loss.to_bits(),
+        sharded.final_loss.to_bits(),
+        "sharded DES (k={k}) changed the final loss"
+    );
+    assert_eq!(single.updates, sharded.updates, "k={k} update count");
+    assert_eq!(
+        single.samples_delivered, sharded.samples_delivered,
+        "k={k} samples delivered"
+    );
+    DeviceScalingRow {
+        devices: k,
+        shards: SCALING_SHARDS.min(k),
+        secs_single,
+        secs_sharded,
+        speedup: secs_single / secs_sharded,
+        samples: single.samples_delivered,
     }
 }
 
@@ -388,6 +541,9 @@ mod tests {
             seeds: 2,
             threads: 2,
             n_o: 5.0,
+            // 12 devices → ~30 samples each; 1000 exceeds the train
+            // split and must be skipped, not crash the bench
+            devices: vec![12, 1000],
         });
         assert_eq!(report.runs, report.grid.len() * 2);
         assert!(report.updates > 0);
@@ -401,21 +557,38 @@ mod tests {
             assert!(row.speedup.is_finite() && row.speedup > 0.0);
         }
         assert_eq!(report.widest_lane_row().unwrap().lanes, 16);
-        // JSON round-trips at schema 2 with the lane rows
+        // the oversize device count is skipped; the in-range one is
+        // measured (the bitwise identity assertion lives inside
+        // device_scaling_row)
+        assert_eq!(report.device_scaling.len(), 1);
+        let row = &report.device_scaling[0];
+        assert_eq!(row.devices, 12);
+        assert_eq!(row.shards, SCALING_SHARDS);
+        assert!(row.secs_single > 0.0 && row.secs_sharded > 0.0);
+        assert!(row.speedup.is_finite() && row.speedup > 0.0);
+        assert!(row.samples > 0);
+        // JSON round-trips at schema 3 with lane + device-scaling rows
         let v = report.to_value();
         assert_eq!(
             v.get("runs").unwrap().as_usize().unwrap(),
             report.runs
         );
-        assert_eq!(v.get("schema").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(v.get("schema").unwrap().as_usize().unwrap(), 3);
         let rows = v.get("lanes").unwrap().as_arr().unwrap();
         assert_eq!(rows.len(), LANE_WIDTHS.len());
         assert_eq!(
             rows[2].get("lanes").unwrap().as_usize().unwrap(),
             16
         );
+        let scaling = v.get("device_scaling").unwrap().as_arr().unwrap();
+        assert_eq!(scaling.len(), 1);
+        assert_eq!(
+            scaling[0].get("devices").unwrap().as_usize().unwrap(),
+            12
+        );
         assert!(report.render().contains("speedup"));
         assert!(report.render().contains("batched L=16"));
+        assert!(report.render().contains("devices k=12"));
     }
 }
 

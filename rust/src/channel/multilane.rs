@@ -40,6 +40,20 @@ impl<C: Channel> MultiLaneChannel<C> {
         MultiLaneChannel { lanes, active: 0 }
     }
 
+    /// Build `k` lanes from a per-device factory — the fleet-scale
+    /// constructor behind the sharded-DES device-count scaling bench
+    /// (`bench/sweep.rs`), where `k` reaches 10k+ lanes. The factory
+    /// must be deterministic in the lane index: lane channels carry
+    /// per-device STATE, never their own RNG (all channel noise stays
+    /// on the single `STREAM_CHANNEL` sequence), so building a fleet
+    /// consumes no randomness regardless of `k`.
+    pub fn uniform(
+        k: usize,
+        mut make: impl FnMut(usize) -> C,
+    ) -> MultiLaneChannel<C> {
+        Self::new((0..k).map(&mut make).collect())
+    }
+
     /// Number of lanes.
     pub fn lane_count(&self) -> usize {
         self.lanes.len()
@@ -152,6 +166,15 @@ mod tests {
         }
         assert!(ch.lanes()[0].is_bad(), "lane 1 traffic advanced lane 0");
         assert!(!ch.lanes()[1].is_bad());
+    }
+
+    #[test]
+    fn uniform_builds_k_lanes_from_the_factory() {
+        let ch = MultiLaneChannel::uniform(257, |i| {
+            RateLimitedChannel::new(1.0 + i as f64, IdealChannel)
+        });
+        assert_eq!(ch.lane_count(), 257);
+        assert_eq!(ch.active_lane(), 0);
     }
 
     #[test]

@@ -789,6 +789,9 @@ fn cmd_bench(args: &Args) -> Result<i32> {
             seeds: cfg.sweep.seeds,
             threads: cfg.sweep.threads,
             n_o: cfg.protocol.n_o,
+            // full-preset device counts; oversize ones are skipped
+            // when the configured dataset can't populate them
+            ..SweepBenchConfig::full()
         }
     };
     if !args.quiet {

@@ -28,6 +28,7 @@ pub mod executor;
 pub mod pipeline;
 pub mod run;
 pub mod scheduler;
+pub mod shard;
 mod trainer;
 
 pub use des::{run_des, DesConfig, DeviceTransmitter};
@@ -35,6 +36,7 @@ pub use events::{Event, EventKind};
 pub use executor::{BlockExecutor, NativeExecutor, TraceExecutor};
 pub use pipeline::run_pipelined;
 pub use run::{run_experiment, ExperimentOutput, RunResult};
+pub use shard::{shard_count, ShardedSource, MAX_SHARDS, SHARDS_ENV};
 pub use scheduler::{
     run_schedule, run_schedule_with, BlockFrame, BlockPolicy,
     ControlPolicy, DeviceScheduler, FixedPolicy, GreedyScheduler,

@@ -212,6 +212,7 @@ impl RunStats {
 }
 
 /// What a [`TrafficSource`] produced for the current poll.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum SourcePoll {
     /// The frame was filled by device `device`.
     Block { device: usize },
@@ -417,7 +418,7 @@ pub enum OverlapMode {
 /// `remaining` (partial Fisher–Yates into the tail — O(k) per block, the
 /// seed `DeviceTransmitter` discipline bit-for-bit) and gather them from
 /// `ds` into `frame`.
-fn draw_block(
+pub(crate) fn draw_block(
     ds: &Dataset,
     remaining: &mut Vec<u32>,
     rng: &mut Pcg32,
@@ -504,10 +505,13 @@ impl TrafficSource for SingleDeviceSource<'_> {
     }
 }
 
-/// One device's transmit state in a multi-device schedule.
-struct DeviceLane {
-    remaining: Vec<u32>,
-    rng: Pcg32,
+/// One device's transmit state in a multi-device schedule. Shared with
+/// the sharded source (`coordinator::shard`), whose shard workers own
+/// disjoint ranges of these lanes — a lane is only ever touched by its
+/// owning shard thread there.
+pub(crate) struct DeviceLane {
+    pub(crate) remaining: Vec<u32>,
+    pub(crate) rng: Pcg32,
 }
 
 /// `k` devices holding disjoint shards, taking turns on the shared

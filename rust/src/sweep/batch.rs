@@ -69,6 +69,12 @@ pub fn batch_lanes() -> usize {
 /// sweep mode only — curves and snapshots need the scalar engine — and
 /// an append-only store (a bounded reservoir overwrites rows, which
 /// would break tape replay against the final store).
+///
+/// DES sharding (`EDGEPIPE_SHARDS`, `coordinator::shard`) does NOT
+/// enter this predicate: the sharded source is bit-identical to the
+/// single-threaded one at every shard count, so a sharded trace pass
+/// records exactly the tape a scalar run would replay — threaded
+/// hetero runs stay batchable with no explicit fallback.
 pub fn batchable(cfg: &DesConfig) -> bool {
     cfg.loss_every == 0
         && !cfg.record_blocks

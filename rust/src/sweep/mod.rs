@@ -46,8 +46,10 @@ pub use scenario::{
     from_name, registry, ChannelSpec, EstimatorSpec, HeteroSpec,
     PolicySpec, ScenarioRunner, ScenarioSpec, SchedulerSpec, TrafficSpec,
 };
-pub use serve::{serve_connection, serve_tcp, ServeReply, ServeState};
+pub use serve::{
+    serve_connection, serve_listener, serve_tcp, ServeReply, ServeState,
+};
 pub use stream::{
-    stream_grid_with, stream_scenario_grid, StreamError, StreamOptions,
-    StreamOutcome,
+    compact_journal, stream_grid_with, stream_scenario_grid, StreamError,
+    StreamOptions, StreamOutcome,
 };

@@ -54,8 +54,9 @@ use crate::coordinator::scheduler::{
     run_schedule_with_opts, BlockPolicy, ControlPolicy, DeviceScheduler,
     FaultObs, FixedPolicy, GreedyScheduler, LaneView, OnlineArrivalSource,
     OverlapMode, PropFairScheduler, RoundRobinScheduler, RoundRobinSource,
-    RunStats, RunWorkspace, ScheduledSource, SingleDeviceSource,
+    RunStats, RunWorkspace, SingleDeviceSource,
 };
+use crate::coordinator::shard::{shard_count, ShardedSource};
 use crate::data::classify::binarize_labels;
 use crate::data::shard::{shard_label_skew, shard_round_robin};
 use crate::data::Dataset;
@@ -1528,12 +1529,17 @@ impl<'a> ScenarioRunner<'a> {
                 stats
             }
             TrafficSpec::Hetero(h) => {
-                let mut source = ScheduledSource::with_bufs(
+                // the sharded source is bit-identical to the legacy
+                // `ScheduledSource` at every shard count (asserted in
+                // `rust/tests/scenario_parity.rs`), so the env knob is
+                // a pure execution-strategy choice
+                let mut source = ShardedSource::with_bufs(
                     &self.shards,
                     cfg.seed,
                     std::mem::take(&mut ws.lane_bufs),
                     h.sched.make(),
                     &self.lane_slowdowns,
+                    shard_count(),
                 );
                 let stats = run_schedule_with_opts(
                     ws,

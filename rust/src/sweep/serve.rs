@@ -13,11 +13,27 @@
 //!
 //! The service is a warm cache around the sweep machinery: each
 //! distinct scenario label builds its [`ScenarioRunner`] (and memoized
-//! `ControlPlan`) once, one [`BatchWorkspace`] persists across
-//! requests, and identical `(label, n_c, seed0, seeds)` work is deduped
-//! to a cached [`McStats`] (`"cache":"hit"`). Results are bit-identical
-//! to [`mc_scenario_loss_lanes`] at the same lane width — the batched
-//! engine's 0-ULP contract carries over unchanged.
+//! `ControlPlan`) once per session, one [`BatchWorkspace`] persists
+//! across a session's requests, and identical `(label, n_c, seed0,
+//! seeds)` work is deduped to a cached [`McStats`] (`"cache":"hit"`).
+//! Results are bit-identical to [`mc_scenario_loss_lanes`] at the same
+//! lane width — the batched engine's 0-ULP contract carries over
+//! unchanged.
+//!
+//! # Concurrency model
+//!
+//! [`serve_tcp`] used to serve ONE connection at a time: a second
+//! client queued behind the first's entire session. It now spawns a
+//! scoped thread per connection. The result cache is the only shared
+//! mutable state ([`Mutex`]-guarded, held only for a get or an
+//! insert — never across a run); each connection gets its own
+//! [`ServeState::session`] with private runners and workspace, so no
+//! run-time state crosses threads. Two clients racing the same
+//! uncached key may both compute it — they compute THE SAME BITS
+//! (the 0-ULP contract), so last-writer-wins insertion is benign and
+//! replies stay bit-identical to the single-session service.
+//! `{"cmd":"shutdown"}` flips a flag and self-connects to unblock the
+//! accept loop, so shutdown still works mid-fleet.
 //!
 //! Every malformed or failing request produces an `{"ok":false,
 //! "error":…}` reply on its line — never a panic, never a dropped
@@ -33,7 +49,9 @@
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::TcpListener;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
@@ -61,14 +79,16 @@ pub enum ServeReply {
 /// besides the shared base config.
 type CacheKey = (String, usize, u64, usize);
 
-/// Warm per-process service state: runners, result cache, workspace.
+/// Warm service state: private runners + workspace for one session,
+/// plus the result cache shared (via `Arc<Mutex<…>>`) with every
+/// session cloned off it by [`ServeState::session`].
 pub struct ServeState<'a> {
     ds: &'a Dataset,
     base: DesConfig,
     max_seeds: usize,
     lanes: usize,
     runners: HashMap<String, ScenarioRunner<'a>>,
-    cache: HashMap<CacheKey, McStats>,
+    cache: Arc<Mutex<HashMap<CacheKey, McStats>>>,
     bw: BatchWorkspace,
 }
 
@@ -87,14 +107,32 @@ impl<'a> ServeState<'a> {
             max_seeds: max_seeds.max(1),
             lanes: if lanes == 0 { batch_lanes() } else { snap_lanes(lanes) },
             runners: HashMap::new(),
-            cache: HashMap::new(),
+            cache: Arc::new(Mutex::new(HashMap::new())),
+            bw: BatchWorkspace::new(),
+        }
+    }
+
+    /// A fresh per-connection session: same config, SAME result cache
+    /// (the `Arc` is cloned, not the map), private runners and
+    /// workspace. Runners rebuild lazily per session — they memoize
+    /// `ControlPlan`s mutably mid-run, so sharing them across
+    /// connection threads would race; the deduped McStats results are
+    /// what's worth sharing.
+    pub fn session(&self) -> ServeState<'a> {
+        ServeState {
+            ds: self.ds,
+            base: self.base.clone(),
+            max_seeds: self.max_seeds,
+            lanes: self.lanes,
+            runners: HashMap::new(),
+            cache: Arc::clone(&self.cache),
             bw: BatchWorkspace::new(),
         }
     }
 
     /// Cached results so far (for logging/tests).
     pub fn cached_results(&self) -> usize {
-        self.cache.len()
+        lock_cache(&self.cache).len()
     }
 
     /// Handle one request line. Always yields a reply line; errors
@@ -168,9 +206,12 @@ impl<'a> ServeState<'a> {
 
         let label = spec.label();
         let key = (label.clone(), n_c, seed0, seeds);
-        let hit = self.cache.contains_key(&key);
-        let stats = match self.cache.get(&key) {
-            Some(stats) => *stats,
+        // lock only for the lookup — a run under the lock would
+        // serialize every concurrent session on the slowest request
+        let cached = lock_cache(&self.cache).get(&key).copied();
+        let hit = cached.is_some();
+        let stats = match cached {
+            Some(stats) => stats,
             None => {
                 let base = DesConfig { n_c, ..self.base.clone() };
                 let ds = self.ds;
@@ -196,7 +237,9 @@ impl<'a> ServeState<'a> {
                     }
                 }
                 let stats = McStats::from_welford(&w);
-                self.cache.insert(key, stats);
+                // two sessions racing the same key insert identical
+                // bits (0-ULP determinism): last-writer-wins is benign
+                lock_cache(&self.cache).insert(key, stats);
                 stats
             }
         };
@@ -213,6 +256,16 @@ impl<'a> ServeState<'a> {
             ("cache", s(if hit { "hit" } else { "miss" })),
         ]))
     }
+}
+
+/// Lock the shared result cache, shrugging off poisoning: the guarded
+/// map holds `Copy` stats with no cross-key invariant, so a connection
+/// thread that panicked mid-insert can't have left it inconsistent,
+/// and one bad client must not wedge every other session's cache.
+fn lock_cache<'m>(
+    cache: &'m Arc<Mutex<HashMap<CacheKey, McStats>>>,
+) -> std::sync::MutexGuard<'m, HashMap<CacheKey, McStats>> {
+    cache.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 fn with_id(mut v: Value, id: Value) -> Value {
@@ -278,32 +331,63 @@ pub fn serve_connection<R: BufRead, W: Write>(
     Ok(false)
 }
 
-/// Accept loop: one connection at a time (the state's warm cache is
-/// deliberately shared, not sharded). A dropped connection logs and
-/// keeps serving; only `{"cmd":"shutdown"}` stops the loop.
+/// Accept loop: one scoped thread per connection, each driving its own
+/// [`ServeState::session`] (private runners/workspace, shared result
+/// cache). A dropped or erroring connection logs and keeps serving;
+/// `{"cmd":"shutdown"}` from ANY client flips the stop flag and
+/// self-connects to unblock `accept`, so in-flight siblings finish
+/// (the scope joins them) and the loop exits.
+pub fn serve_listener(
+    state: &ServeState<'_>,
+    listener: TcpListener,
+) -> Result<()> {
+    let local = listener.local_addr().context("listener address")?;
+    let shutdown = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let shutdown = &shutdown;
+        for stream in listener.incoming() {
+            if shutdown.load(Ordering::SeqCst) {
+                break; // possibly the wake connection itself
+            }
+            let stream = match stream {
+                Ok(stream) => stream,
+                Err(e) => {
+                    eprintln!("serve: accept failed: {e}");
+                    continue;
+                }
+            };
+            scope.spawn(move || {
+                let reader = match stream.try_clone() {
+                    Ok(clone) => BufReader::new(clone),
+                    Err(e) => {
+                        eprintln!("serve: cloning connection: {e}");
+                        return;
+                    }
+                };
+                let mut session = state.session();
+                match serve_connection(&mut session, reader, stream) {
+                    Ok(true) => {
+                        shutdown.store(true, Ordering::SeqCst);
+                        // unblock accept() so it observes the flag
+                        let _ = TcpStream::connect(local);
+                    }
+                    Ok(false) => {}
+                    // a bad client must not take the service down
+                    Err(e) => eprintln!("serve: connection error: {e:#}"),
+                }
+            });
+        }
+    });
+    Ok(())
+}
+
+/// Bind `addr` and serve it with [`serve_listener`] until a client
+/// sends `{"cmd":"shutdown"}`.
 pub fn serve_tcp(state: &mut ServeState<'_>, addr: &str) -> Result<()> {
     let listener =
         TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     println!("edgepipe serve: listening on {}", listener.local_addr()?);
-    for stream in listener.incoming() {
-        let stream = match stream {
-            Ok(stream) => stream,
-            Err(e) => {
-                eprintln!("serve: accept failed: {e}");
-                continue;
-            }
-        };
-        let reader = BufReader::new(
-            stream.try_clone().context("cloning connection")?,
-        );
-        match serve_connection(state, reader, stream) {
-            Ok(true) => break,
-            Ok(false) => {}
-            // a bad client must not take the service down
-            Err(e) => eprintln!("serve: connection error: {e:#}"),
-        }
-    }
-    Ok(())
+    serve_listener(state, listener)
 }
 
 #[cfg(test)]
@@ -387,6 +471,27 @@ mod tests {
         );
         let vc = json::parse(&c).unwrap();
         assert_eq!(vc.get("cache").unwrap().as_str().unwrap(), "miss");
+    }
+
+    #[test]
+    fn sessions_share_the_result_cache_but_not_runners() {
+        let ds = synth_calhousing(&SynthSpec { n: 96, ..Default::default() });
+        let parent = tiny_state(&ds);
+        let req = r#"{"channel":"erasure:0.2","seeds":3}"#;
+        let mut a = parent.session();
+        let mut b = parent.session();
+        let (ra, _) = reply_of(a.handle_line(req));
+        // session B never ran this: the hit comes through the shared
+        // cache, with the exact bits session A computed
+        let (rb, _) = reply_of(b.handle_line(req));
+        let va = json::parse(&ra).unwrap();
+        let vb = json::parse(&rb).unwrap();
+        assert_eq!(va.get("cache").unwrap().as_str().unwrap(), "miss");
+        assert_eq!(vb.get("cache").unwrap().as_str().unwrap(), "hit");
+        for key in ["mean", "std", "sem", "n"] {
+            assert_eq!(va.get(key).unwrap(), vb.get(key).unwrap(), "{key}");
+        }
+        assert_eq!(parent.cached_results(), 1);
     }
 
     #[test]

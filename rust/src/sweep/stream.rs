@@ -42,7 +42,10 @@
 //! aggregates are bit-identical to an uninterrupted run. The header
 //! row pins `labels × seeds × lanes × config-fingerprint`; resuming
 //! against a journal from a different sweep is an error, not a silent
-//! wrong answer.
+//! wrong answer. Resume also rewrites the journal through
+//! [`compact_journal`] — one header plus the latest row per
+//! `(point, seed0)` — so error-heavy restart cycles don't accrete an
+//! unbounded dead prefix of stale error rows and duplicate headers.
 //!
 //! # Error path
 //!
@@ -58,7 +61,7 @@ use std::collections::{BTreeMap, HashMap};
 use std::io::BufRead;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
-use std::sync::mpsc::sync_channel;
+use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
@@ -228,6 +231,19 @@ fn row_json(row: &Row, labels: &[String]) -> String {
     obj(pairs).to_json()
 }
 
+/// Pull the next item off a `Mutex`-shared channel, recovering from a
+/// poisoned lock. The guarded `Receiver` carries no invariant a
+/// panicking holder could have broken halfway (mpsc channels are
+/// themselves panic-safe), so a sibling worker that died between
+/// `lock()` and consuming its `recv()` result — the only window outside
+/// the per-row `catch_unwind` — must not take the whole pool down with
+/// it: `unwrap()` here would convert one poisoned guard into `threads`
+/// secondary panics and a hung pipeline. `None` means the channel is
+/// closed (gen stage done and drained).
+fn recv_shared<T>(rx: &Mutex<Receiver<T>>) -> Option<T> {
+    rx.lock().unwrap_or_else(|e| e.into_inner()).recv().ok()
+}
+
 fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
     payload
         .downcast_ref::<String>()
@@ -325,14 +341,17 @@ fn verify_header(
     Ok(())
 }
 
-/// Extract `(point, seed0, losses)` from a data row if it belongs to
-/// the current grid; `None` skips (and re-runs) the row.
-fn parse_data_row(
+/// `(point, seed0)` of any journal row — data OR error — that belongs
+/// to the current grid; `None` for foreign and garbage rows. Shared by
+/// the resume reader (via [`parse_data_row`]) and [`compact_journal`],
+/// which must group error rows by the same key so a later success
+/// supersedes its own stale failures and nothing else's.
+fn row_key(
     v: &Value,
     labels: &[String],
     seeds: usize,
     lanes: usize,
-) -> Option<(usize, u64, Vec<f64>)> {
+) -> Option<(usize, u64)> {
     let point = v.opt("point")?.as_usize().ok()?;
     let label = v.opt("label")?.as_str().ok()?;
     let seed0 = v.opt("seed0")?.as_usize().ok()?;
@@ -345,13 +364,97 @@ fn parse_data_row(
     if seed0 % lanes != 0 || len != expected || len == 0 {
         return None;
     }
+    Some((point, seed0 as u64))
+}
+
+/// Extract `(point, seed0, losses)` from a data row if it belongs to
+/// the current grid; `None` skips (and re-runs) the row.
+fn parse_data_row(
+    v: &Value,
+    labels: &[String],
+    seeds: usize,
+    lanes: usize,
+) -> Option<(usize, u64, Vec<f64>)> {
+    let (point, seed0) = row_key(v, labels, seeds, lanes)?;
+    let len = v.opt("len")?.as_usize().ok()?;
     let losses = v.opt("losses")?.as_arr().ok()?;
     if losses.len() != len {
         return None;
     }
     let losses: Option<Vec<f64>> =
         losses.iter().map(|l| value_loss(l).ok()).collect();
-    Some((point, seed0 as u64, losses?))
+    Some((point, seed0, losses?))
+}
+
+/// Rewrite a journal keeping one header plus only the LATEST row per
+/// `(point, seed0)` group. Error-heavy resume cycles grow a journal
+/// without bound: each resume appends another header line and a fresh
+/// row for every re-run group while the stale error rows stay behind,
+/// so a sweep limping through flaky groups re-parses an ever-longer
+/// dead prefix on every restart. Compaction is pure bookkeeping — the
+/// surviving data lines are byte-identical to what the pipeline wrote
+/// (latest wins, matching [`read_journal`]'s insert-overwrite order),
+/// so aggregates after a compacted resume are bit-identical to an
+/// uncompacted one (`rust/tests/stream_parity.rs` pins this).
+///
+/// Headers are verified with the same strictness as the resume path;
+/// garbage lines and the truncated tail of a killed run are dropped.
+/// The rewrite goes through a `.tmp` sibling + atomic rename, so a
+/// crash mid-compaction leaves the original journal untouched.
+pub fn compact_journal(
+    path: &Path,
+    labels: &[String],
+    seeds: usize,
+    lanes: usize,
+    fingerprint: &str,
+) -> Result<()> {
+    let file = std::fs::File::open(path).with_context(|| {
+        format!("opening journal {} for compaction", path.display())
+    })?;
+    let mut latest: BTreeMap<(usize, u64), String> = BTreeMap::new();
+    let mut saw_header = false;
+    for line in std::io::BufReader::new(file).lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Ok(v) = json::parse(line) else {
+            continue; // truncated tail of a killed run
+        };
+        if v.opt("kind").and_then(|k| k.as_str().ok()) == Some("header") {
+            verify_header(&v, labels, seeds, lanes, fingerprint)
+                .with_context(|| {
+                    format!("journal {} is for a different sweep", path.display())
+                })?;
+            saw_header = true;
+            continue;
+        }
+        let Some(key) = row_key(&v, labels, seeds, lanes) else {
+            continue;
+        };
+        latest.insert(key, line.to_string());
+    }
+    if !saw_header {
+        bail!(
+            "{} is not a sweep journal (no header row survived)",
+            path.display()
+        );
+    }
+    // BTreeMap order == job order (group_jobs_iter is point-major,
+    // seed0-minor), so the compacted journal reads like a clean run.
+    let mut out = header_json(labels, seeds, lanes, fingerprint);
+    out.push('\n');
+    for row in latest.values() {
+        out.push_str(row);
+        out.push('\n');
+    }
+    let tmp = path.with_extension("compact.tmp");
+    std::fs::write(&tmp, out)
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path).with_context(|| {
+        format!("replacing {} with its compaction", path.display())
+    })
 }
 
 /// Run the four-stage streaming pipeline over an arbitrary group-run
@@ -393,7 +496,13 @@ where
 
     let done = match &opts.resume {
         Some(path) => {
-            read_journal(path, labels, seeds, lanes, &opts.fingerprint)?
+            let done =
+                read_journal(path, labels, seeds, lanes, &opts.fingerprint)?;
+            // error-heavy resume cycles otherwise accrete stale rows
+            // and duplicate headers forever; reads what we just read,
+            // so the reusable set is unchanged
+            compact_journal(path, labels, seeds, lanes, &opts.fingerprint)?;
+            done
         }
         None => HashMap::new(),
     };
@@ -436,8 +545,12 @@ where
             scope.spawn(move || {
                 let mut bw = BatchWorkspace::new();
                 loop {
-                    let msg = job_rx.lock().unwrap().recv();
-                    let Ok((index, job)) = msg else { break };
+                    // recv_shared, not lock().unwrap(): a poisoned
+                    // queue mutex must idle THIS worker's siblings,
+                    // not unwind them (see its doc comment)
+                    let Some((index, job)) = recv_shared(job_rx) else {
+                        break;
+                    };
                     let row = match done.get(&(job.point, job.seed0)) {
                         Some(losses) => Row {
                             index,
@@ -693,6 +806,78 @@ mod tests {
         // a file with no header is not a journal
         std::fs::write(&p, "garbage\n").unwrap();
         assert!(read_journal(&p, &labels, 6, 4, "fp").is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    /// Satellite regression for the worker-pool poison bug: a thread
+    /// that panics while holding the shared `job_rx` mutex used to take
+    /// every sibling down via `lock().unwrap()`. `recv_shared` must
+    /// keep draining a poisoned-but-intact channel.
+    #[test]
+    fn recv_shared_survives_a_poisoned_queue_mutex() {
+        let (tx, rx) = sync_channel::<usize>(4);
+        let rx = Mutex::new(rx);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        // poison the mutex exactly like a worker dying between lock()
+        // and consuming its recv() result
+        std::thread::scope(|scope| {
+            let poisoner = scope.spawn(|| {
+                let _guard = rx.lock().unwrap();
+                panic!("worker died holding the queue lock");
+            });
+            assert!(poisoner.join().is_err());
+        });
+        assert!(rx.lock().is_err(), "mutex should be poisoned");
+        // siblings still drain the queue...
+        assert_eq!(recv_shared(&rx), Some(1));
+        assert_eq!(recv_shared(&rx), Some(2));
+        // ...and still see a clean shutdown when the sender hangs up
+        drop(tx);
+        assert_eq!(recv_shared(&rx), None);
+    }
+
+    #[test]
+    fn compact_journal_keeps_one_header_and_latest_row_per_group() {
+        let dir = std::env::temp_dir().join("edgepipe_stream_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("c_{}.jsonl", std::process::id()));
+        let labels = vec!["x".to_string(), "y".to_string()];
+        let header = header_json(&labels, 6, 4, "fp");
+        let row = |index, point, seed0, len, result| {
+            row_json(&Row { index, point, seed0, len, reused: false, result }, &labels)
+        };
+        // two resume cycles' worth of history: duplicate headers, a
+        // stale error superseded by a success, a stale success
+        // superseded by a rerun, garbage, and a truncated tail
+        let text = format!(
+            "{header}\n{}\n{}\n{}\nnot json\n{header}\n{}\n{}\n{{\"i\":9,\"poi",
+            row(0, 0, 0, 4, Err("flaky".into())),
+            row(1, 0, 4, 2, Ok(vec![9.0, 9.0])),
+            row(2, 1, 0, 4, Ok(vec![5.0, 6.0, 7.0, 8.0])),
+            row(0, 0, 0, 4, Ok(vec![1.0, 2.0, 3.0, 4.0])),
+            row(1, 0, 4, 2, Ok(vec![0.5, 0.25])),
+        );
+        std::fs::write(&p, text).unwrap();
+        compact_journal(&p, &labels, 6, 4, "fp").unwrap();
+        let compacted = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> =
+            compacted.lines().filter(|l| !l.trim().is_empty()).collect();
+        // exactly one header + one row per surviving (point, seed0)
+        assert_eq!(lines.len(), 4, "got:\n{compacted}");
+        assert_eq!(lines[0], header);
+        // ...and the reusable set is the latest rows, bit-for-bit
+        let done = read_journal(&p, &labels, 6, 4, "fp").unwrap();
+        assert_eq!(done.len(), 3);
+        assert_eq!(done[&(0, 0)], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(done[&(0, 4)], vec![0.5, 0.25]);
+        assert_eq!(done[&(1, 0)], vec![5.0, 6.0, 7.0, 8.0]);
+        // idempotent: compacting a compacted journal is a no-op
+        compact_journal(&p, &labels, 6, 4, "fp").unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), compacted);
+        // wrong fingerprint refuses to rewrite anything
+        assert!(compact_journal(&p, &labels, 6, 4, "other").is_err());
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), compacted);
         std::fs::remove_file(&p).unwrap();
     }
 }

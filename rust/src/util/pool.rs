@@ -230,6 +230,191 @@ where
     parallel_map_with(&idx, threads, make_ws, |ws, &i| f(ws, i))
 }
 
+/// A boxed job handed to a shard worker. The `'static` bound is a
+/// *runtime* lie maintained by [`ShardPool`]: jobs are transmuted from a
+/// caller-chosen lifetime and the dispatching call blocks on the job's
+/// ack before returning, so every borrow the job captures strictly
+/// outlives its execution (the scoped-thread discipline, enforced by a
+/// barrier instead of a scope).
+type ShardJob = Box<dyn FnOnce() + Send + 'static>;
+
+enum ShardAck {
+    Done,
+    Panicked(Box<dyn std::any::Any + Send>),
+}
+
+struct ShardWorker {
+    tx: Option<
+        std::sync::mpsc::Sender<(ShardJob, std::sync::mpsc::Sender<ShardAck>)>,
+    >,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ShardWorker {
+    fn sender(
+        &self,
+    ) -> &std::sync::mpsc::Sender<(ShardJob, std::sync::mpsc::Sender<ShardAck>)>
+    {
+        self.tx.as_ref().expect("shard worker already shut down")
+    }
+}
+
+/// Long-lived shard worker threads for the sharded DES source
+/// (`coordinator::shard`): worker `s` owns shard `s`'s node-local state
+/// for the lifetime of the pool, and every piece of that state is only
+/// ever touched from its owning thread.
+///
+/// Unlike [`parallel_map_with`] — one scoped fan-out per call — a
+/// `ShardPool` keeps its threads alive across many dispatches, so the
+/// per-event cost is one channel round-trip, not a thread spawn. Jobs
+/// may borrow caller-local data: [`ShardPool::run_on`] and
+/// [`ShardPool::run_all`] block until every dispatched job has finished
+/// (and been dropped) before returning, which is exactly the guarantee
+/// a `std::thread::scope` join provides — see [`ShardJob`].
+///
+/// Panic discipline matches `parallel_map_with`: a panicking job is
+/// caught on the worker, the barrier still completes (sibling jobs
+/// finish, no lock is poisoned, the worker thread survives for the next
+/// dispatch), and the first panic in job order is re-raised on the
+/// caller prefixed with the shard index (non-string payloads verbatim).
+pub struct ShardPool {
+    workers: Vec<ShardWorker>,
+}
+
+impl ShardPool {
+    /// Spawn `shards` long-lived worker threads (at least one).
+    pub fn new(shards: usize) -> ShardPool {
+        let workers = (0..shards.max(1))
+            .map(|s| {
+                let (tx, rx) = std::sync::mpsc::channel::<(
+                    ShardJob,
+                    std::sync::mpsc::Sender<ShardAck>,
+                )>();
+                let handle = std::thread::Builder::new()
+                    .name(format!("edgepipe-shard-{s}"))
+                    .spawn(move || {
+                        // exits when the pool (the only sender) drops
+                        while let Ok((job, ack)) = rx.recv() {
+                            // `catch_unwind` consumes the job, so its
+                            // captured borrows are dead before the ack
+                            // releases the caller
+                            let result =
+                                catch_unwind(AssertUnwindSafe(job));
+                            let msg = match result {
+                                Ok(()) => ShardAck::Done,
+                                Err(payload) => ShardAck::Panicked(payload),
+                            };
+                            // a dropped ack receiver means the caller
+                            // itself is unwinding; nothing to do
+                            let _ = ack.send(msg);
+                        }
+                    })
+                    .expect("failed to spawn shard worker thread");
+                ShardWorker { tx: Some(tx), handle: Some(handle) }
+            })
+            .collect();
+        ShardPool { workers }
+    }
+
+    /// Worker threads in this pool.
+    pub fn shards(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run `job` to completion on shard worker `shard`, blocking until
+    /// it finishes. A panic inside the job is re-raised here.
+    pub fn run_on<'scope>(
+        &self,
+        shard: usize,
+        job: Box<dyn FnOnce() + Send + 'scope>,
+    ) {
+        // SAFETY: same-layout fat pointers differing only in lifetime;
+        // the blocking ack below keeps every borrow in `job` alive past
+        // its execution (see `ShardJob`).
+        let job: ShardJob = unsafe { std::mem::transmute(job) };
+        let (ack_tx, ack_rx) = std::sync::mpsc::channel();
+        self.workers[shard]
+            .sender()
+            .send((job, ack_tx))
+            .expect("shard worker channel closed");
+        match ack_rx.recv().expect("shard worker died mid-job") {
+            ShardAck::Done => {}
+            ShardAck::Panicked(payload) => raise_shard_panic(shard, payload),
+        }
+    }
+
+    /// Run one job per shard worker (`jobs[s]` on worker `s`; pass
+    /// `None` to skip a shard), blocking until ALL of them finish. The
+    /// barrier always completes before any panic is re-raised, so
+    /// sibling jobs never observe a half-torn-down caller frame.
+    pub fn run_all<'scope>(
+        &self,
+        jobs: Vec<Option<Box<dyn FnOnce() + Send + 'scope>>>,
+    ) {
+        assert!(
+            jobs.len() <= self.workers.len(),
+            "more jobs than shard workers"
+        );
+        // one ack channel per dispatched job, received back in job
+        // order, so the barrier is complete before any re-raise and the
+        // FIRST panic in job order wins deterministically
+        let mut acks: Vec<(usize, std::sync::mpsc::Receiver<ShardAck>)> =
+            Vec::with_capacity(jobs.len());
+        for (s, job) in jobs.into_iter().enumerate() {
+            let Some(job) = job else { continue };
+            // SAFETY: as in `run_on` — the loop below blocks on every
+            // dispatched job's ack before this call returns.
+            let job: ShardJob = unsafe { std::mem::transmute(job) };
+            let (ack_tx, ack_rx) = std::sync::mpsc::channel();
+            self.workers[s]
+                .sender()
+                .send((job, ack_tx))
+                .expect("shard worker channel closed");
+            acks.push((s, ack_rx));
+        }
+        let mut first_panic: Option<(usize, Box<dyn std::any::Any + Send>)> =
+            None;
+        for (s, ack_rx) in acks {
+            match ack_rx.recv().expect("shard worker died mid-job") {
+                ShardAck::Done => {}
+                ShardAck::Panicked(payload) => {
+                    if first_panic.is_none() {
+                        first_panic = Some((s, payload));
+                    }
+                }
+            }
+        }
+        if let Some((s, payload)) = first_panic {
+            raise_shard_panic(s, payload);
+        }
+    }
+}
+
+fn raise_shard_panic(shard: usize, payload: Box<dyn std::any::Any + Send>) -> ! {
+    let message = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()));
+    match message {
+        Some(msg) => panic!("shard pool: shard {shard} panicked: {msg}"),
+        None => resume_unwind(payload),
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        // closing the job channel ends each worker's recv loop
+        for w in &mut self.workers {
+            w.tx.take();
+            if let Some(handle) = w.handle.take() {
+                // workers catch job panics, so join only fails if a
+                // worker died outside a job; don't double-panic in Drop
+                let _ = handle.join();
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -455,6 +640,95 @@ mod tests {
         let want: Vec<Result<usize, String>> =
             (1..=97).map(Ok).collect();
         assert_eq!(out, want);
+    }
+
+    #[test]
+    fn shard_pool_runs_borrowed_jobs_to_completion() {
+        // the whole soundness story: a job may borrow caller locals
+        // because run_on blocks until the job (and its borrows) is done
+        let pool = ShardPool::new(3);
+        assert_eq!(pool.shards(), 3);
+        let mut data = vec![0u64; 8];
+        for round in 1..=4u64 {
+            let slice = &mut data;
+            pool.run_on(
+                (round as usize) % 3,
+                Box::new(move || {
+                    for v in slice.iter_mut() {
+                        *v += round;
+                    }
+                }),
+            );
+        }
+        assert_eq!(data, vec![1 + 2 + 3 + 4; 8]);
+    }
+
+    #[test]
+    fn shard_pool_run_all_mutates_disjoint_slices() {
+        let pool = ShardPool::new(4);
+        let mut data: Vec<usize> = vec![0; 12];
+        {
+            let mut rest = data.as_mut_slice();
+            let mut jobs: Vec<Option<Box<dyn FnOnce() + Send + '_>>> =
+                Vec::new();
+            for s in 0..4 {
+                let (mine, tail) = rest.split_at_mut(3);
+                rest = tail;
+                jobs.push(Some(Box::new(move || {
+                    for (i, v) in mine.iter_mut().enumerate() {
+                        *v = s * 100 + i;
+                    }
+                })));
+            }
+            pool.run_all(jobs);
+        }
+        let want: Vec<usize> = (0..4)
+            .flat_map(|s| (0..3).map(move |i| s * 100 + i))
+            .collect();
+        assert_eq!(data, want);
+    }
+
+    #[test]
+    fn shard_pool_panic_carries_shard_index_and_pool_survives() {
+        let pool = ShardPool::new(2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_on(1, Box::new(|| panic!("shard job died")));
+        }));
+        let payload = result.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .expect("panic message should be a String");
+        assert!(
+            msg.contains("shard 1") && msg.contains("shard job died"),
+            "unexpected panic message: {msg}"
+        );
+        // the worker thread caught the panic and is still serving jobs
+        let mut ran = false;
+        pool.run_on(1, Box::new(|| ran = true));
+        assert!(ran, "worker must survive a panicking job");
+    }
+
+    #[test]
+    fn shard_pool_run_all_finishes_siblings_before_reraising() {
+        let pool = ShardPool::new(3);
+        let done = AtomicUsize::new(0);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let jobs: Vec<Option<Box<dyn FnOnce() + Send + '_>>> = (0..3)
+                .map(|s| {
+                    let done = &done;
+                    Some(Box::new(move || {
+                        if s == 0 {
+                            panic!("first shard dies");
+                        }
+                        done.fetch_add(1, Ordering::Relaxed);
+                    }) as Box<dyn FnOnce() + Send + '_>)
+                })
+                .collect();
+            pool.run_all(jobs);
+        }));
+        assert!(result.is_err(), "panic must propagate");
+        // the barrier completed: both sibling jobs ran to completion
+        assert_eq!(done.load(Ordering::Relaxed), 2);
     }
 
     #[test]

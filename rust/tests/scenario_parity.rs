@@ -12,15 +12,28 @@
 //!   equals `run_des` under EVERY device scheduler, identical lanes
 //!   make greedy ≡ round-robin, and a homogeneous hetero uplink on a
 //!   stateless channel equals the legacy shared-channel `Devices(k)`;
-//! * `shard_dataset` shards are disjoint and cover the dataset.
+//! * `shard_dataset` shards are disjoint and cover the dataset;
+//! * the threaded shard layer is an execution strategy, not a
+//!   semantics: `ShardedSource` at EVERY shard count (1, 2 and 4 are
+//!   pinned, inline and pooled alike) produces the identical
+//!   `RunResult` — event stream, weights and the fault counters
+//!   `timeouts`/`evictions` included — as the pre-PR single-threaded
+//!   `ScheduledSource`, with the fault machinery dormant, armed-but-
+//!   dormant, and actively evicting.
 
 use edgepipe::baselines::{sequential, transmit_all_first};
 use edgepipe::bound::replan::ControlPlan;
-use edgepipe::channel::{Channel, ErasureChannel, IdealChannel};
+use edgepipe::channel::{
+    Channel, ErasureChannel, FaultPlan, FaultSpec, FaultTolerance,
+    IdealChannel,
+};
 use edgepipe::coordinator::des::{run_des, DesConfig};
 use edgepipe::coordinator::executor::NativeExecutor;
 use edgepipe::coordinator::run::RunResult;
-use edgepipe::coordinator::RunWorkspace;
+use edgepipe::coordinator::{
+    run_schedule, FixedPolicy, GreedyScheduler, OverlapMode, RunWorkspace,
+    ScheduledSource, ShardedSource,
+};
 use edgepipe::data::synth::{synth_calhousing, SynthSpec};
 use edgepipe::data::Dataset;
 use edgepipe::extensions::adaptive::{run_scheduled, WarmupSchedule};
@@ -772,4 +785,223 @@ fn shards_are_disjoint_and_cover_the_dataset() {
         }
         assert!(covered.iter().all(|&c| c), "some rows never sharded");
     });
+}
+
+// ---------------------------------------------------------------------
+// Threaded shard layer: sharding is an execution strategy, not a
+// semantics. The pre-PR `ScheduledSource` stays in the tree as the
+// reference; `ShardedSource` must match it bit-for-bit at every shard
+// count, fault counters included.
+// ---------------------------------------------------------------------
+
+/// Shard counts every parity test below pins: the inline path (1) and
+/// two pooled layouts (2, 4) with uneven device/shard splits.
+const SHARD_COUNTS: [usize; 3] = [1, 2, 4];
+
+/// One k-device greedy run through `run_schedule`. `n_shards = None`
+/// is the pre-PR reference `ScheduledSource`; `Some(s)` runs the
+/// threaded `ShardedSource` with `s` shard workers.
+fn run_k_devices(
+    ds: &Dataset,
+    shards: &[Dataset],
+    slowdowns: &[f64],
+    cfg: &DesConfig,
+    channel: &mut dyn Channel,
+    n_shards: Option<usize>,
+) -> RunResult {
+    let mut policy = FixedPolicy(cfg.n_c.max(1));
+    let mut exec = mk_exec(ds, cfg);
+    match n_shards {
+        None => {
+            let mut src = ScheduledSource::new(
+                shards,
+                cfg.seed,
+                GreedyScheduler::new(),
+                slowdowns,
+            );
+            run_schedule(
+                ds,
+                cfg,
+                &mut src,
+                &mut policy,
+                OverlapMode::Pipelined,
+                channel,
+                &mut exec,
+            )
+            .unwrap()
+        }
+        Some(s) => {
+            let mut src = ShardedSource::new(
+                shards,
+                cfg.seed,
+                GreedyScheduler::new(),
+                slowdowns,
+                s,
+            );
+            assert_eq!(src.shard_workers(), s.min(shards.len()));
+            run_schedule(
+                ds,
+                cfg,
+                &mut src,
+                &mut policy,
+                OverlapMode::Pipelined,
+                channel,
+                &mut exec,
+            )
+            .unwrap()
+        }
+    }
+}
+
+/// `assert_identical` plus the fault counters it deliberately omits —
+/// the shard layer must reproduce those too.
+fn assert_identical_with_faults(a: &RunResult, b: &RunResult, what: &str) {
+    assert_identical(a, b, what);
+    assert_eq!(a.timeouts, b.timeouts, "{what}: timeouts diverged");
+    assert_eq!(a.evictions, b.evictions, "{what}: evictions diverged");
+}
+
+#[test]
+fn sharded_source_is_bit_identical_to_scheduled_for_every_shard_count() {
+    forall("sharded == scheduled", 6, |g| {
+        let n = g.usize_in(80..=400);
+        let k = g.usize_in(2..=8);
+        let cfg = DesConfig {
+            event_capacity: 8192,
+            ..DesConfig::paper(
+                g.usize_in(1..=n / k),
+                g.f64_in(0.0, 15.0).round(),
+                g.f64_in(100.0, 3.0 * n as f64).round(),
+                g.u64_in(0..=1 << 40),
+            )
+        };
+        let ds = synth_calhousing(&SynthSpec { n, ..Default::default() });
+        let shards = shard_dataset(&ds, k);
+        let slowdowns: Vec<f64> =
+            (0..k).map(|_| g.f64_in(0.5, 3.0)).collect();
+        let p_loss = g.f64_in(0.0, 0.3);
+        let reference = run_k_devices(
+            &ds,
+            &shards,
+            &slowdowns,
+            &cfg,
+            &mut ErasureChannel::new(p_loss),
+            None,
+        );
+        for s in SHARD_COUNTS {
+            let sharded = run_k_devices(
+                &ds,
+                &shards,
+                &slowdowns,
+                &cfg,
+                &mut ErasureChannel::new(p_loss),
+                Some(s),
+            );
+            assert_identical_with_faults(
+                &reference,
+                &sharded,
+                &format!("sharded k={k} shards={s}"),
+            );
+        }
+    });
+}
+
+#[test]
+fn sharding_with_faults_armed_but_dormant_is_bit_identical() {
+    // Arm the full timeout/retry/eviction machinery on a clean channel:
+    // the armed code path runs on every delivery, but nothing fires.
+    // The shard layer must be 0-ULP identical through that path too.
+    let ds = synth_calhousing(&SynthSpec { n: 300, ..Default::default() });
+    let k = 3;
+    let shards = shard_dataset(&ds, k);
+    let slowdowns = [1.0, 2.0, 1.5];
+    let cfg = DesConfig {
+        event_capacity: 8192,
+        faults: FaultTolerance {
+            timeout_mult: 8.0,
+            retry_budget: 2,
+            evict_after: 3,
+            preempt: vec![],
+        },
+        ..DesConfig::paper(25, 5.0, 1500.0, 1234)
+    };
+    assert!(cfg.faults.enabled(), "machinery must be armed");
+    let reference = run_k_devices(
+        &ds,
+        &shards,
+        &slowdowns,
+        &cfg,
+        &mut IdealChannel,
+        None,
+    );
+    assert_eq!(reference.timeouts, 0, "ideal channel must stay dormant");
+    assert_eq!(reference.evictions, 0, "ideal channel must stay dormant");
+    for s in SHARD_COUNTS {
+        let sharded = run_k_devices(
+            &ds,
+            &shards,
+            &slowdowns,
+            &cfg,
+            &mut IdealChannel,
+            Some(s),
+        );
+        assert_identical_with_faults(
+            &reference,
+            &sharded,
+            &format!("armed-but-dormant shards={s}"),
+        );
+    }
+}
+
+#[test]
+fn sharded_eviction_path_matches_scheduled_under_faults() {
+    // Kill device 0's link at t=0 with a tight retry budget: its blocks
+    // time out and the device is evicted, driving the scheduler through
+    // `ShardedSource::evict` (the clear runs on the owning shard's
+    // worker thread). Losses, the event stream and the fault counters
+    // must all match the single-threaded reference exactly.
+    let ds = synth_calhousing(&SynthSpec { n: 240, ..Default::default() });
+    let k = 3;
+    let shards = shard_dataset(&ds, k);
+    let slowdowns = [1.0, 1.0, 1.0];
+    let spec = FaultSpec::parse("drop:0:0.0+retry:2:1:2").unwrap();
+    let cfg = DesConfig {
+        event_capacity: 8192,
+        faults: spec.tolerance(),
+        ..DesConfig::paper(30, 5.0, 4000.0, 77)
+    };
+    let reference = run_k_devices(
+        &ds,
+        &shards,
+        &slowdowns,
+        &cfg,
+        &mut FaultPlan::new(spec.clone(), IdealChannel),
+        None,
+    );
+    assert!(reference.timeouts > 0, "dead link must time out");
+    assert!(reference.evictions > 0, "dead device must be evicted");
+    assert!(reference.samples_lost > 0, "evicted lane sheds its samples");
+    for s in SHARD_COUNTS {
+        let sharded = run_k_devices(
+            &ds,
+            &shards,
+            &slowdowns,
+            &cfg,
+            &mut FaultPlan::new(spec.clone(), IdealChannel),
+            Some(s),
+        );
+        assert_identical_with_faults(
+            &reference,
+            &sharded,
+            &format!("eviction shards={s}"),
+        );
+        assert_eq!(
+            reference.samples_lost, sharded.samples_lost,
+            "eviction shards={s}: samples_lost diverged"
+        );
+        assert_eq!(
+            reference.blocks_abandoned, sharded.blocks_abandoned,
+            "eviction shards={s}: blocks_abandoned diverged"
+        );
+    }
 }

@@ -17,6 +17,13 @@
 //! 4. The serve loop answers identical requests from cache with
 //!    identical bits, which also match the standalone Monte-Carlo
 //!    estimator; malformed requests get error replies on their line.
+//! 5. Two TCP clients racing the same request through `serve_listener`
+//!    get bit-identical answers, populate ONE shared cache (a third
+//!    client hits it), and shutdown drains the accept loop cleanly.
+//! 6. Resume compacts the journal (one header + the latest row per
+//!    group, stale error rows squashed, idempotent) and the aggregates
+//!    after healing + compaction are bit-identical to a never-failed,
+//!    never-journaled run.
 
 use std::path::PathBuf;
 
@@ -25,7 +32,7 @@ use edgepipe::data::synth::{synth_calhousing, SynthSpec};
 use edgepipe::linalg::batch::MAX_LANES;
 use edgepipe::sweep::runner::{mc_scenario_loss_lanes, scenario_grid_lanes};
 use edgepipe::sweep::scenario::{ChannelSpec, PolicySpec, ScenarioSpec};
-use edgepipe::sweep::serve::{serve_connection, ServeState};
+use edgepipe::sweep::serve::{serve_connection, serve_listener, ServeState};
 use edgepipe::sweep::stream::{
     stream_grid_with, stream_scenario_grid, StreamOptions,
 };
@@ -358,4 +365,186 @@ fn serve_loop_caches_and_matches_the_standalone_estimator() {
     // shutdown acknowledged on its line
     assert_eq!(replies[3].get("id").unwrap().as_usize().unwrap(), 4);
     assert_eq!(replies[3].get("ok").unwrap(), &Value::Bool(true));
+}
+
+/// Pull one reply's loss field whether it was encoded as a JSON number
+/// or as a full-precision string.
+fn reply_loss(v: &Value, key: &str) -> f64 {
+    match v.get(key).unwrap() {
+        Value::Num(n) => *n,
+        Value::Str(text) => text.parse().unwrap(),
+        other => panic!("{key}: unexpected {other:?}"),
+    }
+}
+
+#[test]
+fn concurrent_tcp_clients_share_the_cache_and_match_bitwise() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::{SocketAddr, TcpListener, TcpStream};
+    use std::sync::Barrier;
+
+    fn ask(addr: SocketAddr, line: &str) -> Value {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        writeln!(conn, "{line}").unwrap();
+        let mut reply = String::new();
+        BufReader::new(conn).read_line(&mut reply).unwrap();
+        json::parse(reply.trim_end()).expect("reply must be JSON")
+    }
+
+    let ds = small_ds();
+    let base = sweep_base(19);
+    let state = ServeState::new(&ds, base, 64, LANES);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let req = r#"{"id":7,"channel":"erasure:0.2","seeds":5}"#;
+
+    std::thread::scope(|scope| {
+        let server = scope.spawn(|| serve_listener(&state, listener));
+
+        // two clients race the same request through separate
+        // connections; whichever order the cache fills in, determinism
+        // makes the answers carry identical bits
+        let barrier = &Barrier::new(2);
+        let c1 = scope.spawn(move || {
+            barrier.wait();
+            ask(addr, req)
+        });
+        let c2 = scope.spawn(move || {
+            barrier.wait();
+            ask(addr, req)
+        });
+        let r1 = c1.join().unwrap();
+        let r2 = c2.join().unwrap();
+        for r in [&r1, &r2] {
+            assert_eq!(r.get("ok").unwrap(), &Value::Bool(true));
+            assert_eq!(r.get("id").unwrap().as_usize().unwrap(), 7);
+            let cache = r.get("cache").unwrap().as_str().unwrap().to_string();
+            assert!(
+                cache == "hit" || cache == "miss",
+                "cache field must be hit|miss, got {cache}"
+            );
+        }
+        for key in ["mean", "std", "sem"] {
+            assert_eq!(
+                reply_loss(&r1, key).to_bits(),
+                reply_loss(&r2, key).to_bits(),
+                "{key}: concurrent clients must agree bitwise"
+            );
+        }
+
+        // a third client after the race MUST hit the shared cache, with
+        // the same bits again
+        let warm = ask(addr, req);
+        assert_eq!(warm.get("cache").unwrap().as_str().unwrap(), "hit");
+        for key in ["mean", "std", "sem"] {
+            assert_eq!(
+                reply_loss(&warm, key).to_bits(),
+                reply_loss(&r1, key).to_bits(),
+                "{key}: warm hit must carry identical bits"
+            );
+        }
+
+        // shutdown stops the accept loop; the server thread drains
+        let bye = ask(addr, r#"{"id":9,"cmd":"shutdown"}"#);
+        assert_eq!(bye.get("ok").unwrap(), &Value::Bool(true));
+        server
+            .join()
+            .expect("server thread must not panic")
+            .expect("serve_listener must exit cleanly");
+    });
+}
+
+#[test]
+fn resume_compacts_the_journal_and_keeps_aggregates_bitwise() {
+    let labels = vec!["gamma".to_string(), "delta".to_string()];
+    let journal = tmp("compact");
+    let _ = std::fs::remove_file(&journal);
+    let opts = StreamOptions {
+        seeds: 6,
+        threads: 2,
+        lanes: 4,
+        journal: Some(journal.clone()),
+        fingerprint: "compact-fp".to_string(),
+        ..StreamOptions::default()
+    };
+
+    // run 1: one injected failure leaves an error row in the journal
+    let first = stream_grid_with(&labels, &opts, |_bw, job| {
+        if job.point == 0 && job.seed0 == 4 {
+            anyhow::bail!("flaky the first time");
+        }
+        Ok(synthetic_losses(job.point, job.seed0, job.len))
+    })
+    .unwrap();
+    assert_eq!(first.errors.len(), 1);
+    // header + 2 points × 2 groups (one of them the error row)
+    let text = std::fs::read_to_string(&journal).unwrap();
+    assert_eq!(text.lines().count(), 5, "run-1 journal: header + 4 rows");
+
+    // resume 1: compaction runs on entry (nothing to squash yet — all
+    // keys unique), then the append-mode writer adds its own header and
+    // the failed group's re-run success row lands AFTER the stale error
+    let resume_opts = StreamOptions {
+        resume: Some(journal.clone()),
+        journal: None,
+        ..opts.clone()
+    };
+    let healed = stream_grid_with(&labels, &resume_opts, |_bw, job| {
+        Ok(synthetic_losses(job.point, job.seed0, job.len))
+    })
+    .unwrap();
+    assert!(healed.errors.is_empty());
+    assert_eq!(healed.groups_reused, 3);
+    assert_eq!(healed.groups_run, 1);
+    let text = std::fs::read_to_string(&journal).unwrap();
+    assert_eq!(
+        text.lines().count(),
+        7,
+        "compacted 5 + resume header + healed re-run"
+    );
+
+    // resume 2: compaction squashes the superseded error row and the
+    // duplicate header; every group is reused, nothing runs, and only
+    // the writer's fresh header is appended to the compacted file
+    let replayed = stream_grid_with(&labels, &resume_opts, |_bw, _job| {
+        panic!("fully-journaled resume must not run anything")
+    })
+    .unwrap();
+    assert!(replayed.errors.is_empty());
+    assert_eq!(replayed.groups_reused, 4);
+    assert_eq!(replayed.groups_run, 0);
+    let compacted = std::fs::read_to_string(&journal).unwrap();
+    assert_eq!(
+        compacted.lines().count(),
+        6,
+        "header + 4 latest rows + resume header"
+    );
+    for line in compacted.lines() {
+        let v = json::parse(line).expect("compacted line parses");
+        assert!(v.opt("error").is_none(), "error row must be squashed");
+    }
+
+    // the aggregates survive journaling, healing and compaction with
+    // identical bits to a never-failed, never-journaled run
+    let fresh_opts = StreamOptions {
+        journal: None,
+        ..opts.clone()
+    };
+    let fresh = stream_grid_with(&labels, &fresh_opts, |_bw, job| {
+        Ok(synthetic_losses(job.point, job.seed0, job.len))
+    })
+    .unwrap();
+    assert_rows_bitwise(&fresh.rows, &healed.rows, "healed vs fresh");
+    assert_rows_bitwise(&fresh.rows, &replayed.rows, "compacted vs fresh");
+
+    // resume 3: compacting an already-compact journal is a byte no-op
+    let again = stream_grid_with(&labels, &resume_opts, |_bw, _job| {
+        panic!("still nothing to run")
+    })
+    .unwrap();
+    assert_eq!(again.groups_reused, 4);
+    let recompacted = std::fs::read_to_string(&journal).unwrap();
+    assert_eq!(compacted, recompacted, "compaction must be idempotent");
+
+    let _ = std::fs::remove_file(&journal);
 }
