@@ -87,6 +87,15 @@ SCENARIO OPTIONS (scenario command):
                              to <file> (or to --stream if also given).
                              The journal header pins scenarios, seeds,
                              lanes and config; mismatches are errors.
+    --progress 1             rate-limited stderr ticker for --stream /
+                             --resume runs: groups done, groups/sec,
+                             per-stage queue depths, journal lag.
+                             Display-only — results stay bit-identical.
+    --metrics-json <file>    dump a runtime-telemetry snapshot (event /
+                             packet / retransmission counters, pool and
+                             shard stats, streaming backpressure gauges)
+                             as JSON after the sweep. Write-only
+                             observation; never changes results.
 
 SERVE OPTIONS (serve command):
     --addr <host:port>       TCP listen address [default: 127.0.0.1:4088]
@@ -96,7 +105,10 @@ SERVE OPTIONS (serve command):
      scenario flags — {\"channel\":\"erasure:0.1\",\"policy\":\"fixed\",
      \"traffic\":\"1\",\"workload\":\"ridge\",\"store\":0} — plus
      \"seeds\", \"seed0\", \"n_c\", optional \"id\" echoed back;
-     {\"cmd\":\"ping\"} and {\"cmd\":\"shutdown\"} control the loop.
+     {\"cmd\":\"ping\"}, {\"cmd\":\"stats\"} and {\"cmd\":\"shutdown\"}
+     control the loop — stats returns a telemetry snapshot: requests,
+     cache hits/misses, errors, reply-time histogram, plus the sched/
+     pool counters accumulated by the served runs.
      Replies carry mean/std/sem/n and \"cache\":\"hit|miss\"; identical
      (scenario, n_c, seed0, seeds) requests are served from cache.)
 
@@ -121,6 +133,9 @@ BENCH OPTIONS (bench command):
                              EDGEPIPE_BENCH_FAST=1; overrides those
                              config keys — --points/threads still apply)
     --points <k>             block-size grid resolution
+    --metrics-json <file>    dump the telemetry snapshot the benched
+                             sweeps accumulated (scheduler/pool
+                             counters) as JSON after the run
     (at full scale, dataset size / seeds / threads come from the usual
      config keys, e.g. --set data.n_raw=2000 --set sweep.seeds=4
      --set sweep.threads=8)
@@ -154,6 +169,8 @@ EXAMPLES:
         --stream out/sweep.jsonl          # journaled, constant memory
     edgepipe scenario --preset all --set sweep.seeds=1000 \\
         --resume out/sweep.jsonl          # pick up where a kill stopped
+    edgepipe scenario --preset all --stream out/sweep.jsonl \\
+        --progress 1 --metrics-json out/metrics.json
     edgepipe serve --addr 127.0.0.1:4088 --set protocol.n_c=437
     edgepipe control --set sweep.seeds=24
     edgepipe bench --json BENCH_sweep.json

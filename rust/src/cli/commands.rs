@@ -11,11 +11,12 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::des::{run_des, DesConfig};
 use crate::coordinator::executor::NativeExecutor;
 use crate::coordinator::run::build_dataset;
-use crate::metrics::writer::{write_csv, CsvTable};
+use crate::metrics::writer::{write_csv, write_json, CsvTable};
 use crate::model::{ridge_solution, RidgeModel};
 use crate::sweep::fig3::fig3_data;
 use crate::sweep::fig4::{fig4_data, Fig4Config};
 use crate::sweep::runner::{grid_final_losses, log_grid};
+use crate::util::telemetry::{self, Telemetry};
 use crate::util::timefmt::fmt_count;
 
 use super::args::{Args, HELP};
@@ -85,6 +86,58 @@ fn sweep_base(cfg: &ExperimentConfig, t: f64, n_c: usize) -> DesConfig {
         workload: crate::model::Workload::Ridge,
         faults: Default::default(),
     }
+}
+
+/// Parse a `--<key> 0|1` flag (flags always consume a value, like
+/// `--stdin 1`); absent counts as 0.
+fn flag_01(args: &Args, key: &str) -> Result<bool> {
+    match args.extra.get(key).map(String::as_str) {
+        None | Some("0") => Ok(false),
+        Some("1") => Ok(true),
+        Some(other) => bail!("--{key} must be 0 or 1, got '{other}'"),
+    }
+}
+
+/// `--progress 1` / `--metrics-json <file>` plumbing shared by
+/// `scenario` and `bench`: when either flag is set, install a fresh
+/// process-global telemetry sink (scheduler/pool/shard counters flow in
+/// without further plumbing) and return the handle plus the dump path.
+/// Telemetry is write-only observation — attaching it changes no
+/// computed byte (pinned by `telemetry_parity.rs`).
+fn telemetry_flags(
+    args: &Args,
+) -> Result<(bool, Option<std::path::PathBuf>, Telemetry)> {
+    let progress = flag_01(args, "progress")?;
+    let metrics_json =
+        args.extra.get("metrics-json").map(std::path::PathBuf::from);
+    let tel = if progress || metrics_json.is_some() {
+        let tel = Telemetry::attached();
+        telemetry::install(tel.clone());
+        tel
+    } else {
+        Telemetry::off()
+    };
+    Ok((progress, metrics_json, tel))
+}
+
+/// Dump `--metrics-json` (if requested) and uninstall the global sink.
+fn finish_telemetry(
+    args: &Args,
+    tel: &Telemetry,
+    metrics_json: Option<&Path>,
+) -> Result<()> {
+    if !tel.is_attached() {
+        return Ok(());
+    }
+    if let Some(path) = metrics_json {
+        let snap = tel.snapshot().expect("attached handle has a snapshot");
+        write_json(&snap, path)?;
+        if !args.quiet {
+            println!("wrote {}", path.display());
+        }
+    }
+    telemetry::install(Telemetry::off());
+    Ok(())
 }
 
 /// Resolve the bound parameters for a dataset (estimating constants).
@@ -633,6 +686,7 @@ fn cmd_scenario(args: &Args) -> Result<i32> {
     // bit-identical to the in-memory path row-for-row.
     let stream_path = args.extra.get("stream").map(std::path::PathBuf::from);
     let resume_path = args.extra.get("resume").map(std::path::PathBuf::from);
+    let (progress, metrics_json, tel) = telemetry_flags(args)?;
     let (rows, failed) = if stream_path.is_some() || resume_path.is_some() {
         use crate::sweep::stream::{stream_scenario_grid, StreamOptions};
         let opts = StreamOptions {
@@ -640,6 +694,8 @@ fn cmd_scenario(args: &Args) -> Result<i32> {
             threads: cfg.sweep.threads,
             journal: stream_path,
             resume: resume_path,
+            progress,
+            telemetry: tel.clone(),
             ..StreamOptions::default()
         };
         let outcome = stream_scenario_grid(&ds, &base, &specs, &opts)?;
@@ -706,6 +762,7 @@ fn cmd_scenario(args: &Args) -> Result<i32> {
     if !args.quiet {
         println!("wrote {}", out.display());
     }
+    finish_telemetry(args, &tel, metrics_json.as_deref())?;
     Ok(if failed { 1 } else { 0 })
 }
 
@@ -731,15 +788,22 @@ fn cmd_serve(args: &Args) -> Result<i32> {
         );
     }
     let mut state = ServeState::new(&ds, base, max_seeds, 0);
-    if args.extra_or("stdin", "0") == "1" {
+    // route the scheduler/pool counters of served runs into the same
+    // sink `{"cmd":"stats"}` reports from (write-only; replies other
+    // than stats are unchanged)
+    telemetry::install(state.telemetry());
+    let served = if args.extra_or("stdin", "0") == "1" {
         serve_connection(
             &mut state,
             std::io::stdin().lock(),
             std::io::stdout().lock(),
-        )?;
-        return Ok(0);
-    }
-    serve_tcp(&mut state, &args.extra_or("addr", "127.0.0.1:4088"))?;
+        )
+        .map(|_| ())
+    } else {
+        serve_tcp(&mut state, &args.extra_or("addr", "127.0.0.1:4088"))
+    };
+    telemetry::install(Telemetry::off());
+    served?;
     Ok(0)
 }
 
@@ -804,11 +868,16 @@ fn cmd_bench(args: &Args) -> Result<i32> {
             bench_cfg.n_o
         );
     }
+    // `--progress 1` here only turns on the sink (bench prints its own
+    // progress); `--metrics-json` captures the scheduler/pool counters
+    // the benched sweeps accumulate through the process-global handle
+    let (_progress, metrics_json, tel) = telemetry_flags(args)?;
     let report = run_sweep_bench(&bench_cfg);
     print!("{}", report.render());
     let json_path = args.extra_or("json", "BENCH_sweep.json");
     std::fs::write(&json_path, report.to_value().to_json_pretty())?;
     println!("wrote {json_path}");
+    finish_telemetry(args, &tel, metrics_json.as_deref())?;
     Ok(0)
 }
 
@@ -1137,6 +1206,66 @@ mod tests {
         assert_eq!(dispatch(&resuming).unwrap(), 0);
         assert_eq!(mem, read("resumed"), "resumed CSV must be byte-identical");
         let _ = std::fs::remove_file(&journal);
+    }
+
+    #[test]
+    fn scenario_stream_with_metrics_json_drains_to_zero_lag() {
+        let base_dir = std::env::temp_dir().join("edgepipe_metrics_cli_test");
+        let pid = std::process::id();
+        let journal = base_dir.join(format!("j_{pid}.jsonl"));
+        let metrics = base_dir.join(format!("m_{pid}.json"));
+        let _ = std::fs::remove_file(&journal);
+        let _ = std::fs::remove_file(&metrics);
+        let mut extra = std::collections::BTreeMap::new();
+        extra.insert("channels".to_string(), "ideal".to_string());
+        extra.insert("policies".to_string(), "fixed,sequential".to_string());
+        extra.insert(
+            "stream".to_string(),
+            journal.to_string_lossy().into_owned(),
+        );
+        extra.insert(
+            "metrics-json".to_string(),
+            metrics.to_string_lossy().into_owned(),
+        );
+        let args = Args {
+            command: "scenario".into(),
+            overrides: vec![
+                ("data.n_raw".into(), "400".into()),
+                ("protocol.n_c".into(), "40".into()),
+                ("sweep.seeds".into(), "2".into()),
+            ],
+            out_dir: base_dir.join("out").to_string_lossy().into_owned(),
+            backend: "native".into(),
+            quiet: true,
+            extra,
+            ..Default::default()
+        };
+        assert_eq!(dispatch(&args).unwrap(), 0);
+        let text = std::fs::read_to_string(&metrics).unwrap();
+        let snap = crate::util::json::parse(&text).unwrap();
+        let stream = snap.get("stream").unwrap();
+        // every journaled row was aggregated: the pipeline drained
+        assert_eq!(
+            stream.get("journal_lag").unwrap().as_usize().unwrap(),
+            0
+        );
+        // at least one seed-group per spec ran (exact count depends on
+        // the EDGEPIPE_LANES chunking)
+        assert!(
+            stream.get("groups_run").unwrap().as_usize().unwrap() >= 2
+        );
+        // the benched sweep ran through the global sink too
+        assert!(
+            snap.get("sched")
+                .unwrap()
+                .get("runs")
+                .unwrap()
+                .as_usize()
+                .unwrap()
+                > 0
+        );
+        let _ = std::fs::remove_file(&journal);
+        let _ = std::fs::remove_file(&metrics);
     }
 
     #[test]

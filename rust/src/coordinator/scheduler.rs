@@ -1105,6 +1105,23 @@ pub(crate) fn run_schedule_with_opts(
     // an error mid-sweep doesn't silently degrade later runs to
     // fresh-allocation mode
     ws.train = trainer.into_space();
+    // Fold the completed run's totals into the process-global telemetry
+    // sink. This happens AFTER the loop from counters it already
+    // produced — zero hot-loop instrumentation, so the write-only
+    // contract (no RNG, no control flow; see util/telemetry.rs) holds
+    // structurally.
+    if let Ok(stats) = &stats {
+        crate::util::telemetry::global().with(|m| {
+            m.sched.runs.inc();
+            m.sched
+                .events
+                .add((ws.events.events().len() + ws.events.dropped()) as u64);
+            m.sched.packets_sent.add(stats.blocks_sent as u64);
+            m.sched.packets_resent.add(stats.retransmissions);
+            m.sched.timeouts.add(stats.timeouts);
+            m.sched.evictions.add(stats.evictions as u64);
+        });
+    }
     stats
 }
 

@@ -114,6 +114,10 @@ pub struct ShardedSource<'a, S: DeviceScheduler> {
     /// `None` when `n_shards == 1` (the inline, thread-free path).
     pool: Option<ShardPool>,
     n_shards: usize,
+    /// Global telemetry handle, cloned once at construction so the
+    /// per-event cost is one branch when detached (write-only
+    /// observation — see `util::telemetry`).
+    tel: crate::util::telemetry::Telemetry,
 }
 
 impl<'a, S: DeviceScheduler> ShardedSource<'a, S> {
@@ -220,6 +224,7 @@ impl<'a, S: DeviceScheduler> ShardedSource<'a, S> {
             sched,
             pool,
             n_shards,
+            tel: crate::util::telemetry::global(),
         }
     }
 
@@ -278,6 +283,7 @@ impl<S: DeviceScheduler> TrafficSource for ShardedSource<'_, S> {
                 );
             }
         }
+        self.tel.with(|m| m.pool.shard_draws.inc());
         let drawn = frame.len();
         self.sent[device] += drawn;
         self.total_remaining -= drawn;
@@ -308,6 +314,7 @@ impl<S: DeviceScheduler> TrafficSource for ShardedSource<'_, S> {
                     pool.run_on(shard, Box::new(move || remaining.clear()));
                 }
             }
+            self.tel.with(|m| m.pool.shard_evicts.inc());
         }
         self.total_remaining -= shed;
         self.views[device].remaining = 0;

@@ -1,15 +1,26 @@
 //! Loss-curve utilities: resampling onto a common time grid and
 //! Monte-Carlo averaging (paper Fig. 4 plots the AVERAGE training loss
 //! over random seeds).
+//!
+//! Everything here is fallible rather than panicking (the panic-free
+//! sweep convention): an empty curve or a degenerate grid is a config
+//! problem — e.g. a `loss_every` schedule that yields no loss records —
+//! and must surface as an `Err` at the `edgepipe fig4` boundary, not
+//! take the process down.
+
+use anyhow::{bail, Result};
 
 /// Linearly interpolate a (time, value) curve at `t` (clamped at ends).
-pub fn interp(curve: &[(f64, f64)], t: f64) -> f64 {
-    assert!(!curve.is_empty(), "empty curve");
+/// Errs on an empty curve (there is nothing to clamp to).
+pub fn interp(curve: &[(f64, f64)], t: f64) -> Result<f64> {
+    if curve.is_empty() {
+        bail!("cannot interpolate an empty curve (no loss records)");
+    }
     if t <= curve[0].0 {
-        return curve[0].1;
+        return Ok(curve[0].1);
     }
     if t >= curve[curve.len() - 1].0 {
-        return curve[curve.len() - 1].1;
+        return Ok(curve[curve.len() - 1].1);
     }
     // binary search for the segment containing t
     let mut lo = 0usize;
@@ -25,27 +36,36 @@ pub fn interp(curve: &[(f64, f64)], t: f64) -> f64 {
     let (t0, v0) = curve[lo];
     let (t1, v1) = curve[hi];
     if t1 <= t0 {
-        return v0;
+        return Ok(v0);
     }
-    v0 + (v1 - v0) * (t - t0) / (t1 - t0)
+    Ok(v0 + (v1 - v0) * (t - t0) / (t1 - t0))
 }
 
 /// Resample several runs' curves onto a shared uniform grid of `points`
-/// between 0 and `t_max`. Returns (grid, per-run values).
+/// between 0 and `t_max`. Returns (grid, per-run values). Errs when the
+/// grid is degenerate (`points < 2`) or any run's curve is empty.
 pub fn align_curves(
     curves: &[Vec<(f64, f64)>],
     t_max: f64,
     points: usize,
-) -> (Vec<f64>, Vec<Vec<f64>>) {
-    assert!(points >= 2);
+) -> Result<(Vec<f64>, Vec<Vec<f64>>)> {
+    if points < 2 {
+        bail!("curve grid needs at least 2 points (got {points})");
+    }
     let grid: Vec<f64> = (0..points)
         .map(|i| t_max * i as f64 / (points - 1) as f64)
         .collect();
     let values = curves
         .iter()
-        .map(|c| grid.iter().map(|&t| interp(c, t)).collect())
-        .collect();
-    (grid, values)
+        .enumerate()
+        .map(|(run, c)| {
+            grid.iter()
+                .map(|&t| interp(c, t))
+                .collect::<Result<Vec<f64>>>()
+                .map_err(|e| e.context(format!("aligning run {run}")))
+        })
+        .collect::<Result<Vec<Vec<f64>>>>()?;
+    Ok((grid, values))
 }
 
 /// Pointwise mean curve over aligned runs: returns (grid, mean values).
@@ -53,13 +73,13 @@ pub fn mean_curve(
     curves: &[Vec<(f64, f64)>],
     t_max: f64,
     points: usize,
-) -> (Vec<f64>, Vec<f64>) {
-    let (grid, values) = align_curves(curves, t_max, points);
+) -> Result<(Vec<f64>, Vec<f64>)> {
+    let (grid, values) = align_curves(curves, t_max, points)?;
     let n = values.len().max(1) as f64;
     let mean = (0..grid.len())
         .map(|i| values.iter().map(|v| v[i]).sum::<f64>() / n)
         .collect();
-    (grid, mean)
+    Ok((grid, mean))
 }
 
 #[cfg(test)]
@@ -69,16 +89,16 @@ mod tests {
     #[test]
     fn interp_endpoints_and_middle() {
         let c = vec![(0.0, 1.0), (10.0, 3.0)];
-        assert_eq!(interp(&c, -5.0), 1.0);
-        assert_eq!(interp(&c, 15.0), 3.0);
-        assert_eq!(interp(&c, 5.0), 2.0);
+        assert_eq!(interp(&c, -5.0).unwrap(), 1.0);
+        assert_eq!(interp(&c, 15.0).unwrap(), 3.0);
+        assert_eq!(interp(&c, 5.0).unwrap(), 2.0);
     }
 
     #[test]
     fn interp_multi_segment() {
         let c = vec![(0.0, 0.0), (1.0, 10.0), (3.0, 30.0)];
-        assert!((interp(&c, 0.5) - 5.0).abs() < 1e-12);
-        assert!((interp(&c, 2.0) - 20.0).abs() < 1e-12);
+        assert!((interp(&c, 0.5).unwrap() - 5.0).abs() < 1e-12);
+        assert!((interp(&c, 2.0).unwrap() - 20.0).abs() < 1e-12);
     }
 
     #[test]
@@ -87,7 +107,7 @@ mod tests {
             vec![(0.0, 1.0), (10.0, 1.0)],
             vec![(0.0, 3.0), (10.0, 3.0)],
         ];
-        let (grid, mean) = mean_curve(&curves, 10.0, 5);
+        let (grid, mean) = mean_curve(&curves, 10.0, 5).unwrap();
         assert_eq!(grid.len(), 5);
         assert!(mean.iter().all(|&v| (v - 2.0).abs() < 1e-12));
     }
@@ -96,8 +116,44 @@ mod tests {
     fn duplicate_time_points_are_safe() {
         // block-boundary records can duplicate a timestamp
         let c = vec![(0.0, 5.0), (1.0, 4.0), (1.0, 3.0), (2.0, 2.0)];
-        let v = interp(&c, 1.0);
+        let v = interp(&c, 1.0).unwrap();
         assert!((3.0..=4.0).contains(&v));
-        assert!((interp(&c, 1.5) - 2.5).abs() < 1e-12);
+        assert!((interp(&c, 1.5).unwrap() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_curve_is_an_error_not_a_panic() {
+        // reachable from `edgepipe fig4` when a run's loss_every
+        // schedule yields no loss records
+        let err = interp(&[], 1.0).unwrap_err();
+        assert!(err.to_string().contains("empty curve"), "{err:#}");
+        let curves = vec![vec![(0.0, 1.0), (10.0, 1.0)], vec![]];
+        let err = mean_curve(&curves, 10.0, 5).unwrap_err();
+        assert!(format!("{err:#}").contains("run 1"), "{err:#}");
+    }
+
+    #[test]
+    fn one_point_curve_interpolates_as_a_constant() {
+        // a single loss record clamps everywhere — never divides by the
+        // zero-width segment
+        let c = vec![(2.0, 7.0)];
+        for t in [-1.0, 2.0, 5.0] {
+            assert_eq!(interp(&c, t).unwrap(), 7.0);
+        }
+        let (grid, mean) = mean_curve(&[c], 10.0, 3).unwrap();
+        assert_eq!(grid, vec![0.0, 5.0, 10.0]);
+        assert!(mean.iter().all(|&v| v == 7.0));
+    }
+
+    #[test]
+    fn degenerate_grid_is_an_error_not_an_assert() {
+        let curves = vec![vec![(0.0, 1.0), (10.0, 1.0)]];
+        for points in [0, 1] {
+            let err = align_curves(&curves, 10.0, points).unwrap_err();
+            assert!(
+                err.to_string().contains("at least 2 points"),
+                "{err:#}"
+            );
+        }
     }
 }

@@ -4,7 +4,7 @@
 //! how much final loss is lost by trusting the bound instead of running
 //! the (expensive) experimental sweep (paper: ≈ 3.8 %).
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::bound::corollary1::BoundParams;
 use crate::bound::optimizer::optimize_block_size;
@@ -131,21 +131,38 @@ fn mean_loss_curves(
     );
     let mut curves = Vec::with_capacity(jobs.len());
     for (r, &(n_c, s)) in results.into_iter().zip(&jobs) {
-        curves.push(r.with_context(|| {
+        let curve = r.with_context(|| {
             format!("DES run failed: n_c {n_c} seed offset {s}")
-        })?);
+        })?;
+        // config-boundary check: a run whose loss_every schedule yields
+        // no loss records cannot be averaged into a Fig. 4 curve —
+        // surface the bad config here, with the run that produced it,
+        // instead of a cryptic interpolation error (or the panic this
+        // replaced) deeper down
+        if curve.is_empty() {
+            bail!(
+                "n_c {n_c} seed offset {s}: run produced no loss records \
+                 (loss_every too large for t_budget {}; lower loss_every \
+                 or raise the budget)",
+                base.t_budget
+            );
+        }
+        curves.push(curve);
     }
-    Ok((0..n_cs.len())
+    (0..n_cs.len())
         .map(|i| {
             let (grid, mean) = mean_curve(
                 &curves[i * seeds..(i + 1) * seeds],
                 base.t_budget,
                 points,
-            );
-            let final_loss = *mean.last().unwrap();
-            (grid, mean, final_loss)
+            )
+            .with_context(|| format!("averaging curves for n_c {}", n_cs[i]))?;
+            let final_loss = *mean
+                .last()
+                .expect("mean_curve grids have >= 2 points");
+            Ok((grid, mean, final_loss))
         })
-        .collect())
+        .collect()
 }
 
 /// Produce the full Fig. 4 dataset.
@@ -317,5 +334,27 @@ mod tests {
         assert!(out.exp_final <= out.bound_final + 1e-9);
         assert!(!out.search_table().is_empty());
         assert!(out.curve_table().len() >= 60);
+    }
+
+    #[test]
+    fn budget_with_no_loss_records_errors_instead_of_panicking() {
+        // t_budget smaller than one block's transmission time ⇒ zero
+        // SGD updates ⇒ empty loss curves. This used to assert-panic
+        // inside `interp`; it must surface as a config error naming the
+        // knobs to fix.
+        let ds = synth_calhousing(&SynthSpec { n: 200, ..Default::default() });
+        let params =
+            BoundParams { alpha: 1e-3, ..BoundParams::paper_fig3(3.0) };
+        let cfg = Fig4Config {
+            alpha: 1e-3,
+            seeds: 2,
+            search_points: 4,
+            curve_points: 10,
+            reference_n_cs: vec![],
+            ..Fig4Config::paper(10.0, 0.5)
+        };
+        let err = fig4_data(&ds, &params, &cfg).unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("no loss records"), "{text}");
     }
 }

@@ -43,13 +43,19 @@
 //! been a remote crash trigger.
 //!
 //! Control lines: `{"cmd":"ping"}` → `{"ok":true,"pong":true}`;
+//! `{"cmd":"stats"}` → `{"ok":true,"stats":…}` with the service's
+//! telemetry snapshot (connections, requests, cache hit/miss, reply-time
+//! histogram — see `util::telemetry` for the schema and the write-only
+//! contract that keeps every other reply bit-identical);
 //! `{"cmd":"shutdown"}` replies and stops the accept loop.
 //!
 //! [`mc_scenario_loss_lanes`]: crate::sweep::runner::mc_scenario_loss_lanes
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{
+    IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream,
+};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -66,6 +72,7 @@ use crate::sweep::scenario::{ScenarioRunner, ScenarioSpec};
 use crate::sweep::stream::loss_value;
 use crate::util::json::{self, num, obj, s, Value};
 use crate::util::stats::Welford;
+use crate::util::telemetry::Telemetry;
 
 /// What [`ServeState::handle_line`] wants done with its reply.
 pub enum ServeReply {
@@ -90,6 +97,12 @@ pub struct ServeState<'a> {
     runners: HashMap<String, ScenarioRunner<'a>>,
     cache: Arc<Mutex<HashMap<CacheKey, McStats>>>,
     bw: BatchWorkspace,
+    /// Always-attached telemetry sink, shared across every session
+    /// (like the cache) so `{"cmd":"stats"}` reports service-wide
+    /// totals. Counters never feed back into replies (write-only
+    /// observation — see `util::telemetry`), so existing replies stay
+    /// bit-identical to the pre-telemetry service.
+    tel: Telemetry,
 }
 
 impl<'a> ServeState<'a> {
@@ -109,6 +122,11 @@ impl<'a> ServeState<'a> {
             runners: HashMap::new(),
             cache: Arc::new(Mutex::new(HashMap::new())),
             bw: BatchWorkspace::new(),
+            // a private always-attached sink (NOT the process-global
+            // one: sharing that would let unrelated work pollute
+            // service-wide stats, and makes test counts racy) — so
+            // `{"cmd":"stats"}` always has something to report
+            tel: Telemetry::attached(),
         }
     }
 
@@ -127,6 +145,7 @@ impl<'a> ServeState<'a> {
             runners: HashMap::new(),
             cache: Arc::clone(&self.cache),
             bw: BatchWorkspace::new(),
+            tel: self.tel.clone(),
         }
     }
 
@@ -135,17 +154,25 @@ impl<'a> ServeState<'a> {
         lock_cache(&self.cache).len()
     }
 
+    /// The state's private sink. `edgepipe serve` installs this as the
+    /// process-global sink so the scheduler/pool counters of served
+    /// runs land in the same `{"cmd":"stats"}` snapshot; tests that
+    /// build several states in one process skip the install and stay
+    /// isolated.
+    pub fn telemetry(&self) -> Telemetry {
+        self.tel.clone()
+    }
+
     /// Handle one request line. Always yields a reply line; errors
     /// become `{"ok":false,"error":…}` responses, never panics or
     /// dropped lines.
     pub fn handle_line(&mut self, line: &str) -> ServeReply {
+        self.tel.with(|m| m.serve.requests.inc());
         let parsed = match json::parse(line.trim()) {
             Ok(v) => v,
             Err(e) => {
-                return ServeReply::Response(error_reply(
-                    Value::Null,
-                    &format!("bad request: {e:#}"),
-                ))
+                return self
+                    .error(Value::Null, &format!("bad request: {e:#}"))
             }
         };
         let id = parsed.opt("id").cloned().unwrap_or(Value::Null);
@@ -159,6 +186,15 @@ impl<'a> ServeState<'a> {
                     ])
                     .to_json(),
                 ),
+                Ok("stats") => ServeReply::Response(
+                    obj(vec![
+                        ("id", id),
+                        ("ok", Value::Bool(true)),
+                        // always-attached sink ⇒ never Null in practice
+                        ("stats", self.tel.snapshot().unwrap_or(Value::Null)),
+                    ])
+                    .to_json(),
+                ),
                 Ok("shutdown") => ServeReply::Shutdown(
                     obj(vec![
                         ("id", id),
@@ -167,19 +203,22 @@ impl<'a> ServeState<'a> {
                     ])
                     .to_json(),
                 ),
-                Ok(other) => ServeReply::Response(error_reply(
-                    id,
-                    &format!("unknown cmd '{other}'"),
-                )),
-                Err(_) => {
-                    ServeReply::Response(error_reply(id, "cmd must be a string"))
+                Ok(other) => {
+                    self.error(id, &format!("unknown cmd '{other}'"))
                 }
+                Err(_) => self.error(id, "cmd must be a string"),
             };
         }
         match self.run_request(&parsed) {
             Ok(body) => ServeReply::Response(with_id(body, id).to_json()),
-            Err(e) => ServeReply::Response(error_reply(id, &format!("{e:#}"))),
+            Err(e) => self.error(id, &format!("{e:#}")),
         }
+    }
+
+    /// Count and format an error reply.
+    fn error(&self, id: Value, message: &str) -> ServeReply {
+        self.tel.with(|m| m.serve.errors.inc());
+        ServeReply::Response(error_reply(id, message))
     }
 
     /// Parse, validate and run (or cache-hit) one scenario request.
@@ -210,6 +249,13 @@ impl<'a> ServeState<'a> {
         // serialize every concurrent session on the slowest request
         let cached = lock_cache(&self.cache).get(&key).copied();
         let hit = cached.is_some();
+        self.tel.with(|m| {
+            if hit {
+                m.serve.cache_hits.inc();
+            } else {
+                m.serve.cache_misses.inc();
+            }
+        });
         let stats = match cached {
             Some(stats) => stats,
             None => {
@@ -316,16 +362,18 @@ pub fn serve_connection<R: BufRead, W: Write>(
         if line.trim().is_empty() {
             continue;
         }
-        match state.handle_line(&line) {
-            ServeReply::Response(reply) => {
-                writeln!(writer, "{reply}")?;
-                writer.flush()?;
-            }
-            ServeReply::Shutdown(reply) => {
-                writeln!(writer, "{reply}")?;
-                writer.flush()?;
-                return Ok(true);
-            }
+        // wall clock flows write-only into the reply-time histogram —
+        // it never shapes a reply
+        let t0 = std::time::Instant::now();
+        let (reply, stop) = match state.handle_line(&line) {
+            ServeReply::Response(reply) => (reply, false),
+            ServeReply::Shutdown(reply) => (reply, true),
+        };
+        writeln!(writer, "{reply}")?;
+        writer.flush()?;
+        state.tel.with(|m| m.serve.reply_time.record(t0.elapsed()));
+        if stop {
+            return Ok(true);
         }
     }
     Ok(false)
@@ -342,6 +390,19 @@ pub fn serve_listener(
     listener: TcpListener,
 ) -> Result<()> {
     let local = listener.local_addr().context("listener address")?;
+    // `local` is the BOUND address: on `0.0.0.0:<port>` (or `[::]`)
+    // connecting to the unspecified IP is non-portable — some stacks
+    // refuse it, leaving `accept` blocked forever after a shutdown.
+    // Wake via loopback on the bound port instead.
+    let wake = if local.ip().is_unspecified() {
+        let ip = match local.ip() {
+            IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+            IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+        };
+        SocketAddr::new(ip, local.port())
+    } else {
+        local
+    };
     let shutdown = AtomicBool::new(false);
     std::thread::scope(|scope| {
         let shutdown = &shutdown;
@@ -356,6 +417,7 @@ pub fn serve_listener(
                     continue;
                 }
             };
+            state.tel.with(|m| m.serve.connections.inc());
             scope.spawn(move || {
                 let reader = match stream.try_clone() {
                     Ok(clone) => BufReader::new(clone),
@@ -369,7 +431,7 @@ pub fn serve_listener(
                     Ok(true) => {
                         shutdown.store(true, Ordering::SeqCst);
                         // unblock accept() so it observes the flag
-                        let _ = TcpStream::connect(local);
+                        let _ = TcpStream::connect(wake);
                     }
                     Ok(false) => {}
                     // a bad client must not take the service down
@@ -492,6 +554,67 @@ mod tests {
             assert_eq!(va.get(key).unwrap(), vb.get(key).unwrap(), "{key}");
         }
         assert_eq!(parent.cached_results(), 1);
+    }
+
+    #[test]
+    fn stats_reply_reports_requests_and_cache_counters() {
+        let ds = synth_calhousing(&SynthSpec { n: 96, ..Default::default() });
+        let mut state = tiny_state(&ds);
+        let req = r#"{"channel":"erasure:0.2","seeds":2}"#;
+        let _ = reply_of(state.handle_line(req)); // miss
+        let _ = reply_of(state.handle_line(req)); // hit
+        let _ = reply_of(state.handle_line(r#"{"cmd":"nope"}"#)); // error
+        let (text, stop) =
+            reply_of(state.handle_line(r#"{"id":9,"cmd":"stats"}"#));
+        assert!(!stop);
+        let v = json::parse(&text).unwrap();
+        assert_eq!(v.get("id").unwrap().as_usize().unwrap(), 9);
+        assert_eq!(v.get("ok").unwrap(), &Value::Bool(true));
+        let stats = v.get("stats").unwrap();
+        for group in ["sched", "pool", "stream", "serve"] {
+            assert!(stats.get(group).is_ok(), "stats missing group {group}");
+        }
+        let serve = stats.get("serve").unwrap();
+        // the stats request itself is the 4th
+        assert_eq!(serve.get("requests").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(serve.get("cache_hits").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(serve.get("cache_misses").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(serve.get("errors").unwrap().as_usize().unwrap(), 1);
+        // sessions share the sink, exactly like the result cache
+        let mut session = state.session();
+        let (text, _) = reply_of(session.handle_line(r#"{"cmd":"stats"}"#));
+        let v = json::parse(&text).unwrap();
+        let requests = v
+            .get("stats").unwrap()
+            .get("serve").unwrap()
+            .get("requests").unwrap()
+            .as_usize()
+            .unwrap();
+        assert_eq!(requests, 5);
+    }
+
+    #[test]
+    fn shutdown_unblocks_accept_on_unspecified_bind() {
+        let ds = synth_calhousing(&SynthSpec { n: 96, ..Default::default() });
+        let state = tiny_state(&ds);
+        // the documented fleet case: bind the unspecified address
+        let listener = TcpListener::bind("0.0.0.0:0").unwrap();
+        let port = listener.local_addr().unwrap().port();
+        std::thread::scope(|scope| {
+            let state = &state;
+            let server = scope.spawn(move || serve_listener(state, listener));
+            let mut conn = TcpStream::connect(("127.0.0.1", port)).unwrap();
+            writeln!(conn, "{}", r#"{"cmd":"shutdown"}"#).unwrap();
+            conn.flush().unwrap();
+            let mut reply = String::new();
+            BufReader::new(conn).read_line(&mut reply).unwrap();
+            let v = json::parse(&reply).unwrap();
+            assert_eq!(v.get("shutdown").unwrap(), &Value::Bool(true));
+            // the loopback wake (NOT a connect to 0.0.0.0) must unblock
+            // accept(); this join hangs forever without the rewrite on
+            // stacks that refuse unspecified-destination connects
+            server.join().unwrap().unwrap();
+        });
     }
 
     #[test]

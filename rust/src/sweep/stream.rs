@@ -78,6 +78,7 @@ use crate::sweep::scenario::{ScenarioRunner, ScenarioSpec};
 use crate::util::json::{self, num, obj, s, Value};
 use crate::util::pool::default_threads;
 use crate::util::stats::Welford;
+use crate::util::telemetry::Telemetry;
 
 /// Journal format version this build writes and accepts.
 const JOURNAL_VERSION: f64 = 1.0;
@@ -103,6 +104,14 @@ pub struct StreamOptions {
     /// Config fingerprint pinned in the journal header (empty = filled
     /// in by [`stream_scenario_grid`] from the base `DesConfig`).
     pub fingerprint: String,
+    /// Print a rate-limited progress ticker (groups done, groups/sec,
+    /// per-stage queue depth, journal lag, error rows) to stderr.
+    /// Display-only: stdout, journal bytes and losses are untouched.
+    /// Implies an internal telemetry sink when none is attached.
+    pub progress: bool,
+    /// Telemetry sink for pipeline counters/gauges (detached = no-op;
+    /// see `util::telemetry` for the write-only contract).
+    pub telemetry: Telemetry,
 }
 
 impl Default for StreamOptions {
@@ -115,6 +124,8 @@ impl Default for StreamOptions {
             journal: None,
             resume: None,
             fingerprint: String::new(),
+            progress: false,
+            telemetry: Telemetry::off(),
         }
     }
 }
@@ -457,6 +468,76 @@ pub fn compact_journal(
     })
 }
 
+/// Rate-limited stderr progress line for [`StreamOptions::progress`],
+/// driven by the stage-4 aggregator. Display-only: it reads the wall
+/// clock and the telemetry sink but feeds neither back into the
+/// pipeline — stdout, journal bytes and losses are untouched, so the
+/// bit-identity contract is unaffected.
+struct Ticker {
+    total: usize,
+    /// `None` = progress off (every call is one branch).
+    start: Option<std::time::Instant>,
+    last_print: Option<std::time::Instant>,
+}
+
+impl Ticker {
+    const MIN_GAP: std::time::Duration = std::time::Duration::from_millis(500);
+
+    fn new(on: bool, total: usize) -> Ticker {
+        Ticker {
+            total,
+            start: on.then(std::time::Instant::now),
+            last_print: None,
+        }
+    }
+
+    fn tick(&mut self, tel: &Telemetry, done: usize) {
+        let Some(start) = self.start else { return };
+        let now = std::time::Instant::now();
+        if let Some(last) = self.last_print {
+            if now.duration_since(last) < Self::MIN_GAP {
+                return;
+            }
+        }
+        self.last_print = Some(now);
+        self.print(tel, done, now.duration_since(start));
+    }
+
+    /// Unconditional final line (so short runs report at least once).
+    fn finish(&mut self, tel: &Telemetry, done: usize) {
+        if let Some(start) = self.start {
+            self.print(tel, done, start.elapsed());
+        }
+    }
+
+    fn print(
+        &self,
+        tel: &Telemetry,
+        done: usize,
+        elapsed: std::time::Duration,
+    ) {
+        let mut reused = 0u64;
+        let mut errors = 0u64;
+        let mut lag = 0u64;
+        let (mut jq, mut rq, mut aq) = (0i64, 0i64, 0i64);
+        tel.with(|m| {
+            reused = m.stream.groups_reused.get();
+            errors = m.stream.error_rows.get();
+            lag = m.stream.journal_lag();
+            jq = m.stream.job_queue.get();
+            rq = m.stream.row_queue.get();
+            aq = m.stream.agg_queue.get();
+        });
+        let rate = done as f64 / elapsed.as_secs_f64().max(1e-9);
+        eprintln!(
+            "stream: {done}/{} groups ({reused} reused, {errors} errors) \
+             {rate:.1} groups/s  queues gen→run={jq} run→metrics={rq} \
+             metrics→agg={aq}  journal_lag={lag}",
+            self.total,
+        );
+    }
+}
+
 /// Run the four-stage streaming pipeline over an arbitrary group-run
 /// stage. This seam is what `stream_parity.rs` injects failures and
 /// panics through; production sweeps go through
@@ -521,6 +602,17 @@ where
     let (agg_tx, agg_rx) = sync_channel::<Row>(queue);
     let job_rx = Mutex::new(job_rx);
 
+    // The ticker reads queue depths and journal lag from a sink, so
+    // progress without an external sink attaches a private one. All
+    // instrumentation below is write-only observation (no RNG, no
+    // control flow — see util::telemetry); `telemetry_parity.rs` pins
+    // journal bytes and losses bit-identical attached vs detached.
+    let tel = if opts.progress && !opts.telemetry.is_attached() {
+        Telemetry::attached()
+    } else {
+        opts.telemetry.clone()
+    };
+
     let mut welfords: Vec<Welford> = vec![Welford::new(); points];
     let mut errors: Vec<StreamError> = Vec::new();
     let mut groups_run = 0usize;
@@ -528,11 +620,13 @@ where
 
     std::thread::scope(|scope| -> Result<()> {
         // --- stage 1: scenario gen (lazy; never materializes the grid)
+        let gen_tel = tel.clone();
         scope.spawn(move || {
             for item in group_jobs_iter(points, seeds, lanes).enumerate() {
                 if job_tx.send(item).is_err() {
                     break; // downstream shut down (error path)
                 }
+                gen_tel.with(|m| m.stream.job_queue.add(1));
             }
         });
 
@@ -542,6 +636,7 @@ where
         let run = &run;
         for _ in 0..threads {
             let tx = row_tx.clone();
+            let tel = tel.clone();
             scope.spawn(move || {
                 let mut bw = BatchWorkspace::new();
                 loop {
@@ -551,6 +646,7 @@ where
                     let Some((index, job)) = recv_shared(job_rx) else {
                         break;
                     };
+                    tel.with(|m| m.stream.job_queue.sub(1));
                     let row = match done.get(&(job.point, job.seed0)) {
                         Some(losses) => Row {
                             index,
@@ -561,6 +657,11 @@ where
                             result: Ok(losses.clone()),
                         },
                         None => {
+                            // wall clock is read only when attached and
+                            // flows write-only into the histogram
+                            let t0 = tel
+                                .is_attached()
+                                .then(std::time::Instant::now);
                             // a panic must cost one row, not the pool
                             let result = match catch_unwind(
                                 AssertUnwindSafe(|| run(&mut bw, &job)),
@@ -575,6 +676,11 @@ where
                                     Err(panic_message(payload))
                                 }
                             };
+                            if let Some(t0) = t0 {
+                                tel.with(|m| {
+                                    m.stream.group_time.record(t0.elapsed())
+                                });
+                            }
                             Row {
                                 index,
                                 point: job.point,
@@ -588,6 +694,7 @@ where
                     if tx.send(row).is_err() {
                         break;
                     }
+                    tel.with(|m| m.stream.row_queue.add(1));
                 }
             });
         }
@@ -595,16 +702,23 @@ where
 
         // --- stage 3: metrics/journal (order as completed, not sorted —
         // resume tolerates any order, and sorting would buffer rows)
+        let metrics_tel = tel.clone();
         let metrics = scope.spawn(move || -> Result<()> {
             for row in row_rx {
+                metrics_tel.with(|m| m.stream.row_queue.sub(1));
                 if !row.reused {
                     if let Some(w) = journal.as_mut() {
                         w.write_line(&row_json(&row, labels))?;
                     }
                 }
+                // journaled-or-reused and forwarded; the aggregator's
+                // rows_aggregated chases this (journal lag → 0 on
+                // completion)
+                metrics_tel.with(|m| m.stream.rows_journaled.inc());
                 if agg_tx.send(row).is_err() {
                     break;
                 }
+                metrics_tel.with(|m| m.stream.agg_queue.add(1));
             }
             Ok(())
         });
@@ -612,7 +726,9 @@ where
         // --- stage 4: aggregate on the calling thread, in job order
         let mut reorder: BTreeMap<usize, Row> = BTreeMap::new();
         let mut next = 0usize;
+        let mut ticker = Ticker::new(opts.progress, total);
         for row in agg_rx {
+            tel.with(|m| m.stream.agg_queue.sub(1));
             reorder.insert(row.index, row);
             while let Some(row) = reorder.remove(&next) {
                 match row.result {
@@ -624,13 +740,24 @@ where
                             w.push(l);
                         }
                     }
-                    Err(message) => errors.push(StreamError {
-                        point: row.point,
-                        label: labels[row.point].clone(),
-                        seed0: row.seed0,
-                        message,
-                    }),
+                    Err(message) => {
+                        tel.with(|m| m.stream.error_rows.inc());
+                        errors.push(StreamError {
+                            point: row.point,
+                            label: labels[row.point].clone(),
+                            seed0: row.seed0,
+                            message,
+                        })
+                    }
                 }
+                tel.with(|m| {
+                    if row.reused {
+                        m.stream.groups_reused.inc();
+                    } else {
+                        m.stream.groups_run.inc();
+                    }
+                    m.stream.rows_aggregated.inc();
+                });
                 if row.reused {
                     groups_reused += 1;
                 } else {
@@ -638,7 +765,9 @@ where
                 }
                 next += 1;
             }
+            ticker.tick(&tel, next);
         }
+        ticker.finish(&tel, next);
         metrics.join().expect("metrics stage panicked")?;
         if next != total {
             bail!("stream pipeline ended early ({next}/{total} groups)");

@@ -96,9 +96,18 @@ where
     F: Fn(&mut W, &T) -> R + Sync,
 {
     let threads = threads.max(1).min(items.len().max(1));
+    // one global-handle clone per fan-out, shared by reference across
+    // the workers (write-only observation; see util/telemetry.rs)
+    let tel = crate::util::telemetry::global();
     if threads <= 1 || items.len() <= 1 {
         let mut ws = make_ws();
-        return items.iter().map(|item| f(&mut ws, item)).collect();
+        return items
+            .iter()
+            .map(|item| {
+                tel.with(|m| m.pool.jobs.inc());
+                f(&mut ws, item)
+            })
+            .collect();
     }
     let mut results: Vec<Option<R>> =
         (0..items.len()).map(|_| None).collect();
@@ -129,7 +138,10 @@ where
                     })) {
                         // SAFETY: `i` came from the cursor, so this
                         // worker exclusively owns slot `i`.
-                        Ok(r) => unsafe { slots.write(i, r) },
+                        Ok(r) => {
+                            tel.with(|m| m.pool.jobs.inc());
+                            unsafe { slots.write(i, r) }
+                        }
                         Err(payload) => {
                             abort.store(true, Ordering::Relaxed);
                             let mut slot = first_panic.lock().unwrap();
@@ -279,6 +291,9 @@ impl ShardWorker {
 /// caller prefixed with the shard index (non-string payloads verbatim).
 pub struct ShardPool {
     workers: Vec<ShardWorker>,
+    /// Global telemetry handle cloned once at pool construction; every
+    /// dispatch is then a single branch when telemetry is detached.
+    tel: crate::util::telemetry::Telemetry,
 }
 
 impl ShardPool {
@@ -313,7 +328,7 @@ impl ShardPool {
                 ShardWorker { tx: Some(tx), handle: Some(handle) }
             })
             .collect();
-        ShardPool { workers }
+        ShardPool { workers, tel: crate::util::telemetry::global() }
     }
 
     /// Worker threads in this pool.
@@ -333,11 +348,24 @@ impl ShardPool {
         // its execution (see `ShardJob`).
         let job: ShardJob = unsafe { std::mem::transmute(job) };
         let (ack_tx, ack_rx) = std::sync::mpsc::channel();
+        self.tel.with(|m| m.pool.shard_queue.add(1));
+        // wall clock flows write-only into the histogram; never read it
+        // unless telemetry is attached
+        let t0 = self.tel.is_attached().then(std::time::Instant::now);
         self.workers[shard]
             .sender()
             .send((job, ack_tx))
             .expect("shard worker channel closed");
-        match ack_rx.recv().expect("shard worker died mid-job") {
+        let ack = ack_rx.recv().expect("shard worker died mid-job");
+        self.tel.with(|m| {
+            m.pool.shard_queue.sub(1);
+            m.pool.shard_jobs.inc();
+            m.pool.barrier_waits.inc();
+            if let Some(t0) = t0 {
+                m.pool.barrier_wait.record(t0.elapsed());
+            }
+        });
+        match ack {
             ShardAck::Done => {}
             ShardAck::Panicked(payload) => raise_shard_panic(shard, payload),
         }
@@ -366,12 +394,15 @@ impl ShardPool {
             // dispatched job's ack before this call returns.
             let job: ShardJob = unsafe { std::mem::transmute(job) };
             let (ack_tx, ack_rx) = std::sync::mpsc::channel();
+            self.tel.with(|m| m.pool.shard_queue.add(1));
             self.workers[s]
                 .sender()
                 .send((job, ack_tx))
                 .expect("shard worker channel closed");
             acks.push((s, ack_rx));
         }
+        let dispatched = acks.len() as u64;
+        let t0 = self.tel.is_attached().then(std::time::Instant::now);
         let mut first_panic: Option<(usize, Box<dyn std::any::Any + Send>)> =
             None;
         for (s, ack_rx) in acks {
@@ -383,7 +414,19 @@ impl ShardPool {
                     }
                 }
             }
+            self.tel.with(|m| {
+                m.pool.shard_queue.sub(1);
+                m.pool.shard_jobs.inc();
+            });
         }
+        self.tel.with(|m| {
+            if dispatched > 0 {
+                m.pool.barrier_waits.inc();
+                if let Some(t0) = t0 {
+                    m.pool.barrier_wait.record(t0.elapsed());
+                }
+            }
+        });
         if let Some((s, payload)) = first_panic {
             raise_shard_panic(s, payload);
         }

@@ -1,0 +1,550 @@
+//! Runtime telemetry: atomic counters, bucketed duration histograms and
+//! queue-depth gauges behind a cheap [`Telemetry`] handle.
+//!
+//! ## Contract (load-bearing — the parity tests pin it)
+//!
+//! Telemetry is **write-only observation**. Instrumented code may bump
+//! counters, move gauges and record wall-clock durations into histograms,
+//! but telemetry must NEVER:
+//!
+//! - touch an RNG stream (no draws, no reseeds, no stream splits);
+//! - steer control flow (no branch in simulation/sweep code may read a
+//!   metric; wall-clock reads flow INTO histograms only, never back into
+//!   scheduling decisions);
+//! - change what bytes are written to journals, CSVs or serve replies
+//!   (modulo the explicit `{"cmd":"stats"}` surface).
+//!
+//! Consequently per-seed losses, golden event traces and stream journal
+//! rows are bit-identical with telemetry attached or detached at every
+//! `EDGEPIPE_SHARDS`/`EDGEPIPE_LANES` setting — `telemetry_parity.rs`
+//! asserts exactly that.
+//!
+//! ## Handles
+//!
+//! [`Telemetry`] wraps `Option<Arc<Metrics>>`: a detached handle
+//! ([`Telemetry::off`]) makes every instrumentation site a single branch
+//! on `None`; an attached one ([`Telemetry::attached`]) shares one
+//! [`Metrics`] sink across threads via `Arc`. Layers that take options
+//! structs (`StreamOptions`, `ServeState`) carry a handle explicitly;
+//! parameter-less layers (the scheduler core, `util/pool.rs`,
+//! `coordinator/shard.rs`) consult the process-global handle installed by
+//! [`install`] — [`global`] is a relaxed-atomic fast path when nothing is
+//! installed, so the default cost is one predictable load.
+
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::json::{num, obj, Value};
+
+/// Monotone event counter (relaxed atomics: totals, not ordering).
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Signed level gauge (queue occupancy) with a high-water mark.
+///
+/// std's `mpsc` channels expose no length, so occupancy is tracked at the
+/// endpoints: `+1` at every send, `-1` at every receive. Snapshots can
+/// transiently disagree with the true depth by in-flight items; the
+/// high-water mark is monotone and exact up to the same race.
+#[derive(Default)]
+pub struct Gauge {
+    level: AtomicI64,
+    max: AtomicI64,
+}
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge { level: AtomicI64::new(0), max: AtomicI64::new(0) }
+    }
+
+    pub fn add(&self, n: i64) {
+        let now = self.level.fetch_add(n, Ordering::Relaxed) + n;
+        if n > 0 {
+            self.max.fetch_max(now, Ordering::Relaxed);
+        }
+    }
+
+    pub fn sub(&self, n: i64) {
+        self.add(-n);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.level.load(Ordering::Relaxed)
+    }
+
+    pub fn high_water(&self) -> i64 {
+        self.max.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of histogram buckets: bucket 0 holds exact zeros, bucket `i`
+/// (1..) holds durations in `[2^(i-1), 2^i)` nanoseconds. 40 buckets
+/// cover up to ~9.2 minutes; anything longer clamps into the last one.
+pub const HIST_BUCKETS: usize = 40;
+
+/// Bucket index for a duration of `nanos`: 0 for 0, else
+/// `floor(log2(nanos)) + 1`, clamped to `HIST_BUCKETS - 1`.
+pub fn bucket_index(nanos: u64) -> usize {
+    if nanos == 0 {
+        return 0;
+    }
+    let idx = 64 - nanos.leading_zeros() as usize;
+    idx.min(HIST_BUCKETS - 1)
+}
+
+/// Lower bound (inclusive) of bucket `i` in nanoseconds.
+pub fn bucket_floor(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << (i - 1)
+    }
+}
+
+/// Power-of-two duration histogram. `record` is wait-free (three relaxed
+/// atomic adds); the snapshot reports count, total and non-empty buckets.
+#[derive(Default)]
+pub struct Histogram {
+    count: AtomicU64,
+    total_ns: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Histogram {
+    pub fn record(&self, d: Duration) {
+        self.record_ns(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    pub fn record_ns(&self, nanos: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.total_ns.fetch_add(nanos, Ordering::Relaxed);
+        self.buckets[bucket_index(nanos)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn total_ns(&self) -> u64 {
+        self.total_ns.load(Ordering::Relaxed)
+    }
+
+    /// Mean recorded duration in nanoseconds (0 when empty).
+    pub fn mean_ns(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.total_ns() as f64 / n as f64
+        }
+    }
+
+    /// `{"count", "total_ns", "mean_ns", "buckets": [[floor_ns, n], ..]}`
+    /// with only non-empty buckets listed (ascending).
+    fn snapshot(&self) -> Value {
+        let buckets = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let n = b.load(Ordering::Relaxed);
+                (n > 0).then(|| {
+                    Value::Arr(vec![
+                        num(bucket_floor(i) as f64),
+                        num(n as f64),
+                    ])
+                })
+            })
+            .collect();
+        obj(vec![
+            ("count", num(self.count() as f64)),
+            ("total_ns", num(self.total_ns() as f64)),
+            ("mean_ns", num(self.mean_ns())),
+            ("buckets", Value::Arr(buckets)),
+        ])
+    }
+}
+
+/// Scheduler-core totals, folded in once per completed run from the
+/// scheduler's own `RunStats` (no hot-loop instrumentation needed).
+#[derive(Default)]
+pub struct SchedMetrics {
+    pub runs: Counter,
+    pub events: Counter,
+    pub packets_sent: Counter,
+    pub packets_resent: Counter,
+    pub timeouts: Counter,
+    pub evictions: Counter,
+}
+
+impl SchedMetrics {
+    fn snapshot(&self) -> Value {
+        obj(vec![
+            ("runs", num(self.runs.get() as f64)),
+            ("events", num(self.events.get() as f64)),
+            ("packets_sent", num(self.packets_sent.get() as f64)),
+            ("packets_resent", num(self.packets_resent.get() as f64)),
+            ("timeouts", num(self.timeouts.get() as f64)),
+            ("evictions", num(self.evictions.get() as f64)),
+        ])
+    }
+}
+
+/// Thread-pool / shard-pool activity.
+#[derive(Default)]
+pub struct PoolMetrics {
+    /// Closures executed by `parallel_map_with` workers.
+    pub jobs: Counter,
+    /// Ack barriers crossed by `ShardPool::run_on`/`run_all`.
+    pub barrier_waits: Counter,
+    /// Wall time the caller spent blocked on shard acks.
+    pub barrier_wait: Histogram,
+    /// Outstanding commands across shard queues (send +1 / ack -1).
+    pub shard_queue: Gauge,
+    /// Commands executed by shard workers.
+    pub shard_jobs: Counter,
+    /// Lane block draws through `ShardedSource` (inline or pooled).
+    pub shard_draws: Counter,
+    /// Lane evict-clears through `ShardedSource` (inline or pooled).
+    pub shard_evicts: Counter,
+}
+
+impl PoolMetrics {
+    fn snapshot(&self) -> Value {
+        obj(vec![
+            ("jobs", num(self.jobs.get() as f64)),
+            ("barrier_waits", num(self.barrier_waits.get() as f64)),
+            ("barrier_wait_ns", self.barrier_wait.snapshot()),
+            ("shard_queue_depth", num(self.shard_queue.get() as f64)),
+            (
+                "shard_queue_high_water",
+                num(self.shard_queue.high_water() as f64),
+            ),
+            ("shard_jobs", num(self.shard_jobs.get() as f64)),
+            ("shard_draws", num(self.shard_draws.get() as f64)),
+            ("shard_evicts", num(self.shard_evicts.get() as f64)),
+        ])
+    }
+}
+
+/// Streaming-sweep pipeline (gen → run → metrics → aggregate).
+#[derive(Default)]
+pub struct StreamMetrics {
+    pub groups_run: Counter,
+    pub groups_reused: Counter,
+    /// Rows the metrics stage has journaled (or skipped as reused) and
+    /// forwarded toward the aggregator.
+    pub rows_journaled: Counter,
+    /// Rows the aggregator has folded into Welford accumulators.
+    pub rows_aggregated: Counter,
+    pub error_rows: Counter,
+    /// Stage-queue occupancy: gen→run, run→metrics, metrics→aggregate.
+    pub job_queue: Gauge,
+    pub row_queue: Gauge,
+    pub agg_queue: Gauge,
+    /// Wall time per executed (non-reused) group.
+    pub group_time: Histogram,
+}
+
+impl StreamMetrics {
+    /// Rows forwarded by the metrics stage but not yet aggregated. Ends
+    /// at 0 for every completed stream run.
+    pub fn journal_lag(&self) -> u64 {
+        self.rows_journaled
+            .get()
+            .saturating_sub(self.rows_aggregated.get())
+    }
+
+    fn snapshot(&self) -> Value {
+        obj(vec![
+            ("groups_run", num(self.groups_run.get() as f64)),
+            ("groups_reused", num(self.groups_reused.get() as f64)),
+            ("rows_journaled", num(self.rows_journaled.get() as f64)),
+            ("rows_aggregated", num(self.rows_aggregated.get() as f64)),
+            ("journal_lag", num(self.journal_lag() as f64)),
+            ("error_rows", num(self.error_rows.get() as f64)),
+            (
+                "queues",
+                obj(vec![
+                    ("jobs", num(self.job_queue.get() as f64)),
+                    ("jobs_high_water", num(self.job_queue.high_water() as f64)),
+                    ("rows", num(self.row_queue.get() as f64)),
+                    ("rows_high_water", num(self.row_queue.high_water() as f64)),
+                    ("agg", num(self.agg_queue.get() as f64)),
+                    ("agg_high_water", num(self.agg_queue.high_water() as f64)),
+                ]),
+            ),
+            ("group_time_ns", self.group_time.snapshot()),
+        ])
+    }
+}
+
+/// `edgepipe serve` connection/request/cache activity.
+#[derive(Default)]
+pub struct ServeMetrics {
+    pub connections: Counter,
+    pub requests: Counter,
+    pub cache_hits: Counter,
+    pub cache_misses: Counter,
+    pub errors: Counter,
+    /// Wall time from request line received to reply line written.
+    pub reply_time: Histogram,
+}
+
+impl ServeMetrics {
+    fn snapshot(&self) -> Value {
+        obj(vec![
+            ("connections", num(self.connections.get() as f64)),
+            ("requests", num(self.requests.get() as f64)),
+            ("cache_hits", num(self.cache_hits.get() as f64)),
+            ("cache_misses", num(self.cache_misses.get() as f64)),
+            ("errors", num(self.errors.get() as f64)),
+            ("reply_time_ns", self.reply_time.snapshot()),
+        ])
+    }
+}
+
+/// The full metric sink, grouped by layer.
+#[derive(Default)]
+pub struct Metrics {
+    pub sched: SchedMetrics,
+    pub pool: PoolMetrics,
+    pub stream: StreamMetrics,
+    pub serve: ServeMetrics,
+}
+
+impl Metrics {
+    /// JSON snapshot: `{"sched": .., "pool": .., "stream": .., "serve": ..}`.
+    pub fn snapshot(&self) -> Value {
+        obj(vec![
+            ("sched", self.sched.snapshot()),
+            ("pool", self.pool.snapshot()),
+            ("stream", self.stream.snapshot()),
+            ("serve", self.serve.snapshot()),
+        ])
+    }
+}
+
+/// Cheap-to-clone telemetry handle: `None` = detached (every
+/// instrumentation site is one branch), `Some` = shared sink.
+#[derive(Clone, Default)]
+pub struct Telemetry(Option<Arc<Metrics>>);
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(if self.is_attached() {
+            "Telemetry(attached)"
+        } else {
+            "Telemetry(off)"
+        })
+    }
+}
+
+impl Telemetry {
+    /// A detached handle: all instrumentation is a no-op.
+    pub fn off() -> Telemetry {
+        Telemetry(None)
+    }
+
+    /// A fresh attached handle with zeroed metrics.
+    pub fn attached() -> Telemetry {
+        Telemetry(Some(Arc::new(Metrics::default())))
+    }
+
+    pub fn is_attached(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Run `f` against the sink iff attached. The only instrumentation
+    /// entry point — keeps call sites one-line and guarantees detached
+    /// cost is a single branch.
+    #[inline]
+    pub fn with<F: FnOnce(&Metrics)>(&self, f: F) {
+        if let Some(m) = &self.0 {
+            f(m);
+        }
+    }
+
+    /// JSON snapshot of the sink (`None` when detached).
+    pub fn snapshot(&self) -> Option<Value> {
+        self.0.as_ref().map(|m| m.snapshot())
+    }
+}
+
+// Process-global handle for layers that cannot take a parameter
+// (scheduler core, pools, sharded source). `ATTACHED` is the fast path:
+// when nothing is installed, `global()` is one relaxed load and no lock.
+static ATTACHED: AtomicBool = AtomicBool::new(false);
+static GLOBAL: Mutex<Option<Telemetry>> = Mutex::new(None);
+
+/// Install (or, with a detached handle, clear) the process-global
+/// telemetry sink. Long-lived workers should clone the handle once via
+/// [`global`] rather than re-reading it per operation.
+pub fn install(t: Telemetry) {
+    let on = t.is_attached();
+    // Order matters on clear: drop the flag first so racing `global()`
+    // callers fall back to `off` rather than locking mid-swap.
+    if !on {
+        ATTACHED.store(false, Ordering::SeqCst);
+    }
+    *GLOBAL.lock().unwrap_or_else(|e| e.into_inner()) =
+        if on { Some(t) } else { None };
+    if on {
+        ATTACHED.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Clone the process-global handle (detached when none is installed).
+pub fn global() -> Telemetry {
+    if !ATTACHED.load(Ordering::Relaxed) {
+        return Telemetry::off();
+    }
+    GLOBAL
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .clone()
+        .unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+
+        let g = Gauge::new();
+        g.add(3);
+        g.sub(2);
+        g.add(4);
+        g.sub(5);
+        assert_eq!(g.get(), 0);
+        assert_eq!(g.high_water(), 5);
+    }
+
+    #[test]
+    fn bucket_index_edges() {
+        // bucket 0 is exactly zero; bucket i holds [2^(i-1), 2^i).
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(7), 3);
+        assert_eq!(bucket_index(8), 4);
+        // 2^k lands in bucket k+1, 2^k - 1 in bucket k
+        for k in 1..=38u32 {
+            assert_eq!(bucket_index(1u64 << k), k as usize + 1);
+            assert_eq!(bucket_index((1u64 << k) - 1), k as usize);
+        }
+        // everything past the last bucket floor clamps
+        assert_eq!(bucket_index(1u64 << 39), HIST_BUCKETS - 1);
+        assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+        // floors invert the index at bucket boundaries
+        for i in 0..HIST_BUCKETS - 1 {
+            assert_eq!(bucket_index(bucket_floor(i)), i);
+        }
+    }
+
+    #[test]
+    fn histogram_counts_and_mean() {
+        let h = Histogram::default();
+        h.record_ns(0);
+        h.record_ns(1);
+        h.record_ns(1000);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.total_ns(), 1001);
+        assert!((h.mean_ns() - 1001.0 / 3.0).abs() < 1e-9);
+        let snap = h.snapshot();
+        assert_eq!(snap.get("count").unwrap().as_usize().unwrap(), 3);
+        let buckets = snap.get("buckets").unwrap().as_arr().unwrap();
+        // 0 → bucket 0, 1 → bucket 1, 1000 → bucket 10 ⇒ three entries
+        assert_eq!(buckets.len(), 3);
+        assert_eq!(buckets[0].as_arr().unwrap()[0].as_f64().unwrap(), 0.0);
+        assert_eq!(buckets[2].as_arr().unwrap()[0].as_f64().unwrap(), 512.0);
+    }
+
+    #[test]
+    fn detached_handle_is_noop_and_snapshotless() {
+        let t = Telemetry::off();
+        assert!(!t.is_attached());
+        let mut ran = false;
+        t.with(|_| ran = true);
+        assert!(!ran);
+        assert!(t.snapshot().is_none());
+    }
+
+    #[test]
+    fn attached_handle_shares_one_sink_across_clones() {
+        let t = Telemetry::attached();
+        let t2 = t.clone();
+        t.with(|m| m.stream.rows_journaled.add(3));
+        t2.with(|m| m.stream.rows_aggregated.add(1));
+        t.with(|m| assert_eq!(m.stream.journal_lag(), 2));
+        let snap = t2.snapshot().unwrap();
+        let stream = snap.get("stream").unwrap();
+        assert_eq!(
+            stream.get("journal_lag").unwrap().as_usize().unwrap(),
+            2
+        );
+    }
+
+    #[test]
+    fn snapshot_schema_has_all_groups() {
+        let t = Telemetry::attached();
+        t.with(|m| {
+            m.sched.runs.inc();
+            m.serve.requests.inc();
+            m.pool.jobs.inc();
+        });
+        let snap = t.snapshot().unwrap();
+        for group in ["sched", "pool", "stream", "serve"] {
+            assert!(snap.get(group).is_ok(), "missing group {group}");
+        }
+        // round-trips through our own JSON layer
+        let text = snap.to_json_pretty();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back, snap);
+    }
+
+    #[test]
+    fn global_install_and_clear() {
+        // Serialize against other tests touching the global via a local
+        // lock on the install API itself: this test is the only one that
+        // installs, and it restores the detached state before exiting.
+        install(Telemetry::attached());
+        let g = global();
+        assert!(g.is_attached());
+        g.with(|m| m.pool.jobs.add(7));
+        let snap = global().snapshot().unwrap();
+        assert_eq!(
+            snap.get("pool").unwrap().get("jobs").unwrap().as_usize().unwrap(),
+            7
+        );
+        install(Telemetry::off());
+        assert!(!global().is_attached());
+    }
+}

@@ -1,0 +1,398 @@
+//! Telemetry is write-only observation: attaching a sink must not
+//! change a single computed bit. Three contracts pin that:
+//!
+//! 1. Scenario runs across every axis (channel, policy, traffic,
+//!    workload, bounded store, faults, heterogeneous uplink) produce a
+//!    bit-identical `RunResult` — event stream, loss curve, snapshots
+//!    and fault counters included — with the process-global sink
+//!    attached vs detached.
+//! 2. The threaded shard layer at shard counts 1 (inline) and 4
+//!    (pooled) stays bit-identical with the sink attached, while the
+//!    pool/shard counters actually accumulate.
+//! 3. A streamed sweep writes a byte-identical journal and bit-
+//!    identical `(label, McStats)` rows attached vs detached, at lane
+//!    widths 4 and 8 — and the attached run's backpressure gauges
+//!    drain to zero (`journal_lag == 0`, empty stage queues).
+//!
+//! Tests here install the process-global sink, so they serialize on a
+//! file-local mutex; the shared CI matrix additionally runs this binary
+//! under `EDGEPIPE_SHARDS`/`EDGEPIPE_LANES` variations.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use edgepipe::channel::{ErasureChannel, FaultSpec};
+use edgepipe::coordinator::des::DesConfig;
+use edgepipe::coordinator::executor::NativeExecutor;
+use edgepipe::coordinator::run::RunResult;
+use edgepipe::coordinator::{
+    run_schedule, FixedPolicy, GreedyScheduler, OverlapMode, ShardedSource,
+};
+use edgepipe::data::synth::{synth_calhousing, SynthSpec};
+use edgepipe::data::Dataset;
+use edgepipe::extensions::multi_device::shard_dataset;
+use edgepipe::model::RidgeModel;
+use edgepipe::sweep::scenario::{
+    ChannelSpec, HeteroSpec, PolicySpec, ScenarioRunner, ScenarioSpec,
+    SchedulerSpec, TrafficSpec,
+};
+use edgepipe::sweep::stream::{stream_scenario_grid, StreamOptions};
+use edgepipe::sweep::McStats;
+use edgepipe::util::telemetry::{self, Telemetry};
+
+/// Every test below installs (and clears) the process-global sink;
+/// serialize them so counter assertions stay exact.
+static GLOBAL_SINK: Mutex<()> = Mutex::new(());
+
+fn sink_lock() -> std::sync::MutexGuard<'static, ()> {
+    GLOBAL_SINK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn mk_exec(ds: &Dataset, cfg: &DesConfig) -> NativeExecutor {
+    NativeExecutor::new(RidgeModel::new(ds.d, cfg.lambda, ds.n), cfg.alpha)
+}
+
+/// Full bit-exact RunResult comparison, fault counters included.
+fn assert_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.final_w, b.final_w, "{what}: final_w diverged");
+    assert_eq!(a.final_loss, b.final_loss, "{what}: final_loss diverged");
+    assert_eq!(a.curve, b.curve, "{what}: loss curve diverged");
+    assert_eq!(a.updates, b.updates, "{what}: update count diverged");
+    assert_eq!(a.blocks_sent, b.blocks_sent, "{what}: blocks_sent");
+    assert_eq!(
+        a.blocks_delivered, b.blocks_delivered,
+        "{what}: blocks_delivered"
+    );
+    assert_eq!(
+        a.samples_delivered, b.samples_delivered,
+        "{what}: samples_delivered"
+    );
+    assert_eq!(
+        a.retransmissions, b.retransmissions,
+        "{what}: retransmissions"
+    );
+    assert_eq!(a.timeouts, b.timeouts, "{what}: timeouts diverged");
+    assert_eq!(a.evictions, b.evictions, "{what}: evictions diverged");
+    assert_eq!(a.case, b.case, "{what}: timeline case");
+    assert_eq!(a.events, b.events, "{what}: event stream diverged");
+    assert_eq!(a.snapshots.len(), b.snapshots.len(), "{what}: snapshots");
+    for (sa, sb) in a.snapshots.iter().zip(&b.snapshots) {
+        assert_eq!(sa.w_end, sb.w_end, "{what}: snapshot w_end");
+        assert_eq!(sa.arrived_at, sb.arrived_at, "{what}: snapshot time");
+    }
+}
+
+/// One spec per scenario axis the sweep surface exposes.
+fn axis_specs() -> Vec<ScenarioSpec> {
+    let paper = ScenarioSpec::paper();
+    vec![
+        // baseline
+        paper.clone(),
+        // channel axis
+        ScenarioSpec {
+            channel: ChannelSpec::Erasure { p: 0.2 },
+            ..paper.clone()
+        },
+        // policy axis
+        ScenarioSpec {
+            policy: PolicySpec::Warmup { start: 8, growth: 2.0, cap: 64 },
+            ..paper.clone()
+        },
+        // traffic axis: multi-device and online arrivals
+        ScenarioSpec { traffic: TrafficSpec::Devices(3), ..paper.clone() },
+        ScenarioSpec {
+            traffic: TrafficSpec::Online { rate: 1.5 },
+            ..paper.clone()
+        },
+        // workload axis (on a fading channel)
+        ScenarioSpec {
+            channel: ChannelSpec::Fading {
+                p_gb: 0.05,
+                p_bg: 0.25,
+                p_good: 0.0,
+                p_bad: 0.6,
+                rate_good: 1.0,
+                rate_bad: 0.5,
+            },
+            workload: edgepipe::model::Workload::Logistic,
+            ..paper.clone()
+        },
+        // bounded-store axis
+        ScenarioSpec { store_capacity: Some(120), ..paper.clone() },
+        // fault axis: device 0's link dies at t=100 with the retry /
+        // eviction machinery armed — timeouts are guaranteed to fire
+        ScenarioSpec {
+            channel: ChannelSpec::Ideal.with_fault(
+                &FaultSpec::parse("drop:0:100.0+retry:4:2:3").unwrap(),
+            ),
+            traffic: TrafficSpec::Devices(3),
+            ..paper.clone()
+        },
+        // heterogeneous-uplink axis: greedy over mixed lanes with skew
+        ScenarioSpec {
+            traffic: TrafficSpec::Hetero(
+                HeteroSpec::new(
+                    3,
+                    SchedulerSpec::Greedy,
+                    0.5,
+                    vec![
+                        ChannelSpec::Ideal,
+                        ChannelSpec::Erasure { p: 0.2 },
+                        ChannelSpec::Rate { rate: 0.5, p: 0.1 },
+                    ],
+                )
+                .unwrap(),
+            ),
+            ..paper
+        },
+    ]
+}
+
+#[test]
+fn scenario_axes_are_bit_identical_with_telemetry_attached() {
+    let _g = sink_lock();
+    let ds = synth_calhousing(&SynthSpec { n: 360, ..Default::default() });
+    let cfg = DesConfig {
+        alpha: 1e-3,
+        collect_snapshots: true,
+        event_capacity: 4096,
+        ..DesConfig::paper(30, 8.0, 700.0, 17)
+    };
+    let specs = axis_specs();
+    let run_all = || -> Vec<RunResult> {
+        specs
+            .iter()
+            .map(|s| ScenarioRunner::new(s.clone(), &ds).run(&cfg).unwrap())
+            .collect()
+    };
+
+    telemetry::install(Telemetry::off());
+    let detached = run_all();
+
+    let sink = Telemetry::attached();
+    telemetry::install(sink.clone());
+    let attached = run_all();
+    telemetry::install(Telemetry::off());
+
+    for ((spec, d), a) in specs.iter().zip(&detached).zip(&attached) {
+        assert_identical(d, a, &spec.label());
+    }
+    // the sink really was live for the second pass
+    sink.with(|m| {
+        assert_eq!(m.sched.runs.get() as usize, specs.len());
+        assert!(m.sched.events.get() > 0, "events folded in");
+        assert!(m.sched.packets_sent.get() > 0, "packets folded in");
+        assert!(
+            m.sched.packets_resent.get() > 0,
+            "lossy axes must retransmit"
+        );
+        assert!(m.sched.timeouts.get() > 0, "the fault axis times out");
+    });
+}
+
+/// One k-device greedy run through the threaded shard layer.
+fn run_sharded(
+    ds: &Dataset,
+    shards: &[Dataset],
+    slowdowns: &[f64],
+    cfg: &DesConfig,
+    n_shards: usize,
+) -> RunResult {
+    let mut policy = FixedPolicy(cfg.n_c.max(1));
+    let mut exec = mk_exec(ds, cfg);
+    // constructed AFTER any install: the source clones the global
+    // handle once here
+    let mut src = ShardedSource::new(
+        shards,
+        cfg.seed,
+        GreedyScheduler::new(),
+        slowdowns,
+        n_shards,
+    );
+    run_schedule(
+        ds,
+        cfg,
+        &mut src,
+        &mut policy,
+        OverlapMode::Pipelined,
+        &mut ErasureChannel::new(0.2),
+        &mut exec,
+    )
+    .unwrap()
+}
+
+#[test]
+fn sharded_runs_are_bit_identical_with_telemetry_attached() {
+    let _g = sink_lock();
+    let ds = synth_calhousing(&SynthSpec { n: 300, ..Default::default() });
+    let k = 4;
+    let shards = shard_dataset(&ds, k);
+    let slowdowns = [1.0, 2.0, 1.5, 1.0];
+    let cfg = DesConfig {
+        event_capacity: 8192,
+        ..DesConfig::paper(25, 5.0, 1500.0, 99)
+    };
+    for s in [1usize, 4] {
+        telemetry::install(Telemetry::off());
+        let detached = run_sharded(&ds, &shards, &slowdowns, &cfg, s);
+
+        let sink = Telemetry::attached();
+        telemetry::install(sink.clone());
+        let attached = run_sharded(&ds, &shards, &slowdowns, &cfg, s);
+        telemetry::install(Telemetry::off());
+
+        assert_identical(&detached, &attached, &format!("shards={s}"));
+        sink.with(|m| {
+            assert!(
+                m.pool.shard_draws.get() > 0,
+                "shards={s}: draws must count (inline and pooled alike)"
+            );
+            if s > 1 {
+                assert!(
+                    m.pool.shard_jobs.get() > 0,
+                    "shards={s}: pooled workers must count jobs"
+                );
+                assert!(m.pool.barrier_waits.get() > 0);
+                assert_eq!(
+                    m.pool.shard_queue.get(),
+                    0,
+                    "shards={s}: queue gauge must drain to zero"
+                );
+            }
+        });
+    }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("edgepipe_telemetry_parity");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{name}_{}.jsonl", std::process::id()))
+}
+
+fn assert_rows_bitwise(
+    expected: &[(String, McStats)],
+    got: &[(String, McStats)],
+    ctx: &str,
+) {
+    assert_eq!(expected.len(), got.len(), "{ctx}: row count");
+    for (e, g) in expected.iter().zip(got) {
+        assert_eq!(e.0, g.0, "{ctx}: label");
+        assert_eq!(e.1.n, g.1.n, "{ctx}: {} n", e.0);
+        assert_eq!(
+            e.1.mean.to_bits(),
+            g.1.mean.to_bits(),
+            "{ctx}: {} mean diverged",
+            e.0
+        );
+        assert_eq!(
+            e.1.std.to_bits(),
+            g.1.std.to_bits(),
+            "{ctx}: {} std diverged",
+            e.0
+        );
+        assert_eq!(
+            e.1.sem.to_bits(),
+            g.1.sem.to_bits(),
+            "{ctx}: {} sem diverged",
+            e.0
+        );
+    }
+}
+
+#[test]
+fn streamed_journal_bytes_are_identical_with_telemetry_attached() {
+    let _g = sink_lock();
+    telemetry::install(Telemetry::off());
+    let ds = synth_calhousing(&SynthSpec { n: 240, ..Default::default() });
+    let base = DesConfig {
+        loss_every: 0,
+        record_blocks: false,
+        collect_snapshots: false,
+        event_capacity: 0,
+        ..DesConfig::paper(24, 6.0, 420.0, 19)
+    };
+    let paper = ScenarioSpec::paper();
+    let specs = vec![
+        paper.clone(),
+        ScenarioSpec {
+            channel: ChannelSpec::Erasure { p: 0.2 },
+            ..paper.clone()
+        },
+        ScenarioSpec {
+            policy: PolicySpec::Warmup { start: 4, growth: 2.0, cap: 64 },
+            ..paper
+        },
+    ];
+    for lanes in [4usize, 8] {
+        let j_off = tmp(&format!("off_l{lanes}"));
+        let j_on = tmp(&format!("on_l{lanes}"));
+        let _ = std::fs::remove_file(&j_off);
+        let _ = std::fs::remove_file(&j_on);
+        // one run worker: the journal's row order is deterministic, so
+        // the two files must match byte for byte, not just row for row
+        let detached_opts = StreamOptions {
+            seeds: 5,
+            threads: 1,
+            lanes,
+            journal: Some(j_off.clone()),
+            ..StreamOptions::default()
+        };
+        let detached =
+            stream_scenario_grid(&ds, &base, &specs, &detached_opts).unwrap();
+
+        let sink = Telemetry::attached();
+        let attached_opts = StreamOptions {
+            seeds: 5,
+            threads: 1,
+            lanes,
+            journal: Some(j_on.clone()),
+            telemetry: sink.clone(),
+            ..StreamOptions::default()
+        };
+        let attached =
+            stream_scenario_grid(&ds, &base, &specs, &attached_opts).unwrap();
+
+        assert!(detached.errors.is_empty() && attached.errors.is_empty());
+        assert_rows_bitwise(
+            &detached.rows,
+            &attached.rows,
+            &format!("lanes={lanes}"),
+        );
+        let bytes_off = std::fs::read(&j_off).unwrap();
+        let bytes_on = std::fs::read(&j_on).unwrap();
+        assert_eq!(
+            bytes_off, bytes_on,
+            "lanes={lanes}: journal bytes diverged with telemetry attached"
+        );
+
+        // the attached run's backpressure accounting drained completely
+        sink.with(|m| {
+            assert_eq!(
+                m.stream.groups_run.get() as usize,
+                attached.groups_run,
+                "lanes={lanes}: groups_run"
+            );
+            assert_eq!(m.stream.groups_reused.get(), 0);
+            assert_eq!(m.stream.error_rows.get(), 0);
+            assert_eq!(
+                m.stream.journal_lag(),
+                0,
+                "lanes={lanes}: every journaled row must be aggregated"
+            );
+            assert_eq!(
+                m.stream.rows_journaled.get(),
+                attached.groups_run as u64
+            );
+            assert_eq!(m.stream.job_queue.get(), 0, "gen→run drained");
+            assert_eq!(m.stream.row_queue.get(), 0, "run→metrics drained");
+            assert_eq!(m.stream.agg_queue.get(), 0, "metrics→agg drained");
+            assert!(
+                m.stream.group_time.count() > 0,
+                "executed groups must be timed"
+            );
+        });
+
+        let _ = std::fs::remove_file(&j_off);
+        let _ = std::fs::remove_file(&j_on);
+    }
+}
